@@ -1,0 +1,74 @@
+//! Three-layer composition check: run the analytic CV through the
+//! AOT-compiled JAX/Pallas artifact on the PJRT CPU client and through the
+//! native Rust engine, verifying bit-level-ish agreement and printing
+//! timings for both.
+//!
+//! Requires `make artifacts` (build-time Python) to have produced
+//! `artifacts/manifest.json`; without it the example explains and exits 0.
+//!
+//! Run: `cargo run --release --example xla_hybrid`
+
+use fastcv::cv::folds::kfold;
+use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::runtime::hybrid::{analytic_cv, analytic_cv_batch, Engine};
+use fastcv::runtime::XlaRuntime;
+use fastcv::util::rng::Rng;
+use fastcv::util::timed;
+
+fn main() -> anyhow::Result<()> {
+    let rt = XlaRuntime::load_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    if rt.registry().is_empty() {
+        println!("no artifacts found — run `make artifacts` first; nothing to do.");
+        return Ok(());
+    }
+    println!("{} artifacts registered", rt.registry().len());
+
+    // The EEG-scale artifact: N=100, P=380, K=10 (see python/compile/aot.py).
+    let (n, p, k) = (100, 380, 10);
+    let mut rng = Rng::new(11);
+    let mut spec = SyntheticSpec::binary(n, p);
+    spec.separation = 1.5;
+    let ds = generate(&spec, &mut rng);
+    let y = ds.y_signed();
+    let folds = kfold(n, k, &mut rng);
+    let lambda = 1.0;
+
+    // Single-response CV through both engines.
+    let ((dv_xla, e_xla), t_xla) =
+        timed(|| analytic_cv(Some(&rt), &ds.x, &y, &folds, lambda).unwrap());
+    let ((dv_nat, e_nat), t_nat) = timed(|| analytic_cv(None, &ds.x, &y, &folds, lambda).unwrap());
+    assert_eq!(e_xla, Engine::Xla, "artifact should have been used");
+    assert_eq!(e_nat, Engine::Native);
+    let max_diff = dv_xla
+        .iter()
+        .zip(&dv_nat)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("single CV  | XLA {t_xla:.3}s vs native {t_nat:.3}s | max |Δ| = {max_diff:.2e}");
+    assert!(max_diff < 1e-8, "engines disagree");
+
+    // Batched permutations (Alg. 1) through the batch artifact.
+    let b = 20;
+    let mut perms = Vec::with_capacity(b);
+    for _ in 0..b {
+        let p = rng.permutation(n);
+        perms.push(p.iter().map(|&i| y[i]).collect::<Vec<f64>>());
+    }
+    let ((batch_xla, e1), t_bx) =
+        timed(|| analytic_cv_batch(Some(&rt), &ds.x, &perms, &folds, lambda).unwrap());
+    let ((batch_nat, _), t_bn) =
+        timed(|| analytic_cv_batch(None, &ds.x, &perms, &folds, lambda).unwrap());
+    assert_eq!(e1, Engine::Xla);
+    let mut worst = 0.0f64;
+    for (rx, rn) in batch_xla.iter().zip(&batch_nat) {
+        for (a, bb) in rx.iter().zip(rn) {
+            worst = worst.max((a - bb).abs());
+        }
+    }
+    println!("perm batch | XLA {t_bx:.3}s vs native {t_bn:.3}s | max |Δ| = {worst:.2e} ({b} perms)");
+    assert!(worst < 1e-8);
+
+    println!("hybrid OK: L1 (Pallas) → L2 (JAX) → HLO → PJRT execution matches native Rust.");
+    Ok(())
+}

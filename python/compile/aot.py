@@ -1,0 +1,141 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts + manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Rust never imports Python. Each artifact is
+a fixed-shape lowering of one L2 graph; ``manifest.json`` records op, shapes,
+dtype, argument order and fold count so the Rust artifact registry can match
+(op, N, P, K, B) requests to files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+DTYPE = jnp.float64
+DTYPE_NAME = "f64"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+# Artifact shape menu. Chosen to cover the repo's examples/tests and an
+# EEG-scale configuration; the Rust side falls back to its native engine for
+# shapes not listed here (see rust/src/runtime/).
+CONFIGS = [
+    # (n, p, k_folds, perm_batch)
+    (40, 8, 5, 8),      # test-size
+    (60, 12, 5, 16),    # quickstart
+    (100, 380, 10, 20), # EEG per-timepoint scale (Fig. 4 small-feature case)
+]
+
+MULTICLASS_CONFIGS = [
+    # (n, p, c, k_folds)
+    (60, 12, 3, 5),
+    (90, 380, 3, 10),
+]
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    def emit(name: str, lowered, op: str, meta: dict):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({"op": op, "file": fname, "dtype": DTYPE_NAME, **meta})
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    for n, p, k, b in CONFIGS:
+        f = lambda x, y, lam: model.analytic_cv(x, y, lam, k_folds=k)
+        lowered = jax.jit(f).lower(spec(n, p), spec(n), spec())
+        emit(
+            f"analytic_cv_n{n}_p{p}_k{k}",
+            lowered,
+            "analytic_cv",
+            {"n": n, "p": p, "k_folds": k, "args": ["x[n,p]", "y[n]", "lambda[]"]},
+        )
+
+        fb = lambda x, yb, lam: model.analytic_cv_batch(x, yb, lam, k_folds=k)
+        lowered = jax.jit(fb).lower(spec(n, p), spec(b, n), spec())
+        emit(
+            f"analytic_cv_batch_n{n}_p{p}_k{k}_b{b}",
+            lowered,
+            "analytic_cv_batch",
+            {
+                "n": n,
+                "p": p,
+                "k_folds": k,
+                "batch": b,
+                "args": ["x[n,p]", "y_batch[b,n]", "lambda[]"],
+            },
+        )
+
+        lowered = jax.jit(model.hat_matrix).lower(spec(n, p), spec())
+        emit(
+            f"hat_n{n}_p{p}",
+            lowered,
+            "hat_matrix",
+            {"n": n, "p": p, "args": ["x[n,p]", "lambda[]"]},
+        )
+
+    for n, p, c, k in MULTICLASS_CONFIGS:
+        fm = lambda x, yi, lam: model.analytic_cv_multiclass_step1(x, yi, lam, k_folds=k)
+        lowered = jax.jit(fm).lower(spec(n, p), spec(n, c), spec())
+        emit(
+            f"analytic_mc_step1_n{n}_p{p}_c{c}_k{k}",
+            lowered,
+            "analytic_mc_step1",
+            {
+                "n": n,
+                "p": p,
+                "c": c,
+                "k_folds": k,
+                "args": ["x[n,p]", "y_ind[n,c]", "lambda[]"],
+            },
+        )
+
+    manifest = {"version": 1, "dtype": DTYPE_NAME, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote manifest.json ({len(entries)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    print(f"AOT-lowering artifacts to {args.out} (dtype={DTYPE_NAME})")
+    build_artifacts(args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernels: the compute hot-spots of the analytic CV.
+
+Two kernels cover the hat-matrix build (the only O(N P^2 + P^3 + N^2 P)
+work in the whole pipeline):
+
+* :func:`gram` — the symmetric rank-k update ``G = X~^T X~`` (the scatter
+  matrix, Eq. 10's "full scatter").
+* :func:`matmul` — a tiled general matmul used for ``T = X~ S`` and
+  ``H = T X~^T`` (Eq. 8).
+
+TPU-idiomatic structure (see DESIGN.md "Hardware adaptation"): the grid
+iterates output tiles with a k-innermost reduction axis; each step streams
+one (bm x bk) A-tile and (bk x bn) B-tile HBM->VMEM via BlockSpec and feeds
+the MXU-shaped ``jnp.dot`` with f32/f64 accumulation in the output tile.
+``interpret=True`` is mandatory on this CPU-only image — real-TPU lowering
+emits Mosaic custom-calls the CPU PJRT client cannot execute.
+
+Inputs are zero-padded up to tile multiples in the host wrappers; zero rows/
+columns leave the gram matrix and matmul results unchanged, and the wrappers
+slice the padding back off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. On a real TPU these would be multiples of the MXU
+# (128x128); for interpret-mode correctness any value works and smaller
+# tiles exercise the padding paths better. VMEM footprint per grid step for
+# matmul = (BM*BK + BK*BN + BM*BN) * 8 bytes  (f64) — see EXPERIMENTS.md
+# "L1 kernel" for the footprint table.
+BM = 64
+BK = 64
+BN = 64
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a: jax.Array, b: jax.Array, *, bm: int = BM, bk: int = BK, bn: int = BN) -> jax.Array:
+    """Tiled Pallas matmul ``a @ b`` (interpret mode)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    mp, kp, np_ = pl.cdiv(m, bm) * bm, pl.cdiv(k, bk) * bk, pl.cdiv(n, bn) * bn
+    a_p = _pad_to(a, mp, kp)
+    b_p = _pad_to(b, kp, np_)
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _gram_kernel(xi_ref, xj_ref, o_ref):
+    """One (i, j, k) grid step of G = X^T X: o[i,j] += x[k,i]^T @ x[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        xi_ref[...].T, xj_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bp"))
+def gram(x: jax.Array, *, bn: int = BK, bp: int = BM) -> jax.Array:
+    """Tiled Pallas gram matrix ``x.T @ x`` (interpret mode).
+
+    The reduction runs over the sample axis (k-innermost); each output tile
+    (i, j) accumulates ``x[k-block, i-block].T @ x[k-block, j-block]``.
+    """
+    n, p = x.shape
+    np_, pp = pl.cdiv(n, bn) * bn, pl.cdiv(p, bp) * bp
+    x_p = _pad_to(x, np_, pp)
+    grid = (pp // bp, pp // bp, np_ // bn)
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bp), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bn, bp), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, bp), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pp, pp), x.dtype),
+        interpret=True,
+    )(x_p, x_p)
+    return out[:p, :p]
+
+
+def vmem_footprint_bytes(bm: int = BM, bk: int = BK, bn: int = BN, itemsize: int = 8) -> int:
+    """Estimated VMEM bytes held per matmul grid step (A, B, O tiles)."""
+    return (bm * bk + bk * bn + bm * bn) * itemsize

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for the Pallas kernels and the analytic-CV model.
+
+Everything here is the slow-but-obviously-correct reference the pytest suite
+checks the L1 kernels and the L2 graph against (and, transitively, what the
+Rust runtime's artifact execution is validated against).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain ``a @ b``."""
+    return a @ b
+
+
+def gram_ref(x):
+    """Plain ``x.T @ x``."""
+    return x.T @ x
+
+
+def augment(x):
+    """The paper's augmented design: X~ = [X, 1]."""
+    n = x.shape[0]
+    return jnp.concatenate([x, jnp.ones((n, 1), dtype=x.dtype)], axis=1)
+
+
+def gram_ridged_ref(xa, lam):
+    """``X~^T X~ + lam * I0`` — I0 leaves the bias cell unpenalised."""
+    p1 = xa.shape[1]
+    i0 = jnp.eye(p1, dtype=xa.dtype).at[p1 - 1, p1 - 1].set(0.0)
+    return xa.T @ xa + lam * i0
+
+
+def hat_ref(x, lam):
+    """H = X~ (X~^T X~ + lam I0)^-1 X~^T (Eq. 8 with §2.6.1 ridge)."""
+    xa = augment(x)
+    s = jnp.linalg.inv(gram_ridged_ref(xa, lam))
+    return xa @ s @ xa.T
+
+
+def analytic_cv_ref(x, y, k_folds, lam):
+    """Eq. 14 with contiguous equal-sized folds, python-loop reference.
+
+    Samples must be arranged so fold ``k`` is rows ``k*nte..(k+1)*nte``
+    (the Rust coordinator pre-permutes rows into this layout).
+    """
+    n = x.shape[0]
+    assert n % k_folds == 0, "reference assumes equal fold sizes"
+    nte = n // k_folds
+    h = hat_ref(x, lam)
+    y_hat = h @ y
+    e_hat = y - y_hat
+    dvals = []
+    for k in range(k_folds):
+        sl = slice(k * nte, (k + 1) * nte)
+        h_te = h[sl, sl]
+        e_dot = jnp.linalg.solve(jnp.eye(nte, dtype=x.dtype) - h_te, e_hat[sl])
+        dvals.append(y[sl] - e_dot)
+    return jnp.concatenate(dvals)
+
+
+def standard_cv_ref(x, y, k_folds, lam):
+    """Retrain-per-fold reference (the 'standard approach'), contiguous folds."""
+    n, p = x.shape
+    assert n % k_folds == 0
+    nte = n // k_folds
+    xa = augment(x)
+    out = []
+    for k in range(k_folds):
+        te = jnp.arange(k * nte, (k + 1) * nte)
+        tr = jnp.concatenate([jnp.arange(0, k * nte), jnp.arange((k + 1) * nte, n)])
+        g = gram_ridged_ref(xa[tr], lam)
+        beta = jnp.linalg.solve(g, xa[tr].T @ y[tr])
+        out.append(xa[te] @ beta)
+    return jnp.concatenate(out)

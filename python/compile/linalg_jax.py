@@ -1,0 +1,74 @@
+"""Pure-HLO dense linear algebra for the L2 graphs.
+
+``jnp.linalg.{inv,solve,cholesky}`` lower to LAPACK custom-calls with the
+typed-FFI API (API_VERSION_TYPED_FFI) that the deployment XLA
+(xla_extension 0.5.1, the version the published ``xla`` crate binds) cannot
+execute. The artifacts therefore ship their own factorisations built from
+plain HLO ops (dot, dynamic-slice, while-loop): a loop-based Cholesky plus
+triangular solves. All matrices on this path are SPD — the ridged gram
+``X~^T X~ + lam I0`` and the per-fold ``I − H_Te`` blocks — so unpivoted
+Cholesky is numerically sound.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def chol_factor(a: jax.Array) -> jax.Array:
+    """Lower-triangular L with ``a = L @ L.T`` (Cholesky–Banachiewicz,
+    column-by-column fori_loop; lowers to a while-loop of vector ops)."""
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def col_step(j, l):
+        # l[j, :j] — row j of the factor so far (columns ≥ j are still 0).
+        lj = jnp.where(idx < j, l[j, :], 0.0)
+        s = a[:, j] - l @ lj  # s[i] = a[i,j] − Σ_{k<j} L[i,k] L[j,k]
+        d = jnp.sqrt(s[j])
+        col = jnp.where(idx > j, s / d, 0.0)
+        col = col.at[j].set(d)
+        return l.at[:, j].set(col)
+
+    return lax.fori_loop(0, n, col_step, jnp.zeros_like(a))
+
+
+def solve_lower(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Forward substitution: solve ``L y = b`` (b may be (n,) or (n, m))."""
+    n = l.shape[0]
+
+    def step(i, y):
+        yi = (b[i] - l[i, :] @ y) / l[i, i]
+        return y.at[i].set(yi)
+
+    return lax.fori_loop(0, n, step, jnp.zeros_like(b))
+
+
+def solve_upper_t(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Backward substitution with the *transpose*: solve ``L.T x = b``."""
+    n = l.shape[0]
+
+    def step(t, x):
+        i = n - 1 - t
+        xi = (b[i] - l[:, i] @ x) / l[i, i]
+        return x.at[i].set(xi)
+
+    return lax.fori_loop(0, n, step, jnp.zeros_like(b))
+
+
+def chol_solve(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve ``A x = b`` given ``A = L L^T``."""
+    return solve_upper_t(l, solve_lower(l, b))
+
+
+def spd_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve ``A x = b`` for SPD ``A`` without LAPACK custom-calls."""
+    return chol_solve(chol_factor(a), b)
+
+
+def spd_inverse(a: jax.Array) -> jax.Array:
+    """``A^{-1}`` for SPD ``A`` (identity RHS through the Cholesky solves)."""
+    n = a.shape[0]
+    return chol_solve(chol_factor(a), jnp.eye(n, dtype=a.dtype))

@@ -1,0 +1,128 @@
+"""Layer-2 JAX model: the analytic-CV compute graphs, built on the Layer-1
+Pallas kernels, lowered AOT by :mod:`compile.aot` and executed from Rust.
+
+Fold convention: the graphs assume **contiguous equal-sized folds** — fold
+``k`` owns rows ``k*nte..(k+1)*nte``. Fold membership is thereby static in
+the HLO (no gather/scatter on the hot path); the Rust coordinator permutes
+the rows of X (and y) into this layout before the call, which is free on its
+side (a single `take_rows`).
+
+Graphs:
+
+* :func:`hat_matrix`   — H = X~ (X~^T X~ + lam I0)^-1 X~^T
+* :func:`analytic_cv`  — Eq. 14 decision values for one response
+* :func:`analytic_cv_batch` — Alg. 1: one H, a batch of (permuted) responses
+* :func:`analytic_cv_multiclass_step1` — Alg. 2 step 1: Y~ fits for an
+  indicator matrix (step 2's C x C eig stays in Rust where fold-wise
+  dynamic class counts live)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import linalg_jax as lj
+from .kernels import pallas_kernels as pk
+
+
+def _augment(x):
+    n = x.shape[0]
+    return jnp.concatenate([x, jnp.ones((n, 1), dtype=x.dtype)], axis=1)
+
+
+def _inv_gram(xa, lam):
+    """S = (X~^T X~ + lam I0)^-1, gram via the Pallas L1 kernel."""
+    p1 = xa.shape[1]
+    g = pk.gram(xa)
+    i0 = jnp.eye(p1, dtype=xa.dtype).at[p1 - 1, p1 - 1].set(0.0)
+    # LAPACK-free inverse: jnp.linalg.inv emits a typed-FFI custom-call
+    # the deployment XLA cannot run (see linalg_jax.py).
+    return lj.spd_inverse(g + lam * i0)
+
+
+def hat_matrix(x, lam):
+    """H = X~ S X~^T with both products on the Pallas matmul kernel."""
+    xa = _augment(x)
+    s = _inv_gram(xa, lam)
+    t = pk.matmul(xa, s)
+    return pk.matmul(t, xa.T)
+
+
+def _fold_blocks(h, k_folds):
+    """(K, nte, nte) tensor of diagonal fold blocks H_Te (static slicing)."""
+    n = h.shape[0]
+    nte = n // k_folds
+    return jnp.stack([h[k * nte:(k + 1) * nte, k * nte:(k + 1) * nte] for k in range(k_folds)])
+
+
+def _cv_from_hat(h, y, k_folds):
+    """Eq. 14 given H: batched per-fold solves, returns dvals (N,)."""
+    n = h.shape[0]
+    nte = n // k_folds
+    y_hat = h @ y
+    e_hat = (y - y_hat).reshape(k_folds, nte)
+    h_blocks = _fold_blocks(h, k_folds)
+    eye = jnp.eye(nte, dtype=h.dtype)
+    e_dot = jax.vmap(lambda hb, eb: lj.spd_solve(eye - hb, eb))(h_blocks, e_hat)
+    return y - e_dot.reshape(n)
+
+
+@functools.partial(jax.jit, static_argnames=("k_folds",))
+def analytic_cv(x, y, lam, *, k_folds):
+    """Cross-validated decision values (Eq. 14), one response vector."""
+    h = hat_matrix(x, lam)
+    return _cv_from_hat(h, y, k_folds)
+
+
+@functools.partial(jax.jit, static_argnames=("k_folds",))
+def analytic_cv_batch(x, y_batch, lam, *, k_folds):
+    """Algorithm 1's core: H built once, CV for a (B, N) batch of permuted
+    responses. Returns (B, N) decision values."""
+    h = hat_matrix(x, lam)
+    return jax.vmap(lambda y: _cv_from_hat(h, y, k_folds))(y_batch)
+
+
+@functools.partial(jax.jit, static_argnames=("k_folds",))
+def analytic_cv_multiclass_step1(x, y_ind, lam, *, k_folds):
+    """Alg. 2 step 1: cross-validated regression fits for an (N, C) class
+    indicator matrix. Returns (Ydot, Ydot_tr_corr) where
+
+    * ``Ydot``  (N, C): cross-validated fits on each sample's own test fold,
+    * ``Ydot_tr_corr`` (K, N, C): for every fold k, the cross-validated fits
+      of the *training* samples (Eq. 15) with that fold held out; the test
+      rows of slice k are zero-filled (Rust reads only training rows).
+    """
+    n = x.shape[0]
+    c = y_ind.shape[1]
+    nte = n // k_folds
+    h = hat_matrix(x, lam)
+    y_hat = h @ y_ind
+    e_hat = y_ind - y_hat
+    eye = jnp.eye(nte, dtype=x.dtype)
+
+    def fold(k):
+        sl_lo = k * nte
+        e_hat_te = jax.lax.dynamic_slice(e_hat, (sl_lo, 0), (nte, c))
+        h_te = jax.lax.dynamic_slice(h, (sl_lo, sl_lo), (nte, nte))
+        e_dot_te = lj.spd_solve(eye - h_te, e_hat_te)
+        y_te = jax.lax.dynamic_slice(y_ind, (sl_lo, 0), (nte, c))
+        y_dot_te = y_te - e_dot_te
+        # Eq. 15 for all rows: E_dot_all = E_hat + H[:, te] @ e_dot_te,
+        # then zero the test rows (their training-side value is meaningless).
+        h_cols = jax.lax.dynamic_slice(h, (0, sl_lo), (n, nte))
+        e_dot_all = e_hat + h_cols @ e_dot_te
+        y_dot_all = y_ind - e_dot_all
+        mask = (jnp.arange(n) // nte != k)[:, None].astype(x.dtype)
+        return y_dot_te, y_dot_all * mask
+
+    y_dot_te_folds, y_dot_tr = jax.vmap(fold)(jnp.arange(k_folds))
+    y_dot = y_dot_te_folds.reshape(n, c)
+    return y_dot, y_dot_tr
+
+
+def quickstart_fn(x, y, lam):
+    """Tiny end-to-end graph for the smoke artifact: 5-fold analytic CV."""
+    return analytic_cv(x, y, lam, k_folds=5)

@@ -1,0 +1,58 @@
+"""AOT pipeline tests: HLO-text emission, manifest integrity, and the
+deployment constraints (no custom-calls, f64, return_tuple)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import aot, model
+
+
+def test_to_hlo_text_emits_parseable_module():
+    f = lambda x, y, lam: model.analytic_cv(x, y, lam, k_folds=4)
+    lowered = jax.jit(f).lower(
+        aot.spec(16, 5), aot.spec(16), aot.spec()
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:60]
+    assert "custom-call" not in text
+    # return_tuple=True: root computation returns a tuple
+    assert "tuple(" in text or "(f64[" in text
+
+
+def test_build_artifacts_manifest(tmp_path):
+    # Use one tiny config to keep the test fast.
+    old_configs = aot.CONFIGS, aot.MULTICLASS_CONFIGS
+    aot.CONFIGS = [(20, 4, 4, 3)]
+    aot.MULTICLASS_CONFIGS = [(20, 4, 3, 4)]
+    try:
+        manifest = aot.build_artifacts(str(tmp_path))
+    finally:
+        aot.CONFIGS, aot.MULTICLASS_CONFIGS = old_configs
+
+    files = os.listdir(tmp_path)
+    assert "manifest.json" in files
+    with open(tmp_path / "manifest.json") as f:
+        loaded = json.load(f)
+    assert loaded == manifest
+    assert loaded["dtype"] == "f64"
+    ops = {e["op"] for e in loaded["artifacts"]}
+    assert ops == {"analytic_cv", "analytic_cv_batch", "hat_matrix", "analytic_mc_step1"}
+    for e in loaded["artifacts"]:
+        path = tmp_path / e["file"]
+        assert path.exists(), e
+        text = path.read_text()
+        assert text.startswith("HloModule")
+        assert "custom-call" not in text, f"{e['file']} has a custom-call"
+
+
+def test_configs_are_fold_divisible():
+    """The contiguous-fold contract requires n % k == 0 for every artifact."""
+    for n, p, k, b in aot.CONFIGS:
+        assert n % k == 0, f"config ({n},{p},{k},{b}) violates n % k == 0"
+    for n, p, c, k in aot.MULTICLASS_CONFIGS:
+        assert n % k == 0, f"mc config ({n},{p},{c},{k}) violates n % k == 0"

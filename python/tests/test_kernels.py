@@ -1,0 +1,96 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and dtypes; every case asserts allclose against the
+reference — the CORE correctness signal for the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import pallas_kernels as pk
+from compile.kernels import ref
+
+
+def rand(rng, *shape, dtype=np.float64):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 90),
+    k=st.integers(1, 90),
+    n=st.integers(1, 90),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, k)
+    b = rand(rng, k, n)
+    got = pk.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 120),
+    p=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gram_matches_ref(n, p, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, p)
+    got = pk.gram(x)
+    want = ref.gram_ref(x)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_dtypes_supported(dtype):
+    rng = np.random.default_rng(0)
+    a = rand(rng, 33, 17, dtype=dtype)
+    b = rand(rng, 17, 21, dtype=dtype)
+    got = pk.matmul(a, b)
+    assert got.dtype == a.dtype
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=tol, atol=tol)
+    g = pk.gram(a)
+    np.testing.assert_allclose(g, ref.gram_ref(a), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(8, 8, 8), (16, 32, 8), (64, 64, 64), (128, 16, 32)])
+def test_block_shape_invariance(bm, bk, bn):
+    """Result must not depend on the tile decomposition."""
+    rng = np.random.default_rng(42)
+    a = rand(rng, 70, 45)
+    b = rand(rng, 45, 31)
+    got = pk.matmul(a, b, bm=bm, bk=bk, bn=bn)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=1e-12, atol=1e-12)
+
+
+def test_gram_is_symmetric_psd():
+    rng = np.random.default_rng(7)
+    x = rand(rng, 50, 20)
+    g = np.asarray(pk.gram(x))
+    np.testing.assert_allclose(g, g.T, rtol=0, atol=1e-12)
+    evals = np.linalg.eigvalsh(g)
+    assert evals.min() > -1e-10
+
+
+def test_exact_tile_multiples_no_padding_path():
+    rng = np.random.default_rng(3)
+    a = rand(rng, 128, 64)
+    b = rand(rng, 64, 128)
+    np.testing.assert_allclose(pk.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(pk.gram(a), ref.gram_ref(a), rtol=1e-12, atol=1e-12)
+
+
+def test_vmem_footprint_estimate():
+    # 64^3 default tiles, f64: 3 * 64*64 * 8 = 96 KiB << 16 MiB VMEM.
+    assert pk.vmem_footprint_bytes() == 3 * 64 * 64 * 8
+    assert pk.vmem_footprint_bytes(128, 128, 128) == 3 * 128 * 128 * 8

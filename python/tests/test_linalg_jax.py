@@ -1,0 +1,67 @@
+"""Tests for the LAPACK-free Cholesky / triangular solves (linalg_jax)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import linalg_jax as lj
+
+
+def spd(rng, n):
+    a = rng.standard_normal((n + 3, n))
+    return jnp.asarray(a.T @ a + 0.3 * np.eye(n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_chol_factor_reconstructs(n, seed):
+    rng = np.random.default_rng(seed)
+    a = spd(rng, n)
+    l = lj.chol_factor(a)
+    np.testing.assert_allclose(l @ l.T, a, rtol=1e-9, atol=1e-9)
+    # strictly lower-triangular above diagonal
+    assert np.allclose(np.triu(np.asarray(l), 1), 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 30), m=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_spd_solve_matches_numpy(n, m, seed):
+    rng = np.random.default_rng(seed)
+    a = spd(rng, n)
+    b = jnp.asarray(rng.standard_normal((n, m)))
+    x = lj.spd_solve(a, b)
+    np.testing.assert_allclose(a @ x, b, rtol=1e-8, atol=1e-8)
+    x_ref = np.linalg.solve(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(x, x_ref, rtol=1e-7, atol=1e-8)
+
+
+def test_vector_rhs():
+    rng = np.random.default_rng(0)
+    a = spd(rng, 12)
+    b = jnp.asarray(rng.standard_normal(12))
+    x = lj.spd_solve(a, b)
+    np.testing.assert_allclose(a @ x, b, rtol=1e-9, atol=1e-9)
+
+
+def test_spd_inverse():
+    rng = np.random.default_rng(1)
+    a = spd(rng, 15)
+    inv = lj.spd_inverse(a)
+    np.testing.assert_allclose(a @ inv, np.eye(15), atol=1e-8)
+
+
+def test_no_custom_calls_in_lowering():
+    """The deployment constraint itself: the lowered HLO of an analytic-CV
+    graph must contain no custom-call instructions (xla_extension 0.5.1
+    rejects typed-FFI LAPACK calls)."""
+    from compile import model
+
+    f = lambda x, y, lam: model.analytic_cv(x, y, lam, k_folds=4)
+    spec = jax.ShapeDtypeStruct((16, 5), jnp.float64)
+    yspec = jax.ShapeDtypeStruct((16,), jnp.float64)
+    lspec = jax.ShapeDtypeStruct((), jnp.float64)
+    hlo = jax.jit(f).lower(spec, yspec, lspec).compiler_ir("hlo").as_hlo_text()
+    assert "custom-call" not in hlo, "graph must stay custom-call-free"

@@ -1,0 +1,111 @@
+"""L2 correctness: the analytic-CV graphs vs references.
+
+The decisive test is `analytic == standard`: the paper's Eq. 14 must
+reproduce retrain-per-fold exactly, inside JAX just as in Rust.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels import ref
+
+
+def problem(seed, n, p):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, p)))
+    y = jnp.asarray(np.sign(rng.standard_normal(n)) + 0.0)
+    return x, y
+
+
+def test_hat_matches_ref():
+    x, _ = problem(0, 30, 7)
+    h = model.hat_matrix(x, jnp.asarray(0.3))
+    np.testing.assert_allclose(h, ref.hat_ref(x, 0.3), rtol=1e-10, atol=1e-10)
+
+
+def test_hat_properties():
+    x, _ = problem(1, 25, 6)
+    h = np.asarray(model.hat_matrix(x, jnp.asarray(0.0)))
+    np.testing.assert_allclose(h, h.T, atol=1e-10)           # symmetric
+    np.testing.assert_allclose(h @ h, h, atol=1e-8)          # idempotent (λ=0)
+    assert abs(np.trace(h) - 7) < 1e-8                       # trace = P+1
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nte=st.integers(2, 8),
+    k=st.integers(2, 6),
+    p=st.integers(1, 12),
+    lam_pow=st.floats(-3.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_analytic_equals_standard(nte, k, p, lam_pow, seed):
+    n = nte * k
+    lam = 10.0 ** lam_pow
+    x, y = problem(seed, n, p)
+    ana = model.analytic_cv(x, y, jnp.asarray(lam), k_folds=k)
+    std = ref.standard_cv_ref(x, y, k, lam)
+    np.testing.assert_allclose(ana, std, rtol=1e-8, atol=1e-8)
+
+
+def test_analytic_matches_python_loop_ref():
+    x, y = problem(5, 40, 9)
+    ana = model.analytic_cv(x, y, jnp.asarray(0.5), k_folds=5)
+    loop = ref.analytic_cv_ref(x, y, 5, 0.5)
+    np.testing.assert_allclose(ana, loop, rtol=1e-11, atol=1e-11)
+
+
+def test_batch_matches_single():
+    x, y = problem(6, 30, 5)
+    rng = np.random.default_rng(6)
+    perms = jnp.asarray(np.stack([np.asarray(y)[rng.permutation(30)] for _ in range(7)]))
+    batch = model.analytic_cv_batch(x, perms, jnp.asarray(0.2), k_folds=5)
+    assert batch.shape == (7, 30)
+    for b in range(7):
+        single = model.analytic_cv(x, perms[b], jnp.asarray(0.2), k_folds=5)
+        np.testing.assert_allclose(batch[b], single, rtol=1e-11, atol=1e-11)
+
+
+def test_multiclass_step1_matches_columnwise_binary():
+    """Step 1 of Alg. 2 is Eq. 14/15 applied per indicator column."""
+    n, p, c, k = 30, 6, 3, 5
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((n, p)))
+    labels = rng.integers(0, c, n)
+    y_ind = jnp.asarray(np.eye(c)[labels])
+    lam = 0.7
+    y_dot, y_dot_tr = model.analytic_cv_multiclass_step1(x, y_ind, jnp.asarray(lam), k_folds=k)
+    assert y_dot.shape == (n, c)
+    assert y_dot_tr.shape == (k, n, c)
+    # Ẏ test fits: column l == analytic_cv on indicator column l.
+    for l in range(c):
+        col = model.analytic_cv(x, y_ind[:, l], jnp.asarray(lam), k_folds=k)
+        np.testing.assert_allclose(y_dot[:, l], col, rtol=1e-9, atol=1e-9)
+    # Ẏ_Tr (Eq. 15): training-row fits equal a model trained on the fold's
+    # training rows and evaluated there.
+    nte = n // k
+    xa = ref.augment(x)
+    for kk in range(k):
+        tr = np.concatenate([np.arange(0, kk * nte), np.arange((kk + 1) * nte, n)])
+        g = ref.gram_ridged_ref(xa[tr], lam)
+        beta = jnp.linalg.solve(g, xa[tr].T @ y_ind[tr])
+        fit_tr = xa[tr] @ beta
+        np.testing.assert_allclose(
+            np.asarray(y_dot_tr)[kk][tr], fit_tr, rtol=1e-8, atol=1e-8
+        )
+        # test rows zeroed
+        te = np.arange(kk * nte, (kk + 1) * nte)
+        assert np.all(np.asarray(y_dot_tr)[kk][te] == 0.0)
+
+
+def test_permutation_invariance_of_hat():
+    """§2.7: H depends only on X — identical for any label permutation."""
+    x, y = problem(11, 20, 4)
+    h1 = model.hat_matrix(x, jnp.asarray(0.1))
+    h2 = model.hat_matrix(x, jnp.asarray(0.1))
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))

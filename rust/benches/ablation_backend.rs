@@ -1,0 +1,70 @@
+//! Ablation: native Rust engine vs AOT XLA artifact (PJRT) for the same
+//! analytic CV — quantifies what the compiled L1/L2 stack buys (or costs)
+//! on this CPU target, for the single-response and batched-permutation
+//! graphs.
+//!
+//! Needs `make artifacts`; exits cleanly when none are present.
+//! Run: `cargo bench --bench ablation_backend`
+
+use fastcv::bench::Bench;
+use fastcv::cv::folds::kfold;
+use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::runtime::hybrid::{analytic_cv, analytic_cv_batch, Engine};
+use fastcv::runtime::XlaRuntime;
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fdur, Table};
+
+fn main() {
+    let rt = match XlaRuntime::load_default() {
+        Ok(rt) if !rt.registry().is_empty() => rt,
+        _ => {
+            println!("no artifacts — run `make artifacts`; skipping backend ablation.");
+            return;
+        }
+    };
+    let bench = Bench::quick();
+    let mut table = Table::new(vec!["graph", "native", "xla (pjrt)", "xla/native"])
+        .with_title("Ablation: native Rust vs AOT XLA artifact".to_string());
+
+    // N=100, P=380, K=10 (the EEG-scale artifact) single CV
+    let (n, p, k, b) = (100usize, 380usize, 10usize, 20usize);
+    let mut rng = Rng::new(8);
+    let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+    let y = ds.y_signed();
+    let folds = kfold(n, k, &mut rng);
+
+    // warm the executable cache so compile time isn't measured
+    let (_, engine) = analytic_cv(Some(&rt), &ds.x, &y, &folds, 1.0).unwrap();
+    if engine != Engine::Xla {
+        println!("artifact for (n={n},p={p},k={k}) missing; skipping");
+        return;
+    }
+    let t_native = bench.run(|| analytic_cv(None, &ds.x, &y, &folds, 1.0).unwrap()).median;
+    let t_xla = bench.run(|| analytic_cv(Some(&rt), &ds.x, &y, &folds, 1.0).unwrap()).median;
+    table.row(vec![
+        format!("analytic_cv n={n} p={p} k={k}"),
+        fdur(t_native),
+        fdur(t_xla),
+        format!("{:.2}x", t_xla / t_native),
+    ]);
+
+    // batched permutations
+    let mut perms = Vec::with_capacity(b);
+    for _ in 0..b {
+        let perm = rng.permutation(n);
+        perms.push(perm.iter().map(|&i| y[i]).collect::<Vec<f64>>());
+    }
+    let _ = analytic_cv_batch(Some(&rt), &ds.x, &perms, &folds, 1.0).unwrap();
+    let t_native =
+        bench.run(|| analytic_cv_batch(None, &ds.x, &perms, &folds, 1.0).unwrap()).median;
+    let t_xla =
+        bench.run(|| analytic_cv_batch(Some(&rt), &ds.x, &perms, &folds, 1.0).unwrap()).median;
+    table.row(vec![
+        format!("analytic_cv_batch b={b}"),
+        fdur(t_native),
+        fdur(t_xla),
+        format!("{:.2}x", t_xla / t_native),
+    ]);
+
+    println!("{}", table.render());
+}

@@ -1,0 +1,67 @@
+//! Ablation: hyperparameter (λ) grid search cost — analytic CV per grid
+//! point vs retrain-per-fold per grid point. The analytic path pays one
+//! factorisation + hat build per λ; the standard path pays K full refits
+//! per λ. With G grid points the gap multiplies.
+//!
+//! Run: `cargo bench --bench ablation_lambda_grid`
+
+use fastcv::bench::Bench;
+use fastcv::cv::folds::stratified_kfold;
+use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::fastcv::lambda_search::{default_grid, search_lambda, SelectBy};
+use fastcv::model::Reg;
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fdur, fnum, Table};
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::quick()
+    };
+    let (n, p, k, g) = if tiny { (40, 30, 4, 3) } else { (120, 300, 10, 7) };
+    let mut rng = Rng::new(9);
+    let mut spec = SyntheticSpec::binary(n, p);
+    spec.separation = 1.5;
+    let ds = generate(&spec, &mut rng);
+    let y = ds.y_signed();
+    let folds = stratified_kfold(&ds.labels, k, &mut rng);
+    let grid = default_grid(g);
+
+    let t_analytic = bench
+        .run(|| search_lambda(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy).unwrap())
+        .median;
+
+    let t_standard = bench
+        .run(|| {
+            let mut best = (f64::NEG_INFINITY, 0.0);
+            for &lambda in &grid {
+                if let Ok(acc) = fastcv::cv::runner::standard_binary_cv_accuracy(
+                    &ds.x,
+                    &ds.labels,
+                    &folds,
+                    Reg::Ridge(lambda),
+                ) {
+                    if acc > best.0 {
+                        best = (acc, lambda);
+                    }
+                }
+            }
+            best
+        })
+        .median;
+
+    let search = search_lambda(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy).unwrap();
+
+    let mut table = Table::new(vec!["method", "time", "rel.eff"])
+        .with_title(format!("λ grid search: N={n} P={p} K={k}, {g} grid points"));
+    table.row(vec!["standard (K refits × grid)".into(), fdur(t_standard), "1.00x ref".into()]);
+    table.row(vec![
+        "analytic (1 hat per λ)".into(),
+        fdur(t_analytic),
+        format!("{:.1}x faster", t_standard / t_analytic),
+    ]);
+    println!("{}", table.render());
+    println!("selected λ = {} (CV acc {})", fnum(search.best_lambda(), 4), fnum(search.best_score(), 3));
+}

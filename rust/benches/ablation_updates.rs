@@ -1,0 +1,120 @@
+//! Ablation (§2.4.4–2.4.6 + §2.6.2): alternative inner loops for the
+//! analytic CV.
+//!
+//! 1. **direct** — Eq. 14 with a per-fold LU of (I − H_Te) [production path]
+//! 2. **cached-lu** — Eq. 14 with fold LUs factored once and reused across
+//!    permutations [production permutation path]
+//! 3. **woodbury-β** — Eq. 12: materialise the fold weights β̇ and predict
+//!    [what you'd do if you needed the fold models]
+//! 4. **shrinkage-refit** — §2.6.2's point: shrinkage forces a full-rank
+//!    update, so the "analytic" path degenerates to a refit per fold; timed
+//!    here via the standard engine with shrinkage regularisation.
+//!
+//! Run: `cargo bench --bench ablation_updates`
+
+use fastcv::bench::Bench;
+use fastcv::cv::folds::kfold;
+use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::fastcv::binary::AnalyticBinaryCv;
+use fastcv::fastcv::{woodbury, FoldCache};
+use fastcv::linalg::matvec;
+use fastcv::model::Reg;
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fdur, Table};
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let (n, p, k, n_perm) = if tiny { (40, 30, 5, 5) } else { (200, 400, 10, 50) };
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::quick()
+    };
+    let lambda = 1.0;
+
+    let mut rng = Rng::new(5);
+    let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+    let y = ds.y_signed();
+    let folds = kfold(n, k, &mut rng);
+
+    let mut table = Table::new(vec!["variant", "time", "vs production"])
+        .with_title(format!("Ablation: analytic-CV inner loops (N={n} P={p} K={k}, {n_perm} perms)"));
+
+    let cv = AnalyticBinaryCv::fit(&ds.x, &y, lambda).unwrap();
+
+    // 1. direct: factor per call (single-CV cost)
+    let t_direct = bench.run(|| cv.decision_values(&folds).unwrap()).median;
+
+    // 2. cached LU across permutations
+    let cache = FoldCache::prepare(&cv.hat, &folds, false).unwrap();
+    let mut cv_mut = AnalyticBinaryCv::fit(&ds.x, &y, lambda).unwrap();
+    let mut perm_rng = Rng::new(99);
+    let t_cached = bench
+        .run(|| {
+            let mut acc = 0.0;
+            let mut y_perm = y.clone();
+            for _ in 0..n_perm {
+                perm_rng.shuffle(&mut y_perm);
+                cv_mut.set_response(&y_perm);
+                let dv = cv_mut.decision_values_cached(&cache);
+                acc += dv[0];
+            }
+            acc
+        })
+        .median
+        / n_perm as f64;
+
+    // 2b. per-permutation refactor (Alg. 1 as printed — no LU reuse)
+    let t_uncached = bench
+        .run(|| {
+            let mut acc = 0.0;
+            let mut y_perm = y.clone();
+            for _ in 0..n_perm {
+                perm_rng.shuffle(&mut y_perm);
+                cv_mut.set_response(&y_perm);
+                let dv = cv_mut.decision_values(&folds).unwrap();
+                acc += dv[0];
+            }
+            acc
+        })
+        .median
+        / n_perm as f64;
+
+    // 3. Woodbury fold weights (Eq. 12) + explicit prediction
+    let t_woodbury = bench
+        .run(|| {
+            let mut acc = 0.0;
+            for te in &folds {
+                let beta = woodbury::fold_weights(&cv.hat, &y, te).unwrap();
+                let xa_te = cv.hat.xa.take_rows(te);
+                acc += matvec(&xa_te, &beta)[0];
+            }
+            acc
+        })
+        .median;
+
+    // 4. shrinkage forces refits (the §2.6.2 caveat)
+    let t_shrink = bench
+        .run(|| {
+            fastcv::cv::runner::standard_binary_cv_dvals(
+                &ds.x,
+                &ds.labels,
+                &folds,
+                Reg::Shrinkage(0.3),
+            )
+            .unwrap()
+        })
+        .median;
+
+    let base = t_cached;
+    for (name, t) in [
+        ("Eq.14 direct (factor per call)", t_direct),
+        ("Eq.14 cached LU (per perm)", t_cached),
+        ("Eq.14 refactor every perm", t_uncached),
+        ("Eq.12 Woodbury fold-weights", t_woodbury),
+        ("shrinkage ⇒ full refit (§2.6.2)", t_shrink),
+    ] {
+        table.row(vec![name.to_string(), fdur(t), format!("{:.1}x", t / base)]);
+    }
+    println!("{}", table.render());
+}

@@ -1,0 +1,43 @@
+//! Fig. 3a — binary LDA cross-validation: relative efficiency
+//! (log10 t_standard/t_analytic) over a log grid of feature counts, for
+//! N ∈ {small, large} and folds ∈ {5, 10, 20, LOO}.
+//!
+//! Scale via env: FASTCV_BENCH_SCALE=tiny|medium|paper (default medium).
+//! Run: `cargo bench --bench fig3_binary_cv`
+
+use fastcv::coordinator::sweep::{grid, Experiment, SweepScale};
+use fastcv::coordinator::{Scheduler, SweepReport};
+
+fn scale_from_env() -> SweepScale {
+    match std::env::var("FASTCV_BENCH_SCALE").as_deref() {
+        Ok("tiny") => SweepScale::tiny(),
+        Ok("paper") => SweepScale::paper(),
+        _ => SweepScale::medium(),
+    }
+}
+
+fn main() {
+    let scale = scale_from_env();
+    let points = grid(Experiment::BinaryCv, &scale);
+    eprintln!("fig3a: {} sweep points", points.len());
+    let sched = Scheduler::new(0, 2018, true);
+    let report = SweepReport::new(sched.run(&points));
+    println!("{}", report.render("Fig. 3a — binary LDA cross-validation"));
+    // Paper shape checks (soft, printed not asserted for partial grids):
+    let agg = report.aggregate();
+    let eff_at = |pred: &dyn Fn(&str) -> bool| -> Vec<f64> {
+        agg.iter().filter(|(l, ..)| pred(l)).map(|(_, e, ..)| *e).collect()
+    };
+    let small_p = eff_at(&|l: &str| l.contains("P=10 "));
+    let large_p = eff_at(&|l: &str| l.ends_with(&format!("P={}", scale.p_max)) || l.contains(&format!("P={} ", scale.p_max)));
+    if let (Some(lo), Some(hi)) = (
+        small_p.first().copied(),
+        large_p.first().copied(),
+    ) {
+        println!("shape check: rel.eff grows with features? {} ({lo:.2} → {hi:.2})", hi > lo);
+    }
+    if let Ok(dir) = std::env::var("FASTCV_BENCH_OUT") {
+        std::fs::create_dir_all(&dir).ok();
+        std::fs::write(format!("{dir}/fig3a.tsv"), report.to_tsv()).ok();
+    }
+}

@@ -1,0 +1,27 @@
+//! Fig. 3c — MultiCv sweep: relative efficiency over the feature grid.
+//! Scale via env: FASTCV_BENCH_SCALE=tiny|medium|paper (default medium).
+//! Run: `cargo bench --bench fig3_multi_cv`
+
+use fastcv::coordinator::sweep::{grid, Experiment, SweepScale};
+use fastcv::coordinator::{Scheduler, SweepReport};
+
+fn scale_from_env() -> SweepScale {
+    match std::env::var("FASTCV_BENCH_SCALE").as_deref() {
+        Ok("tiny") => SweepScale::tiny(),
+        Ok("paper") => SweepScale::paper(),
+        _ => SweepScale::medium(),
+    }
+}
+
+fn main() {
+    let scale = scale_from_env();
+    let points = grid(Experiment::MultiCv, &scale);
+    eprintln!("fig3c: {} sweep points", points.len());
+    let sched = Scheduler::new(0, 2018, true);
+    let report = SweepReport::new(sched.run(&points));
+    println!("{}", report.render("Fig. 3c — MultiCv"));
+    if let Ok(dir) = std::env::var("FASTCV_BENCH_OUT") {
+        std::fs::create_dir_all(&dir).ok();
+        std::fs::write(format!("{dir}/fig3c.tsv"), report.to_tsv()).ok();
+    }
+}

@@ -1,0 +1,104 @@
+//! Fig. 4 — EEG/MEG permutation study on the simulated Wakeman–Henson
+//! substitute: per-subject relative efficiency for binary (380 / 3800
+//! features) and multi-class (380 / 1900 features) LDA, 100 permutations ×
+//! 10-fold CV.
+//!
+//! Run: `cargo bench --bench fig4_eeg`
+//! Env: FASTCV_BENCH_SCALE=tiny  → 2 small subjects, 5 perms (smoke)
+//!      FASTCV_BENCH_SCALE=paper → 16 subjects at full channel count
+
+use fastcv::bench::RelEffReport;
+use fastcv::cv::folds::stratified_kfold;
+use fastcv::data::eeg::{simulate_subject, EegSpec};
+use fastcv::fastcv::perm::*;
+use fastcv::model::Reg;
+use fastcv::util::rng::Rng;
+use fastcv::util::timed;
+
+fn main() {
+    let scale = std::env::var("FASTCV_BENCH_SCALE").unwrap_or_default();
+    let (n_subj, n_perm, spec) = match scale.as_str() {
+        "tiny" => (2usize, 5usize, EegSpec::small()),
+        "paper" => (16, 100, EegSpec::default()),
+        _ => (
+            4,
+            25,
+            EegSpec { n_channels: 96, mean_trials: 200, trial_jitter: 20, snr: 1.2 },
+        ),
+    };
+    let lambda = 1.0;
+    eprintln!("fig4: {n_subj} subjects, {} channels, {n_perm} perms", spec.n_channels);
+
+    let mut root = Rng::new(2018);
+    let mut report = RelEffReport::new("Fig. 4 — per-subject relative efficiency (permutations)");
+    // factors for the paper's §3.2 two-way ANOVA: features (small/large) ×
+    // classifier (binary/multi)
+    let mut anova_y = Vec::new();
+    let mut f_features = Vec::new();
+    let mut f_classifier = Vec::new();
+    for subj in 0..n_subj {
+        let mut rng = root.fork(subj as u64 + 1);
+        let subject = simulate_subject(&spec, &mut rng);
+        let peak = ((0.17f64 + 0.5) * 200.0) as usize;
+        // (analysis, binary?, dataset)
+        let cases = vec![
+            ("bin-small", true, subject.features_at_timepoint(peak, true)),
+            ("bin-large", true, subject.features_windowed(100, true)),
+            ("mc-small", false, subject.features_at_timepoint(peak, false)),
+            ("mc-large", false, subject.features_windowed(200, false)),
+        ];
+        for (name, binary, ds) in cases {
+            let folds = stratified_kfold(&ds.labels, 10, &mut rng);
+            let mut r_std = rng.fork(3);
+            let mut r_ana = rng.fork(3);
+            let (t_std, t_ana) = if binary {
+                let (a, t1) = timed(|| {
+                    standard_binary_permutation(&ds.x, &ds.labels, &folds, Reg::Ridge(lambda), n_perm, &mut r_std)
+                        .unwrap()
+                });
+                let (b, t2) = timed(|| {
+                    analytic_binary_permutation(&ds.x, &ds.labels, &folds, lambda, n_perm, false, &mut r_ana)
+                        .unwrap()
+                });
+                assert!((a.observed - b.observed).abs() < 0.2);
+                (t1, t2)
+            } else {
+                let (a, t1) = timed(|| {
+                    standard_multiclass_permutation(&ds.x, &ds.labels, 3, &folds, Reg::Ridge(lambda), n_perm, &mut r_std)
+                        .unwrap()
+                });
+                let (b, t2) = timed(|| {
+                    analytic_multiclass_permutation(&ds.x, &ds.labels, 3, &folds, lambda, n_perm, &mut r_ana)
+                        .unwrap()
+                });
+                assert!((a.observed - b.observed).abs() < 1e-9, "multiclass must agree exactly");
+                (t1, t2)
+            };
+            report.push(&format!("subj{subj:02} {name} P={}", ds.p()), t_std, t_ana);
+            anova_y.push((t_std / t_ana).log10());
+            f_features.push(usize::from(name.ends_with("large")));
+            f_classifier.push(usize::from(!binary));
+            eprintln!("  subj{subj:02} {name} P={} done", ds.p());
+        }
+    }
+    println!("{}", report.render());
+    // §3.2's two-way ANOVA: features (small=380-ish, large) × classifier.
+    if anova_y.len() >= 8 {
+        use fastcv::stats::anova::{anova, Factor};
+        let tab = anova(
+            &anova_y,
+            &[Factor::new("features", &f_features), Factor::new("classifier", &f_classifier)],
+        );
+        println!(
+            "{}",
+            fastcv::coordinator::SweepReport::render_anova(
+                &tab,
+                "Fig. 4 — two-way ANOVA on rel.eff (features × classifier, cf. §3.2)"
+            )
+        );
+    }
+    if let Ok(dir) = std::env::var("FASTCV_BENCH_OUT") {
+        std::fs::create_dir_all(&dir).ok();
+        std::fs::write(format!("{dir}/fig4.tsv"), report.to_tsv()).ok();
+    }
+}

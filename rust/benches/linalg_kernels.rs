@@ -1,0 +1,70 @@
+//! L3 hot-path microbenchmarks: gemm / syrk / Cholesky / LU throughput.
+//! These are the kernels both CV arms sit on; the §Perf pass tracks them.
+//!
+//! Run: `cargo bench --bench linalg_kernels`
+
+use fastcv::bench::Bench;
+use fastcv::linalg::{matmul, syrk_t, Cholesky, Lu, Mat};
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fdur, Table};
+
+fn gflops(flops: f64, secs: f64) -> String {
+    format!("{:.2}", flops / secs / 1e9)
+}
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::default()
+    };
+    let mut rng = Rng::new(1);
+    let mut table = Table::new(vec!["kernel", "size", "time", "GFLOP/s"])
+        .with_title("linalg kernel throughput (f64)".to_string());
+
+    let sizes: &[usize] = if tiny { &[64, 128] } else { &[128, 256, 512] };
+    for &s in sizes {
+        let a = Mat::from_fn(s, s, |_, _| rng.gauss());
+        let b = Mat::from_fn(s, s, |_, _| rng.gauss());
+        let t = bench.run(|| matmul(&a, &b)).median;
+        table.row(vec![
+            "gemm".into(),
+            format!("{s}x{s}x{s}"),
+            fdur(t),
+            gflops(2.0 * (s * s * s) as f64, t),
+        ]);
+    }
+    for &s in sizes {
+        let a = Mat::from_fn(2 * s, s, |_, _| rng.gauss());
+        let t = bench.run(|| syrk_t(&a)).median;
+        table.row(vec![
+            "syrk (XᵀX)".into(),
+            format!("{}x{s}", 2 * s),
+            fdur(t),
+            gflops((2 * s) as f64 * (s * s) as f64, t),
+        ]);
+    }
+    for &s in sizes {
+        let a = Mat::from_fn(s + 8, s, |_, _| rng.gauss());
+        let mut g = syrk_t(&a);
+        for i in 0..s {
+            g[(i, i)] += 1.0;
+        }
+        let t = bench.run(|| Cholesky::factor(&g).unwrap()).median;
+        table.row(vec![
+            "cholesky".into(),
+            format!("{s}x{s}"),
+            fdur(t),
+            gflops((s * s * s) as f64 / 3.0, t),
+        ]);
+        let t = bench.run(|| Lu::factor(&g).unwrap()).median;
+        table.row(vec![
+            "lu".into(),
+            format!("{s}x{s}"),
+            fdur(t),
+            gflops(2.0 * (s * s * s) as f64 / 3.0, t),
+        ]);
+    }
+    println!("{}", table.render());
+}

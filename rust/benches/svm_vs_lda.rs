@@ -1,0 +1,86 @@
+//! §4.4 / §1 comparison: regularised-LDA analytic CV vs linear SVM
+//! (dual coordinate descent) — accuracy parity, training-time contrast,
+//! and the SVM's extra hyperparameter cost.
+//!
+//! Run: `cargo bench --bench svm_vs_lda`
+
+use fastcv::bench::Bench;
+use fastcv::cv::folds::stratified_kfold;
+use fastcv::cv::metrics::accuracy_signed;
+use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::fastcv::binary::AnalyticBinaryCv;
+use fastcv::model::svm::{LinearSvm, SvmParams};
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fdur, fnum, Table};
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::quick()
+    };
+    let configs: &[(usize, usize)] =
+        if tiny { &[(60, 30)] } else { &[(100, 50), (100, 400), (300, 100)] };
+    let mut table = Table::new(vec![
+        "config",
+        "LDA acc (analytic CV)",
+        "SVM acc (CV)",
+        "t LDA-CV",
+        "t SVM-CV",
+        "SVM/LDA time",
+    ])
+    .with_title("§4.4 — regularised LDA (analytic CV) vs linear SVM (DCD)".to_string());
+
+    for &(n, p) in configs {
+        let mut rng = Rng::new((n + p) as u64);
+        let mut spec = SyntheticSpec::binary(n, p);
+        spec.separation = 1.5;
+        let ds = generate(&spec, &mut rng);
+        let y = ds.y_signed();
+        let folds = stratified_kfold(&ds.labels, 5, &mut rng);
+
+        // LDA analytic CV
+        let t_lda = bench
+            .run(|| {
+                let cv = AnalyticBinaryCv::fit(&ds.x, &y, 1.0).unwrap();
+                cv.decision_values(&folds).unwrap()
+            })
+            .median;
+        let cv = AnalyticBinaryCv::fit(&ds.x, &y, 1.0).unwrap();
+        let acc_lda = accuracy_signed(&cv.decision_values(&folds).unwrap(), &y);
+
+        // SVM CV (retrain per fold — no analytic shortcut exists for hinge loss)
+        let svm_cv = |rng: &mut Rng| -> Vec<f64> {
+            let mut dv = vec![0.0; n];
+            for te in &folds {
+                let tr = fastcv::fastcv::complement(te, n);
+                let x_tr = ds.x.take_rows(&tr);
+                let l_tr: Vec<usize> = tr.iter().map(|&i| ds.labels[i]).collect();
+                let m = LinearSvm::train(&x_tr, &l_tr, SvmParams::default(), rng);
+                for &i in te {
+                    dv[i] = m.decision_value(ds.x.row(i));
+                }
+            }
+            dv
+        };
+        let mut rng_b = Rng::new(7);
+        let t_svm = bench.run(|| svm_cv(&mut rng_b)).median;
+        let mut rng_c = Rng::new(7);
+        let acc_svm = accuracy_signed(&svm_cv(&mut rng_c), &y);
+
+        table.row(vec![
+            format!("N={n} P={p}"),
+            fnum(acc_lda, 3),
+            fnum(acc_svm, 3),
+            fdur(t_lda),
+            fdur(t_svm),
+            format!("{:.1}x", t_svm / t_lda),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper §1: LDA \"often performs similarly to linear SVM while being \
+         significantly faster to train\" — and the SVM has no analytic CV shortcut."
+    );
+}

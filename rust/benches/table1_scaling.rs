@@ -1,0 +1,108 @@
+//! Table 1 — empirical complexity: fit scaling exponents of both approaches
+//! against N, P, K and compare with the asymptotic predictions
+//! (standard: O(KNP² + KP³); analytic: O(KN³) after an O(N²P + NP² + P³)
+//! hat build).
+//!
+//! Run: `cargo bench --bench table1_scaling`
+//! Env: FASTCV_BENCH_SCALE=tiny for a fast smoke run.
+
+use fastcv::bench::Bench;
+use fastcv::cv::folds::kfold;
+use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::fastcv::binary::AnalyticBinaryCv;
+use fastcv::fastcv::FoldCache;
+use fastcv::model::Reg;
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fnum, Table};
+
+fn fit_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let mx = fastcv::util::mean(&lx);
+    let my = fastcv::util::mean(&ly);
+    let num: f64 = lx.iter().zip(&ly).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let den: f64 = lx.iter().map(|a| (a - mx) * (a - mx)).sum();
+    num / den
+}
+
+fn time_pair(n: usize, p: usize, k: usize, bench: &Bench) -> (f64, f64) {
+    let mut rng = Rng::new((n * 31 + p * 7 + k) as u64);
+    let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+    let folds = kfold(n, k, &mut rng);
+    let y = ds.y_signed();
+    let t_std = bench
+        .run(|| {
+            fastcv::cv::runner::standard_binary_cv_dvals(&ds.x, &ds.labels, &folds, Reg::Ridge(1.0))
+                .unwrap()
+        })
+        .median;
+    let t_ana = bench
+        .run(|| {
+            let cv = AnalyticBinaryCv::fit(&ds.x, &y, 1.0).unwrap();
+            let cache = FoldCache::prepare(&cv.hat, &folds, false).unwrap();
+            cv.decision_values_cached(&cache)
+        })
+        .median;
+    (t_std, t_ana)
+}
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny { Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 } } else { Bench::quick() };
+
+    let mut table = Table::new(vec!["axis", "standard slope", "analytic slope", "paper prediction"])
+        .with_title("Table 1 — empirical scaling exponents (log-log slopes)".to_string());
+
+    // --- vs P (N, K fixed; P past N so the P³ term dominates the standard arm) ---
+    let ps: Vec<usize> = if tiny { vec![30, 60, 120] } else { vec![100, 200, 400, 800] };
+    let n = if tiny { 24 } else { 80 };
+    let (mut ts, mut ta) = (Vec::new(), Vec::new());
+    for &p in &ps {
+        let (s, a) = time_pair(n, p, 8.min(n / 3), &bench);
+        ts.push(s);
+        ta.push(a);
+    }
+    let xs: Vec<f64> = ps.iter().map(|&p| p as f64).collect();
+    table.row(vec![
+        format!("time vs P (N={n})"),
+        format!("P^{}", fnum(fit_slope(&xs, &ts), 2)),
+        format!("P^{}", fnum(fit_slope(&xs, &ta), 2)),
+        "std ~P³ (P>N); ana ≤P² (hat build only)".into(),
+    ]);
+
+    // --- vs N (P, K fixed) ---
+    let ns: Vec<usize> = if tiny { vec![24, 48, 96] } else { vec![100, 200, 400] };
+    let p = if tiny { 16 } else { 60 };
+    let (mut ts, mut ta) = (Vec::new(), Vec::new());
+    for &n in &ns {
+        let (s, a) = time_pair(n, p, 8, &bench);
+        ts.push(s);
+        ta.push(a);
+    }
+    let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    table.row(vec![
+        format!("time vs N (P={p})"),
+        format!("N^{}", fnum(fit_slope(&xs, &ts), 2)),
+        format!("N^{}", fnum(fit_slope(&xs, &ta), 2)),
+        "std ~N (scatter accum); ana ~N²··³ (K·(N/K)³ + N²P)".into(),
+    ]);
+
+    // --- vs K (N, P fixed) ---
+    let ks: Vec<usize> = if tiny { vec![2, 4, 8] } else { vec![2, 5, 10, 20] };
+    let (n, p) = if tiny { (24, 16) } else { (120, 150) };
+    let (mut ts, mut ta) = (Vec::new(), Vec::new());
+    for &k in &ks {
+        let (s, a) = time_pair(n, p, k, &bench);
+        ts.push(s);
+        ta.push(a);
+    }
+    let xs: Vec<f64> = ks.iter().map(|&k| k as f64).collect();
+    table.row(vec![
+        format!("time vs K (N={n} P={p})"),
+        format!("K^{}", fnum(fit_slope(&xs, &ts), 2)),
+        format!("K^{}", fnum(fit_slope(&xs, &ta), 2)),
+        "std ~K (K refits); ana ~K⁻² per-fold shrink (K·(N/K)³)".into(),
+    ]);
+
+    println!("{}", table.render());
+}

@@ -1,0 +1,155 @@
+//! Micro-benchmark framework (no `criterion` in the offline build).
+//!
+//! Measures wall-clock with warmup + adaptive iteration counts, reports
+//! median / MAD / min, and renders paper-style tables. Used by all the
+//! `benches/*.rs` targets (each declared `harness = false`).
+
+use crate::util::table::{fdur, Table};
+use std::time::Instant;
+
+/// One measured statistic set (seconds).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub median: f64,
+    pub mad: f64,
+    pub min: f64,
+    pub iters: usize,
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    /// Minimum number of timed iterations.
+    pub min_iters: usize,
+    /// Maximum number of timed iterations.
+    pub max_iters: usize,
+    /// Target total measurement time (seconds).
+    pub target_time: f64,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { min_iters: 3, max_iters: 50, target_time: 1.0, warmup: 1 }
+    }
+}
+
+impl Bench {
+    /// Quick profile for expensive end-to-end workloads.
+    pub fn quick() -> Bench {
+        Bench { min_iters: 2, max_iters: 10, target_time: 0.5, warmup: 1 }
+    }
+
+    /// Time a closure. The closure should return something observable to
+    /// prevent dead-code elimination; its result is black-boxed here.
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> Sample {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        // Estimate single-shot cost to pick iteration count.
+        let t0 = Instant::now();
+        black_box(f());
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_time / once) as usize)
+            .clamp(self.min_iters, self.max_iters);
+        let mut times = Vec::with_capacity(iters + 1);
+        times.push(once);
+        for _ in 0..iters {
+            let t = Instant::now();
+            black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut dev: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Sample { median, mad: dev[dev.len() / 2], min: times[0], iters: times.len() }
+    }
+}
+
+/// Prevent the optimiser from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Collects rows of (label, standard, analytic) and renders the paper's
+/// relative-efficiency table: `log10(t_std / t_analytic)`.
+pub struct RelEffReport {
+    table: Table,
+    rows: Vec<(String, f64, f64)>,
+}
+
+impl RelEffReport {
+    /// New report with a title.
+    pub fn new(title: &str) -> RelEffReport {
+        RelEffReport {
+            table: Table::new(vec!["config", "t_standard", "t_analytic", "speedup", "rel.eff (log10)"])
+                .with_title(title.to_string()),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Record one configuration.
+    pub fn push(&mut self, label: &str, t_std: f64, t_ana: f64) {
+        let speedup = t_std / t_ana;
+        self.table.row(vec![
+            label.to_string(),
+            fdur(t_std),
+            fdur(t_ana),
+            format!("{speedup:.1}x"),
+            format!("{:.2}", speedup.log10()),
+        ]);
+        self.rows.push((label.to_string(), t_std, t_ana));
+    }
+
+    /// Relative efficiency (log10 speedup) per recorded row.
+    pub fn rel_eff(&self) -> Vec<(String, f64)> {
+        self.rows.iter().map(|(l, s, a)| (l.clone(), (s / a).log10())).collect()
+    }
+
+    /// Render the table.
+    pub fn render(&self) -> String {
+        self.table.render()
+    }
+
+    /// Raw TSV of the timing rows (label, t_std, t_analytic, rel_eff).
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("config\tt_standard\tt_analytic\trel_eff\n");
+        for (l, s, a) in &self.rows {
+            out.push_str(&format!("{l}\t{s:.6e}\t{a:.6e}\t{:.4}\n", (s / a).log10()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_reports_sane_stats() {
+        let b = Bench { min_iters: 3, max_iters: 5, target_time: 0.01, warmup: 1 };
+        let s = b.run(|| {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.median > 0.0);
+        assert!(s.min <= s.median);
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn rel_eff_report_math() {
+        let mut r = RelEffReport::new("demo");
+        r.push("cfg", 1.0, 0.001);
+        let eff = r.rel_eff();
+        assert!((eff[0].1 - 3.0).abs() < 1e-12);
+        assert!(r.render().contains("1000.0x"));
+        assert!(r.to_tsv().lines().count() == 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator: the sweep/permutation orchestration engine.
+//!
+//! Reproducing Fig. 3 means running hundreds of (N, P, K, C, perms, rep)
+//! configurations, each timing the standard approach against the analytic
+//! approach on identical data and folds. This module owns that machinery:
+//!
+//! - [`sweep`] — experiment grids (Fig. 3a–d, Table 1, parity §4.1) and the
+//!   per-point timing protocol (seed reset between the two arms, as in
+//!   §2.12)
+//! - [`scheduler`] — job fan-out over the worker pool with deterministic
+//!   per-job RNG streams and progress reporting
+//! - [`report`] — result collection, relative-efficiency summaries, ANOVA
+//!   tables matching the paper's Results section, TSV dumps
+
+pub mod report;
+pub mod scheduler;
+pub mod sweep;
+
+pub use report::SweepReport;
+pub use scheduler::Scheduler;
+pub use sweep::{Experiment, SweepPoint, SweepResult};

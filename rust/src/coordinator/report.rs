@@ -1,0 +1,207 @@
+//! Result aggregation and paper-style reporting.
+
+use super::sweep::SweepResult;
+use crate::stats::anova::{anova, AnovaTable, Factor};
+use crate::util::table::{fdur, fnum, Table};
+
+/// Aggregated view over a sweep's results.
+pub struct SweepReport {
+    pub results: Vec<SweepResult>,
+}
+
+impl SweepReport {
+    /// Wrap raw results.
+    pub fn new(results: Vec<SweepResult>) -> SweepReport {
+        SweepReport { results }
+    }
+
+    /// Mean relative efficiency per (N, P, K|T|C) configuration, averaged
+    /// over reps — the quantity plotted in Fig. 3.
+    pub fn aggregate(&self) -> Vec<(String, f64, f64, f64, usize)> {
+        // label (without rep) → (rel_effs, t_std, t_ana)
+        let mut map: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>, Vec<f64>)> =
+            Default::default();
+        for r in &self.results {
+            let e = map.entry(r.label.clone()).or_default();
+            e.0.push(r.rel_eff());
+            e.1.push(r.t_std);
+            e.2.push(r.t_ana);
+        }
+        map.into_iter()
+            .map(|(label, (effs, ts, ta))| {
+                (
+                    label,
+                    crate::util::mean(&effs),
+                    crate::util::mean(&ts),
+                    crate::util::mean(&ta),
+                    effs.len(),
+                )
+            })
+            .collect()
+    }
+
+    /// Render the Fig. 3-style table.
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(vec!["config", "t_std", "t_analytic", "rel.eff", "reps"])
+            .with_title(title.to_string());
+        for (label, eff, ts, ta, reps) in self.aggregate() {
+            t.row(vec![label, fdur(ts), fdur(ta), fnum(eff, 2), reps.to_string()]);
+        }
+        t.render()
+    }
+
+    /// TSV dump of raw per-rep rows.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from(
+            "exp\tn\tp\tk\tc\tn_perm\trep\tt_std\tt_ana\trel_eff\tacc_std\tacc_ana\n",
+        );
+        for r in &self.results {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.6e}\t{:.4}\t{:.4}\t{:.4}\n",
+                r.exp_tag, r.n, r.p, r.k, r.c, r.n_perm, r.rep, r.t_std, r.t_ana,
+                r.rel_eff(), r.acc_std, r.acc_ana
+            ));
+        }
+        out
+    }
+
+    /// The paper's three-way ANOVA on relative efficiency (Results §3.1).
+    /// Factors are chosen per experiment: features is binned into quartile
+    /// groups (it is continuous in the paper's model).
+    pub fn anova_rel_eff(&self, second_factor: AnovaFactor) -> Option<AnovaTable> {
+        if self.results.len() < 16 {
+            return None;
+        }
+        let y: Vec<f64> = self.results.iter().map(|r| r.rel_eff()).collect();
+        let features: Vec<f64> = self.results.iter().map(|r| r.p as f64).collect();
+        let n_levels: Vec<usize> = self.results.iter().map(|r| r.n).collect();
+        let second: Vec<usize> = self
+            .results
+            .iter()
+            .map(|r| match second_factor {
+                AnovaFactor::Folds => r.k,
+                AnovaFactor::Permutations => r.n_perm,
+                AnovaFactor::Classes => r.c,
+            })
+            .collect();
+        let p_bins = 4.min(
+            features.iter().map(|&f| f as usize).collect::<std::collections::BTreeSet<_>>().len(),
+        );
+        Some(anova(
+            &y,
+            &[
+                Factor::from_continuous("features", &features, p_bins.max(2)),
+                Factor::new("N", &n_levels),
+                Factor::new(second_factor.name(), &second),
+            ],
+        ))
+    }
+
+    /// Render an ANOVA table the way the paper reports it.
+    pub fn render_anova(tab: &AnovaTable, title: &str) -> String {
+        let mut t =
+            Table::new(vec!["term", "df", "SS", "F", "p"]).with_title(title.to_string());
+        for row in &tab.rows {
+            t.row(vec![
+                row.term.clone(),
+                row.df.to_string(),
+                fnum(row.sum_sq, 3),
+                fnum(row.f, 2),
+                if row.p < 0.001 { "<.001".into() } else { format!("{:.3}", row.p) },
+            ]);
+        }
+        t.row(vec![
+            "residual".into(),
+            tab.residual_df.to_string(),
+            fnum(tab.residual_ss, 3),
+            "".into(),
+            "".into(),
+        ]);
+        t.render()
+    }
+}
+
+/// The experiment-specific third factor of the paper's ANOVAs.
+#[derive(Clone, Copy, Debug)]
+pub enum AnovaFactor {
+    Folds,
+    Permutations,
+    Classes,
+}
+
+impl AnovaFactor {
+    fn name(&self) -> &'static str {
+        match self {
+            AnovaFactor::Folds => "folds",
+            AnovaFactor::Permutations => "permutations",
+            AnovaFactor::Classes => "classes",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_result(n: usize, p: usize, k: usize, rep: usize, eff: f64) -> SweepResult {
+        SweepResult {
+            label: format!("N={n} P={p} K={k}"),
+            exp_tag: "BinaryCv".into(),
+            n,
+            p,
+            k,
+            c: 2,
+            n_perm: 0,
+            rep,
+            t_std: 10f64.powf(eff),
+            t_ana: 1.0,
+            acc_std: 0.9,
+            acc_ana: 0.9,
+        }
+    }
+
+    #[test]
+    fn aggregate_averages_reps() {
+        let rs = vec![
+            fake_result(100, 50, 5, 0, 1.0),
+            fake_result(100, 50, 5, 1, 2.0),
+            fake_result(100, 99, 5, 0, 3.0),
+        ];
+        let rep = SweepReport::new(rs);
+        let agg = rep.aggregate();
+        assert_eq!(agg.len(), 2);
+        let first = agg.iter().find(|(l, ..)| l.contains("P=50")).unwrap();
+        assert!((first.1 - 1.5).abs() < 1e-12);
+        assert_eq!(first.4, 2);
+        assert!(rep.render("t").contains("rel.eff"));
+        assert_eq!(rep.to_tsv().lines().count(), 4);
+    }
+
+    #[test]
+    fn anova_detects_feature_effect() {
+        // rel_eff grows with P → features factor significant.
+        let mut rs = Vec::new();
+        for (pi, p) in [10usize, 50, 200, 800].iter().enumerate() {
+            for n in [100usize, 1000] {
+                for k in [5usize, 10] {
+                    for rep in 0..3 {
+                        let eff = pi as f64 + 0.01 * rep as f64;
+                        rs.push(fake_result(n, *p, k, rep, eff));
+                    }
+                }
+            }
+        }
+        let rep = SweepReport::new(rs);
+        let tab = rep.anova_rel_eff(AnovaFactor::Folds).unwrap();
+        let feat = tab.rows.iter().find(|r| r.term == "features").unwrap();
+        assert!(feat.p < 1e-6, "features p={}", feat.p);
+        let rendered = SweepReport::render_anova(&tab, "ANOVA");
+        assert!(rendered.contains("features"));
+    }
+
+    #[test]
+    fn anova_none_for_tiny_result_sets() {
+        let rep = SweepReport::new(vec![fake_result(10, 5, 2, 0, 0.5)]);
+        assert!(rep.anova_rel_eff(AnovaFactor::Folds).is_none());
+    }
+}

@@ -1,0 +1,98 @@
+//! Job scheduler: fan sweep points out over the worker pool.
+//!
+//! Each job gets a deterministic RNG stream derived from (base seed, job
+//! index), so results are identical regardless of worker count or
+//! completion order. Progress is reported through a shared atomic counter.
+
+use super::sweep::{run_point, SweepPoint, SweepResult};
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Sweep scheduler over a thread pool.
+pub struct Scheduler {
+    pool: ThreadPool,
+    base_seed: u64,
+    verbose: bool,
+}
+
+impl Scheduler {
+    /// `workers = 0` → one per logical core (capped at 16).
+    pub fn new(workers: usize, base_seed: u64, verbose: bool) -> Scheduler {
+        let pool = if workers == 0 {
+            ThreadPool::with_default_size(16)
+        } else {
+            ThreadPool::new(workers)
+        };
+        Scheduler { pool, base_seed, verbose }
+    }
+
+    /// Worker count.
+    pub fn workers(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Run all points; results come back in input order. Failed points are
+    /// reported and skipped (they do not abort the sweep).
+    pub fn run(&self, points: &[SweepPoint]) -> Vec<SweepResult> {
+        let total = points.len();
+        let done = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SweepResult>>> =
+            (0..total).map(|_| Mutex::new(None)).collect();
+        let slots_ref = &slots;
+        let done_ref = &done;
+        let base_seed = self.base_seed;
+        let verbose = self.verbose;
+        self.pool.for_each(total, move |i| {
+            let point = &points[i];
+            let seed = base_seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            match run_point(point, seed) {
+                Ok(res) => {
+                    *slots_ref[i].lock().unwrap() = Some(res);
+                }
+                Err(e) => {
+                    eprintln!("sweep point {} failed: {e:#}", point.label());
+                }
+            }
+            let d = done_ref.fetch_add(1, Ordering::Relaxed) + 1;
+            if verbose && (d % 10 == 0 || d == total) {
+                eprintln!("  [{d}/{total}] sweep points done");
+            }
+        });
+        slots.into_iter().filter_map(|s| s.into_inner().unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sweep::{grid, Experiment, SweepScale};
+
+    #[test]
+    fn scheduler_runs_tiny_grid_in_order() {
+        let scale = SweepScale::tiny();
+        let mut points = grid(Experiment::BinaryCv, &scale);
+        points.truncate(6);
+        let sched = Scheduler::new(3, 99, false);
+        let results = sched.run(&points);
+        assert_eq!(results.len(), 6);
+        for (p, r) in points.iter().zip(&results) {
+            assert_eq!(p.label(), r.label, "order preserved");
+            assert!(r.t_std > 0.0 && r.t_ana > 0.0);
+        }
+    }
+
+    #[test]
+    fn results_independent_of_worker_count() {
+        let scale = SweepScale::tiny();
+        let mut points = grid(Experiment::BinaryCv, &scale);
+        points.truncate(4);
+        let r1 = Scheduler::new(1, 7, false).run(&points);
+        let r4 = Scheduler::new(4, 7, false).run(&points);
+        assert_eq!(r1.len(), r4.len());
+        for (a, b) in r1.iter().zip(&r4) {
+            assert_eq!(a.acc_std, b.acc_std, "{}", a.label);
+            assert_eq!(a.acc_ana, b.acc_ana, "{}", a.label);
+        }
+    }
+}

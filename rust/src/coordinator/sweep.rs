@@ -1,0 +1,476 @@
+//! Experiment definitions and the per-point timing protocol.
+//!
+//! Every sweep point generates a dataset (§2.12), builds folds, then times
+//! both arms on *identical* data and folds — the RNG is forked per point so
+//! arms and points are reproducible regardless of scheduling order.
+
+use crate::cv::folds::{kfold, leave_one_out, stratified_kfold};
+use crate::data::synthetic::{generate, SyntheticSpec};
+use crate::fastcv::binary::AnalyticBinaryCv;
+use crate::fastcv::multiclass::AnalyticMulticlassCv;
+use crate::fastcv::perm::{
+    analytic_binary_permutation, analytic_multiclass_permutation, standard_binary_permutation,
+    standard_multiclass_permutation,
+};
+use crate::fastcv::FoldCache;
+use crate::model::lda_binary::signed_codes;
+use crate::model::Reg;
+use crate::util::rng::Rng;
+use crate::util::{log_grid_usize, timed};
+use anyhow::Result;
+
+/// Which paper experiment a point belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Experiment {
+    /// Fig. 3a: binary cross-validation sweep.
+    BinaryCv,
+    /// Fig. 3b: binary permutation sweep.
+    BinaryPerm,
+    /// Fig. 3c: multi-class cross-validation sweep.
+    MultiCv,
+    /// Fig. 3d: multi-class permutation sweep.
+    MultiPerm,
+}
+
+impl Experiment {
+    /// Parse a CLI tag (`f3a`..`f3d`).
+    pub fn from_tag(tag: &str) -> Option<Experiment> {
+        match tag {
+            "f3a" => Some(Experiment::BinaryCv),
+            "f3b" => Some(Experiment::BinaryPerm),
+            "f3c" => Some(Experiment::MultiCv),
+            "f3d" => Some(Experiment::MultiPerm),
+            _ => None,
+        }
+    }
+
+    /// Human-readable name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Experiment::BinaryCv => "Fig3a binary CV",
+            Experiment::BinaryPerm => "Fig3b binary permutations",
+            Experiment::MultiCv => "Fig3c multi-class CV",
+            Experiment::MultiPerm => "Fig3d multi-class permutations",
+        }
+    }
+}
+
+/// One configuration to measure.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub exp: Experiment,
+    /// Samples.
+    pub n: usize,
+    /// Features.
+    pub p: usize,
+    /// Folds (`usize::MAX` encodes leave-one-out).
+    pub k: usize,
+    /// Classes (2 for binary).
+    pub c: usize,
+    /// Permutations (0 for pure-CV experiments).
+    pub n_perm: usize,
+    /// Repetition index (fresh data per rep, §2.12: 20 reps).
+    pub rep: usize,
+    /// Ridge penalty (regularisation keeps wide configs well-posed).
+    pub lambda: f64,
+}
+
+impl SweepPoint {
+    /// Short config label for tables.
+    pub fn label(&self) -> String {
+        let k = if self.k == usize::MAX { "LOO".into() } else { self.k.to_string() };
+        match self.exp {
+            Experiment::BinaryCv => format!("N={} P={} K={k}", self.n, self.p),
+            Experiment::BinaryPerm => {
+                format!("N={} P={} K={k} T={}", self.n, self.p, self.n_perm)
+            }
+            Experiment::MultiCv => format!("N={} P={} K={k} C={}", self.n, self.p, self.c),
+            Experiment::MultiPerm => {
+                format!("N={} P={} K={k} C={} T={}", self.n, self.p, self.c, self.n_perm)
+            }
+        }
+    }
+}
+
+/// Timed outcome of one point.
+#[derive(Clone, Debug, Default)]
+pub struct SweepResult {
+    pub label: String,
+    pub exp_tag: String,
+    pub n: usize,
+    pub p: usize,
+    pub k: usize,
+    pub c: usize,
+    pub n_perm: usize,
+    pub rep: usize,
+    /// Standard-approach wall-clock (s).
+    pub t_std: f64,
+    /// Analytic-approach wall-clock (s).
+    pub t_ana: f64,
+    /// Accuracy from the standard arm.
+    pub acc_std: f64,
+    /// Accuracy from the analytic arm.
+    pub acc_ana: f64,
+}
+
+impl SweepResult {
+    /// `log10(t_std / t_ana)` — the paper's relative efficiency.
+    pub fn rel_eff(&self) -> f64 {
+        (self.t_std / self.t_ana).log10()
+    }
+}
+
+/// Scale factor for sweep grids: 1.0 reproduces the paper's ranges; smaller
+/// values shrink N/P/perms for quick runs (used by tests and CI).
+#[derive(Clone, Copy, Debug)]
+pub struct SweepScale {
+    /// Max features in the log grid (paper: 1000).
+    pub p_max: usize,
+    /// Feature-grid resolution (paper: 40 log steps).
+    pub p_steps: usize,
+    /// Sample sizes (paper: 100 and 1000).
+    pub ns: &'static [usize],
+    /// Repetitions per configuration (paper: 20).
+    pub reps: usize,
+    /// Permutation counts, binary (paper: 100/1000/10000).
+    pub perms_binary: &'static [usize],
+    /// Permutation counts, multi-class (paper: 10/100).
+    pub perms_multi: &'static [usize],
+    /// Feature cap for the multi-class experiments (the standard arm pays a
+    /// full generalised eig per fold, so the paper too limited multi-class
+    /// permutation counts "to keep overall computation time tractable").
+    pub p_max_multi: usize,
+}
+
+impl SweepScale {
+    /// The paper's full grids (hours of compute).
+    pub fn paper() -> SweepScale {
+        SweepScale {
+            p_max: 1000,
+            p_steps: 40,
+            ns: &[100, 1000],
+            reps: 20,
+            perms_binary: &[100, 1000, 10000],
+            perms_multi: &[10, 100],
+            p_max_multi: 1000,
+        }
+    }
+
+    /// A laptop-scale grid preserving the qualitative shape (default CLI):
+    /// same N-small/N-large, folds, and permutation contrasts as the paper,
+    /// with P capped at 500 and 2 reps so the full Fig. 3 suite finishes in
+    /// minutes rather than the paper's cluster-hours.
+    pub fn medium() -> SweepScale {
+        SweepScale {
+            p_max: 500,
+            p_steps: 8,
+            ns: &[100, 300],
+            reps: 2,
+            perms_binary: &[10, 50],
+            perms_multi: &[5, 20],
+            p_max_multi: 250,
+        }
+    }
+
+    /// Tiny grid for tests.
+    pub fn tiny() -> SweepScale {
+        SweepScale {
+            p_max: 60,
+            p_steps: 4,
+            ns: &[40],
+            reps: 1,
+            perms_binary: &[5],
+            perms_multi: &[3],
+            p_max_multi: 60,
+        }
+    }
+}
+
+/// Build the grid of points for one experiment.
+pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
+    let ps = log_grid_usize(10, scale.p_max, scale.p_steps);
+    let lambda = 1.0; // fixed moderate ridge; identical in both arms
+    let mut out = Vec::new();
+    match exp {
+        Experiment::BinaryCv => {
+            // folds ∈ {5, 10, 20, LOO}
+            for &n in scale.ns {
+                for &p in &ps {
+                    for k in [5usize, 10, 20, usize::MAX] {
+                        for rep in 0..scale.reps {
+                            out.push(SweepPoint { exp, n, p, k, c: 2, n_perm: 0, rep, lambda });
+                        }
+                    }
+                }
+            }
+        }
+        Experiment::BinaryPerm => {
+            for &n in scale.ns {
+                for &p in &ps {
+                    for &t in scale.perms_binary {
+                        for rep in 0..scale.reps {
+                            out.push(SweepPoint { exp, n, p, k: 10, c: 2, n_perm: t, rep, lambda });
+                        }
+                    }
+                }
+            }
+        }
+        Experiment::MultiCv => {
+            for &n in scale.ns {
+                for &p in ps.iter().filter(|&&p| p <= scale.p_max_multi) {
+                    for c in [5usize, 10] {
+                        if n / c < 4 {
+                            continue;
+                        }
+                        for rep in 0..scale.reps {
+                            out.push(SweepPoint { exp, n, p, k: 10, c, n_perm: 0, rep, lambda });
+                        }
+                    }
+                }
+            }
+        }
+        Experiment::MultiPerm => {
+            for &n in scale.ns {
+                for &p in ps.iter().filter(|&&p| p <= scale.p_max_multi) {
+                    for &t in scale.perms_multi {
+                        for rep in 0..scale.reps {
+                            out.push(SweepPoint { exp, n, p, k: 10, c: 5, n_perm: t, rep, lambda });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run one sweep point: generate data, build folds, time both arms on the
+/// identical data/folds (fresh RNG forks per arm mimic the paper's seed
+/// reset), and sanity-check that the two arms agree on accuracy.
+pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
+    let mut rng = Rng::with_stream(seed, (point.rep as u64) << 8);
+    let spec = if point.c == 2 {
+        SyntheticSpec::binary(point.n, point.p)
+    } else {
+        SyntheticSpec::multiclass(point.n, point.p, point.c)
+    };
+    let ds = generate(&spec, &mut rng);
+    let k_actual = if point.k == usize::MAX { point.n } else { point.k };
+    let folds = if point.k == usize::MAX {
+        leave_one_out(point.n)
+    } else if point.c == 2 {
+        kfold(point.n, k_actual, &mut rng)
+    } else {
+        stratified_kfold(&ds.labels, k_actual, &mut rng)
+    };
+
+    let mut result = SweepResult {
+        label: point.label(),
+        exp_tag: format!("{:?}", point.exp),
+        n: point.n,
+        p: point.p,
+        k: k_actual,
+        c: point.c,
+        n_perm: point.n_perm,
+        rep: point.rep,
+        ..Default::default()
+    };
+
+    match point.exp {
+        Experiment::BinaryCv => {
+            let y = signed_codes(&ds.labels);
+            let (std_dv, t_std) = timed(|| {
+                crate::cv::runner::standard_binary_cv_dvals(
+                    &ds.x,
+                    &ds.labels,
+                    &folds,
+                    Reg::Ridge(point.lambda),
+                )
+            });
+            let (ana_dv, t_ana) = timed(|| -> Result<Vec<f64>> {
+                let cv = AnalyticBinaryCv::fit(&ds.x, &y, point.lambda)?;
+                let cache = FoldCache::prepare(&cv.hat, &folds, false)?;
+                Ok(cv.decision_values_cached(&cache))
+            });
+            result.t_std = t_std;
+            result.t_ana = t_ana;
+            result.acc_std = crate::cv::metrics::accuracy_signed(&std_dv?, &y);
+            result.acc_ana = crate::cv::metrics::accuracy_signed(&ana_dv?, &y);
+        }
+        Experiment::BinaryPerm => {
+            let mut rng_std = rng.fork(1);
+            let mut rng_ana = rng.fork(1); // same stream: identical permutations
+            let (std_res, t_std) = timed(|| {
+                standard_binary_permutation(
+                    &ds.x,
+                    &ds.labels,
+                    &folds,
+                    Reg::Ridge(point.lambda),
+                    point.n_perm,
+                    &mut rng_std,
+                )
+            });
+            let (ana_res, t_ana) = timed(|| {
+                analytic_binary_permutation(
+                    &ds.x,
+                    &ds.labels,
+                    &folds,
+                    point.lambda,
+                    point.n_perm,
+                    false,
+                    &mut rng_ana,
+                )
+            });
+            result.t_std = t_std;
+            result.t_ana = t_ana;
+            result.acc_std = std_res?.observed;
+            result.acc_ana = ana_res?.observed;
+        }
+        Experiment::MultiCv => {
+            let (std_pred, t_std) = timed(|| {
+                crate::cv::runner::standard_multiclass_cv_predict(
+                    &ds.x,
+                    &ds.labels,
+                    point.c,
+                    &folds,
+                    Reg::Ridge(point.lambda),
+                )
+            });
+            let (ana_pred, t_ana) = timed(|| -> Result<Vec<usize>> {
+                let cv = AnalyticMulticlassCv::fit(&ds.x, &ds.labels, point.c, point.lambda)?;
+                let cache = FoldCache::prepare(&cv.hat, &folds, true)?;
+                cv.predict_cached(&cache)
+            });
+            result.t_std = t_std;
+            result.t_ana = t_ana;
+            result.acc_std = crate::cv::metrics::accuracy_labels(&std_pred?, &ds.labels);
+            result.acc_ana = crate::cv::metrics::accuracy_labels(&ana_pred?, &ds.labels);
+        }
+        Experiment::MultiPerm => {
+            let mut rng_std = rng.fork(1);
+            let mut rng_ana = rng.fork(1);
+            let (std_res, t_std) = timed(|| {
+                standard_multiclass_permutation(
+                    &ds.x,
+                    &ds.labels,
+                    point.c,
+                    &folds,
+                    Reg::Ridge(point.lambda),
+                    point.n_perm,
+                    &mut rng_std,
+                )
+            });
+            let (ana_res, t_ana) = timed(|| {
+                analytic_multiclass_permutation(
+                    &ds.x,
+                    &ds.labels,
+                    point.c,
+                    &folds,
+                    point.lambda,
+                    point.n_perm,
+                    &mut rng_ana,
+                )
+            });
+            result.t_std = t_std;
+            result.t_ana = t_ana;
+            result.acc_std = std_res?.observed;
+            result.acc_ana = ana_res?.observed;
+        }
+    }
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_have_expected_structure() {
+        let scale = SweepScale::tiny();
+        let g = grid(Experiment::BinaryCv, &scale);
+        // 1 N × 4 P × 4 folds × 1 rep
+        assert_eq!(g.len(), scale.ns.len() * 4 * 4 * scale.reps);
+        assert!(g.iter().any(|p| p.k == usize::MAX), "LOO present");
+        let gp = grid(Experiment::BinaryPerm, &scale);
+        assert!(gp.iter().all(|p| p.n_perm > 0 && p.k == 10));
+        let gm = grid(Experiment::MultiCv, &scale);
+        assert!(gm.iter().all(|p| p.c == 5 || p.c == 10));
+    }
+
+    #[test]
+    fn binary_cv_point_runs_and_arms_agree() {
+        let point = SweepPoint {
+            exp: Experiment::BinaryCv,
+            n: 40,
+            p: 12,
+            k: 5,
+            c: 2,
+            n_perm: 0,
+            rep: 0,
+            lambda: 1.0,
+        };
+        let r = run_point(&point, 1234).unwrap();
+        assert!(r.t_std > 0.0 && r.t_ana > 0.0);
+        // Analytic arm uses b_LR, standard uses b_LDA: accuracies are close
+        // but not forced equal; the exactness tests cover value equality.
+        assert!((r.acc_std - r.acc_ana).abs() < 0.15, "{} vs {}", r.acc_std, r.acc_ana);
+    }
+
+    #[test]
+    fn multiclass_point_exact_agreement() {
+        let point = SweepPoint {
+            exp: Experiment::MultiCv,
+            n: 50,
+            p: 10,
+            k: 5,
+            c: 5,
+            n_perm: 0,
+            rep: 0,
+            lambda: 1.0,
+        };
+        let r = run_point(&point, 99).unwrap();
+        assert!(
+            (r.acc_std - r.acc_ana).abs() < 1e-12,
+            "multiclass arms must agree exactly: {} vs {}",
+            r.acc_std,
+            r.acc_ana
+        );
+    }
+
+    #[test]
+    fn perm_points_run() {
+        for exp in [Experiment::BinaryPerm, Experiment::MultiPerm] {
+            let point = SweepPoint {
+                exp,
+                n: 30,
+                p: 8,
+                k: 3,
+                c: if exp == Experiment::MultiPerm { 3 } else { 2 },
+                n_perm: 3,
+                rep: 0,
+                lambda: 1.0,
+            };
+            let r = run_point(&point, 7).unwrap();
+            assert!(r.t_std > 0.0 && r.t_ana > 0.0);
+            assert!((r.acc_std - r.acc_ana).abs() < 1e-9, "{exp:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let point = SweepPoint {
+            exp: Experiment::BinaryCv,
+            n: 30,
+            p: 6,
+            k: 3,
+            c: 2,
+            n_perm: 0,
+            rep: 2,
+            lambda: 0.5,
+        };
+        let a = run_point(&point, 42).unwrap();
+        let b = run_point(&point, 42).unwrap();
+        assert_eq!(a.acc_std, b.acc_std);
+        assert_eq!(a.acc_ana, b.acc_ana);
+    }
+}

@@ -1,0 +1,127 @@
+//! Fold partitioners for k-fold cross-validation (§2.1).
+
+use crate::util::rng::Rng;
+
+/// Random k-fold partition of `0..n`: shuffles indices and deals them into
+/// `k` nearly equal test sets. Returns the test-index set per fold.
+pub fn kfold(n: usize, k: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(k >= 2, "need at least 2 folds");
+    assert!(k <= n, "more folds than samples");
+    let perm = rng.permutation(n);
+    let mut folds = vec![Vec::with_capacity(n / k + 1); k];
+    for (pos, &i) in perm.iter().enumerate() {
+        folds[pos % k].push(i);
+    }
+    for f in folds.iter_mut() {
+        f.sort_unstable();
+    }
+    folds
+}
+
+/// Leave-one-out partition.
+pub fn leave_one_out(n: usize) -> Vec<Vec<usize>> {
+    (0..n).map(|i| vec![i]).collect()
+}
+
+/// Stratified k-fold: class proportions are (approximately) preserved in
+/// every fold, guaranteeing no fold loses a class when `k ≤ min_j N_j`.
+pub fn stratified_kfold(labels: &[usize], k: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(k >= 2, "need at least 2 folds");
+    let c = labels.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let mut folds = vec![Vec::new(); k];
+    let mut fold_rr = 0usize; // round-robin across classes so fold sizes balance
+    for class in 0..c {
+        let mut idx: Vec<usize> = (0..labels.len()).filter(|&i| labels[i] == class).collect();
+        rng.shuffle(&mut idx);
+        for i in idx {
+            folds[fold_rr % k].push(i);
+            fold_rr += 1;
+        }
+    }
+    for f in folds.iter_mut() {
+        f.sort_unstable();
+    }
+    folds.retain(|f| !f.is_empty());
+    assert!(folds.len() >= 2, "not enough samples to stratify into {k} folds");
+    folds
+}
+
+/// `reps` independent k-fold partitions (repeated CV, §2.1).
+pub fn repeated_kfold(n: usize, k: usize, reps: usize, rng: &mut Rng) -> Vec<Vec<Vec<usize>>> {
+    (0..reps).map(|_| kfold(n, k, rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_partition(folds: &[Vec<usize>], n: usize) {
+        let mut seen = vec![false; n];
+        for f in folds {
+            for &i in f {
+                assert!(!seen[i], "duplicate {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "not all samples covered");
+    }
+
+    #[test]
+    fn kfold_partitions_everything() {
+        let mut rng = Rng::new(1);
+        for (n, k) in [(10, 2), (11, 3), (100, 7), (5, 5)] {
+            let folds = kfold(n, k, &mut rng);
+            assert_eq!(folds.len(), k);
+            assert_partition(&folds, n);
+            // sizes within 1 of each other
+            let sizes: Vec<usize> = folds.iter().map(|f| f.len()).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn loo_is_n_singletons() {
+        let folds = leave_one_out(7);
+        assert_eq!(folds.len(), 7);
+        assert_partition(&folds, 7);
+        assert!(folds.iter().all(|f| f.len() == 1));
+    }
+
+    #[test]
+    fn stratified_preserves_proportions() {
+        let mut rng = Rng::new(2);
+        // 40 of class 0, 20 of class 1, 10 of class 2
+        let labels: Vec<usize> =
+            std::iter::repeat_n(0, 40).chain(std::iter::repeat_n(1, 20)).chain(std::iter::repeat_n(2, 10)).collect();
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        assert_eq!(folds.len(), 5);
+        assert_partition(&folds, 70);
+        for f in &folds {
+            let c0 = f.iter().filter(|&&i| labels[i] == 0).count();
+            let c1 = f.iter().filter(|&&i| labels[i] == 1).count();
+            let c2 = f.iter().filter(|&&i| labels[i] == 2).count();
+            assert!((7..=9).contains(&c0), "c0={c0}");
+            assert!((3..=5).contains(&c1), "c1={c1}");
+            assert!((1..=3).contains(&c2), "c2={c2}");
+        }
+    }
+
+    #[test]
+    fn repeated_kfold_gives_distinct_partitions() {
+        let mut rng = Rng::new(3);
+        let reps = repeated_kfold(30, 5, 3, &mut rng);
+        assert_eq!(reps.len(), 3);
+        assert!(reps[0] != reps[1] || reps[1] != reps[2], "should differ");
+        for r in &reps {
+            assert_partition(r, 30);
+        }
+    }
+
+    #[test]
+    fn kfold_deterministic_under_seed() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        assert_eq!(kfold(20, 4, &mut a), kfold(20, 4, &mut b));
+    }
+}

@@ -1,0 +1,210 @@
+//! Classification / regression performance metrics.
+
+/// Accuracy of signed decision values against ±1 codes (the paper's
+/// "class +1 for ŷ ≥ 0, class −1 for ŷ < 0").
+pub fn accuracy_signed(dvals: &[f64], y_signed: &[f64]) -> f64 {
+    assert_eq!(dvals.len(), y_signed.len());
+    assert!(!dvals.is_empty());
+    let correct = dvals
+        .iter()
+        .zip(y_signed)
+        .filter(|(&d, &y)| (d >= 0.0 && y > 0.0) || (d < 0.0 && y < 0.0))
+        .count();
+    correct as f64 / dvals.len() as f64
+}
+
+/// Accuracy of predicted labels.
+pub fn accuracy_labels(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    pred.iter().zip(truth).filter(|(a, b)| a == b).count() as f64 / pred.len() as f64
+}
+
+/// Area under the ROC curve via the rank statistic (ties get 0.5 credit).
+/// Positive class = label 0 (+1 code) with *larger* decision values.
+pub fn auc(dvals: &[f64], labels: &[usize]) -> f64 {
+    assert_eq!(dvals.len(), labels.len());
+    let pos: Vec<f64> = dvals.iter().zip(labels).filter(|(_, &l)| l == 0).map(|(&d, _)| d).collect();
+    let neg: Vec<f64> = dvals.iter().zip(labels).filter(|(_, &l)| l == 1).map(|(&d, _)| d).collect();
+    assert!(!pos.is_empty() && !neg.is_empty(), "AUC needs both classes");
+    let mut wins = 0.0;
+    for &p in &pos {
+        for &n in &neg {
+            if p > n {
+                wins += 1.0;
+            } else if p == n {
+                wins += 0.5;
+            }
+        }
+    }
+    wins / (pos.len() * neg.len()) as f64
+}
+
+/// Confusion matrix `counts[truth][pred]` for `c` classes.
+pub fn confusion(pred: &[usize], truth: &[usize], c: usize) -> Vec<Vec<usize>> {
+    assert_eq!(pred.len(), truth.len());
+    let mut m = vec![vec![0usize; c]; c];
+    for (&p, &t) in pred.iter().zip(truth) {
+        m[t][p] += 1;
+    }
+    m
+}
+
+/// Mean squared error (regression CV).
+pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    pred.iter().zip(truth).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / pred.len() as f64
+}
+
+/// Coefficient of determination R².
+pub fn r_squared(pred: &[f64], truth: &[f64]) -> f64 {
+    let m = crate::util::mean(truth);
+    let ss_res: f64 = pred.iter().zip(truth).map(|(a, b)| (b - a) * (b - a)).sum();
+    let ss_tot: f64 = truth.iter().map(|b| (b - m) * (b - m)).sum();
+    1.0 - ss_res / ss_tot
+}
+
+/// The Linear Discriminant Contrast (LDC, §4.2): cross-validated projected
+/// mean difference — the RSA dissimilarity `(m₁−m₂)_trainᵀ w` evaluated on
+/// held-out data. Here computed from cross-validated decision values as the
+/// difference of class-conditional means of `ẏ`.
+pub fn ldc_from_dvals(dvals: &[f64], labels: &[usize]) -> f64 {
+    let (mut s0, mut n0, mut s1, mut n1) = (0.0, 0usize, 0.0, 0usize);
+    for (&d, &l) in dvals.iter().zip(labels) {
+        if l == 0 {
+            s0 += d;
+            n0 += 1;
+        } else {
+            s1 += d;
+            n1 += 1;
+        }
+    }
+    assert!(n0 > 0 && n1 > 0);
+    s0 / n0 as f64 - s1 / n1 as f64
+}
+
+/// Balanced accuracy: mean of per-class recalls (robust to class imbalance,
+/// the metric of choice when the §2.5 bias issue matters).
+pub fn balanced_accuracy(pred: &[usize], truth: &[usize], c: usize) -> f64 {
+    let m = confusion(pred, truth, c);
+    let mut acc = 0.0;
+    let mut classes = 0;
+    for t in 0..c {
+        let total: usize = m[t].iter().sum();
+        if total > 0 {
+            acc += m[t][t] as f64 / total as f64;
+            classes += 1;
+        }
+    }
+    acc / classes.max(1) as f64
+}
+
+/// F1 score for the positive class (label 0, the "+1" class).
+pub fn f1_binary(pred: &[usize], truth: &[usize]) -> f64 {
+    let m = confusion(pred, truth, 2);
+    let tp = m[0][0] as f64;
+    let fp = m[1][0] as f64;
+    let fn_ = m[0][1] as f64;
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fn_);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Signal-detection d′ from decision values: separation of the two
+/// class-conditional dval distributions in pooled-SD units.
+pub fn d_prime(dvals: &[f64], labels: &[usize]) -> f64 {
+    let pos: Vec<f64> = dvals.iter().zip(labels).filter(|(_, &l)| l == 0).map(|(&d, _)| d).collect();
+    let neg: Vec<f64> = dvals.iter().zip(labels).filter(|(_, &l)| l == 1).map(|(&d, _)| d).collect();
+    assert!(pos.len() >= 2 && neg.len() >= 2, "d' needs ≥2 samples per class");
+    let (mp, mn) = (crate::util::mean(&pos), crate::util::mean(&neg));
+    let (sp, sn) = (crate::util::stddev(&pos), crate::util::stddev(&neg));
+    let pooled = (0.5 * (sp * sp + sn * sn)).sqrt();
+    (mp - mn) / pooled.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_signed_basic() {
+        let dv = [1.0, -2.0, 0.0, -0.1];
+        let y = [1.0, -1.0, -1.0, 1.0];
+        // correct: 0 (1≥0,+), 1 (−2<0,−); wrong: 2 (0≥0 vs −), 3 (−0.1<0 vs +)
+        assert_eq!(accuracy_signed(&dv, &y), 0.5);
+    }
+
+    #[test]
+    fn auc_perfect_and_chance() {
+        let labels = [0, 0, 1, 1];
+        assert_eq!(auc(&[2.0, 1.5, 0.2, -1.0], &labels), 1.0);
+        assert_eq!(auc(&[-1.0, 0.2, 1.5, 2.0], &labels), 0.0);
+        assert_eq!(auc(&[1.0, 1.0, 1.0, 1.0], &labels), 0.5);
+    }
+
+    #[test]
+    fn auc_invariant_to_bias_shift() {
+        // §2.5: "if AUC is used, the bias term is irrelevant".
+        let labels = [0, 1, 0, 1, 0];
+        let dv = [0.3, -0.2, 1.1, 0.0, 0.6];
+        let shifted: Vec<f64> = dv.iter().map(|d| d + 57.3).collect();
+        assert_eq!(auc(&dv, &labels), auc(&shifted, &labels));
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let m = confusion(&[0, 1, 1, 2, 0], &[0, 1, 2, 2, 1], 3);
+        assert_eq!(m[0][0], 1);
+        assert_eq!(m[1][1], 1);
+        assert_eq!(m[1][0], 1);
+        assert_eq!(m[2][1], 1);
+        assert_eq!(m[2][2], 1);
+    }
+
+    #[test]
+    fn regression_metrics() {
+        let truth = [1.0, 2.0, 3.0];
+        assert_eq!(mse(&truth, &truth), 0.0);
+        assert!((r_squared(&truth, &truth) - 1.0).abs() < 1e-12);
+        assert!(mse(&[0.0, 0.0, 0.0], &truth) > 0.0);
+    }
+
+    #[test]
+    fn ldc_sign_and_magnitude() {
+        let dv = [2.0, 2.0, -1.0, -1.0];
+        let labels = [0, 0, 1, 1];
+        assert_eq!(ldc_from_dvals(&dv, &labels), 3.0);
+    }
+
+    #[test]
+    fn balanced_accuracy_vs_plain() {
+        // 9 of class 0 (all right), 1 of class 1 (wrong): plain 0.9, balanced 0.5.
+        let truth = [0, 0, 0, 0, 0, 0, 0, 0, 0, 1];
+        let pred = [0usize; 10];
+        assert!((accuracy_labels(&pred, &truth) - 0.9).abs() < 1e-12);
+        assert!((balanced_accuracy(&pred, &truth, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_known_case() {
+        // tp=1, fp=1, fn=1 → precision=recall=0.5 → F1=0.5
+        let truth = [0, 0, 1, 1];
+        let pred = [0, 1, 0, 1];
+        assert!((f1_binary(&pred, &truth) - 0.5).abs() < 1e-12);
+        // degenerate: no positives predicted right
+        assert_eq!(f1_binary(&[1, 1], &[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn d_prime_separation() {
+        let dv = [3.0, 2.5, 3.5, -3.0, -2.5, -3.5];
+        let labels = [0, 0, 0, 1, 1, 1];
+        assert!(d_prime(&dv, &labels) > 5.0);
+        let dv_null = [0.1, -0.1, 0.2, 0.1, -0.1, 0.2];
+        assert!(d_prime(&dv_null, &labels).abs() < 1.0);
+    }
+}

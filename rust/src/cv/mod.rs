@@ -1,0 +1,6 @@
+//! Cross-validation framework: fold partitioners, performance metrics, and
+//! the standard (retrain-per-fold) CV runners used as the paper's baseline.
+
+pub mod folds;
+pub mod metrics;
+pub mod runner;

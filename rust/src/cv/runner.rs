@@ -1,0 +1,127 @@
+//! Standard-approach CV runners — the baseline the paper times against.
+//!
+//! These retrain the *classic* formulations (scatter matrices + solve /
+//! generalised eig; §2.11's complexity model) on every training fold, rather
+//! than the regression forms, so the measured baseline matches what an
+//! MVPA-Light-style toolbox actually executes.
+
+use crate::fastcv::{complement, validate_folds};
+use crate::linalg::Mat;
+use crate::model::lda_binary::BinaryLda;
+use crate::model::lda_multiclass::MulticlassLda;
+use crate::model::Reg;
+use anyhow::Result;
+
+/// Decision values from retraining binary LDA on every fold.
+pub fn standard_binary_cv_dvals(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    reg: Reg,
+) -> Result<Vec<f64>> {
+    validate_folds(folds, x.rows())?;
+    let mut dvals = vec![f64::NAN; x.rows()];
+    for te in folds {
+        let tr = complement(te, x.rows());
+        let x_tr = x.take_rows(&tr);
+        let l_tr: Vec<usize> = tr.iter().map(|&i| labels[i]).collect();
+        let model = BinaryLda::train(&x_tr, &l_tr, reg)?;
+        let d = model.decision_values(&x.take_rows(te));
+        for (j, &i) in te.iter().enumerate() {
+            dvals[i] = d[j];
+        }
+    }
+    Ok(dvals)
+}
+
+/// Cross-validated accuracy from retraining binary LDA on every fold.
+pub fn standard_binary_cv_accuracy(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    reg: Reg,
+) -> Result<f64> {
+    let dvals = standard_binary_cv_dvals(x, labels, folds, reg)?;
+    let y = crate::model::lda_binary::signed_codes(labels);
+    Ok(crate::cv::metrics::accuracy_signed(&dvals, &y))
+}
+
+/// Predicted labels from retraining multi-class LDA on every fold.
+pub fn standard_multiclass_cv_predict(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    reg: Reg,
+) -> Result<Vec<usize>> {
+    validate_folds(folds, x.rows())?;
+    let mut pred = vec![usize::MAX; x.rows()];
+    for te in folds {
+        let tr = complement(te, x.rows());
+        let x_tr = x.take_rows(&tr);
+        let l_tr: Vec<usize> = tr.iter().map(|&i| labels[i]).collect();
+        let model = MulticlassLda::train(&x_tr, &l_tr, c, reg)?;
+        let p = model.predict(&x.take_rows(te));
+        for (j, &i) in te.iter().enumerate() {
+            pred[i] = p[j];
+        }
+    }
+    Ok(pred)
+}
+
+/// Cross-validated accuracy of the standard multi-class pipeline.
+pub fn standard_multiclass_cv_accuracy(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    reg: Reg,
+) -> Result<f64> {
+    let pred = standard_multiclass_cv_predict(x, labels, c, folds, reg)?;
+    Ok(crate::cv::metrics::accuracy_labels(&pred, labels))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::{kfold, stratified_kfold};
+    use crate::model::lda_multiclass::tests::blobs;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn binary_cv_beats_chance_on_separable_data() {
+        let mut rng = Rng::new(1);
+        let (x, labels) = blobs(&mut rng, 40, 2, 6, 3.0);
+        let folds = kfold(80, 5, &mut rng);
+        let acc = standard_binary_cv_accuracy(&x, &labels, &folds, Reg::Ridge(0.1)).unwrap();
+        assert!(acc > 0.85, "acc={acc}");
+    }
+
+    #[test]
+    fn binary_cv_is_chance_on_shuffled_labels() {
+        let mut rng = Rng::new(2);
+        let (x, mut labels) = blobs(&mut rng, 40, 2, 6, 3.0);
+        rng.shuffle(&mut labels);
+        let folds = kfold(80, 5, &mut rng);
+        let acc = standard_binary_cv_accuracy(&x, &labels, &folds, Reg::Ridge(0.1)).unwrap();
+        assert!((0.25..=0.75).contains(&acc), "acc={acc}");
+    }
+
+    #[test]
+    fn multiclass_cv_accuracy_reasonable() {
+        let mut rng = Rng::new(3);
+        let (x, labels) = blobs(&mut rng, 25, 4, 8, 4.0);
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        let acc = standard_multiclass_cv_accuracy(&x, &labels, 4, &folds, Reg::Ridge(0.1)).unwrap();
+        assert!(acc > 0.8, "acc={acc}");
+    }
+
+    #[test]
+    fn dvals_assigned_for_every_sample() {
+        let mut rng = Rng::new(4);
+        let (x, labels) = blobs(&mut rng, 12, 2, 4, 2.0);
+        let folds = kfold(24, 6, &mut rng);
+        let d = standard_binary_cv_dvals(&x, &labels, &folds, Reg::Ridge(0.01)).unwrap();
+        assert!(d.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,267 @@
+//! Simulated multi-subject EEG/MEG ERP dataset (§2.13 substitution).
+//!
+//! The paper's Fig. 4 uses the Wakeman & Henson (2015) dataset: 16 subjects,
+//! 380 EEG/MEG channels, ~787 trials of faces vs scrambled faces, epochs
+//! −0.5..1 s at 200 Hz. That data is not available here, so this module
+//! simulates epochs with the same **shapes and statistical structure** —
+//! which is all the timing experiment consumes (see DESIGN.md
+//! §Substitutions):
+//!
+//! * per-subject trial counts ~787 ± jitter,
+//! * 380 channels with a spatially correlated noise covariance,
+//! * 1/f-ish temporal noise + a class-dependent N170-like evoked component
+//!   (faces > scrambled, famous/unfamiliar/scrambled for the 3-class split),
+//! * epochs −0.5..1 s at 200 Hz (301 samples), baseline-corrected.
+//!
+//! Feature extraction mirrors §2.13: per-timepoint channel vectors
+//! (380 features) or concatenated window-averaged amplitudes
+//! (10×380 = 3800 binary / 5×380 = 1900 multi-class features).
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Sampling rate (Hz) after the paper's downsampling.
+pub const FS: usize = 200;
+/// Epoch start (s) relative to stimulus onset.
+pub const T0: f64 = -0.5;
+/// Epoch end (s).
+pub const T1: f64 = 1.0;
+/// Samples per epoch: 301 (−0.5..1 s at 200 Hz, inclusive).
+pub const N_T: usize = 301;
+
+/// One simulated subject: epochs × channels × time.
+pub struct SubjectEpochs {
+    /// Epoch tensor flattened as `trial → Mat(channels × time)`.
+    pub epochs: Vec<Mat>,
+    /// Binary labels: 0 = face (paper's class "+1"), 1 = scrambled.
+    pub labels2: Vec<usize>,
+    /// Three-class labels: 0 = famous face, 1 = unfamiliar face, 2 = scrambled.
+    pub labels3: Vec<usize>,
+    /// Channel count.
+    pub n_channels: usize,
+}
+
+/// Simulation parameters.
+#[derive(Clone, Debug)]
+pub struct EegSpec {
+    /// Channels (the real dataset has 380 across EEG+MEG).
+    pub n_channels: usize,
+    /// Mean trials per subject (real average: 787).
+    pub mean_trials: usize,
+    /// Trial-count jitter (uniform ±).
+    pub trial_jitter: usize,
+    /// Evoked-response SNR scale.
+    pub snr: f64,
+}
+
+impl Default for EegSpec {
+    fn default() -> Self {
+        EegSpec { n_channels: 380, mean_trials: 787, trial_jitter: 60, snr: 1.0 }
+    }
+}
+
+/// Smaller spec for tests/quick runs.
+impl EegSpec {
+    pub fn small() -> EegSpec {
+        EegSpec { n_channels: 32, mean_trials: 80, trial_jitter: 10, snr: 1.5 }
+    }
+}
+
+/// Gaussian bump `exp(−(t−μ)²/2σ²)` evaluated at sample `it`.
+fn bump(it: usize, mu_s: f64, sigma_s: f64) -> f64 {
+    let t = T0 + it as f64 / FS as f64;
+    (-(t - mu_s) * (t - mu_s) / (2.0 * sigma_s * sigma_s)).exp()
+}
+
+/// Simulate one subject. Deterministic per (spec, rng state).
+pub fn simulate_subject(spec: &EegSpec, rng: &mut Rng) -> SubjectEpochs {
+    let nc = spec.n_channels;
+    let jit = rng.below(2 * spec.trial_jitter + 1);
+    let n_trials = spec.mean_trials - spec.trial_jitter + jit;
+
+    // Spatial mixing for correlated sensor noise: A z, A = random nc×r.
+    let r = (nc / 4).max(2);
+    let mixing = Mat::from_fn(nc, r, |_, _| rng.gauss() / (r as f64).sqrt());
+
+    // Class topographies: N170-ish component peaking ~170 ms (faces),
+    // a weaker response for scrambled, plus a famous/unfamiliar difference
+    // around 250 ms (the real dataset's "famous" modulation).
+    let topo_face = rng.unit_vector(nc);
+    let topo_scram = rng.unit_vector(nc);
+    let topo_famous = rng.unit_vector(nc);
+
+    let mut epochs = Vec::with_capacity(n_trials);
+    let mut labels2 = Vec::with_capacity(n_trials);
+    let mut labels3 = Vec::with_capacity(n_trials);
+    let mut noise_col = vec![0.0; r];
+    for _ in 0..n_trials {
+        // Trial type: 1/3 famous, 1/3 unfamiliar, 1/3 scrambled.
+        let l3 = rng.below(3);
+        let l2 = usize::from(l3 == 2);
+        let mut ep = Mat::zeros(nc, N_T);
+        // temporally smoothed noise (AR(1), ~1/f-ish)
+        let mut prev = vec![0.0; nc];
+        for it in 0..N_T {
+            rng.fill_gauss(&mut noise_col);
+            let fresh = crate::linalg::matvec(&mixing, &noise_col);
+            let n170 = bump(it, 0.17, 0.03);
+            let p250 = bump(it, 0.25, 0.05);
+            let amp_face = if l2 == 0 { 1.0 } else { 0.35 };
+            let amp_fam = if l3 == 0 { 0.6 } else { 0.0 };
+            for ch in 0..nc {
+                let ar = 0.85 * prev[ch] + fresh[ch];
+                prev[ch] = ar;
+                let evoked = spec.snr
+                    * (amp_face * n170 * topo_face[ch]
+                        + 0.4 * p250 * topo_scram[ch]
+                        + amp_fam * p250 * topo_famous[ch]);
+                ep[(ch, it)] = ar + evoked;
+            }
+        }
+        // Baseline correction: subtract the pre-stimulus channel mean.
+        let n_base = (-T0 * FS as f64) as usize; // samples before onset
+        for ch in 0..nc {
+            let base: f64 =
+                (0..n_base).map(|it| ep[(ch, it)]).sum::<f64>() / n_base as f64;
+            for it in 0..N_T {
+                ep[(ch, it)] -= base;
+            }
+        }
+        epochs.push(ep);
+        labels2.push(l2);
+        labels3.push(l3);
+    }
+    SubjectEpochs { epochs, labels2, labels3, n_channels: nc }
+}
+
+impl SubjectEpochs {
+    /// Number of trials.
+    pub fn n_trials(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// §2.13 analysis 1: features = channel amplitudes at one time point.
+    pub fn features_at_timepoint(&self, it: usize, binary: bool) -> Dataset {
+        assert!(it < N_T);
+        let n = self.n_trials();
+        let mut x = Mat::zeros(n, self.n_channels);
+        for (tr, ep) in self.epochs.iter().enumerate() {
+            for ch in 0..self.n_channels {
+                x[(tr, ch)] = ep[(ch, it)];
+            }
+        }
+        self.wrap(x, binary)
+    }
+
+    /// §2.13 analysis 2: post-stimulus interval divided into successive
+    /// non-overlapping windows of `win_ms` milliseconds; per-window channel
+    /// averages concatenated into one feature vector.
+    pub fn features_windowed(&self, win_ms: usize, binary: bool) -> Dataset {
+        let onset = (-T0 * FS as f64) as usize;
+        let win = win_ms * FS / 1000;
+        assert!(win > 0);
+        let n_win = (N_T - onset) / win;
+        let n = self.n_trials();
+        let p = n_win * self.n_channels;
+        let mut x = Mat::zeros(n, p);
+        for (tr, ep) in self.epochs.iter().enumerate() {
+            for w in 0..n_win {
+                let lo = onset + w * win;
+                let hi = lo + win;
+                for ch in 0..self.n_channels {
+                    let mean: f64 =
+                        (lo..hi).map(|it| ep[(ch, it)]).sum::<f64>() / win as f64;
+                    x[(tr, w * self.n_channels + ch)] = mean;
+                }
+            }
+        }
+        self.wrap(x, binary)
+    }
+
+    fn wrap(&self, x: Mat, binary: bool) -> Dataset {
+        if binary {
+            Dataset { x, labels: self.labels2.clone(), n_classes: 2 }
+        } else {
+            Dataset { x, labels: self.labels3.clone(), n_classes: 3 }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper_protocol() {
+        let mut rng = Rng::new(1);
+        let spec = EegSpec { n_channels: 20, mean_trials: 30, trial_jitter: 5, snr: 1.0 };
+        let subj = simulate_subject(&spec, &mut rng);
+        assert!((25..=35).contains(&subj.n_trials()));
+        let ds_t = subj.features_at_timepoint(150, true);
+        assert_eq!(ds_t.p(), 20);
+        // 100 ms windows over 1 s post-stimulus → 10 windows
+        let ds_w = subj.features_windowed(100, true);
+        assert_eq!(ds_w.p(), 10 * 20);
+        // 200 ms windows → 5 windows (paper's multi-class variant)
+        let ds_w3 = subj.features_windowed(200, false);
+        assert_eq!(ds_w3.p(), 5 * 20);
+        assert_eq!(ds_w3.n_classes, 3);
+    }
+
+    #[test]
+    fn labels_consistent_between_binary_and_ternary() {
+        let mut rng = Rng::new(2);
+        let spec = EegSpec::small();
+        let subj = simulate_subject(&spec, &mut rng);
+        for (l2, l3) in subj.labels2.iter().zip(&subj.labels3) {
+            assert_eq!(*l2, usize::from(*l3 == 2));
+        }
+        // all three classes present
+        for c in 0..3 {
+            assert!(subj.labels3.iter().any(|&l| l == c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn baseline_corrected() {
+        let mut rng = Rng::new(3);
+        let spec = EegSpec { n_channels: 8, mean_trials: 10, trial_jitter: 0, snr: 1.0 };
+        let subj = simulate_subject(&spec, &mut rng);
+        let n_base = 100;
+        for ep in &subj.epochs {
+            for ch in 0..8 {
+                let base: f64 = (0..n_base).map(|it| ep[(ch, it)]).sum::<f64>() / n_base as f64;
+                assert!(base.abs() < 1e-10, "baseline not removed: {base}");
+            }
+        }
+    }
+
+    #[test]
+    fn evoked_signal_is_decodable_at_peak() {
+        let mut rng = Rng::new(4);
+        let spec = EegSpec { n_channels: 24, mean_trials: 120, trial_jitter: 0, snr: 2.5 };
+        let subj = simulate_subject(&spec, &mut rng);
+        // t = 170 ms → sample index (0.17 − (−0.5)) * 200 = 134
+        let ds = subj.features_at_timepoint(134, true);
+        let folds = crate::cv::folds::stratified_kfold(&ds.labels, 5, &mut rng);
+        let acc = crate::cv::runner::standard_binary_cv_accuracy(
+            &ds.x,
+            &ds.labels,
+            &folds,
+            crate::model::Reg::Ridge(1.0),
+        )
+        .unwrap();
+        assert!(acc > 0.65, "N170 should be decodable, acc={acc}");
+        // pre-stimulus should be ~chance
+        let ds0 = subj.features_at_timepoint(20, true);
+        let acc0 = crate::cv::runner::standard_binary_cv_accuracy(
+            &ds0.x,
+            &ds0.labels,
+            &folds,
+            crate::model::Reg::Ridge(1.0),
+        )
+        .unwrap();
+        assert!(acc0 < 0.65, "pre-stimulus decodable?! acc={acc0}");
+    }
+}

@@ -1,0 +1,43 @@
+//! Workload generators reproducing the paper's evaluation data.
+//!
+//! - [`synthetic`] — hypersphere-centroid Gaussian classes with a common
+//!   Wishart covariance (§2.12, Fig. 3)
+//! - [`eeg`] — simulated multi-subject ERP (EEG/MEG) epochs standing in for
+//!   the Wakeman–Henson dataset (§2.13, Fig. 4); see DESIGN.md
+//!   §Substitutions
+//! - [`genes`] — a gene-expression-like extreme `P ≫ N` generator (§1)
+
+pub mod eeg;
+pub mod genes;
+pub mod synthetic;
+
+use crate::linalg::Mat;
+
+/// A labelled dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Feature matrix, `N × P`.
+    pub x: Mat,
+    /// Class labels in `0..n_classes`.
+    pub labels: Vec<usize>,
+    /// Number of classes.
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Number of features.
+    pub fn p(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Signed ±1 codes (binary datasets only).
+    pub fn y_signed(&self) -> Vec<f64> {
+        assert_eq!(self.n_classes, 2, "signed codes are for binary problems");
+        crate::model::lda_binary::signed_codes(&self.labels)
+    }
+}

@@ -1,0 +1,128 @@
+//! The paper's simulation generator (§2.12).
+//!
+//! Each class centroid is placed uniformly on the unit hypersphere; a common
+//! covariance is drawn from a Wishart distribution; samples are multivariate
+//! normal around their class centroid with that covariance.
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::stats::mvn::Mvn;
+use crate::stats::wishart::random_covariance;
+use crate::util::rng::Rng;
+
+/// Specification of a synthetic classification problem.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    /// Total number of samples (split as evenly as possible across classes).
+    pub n: usize,
+    /// Number of features.
+    pub p: usize,
+    /// Number of classes.
+    pub n_classes: usize,
+    /// Scale applied to the hypersphere radius (class separation).
+    pub separation: f64,
+    /// Extra Wishart degrees of freedom beyond `p` (conditioning).
+    pub wishart_dof_extra: usize,
+    /// Diagonal jitter added to the sampled covariance.
+    pub jitter: f64,
+}
+
+impl SyntheticSpec {
+    /// Paper-default binary problem.
+    pub fn binary(n: usize, p: usize) -> SyntheticSpec {
+        SyntheticSpec { n, p, n_classes: 2, separation: 1.0, wishart_dof_extra: 4, jitter: 0.05 }
+    }
+
+    /// Paper-default multi-class problem (5 or 10 classes in Fig. 3c/d).
+    pub fn multiclass(n: usize, p: usize, c: usize) -> SyntheticSpec {
+        SyntheticSpec { n, p, n_classes: c, separation: 1.0, wishart_dof_extra: 4, jitter: 0.05 }
+    }
+}
+
+/// Generate a dataset per §2.12. Class sizes are `n/c` with the remainder
+/// distributed to the first classes; samples are grouped by class then the
+/// row order is shuffled (so unstratified folds are still exchangeable).
+pub fn generate(spec: &SyntheticSpec, rng: &mut Rng) -> Dataset {
+    let c = spec.n_classes;
+    assert!(c >= 2 && spec.n >= 2 * c, "need ≥2 samples per class");
+    // Common covariance ~ Wishart (normalised trace) + jitter.
+    let cov = random_covariance(spec.p, spec.wishart_dof_extra, spec.jitter, rng);
+    // Class centroids on the hypersphere.
+    let centroids: Vec<Vec<f64>> = (0..c)
+        .map(|_| {
+            let mut u = rng.unit_vector(spec.p);
+            for v in u.iter_mut() {
+                *v *= spec.separation;
+            }
+            u
+        })
+        .collect();
+    let mut x = Mat::zeros(spec.n, spec.p);
+    let mut labels = vec![0usize; spec.n];
+    let mut row = 0;
+    for (class, centroid) in centroids.iter().enumerate() {
+        let size = spec.n / c + usize::from(class < spec.n % c);
+        let mvn = Mvn::new(centroid.clone(), &cov).expect("jittered Wishart cov is SPD");
+        for _ in 0..size {
+            mvn.sample_into(rng, x.row_mut(row));
+            labels[row] = class;
+            row += 1;
+        }
+    }
+    debug_assert_eq!(row, spec.n);
+    // Shuffle rows so contiguous folds are valid.
+    let perm = rng.permutation(spec.n);
+    let x = x.take_rows(&perm);
+    let labels: Vec<usize> = perm.iter().map(|&i| labels[i]).collect();
+    Dataset { x, labels, n_classes: c }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::class_counts;
+
+    #[test]
+    fn shapes_and_balance() {
+        let mut rng = Rng::new(1);
+        let ds = generate(&SyntheticSpec::multiclass(103, 7, 5), &mut rng);
+        assert_eq!(ds.n(), 103);
+        assert_eq!(ds.p(), 7);
+        let counts = class_counts(&ds.labels, 5);
+        assert_eq!(counts.iter().sum::<usize>(), 103);
+        assert!(counts.iter().all(|&k| k == 20 || k == 21), "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&SyntheticSpec::binary(40, 6), &mut Rng::new(5));
+        let b = generate(&SyntheticSpec::binary(40, 6), &mut Rng::new(5));
+        assert_eq!(a.x.as_slice(), b.x.as_slice());
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn classes_are_learnable_with_separation() {
+        let mut rng = Rng::new(2);
+        let mut spec = SyntheticSpec::binary(120, 10);
+        spec.separation = 3.0;
+        let ds = generate(&spec, &mut rng);
+        let folds = crate::cv::folds::stratified_kfold(&ds.labels, 5, &mut rng);
+        let acc = crate::cv::runner::standard_binary_cv_accuracy(
+            &ds.x,
+            &ds.labels,
+            &folds,
+            crate::model::Reg::Ridge(0.1),
+        )
+        .unwrap();
+        assert!(acc > 0.8, "acc={acc}");
+    }
+
+    #[test]
+    fn p_greater_than_n_supported() {
+        let mut rng = Rng::new(3);
+        let ds = generate(&SyntheticSpec::binary(20, 100), &mut rng);
+        assert_eq!(ds.p(), 100);
+        assert_eq!(ds.n(), 20);
+    }
+}

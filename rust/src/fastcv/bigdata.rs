@@ -1,0 +1,358 @@
+//! §4.5 "What about big data?" — the three coping strategies the paper
+//! prescribes, implemented and tested:
+//!
+//! * **Too many samples** → [`StreamingHat`]: never materialise the `N×N`
+//!   hat matrix; keep `T = X̃ S` (`N×(P+1)`) and compute the per-fold blocks
+//!   `H_Te = T_Te X̃_Teᵀ` on the fly (`O(N_te² P)` per fold, `O(NP)` memory).
+//! * **Too many features** → [`SparseProjection`]: an Achlioptas sparse
+//!   random projection `A ∈ R^{P×Q}`, `Q ≪ P`, approximately preserving the
+//!   covariance structure so `XA` can replace `X`.
+//! * **Both** → [`LdaEnsemble`]: weak regularised-LDA learners on random
+//!   feature/sample subsets, majority-vote aggregation, trainable in
+//!   parallel.
+
+use super::FoldCache;
+use crate::linalg::{matmul, Cholesky, Lu, Mat};
+use crate::model::linreg::gram_ridged;
+use crate::model::Reg;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+
+/// Memory-light analytic CV state: `O(NP)` instead of `O(N²)`.
+#[derive(Debug)]
+pub struct StreamingHat {
+    /// Augmented design.
+    pub xa: Mat,
+    /// `T = X̃ S` — the "whitened" design (§4.4's kernel view).
+    pub t: Mat,
+    /// Ridge used.
+    pub lambda: f64,
+}
+
+impl StreamingHat {
+    /// Build from raw data (same contract as [`super::hat::HatMatrix`]).
+    pub fn build(x: &Mat, lambda: f64) -> Result<StreamingHat> {
+        let xa = x.augment_ones();
+        let g = gram_ridged(&xa, lambda);
+        // T = X̃ G⁻¹ = solve(G, X̃ᵀ)ᵀ — no explicit inverse (see §Perf).
+        let w = match Cholesky::factor(&g) {
+            Ok(ch) => ch.solve_mat(&xa.t()),
+            Err(_) => Lu::factor(&g).context("gram singular; increase λ")?.solve_mat(&xa.t()),
+        };
+        let t = w.t();
+        Ok(StreamingHat { xa, t, lambda })
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.xa.rows()
+    }
+
+    /// On-the-fly fold block `H_Te = T_Te X̃_Teᵀ`.
+    pub fn block(&self, te: &[usize]) -> Mat {
+        let t_te = self.t.take_rows(te);
+        let xa_te = self.xa.take_rows(te);
+        matmul(&t_te, &xa_te.t())
+    }
+
+    /// Full-data fits `ŷ = H y` computed as `T (X̃ᵀ y)` — `O(NP)`, no `H`.
+    pub fn fit_response(&self, y: &[f64]) -> Vec<f64> {
+        let xty = crate::linalg::matvec_t(&self.xa, y);
+        crate::linalg::matvec(&self.t, &xty)
+    }
+
+    /// Analytic CV decision values (Eq. 14) without materialising `H`.
+    pub fn decision_values(&self, y: &[f64], folds: &[Vec<usize>]) -> Result<Vec<f64>> {
+        super::validate_folds(folds, self.n())?;
+        let y_hat = self.fit_response(y);
+        let mut dvals = vec![f64::NAN; self.n()];
+        for te in folds {
+            let mut i_minus = self.block(te);
+            i_minus.scale(-1.0);
+            for i in 0..te.len() {
+                i_minus[(i, i)] += 1.0;
+            }
+            let e_hat: Vec<f64> = te.iter().map(|&i| y[i] - y_hat[i]).collect();
+            let e_dot = crate::linalg::solve(&i_minus, &e_hat)
+                .context("(I − H_Te) singular; increase λ")?;
+            for (j, &i) in te.iter().enumerate() {
+                dvals[i] = y[i] - e_dot[j];
+            }
+        }
+        Ok(dvals)
+    }
+}
+
+/// Achlioptas sparse random projection: entries `±√(3/Q)` with probability
+/// 1/6 each, 0 with probability 2/3 — `E[AAᵀ] = I`, so `XA` approximately
+/// preserves pairwise geometry at `Q = O(log N / ε²)`.
+#[derive(Debug, Clone)]
+pub struct SparseProjection {
+    /// Projection matrix, `P × Q` (stored sparse as (row, col, sign)).
+    triplets: Vec<(u32, u32, f32)>,
+    p: usize,
+    q: usize,
+    scale: f64,
+}
+
+impl SparseProjection {
+    /// Sample a projection from `p` dims down to `q`.
+    pub fn sample(p: usize, q: usize, rng: &mut Rng) -> SparseProjection {
+        assert!(q >= 1);
+        let mut triplets = Vec::with_capacity(p * q / 3 + 1);
+        for i in 0..p {
+            for j in 0..q {
+                let r = rng.below(6);
+                if r == 0 {
+                    triplets.push((i as u32, j as u32, 1.0));
+                } else if r == 1 {
+                    triplets.push((i as u32, j as u32, -1.0));
+                }
+            }
+        }
+        SparseProjection { triplets, p, q, scale: (3.0 / q as f64).sqrt() }
+    }
+
+    /// Output dimensionality.
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Fraction of non-zero entries (≈1/3).
+    pub fn density(&self) -> f64 {
+        self.triplets.len() as f64 / (self.p * self.q) as f64
+    }
+
+    /// Project a data matrix: `X A` (`N×P` → `N×Q`).
+    pub fn project(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols(), self.p, "projection dimension mismatch");
+        let mut out = Mat::zeros(x.rows(), self.q);
+        for i in 0..x.rows() {
+            let row = x.row(i);
+            let orow = out.row_mut(i);
+            for &(pi, qj, sign) in &self.triplets {
+                orow[qj as usize] += sign as f64 * row[pi as usize];
+            }
+        }
+        out.scale(self.scale);
+        out
+    }
+}
+
+/// Ensemble of weak regularised-LDA learners (§4.5): each trained on a
+/// random subset of features and samples; majority vote at prediction.
+pub struct LdaEnsemble {
+    members: Vec<(Vec<usize>, crate::model::lda_binary::BinaryLda)>,
+}
+
+impl LdaEnsemble {
+    /// Train `n_members` weak learners, each on `feat_frac` of the features
+    /// and `sample_frac` of the samples, optionally in parallel on `pool`.
+    pub fn train(
+        x: &Mat,
+        labels: &[usize],
+        n_members: usize,
+        feat_frac: f64,
+        sample_frac: f64,
+        reg: Reg,
+        pool: Option<&crate::util::threadpool::ThreadPool>,
+        rng: &mut Rng,
+    ) -> Result<LdaEnsemble> {
+        assert!(n_members >= 1);
+        let p = x.cols();
+        let n = x.rows();
+        let n_feat = ((p as f64 * feat_frac).ceil() as usize).clamp(1, p);
+        let n_samp = ((n as f64 * sample_frac).ceil() as usize).clamp(4, n);
+        // Pre-draw subsets so training is deterministic regardless of pool.
+        let draws: Vec<(Vec<usize>, Vec<usize>)> = (0..n_members)
+            .map(|_| {
+                // resample until both classes present
+                loop {
+                    let feats = rng.choose(p, n_feat);
+                    let samps = rng.choose(n, n_samp);
+                    let has0 = samps.iter().any(|&i| labels[i] == 0);
+                    let has1 = samps.iter().any(|&i| labels[i] == 1);
+                    if has0 && has1 {
+                        return (feats, samps);
+                    }
+                }
+            })
+            .collect();
+        let train_one = |(feats, samps): &(Vec<usize>, Vec<usize>)| -> Result<(Vec<usize>, crate::model::lda_binary::BinaryLda)> {
+            let xs = x.take(samps, feats);
+            let ls: Vec<usize> = samps.iter().map(|&i| labels[i]).collect();
+            let model = crate::model::lda_binary::BinaryLda::train(&xs, &ls, reg)?;
+            Ok((feats.clone(), model))
+        };
+        let members: Vec<_> = match pool {
+            Some(pool) => {
+                let slots: Vec<std::sync::Mutex<Option<_>>> =
+                    (0..n_members).map(|_| std::sync::Mutex::new(None)).collect();
+                let slots_ref = &slots;
+                let draws_ref = &draws;
+                pool.for_each(n_members, move |i| {
+                    *slots_ref[i].lock().unwrap() = Some(train_one(&draws_ref[i]));
+                });
+                slots
+                    .into_iter()
+                    .map(|s| s.into_inner().unwrap().unwrap())
+                    .collect::<Result<Vec<_>>>()?
+            }
+            None => draws.iter().map(train_one).collect::<Result<Vec<_>>>()?,
+        };
+        Ok(LdaEnsemble { members })
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Is the ensemble empty?
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Majority-vote prediction (ties → class 0, the "+1" class).
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        let n = x.rows();
+        let mut votes1 = vec![0usize; n];
+        for (feats, model) in &self.members {
+            let xs = x.take_cols(feats);
+            for (i, &l) in model.predict(&xs).iter().enumerate() {
+                votes1[i] += l;
+            }
+        }
+        let half = self.members.len();
+        votes1.iter().map(|&v| usize::from(2 * v > half)).collect()
+    }
+}
+
+/// Analytic CV on randomly projected data: the §4.5 "too many features"
+/// pipeline in one call.
+pub fn projected_analytic_cv(
+    x: &Mat,
+    y: &[f64],
+    folds: &[Vec<usize>],
+    q: usize,
+    lambda: f64,
+    rng: &mut Rng,
+) -> Result<Vec<f64>> {
+    let proj = SparseProjection::sample(x.cols(), q, rng);
+    let xq = proj.project(x);
+    let cv = super::binary::AnalyticBinaryCv::fit(&xq, y, lambda)?;
+    let cache = FoldCache::prepare(&cv.hat, folds, false)?;
+    Ok(cv.decision_values_cached(&cache))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::kfold;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+    use crate::util::prop::assert_all_close;
+
+    #[test]
+    fn streaming_hat_matches_dense_hat() {
+        let mut rng = Rng::new(1);
+        let ds = generate(&SyntheticSpec::binary(50, 20), &mut rng);
+        let y = ds.y_signed();
+        let folds = kfold(50, 5, &mut rng);
+        let dense = super::super::binary::AnalyticBinaryCv::fit(&ds.x, &y, 0.7).unwrap();
+        let dv_dense = dense.decision_values(&folds).unwrap();
+        let stream = StreamingHat::build(&ds.x, 0.7).unwrap();
+        let dv_stream = stream.decision_values(&y, &folds).unwrap();
+        assert_all_close(&dv_stream, &dv_dense, 1e-9, "streaming == dense");
+        // block equality
+        let te = &folds[0];
+        let b1 = dense.hat.block(te);
+        let b2 = stream.block(te);
+        assert!(b1.max_abs_diff(&b2) < 1e-10);
+    }
+
+    #[test]
+    fn streaming_memory_is_np_not_n2() {
+        // structural check: StreamingHat holds two N×(P+1)-ish matrices only
+        let mut rng = Rng::new(2);
+        let ds = generate(&SyntheticSpec::binary(60, 5), &mut rng);
+        let s = StreamingHat::build(&ds.x, 0.1).unwrap();
+        assert_eq!(s.t.shape(), (60, 6));
+        assert_eq!(s.xa.shape(), (60, 6));
+    }
+
+    #[test]
+    fn projection_preserves_geometry_approximately() {
+        let mut rng = Rng::new(3);
+        let p = 2000;
+        let q = 300;
+        let n = 20;
+        let x = Mat::from_fn(n, p, |_, _| rng.gauss());
+        let proj = SparseProjection::sample(p, q, &mut rng);
+        assert!((proj.density() - 1.0 / 3.0).abs() < 0.03);
+        let xq = proj.project(&x);
+        assert_eq!(xq.shape(), (n, q));
+        // pairwise squared distances preserved within ~35%
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                let d_orig: f64 = (0..p).map(|k| (x[(i, k)] - x[(j, k)]).powi(2)).sum();
+                let d_proj: f64 = (0..q).map(|k| (xq[(i, k)] - xq[(j, k)]).powi(2)).sum();
+                let ratio = d_proj / d_orig;
+                assert!((0.65..1.35).contains(&ratio), "ratio={ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn projected_cv_still_decodes() {
+        let mut rng = Rng::new(4);
+        let mut spec = SyntheticSpec::binary(100, 800);
+        spec.separation = 5.0;
+        let ds = generate(&spec, &mut rng);
+        let y = ds.y_signed();
+        let folds = kfold(100, 5, &mut rng);
+        // Unprojected baseline for context.
+        let cv = super::super::binary::AnalyticBinaryCv::fit(&ds.x, &y, 1.0).unwrap();
+        let acc_full = crate::cv::metrics::accuracy_signed(
+            &cv.decision_values(&folds).unwrap(),
+            &y,
+        );
+        let dv = projected_analytic_cv(&ds.x, &y, &folds, 200, 1.0, &mut rng).unwrap();
+        let acc = crate::cv::metrics::accuracy_signed(&dv, &y);
+        assert!(acc > 0.65, "projected CV acc={acc} (full-dim acc={acc_full})");
+        assert!(acc_full > 0.75, "full-dim baseline acc={acc_full}");
+    }
+
+    #[test]
+    fn ensemble_beats_weak_member_and_parallel_matches_serial() {
+        let mut rng = Rng::new(5);
+        let mut spec = SyntheticSpec::binary(120, 60);
+        spec.separation = 1.6;
+        let ds = generate(&spec, &mut rng);
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        let serial = LdaEnsemble::train(
+            &ds.x, &ds.labels, 15, 0.3, 0.6, Reg::Ridge(1.0), None, &mut rng_a,
+        )
+        .unwrap();
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let parallel = LdaEnsemble::train(
+            &ds.x, &ds.labels, 15, 0.3, 0.6, Reg::Ridge(1.0), Some(&pool), &mut rng_b,
+        )
+        .unwrap();
+        let pred_s = serial.predict(&ds.x);
+        let pred_p = parallel.predict(&ds.x);
+        assert_eq!(pred_s, pred_p, "pool must not change results");
+        let acc_ens = crate::cv::metrics::accuracy_labels(&pred_s, &ds.labels);
+        // single weak member accuracy
+        let (feats, model) = &serial.members[0];
+        let acc_one = crate::cv::metrics::accuracy_labels(
+            &model.predict(&ds.x.take_cols(feats)),
+            &ds.labels,
+        );
+        assert!(
+            acc_ens >= acc_one - 0.02,
+            "ensemble {acc_ens} should not trail a weak member {acc_one}"
+        );
+        assert!(acc_ens > 0.7, "ensemble acc={acc_ens}");
+    }
+}

@@ -1,0 +1,341 @@
+//! Analytical k-fold cross-validation for binary LDA / least squares
+//! (§2.4–2.5, Algorithm 1's inner loop).
+//!
+//! One full-data fit gives `ŷ = Hy`; the exact cross-validated decision
+//! values on each test fold follow from
+//!
+//! ```text
+//! ė_Te = (I − H_Te)⁻¹ (y_Te − ŷ_Te)        (Eq. 14)
+//! ẏ_Te = y_Te − ė_Te
+//! ```
+//!
+//! without training any of the K fold models. The same code path serves
+//! linear regression and ridge regression — `y` is then a continuous
+//! response and the bias adjustment is not used.
+
+use super::hat::HatMatrix;
+use super::FoldCache;
+use crate::linalg::Mat;
+use anyhow::Result;
+
+/// Analytic cross-validation engine for one dataset + response.
+#[derive(Debug)]
+pub struct AnalyticBinaryCv {
+    /// Shared feature-side precomputation.
+    pub hat: HatMatrix,
+    /// Response vector (class codes ±1, or continuous).
+    pub y: Vec<f64>,
+    /// Full-data fits `ŷ = Hy`.
+    pub y_hat: Vec<f64>,
+}
+
+impl AnalyticBinaryCv {
+    /// Fit the single full-data model. `y` is the paper's response vector;
+    /// for classification use ±1 codes ([`crate::model::lda_binary::signed_codes`]).
+    pub fn fit(x: &Mat, y: &[f64], lambda: f64) -> Result<AnalyticBinaryCv> {
+        assert_eq!(x.rows(), y.len(), "response length mismatch");
+        let hat = HatMatrix::build(x, lambda)?;
+        let y_hat = hat.fit_response(y);
+        Ok(AnalyticBinaryCv { hat, y: y.to_vec(), y_hat })
+    }
+
+    /// Re-use an existing hat matrix with a (possibly permuted) response —
+    /// the permutation-testing entry point (§2.7): `H` is label-invariant.
+    pub fn with_hat(hat: HatMatrix, y: &[f64]) -> AnalyticBinaryCv {
+        assert_eq!(hat.n(), y.len());
+        let y_hat = hat.fit_response(y);
+        AnalyticBinaryCv { hat, y: y.to_vec(), y_hat }
+    }
+
+    /// Swap in a new response without touching `H` (in-place permutation).
+    pub fn set_response(&mut self, y: &[f64]) {
+        assert_eq!(self.hat.n(), y.len());
+        self.y.copy_from_slice(y);
+        self.y_hat = self.hat.fit_response(y);
+    }
+
+    /// Cross-validated decision values `ẏ` for every sample (regression
+    /// bias `b_LR`), computed fold-by-fold via Eq. 14.
+    pub fn decision_values(&self, folds: &[Vec<usize>]) -> Result<Vec<f64>> {
+        let cache = FoldCache::prepare(&self.hat, folds, false)?;
+        Ok(self.decision_values_cached(&cache))
+    }
+
+    /// Eq. 14 against a prepared [`FoldCache`] (hot path: zero
+    /// factorisations, one triangular solve per fold).
+    pub fn decision_values_cached(&self, cache: &FoldCache) -> Vec<f64> {
+        let mut dvals = vec![f64::NAN; self.hat.n()];
+        for (k, te) in cache.folds.iter().enumerate() {
+            let e_dot = self.fold_errors(te, &cache.lus[k]);
+            for (j, &i) in te.iter().enumerate() {
+                dvals[i] = self.y[i] - e_dot[j];
+            }
+        }
+        dvals
+    }
+
+    /// `ė_Te = (I−H_Te)⁻¹ ê_Te` for one fold.
+    fn fold_errors(&self, te: &[usize], lu: &crate::linalg::Lu) -> Vec<f64> {
+        let e_hat: Vec<f64> = te.iter().map(|&i| self.y[i] - self.y_hat[i]).collect();
+        lu.solve_vec(&e_hat)
+    }
+
+    /// Cross-validated decision values with the LDA bias adjustment (§2.5):
+    /// for each fold the cross-validated *training* decision values `ẏ_Tr`
+    /// (Eq. 15) give the projected class means, from which
+    /// `ẏ_Te ← ẏ_Te − b_LR + b_LDA` follows without materialising `w`.
+    ///
+    /// `labels[i] ∈ {0,1}` with the crate's 0 ↔ +1 convention.
+    pub fn decision_values_bias_adjusted(
+        &self,
+        cache: &FoldCache,
+        labels: &[usize],
+    ) -> Result<Vec<f64>> {
+        let cross = cache
+            .cross
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("FoldCache must be prepared with with_cross=true"))?;
+        let mut dvals = vec![f64::NAN; self.hat.n()];
+        for (k, te) in cache.folds.iter().enumerate() {
+            let tr = &cache.trains[k];
+            let e_dot_te = self.fold_errors(te, &cache.lus[k]);
+            // Eq. 15: ė_Tr = ê_Tr + H_{Tr,Te} ė_Te ; ẏ_Tr = y_Tr − ė_Tr
+            let h_cross = &cross[k];
+            let corr = crate::linalg::matvec(h_cross, &e_dot_te);
+            // Projected class means on the training set (include b_LR).
+            let mut sum = [0.0f64; 2];
+            let mut cnt = [0usize; 2];
+            for (j, &i) in tr.iter().enumerate() {
+                let e_tr = (self.y[i] - self.y_hat[i]) + corr[j];
+                let ydot_tr = self.y[i] - e_tr;
+                sum[labels[i]] += ydot_tr;
+                cnt[labels[i]] += 1;
+            }
+            anyhow::ensure!(
+                cnt[0] > 0 && cnt[1] > 0,
+                "fold {k}: a class is absent from the training set"
+            );
+            let mu1 = sum[0] / cnt[0] as f64;
+            let mu2 = sum[1] / cnt[1] as f64;
+            let shift = 0.5 * (mu1 + mu2); // = b_LR − b_LDA
+            for (j, &i) in te.iter().enumerate() {
+                dvals[i] = (self.y[i] - e_dot_te[j]) - shift;
+            }
+        }
+        Ok(dvals)
+    }
+}
+
+impl AnalyticBinaryCv {
+    /// Leave-one-out special case of Eq. 14: with singleton test sets,
+    /// `(I − H_Te)` is the scalar `1 − h_ii`, so
+    /// `ẏᵢ = yᵢ − (yᵢ − ŷᵢ)/(1 − hᵢᵢ)` — the classic LOOCV identity the
+    /// paper cites (Cook & Weisberg 1982; James et al. 2013). `O(N)` after
+    /// the hat build, no solves at all.
+    pub fn decision_values_loo(&self) -> Result<Vec<f64>> {
+        let n = self.hat.n();
+        let mut dvals = Vec::with_capacity(n);
+        for i in 0..n {
+            let denom = 1.0 - self.hat.h[(i, i)];
+            anyhow::ensure!(
+                denom.abs() > 1e-12,
+                "sample {i}: leverage h_ii = 1 — LOO model undefined (λ=0, P ≥ N−1?)"
+            );
+            dvals.push(self.y[i] - (self.y[i] - self.y_hat[i]) / denom);
+        }
+        Ok(dvals)
+    }
+}
+
+/// Reference implementation: the *standard approach* — retrain the
+/// least-squares model on every training fold and predict the test fold.
+/// This is the baseline every analytic result is checked against and timed
+/// against (Fig. 3).
+pub fn standard_cv_decision_values(
+    x: &Mat,
+    y: &[f64],
+    folds: &[Vec<usize>],
+    lambda: f64,
+) -> Result<Vec<f64>> {
+    super::validate_folds(folds, x.rows())?;
+    let mut dvals = vec![f64::NAN; x.rows()];
+    for te in folds {
+        let tr = super::complement(te, x.rows());
+        let x_tr = x.take_rows(&tr);
+        let y_tr: Vec<f64> = tr.iter().map(|&i| y[i]).collect();
+        let model = crate::model::linreg::LinReg::fit(&x_tr, &y_tr, lambda)?;
+        let x_te = x.take_rows(te);
+        let pred = model.predict(&x_te);
+        for (j, &i) in te.iter().enumerate() {
+            dvals[i] = pred[j];
+        }
+    }
+    Ok(dvals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::kfold;
+    use crate::model::lda_binary::signed_codes;
+    use crate::model::regression_lda::RegressionLda;
+    use crate::util::prop::{assert_all_close, Cases};
+    use crate::util::rng::Rng;
+
+    fn labelled_problem(rng: &mut Rng, n1: usize, n2: usize, p: usize) -> (Mat, Vec<usize>) {
+        let n = n1 + n2;
+        let mut x = Mat::from_fn(n, p, |_, _| rng.gauss());
+        let dir = rng.unit_vector(p);
+        for i in 0..n1 {
+            for j in 0..p {
+                x[(i, j)] += 1.2 * dir[j];
+            }
+        }
+        let labels: Vec<usize> = (0..n).map(|i| usize::from(i >= n1)).collect();
+        (x, labels)
+    }
+
+    #[test]
+    fn exactness_vs_standard_approach() {
+        // THE core claim (Eq. 14): analytic CV decision values are *exact*,
+        // matching retrain-per-fold to numerical precision, across shapes,
+        // folds, ridge values, and class balances.
+        Cases::new(40).run("analytic == standard (binary)", |rng| {
+            let (n, p) = crate::util::prop::dims(rng);
+            let n1 = n / 2 + rng.below(n / 4 + 1);
+            let n2 = n - n1;
+            if n2 < 3 {
+                return;
+            }
+            let (x, labels) = labelled_problem(rng, n1, n2, p);
+            let lambda = crate::util::prop::ridge(rng, p + 1 < (n - n.div_ceil(3)));
+            let y = signed_codes(&labels);
+            let k = crate::util::prop::folds(rng, n);
+            let folds = kfold(n, k, rng);
+            let std_dv = match standard_cv_decision_values(&x, &y, &folds, lambda) {
+                Ok(d) => d,
+                Err(_) => return, // singular unridged fold — valid skip
+            };
+            let cv = match AnalyticBinaryCv::fit(&x, &y, lambda) {
+                Ok(cv) => cv,
+                Err(_) => return,
+            };
+            let ana_dv = match cv.decision_values(&folds) {
+                Ok(d) => d,
+                Err(_) => return,
+            };
+            assert_all_close(&ana_dv, &std_dv, 1e-6, "decision values");
+        });
+    }
+
+    #[test]
+    fn bias_adjusted_matches_per_fold_lda_bias() {
+        Cases::new(25).run("bias adjust == per-fold b_LDA", |rng| {
+            let n1 = 8 + rng.below(15);
+            let n2 = 5 + rng.below(10); // unbalanced on purpose
+            let p = 1 + rng.below(6);
+            let (x, labels) = labelled_problem(rng, n1, n2, p);
+            let n = n1 + n2;
+            let lambda = 10f64.powf(rng.uniform_in(-3.0, 1.0));
+            let y = signed_codes(&labels);
+            let folds = kfold(n, 4, rng);
+            let cv = AnalyticBinaryCv::fit(&x, &y, lambda).unwrap();
+            let cache = FoldCache::prepare(&cv.hat, &folds, true).unwrap();
+            let adjusted = match cv.decision_values_bias_adjusted(&cache, &labels) {
+                Ok(d) => d,
+                Err(_) => return, // a fold lost a class — valid skip
+            };
+            // Reference: per-fold regression-LDA with b_LDA.
+            for te in &folds {
+                let tr = super::super::complement(te, n);
+                let x_tr = x.take_rows(&tr);
+                let l_tr: Vec<usize> = tr.iter().map(|&i| labels[i]).collect();
+                if l_tr.iter().all(|&l| l == 0) || l_tr.iter().all(|&l| l == 1) {
+                    return;
+                }
+                let model = RegressionLda::train(&x_tr, &l_tr, lambda).unwrap();
+                let pred = model.decision_values_lda(&x.take_rows(te));
+                for (j, &i) in te.iter().enumerate() {
+                    crate::util::prop::assert_close(adjusted[i], pred[j], 1e-6, "adjusted dval");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn loo_matches_standard() {
+        let mut rng = Rng::new(11);
+        let (x, labels) = labelled_problem(&mut rng, 10, 8, 4);
+        let y = signed_codes(&labels);
+        let folds: Vec<Vec<usize>> = (0..18).map(|i| vec![i]).collect();
+        let std_dv = standard_cv_decision_values(&x, &y, &folds, 0.01).unwrap();
+        let cv = AnalyticBinaryCv::fit(&x, &y, 0.01).unwrap();
+        let ana = cv.decision_values(&folds).unwrap();
+        assert_all_close(&ana, &std_dv, 1e-7, "LOO");
+    }
+
+    #[test]
+    fn loo_shortcut_matches_general_path() {
+        // ẏᵢ = yᵢ − êᵢ/(1−hᵢᵢ) must equal Eq. 14 with singleton folds, and
+        // hence the retrained models.
+        Cases::new(20).run("loo-shortcut", |rng| {
+            let n1 = 6 + rng.below(12);
+            let n2 = 6 + rng.below(12);
+            let p = 1 + rng.below(6);
+            let (x, labels) = labelled_problem(rng, n1, n2, p);
+            let n = n1 + n2;
+            let lambda = 10f64.powf(rng.uniform_in(-2.0, 1.0));
+            let y = signed_codes(&labels);
+            let cv = AnalyticBinaryCv::fit(&x, &y, lambda).unwrap();
+            let fast = cv.decision_values_loo().unwrap();
+            let folds: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+            let general = cv.decision_values(&folds).unwrap();
+            assert_all_close(&fast, &general, 1e-9, "LOO shortcut vs Eq.14");
+        });
+    }
+
+    #[test]
+    fn continuous_response_regression_cv() {
+        // Same machinery, continuous y (the "all least-squares models" claim).
+        let mut rng = Rng::new(12);
+        let n = 30;
+        let x = Mat::from_fn(n, 5, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..n).map(|i| 2.0 * x[(i, 0)] - x[(i, 3)] + 0.1 * rng.gauss()).collect();
+        let folds = kfold(n, 6, &mut rng);
+        let std_dv = standard_cv_decision_values(&x, &y, &folds, 0.5).unwrap();
+        let cv = AnalyticBinaryCv::fit(&x, &y, 0.5).unwrap();
+        let ana = cv.decision_values(&folds).unwrap();
+        assert_all_close(&ana, &std_dv, 1e-8, "regression CV");
+    }
+
+    #[test]
+    fn set_response_reuses_hat() {
+        let mut rng = Rng::new(13);
+        let (x, labels) = labelled_problem(&mut rng, 10, 10, 3);
+        let y = signed_codes(&labels);
+        let folds = kfold(20, 5, &mut rng);
+        let mut cv = AnalyticBinaryCv::fit(&x, &y, 0.1).unwrap();
+        let dv1 = cv.decision_values(&folds).unwrap();
+        // permute and back
+        let mut y_perm = y.clone();
+        y_perm.reverse();
+        cv.set_response(&y_perm);
+        let dv_perm = cv.decision_values(&folds).unwrap();
+        let ref_perm = standard_cv_decision_values(&x, &y_perm, &folds, 0.1).unwrap();
+        assert_all_close(&dv_perm, &ref_perm, 1e-7, "permuted response");
+        cv.set_response(&y);
+        let dv2 = cv.decision_values(&folds).unwrap();
+        assert_all_close(&dv1, &dv2, 1e-12, "restored response");
+    }
+
+    #[test]
+    fn every_sample_gets_a_decision_value() {
+        let mut rng = Rng::new(14);
+        let (x, labels) = labelled_problem(&mut rng, 9, 9, 3);
+        let y = signed_codes(&labels);
+        let folds = kfold(18, 5, &mut rng);
+        let cv = AnalyticBinaryCv::fit(&x, &y, 0.1).unwrap();
+        let dv = cv.decision_values(&folds).unwrap();
+        assert!(dv.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,211 @@
+//! The hat matrix `H = X̃ (X̃ᵀX̃ + λI₀)⁻¹ X̃ᵀ` (§2.4.2, §2.6.1).
+//!
+//! Built **once** per dataset; it depends on the features only, so it is
+//! reused across every fold *and every label permutation* (§2.7) — that
+//! reuse is the entire source of the paper's speed-up.
+
+use crate::linalg::{gemm_acc, matmul, matvec, Cholesky, Lu, Mat};
+use crate::model::linreg::gram_ridged;
+use anyhow::{Context, Result};
+
+/// Which factorisation of the gram matrix backs this hat matrix.
+#[derive(Clone, Debug)]
+enum GramFactor {
+    Chol(Cholesky),
+    Lu(Lu),
+}
+
+/// Precomputed full-data quantities shared by the analytic CV paths.
+#[derive(Clone, Debug)]
+pub struct HatMatrix {
+    /// `H`, `N × N`.
+    pub h: Mat,
+    /// Augmented design `X̃ = [X, 1]`, `N × (P+1)`.
+    pub xa: Mat,
+    /// Factorisation of `G = X̃ᵀX̃ + λI₀` (the explicit inverse `S` is never
+    /// needed on the hot path — see [`HatMatrix::inv_gram`]).
+    factor: GramFactor,
+    /// Ridge parameter used.
+    pub lambda: f64,
+}
+
+impl HatMatrix {
+    /// Build from raw data `x` (N×P) with ridge λ (λ=0 allowed when the
+    /// gram matrix is non-singular, i.e. typically N > P).
+    ///
+    /// Perf note (EXPERIMENTS.md §Perf L3 #4): `H = X̃ G⁻¹ X̃ᵀ` is computed
+    /// as `X̃ · solve(G, X̃ᵀ)` — a factorisation (`P³/3`) plus an `O(P²N)`
+    /// multi-RHS solve — rather than materialising `G⁻¹` (`≈P³` extra).
+    pub fn build(x: &Mat, lambda: f64) -> Result<HatMatrix> {
+        assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
+        let xa = x.augment_ones();
+        let g = gram_ridged(&xa, lambda);
+        // Cholesky (G is SPD whenever invertible here); LU fallback gives a
+        // clean error message for singular unridged fits.
+        let (factor, w) = match Cholesky::factor(&g) {
+            Ok(ch) => {
+                let w = ch.solve_mat(&xa.t()); // W = G⁻¹X̃ᵀ, (P+1)×N
+                (GramFactor::Chol(ch), w)
+            }
+            Err(_) => {
+                let lu = Lu::factor(&g)
+                    .context("gram matrix singular — increase ridge λ (P ≥ N with λ=0?)")?;
+                let w = lu.solve_mat(&xa.t());
+                (GramFactor::Lu(lu), w)
+            }
+        };
+        // H = X̃ W.
+        let mut h = Mat::zeros(xa.rows(), xa.rows());
+        gemm_acc(&mut h, &xa, &w, 1.0, 0.0);
+        h.symmetrize(); // exact-math symmetric; tidy roundoff
+        Ok(HatMatrix { h, xa, factor, lambda })
+    }
+
+    /// Explicit inverse gram `S = (X̃ᵀX̃ + λI₀)⁻¹` — off the hot path; used
+    /// by the Woodbury derivation utilities and tests.
+    pub fn inv_gram(&self) -> Mat {
+        match &self.factor {
+            GramFactor::Chol(ch) => ch.inverse(),
+            GramFactor::Lu(lu) => lu.inverse(),
+        }
+    }
+
+    /// Solve `G z = b` against the stored factorisation.
+    pub fn solve_gram(&self, b: &Mat) -> Mat {
+        match &self.factor {
+            GramFactor::Chol(ch) => ch.solve_mat(b),
+            GramFactor::Lu(lu) => lu.solve_mat(b),
+        }
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.h.rows()
+    }
+
+    /// Full-data fitted values `ŷ = H y` for a response/label vector.
+    pub fn fit_response(&self, y: &[f64]) -> Vec<f64> {
+        matvec(&self.h, y)
+    }
+
+    /// Full-data fits for a response *matrix* (multi-class `Ŷ = H Y`).
+    pub fn fit_response_mat(&self, y: &Mat) -> Mat {
+        matmul(&self.h, y)
+    }
+
+    /// The fold-local block `H_Te` (rows & cols at `te`).
+    pub fn block(&self, te: &[usize]) -> Mat {
+        self.h.take(te, te)
+    }
+
+    /// The cross block `H_{Tr,Te}` (rows `tr`, cols `te`) used by the bias
+    /// adjustment (Eq. 15).
+    pub fn cross_block(&self, tr: &[usize], te: &[usize]) -> Mat {
+        self.h.take(tr, te)
+    }
+
+    /// `I − H_Te` for a fold.
+    pub fn i_minus_block(&self, te: &[usize]) -> Mat {
+        let mut m = self.block(te);
+        m.scale(-1.0);
+        for i in 0..te.len() {
+            m[(i, i)] += 1.0;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_all_close, Cases};
+    use crate::util::rng::Rng;
+
+    fn random_x(rng: &mut Rng, n: usize, p: usize) -> Mat {
+        Mat::from_fn(n, p, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn symmetric_and_idempotent_unridged() {
+        let mut rng = Rng::new(1);
+        let x = random_x(&mut rng, 20, 6);
+        let hat = HatMatrix::build(&x, 0.0).unwrap();
+        // symmetry
+        assert!(hat.h.max_abs_diff(&hat.h.t()) < 1e-10);
+        // idempotent: H² = H (projection) when λ=0
+        let hh = matmul(&hat.h, &hat.h);
+        assert!(hh.max_abs_diff(&hat.h) < 1e-8);
+        // trace H = rank X̃ = P+1
+        assert!((hat.h.trace() - 7.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn ridge_contracts_hat() {
+        let mut rng = Rng::new(2);
+        let x = random_x(&mut rng, 15, 5);
+        let h0 = HatMatrix::build(&x, 0.0).unwrap();
+        let h1 = HatMatrix::build(&x, 10.0).unwrap();
+        // Ridge shrinks the projection: trace decreases.
+        assert!(h1.h.trace() < h0.h.trace());
+        // Ones direction unpenalised (I₀): H·1 = 1 in both.
+        let ones = vec![1.0; 15];
+        assert_all_close(&h0.fit_response(&ones), &ones, 1e-8, "H·1 λ=0");
+        assert_all_close(&h1.fit_response(&ones), &ones, 1e-8, "H·1 λ>0");
+    }
+
+    #[test]
+    fn hy_matches_regression_fit() {
+        // ŷ = Hy equals the prediction of the ridge regression fit.
+        Cases::new(20).run("hat-vs-regression", |rng| {
+            let n = 10 + rng.below(25);
+            let p = 1 + rng.below(8);
+            let x = random_x(rng, n, p);
+            let y: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let lambda = crate::util::prop::ridge(rng, p < n);
+            let hat = HatMatrix::build(&x, lambda).unwrap();
+            let fit = crate::model::linreg::LinReg::fit(&x, &y, lambda).unwrap();
+            assert_all_close(&hat.fit_response(&y), &fit.predict(&x), 1e-6, "Hy vs X̃β̂");
+        });
+    }
+
+    #[test]
+    fn wide_data_requires_ridge() {
+        let mut rng = Rng::new(3);
+        let x = random_x(&mut rng, 8, 20);
+        assert!(HatMatrix::build(&x, 0.0).is_err());
+        assert!(HatMatrix::build(&x, 0.5).is_ok());
+    }
+
+    #[test]
+    fn blocks_agree_with_take() {
+        let mut rng = Rng::new(4);
+        let x = random_x(&mut rng, 12, 4);
+        let hat = HatMatrix::build(&x, 0.1).unwrap();
+        let te = [2usize, 5, 9];
+        let tr = [0usize, 1, 3, 4, 6, 7, 8, 10, 11];
+        let b = hat.block(&te);
+        assert_eq!(b.shape(), (3, 3));
+        assert_eq!(b[(0, 1)], hat.h[(2, 5)]);
+        let cb = hat.cross_block(&tr, &te);
+        assert_eq!(cb.shape(), (9, 3));
+        assert_eq!(cb[(0, 2)], hat.h[(0, 9)]);
+        let imb = hat.i_minus_block(&te);
+        assert!((imb[(0, 0)] - (1.0 - hat.h[(2, 2)])).abs() < 1e-15);
+        assert!((imb[(0, 1)] + hat.h[(2, 5)]).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hat_entries_are_whitened_kernel() {
+        // §4.4: H_ij = x̃ᵢᵀ (X̃ᵀX̃+λI₀)⁻¹ x̃ⱼ.
+        let mut rng = Rng::new(5);
+        let x = random_x(&mut rng, 9, 3);
+        let hat = HatMatrix::build(&x, 0.7).unwrap();
+        for i in [0usize, 4, 8] {
+            for j in [1usize, 4, 7] {
+                let sxj = matvec(&hat.inv_gram(), hat.xa.row(j));
+                let hij = crate::linalg::dot(hat.xa.row(i), &sxj);
+                assert!((hat.h[(i, j)] - hij).abs() < 1e-10);
+            }
+        }
+    }
+}

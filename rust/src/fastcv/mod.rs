@@ -1,0 +1,154 @@
+//! The paper's contribution: **analytical cross-validation** for
+//! least-squares models and multi-class LDA.
+//!
+//! - [`hat`] — the hat matrix `H = X̃ (X̃ᵀX̃+λI₀)⁻¹ X̃ᵀ` and fold blocks
+//! - [`binary`] — exact k-fold CV decision values for binary LDA /
+//!   (ridge) regression from a single full-data fit (Eq. 14), with the
+//!   `b_LDA` bias adjustment (Eq. 15)
+//! - [`multiclass`] — the optimal-scoring extension (Alg. 2)
+//! - [`perm`] — permutation testing with a shared hat matrix (Alg. 1)
+//! - [`woodbury`] — the intermediate Woodbury identities (Eq. 9–12), kept
+//!   as a verifiable derivation and an ablation path
+//! - [`bigdata`] — §4.5's scaling strategies: streaming hat blocks (no
+//!   `N×N` materialisation), sparse random projections, LDA ensembles
+
+pub mod bigdata;
+pub mod binary;
+pub mod hat;
+pub mod lambda_search;
+pub mod multiclass;
+pub mod perm;
+pub mod woodbury;
+
+use crate::linalg::{Lu, Mat};
+use anyhow::{Context, Result};
+use hat::HatMatrix;
+
+/// Per-fold factorisations reusable across label permutations.
+///
+/// `(I − H_Te)` depends on features only (§2.7), so its LU factor is
+/// computed once per fold and reused for every permutation — the single
+/// biggest constant-factor win on the permutation path (see EXPERIMENTS.md
+/// §Perf for the measured effect and `benches/ablation_updates.rs`).
+pub struct FoldCache {
+    /// Test-index set per fold.
+    pub folds: Vec<Vec<usize>>,
+    /// Train-index set per fold (complement).
+    pub trains: Vec<Vec<usize>>,
+    /// LU factor of `I − H_Te` per fold.
+    pub lus: Vec<Lu>,
+    /// `H_{Tr,Te}` per fold; present when bias adjustment or multi-class
+    /// CV (which needs `Ẏ_Tr`) was requested.
+    pub cross: Option<Vec<Mat>>,
+}
+
+impl FoldCache {
+    /// Factor every fold of a partition. `with_cross` additionally gathers
+    /// the `H_{Tr,Te}` blocks needed by Eq. 15 / Alg. 2.
+    pub fn prepare(hat: &HatMatrix, folds: &[Vec<usize>], with_cross: bool) -> Result<FoldCache> {
+        let n = hat.n();
+        validate_folds(folds, n)?;
+        let trains: Vec<Vec<usize>> = folds.iter().map(|te| complement(te, n)).collect();
+        let mut lus = Vec::with_capacity(folds.len());
+        for (k, te) in folds.iter().enumerate() {
+            let m = hat.i_minus_block(te);
+            let lu = Lu::factor(&m).with_context(|| {
+                format!(
+                    "fold {k}: (I − H_Te) singular — the fold model itself is \
+                     degenerate (λ=0 with P ≥ N_train?); increase ridge λ"
+                )
+            })?;
+            lus.push(lu);
+        }
+        let cross = if with_cross {
+            Some(
+                folds
+                    .iter()
+                    .zip(&trains)
+                    .map(|(te, tr)| hat.cross_block(tr, te))
+                    .collect(),
+            )
+        } else {
+            None
+        };
+        Ok(FoldCache { folds: folds.to_vec(), trains, lus, cross })
+    }
+
+    /// Number of folds.
+    pub fn k(&self) -> usize {
+        self.folds.len()
+    }
+}
+
+/// Sorted complement of `te` within `0..n`.
+pub fn complement(te: &[usize], n: usize) -> Vec<usize> {
+    let mut in_te = vec![false; n];
+    for &i in te {
+        in_te[i] = true;
+    }
+    (0..n).filter(|&i| !in_te[i]).collect()
+}
+
+/// Check a fold partition: non-empty disjoint test sets covering subsets of
+/// `0..n`, each leaving a non-empty training set.
+pub fn validate_folds(folds: &[Vec<usize>], n: usize) -> Result<()> {
+    if folds.is_empty() {
+        anyhow::bail!("no folds supplied");
+    }
+    let mut seen = vec![false; n];
+    for (k, te) in folds.iter().enumerate() {
+        if te.is_empty() {
+            anyhow::bail!("fold {k} has an empty test set");
+        }
+        if te.len() >= n {
+            anyhow::bail!("fold {k} leaves no training samples");
+        }
+        for &i in te {
+            if i >= n {
+                anyhow::bail!("fold {k}: index {i} out of range (n={n})");
+            }
+            if seen[i] {
+                anyhow::bail!("sample {i} appears in more than one test set");
+            }
+            seen[i] = true;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn complement_basic() {
+        assert_eq!(complement(&[1, 3], 5), vec![0, 2, 4]);
+        assert_eq!(complement(&[], 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn validate_folds_catches_errors() {
+        assert!(validate_folds(&[], 4).is_err());
+        assert!(validate_folds(&[vec![]], 4).is_err());
+        assert!(validate_folds(&[vec![0, 1, 2, 3]], 4).is_err(), "no train left");
+        assert!(validate_folds(&[vec![0], vec![0]], 4).is_err(), "overlap");
+        assert!(validate_folds(&[vec![9]], 4).is_err(), "out of range");
+        assert!(validate_folds(&[vec![0, 1], vec![2]], 4).is_ok());
+    }
+
+    #[test]
+    fn cache_prepares_all_folds() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(12, 3, |_, _| rng.gauss());
+        let hat = HatMatrix::build(&x, 0.1).unwrap();
+        let folds = vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7], vec![8, 9, 10, 11]];
+        let cache = FoldCache::prepare(&hat, &folds, true).unwrap();
+        assert_eq!(cache.k(), 3);
+        assert_eq!(cache.trains[0], vec![4, 5, 6, 7, 8, 9, 10, 11]);
+        let cross = cache.cross.as_ref().unwrap();
+        assert_eq!(cross[1].shape(), (8, 4));
+        let no_cross = FoldCache::prepare(&hat, &folds, false).unwrap();
+        assert!(no_cross.cross.is_none());
+    }
+}

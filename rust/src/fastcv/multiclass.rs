@@ -1,0 +1,251 @@
+//! Analytical cross-validation for multi-class LDA (§2.10, Algorithm 2).
+//!
+//! Step 1 of optimal scoring (multivariate ridge regression on the class
+//! indicator matrix) is updated analytically exactly like the binary case —
+//! Eq. 14/15 applied columnwise to `Ê = Y − HY`. Step 2 (the `C×C`
+//! eigenproblem giving the optimal scores `Θ̇` and scaling `Ḋ`) cannot be
+//! updated, but is `O(C³)` per fold — negligible. Classification is by
+//! nearest centroid in the cross-validated discriminant-score space.
+
+use super::hat::HatMatrix;
+use super::FoldCache;
+use crate::linalg::{matmul, Mat};
+use crate::model::lda_multiclass::nearest_centroid;
+use crate::model::optimal_scoring::{indicator_matrix, score_basis};
+use anyhow::{ensure, Result};
+
+/// Analytic multi-class CV engine for one dataset + labelling.
+#[derive(Debug)]
+pub struct AnalyticMulticlassCv {
+    /// Shared feature-side precomputation.
+    pub hat: HatMatrix,
+    /// Class labels (0..c).
+    pub labels: Vec<usize>,
+    /// Number of classes.
+    pub n_classes: usize,
+    /// Indicator matrix `Y`, `N × C`.
+    pub y: Mat,
+    /// Full-data fits `Ŷ = HY`.
+    pub y_hat: Mat,
+}
+
+impl AnalyticMulticlassCv {
+    /// Fit the single full-data multivariate regression.
+    pub fn fit(x: &Mat, labels: &[usize], c: usize, lambda: f64) -> Result<AnalyticMulticlassCv> {
+        let hat = HatMatrix::build(x, lambda)?;
+        Ok(Self::with_hat(hat, labels, c))
+    }
+
+    /// Re-use an existing hat matrix (permutation path: H is label-free).
+    pub fn with_hat(hat: HatMatrix, labels: &[usize], c: usize) -> AnalyticMulticlassCv {
+        assert_eq!(hat.n(), labels.len());
+        let y = indicator_matrix(labels, c);
+        let y_hat = hat.fit_response_mat(&y);
+        AnalyticMulticlassCv { hat, labels: labels.to_vec(), n_classes: c, y, y_hat }
+    }
+
+    /// Swap in permuted labels without touching `H`.
+    pub fn set_labels(&mut self, labels: &[usize]) {
+        assert_eq!(self.hat.n(), labels.len());
+        self.labels.copy_from_slice(labels);
+        self.y = indicator_matrix(labels, self.n_classes);
+        self.y_hat = self.hat.fit_response_mat(&self.y);
+    }
+
+    /// Algorithm 2: cross-validated predicted labels for every sample.
+    /// The cache must be prepared `with_cross = true`.
+    pub fn predict_cached(&self, cache: &FoldCache) -> Result<Vec<usize>> {
+        let cross = cache
+            .cross
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("FoldCache must be prepared with with_cross=true"))?;
+        let c = self.n_classes;
+        let mut pred = vec![usize::MAX; self.hat.n()];
+        for (k, te) in cache.folds.iter().enumerate() {
+            let tr = &cache.trains[k];
+            let n_tr = tr.len();
+            // --- step 1: cross-validated fits (Eq. 14/15, columnwise) ---
+            // Ê_Te (nte × C)
+            let e_hat_te = Mat::from_fn(te.len(), c, |j, l| {
+                self.y[(te[j], l)] - self.y_hat[(te[j], l)]
+            });
+            // Ė_Te = (I−H_Te)⁻¹ Ê_Te
+            let e_dot_te = cache.lus[k].solve_mat(&e_hat_te);
+            // Ẏ_Te = Y_Te − Ė_Te
+            let y_dot_te = Mat::from_fn(te.len(), c, |j, l| self.y[(te[j], l)] - e_dot_te[(j, l)]);
+            // Ė_Tr = Ê_Tr + H_{Tr,Te} Ė_Te ; Ẏ_Tr = Y_Tr − Ė_Tr
+            let corr = matmul(&cross[k], &e_dot_te);
+            let y_dot_tr = Mat::from_fn(n_tr, c, |j, l| {
+                let i = tr[j];
+                let e_tr = (self.y[(i, l)] - self.y_hat[(i, l)]) + corr[(j, l)];
+                self.y[(i, l)] - e_tr
+            });
+            // --- step 2: optimal scores on the training fold ---
+            let y_tr = Mat::from_fn(n_tr, c, |j, l| self.y[(tr[j], l)]);
+            let counts: Vec<f64> = {
+                let mut cnt = vec![0.0; c];
+                for &i in tr {
+                    cnt[self.labels[i]] += 1.0;
+                }
+                cnt
+            };
+            ensure!(
+                counts.iter().all(|&x| x > 0.0),
+                "fold {k}: class absent from training set — use stratified folds"
+            );
+            // M = Ẏ_Trᵀ Y_Tr / N_Tr ; Dp = Y_TrᵀY_Tr / N_Tr
+            let mut m = matmul(&y_dot_tr.t(), &y_tr);
+            m.scale(1.0 / n_tr as f64);
+            let dp = Mat::diag(&counts.iter().map(|&x| x / n_tr as f64).collect::<Vec<_>>());
+            let basis = score_basis(&m, &dp, n_tr)?;
+            // Discriminant scores: Ž = Ẏ Θ̇ Ḋ for test and train.
+            let theta_d = scale_cols(&basis.theta, &basis.d);
+            let z_te = matmul(&y_dot_te, &theta_d);
+            let z_tr = matmul(&y_dot_tr, &theta_d);
+            // Class centroids in score space from the training fold.
+            let ncomp = z_tr.cols();
+            let mut centroids = Mat::zeros(c, ncomp);
+            for (j, &i) in tr.iter().enumerate() {
+                let l = self.labels[i];
+                for q in 0..ncomp {
+                    centroids[(l, q)] += z_tr[(j, q)];
+                }
+            }
+            for l in 0..c {
+                let inv = 1.0 / counts[l];
+                for q in 0..ncomp {
+                    centroids[(l, q)] *= inv;
+                }
+            }
+            let fold_pred = nearest_centroid(&z_te, &centroids);
+            for (j, &i) in te.iter().enumerate() {
+                pred[i] = fold_pred[j];
+            }
+        }
+        Ok(pred)
+    }
+
+    /// Convenience: prepare a cache and predict.
+    pub fn predict(&self, folds: &[Vec<usize>]) -> Result<Vec<usize>> {
+        let cache = FoldCache::prepare(&self.hat, folds, true)?;
+        self.predict_cached(&cache)
+    }
+}
+
+/// Scale each column `j` of `m` by `d[j]`.
+fn scale_cols(m: &Mat, d: &[f64]) -> Mat {
+    assert_eq!(m.cols(), d.len());
+    Mat::from_fn(m.rows(), m.cols(), |i, j| m[(i, j)] * d[j])
+}
+
+/// The standard approach for multi-class LDA: retrain an optimal-scoring
+/// LDA (equivalently, generalised-eig LDA) on every training fold. Baseline
+/// for correctness tests and the Fig. 3c/d timings.
+pub fn standard_cv_predict(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+) -> Result<Vec<usize>> {
+    super::validate_folds(folds, x.rows())?;
+    let mut pred = vec![usize::MAX; x.rows()];
+    for te in folds {
+        let tr = super::complement(te, x.rows());
+        let x_tr = x.take_rows(&tr);
+        let l_tr: Vec<usize> = tr.iter().map(|&i| labels[i]).collect();
+        let model = crate::model::lda_multiclass::MulticlassLda::train(
+            &x_tr,
+            &l_tr,
+            c,
+            crate::model::Reg::Ridge(lambda),
+        )?;
+        let fold_pred = model.predict(&x.take_rows(te));
+        for (j, &i) in te.iter().enumerate() {
+            pred[i] = fold_pred[j];
+        }
+    }
+    Ok(pred)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::stratified_kfold;
+    use crate::model::lda_multiclass::tests::blobs;
+    use crate::util::prop::Cases;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exactness_vs_standard_multiclass() {
+        // The multi-class analogue of the paper's core claim: Alg. 2
+        // predictions equal retrain-per-fold optimal-scoring/gen-eig LDA.
+        Cases::new(25).run("analytic == standard (multiclass)", |rng| {
+            let c = 3 + rng.below(3);
+            let per = 8 + rng.below(10);
+            let p = 2 + rng.below(12);
+            let (x, labels) = blobs(rng, per, c, p, 2.0);
+            let lambda = 10f64.powf(rng.uniform_in(-2.0, 1.0));
+            let k = 3 + rng.below(3);
+            let folds = stratified_kfold(&labels, k, rng);
+            let std_pred = standard_cv_predict(&x, &labels, c, &folds, lambda).unwrap();
+            let cv = AnalyticMulticlassCv::fit(&x, &labels, c, lambda).unwrap();
+            let ana_pred = cv.predict(&folds).unwrap();
+            let mismatches = std_pred.iter().zip(&ana_pred).filter(|(a, b)| a != b).count();
+            assert_eq!(mismatches, 0, "predictions differ on {mismatches} samples");
+        });
+    }
+
+    #[test]
+    fn wide_data_multiclass() {
+        // P ≫ N regime with ridge — the paper's main use case.
+        let mut rng = Rng::new(3);
+        let (x, labels) = blobs(&mut rng, 8, 4, 60, 3.0); // N=32, P=60
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        let std_pred = standard_cv_predict(&x, &labels, 4, &folds, 1.0).unwrap();
+        let cv = AnalyticMulticlassCv::fit(&x, &labels, 4, 1.0).unwrap();
+        let ana_pred = cv.predict(&folds).unwrap();
+        assert_eq!(std_pred, ana_pred);
+    }
+
+    #[test]
+    fn separable_blobs_accurate() {
+        let mut rng = Rng::new(4);
+        let (x, labels) = blobs(&mut rng, 20, 5, 10, 5.0);
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        let cv = AnalyticMulticlassCv::fit(&x, &labels, 5, 0.1).unwrap();
+        let pred = cv.predict(&folds).unwrap();
+        let acc = pred.iter().zip(&labels).filter(|(a, b)| a == b).count() as f64 / 100.0;
+        assert!(acc > 0.9, "acc={acc}");
+    }
+
+    #[test]
+    fn set_labels_permutation_roundtrip() {
+        let mut rng = Rng::new(5);
+        let (x, labels) = blobs(&mut rng, 10, 3, 6, 2.0);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let mut cv = AnalyticMulticlassCv::fit(&x, &labels, 3, 0.5).unwrap();
+        let cache = FoldCache::prepare(&cv.hat, &folds, true).unwrap();
+        let p0 = cv.predict_cached(&cache).unwrap();
+        // permuted labels change predictions path but engine stays valid
+        let perm = rng.permutation(30);
+        let shuffled: Vec<usize> = perm.iter().map(|&i| labels[i]).collect();
+        cv.set_labels(&shuffled);
+        let p_ref = standard_cv_predict(&x, &shuffled, 3, &folds, 0.5).unwrap();
+        let p_ana = cv.predict_cached(&cache).unwrap();
+        assert_eq!(p_ana, p_ref, "permuted labels still exact");
+        cv.set_labels(&labels);
+        assert_eq!(cv.predict_cached(&cache).unwrap(), p0);
+    }
+
+    #[test]
+    fn binary_special_case_matches_binary_engine_predictions() {
+        let mut rng = Rng::new(6);
+        let (x, labels) = blobs(&mut rng, 15, 2, 5, 2.5);
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        let multi = AnalyticMulticlassCv::fit(&x, &labels, 2, 0.2).unwrap();
+        let pred_multi = multi.predict(&folds).unwrap();
+        let std_pred = standard_cv_predict(&x, &labels, 2, &folds, 0.2).unwrap();
+        assert_eq!(pred_multi, std_pred);
+    }
+}

@@ -1,0 +1,211 @@
+//! Permutation testing with the analytical approach (§2.7, Alg. 1 & 2).
+//!
+//! The hat matrix depends on features only, so across permutations only
+//! `ŷ = H y^σ` and the fold solves are recomputed; `H` and the per-fold
+//! `(I − H_Te)` LU factors are built **once**. The standard-approach
+//! engines retrain every fold model for every permutation — that contrast
+//! is exactly the paper's Fig. 3b/3d/Fig. 4 measurement.
+
+use super::binary::AnalyticBinaryCv;
+use super::multiclass::AnalyticMulticlassCv;
+use super::FoldCache;
+use crate::cv::metrics::{accuracy_labels, accuracy_signed};
+use crate::linalg::Mat;
+use crate::model::lda_binary::signed_codes;
+use crate::model::Reg;
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Result of a permutation test.
+#[derive(Clone, Debug)]
+pub struct PermutationResult {
+    /// Performance with the true labelling.
+    pub observed: f64,
+    /// Performance under each permutation (the null distribution).
+    pub null: Vec<f64>,
+    /// Monte-Carlo p-value with the +1 correction
+    /// (Phipson & Smyth: p = (1 + #{null ≥ observed}) / (1 + n_perm)).
+    pub p_value: f64,
+}
+
+fn p_value(observed: f64, null: &[f64]) -> f64 {
+    let ge = null.iter().filter(|&&v| v >= observed).count();
+    (1 + ge) as f64 / (1 + null.len()) as f64
+}
+
+/// Analytic binary permutation test (Algorithm 1). Accuracy metric.
+///
+/// `bias_adjust = false` uses the raw regression decision values (`b_LR`,
+/// the paper's Alg. 1 as printed); `bias_adjust = true` applies the §2.5
+/// correction per fold so results are *identical* to retraining classic LDA
+/// with `b_LDA` even for unbalanced training folds.
+pub fn analytic_binary_permutation(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    bias_adjust: bool,
+    rng: &mut Rng,
+) -> Result<PermutationResult> {
+    let y = signed_codes(labels);
+    let mut cv = AnalyticBinaryCv::fit(x, &y, lambda)?;
+    let cache = FoldCache::prepare(&cv.hat, folds, bias_adjust)?;
+    let dvals = |cv: &AnalyticBinaryCv, labels: &[usize]| -> Result<Vec<f64>> {
+        if bias_adjust {
+            cv.decision_values_bias_adjusted(&cache, labels)
+        } else {
+            Ok(cv.decision_values_cached(&cache))
+        }
+    };
+    let observed = accuracy_signed(&dvals(&cv, labels)?, &y);
+    let mut null = Vec::with_capacity(n_perm);
+    let mut labels_perm = labels.to_vec();
+    for _ in 0..n_perm {
+        rng.shuffle(&mut labels_perm);
+        let y_perm = signed_codes(&labels_perm);
+        cv.set_response(&y_perm);
+        null.push(accuracy_signed(&dvals(&cv, &labels_perm)?, &y_perm));
+    }
+    Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
+}
+
+/// Standard-approach binary permutation test: retrains classic LDA on every
+/// fold of every permutation (the baseline timing of Fig. 3b / Fig. 4).
+pub fn standard_binary_permutation(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    reg: Reg,
+    n_perm: usize,
+    rng: &mut Rng,
+) -> Result<PermutationResult> {
+    let observed = crate::cv::runner::standard_binary_cv_accuracy(x, labels, folds, reg)?;
+    let mut null = Vec::with_capacity(n_perm);
+    let mut labels_perm = labels.to_vec();
+    for _ in 0..n_perm {
+        rng.shuffle(&mut labels_perm);
+        null.push(crate::cv::runner::standard_binary_cv_accuracy(x, &labels_perm, folds, reg)?);
+    }
+    Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
+}
+
+/// Analytic multi-class permutation test (Algorithm 2).
+pub fn analytic_multiclass_permutation(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    rng: &mut Rng,
+) -> Result<PermutationResult> {
+    let mut cv = AnalyticMulticlassCv::fit(x, labels, c, lambda)?;
+    let cache = FoldCache::prepare(&cv.hat, folds, true)?;
+    let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
+    let mut null = Vec::with_capacity(n_perm);
+    let mut labels_perm = labels.to_vec();
+    for _ in 0..n_perm {
+        rng.shuffle(&mut labels_perm);
+        cv.set_labels(&labels_perm);
+        null.push(accuracy_labels(&cv.predict_cached(&cache)?, &labels_perm));
+    }
+    Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
+}
+
+/// Standard-approach multi-class permutation test.
+pub fn standard_multiclass_permutation(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    reg: Reg,
+    n_perm: usize,
+    rng: &mut Rng,
+) -> Result<PermutationResult> {
+    let observed = crate::cv::runner::standard_multiclass_cv_accuracy(x, labels, c, folds, reg)?;
+    let mut null = Vec::with_capacity(n_perm);
+    let mut labels_perm = labels.to_vec();
+    for _ in 0..n_perm {
+        rng.shuffle(&mut labels_perm);
+        null.push(crate::cv::runner::standard_multiclass_cv_accuracy(
+            x,
+            &labels_perm,
+            c,
+            folds,
+            reg,
+        )?);
+    }
+    Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::stratified_kfold;
+    use crate::model::lda_multiclass::tests::blobs;
+
+    #[test]
+    fn separable_data_rejects_null_binary() {
+        let mut rng = Rng::new(1);
+        let (x, labels) = blobs(&mut rng, 25, 2, 6, 3.5);
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        let res = analytic_binary_permutation(&x, &labels, &folds, 0.1, 99, false, &mut rng).unwrap();
+        assert!(res.observed > 0.85, "observed={}", res.observed);
+        assert!(res.p_value <= 0.05, "p={}", res.p_value);
+        assert_eq!(res.null.len(), 99);
+    }
+
+    #[test]
+    fn null_data_keeps_null_binary() {
+        let mut rng = Rng::new(2);
+        let (x, mut labels) = blobs(&mut rng, 25, 2, 6, 3.5);
+        rng.shuffle(&mut labels); // destroy the signal
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        let res = analytic_binary_permutation(&x, &labels, &folds, 0.1, 99, false, &mut rng).unwrap();
+        assert!(res.p_value > 0.05, "p={} (expected non-significant)", res.p_value);
+    }
+
+    #[test]
+    fn analytic_and_standard_null_distributions_agree() {
+        // With identical permutation streams, the two engines must compute
+        // identical null accuracies — exactness under permutation.
+        let mut rng = Rng::new(3);
+        let (x, labels) = blobs(&mut rng, 15, 2, 4, 2.0);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let mut rng_a = Rng::new(77);
+        let mut rng_b = Rng::new(77);
+        let a = analytic_binary_permutation(&x, &labels, &folds, 0.5, 20, true, &mut rng_a).unwrap();
+        // standard engine permutes labels; analytic permutes signed codes.
+        // Identical RNG + identical shuffle source ⇒ same permutations.
+        let b = standard_binary_permutation(&x, &labels, &folds, Reg::Ridge(0.5), 20, &mut rng_b)
+            .unwrap();
+        assert!((a.observed - b.observed).abs() < 1e-12);
+        for (x1, x2) in a.null.iter().zip(&b.null) {
+            assert!((x1 - x2).abs() < 1e-12, "null mismatch: {x1} vs {x2}");
+        }
+    }
+
+    #[test]
+    fn multiclass_engines_agree_under_permutation() {
+        let mut rng = Rng::new(4);
+        let (x, labels) = blobs(&mut rng, 12, 3, 5, 2.5);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let mut rng_a = Rng::new(55);
+        let mut rng_b = Rng::new(55);
+        let a = analytic_multiclass_permutation(&x, &labels, 3, &folds, 0.3, 10, &mut rng_a).unwrap();
+        let b =
+            standard_multiclass_permutation(&x, &labels, 3, &folds, Reg::Ridge(0.3), 10, &mut rng_b)
+                .unwrap();
+        assert!((a.observed - b.observed).abs() < 1e-12);
+        for (x1, x2) in a.null.iter().zip(&b.null) {
+            assert!((x1 - x2).abs() < 1e-12, "null mismatch: {x1} vs {x2}");
+        }
+    }
+
+    #[test]
+    fn p_value_plus_one_correction() {
+        assert_eq!(p_value(1.0, &[0.5, 0.5, 0.5]), 0.25);
+        assert_eq!(p_value(0.4, &[0.5, 0.5, 0.5]), 1.0);
+    }
+}

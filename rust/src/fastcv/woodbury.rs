@@ -1,0 +1,125 @@
+//! The Woodbury/Sherman–Morrison intermediate identities (§2.4.3–2.4.5).
+//!
+//! These are the derivational stepping stones of the paper — Eq. 9 (RHS
+//! downdate), Eq. 10/11 (inverse-scatter downdate) and Eq. 12 (fold-weight
+//! update). The production path (Eq. 14) never materialises them, but they
+//! are kept (a) as executable proofs backing the derivation, (b) to expose
+//! per-fold model weights `β̇` cheaply when a caller wants the actual fold
+//! models (e.g. for interpretation), and (c) as the ablation arm of
+//! `benches/ablation_updates.rs`.
+
+use super::hat::HatMatrix;
+use crate::linalg::{matmul, matvec_t, Lu, Mat};
+use anyhow::{Context, Result};
+
+/// Eq. 9: `X̃_Trᵀ y_Tr = X̃ᵀy − X̃_Teᵀ y_Te` without touching training rows.
+pub fn downdate_xty(hat: &HatMatrix, y: &[f64], te: &[usize]) -> Vec<f64> {
+    let mut xty = matvec_t(&hat.xa, y);
+    let xa_te = hat.xa.take_rows(te);
+    let y_te: Vec<f64> = te.iter().map(|&i| y[i]).collect();
+    let sub = matvec_t(&xa_te, &y_te);
+    for (a, b) in xty.iter_mut().zip(&sub) {
+        *a -= b;
+    }
+    xty
+}
+
+/// Eq. 11: `(X̃_TrᵀX̃_Tr + λI₀)⁻¹ = S + S X̃_Teᵀ (I − H_Te)⁻¹ X̃_Te S`.
+pub fn downdate_inverse(hat: &HatMatrix, te: &[usize]) -> Result<Mat> {
+    let s = hat.inv_gram();
+    let xa_te = hat.xa.take_rows(te);
+    let s_xte = matmul(&s, &xa_te.t()); // S X̃_Teᵀ  ((P+1) × nte)
+    let i_minus = hat.i_minus_block(te);
+    let lu = Lu::factor(&i_minus).context("(I − H_Te) singular")?;
+    // (I−H_Te)⁻¹ X̃_Te S = (I−H_Te)⁻¹ (S X̃_Teᵀ)ᵀ
+    let solved = lu.solve_mat(&s_xte.t());
+    let mut out = matmul(&s_xte, &solved);
+    out.axpy(1.0, &s);
+    Ok(out)
+}
+
+/// Eq. 12: fold weights `β̇ = β̂ − S X̃_Teᵀ (I−H_Te)⁻¹ ê_Te` — the actual
+/// training-fold model, recovered without refitting.
+pub fn fold_weights(hat: &HatMatrix, y: &[f64], te: &[usize]) -> Result<Vec<f64>> {
+    let xty = matvec_t(&hat.xa, y);
+    let beta_full = hat.solve_gram(&Mat::col_vec(&xty)).col(0);
+    let y_hat = hat.fit_response(y);
+    let e_hat_te: Vec<f64> = te.iter().map(|&i| y[i] - y_hat[i]).collect();
+    let i_minus = hat.i_minus_block(te);
+    let corr_te = Lu::factor(&i_minus).context("(I − H_Te) singular")?.solve_vec(&e_hat_te);
+    let xa_te = hat.xa.take_rows(te);
+    let corr = matvec_t(&xa_te, &corr_te); // X̃_Teᵀ (I−H_Te)⁻¹ ê_Te
+    let s_corr = hat.solve_gram(&Mat::col_vec(&corr)).col(0);
+    Ok(beta_full.iter().zip(&s_corr).map(|(b, c)| b - c).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastcv::complement;
+    use crate::model::linreg::gram_ridged;
+    use crate::util::prop::{assert_all_close, Cases};
+
+    #[test]
+    fn eq9_matches_direct() {
+        Cases::new(20).run("eq9", |rng| {
+            let n = 10 + rng.below(20);
+            let p = 1 + rng.below(6);
+            let x = Mat::from_fn(n, p, |_, _| rng.gauss());
+            let y: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let hat = HatMatrix::build(&x, 0.3).unwrap();
+            let k = 3 + rng.below(3);
+            let te: Vec<usize> = (0..n).filter(|i| i % k == 0).collect();
+            let tr = complement(&te, n);
+            let fast = downdate_xty(&hat, &y, &te);
+            let xa_tr = hat.xa.take_rows(&tr);
+            let y_tr: Vec<f64> = tr.iter().map(|&i| y[i]).collect();
+            let direct = matvec_t(&xa_tr, &y_tr);
+            assert_all_close(&fast, &direct, 1e-9, "X̃_Trᵀy_Tr");
+        });
+    }
+
+    #[test]
+    fn eq11_matches_direct_inverse() {
+        Cases::new(20).run("eq11", |rng| {
+            let n = 12 + rng.below(15);
+            let p = 1 + rng.below(5);
+            let x = Mat::from_fn(n, p, |_, _| rng.gauss());
+            let lambda = 10f64.powf(rng.uniform_in(-2.0, 1.0));
+            let hat = HatMatrix::build(&x, lambda).unwrap();
+            let te: Vec<usize> = (0..n).filter(|i| i % 4 == 1).collect();
+            let tr = complement(&te, n);
+            let fast = downdate_inverse(&hat, &te).unwrap();
+            let xa_tr = hat.xa.take_rows(&tr);
+            let g_tr = gram_ridged(&xa_tr, lambda);
+            let direct = Lu::factor(&g_tr).unwrap().inverse();
+            assert!(
+                fast.max_abs_diff(&direct) < 1e-6 * direct.max_abs().max(1.0),
+                "Woodbury downdate mismatch: {}",
+                fast.max_abs_diff(&direct)
+            );
+        });
+    }
+
+    #[test]
+    fn eq12_recovers_fold_model() {
+        Cases::new(20).run("eq12", |rng| {
+            let n = 14 + rng.below(15);
+            let p = 1 + rng.below(5);
+            let x = Mat::from_fn(n, p, |_, _| rng.gauss());
+            let y: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let lambda = 10f64.powf(rng.uniform_in(-2.0, 1.0));
+            let hat = HatMatrix::build(&x, lambda).unwrap();
+            let te: Vec<usize> = (0..n).filter(|i| i % 5 == 2).collect();
+            let tr = complement(&te, n);
+            let beta_dot = fold_weights(&hat, &y, &te).unwrap();
+            // direct fold fit
+            let x_tr = x.take_rows(&tr);
+            let y_tr: Vec<f64> = tr.iter().map(|&i| y[i]).collect();
+            let m = crate::model::linreg::LinReg::fit(&x_tr, &y_tr, lambda).unwrap();
+            let mut direct = m.w.clone();
+            direct.push(m.b);
+            assert_all_close(&beta_dot, &direct, 1e-6, "β̇");
+        });
+    }
+}

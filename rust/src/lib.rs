@@ -1,0 +1,43 @@
+//! # fastcv
+//!
+//! A production-grade reproduction of *"Cross-validation in high-dimensional
+//! spaces: a lifeline for least-squares models and multi-class LDA"*
+//! (Treder, 2018) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's contribution — obtaining **exact** k-fold cross-validated
+//! predictions for least-squares models from a *single* full-data fit via the
+//! hat matrix, and its non-trivial extension to multi-class LDA through
+//! optimal scoring — lives in [`fastcv`]. Everything it rests on is
+//! implemented here as well: dense linear algebra ([`linalg`]), statistical
+//! sampling ([`stats`]), the classic retrain-per-fold baselines ([`model`],
+//! [`cv`]), simulated workloads matching the paper's evaluation ([`data`]),
+//! a sweep/permutation coordinator ([`coordinator`]), and a PJRT runtime
+//! that executes the JAX/Pallas-compiled HLO artifacts ([`runtime`]).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use fastcv::data::synthetic::{SyntheticSpec, generate};
+//! use fastcv::cv::folds::kfold;
+//! use fastcv::fastcv::binary::AnalyticBinaryCv;
+//! use fastcv::util::rng::Rng;
+//!
+//! let mut rng = Rng::new(7);
+//! let ds = generate(&SyntheticSpec::binary(60, 12), &mut rng);
+//! let folds = kfold(ds.n(), 5, &mut rng);
+//! let cv = AnalyticBinaryCv::fit(&ds.x, &ds.y_signed(), 0.1).unwrap();
+//! let dvals = cv.decision_values(&folds).unwrap();
+//! let acc = fastcv::cv::metrics::accuracy_signed(&dvals, &ds.y_signed());
+//! assert!(acc > 0.5);
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod cv;
+pub mod data;
+pub mod fastcv;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod stats;
+pub mod util;

@@ -1,0 +1,296 @@
+//! Cholesky factorisation and SPD solves.
+//!
+//! The scatter matrices `X̃ᵀX̃ + λI₀` and `S_w + λI` are symmetric positive
+//! definite whenever the ridge is active (and usually also without it for
+//! N > P), so Cholesky is the preferred factorisation on both the standard
+//! and the analytical path.
+
+use super::gemm::dot;
+use super::mat::Mat;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive definite matrix. Fails (cleanly) on
+    /// non-SPD input — callers fall back to LU or add ridge.
+    pub fn factor(a: &Mat) -> Result<Cholesky> {
+        let n = a.rows();
+        assert_eq!(a.rows(), a.cols(), "cholesky of non-square");
+        // Relative pivot floor: a rank-deficient gram matrix yields pivots
+        // at roundoff level (~1e-16·‖A‖) rather than exact zeros; treating
+        // those as "positive definite" would silently produce garbage.
+        let floor = 1e-10 * (0..n).map(|i| a[(i, i)].abs()).fold(0.0f64, f64::max);
+        let mut l = Mat::zeros(n, n);
+        for j in 0..n {
+            // diagonal
+            let mut d = a[(j, j)] - dot(&l.row(j)[..j], &l.row(j)[..j]);
+            if d <= floor || !d.is_finite() {
+                bail!("matrix not positive definite at pivot {j} (d={d})");
+            }
+            d = d.sqrt();
+            l[(j, j)] = d;
+            // column below the diagonal: L[i,j] = (A[i,j] - L[i,:j]·L[j,:j]) / d
+            for i in (j + 1)..n {
+                let s = a[(i, j)] - dot_rows(&l, i, j, j);
+                l[(i, j)] = s / d;
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// The lower factor.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Dimension.
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// Solve `A x = b` for a single right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        // forward: L y = b
+        for i in 0..n {
+            let s = dot(&self.l.row(i)[..i], &y[..i]);
+            y[i] = (y[i] - s) / self.l[(i, i)];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve `A X = B` for a matrix right-hand side.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let nrhs = b.cols();
+        let mut x = b.clone();
+        // forward substitution across all RHS columns (row-major friendly).
+        for i in 0..n {
+            // x.row(i) -= sum_k<i L[i,k] * x.row(k); then /= L[i,i]
+            for k in 0..i {
+                let lik = self.l[(i, k)];
+                if lik == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.as_mut_slice().split_at_mut(i * nrhs);
+                let xk = &head[k * nrhs..(k + 1) * nrhs];
+                let xi = &mut tail[..nrhs];
+                for c in 0..nrhs {
+                    xi[c] -= lik * xk[c];
+                }
+            }
+            let d = self.l[(i, i)];
+            for v in x.row_mut(i) {
+                *v /= d;
+            }
+        }
+        // backward
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                let lki = self.l[(k, i)];
+                if lki == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.as_mut_slice().split_at_mut(k * nrhs);
+                let xi = &mut head[i * nrhs..(i + 1) * nrhs];
+                let xk = &tail[..nrhs];
+                for c in 0..nrhs {
+                    xi[c] -= lki * xk[c];
+                }
+            }
+            let d = self.l[(i, i)];
+            for v in x.row_mut(i) {
+                *v /= d;
+            }
+        }
+        x
+    }
+
+    /// Explicit inverse `A⁻¹` (used for the hat matrix where the full
+    /// inverse genuinely is needed: `H = X̃ S X̃ᵀ`).
+    pub fn inverse(&self) -> Mat {
+        let n = self.n();
+        self.solve_mat(&Mat::eye(n))
+    }
+
+    /// log(det A) = 2 Σ log L[i,i].
+    pub fn log_det(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve `Lᵀ x = b` only (half-solve; used for whitening transforms).
+    pub fn solve_lt_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        let mut y = b.to_vec();
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in (i + 1)..n {
+                s -= self.l[(k, i)] * y[k];
+            }
+            y[i] = s / self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve `L Y = B` (forward only, matrix RHS) — for the two-sided
+    /// reduction `L⁻¹ A L⁻ᵀ` in the generalised eigenproblem.
+    pub fn solve_l_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let nrhs = b.cols();
+        let mut x = b.clone();
+        for i in 0..n {
+            for k in 0..i {
+                let lik = self.l[(i, k)];
+                if lik == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.as_mut_slice().split_at_mut(i * nrhs);
+                let xk = &head[k * nrhs..(k + 1) * nrhs];
+                let xi = &mut tail[..nrhs];
+                for c in 0..nrhs {
+                    xi[c] -= lik * xk[c];
+                }
+            }
+            let d = self.l[(i, i)];
+            for v in x.row_mut(i) {
+                *v /= d;
+            }
+        }
+        x
+    }
+
+    /// Solve `Lᵀ X = B` (backward only, matrix RHS).
+    pub fn solve_lt_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let nrhs = b.cols();
+        let mut x = b.clone();
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                let lki = self.l[(k, i)];
+                if lki == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.as_mut_slice().split_at_mut(k * nrhs);
+                let xi = &mut head[i * nrhs..(i + 1) * nrhs];
+                let xk = &tail[..nrhs];
+                for c in 0..nrhs {
+                    xi[c] -= lki * xk[c];
+                }
+            }
+            let d = self.l[(i, i)];
+            for v in x.row_mut(i) {
+                *v /= d;
+            }
+        }
+        x
+    }
+}
+
+#[inline]
+fn dot_rows(l: &Mat, i: usize, j: usize, len: usize) -> f64 {
+    dot(&l.row(i)[..len], &l.row(j)[..len])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, syrk_t};
+    use crate::util::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::from_fn(n + 3, n, |_, _| rng.gauss());
+        let mut g = syrk_t(&a);
+        for i in 0..n {
+            g[(i, i)] += 0.5;
+        }
+        g
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 20, 60] {
+            let a = spd(&mut rng, n);
+            let ch = Cholesky::factor(&a).unwrap();
+            let rec = matmul(ch.l(), &ch.l().t());
+            assert!(rec.max_abs_diff(&a) < 1e-8 * a.max_abs().max(1.0), "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_vec_and_mat_agree() {
+        let mut rng = Rng::new(2);
+        let n = 24;
+        let a = spd(&mut rng, n);
+        let ch = Cholesky::factor(&a).unwrap();
+        let b = Mat::from_fn(n, 3, |_, _| rng.gauss());
+        let xm = ch.solve_mat(&b);
+        for c in 0..3 {
+            let xv = ch.solve_vec(&b.col(c));
+            for i in 0..n {
+                assert!((xv[i] - xm[(i, c)]).abs() < 1e-9);
+            }
+        }
+        // residual check
+        let res = matmul(&a, &xm).sub(&b);
+        assert!(res.max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Rng::new(3);
+        let n = 15;
+        let a = spd(&mut rng, n);
+        let inv = Cholesky::factor(&a).unwrap().inverse();
+        let eye = matmul(&a, &inv);
+        assert!(eye.max_abs_diff(&Mat::eye(n)) < 1e-8);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn log_det_matches_2x2() {
+        let a = Mat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
+        let ch = Cholesky::factor(&a).unwrap();
+        assert!((ch.log_det() - (11.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn half_solves_compose_to_full() {
+        let mut rng = Rng::new(4);
+        let n = 12;
+        let a = spd(&mut rng, n);
+        let ch = Cholesky::factor(&a).unwrap();
+        let b = Mat::from_fn(n, 2, |_, _| rng.gauss());
+        let full = ch.solve_mat(&b);
+        let half = ch.solve_lt_mat(&ch.solve_l_mat(&b));
+        assert!(full.max_abs_diff(&half) < 1e-9);
+        let bv = b.col(0);
+        let hv = ch.solve_lt_vec(&ch.solve_l_mat(&Mat::col_vec(&bv)).col(0));
+        for i in 0..n {
+            assert!((hv[i] - full[(i, 0)]).abs() < 1e-9);
+        }
+    }
+}

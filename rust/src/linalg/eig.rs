@@ -1,0 +1,411 @@
+//! Symmetric eigendecomposition (cyclic Jacobi) and the generalised
+//! symmetric-definite problem `A w = λ B w`.
+//!
+//! Multi-class LDA needs `S_b W = S_w W Λ` (Eq. 19) and optimal scoring's
+//! step 2 needs the `C×C` eigenproblem (Alg. 2). Jacobi is exact enough
+//! (machine-precision orthogonality) and trivially robust for the sizes we
+//! hit (`C ≤ 10` per fold on the hot path, `P ≤ 1000` for the classic
+//! baseline model).
+
+use super::chol::Cholesky;
+use super::gemm::matmul;
+use super::mat::Mat;
+use anyhow::Result;
+
+/// Eigendecomposition of a symmetric matrix: `A = V diag(λ) Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns, matching `values` order.
+    pub vectors: Mat,
+}
+
+/// Symmetric eigendecomposition. Dispatches to Householder tridiagonal +
+/// implicit-QL (`O(4/3·n³)`, the LAPACK-style algorithm) above a small-size
+/// threshold, and to cyclic Jacobi below it (simpler, and the reference the
+/// QL path is property-tested against).
+pub fn sym_eig(a: &Mat) -> SymEig {
+    if a.rows() > 24 {
+        sym_eig_ql(a)
+    } else {
+        sym_eig_jacobi(a)
+    }
+}
+
+/// Householder tridiagonalisation + implicit-shift QL with eigenvector
+/// accumulation (Numerical Recipes `tred2`/`tqli`).
+pub fn sym_eig_ql(a: &Mat) -> SymEig {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "sym_eig of non-square");
+    let mut z = a.clone();
+    z.symmetrize();
+    let mut d = vec![0.0f64; n]; // diagonal
+    let mut e = vec![0.0f64; n]; // off-diagonal
+
+    // --- tred2: reduce to tridiagonal, accumulating transforms in z ---
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let scale: f64 = (0..=l).map(|k| z[(i, k)].abs()).sum();
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let upd = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= upd;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            // accumulate transform
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let upd = g * z[(k, i)];
+                    z[(k, j)] -= upd;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+
+    // --- tqli: implicit-shift QL on (d, e) with vector accumulation in z ---
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find a small off-diagonal to split
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tqli failed to converge at index {l}");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvectors
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort descending (columns of z follow d).
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let vectors = z.take_cols(&idx);
+    SymEig { values, vectors }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+pub fn sym_eig_jacobi(a: &Mat) -> SymEig {
+    let n = a.rows();
+    assert_eq!(a.rows(), a.cols(), "sym_eig of non-square");
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        let scale = m.max_abs().max(1e-300);
+        if off.sqrt() <= 1e-15 * scale * n as f64 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Rotation angle (Golub & Van Loan 8.4).
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ): rows/cols p,q of m.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Extract, sort descending.
+    let mut idx: Vec<usize> = (0..n).collect();
+    let vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| vals[i]).collect();
+    let vectors = v.take_cols(&idx);
+    SymEig { values, vectors }
+}
+
+/// Generalised symmetric-definite eigenproblem `A w = λ B w` with `B` SPD.
+///
+/// Reduced via `B = L Lᵀ` to the ordinary symmetric problem
+/// `(L⁻¹ A L⁻ᵀ) y = λ y`, then back-transformed `w = L⁻ᵀ y`. The returned
+/// vectors satisfy `wᵀ B w = 1` (the paper's `Wᵀ S_w W = I` scaling).
+pub fn gen_sym_eig(a: &Mat, b: &Mat) -> Result<SymEig> {
+    let ch = Cholesky::factor(b)?;
+    // C = L⁻¹ A L⁻ᵀ  computed as  L⁻¹ (L⁻¹ Aᵀ)ᵀ  (A symmetric).
+    let la = ch.solve_l_mat(a); // L⁻¹ A
+    let c = ch.solve_l_mat(&la.t()); // L⁻¹ Aᵀ L⁻ᵀ... careful: (L⁻¹A)ᵀ = AᵀL⁻ᵀ = A L⁻ᵀ; L⁻¹(A L⁻ᵀ) ✓
+    let mut c = c;
+    c.symmetrize();
+    let eig = sym_eig(&c);
+    let vectors = ch.solve_lt_mat(&eig.vectors); // w = L⁻ᵀ y
+    Ok(SymEig { values: eig.values, vectors })
+}
+
+/// Check `V` columns are B-orthonormal: `VᵀBV = I` (test helper).
+pub fn b_orthonormality_error(v: &Mat, b: &Mat) -> f64 {
+    let vt_b_v = matmul(&v.t(), &matmul(b, v));
+    vt_b_v.max_abs_diff(&Mat::eye(v.cols()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::syrk_t;
+    use crate::util::rng::Rng;
+
+    fn random_sym(rng: &mut Rng, n: usize) -> Mat {
+        let mut a = Mat::from_fn(n, n, |_, _| rng.gauss());
+        a.symmetrize();
+        a
+    }
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::from_fn(n + 2, n, |_, _| rng.gauss());
+        let mut g = syrk_t(&a);
+        for i in 0..n {
+            g[(i, i)] += 0.3;
+        }
+        g
+    }
+
+    #[test]
+    fn diagonal_matrix_eigs() {
+        let e = sym_eig(&Mat::diag(&[3.0, -1.0, 2.0]));
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 2.0).abs() < 1e-12);
+        assert!((e.values[2] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 3, 10, 40] {
+            let a = random_sym(&mut rng, n);
+            let e = sym_eig(&a);
+            // V diag(λ) Vᵀ == A
+            let vl = Mat::from_fn(n, n, |i, j| e.vectors[(i, j)] * e.values[j]);
+            let rec = matmul(&vl, &e.vectors.t());
+            assert!(rec.max_abs_diff(&a) < 1e-9 * a.max_abs().max(1.0), "n={n}");
+            // VᵀV == I
+            let vtv = matmul(&e.vectors.t(), &e.vectors);
+            assert!(vtv.max_abs_diff(&Mat::eye(n)) < 1e-10, "n={n}");
+            // sorted descending
+            assert!(e.values.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+        }
+    }
+
+    #[test]
+    fn trace_and_det_invariants() {
+        let mut rng = Rng::new(2);
+        let a = random_sym(&mut rng, 12);
+        let e = sym_eig(&a);
+        let tr: f64 = e.values.iter().sum();
+        assert!((tr - a.trace()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generalized_eig_satisfies_pencil() {
+        let mut rng = Rng::new(3);
+        for n in [2, 5, 12] {
+            let a = random_sym(&mut rng, n);
+            let b = random_spd(&mut rng, n);
+            let e = gen_sym_eig(&a, &b).unwrap();
+            // A w = λ B w columnwise
+            let aw = matmul(&a, &e.vectors);
+            let bw = matmul(&b, &e.vectors);
+            for j in 0..n {
+                for i in 0..n {
+                    assert!(
+                        (aw[(i, j)] - e.values[j] * bw[(i, j)]).abs() < 1e-8 * (1.0 + a.max_abs()),
+                        "n={n} ({i},{j})"
+                    );
+                }
+            }
+            // B-orthonormal
+            assert!(b_orthonormality_error(&e.vectors, &b) < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ql_matches_jacobi_and_reconstructs() {
+        let mut rng = Rng::new(7);
+        for n in [2, 5, 25, 60, 130] {
+            let a = random_sym(&mut rng, n);
+            let ql = sym_eig_ql(&a);
+            let jac = sym_eig_jacobi(&a);
+            // same spectrum
+            for (x, y) in ql.values.iter().zip(&jac.values) {
+                assert!((x - y).abs() < 1e-8 * a.max_abs().max(1.0), "n={n}: {x} vs {y}");
+            }
+            // reconstruction + orthogonality of the QL vectors
+            let vl = Mat::from_fn(n, n, |i, j| ql.vectors[(i, j)] * ql.values[j]);
+            let rec = matmul(&vl, &ql.vectors.t());
+            assert!(rec.max_abs_diff(&a) < 1e-8 * a.max_abs().max(1.0), "n={n}");
+            let vtv = matmul(&ql.vectors.t(), &ql.vectors);
+            assert!(vtv.max_abs_diff(&Mat::eye(n)) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ql_handles_degenerate_spectra() {
+        // repeated eigenvalues and zero matrix
+        let e = sym_eig_ql(&Mat::zeros(30, 30));
+        assert!(e.values.iter().all(|&v| v.abs() < 1e-12));
+        let e = sym_eig_ql(&Mat::eye(40));
+        assert!(e.values.iter().all(|&v| (v - 1.0).abs() < 1e-12));
+        let vtv = matmul(&e.vectors.t(), &e.vectors);
+        assert!(vtv.max_abs_diff(&Mat::eye(40)) < 1e-10);
+    }
+
+    #[test]
+    fn rank_one_pencil_matches_lemma1() {
+        // Lemma 1: S_b = c Δ Δᵀ gives a single non-zero eigenvalue
+        // c ΔᵀS_w⁻¹Δ with eigenvector ∝ S_w⁻¹Δ.
+        let mut rng = Rng::new(4);
+        let p = 8;
+        let sw = random_spd(&mut rng, p);
+        let delta: Vec<f64> = (0..p).map(|_| rng.gauss()).collect();
+        let c = 1.7;
+        let mut sb = Mat::zeros(p, p);
+        crate::linalg::gemm::ger(&mut sb, c, &delta, &delta);
+        let e = gen_sym_eig(&sb, &sw).unwrap();
+        let w_expect = Cholesky::factor(&sw).unwrap().solve_vec(&delta);
+        let lam_expect = c * crate::linalg::gemm::dot(&delta, &w_expect);
+        assert!((e.values[0] - lam_expect).abs() < 1e-8 * lam_expect.abs());
+        for &v in &e.values[1..] {
+            assert!(v.abs() < 1e-8, "other eigenvalues ~0, got {v}");
+        }
+        // leading eigenvector parallel to S_w⁻¹Δ
+        let lead = e.vectors.col(0);
+        let cos = crate::linalg::gemm::dot(&lead, &w_expect)
+            / (crate::linalg::gemm::dot(&lead, &lead).sqrt()
+                * crate::linalg::gemm::dot(&w_expect, &w_expect).sqrt());
+        assert!((cos.abs() - 1.0).abs() < 1e-8, "cos={cos}");
+    }
+}

@@ -1,0 +1,351 @@
+//! BLAS-3-style kernels: blocked matrix multiply, symmetric rank-k update,
+//! matrix–vector products.
+//!
+//! The standard-approach baseline spends its time in `S_w` formation (syrk)
+//! and solves, and the analytical approach in the one-off hat-matrix build;
+//! both paths run through these kernels, so they are written with cache
+//! blocking + a small register-tiled micro-kernel rather than naive triple
+//! loops. See EXPERIMENTS.md §Perf for measured GFLOP/s.
+
+use super::mat::Mat;
+
+/// Cache-block sizes (f64): MC×KC panel of A (~256 KB, L2-resident),
+/// KC×NR slivers of B streamed from L1.
+const MC: usize = 128;
+const KC: usize = 256;
+const NR: usize = 8;
+const MR: usize = 4;
+
+/// `C = A · B`.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm_acc(&mut c, a, b, 1.0, 0.0);
+    c
+}
+
+/// `C = alpha · A·B + beta · C` (general update; C must be preallocated).
+pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
+    let (m, ka) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(ka, kb, "gemm inner-dim mismatch: {ka} vs {kb}");
+    assert_eq!(c.shape(), (m, n), "gemm output shape mismatch");
+    if beta != 1.0 {
+        if beta == 0.0 {
+            c.as_mut_slice().fill(0.0);
+        } else {
+            c.scale(beta);
+        }
+    }
+    if m == 0 || n == 0 || ka == 0 || alpha == 0.0 {
+        return;
+    }
+
+    // Packed panels reused across the j-loop.
+    let mut a_pack = vec![0.0f64; MC * KC];
+    let mut b_pack = vec![0.0f64; KC * n.next_multiple_of(NR).min(n + NR)];
+
+    for k0 in (0..ka).step_by(KC) {
+        let kc = KC.min(ka - k0);
+        // Pack B panel: KC×n, laid out as NR-wide column slivers.
+        pack_b(b, k0, kc, &mut b_pack);
+        for i0 in (0..m).step_by(MC) {
+            let mc = MC.min(m - i0);
+            // Pack A block: mc×kc as MR-tall row slivers.
+            pack_a(a, i0, mc, k0, kc, &mut a_pack);
+            macro_kernel(c, &a_pack, &b_pack, i0, mc, kc, n, alpha);
+        }
+    }
+}
+
+fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, pack: &mut [f64]) {
+    // layout: for each MR-sliver s, kc columns of MR values
+    let mut idx = 0;
+    let mut i = 0;
+    while i < mc {
+        let mr = MR.min(mc - i);
+        for k in 0..kc {
+            for r in 0..MR {
+                pack[idx] = if r < mr { a[(i0 + i + r, k0 + k)] } else { 0.0 };
+                idx += 1;
+            }
+        }
+        i += MR;
+    }
+}
+
+fn pack_b(b: &Mat, k0: usize, kc: usize, pack: &mut [f64]) {
+    let n = b.cols();
+    let mut idx = 0;
+    let mut j = 0;
+    while j < n {
+        let nr = NR.min(n - j);
+        for k in 0..kc {
+            let row = b.row(k0 + k);
+            for r in 0..NR {
+                pack[idx] = if r < nr { row[j + r] } else { 0.0 };
+                idx += 1;
+            }
+        }
+        j += NR;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(c: &mut Mat, a_pack: &[f64], b_pack: &[f64], i0: usize, mc: usize, kc: usize, n: usize, alpha: f64) {
+    let mut j = 0;
+    let mut jb = 0; // sliver index into b_pack
+    while j < n {
+        let nr = NR.min(n - j);
+        let b_sl = &b_pack[jb * kc * NR..(jb + 1) * kc * NR];
+        let mut i = 0;
+        let mut ib = 0;
+        while i < mc {
+            let mr = MR.min(mc - i);
+            let a_sl = &a_pack[ib * kc * MR..(ib + 1) * kc * MR];
+            micro_kernel(c, a_sl, b_sl, i0 + i, j, mr, nr, kc, alpha);
+            i += MR;
+            ib += 1;
+        }
+        j += NR;
+        jb += 1;
+    }
+}
+
+/// MR×NR register-tiled micro-kernel: C[i..i+mr, j..j+nr] += alpha·A·B.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(c: &mut Mat, a_sl: &[f64], b_sl: &[f64], ci: usize, cj: usize, mr: usize, nr: usize, kc: usize, alpha: f64) {
+    let mut acc = [[0.0f64; NR]; MR];
+    let mut ap = 0;
+    let mut bp = 0;
+    for _ in 0..kc {
+        let a0 = a_sl[ap];
+        let a1 = a_sl[ap + 1];
+        let a2 = a_sl[ap + 2];
+        let a3 = a_sl[ap + 3];
+        let bv: &[f64] = &b_sl[bp..bp + NR];
+        for r in 0..NR {
+            let b = bv[r];
+            acc[0][r] += a0 * b;
+            acc[1][r] += a1 * b;
+            acc[2][r] += a2 * b;
+            acc[3][r] += a3 * b;
+        }
+        ap += MR;
+        bp += NR;
+    }
+    for r in 0..mr {
+        let crow = c.row_mut(ci + r);
+        for s in 0..nr {
+            crow[cj + s] += alpha * acc[r][s];
+        }
+    }
+}
+
+/// `AᵀA` symmetric rank-k update (forms the scatter/gram matrix). Only the
+/// upper triangle is computed then mirrored.
+pub fn syrk_t(a: &Mat) -> Mat {
+    let (n, p) = a.shape();
+    let mut g = Mat::zeros(p, p);
+    // Process in row panels of A to keep accumulation cache-friendly.
+    const PANEL: usize = 64;
+    for i0 in (0..n).step_by(PANEL) {
+        let i1 = (i0 + PANEL).min(n);
+        for i in i0..i1 {
+            let row = a.row(i);
+            for j in 0..p {
+                let aij = row[j];
+                if aij == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(j);
+                // upper triangle only
+                for (k, &aik) in row.iter().enumerate().skip(j) {
+                    grow[k] += aij * aik;
+                }
+            }
+        }
+    }
+    // mirror
+    for j in 0..p {
+        for k in (j + 1)..p {
+            g[(k, j)] = g[(j, k)];
+        }
+    }
+    g
+}
+
+/// `y = A·x`.
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// `y = Aᵀ·x`.
+pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        for (j, &aij) in a.row(i).iter().enumerate() {
+            y[j] += aij * xi;
+        }
+    }
+    y
+}
+
+/// Dot product with 4-way unrolling.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Outer-product accumulate: `M += alpha · u vᵀ`.
+pub fn ger(m: &mut Mat, alpha: f64, u: &[f64], v: &[f64]) {
+    assert_eq!(m.rows(), u.len());
+    assert_eq!(m.cols(), v.len());
+    for i in 0..u.len() {
+        let au = alpha * u[i];
+        if au == 0.0 {
+            continue;
+        }
+        let row = m.row_mut(i);
+        for (j, &vj) in v.iter().enumerate() {
+            row[j] += au * vj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for k in 0..a.cols() {
+                let aik = a[(i, k)];
+                for j in 0..b.cols() {
+                    c[(i, j)] += aik * b[(k, j)];
+                }
+            }
+        }
+        c
+    }
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.gauss())
+    }
+
+    #[test]
+    fn matmul_matches_naive_awkward_shapes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (4, 8, 8), (17, 33, 9), (65, 129, 31), (130, 7, 257)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let c = matmul(&a, &b);
+            let r = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&r) < 1e-10, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_acc_alpha_beta() {
+        let mut rng = Rng::new(2);
+        let a = random_mat(&mut rng, 13, 7);
+        let b = random_mat(&mut rng, 7, 11);
+        let c0 = random_mat(&mut rng, 13, 11);
+        let mut c = c0.clone();
+        gemm_acc(&mut c, &a, &b, 2.0, 0.5);
+        let mut expect = naive_matmul(&a, &b);
+        expect.scale(2.0);
+        let mut half = c0.clone();
+        half.scale(0.5);
+        expect.axpy(1.0, &half);
+        assert!(c.max_abs_diff(&expect) < 1e-10);
+    }
+
+    #[test]
+    fn empty_dims_ok() {
+        let a = Mat::zeros(0, 3);
+        let b = Mat::zeros(3, 2);
+        assert_eq!(matmul(&a, &b).shape(), (0, 2));
+        let a = Mat::zeros(2, 0);
+        let b = Mat::zeros(0, 2);
+        assert_eq!(matmul(&a, &b).as_slice(), &[0.0; 4]);
+    }
+
+    #[test]
+    fn syrk_matches_matmul() {
+        let mut rng = Rng::new(3);
+        for &(n, p) in &[(10, 4), (5, 17), (33, 33), (64, 20)] {
+            let a = random_mat(&mut rng, n, p);
+            let g = syrk_t(&a);
+            let r = matmul(&a.t(), &a);
+            assert!(g.max_abs_diff(&r) < 1e-10, "({n},{p})");
+            // symmetry exact
+            for i in 0..p {
+                for j in 0..p {
+                    assert_eq!(g[(i, j)], g[(j, i)]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_both_ways() {
+        let mut rng = Rng::new(4);
+        let a = random_mat(&mut rng, 9, 6);
+        let x: Vec<f64> = (0..6).map(|_| rng.gauss()).collect();
+        let y = matvec(&a, &x);
+        let yy = matmul(&a, &Mat::col_vec(&x));
+        for i in 0..9 {
+            assert!((y[i] - yy[(i, 0)]).abs() < 1e-12);
+        }
+        let z: Vec<f64> = (0..9).map(|_| rng.gauss()).collect();
+        let w = matvec_t(&a, &z);
+        let ww = matmul(&a.t(), &Mat::col_vec(&z));
+        for j in 0..6 {
+            assert!((w[j] - ww[(j, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ger_accumulates() {
+        let mut m = Mat::zeros(3, 2);
+        ger(&mut m, 2.0, &[1.0, 0.0, -1.0], &[3.0, 4.0]);
+        assert_eq!(m.row(0), &[6.0, 8.0]);
+        assert_eq!(m.row(1), &[0.0, 0.0]);
+        assert_eq!(m.row(2), &[-6.0, -8.0]);
+    }
+
+    #[test]
+    fn dot_unrolled_matches() {
+        let mut rng = Rng::new(5);
+        for len in [0, 1, 3, 4, 7, 64, 101] {
+            let a: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+            let s: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - s).abs() < 1e-10);
+        }
+    }
+}

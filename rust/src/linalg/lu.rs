@@ -1,0 +1,226 @@
+//! LU factorisation with partial pivoting.
+//!
+//! General-purpose solver used where symmetry/definiteness is not
+//! guaranteed: the per-fold `(I − H_Te)` systems of Eq. 14 are symmetric but
+//! can be indefinite-looking numerically when λ=0 and folds are large, so the
+//! analytic path solves them with LU.
+
+use super::mat::Mat;
+use anyhow::{bail, Result};
+
+/// Packed LU decomposition `P·A = L·U` with partial pivoting.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    lu: Mat,
+    piv: Vec<usize>,
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor a square matrix; fails on exact singularity.
+    pub fn factor(a: &Mat) -> Result<Lu> {
+        let n = a.rows();
+        assert_eq!(a.rows(), a.cols(), "LU of non-square");
+        let mut lu = a.clone();
+        let mut piv: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        // Relative singularity floor (see Cholesky::factor): numerically
+        // rank-deficient systems must fail loudly, not produce garbage.
+        let floor = 1e-13 * a.max_abs();
+        for k in 0..n {
+            // pivot search
+            let mut pmax = lu[(k, k)].abs();
+            let mut prow = k;
+            for i in (k + 1)..n {
+                let v = lu[(i, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    prow = i;
+                }
+            }
+            if pmax <= floor || !pmax.is_finite() {
+                bail!("singular matrix at pivot {k} (|pivot|={pmax})");
+            }
+            if prow != k {
+                piv.swap(k, prow);
+                sign = -sign;
+                // swap rows in-place
+                for j in 0..n {
+                    let t = lu[(k, j)];
+                    lu[(k, j)] = lu[(prow, j)];
+                    lu[(prow, j)] = t;
+                }
+            }
+            let pivot = lu[(k, k)];
+            for i in (k + 1)..n {
+                let m = lu[(i, k)] / pivot;
+                lu[(i, k)] = m;
+                if m == 0.0 {
+                    continue;
+                }
+                // row update: lu[i, k+1..] -= m * lu[k, k+1..]
+                let (top, bottom) = lu.as_mut_slice().split_at_mut(i * n);
+                let krow = &top[k * n..(k + 1) * n];
+                let irow = &mut bottom[..n];
+                for j in (k + 1)..n {
+                    irow[j] -= m * krow[j];
+                }
+            }
+        }
+        Ok(Lu { lu, piv, sign })
+    }
+
+    /// Dimension.
+    pub fn n(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut y: Vec<f64> = self.piv.iter().map(|&i| b[i]).collect();
+        // forward L (unit diagonal)
+        for i in 1..n {
+            let mut s = y[i];
+            let row = self.lu.row(i);
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s;
+        }
+        // backward U
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            let row = self.lu.row(i);
+            for k in (i + 1)..n {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Solve `A X = B` (matrix RHS).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(b.rows(), n);
+        let nrhs = b.cols();
+        let mut x = Mat::zeros(n, nrhs);
+        for (i, &pi) in self.piv.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(b.row(pi));
+        }
+        // forward
+        for i in 1..n {
+            for k in 0..i {
+                let lik = self.lu[(i, k)];
+                if lik == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.as_mut_slice().split_at_mut(i * nrhs);
+                let xk = &head[k * nrhs..(k + 1) * nrhs];
+                let xi = &mut tail[..nrhs];
+                for c in 0..nrhs {
+                    xi[c] -= lik * xk[c];
+                }
+            }
+        }
+        // backward
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                let uik = self.lu[(i, k)];
+                if uik == 0.0 {
+                    continue;
+                }
+                let (head, tail) = x.as_mut_slice().split_at_mut(k * nrhs);
+                let xi = &mut head[i * nrhs..(i + 1) * nrhs];
+                let xk = &tail[..nrhs];
+                for c in 0..nrhs {
+                    xi[c] -= uik * xk[c];
+                }
+            }
+            let d = self.lu[(i, i)];
+            for v in x.row_mut(i) {
+                *v /= d;
+            }
+        }
+        x
+    }
+
+    /// Explicit inverse.
+    pub fn inverse(&self) -> Mat {
+        self.solve_mat(&Mat::eye(self.n()))
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        self.sign * (0..self.n()).map(|i| self.lu[(i, i)]).product::<f64>()
+    }
+}
+
+/// Convenience: solve `A x = b` in one call.
+pub fn solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    Ok(Lu::factor(a)?.solve_vec(b))
+}
+
+/// Convenience: solve `A X = B` in one call.
+pub fn solve_mat(a: &Mat, b: &Mat) -> Result<Mat> {
+    Ok(Lu::factor(a)?.solve_mat(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_random_systems() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 3, 8, 25, 64] {
+            let a = Mat::from_fn(n, n, |_, _| rng.gauss());
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let b = crate::linalg::gemm::matvec(&a, &xtrue);
+            let x = solve(&a, &b).unwrap();
+            for i in 0..n {
+                assert!((x[i] - xtrue[i]).abs() < 1e-7, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_rhs_and_inverse() {
+        let mut rng = Rng::new(2);
+        let n = 20;
+        let a = Mat::from_fn(n, n, |_, _| rng.gauss());
+        let lu = Lu::factor(&a).unwrap();
+        let b = Mat::from_fn(n, 4, |_, _| rng.gauss());
+        let x = lu.solve_mat(&b);
+        assert!(matmul(&a, &x).max_abs_diff(&b) < 1e-8);
+        let inv = lu.inverse();
+        assert!(matmul(&a, &inv).max_abs_diff(&Mat::eye(n)) < 1e-8);
+    }
+
+    #[test]
+    fn det_known_values() {
+        let a = Mat::from_rows(&[&[2.0, 0.0], &[0.0, 3.0]]);
+        assert!((Lu::factor(&a).unwrap().det() - 6.0).abs() < 1e-12);
+        let b = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]); // det -1, needs pivot
+        assert!((Lu::factor(&b).unwrap().det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::factor(&a).is_err());
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Mat::from_rows(&[&[0.0, 2.0], &[3.0, 1.0]]);
+        let x = solve(&a, &[4.0, 5.0]).unwrap();
+        // 2y=4 => y=2 ; 3x+y=5 => x=1
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,425 @@
+//! Dense row-major matrix type.
+//!
+//! The workhorse container for the whole library. Storage is a flat
+//! `Vec<f64>` in row-major order; views are expressed through explicit
+//! index-set gathers (the CV code slices train/test rows constantly, and the
+//! gather form keeps those copies contiguous for the blocked kernels).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense row-major `rows × cols` matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Matrix wrapping an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Matrix from nested row slices (tests/readability).
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Mat {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &x) in d.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    /// Column vector (n×1) from a slice.
+    pub fn col_vec(v: &[f64]) -> Mat {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable flat row-major data.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the flat buffer.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy column `j` out.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Set column `j` from a slice.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// Transposed copy.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Gather rows by index set into a new contiguous matrix.
+    pub fn take_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (k, &i) in idx.iter().enumerate() {
+            out.row_mut(k).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Gather columns by index set into a new contiguous matrix.
+    pub fn take_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (k, &j) in idx.iter().enumerate() {
+                dst[k] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Submatrix `self[ridx, cidx]` (gather on both axes).
+    pub fn take(&self, ridx: &[usize], cidx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(ridx.len(), cidx.len());
+        for (k, &i) in ridx.iter().enumerate() {
+            let src = self.row(i);
+            let dst = out.row_mut(k);
+            for (l, &j) in cidx.iter().enumerate() {
+                dst[l] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Horizontal concatenation `[self, other]`.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "hcat row mismatch");
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Augment with a column of ones (the paper's `X̃ = [X, 1]`).
+    pub fn augment_ones(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols + 1);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out[(i, self.cols)] = 1.0;
+        }
+        out
+    }
+
+    /// Element-wise map into a new matrix.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// In-place scaled add: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place scalar multiply.
+    pub fn scale(&mut self, alpha: f64) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// `self - other` as a new matrix.
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// `self + other` as a new matrix.
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max absolute element.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// Trace (square only).
+    pub fn trace(&self) -> f64 {
+        assert_eq!(self.rows, self.cols, "trace of non-square");
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Mean of each column.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut m = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (j, x) in self.row(i).iter().enumerate() {
+                m[j] += x;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        for x in m.iter_mut() {
+            *x /= n;
+        }
+        m
+    }
+
+    /// Largest |a-b| between two matrices.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Symmetrize in place: `self = (self + selfᵀ)/2` (square only).
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols, "index ({i},{j}) out of {}x{}", self.rows, self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(8);
+        for i in 0..show_r {
+            write!(f, "  [")?;
+            let show_c = self.cols.min(8);
+            for j in 0..show_c {
+                write!(f, "{:>10.4}", self[(i, j)])?;
+                if j + 1 < show_c {
+                    write!(f, ", ")?;
+                }
+            }
+            if self.cols > 8 {
+                write!(f, ", …")?;
+            }
+            writeln!(f, "]")?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(m[(0, 1)], 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.col(0), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_blocked_matches_naive() {
+        let m = Mat::from_fn(67, 41, |i, j| (i * 41 + j) as f64);
+        let t = m.t();
+        for i in 0..67 {
+            for j in 0..41 {
+                assert_eq!(t[(j, i)], m[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn gathers() {
+        let m = Mat::from_fn(5, 4, |i, j| (10 * i + j) as f64);
+        let r = m.take_rows(&[4, 0]);
+        assert_eq!(r.row(0), &[40.0, 41.0, 42.0, 43.0]);
+        assert_eq!(r.row(1), &[0.0, 1.0, 2.0, 3.0]);
+        let c = m.take_cols(&[3, 1]);
+        assert_eq!(c.row(2), &[23.0, 21.0]);
+        let s = m.take(&[1, 2], &[0, 3]);
+        assert_eq!(s.row(0), &[10.0, 13.0]);
+        assert_eq!(s.row(1), &[20.0, 23.0]);
+    }
+
+    #[test]
+    fn augment_and_hcat() {
+        let m = Mat::from_rows(&[&[1.0], &[2.0]]);
+        let a = m.augment_ones();
+        assert_eq!(a.row(0), &[1.0, 1.0]);
+        assert_eq!(a.row(1), &[2.0, 1.0]);
+        let h = m.hcat(&a);
+        assert_eq!(h.shape(), (2, 3));
+        assert_eq!(h.row(1), &[2.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn arithmetic_helpers() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::eye(2);
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        assert_eq!(c[(0, 0)], 3.0);
+        assert_eq!(c[(0, 1)], 2.0);
+        assert_eq!(a.sub(&a).fro_norm(), 0.0);
+        assert_eq!(a.add(&a)[(1, 1)], 8.0);
+        assert_eq!(a.trace(), 5.0);
+        assert_eq!(a.max_abs(), 4.0);
+        assert_eq!(Mat::diag(&[1.0, 2.0])[(1, 1)], 2.0);
+    }
+
+    #[test]
+    fn col_means_and_symmetrize() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 6.0]]);
+        assert_eq!(m.col_means(), vec![2.0, 4.0]);
+        let mut s = Mat::from_rows(&[&[1.0, 4.0], &[0.0, 1.0]]);
+        s.symmetrize();
+        assert_eq!(s[(0, 1)], 2.0);
+        assert_eq!(s[(1, 0)], 2.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_checked() {
+        Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,20 @@
+//! Dense linear algebra substrate (built from scratch; no BLAS/LAPACK in the
+//! offline environment).
+//!
+//! - [`mat::Mat`] — row-major dense matrix with gather-based slicing
+//! - [`gemm`] — blocked matmul / syrk / matvec kernels
+//! - [`chol`] — Cholesky factor/solve for SPD scatter matrices
+//! - [`lu`] — partially pivoted LU for general systems
+//! - [`eig`] — Jacobi symmetric + generalised symmetric-definite eig
+
+pub mod chol;
+pub mod eig;
+pub mod gemm;
+pub mod lu;
+pub mod mat;
+
+pub use chol::Cholesky;
+pub use eig::{gen_sym_eig, sym_eig, SymEig};
+pub use gemm::{dot, gemm_acc, ger, matmul, matvec, matvec_t, syrk_t};
+pub use lu::{solve, solve_mat, Lu};
+pub use mat::Mat;

@@ -1,0 +1,345 @@
+//! `fastcv` — leader binary / CLI for the analytic-CV reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artefacts:
+//!
+//! ```text
+//! fastcv sweep --exp f3a|f3b|f3c|f3d [--scale tiny|medium|paper] [--out results/]
+//! fastcv parity                      # §4.1 N=P crossover check
+//! fastcv complexity                  # Table 1 empirical scaling fits
+//! fastcv eeg [--subjects 16] [--perms 100] [--full]   # Fig. 4
+//! fastcv quickstart                  # end-to-end smoke run
+//! fastcv artifacts                   # list AOT artifacts + PJRT platform
+//! ```
+//!
+//! Every command prints paper-style tables and (with `--out DIR`) writes
+//! raw TSVs for EXPERIMENTS.md.
+
+use anyhow::Result;
+use fastcv::coordinator::report::AnovaFactor;
+use fastcv::coordinator::sweep::{grid, Experiment, SweepScale};
+use fastcv::coordinator::{Scheduler, SweepReport};
+use fastcv::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["verbose", "full", "help"]);
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("sweep") => cmd_sweep(args),
+        Some("parity") => cmd_parity(args),
+        Some("complexity") => cmd_complexity(args),
+        Some("eeg") => cmd_eeg(args),
+        Some("quickstart") => cmd_quickstart(args),
+        Some("artifacts") => cmd_artifacts(args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fastcv — analytical cross-validation for least-squares models & multi-class LDA\n\
+         (reproduction of Treder 2018)\n\n\
+         USAGE: fastcv <command> [options]\n\n\
+         COMMANDS\n\
+           sweep --exp f3a|f3b|f3c|f3d   Fig. 3 relative-efficiency sweeps\n\
+                 [--scale tiny|medium|paper] [--seed N] [--workers N] [--out DIR]\n\
+           parity                        §4.1 N≈P crossover table\n\
+           complexity                    Table 1 empirical scaling exponents\n\
+           eeg [--subjects N] [--perms N] [--full]   Fig. 4 EEG/MEG permutation study\n\
+           quickstart                    30-second end-to-end demo\n\
+           artifacts                     list AOT artifacts and PJRT platform"
+    );
+}
+
+fn scale_from(args: &Args) -> SweepScale {
+    match args.get_or("scale", "medium").as_str() {
+        "tiny" => SweepScale::tiny(),
+        "paper" => SweepScale::paper(),
+        _ => SweepScale::medium(),
+    }
+}
+
+fn maybe_write(args: &Args, name: &str, content: &str) -> Result<()> {
+    if let Some(dir) = args.get("out") {
+        std::fs::create_dir_all(dir)?;
+        let path = std::path::Path::new(dir).join(name);
+        std::fs::write(&path, content)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let tag = args.get_or("exp", "f3a");
+    let exp = Experiment::from_tag(&tag)
+        .ok_or_else(|| anyhow::anyhow!("unknown experiment {tag:?} (f3a..f3d)"))?;
+    let scale = scale_from(args);
+    let seed: u64 = args.get_parse_or("seed", 2018);
+    let workers: usize = args.get_parse_or("workers", 0);
+    let points = grid(exp, &scale);
+    eprintln!("{}: {} points", exp.name(), points.len());
+    let sched = Scheduler::new(workers, seed, args.flag("verbose"));
+    let results = sched.run(&points);
+    let report = SweepReport::new(results);
+    println!("{}", report.render(exp.name()));
+    let factor = match exp {
+        Experiment::BinaryCv => AnovaFactor::Folds,
+        Experiment::BinaryPerm | Experiment::MultiPerm => AnovaFactor::Permutations,
+        Experiment::MultiCv => AnovaFactor::Classes,
+    };
+    if let Some(tab) = report.anova_rel_eff(factor) {
+        println!("{}", SweepReport::render_anova(&tab, &format!("{} — ANOVA on rel.eff", exp.name())));
+    }
+    maybe_write(args, &format!("sweep_{tag}.tsv"), &report.to_tsv())?;
+    Ok(())
+}
+
+/// §4.1: "is it just a trade-off?" — N = P configurations.
+fn cmd_parity(args: &Args) -> Result<()> {
+    use fastcv::coordinator::sweep::{run_point, SweepPoint};
+    let n: usize = args.get_parse_or("n", 300);
+    let seed: u64 = args.get_parse_or("seed", 2018);
+    let mut results = Vec::new();
+    for (exp, k, c) in [
+        (Experiment::BinaryCv, 10usize, 2usize),
+        (Experiment::BinaryCv, usize::MAX, 2),
+        (Experiment::MultiCv, 10, 5),
+    ] {
+        let point = SweepPoint { exp, n, p: n, k, c, n_perm: 0, rep: 0, lambda: 1.0 };
+        results.push(run_point(&point, seed)?);
+    }
+    let report = SweepReport::new(results);
+    println!("{}", report.render(&format!("§4.1 parity check at N = P = {n}")));
+    println!(
+        "paper's claim: 10-fold ≈ 1 order of magnitude, LOO ≈ 2, multi-class ≈ 3 \
+         (crossover when N/K ≈ P)."
+    );
+    maybe_write(args, "parity.tsv", &report.to_tsv())?;
+    Ok(())
+}
+
+/// Table 1: fit empirical scaling exponents of the two approaches.
+fn cmd_complexity(args: &Args) -> Result<()> {
+    use fastcv::util::table::{fnum, Table};
+    let seed: u64 = args.get_parse_or("seed", 2018);
+    let quick = !args.flag("full");
+
+    // time vs P at fixed N (standard should go ~P^3, analytic ~flat-ish)
+    let ps: Vec<usize> = if quick { vec![40, 80, 160, 320] } else { vec![50, 100, 200, 400, 800] };
+    let n = if quick { 60 } else { 100 };
+    let mut rows_p = Vec::new();
+    for &p in &ps {
+        let point = fastcv::coordinator::sweep::SweepPoint {
+            exp: Experiment::BinaryCv,
+            n,
+            p,
+            k: 10.min(n),
+            c: 2,
+            n_perm: 0,
+            rep: 0,
+            lambda: 1.0,
+        };
+        let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
+        rows_p.push((p as f64, r.t_std, r.t_ana));
+    }
+    // time vs N at fixed P (analytic should go ~N^3 across folds ≈ N^3/K²·K)
+    let ns: Vec<usize> = if quick { vec![40, 80, 160, 320] } else { vec![100, 200, 400, 800] };
+    let p_fix = if quick { 40 } else { 100 };
+    let mut rows_n = Vec::new();
+    for &n in &ns {
+        let point = fastcv::coordinator::sweep::SweepPoint {
+            exp: Experiment::BinaryCv,
+            n,
+            p: p_fix,
+            k: 10,
+            c: 2,
+            n_perm: 0,
+            rep: 0,
+            lambda: 1.0,
+        };
+        let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
+        rows_n.push((n as f64, r.t_std, r.t_ana));
+    }
+
+    let slope = |rows: &[(f64, f64, f64)], idx: usize| -> f64 {
+        // least-squares slope of log t vs log x
+        let pts: Vec<(f64, f64)> = rows
+            .iter()
+            .map(|r| (r.0.ln(), if idx == 1 { r.1.ln() } else { r.2.ln() }))
+            .collect();
+        let mx = pts.iter().map(|p| p.0).sum::<f64>() / pts.len() as f64;
+        let my = pts.iter().map(|p| p.1).sum::<f64>() / pts.len() as f64;
+        let num: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+        let den: f64 = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+        num / den
+    };
+
+    let mut t = Table::new(vec!["scaling", "standard (measured)", "analytic (measured)", "paper (Table 1)"])
+        .with_title("Table 1 — empirical complexity exponents".to_string());
+    t.row(vec![
+        format!("time vs P (N={n})"),
+        format!("P^{}", fnum(slope(&rows_p, 1), 2)),
+        format!("P^{}", fnum(slope(&rows_p, 2), 2)),
+        "std: KNP²+KP³ → ~P²··³ | ana: P enters only via H build".into(),
+    ]);
+    t.row(vec![
+        format!("time vs N (P={p_fix})"),
+        format!("N^{}", fnum(slope(&rows_n, 1), 2)),
+        format!("N^{}", fnum(slope(&rows_n, 2), 2)),
+        "std: ~N | ana: KN³ with N_te=N/K → ~N²··³".into(),
+    ]);
+    println!("{}", t.render());
+    let mut tsv = String::from("axis\tx\tt_std\tt_ana\n");
+    for r in &rows_p {
+        tsv.push_str(&format!("P\t{}\t{:.6e}\t{:.6e}\n", r.0, r.1, r.2));
+    }
+    for r in &rows_n {
+        tsv.push_str(&format!("N\t{}\t{:.6e}\t{:.6e}\n", r.0, r.1, r.2));
+    }
+    maybe_write(args, "complexity.tsv", &tsv)?;
+    Ok(())
+}
+
+/// Fig. 4: per-subject EEG/MEG permutation study on simulated subjects.
+fn cmd_eeg(args: &Args) -> Result<()> {
+    use fastcv::data::eeg::{simulate_subject, EegSpec};
+    use fastcv::util::rng::Rng;
+    let full = args.flag("full");
+    let n_subjects: usize = args.get_parse_or("subjects", if full { 16 } else { 4 });
+    let n_perm: usize = args.get_parse_or("perms", if full { 100 } else { 20 });
+    let seed: u64 = args.get_parse_or("seed", 2018);
+    let spec = if full { EegSpec::default() } else { EegSpec::small() };
+    let lambda: f64 = args.get_parse_or("lambda", 1.0);
+
+    let mut root = Rng::new(seed);
+    let mut report =
+        fastcv::bench::RelEffReport::new(&format!(
+            "Fig. 4 — EEG/MEG permutation study ({n_subjects} simulated subjects, {n_perm} perms, 10-fold)"
+        ));
+    let mut tsv = String::from("subject\tanalysis\tfeatures\tt_std\tt_ana\trel_eff\n");
+    for subj in 0..n_subjects {
+        let mut rng = root.fork(subj as u64 + 1);
+        let subject = simulate_subject(&spec, &mut rng);
+        // Binary, small features: one representative timepoint (N170 peak).
+        let peak = ((0.17 - (-0.5)) * 200.0) as usize;
+        let cases: Vec<(&str, fastcv::data::Dataset)> = vec![
+            ("binary small", subject.features_at_timepoint(peak, true)),
+            ("binary large", subject.features_windowed(100, true)),
+            ("multi small", subject.features_at_timepoint(peak, false)),
+            ("multi large", subject.features_windowed(200, false)),
+        ];
+        for (name, ds) in cases {
+            let folds = fastcv::cv::folds::stratified_kfold(&ds.labels, 10, &mut rng);
+            let mut rng_std = rng.fork(7);
+            let mut rng_ana = rng.fork(7);
+            let (t_std, t_ana) = if ds.n_classes == 2 {
+                let (r1, t1) = fastcv::util::timed(|| {
+                    fastcv::fastcv::perm::standard_binary_permutation(
+                        &ds.x, &ds.labels, &folds,
+                        fastcv::model::Reg::Ridge(lambda), n_perm, &mut rng_std,
+                    )
+                });
+                let (r2, t2) = fastcv::util::timed(|| {
+                    fastcv::fastcv::perm::analytic_binary_permutation(
+                        &ds.x, &ds.labels, &folds, lambda, n_perm, false, &mut rng_ana,
+                    )
+                });
+                r1?;
+                r2?;
+                (t1, t2)
+            } else {
+                let (r1, t1) = fastcv::util::timed(|| {
+                    fastcv::fastcv::perm::standard_multiclass_permutation(
+                        &ds.x, &ds.labels, 3, &folds,
+                        fastcv::model::Reg::Ridge(lambda), n_perm, &mut rng_std,
+                    )
+                });
+                let (r2, t2) = fastcv::util::timed(|| {
+                    fastcv::fastcv::perm::analytic_multiclass_permutation(
+                        &ds.x, &ds.labels, 3, &folds, lambda, n_perm, &mut rng_ana,
+                    )
+                });
+                r1?;
+                r2?;
+                (t1, t2)
+            };
+            report.push(&format!("subj{subj:02} {name} P={}", ds.p()), t_std, t_ana);
+            tsv.push_str(&format!(
+                "{subj}\t{name}\t{}\t{t_std:.6e}\t{t_ana:.6e}\t{:.4}\n",
+                ds.p(),
+                (t_std / t_ana).log10()
+            ));
+            eprintln!("  subj{subj:02} {name}: done");
+        }
+    }
+    println!("{}", report.render());
+    maybe_write(args, "fig4_eeg.tsv", &tsv)?;
+    Ok(())
+}
+
+fn cmd_quickstart(args: &Args) -> Result<()> {
+    use fastcv::data::synthetic::{generate, SyntheticSpec};
+    use fastcv::util::rng::Rng;
+    let seed: u64 = args.get_parse_or("seed", 7);
+    let mut rng = Rng::new(seed);
+    let mut spec = SyntheticSpec::binary(100, 500);
+    spec.separation = 2.0;
+    let ds = generate(&spec, &mut rng);
+    let folds = fastcv::cv::folds::kfold(ds.n(), 10, &mut rng);
+    let y = ds.y_signed();
+
+    let (std_dv, t_std) = fastcv::util::timed(|| {
+        fastcv::cv::runner::standard_binary_cv_dvals(
+            &ds.x,
+            &ds.labels,
+            &folds,
+            fastcv::model::Reg::Ridge(1.0),
+        )
+    });
+    let (ana_dv, t_ana) = fastcv::util::timed(|| -> Result<Vec<f64>> {
+        let cv = fastcv::fastcv::binary::AnalyticBinaryCv::fit(&ds.x, &y, 1.0)?;
+        cv.decision_values(&folds)
+    });
+    let acc_std = fastcv::cv::metrics::accuracy_signed(&std_dv?, &y);
+    let acc_ana = fastcv::cv::metrics::accuracy_signed(&ana_dv?, &y);
+    println!("quickstart: N=100 P=500 K=10 ridge=1.0");
+    println!("  standard approach: {:.3}s  acc={acc_std:.3}", t_std);
+    println!("  analytic approach: {:.3}s  acc={acc_ana:.3}", t_ana);
+    println!("  speedup: {:.1}x (rel.eff {:.2})", t_std / t_ana, (t_std / t_ana).log10());
+    Ok(())
+}
+
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    let rt = fastcv::runtime::XlaRuntime::load_default()?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifact dir:  {}", rt.registry().dir().display());
+    if rt.registry().is_empty() {
+        println!("no artifacts found — run `make artifacts`");
+        return Ok(());
+    }
+    for e in rt.registry().entries() {
+        println!(
+            "  {:22} n={:<5} p={:<5} k={:<3} b={:<3} c={:<2} {}",
+            e.key.op,
+            e.key.n,
+            e.key.p,
+            e.key.k_folds,
+            e.key.batch,
+            e.key.c,
+            e.file.file_name().unwrap().to_string_lossy()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Binary Linear Discriminant Analysis — the classic formulation (§2.2).
+//!
+//! Label convention throughout the crate: `labels[i] ∈ {0, 1}` where label
+//! **0 is the paper's "class 1"** (numeric code **+1**) and label **1 is
+//! "class 2"** (code **−1**). Decision value `ŷ = wᵀx + b`; predict label 0
+//! when `ŷ ≥ 0`.
+
+use super::Reg;
+use crate::linalg::{dot, Cholesky, Mat};
+use crate::stats::{class_counts, class_means, within_scatter};
+use anyhow::{Context, Result};
+
+/// Trained binary LDA classifier.
+#[derive(Clone, Debug)]
+pub struct BinaryLda {
+    /// Weight vector `w = S_w⁻¹ (m₁ − m₂)` (Eq. 3, possibly regularised).
+    pub w: Vec<f64>,
+    /// Bias `b_LDA` centring the projected class means (Eq. 4).
+    pub b: f64,
+}
+
+impl BinaryLda {
+    /// Train on data `x` (N×P) with labels in {0,1} (0 ↔ class "+1").
+    pub fn train(x: &Mat, labels: &[usize], reg: Reg) -> Result<BinaryLda> {
+        assert_eq!(x.rows(), labels.len());
+        let counts = class_counts(labels, 2);
+        assert!(counts[0] > 0 && counts[1] > 0, "both classes must be present");
+        let means = class_means(x, labels, 2);
+        let mut sw = within_scatter(x, labels, 2);
+        reg.apply(&mut sw);
+        let p = x.cols();
+        let diff: Vec<f64> = (0..p).map(|j| means[(0, j)] - means[(1, j)]).collect();
+        // Solve S_w w = (m₁ − m₂); Cholesky when SPD, LU fallback.
+        let w = match Cholesky::factor(&sw) {
+            Ok(ch) => ch.solve_vec(&diff),
+            Err(_) => crate::linalg::solve(&sw, &diff)
+                .context("within-class scatter singular; add ridge regularisation")?,
+        };
+        // b_LDA centres the projected class means: b = −wᵀ(m₁+m₂)/2.
+        // (The paper's Eq. 4 prints (m₁−m₂) but describes "the center between
+        // the projected class means", which is (m₁+m₂)/2 — we implement the
+        // described behaviour; the test `bias_centres_projections` pins it.)
+        let proj1 = dot(&w, means.row(0));
+        let proj2 = dot(&w, means.row(1));
+        let b = -(proj1 + proj2) / 2.0;
+        Ok(BinaryLda { w, b })
+    }
+
+    /// Decision value `wᵀx + b` for one sample.
+    pub fn decision_value(&self, x: &[f64]) -> f64 {
+        dot(&self.w, x) + self.b
+    }
+
+    /// Decision values for all rows of `x`.
+    pub fn decision_values(&self, x: &Mat) -> Vec<f64> {
+        (0..x.rows()).map(|i| self.decision_value(x.row(i))).collect()
+    }
+
+    /// Predicted labels (0 when dval ≥ 0, else 1).
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        self.decision_values(x).iter().map(|&d| if d >= 0.0 { 0 } else { 1 }).collect()
+    }
+}
+
+/// Signed class codes for labels: 0 → +1, 1 → −1 (the paper's y vector).
+pub fn signed_codes(labels: &[usize]) -> Vec<f64> {
+    labels.iter().map(|&l| if l == 0 { 1.0 } else { -1.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::mvn::Mvn;
+    use crate::util::rng::Rng;
+
+    fn gaussian_problem(rng: &mut Rng, n_per: usize, p: usize, sep: f64) -> (Mat, Vec<usize>) {
+        let cov = Mat::eye(p);
+        let mut mean1 = vec![0.0; p];
+        mean1[0] = sep / 2.0;
+        let mut mean2 = vec![0.0; p];
+        mean2[0] = -sep / 2.0;
+        let m1 = Mvn::new(mean1, &cov).unwrap().sample_n(rng, n_per);
+        let m2 = Mvn::new(mean2, &cov).unwrap().sample_n(rng, n_per);
+        let mut x = Mat::zeros(2 * n_per, p);
+        let mut labels = vec![0usize; 2 * n_per];
+        for i in 0..n_per {
+            x.row_mut(i).copy_from_slice(m1.row(i));
+            x.row_mut(n_per + i).copy_from_slice(m2.row(i));
+            labels[n_per + i] = 1;
+        }
+        (x, labels)
+    }
+
+    #[test]
+    fn separable_problem_high_accuracy() {
+        let mut rng = Rng::new(1);
+        let (x, labels) = gaussian_problem(&mut rng, 100, 5, 6.0);
+        let lda = BinaryLda::train(&x, &labels, Reg::Ridge(1e-6)).unwrap();
+        let pred = lda.predict(&x);
+        let correct = pred.iter().zip(&labels).filter(|(a, b)| a == b).count();
+        assert!(correct as f64 / labels.len() as f64 > 0.98);
+    }
+
+    #[test]
+    fn w_solves_scatter_system() {
+        let mut rng = Rng::new(2);
+        let (x, labels) = gaussian_problem(&mut rng, 30, 4, 2.0);
+        let lda = BinaryLda::train(&x, &labels, Reg::None).unwrap();
+        let sw = within_scatter(&x, &labels, 2);
+        let means = class_means(&x, &labels, 2);
+        let lhs = crate::linalg::matvec(&sw, &lda.w);
+        for j in 0..4 {
+            let rhs = means[(0, j)] - means[(1, j)];
+            assert!((lhs[j] - rhs).abs() < 1e-8, "S_w w = m1-m2 at {j}");
+        }
+    }
+
+    #[test]
+    fn bias_centres_projections() {
+        let mut rng = Rng::new(3);
+        // Unbalanced classes: bias must still centre the projected means.
+        let (x1, _) = gaussian_problem(&mut rng, 40, 3, 3.0);
+        let x = x1;
+        let labels: Vec<usize> = (0..80).map(|i| usize::from(i >= 40)).collect();
+        let lda = BinaryLda::train(&x, &labels, Reg::Ridge(0.1)).unwrap();
+        let means = class_means(&x, &labels, 2);
+        let d1 = lda.decision_value(means.row(0));
+        let d2 = lda.decision_value(means.row(1));
+        assert!((d1 + d2).abs() < 1e-9, "projected means centred: {d1} vs {d2}");
+        assert!(d1 > 0.0 && d2 < 0.0, "class means on opposite sides");
+    }
+
+    #[test]
+    fn shrinkage_and_converted_ridge_give_parallel_w() {
+        let mut rng = Rng::new(4);
+        let (x, labels) = gaussian_problem(&mut rng, 25, 6, 2.0);
+        let sw = within_scatter(&x, &labels, 2);
+        let nu = sw.trace() / 6.0;
+        let ls = 0.3;
+        let lr = Reg::shrinkage_to_ridge(ls, nu);
+        let a = BinaryLda::train(&x, &labels, Reg::Shrinkage(ls)).unwrap();
+        let b = BinaryLda::train(&x, &labels, Reg::Ridge(lr)).unwrap();
+        // w_shrink == w_ridge / (1−λs): proportional ⇒ same direction.
+        let na = dot(&a.w, &a.w).sqrt();
+        let nb = dot(&b.w, &b.w).sqrt();
+        let cos = dot(&a.w, &b.w) / (na * nb);
+        assert!((cos - 1.0).abs() < 1e-10, "cos={cos}");
+    }
+
+    #[test]
+    fn wide_data_needs_ridge() {
+        let mut rng = Rng::new(5);
+        let (x, labels) = gaussian_problem(&mut rng, 5, 30, 4.0); // N=10 < P=30
+        assert!(BinaryLda::train(&x, &labels, Reg::None).is_err());
+        assert!(BinaryLda::train(&x, &labels, Reg::Ridge(1.0)).is_ok());
+    }
+
+    #[test]
+    fn signed_codes_convention() {
+        assert_eq!(signed_codes(&[0, 1, 0]), vec![1.0, -1.0, 1.0]);
+    }
+}

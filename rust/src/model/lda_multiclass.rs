@@ -1,0 +1,160 @@
+//! Multi-class LDA via the generalised eigenproblem (§2.8).
+//!
+//! `S_b W = S_w W Λ` (Eq. 19); the data is projected onto the `C−1` leading
+//! discriminant coordinates (scaled `Wᵀ S_w W = I`), and samples are
+//! assigned to the class with the nearest projected centroid.
+
+use super::Reg;
+use crate::linalg::{gen_sym_eig, Mat};
+use crate::stats::{between_scatter, class_counts, class_means, within_scatter};
+use anyhow::{Context, Result};
+
+/// Trained multi-class LDA classifier.
+#[derive(Clone, Debug)]
+pub struct MulticlassLda {
+    /// Discriminant coordinates, `P × (C−1)`, columns ordered by descending
+    /// generalised eigenvalue, scaled so `Wᵀ S_w_reg W = I`.
+    pub w: Mat,
+    /// Class centroids in discriminant space, `C × (C−1)`.
+    pub centroids: Mat,
+    /// Generalised eigenvalues of the retained coordinates.
+    pub eigenvalues: Vec<f64>,
+    /// Number of classes.
+    pub n_classes: usize,
+}
+
+impl MulticlassLda {
+    /// Train on `x` (N×P) with labels in `0..c`.
+    pub fn train(x: &Mat, labels: &[usize], c: usize, reg: Reg) -> Result<MulticlassLda> {
+        assert!(c >= 2, "need at least two classes");
+        assert_eq!(x.rows(), labels.len());
+        let counts = class_counts(labels, c);
+        assert!(counts.iter().all(|&n| n > 0), "every class must have samples");
+        let sb = between_scatter(x, labels, c);
+        let mut sw = within_scatter(x, labels, c);
+        reg.apply(&mut sw);
+        let eig = gen_sym_eig(&sb, &sw)
+            .context("within-class scatter not positive definite; add ridge")?;
+        let ncomp = (c - 1).min(x.cols());
+        let keep: Vec<usize> = (0..ncomp).collect();
+        let w = eig.vectors.take_cols(&keep);
+        let eigenvalues = eig.values[..ncomp].to_vec();
+        let means = class_means(x, labels, c);
+        let centroids = crate::linalg::matmul(&means, &w);
+        Ok(MulticlassLda { w, centroids, eigenvalues, n_classes: c })
+    }
+
+    /// Project samples onto the discriminant coordinates (`N × (C−1)`).
+    pub fn project(&self, x: &Mat) -> Mat {
+        crate::linalg::matmul(x, &self.w)
+    }
+
+    /// Predict by nearest centroid in discriminant space.
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        let z = self.project(x);
+        nearest_centroid(&z, &self.centroids)
+    }
+}
+
+/// Assign each row of `z` to the row of `centroids` with minimal squared
+/// Euclidean distance.
+pub fn nearest_centroid(z: &Mat, centroids: &Mat) -> Vec<usize> {
+    assert_eq!(z.cols(), centroids.cols());
+    (0..z.rows())
+        .map(|i| {
+            let row = z.row(i);
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for cidx in 0..centroids.rows() {
+                let c = centroids.row(cidx);
+                let d: f64 = row.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d < best_d {
+                    best_d = d;
+                    best = cidx;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::linalg::matmul;
+    use crate::util::rng::Rng;
+
+    /// Shared test-data helper: `c` Gaussian blobs with `per` samples each in
+    /// `p` dims, centroids `sep` apart along random directions.
+    pub(crate) fn blobs(rng: &mut Rng, per: usize, c: usize, p: usize, sep: f64) -> (Mat, Vec<usize>) {
+        let n = per * c;
+        let mut x = Mat::from_fn(n, p, |_, _| rng.gauss());
+        let mut labels = vec![0usize; n];
+        for class in 0..c {
+            let dir = rng.unit_vector(p);
+            for i in 0..per {
+                let r = class * per + i;
+                labels[r] = class;
+                for j in 0..p {
+                    x[(r, j)] += sep * dir[j];
+                }
+            }
+        }
+        (x, labels)
+    }
+
+    #[test]
+    fn separable_blobs_high_accuracy() {
+        let mut rng = Rng::new(1);
+        let (x, labels) = blobs(&mut rng, 40, 4, 8, 5.0);
+        let lda = MulticlassLda::train(&x, &labels, 4, Reg::Ridge(1e-6)).unwrap();
+        let pred = lda.predict(&x);
+        let acc = pred.iter().zip(&labels).filter(|(a, b)| a == b).count() as f64 / labels.len() as f64;
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn w_is_sw_orthonormal() {
+        let mut rng = Rng::new(2);
+        let (x, labels) = blobs(&mut rng, 30, 3, 6, 2.0);
+        let lda = MulticlassLda::train(&x, &labels, 3, Reg::Ridge(0.5)).unwrap();
+        let mut sw = within_scatter(&x, &labels, 3);
+        Reg::Ridge(0.5).apply(&mut sw);
+        let wsw = matmul(&lda.w.t(), &matmul(&sw, &lda.w));
+        assert!(wsw.max_abs_diff(&Mat::eye(2)) < 1e-7, "WᵀS_wW=I");
+    }
+
+    #[test]
+    fn c_minus_one_components() {
+        let mut rng = Rng::new(3);
+        let (x, labels) = blobs(&mut rng, 25, 5, 10, 3.0);
+        let lda = MulticlassLda::train(&x, &labels, 5, Reg::Ridge(0.1)).unwrap();
+        assert_eq!(lda.w.cols(), 4);
+        assert_eq!(lda.centroids.shape(), (5, 4));
+        // eigenvalues descending and positive for separable data
+        assert!(lda.eigenvalues.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+        assert!(lda.eigenvalues[0] > 0.0);
+    }
+
+    #[test]
+    fn two_class_case_matches_binary_direction() {
+        let mut rng = Rng::new(4);
+        let (x, labels) = blobs(&mut rng, 30, 2, 5, 3.0);
+        let multi = MulticlassLda::train(&x, &labels, 2, Reg::Ridge(0.01)).unwrap();
+        let binary =
+            crate::model::lda_binary::BinaryLda::train(&x, &labels, crate::model::Reg::Ridge(0.01))
+                .unwrap();
+        let wm = multi.w.col(0);
+        let cos = crate::linalg::dot(&wm, &binary.w)
+            / (crate::linalg::dot(&wm, &wm).sqrt() * crate::linalg::dot(&binary.w, &binary.w).sqrt());
+        assert!((cos.abs() - 1.0).abs() < 1e-7, "cos={cos}");
+    }
+
+    #[test]
+    fn rank_deficient_without_ridge_fails_cleanly() {
+        let mut rng = Rng::new(5);
+        let (x, labels) = blobs(&mut rng, 3, 3, 20, 2.0); // N=9 < P=20
+        assert!(MulticlassLda::train(&x, &labels, 3, Reg::None).is_err());
+        assert!(MulticlassLda::train(&x, &labels, 3, Reg::Ridge(1.0)).is_ok());
+    }
+}

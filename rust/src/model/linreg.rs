@@ -1,0 +1,112 @@
+//! Linear and ridge regression on the augmented design `X̃ = [X, 1]`.
+//!
+//! `β̂ = (X̃ᵀX̃ + λI₀)⁻¹ X̃ᵀ y` (Eq. 5/17); `I₀` leaves the bias row
+//! unpenalised. The analytical CV applies to this model verbatim — `y` is a
+//! continuous response instead of class codes.
+
+use crate::linalg::{dot, matvec_t, syrk_t, Cholesky, Mat};
+use anyhow::{Context, Result};
+
+/// Trained (ridge) linear regression model.
+#[derive(Clone, Debug)]
+pub struct LinReg {
+    /// Weights on the original features.
+    pub w: Vec<f64>,
+    /// Intercept (`b_LR`).
+    pub b: f64,
+}
+
+/// Build the regularised gram matrix `X̃ᵀX̃ + λI₀` for an augmented design.
+/// `I₀` is the identity with the last (bias) diagonal entry zeroed (§2.6.1).
+pub fn gram_ridged(xa: &Mat, lambda: f64) -> Mat {
+    let mut g = syrk_t(xa);
+    let p1 = xa.cols();
+    for i in 0..p1 - 1 {
+        g[(i, i)] += lambda;
+    }
+    g
+}
+
+impl LinReg {
+    /// Fit by solving the (ridged) normal equations.
+    pub fn fit(x: &Mat, y: &[f64], lambda: f64) -> Result<LinReg> {
+        assert_eq!(x.rows(), y.len());
+        let xa = x.augment_ones();
+        let g = gram_ridged(&xa, lambda);
+        let xty = matvec_t(&xa, y);
+        let beta = match Cholesky::factor(&g) {
+            Ok(ch) => ch.solve_vec(&xty),
+            Err(_) => crate::linalg::solve(&g, &xty)
+                .context("normal equations singular; increase ridge λ")?,
+        };
+        let (w, b) = beta.split_at(x.cols());
+        Ok(LinReg { w: w.to_vec(), b: b[0] })
+    }
+
+    /// Predicted response for one sample.
+    pub fn predict_one(&self, x: &[f64]) -> f64 {
+        dot(&self.w, x) + self.b
+    }
+
+    /// Predicted responses for all rows.
+    pub fn predict(&self, x: &Mat) -> Vec<f64> {
+        (0..x.rows()).map(|i| self.predict_one(x.row(i))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_true_coefficients() {
+        let mut rng = Rng::new(1);
+        let n = 200;
+        let p = 4;
+        let w_true = [2.0, -1.0, 0.5, 3.0];
+        let b_true = -0.7;
+        let x = Mat::from_fn(n, p, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..n)
+            .map(|i| dot(x.row(i), &w_true) + b_true + 0.01 * rng.gauss())
+            .collect();
+        let m = LinReg::fit(&x, &y, 0.0).unwrap();
+        for j in 0..p {
+            assert!((m.w[j] - w_true[j]).abs() < 0.01, "w[{j}]={}", m.w[j]);
+        }
+        assert!((m.b - b_true).abs() < 0.01);
+    }
+
+    #[test]
+    fn ridge_shrinks_weights_not_bias() {
+        let mut rng = Rng::new(2);
+        let n = 50;
+        let x = Mat::from_fn(n, 3, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..n).map(|i| 5.0 + x[(i, 0)] + 0.1 * rng.gauss()).collect();
+        let m0 = LinReg::fit(&x, &y, 0.0).unwrap();
+        let m1 = LinReg::fit(&x, &y, 1e4).unwrap();
+        assert!(m1.w[0].abs() < 0.1 * m0.w[0].abs(), "huge ridge kills w");
+        // bias is unpenalised: stays near the response mean.
+        let ymean = crate::util::mean(&y);
+        assert!((m1.b - ymean).abs() < 0.2, "b={} ymean={ymean}", m1.b);
+    }
+
+    #[test]
+    fn wide_design_fits_with_ridge() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(10, 50, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..10).map(|_| rng.gauss()).collect();
+        assert!(LinReg::fit(&x, &y, 0.0).is_err(), "N<P unregularised is singular");
+        let m = LinReg::fit(&x, &y, 0.5).unwrap();
+        assert_eq!(m.w.len(), 50);
+    }
+
+    #[test]
+    fn gram_ridged_leaves_bias_cell() {
+        let x = Mat::from_rows(&[&[1.0], &[2.0]]);
+        let xa = x.augment_ones();
+        let g = gram_ridged(&xa, 10.0);
+        assert_eq!(g[(0, 0)], 5.0 + 10.0); // 1²+2² + λ
+        assert_eq!(g[(1, 1)], 2.0); // bias cell unpenalised: N
+    }
+}

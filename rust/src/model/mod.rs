@@ -1,0 +1,104 @@
+//! Classic (retrain-per-fold) least-squares models.
+//!
+//! These are the *standard approach* the paper benchmarks against, plus the
+//! regression reformulations (Appendix A/B) and optimal scoring (Hastie et
+//! al. 1995) that the analytical approach builds on:
+//!
+//! - [`lda_binary`] — Fisher/LDA binary classifier, Eq. (3)/(4)
+//! - [`lda_multiclass`] — generalised-eigenvalue multi-class LDA, Eq. (19)
+//! - [`linreg`] — linear / ridge regression on the augmented design
+//! - [`regression_lda`] — binary LDA cast as least squares (Appendix A)
+//! - [`optimal_scoring`] — multi-class LDA as optimal scoring, Eq. (20)
+
+pub mod lda_binary;
+pub mod lda_multiclass;
+pub mod linreg;
+pub mod optimal_scoring;
+pub mod regression_lda;
+pub mod svm;
+
+/// Regularisation of the within-class scatter (§2.6).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Reg {
+    /// No regularisation (requires a well-conditioned scatter).
+    None,
+    /// Ridge: `S_w + λI`, λ ∈ [0, ∞).
+    Ridge(f64),
+    /// Shrinkage: `(1−λ)S_w + λνI` with `ν = trace(S_w)/P`, λ ∈ [0, 1].
+    Shrinkage(f64),
+}
+
+impl Reg {
+    /// Apply this regulariser to a scatter matrix in place; returns the
+    /// effective scale factor applied to `S_w` (1 for none/ridge, `1−λ` for
+    /// shrinkage) so weight-vector scalings can be compared across schemes.
+    pub fn apply(self, sw: &mut crate::linalg::Mat) -> f64 {
+        let p = sw.rows();
+        match self {
+            Reg::None => 1.0,
+            Reg::Ridge(lambda) => {
+                assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
+                for i in 0..p {
+                    sw[(i, i)] += lambda;
+                }
+                1.0
+            }
+            Reg::Shrinkage(lambda) => {
+                assert!((0.0..=1.0).contains(&lambda), "shrinkage λ must be in [0,1]");
+                let nu = sw.trace() / p as f64;
+                sw.scale(1.0 - lambda);
+                for i in 0..p {
+                    sw[(i, i)] += lambda * nu;
+                }
+                1.0 - lambda
+            }
+        }
+    }
+
+    /// Eq. (18): the ridge parameter equivalent to a shrinkage parameter for
+    /// a scatter with scaling `ν = trace(S_w)/P`.
+    pub fn shrinkage_to_ridge(lambda_shrink: f64, nu: f64) -> f64 {
+        assert!((0.0..1.0).contains(&lambda_shrink), "λ_shrink must be in [0,1)");
+        lambda_shrink / (1.0 - lambda_shrink) * nu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn ridge_adds_diagonal() {
+        let mut s = Mat::eye(3);
+        Reg::Ridge(0.5).apply(&mut s);
+        assert_eq!(s[(0, 0)], 1.5);
+        assert_eq!(s[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn shrinkage_preserves_trace() {
+        let mut s = Mat::from_rows(&[&[2.0, 0.3], &[0.3, 4.0]]);
+        let tr = s.trace();
+        Reg::Shrinkage(0.3).apply(&mut s);
+        assert!((s.trace() - tr).abs() < 1e-12, "shrinkage keeps trace");
+        assert!((s[(0, 1)] - 0.7 * 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq18_proportionality() {
+        // (1−λs) S + λs ν I  ∝  S + λr I with λr from Eq. 18
+        let s = Mat::from_rows(&[&[2.0, 0.5], &[0.5, 1.0]]);
+        let nu = s.trace() / 2.0;
+        let ls = 0.4;
+        let lr = Reg::shrinkage_to_ridge(ls, nu);
+        let mut a = s.clone();
+        Reg::Shrinkage(ls).apply(&mut a);
+        let mut b = s.clone();
+        Reg::Ridge(lr).apply(&mut b);
+        // a == (1−λs) * b
+        let mut b_scaled = b.clone();
+        b_scaled.scale(1.0 - ls);
+        assert!(a.max_abs_diff(&b_scaled) < 1e-12);
+    }
+}

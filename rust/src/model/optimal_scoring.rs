@@ -1,0 +1,256 @@
+//! Multi-class LDA as optimal scoring (§2.9, Hastie et al. 1995).
+//!
+//! Step 1: multivariate (ridge) regression of the class-indicator matrix
+//! `Y ∈ R^{N×C}` on the augmented design, `B̃ = (X̃ᵀX̃ + λI₀)⁻¹ X̃ᵀ Y`,
+//! giving fits `Ŷ = X̃ B̃ = H Y`.
+//!
+//! Step 2: the optimal scores `Θ` solve the `C×C` generalised eigenproblem
+//! `(ŶᵀY/N) θ = α² (YᵀY/N) θ` under the constraint `N⁻¹‖Yθ‖² = 1`; the
+//! trivial constant score (eigenvalue 1 for an uncentred design) is removed.
+//!
+//! The discriminant coordinates are then `W = B Θ D` (Eq. 20) with
+//! `D = N^{-1/2} diag(α_k²(1−α_k²))^{-1/2}` — including the `√N` correction
+//! the paper adds to Hastie's covariance-based formula so that
+//! `Wᵀ S_w W = I` (within-*scatter* scaling).
+
+use crate::linalg::{gen_sym_eig, matmul, Cholesky, Mat};
+use crate::model::linreg::gram_ridged;
+use crate::model::lda_multiclass::nearest_centroid;
+use crate::stats::class_means;
+use anyhow::{Context, Result};
+
+/// Numerical floor for `α²(1−α²)` below which a discriminant coordinate is
+/// considered degenerate (perfectly separated or absent) and dropped.
+pub const ALPHA_EPS: f64 = 1e-10;
+
+/// Class-indicator matrix `Y[i, labels[i]] = 1`.
+pub fn indicator_matrix(labels: &[usize], c: usize) -> Mat {
+    let mut y = Mat::zeros(labels.len(), c);
+    for (i, &l) in labels.iter().enumerate() {
+        assert!(l < c, "label {l} out of range");
+        y[(i, l)] = 1.0;
+    }
+    y
+}
+
+/// Result of optimal-scoring step 2 on a `C×C` cross-product matrix.
+#[derive(Clone, Debug)]
+pub struct ScoreBasis {
+    /// Optimal scores `Θ`, `C × ncomp`, normalised `θᵀ(YᵀY/N)θ = 1`.
+    pub theta: Mat,
+    /// Eigenvalues `α²_k` (descending), one per retained component.
+    pub alpha2: Vec<f64>,
+    /// Scaling diag `D` entries, `1/(√N · √(α²(1−α²)))`.
+    pub d: Vec<f64>,
+}
+
+/// Solve step 2 given `M = ŶᵀY/N` (or its CV analogue `ẎᵀY/N`) and the
+/// class-proportion diagonal `Dp = YᵀY/N`, for `n` total samples.
+///
+/// The trivial score — the eigenvector that is constant across classes,
+/// with `α² = 1` for an uncentred design — is identified as the eigenvector
+/// maximally aligned (in the `Dp` metric) with the all-ones vector and
+/// removed, per §2.9. Degenerate components (`α²(1−α²) ≈ 0`) are dropped.
+pub fn score_basis(m: &Mat, dp: &Mat, n: usize) -> Result<ScoreBasis> {
+    let c = m.rows();
+    let mut msym = m.clone();
+    msym.symmetrize(); // exact-arithmetic symmetric; clean up roundoff
+    let eig = gen_sym_eig(&msym, dp).context("class-proportion matrix singular")?;
+    // Alignment of each eigenvector with 1 (Dp metric): |θᵀ Dp 1|.
+    // Vectors are Dp-orthonormal so this is a cosine against the (unit-norm)
+    // constant score; the trivial one has |cos| ≈ 1.
+    let dp1: Vec<f64> = (0..c).map(|i| (0..c).map(|j| dp[(i, j)]).sum()).collect();
+    let norm1 = (0..c).map(|i| dp1[i]).sum::<f64>().sqrt(); // sqrt(1ᵀDp1)
+    let mut trivial = 0usize;
+    let mut best = -1.0;
+    for k in 0..c {
+        let th = eig.vectors.col(k);
+        let align = (crate::linalg::dot(&th, &dp1) / norm1).abs();
+        if align > best {
+            best = align;
+            trivial = k;
+        }
+    }
+    let keep: Vec<usize> = (0..c)
+        .filter(|&k| k != trivial)
+        .filter(|&k| {
+            let a2 = eig.values[k].clamp(0.0, 1.0);
+            a2 * (1.0 - a2) > ALPHA_EPS
+        })
+        .collect();
+    let theta = eig.vectors.take_cols(&keep);
+    let alpha2: Vec<f64> = keep.iter().map(|&k| eig.values[k].clamp(0.0, 1.0)).collect();
+    let sqrt_n = (n as f64).sqrt();
+    let d: Vec<f64> = alpha2.iter().map(|&a2| 1.0 / (sqrt_n * (a2 * (1.0 - a2)).sqrt())).collect();
+    Ok(ScoreBasis { theta, alpha2, d })
+}
+
+/// Multi-class LDA trained through optimal scoring.
+#[derive(Clone, Debug)]
+pub struct OptimalScoringLda {
+    /// Full regression weights `B̃`, `(P+1) × C`.
+    pub b_tilde: Mat,
+    /// Step-2 score basis on the training fits.
+    pub basis: ScoreBasis,
+    /// Discriminant coordinates `W = B Θ D`, `P × ncomp` (Eq. 20).
+    pub w: Mat,
+    /// Class centroids in discriminant-score space, `C × ncomp`.
+    pub centroids: Mat,
+    /// Number of classes.
+    pub n_classes: usize,
+}
+
+impl OptimalScoringLda {
+    /// Train on `x` (N×P), labels in `0..c`, ridge λ ≥ 0.
+    pub fn train(x: &Mat, labels: &[usize], c: usize, lambda: f64) -> Result<OptimalScoringLda> {
+        let n = x.rows();
+        assert_eq!(n, labels.len());
+        let y = indicator_matrix(labels, c);
+        let xa = x.augment_ones();
+        let g = gram_ridged(&xa, lambda);
+        let xty = matmul(&xa.t(), &y);
+        let b_tilde = match Cholesky::factor(&g) {
+            Ok(ch) => ch.solve_mat(&xty),
+            Err(_) => crate::linalg::solve_mat(&g, &xty)
+                .context("normal equations singular; increase ridge λ")?,
+        };
+        let y_hat = matmul(&xa, &b_tilde);
+        // M = ŶᵀY/N, Dp = YᵀY/N (diagonal of class proportions).
+        let mut m = matmul(&y_hat.t(), &y);
+        m.scale(1.0 / n as f64);
+        let counts = crate::stats::class_counts(labels, c);
+        let dp = Mat::diag(&counts.iter().map(|&k| k as f64 / n as f64).collect::<Vec<_>>());
+        let basis = score_basis(&m, &dp, n)?;
+        // W = B Θ D with B = B̃ without the bias row.
+        let b = Mat::from_fn(x.cols(), c, |i, j| b_tilde[(i, j)]);
+        let mut w = matmul(&b, &basis.theta);
+        for col in 0..w.cols() {
+            let dk = basis.d[col];
+            for i in 0..w.rows() {
+                w[(i, col)] *= dk;
+            }
+        }
+        let means = class_means(x, labels, c);
+        let centroids = matmul(&means, &w);
+        Ok(OptimalScoringLda { b_tilde, basis, w, centroids, n_classes: c })
+    }
+
+    /// Project raw samples onto the discriminant coordinates.
+    pub fn project(&self, x: &Mat) -> Mat {
+        matmul(x, &self.w)
+    }
+
+    /// Predict by nearest centroid in discriminant space.
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        nearest_centroid(&self.project(x), &self.centroids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lda_multiclass::{tests::blobs, MulticlassLda};
+    use crate::model::Reg;
+    use crate::util::prop::Cases;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn indicator_rows_sum_to_one() {
+        let y = indicator_matrix(&[0, 2, 1, 2], 3);
+        for i in 0..4 {
+            assert_eq!(y.row(i).iter().sum::<f64>(), 1.0);
+        }
+        assert_eq!(y[(1, 2)], 1.0);
+    }
+
+    #[test]
+    fn eq20_w_matches_generalized_eig_lda() {
+        // The central Hastie-et-al. equivalence with the paper's √N fix:
+        // W_OS = B Θ D equals the generalised-eig W up to per-column sign.
+        Cases::new(15).run("eq20", |rng| {
+            let c = 3 + rng.below(3); // 3..5 classes
+            let per = 8 + rng.below(10);
+            let p = (c - 1) + 1 + rng.below(8);
+            let (x, labels) = blobs(rng, per, c, p, 2.5);
+            let lambda = if rng.below(2) == 0 { 0.0 } else { 10f64.powf(rng.uniform_in(-2.0, 1.0)) };
+            let os = OptimalScoringLda::train(&x, &labels, c, lambda).unwrap();
+            let lda = MulticlassLda::train(&x, &labels, c, Reg::Ridge(lambda)).unwrap();
+            assert_eq!(os.w.cols(), c - 1, "retained components");
+            for col in 0..c - 1 {
+                let a = os.w.col(col);
+                let b = lda.w.col(col);
+                let na = crate::linalg::dot(&a, &a).sqrt();
+                let nb = crate::linalg::dot(&b, &b).sqrt();
+                let cos = crate::linalg::dot(&a, &b) / (na * nb);
+                assert!(
+                    (cos.abs() - 1.0).abs() < 1e-5,
+                    "col {col}: |cos|={} (λ={lambda})",
+                    cos.abs()
+                );
+                // Scaling match: norms equal (the √N fix).
+                assert!(
+                    (na / nb - 1.0).abs() < 1e-5,
+                    "col {col}: norm ratio {} (λ={lambda})",
+                    na / nb
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn predictions_match_classic_multiclass_lda() {
+        Cases::new(15).run("os-predict", |rng| {
+            let c = 3 + rng.below(3);
+            let per = 10 + rng.below(8);
+            let p = c + rng.below(10);
+            let (x, labels) = blobs(rng, per, c, p, 2.0);
+            let lambda = 10f64.powf(rng.uniform_in(-3.0, 0.5));
+            let os = OptimalScoringLda::train(&x, &labels, c, lambda).unwrap();
+            let lda = MulticlassLda::train(&x, &labels, c, Reg::Ridge(lambda)).unwrap();
+            let (xt, _) = blobs(rng, 5, c, p, 2.0);
+            assert_eq!(os.predict(&xt), lda.predict(&xt));
+        });
+    }
+
+    #[test]
+    fn alpha2_within_unit_interval_and_descending() {
+        let mut rng = Rng::new(7);
+        let (x, labels) = blobs(&mut rng, 20, 4, 6, 2.0);
+        let os = OptimalScoringLda::train(&x, &labels, 4, 0.01).unwrap();
+        assert!(os.basis.alpha2.iter().all(|&a| (0.0..=1.0).contains(&a)));
+        assert!(os.basis.alpha2.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+        // Non-trivial scores: not constant across classes.
+        for k in 0..os.basis.theta.cols() {
+            let th = os.basis.theta.col(k);
+            let spread = th.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v))
+                - th.iter().fold(f64::INFINITY, |m, &v| m.min(v));
+            assert!(spread > 1e-6, "score {k} is constant");
+        }
+    }
+
+    #[test]
+    fn unbalanced_classes_still_match() {
+        let mut rng = Rng::new(8);
+        let c = 3;
+        let p = 5;
+        // build unbalanced blobs: 30/12/6 samples
+        let sizes = [30usize, 12, 6];
+        let n: usize = sizes.iter().sum();
+        let mut x = Mat::zeros(n, p);
+        let mut labels = Vec::with_capacity(n);
+        let mut r = 0;
+        for (cls, &sz) in sizes.iter().enumerate() {
+            let dir = rng.unit_vector(p);
+            for _ in 0..sz {
+                for j in 0..p {
+                    x[(r, j)] = rng.gauss() + 2.5 * dir[j];
+                }
+                labels.push(cls);
+                r += 1;
+            }
+        }
+        let os = OptimalScoringLda::train(&x, &labels, c, 0.1).unwrap();
+        let lda = MulticlassLda::train(&x, &labels, c, Reg::Ridge(0.1)).unwrap();
+        assert_eq!(os.predict(&x), lda.predict(&x));
+    }
+}

@@ -1,0 +1,165 @@
+//! Binary LDA as a least-squares problem (§2.3, Appendix A/B).
+//!
+//! Regressing arbitrary numeric class codes `z₁ ≠ z₂` on the augmented
+//! design yields a weight vector **proportional** to the LDA solution
+//! `S_w⁻¹(m₁ − m₂)`; the intercept is `b_LR = N₁z₁/N + N₂z₂/N − m̄ᵀw`
+//! (which differs from `b_LDA` unless `N₁ = N₂`). This module is both a
+//! usable classifier and the executable proof of Appendix A/B used by the
+//! test-suite.
+
+use crate::linalg::{dot, Mat};
+use crate::model::linreg::LinReg;
+use anyhow::Result;
+
+/// Binary LDA fit through the regression route.
+#[derive(Clone, Debug)]
+pub struct RegressionLda {
+    /// Regression weight vector (∝ LDA `w`).
+    pub w: Vec<f64>,
+    /// Regression intercept `b_LR`.
+    pub b_lr: f64,
+    /// LDA-style intercept `b_LDA` (centres projected class means).
+    pub b_lda: f64,
+}
+
+impl RegressionLda {
+    /// Train with class codes `z = (z₁, z₂)` for labels (0, 1); ridge λ ≥ 0.
+    pub fn train_with_codes(
+        x: &Mat,
+        labels: &[usize],
+        (z1, z2): (f64, f64),
+        lambda: f64,
+    ) -> Result<RegressionLda> {
+        assert!(z1 != z2, "class codes must differ");
+        let y: Vec<f64> = labels.iter().map(|&l| if l == 0 { z1 } else { z2 }).collect();
+        let reg = LinReg::fit(x, &y, lambda)?;
+        // b_LDA: centre the projected class means (needs class means).
+        let means = crate::stats::class_means(x, labels, 2);
+        let p1 = dot(&reg.w, means.row(0));
+        let p2 = dot(&reg.w, means.row(1));
+        Ok(RegressionLda { b_lda: -(p1 + p2) / 2.0, w: reg.w, b_lr: reg.b })
+    }
+
+    /// Train with the canonical ±1 coding of the paper.
+    pub fn train(x: &Mat, labels: &[usize], lambda: f64) -> Result<RegressionLda> {
+        Self::train_with_codes(x, labels, (1.0, -1.0), lambda)
+    }
+
+    /// Regression decision values `wᵀx + b_LR` (what the analytical CV
+    /// reproduces).
+    pub fn decision_values_lr(&self, x: &Mat) -> Vec<f64> {
+        (0..x.rows()).map(|i| dot(&self.w, x.row(i)) + self.b_lr).collect()
+    }
+
+    /// LDA decision values `wᵀx + b_LDA` (bias-adjusted, §2.5).
+    pub fn decision_values_lda(&self, x: &Mat) -> Vec<f64> {
+        (0..x.rows()).map(|i| dot(&self.w, x.row(i)) + self.b_lda).collect()
+    }
+
+    /// Predict labels with the LDA bias.
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        self.decision_values_lda(x).iter().map(|&d| usize::from(d < 0.0)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lda_binary::BinaryLda;
+    use crate::model::Reg;
+    use crate::util::prop::{assert_close, Cases};
+    use crate::util::rng::Rng;
+
+    fn random_problem(rng: &mut Rng, n1: usize, n2: usize, p: usize) -> (Mat, Vec<usize>) {
+        let n = n1 + n2;
+        let mut x = Mat::from_fn(n, p, |_, _| rng.gauss());
+        // shift class 0 along a random direction for separation
+        let dir = rng.unit_vector(p);
+        for i in 0..n1 {
+            for j in 0..p {
+                x[(i, j)] += 1.5 * dir[j];
+            }
+        }
+        let labels: Vec<usize> = (0..n).map(|i| usize::from(i >= n1)).collect();
+        (x, labels)
+    }
+
+    fn cosine(a: &[f64], b: &[f64]) -> f64 {
+        dot(a, b) / (dot(a, a).sqrt() * dot(b, b).sqrt())
+    }
+
+    #[test]
+    fn appendix_a_w_parallel_to_lda() {
+        // Regression w ∝ classic LDA w, any class codes, balanced or not.
+        Cases::new(25).run("appendix-a", |rng| {
+            let n1 = 6 + rng.below(20);
+            let n2 = 6 + rng.below(20);
+            let p = 1 + rng.below(5.min(n1 + n2 - 3));
+            let (x, labels) = random_problem(rng, n1, n2, p);
+            let z1 = rng.uniform_in(-3.0, 3.0);
+            let mut z2 = rng.uniform_in(-3.0, 3.0);
+            if (z1 - z2).abs() < 0.3 {
+                z2 = z1 + 1.0;
+            }
+            let reg = RegressionLda::train_with_codes(&x, &labels, (z1, z2), 0.0).unwrap();
+            let lda = BinaryLda::train(&x, &labels, Reg::None).unwrap();
+            let cos = cosine(&reg.w, &lda.w);
+            // sign follows z1 > z2 or z1 < z2
+            let expect = if z1 > z2 { 1.0 } else { -1.0 };
+            assert_close(cos, expect, 1e-6, "cosine(w_reg, w_lda)");
+        });
+    }
+
+    #[test]
+    fn appendix_a_intercept_formula() {
+        // For ±1 codes: b_LR = (N₁−N₂)/N − m̄ᵀw (Eq. 6).
+        Cases::new(25).run("appendix-a-bias", |rng| {
+            let n1 = 5 + rng.below(15);
+            let n2 = 5 + rng.below(15);
+            let p = 1 + rng.below(4);
+            let (x, labels) = random_problem(rng, n1, n2, p);
+            let reg = RegressionLda::train(&x, &labels, 0.0).unwrap();
+            let n = (n1 + n2) as f64;
+            let grand = x.col_means();
+            let expect = (n1 as f64 - n2 as f64) / n - dot(&grand, &reg.w);
+            assert_close(reg.b_lr, expect, 1e-8, "b_LR");
+        });
+    }
+
+    #[test]
+    fn appendix_b_ridge_w_parallel_to_ridged_lda() {
+        Cases::new(20).run("appendix-b", |rng| {
+            let n1 = 5 + rng.below(10);
+            let n2 = 5 + rng.below(10);
+            let p = 2 + rng.below(8);
+            let (x, labels) = random_problem(rng, n1, n2, p);
+            let lambda = 10f64.powf(rng.uniform_in(-2.0, 2.0));
+            let reg = RegressionLda::train(&x, &labels, lambda).unwrap();
+            let lda = BinaryLda::train(&x, &labels, Reg::Ridge(lambda)).unwrap();
+            let cos = cosine(&reg.w, &lda.w);
+            assert_close(cos, 1.0, 1e-6, "cosine(w_ridge_reg, w_ridge_lda)");
+        });
+    }
+
+    #[test]
+    fn balanced_classes_biases_coincide() {
+        let mut rng = Rng::new(1);
+        let (x, labels) = random_problem(&mut rng, 20, 20, 3);
+        let reg = RegressionLda::train(&x, &labels, 0.0).unwrap();
+        // N₁=N₂ ⇒ b_LR == b_LDA (both equal −m̄ᵀw).
+        assert!((reg.b_lr - reg.b_lda).abs() < 1e-9, "{} vs {}", reg.b_lr, reg.b_lda);
+    }
+
+    #[test]
+    fn unbalanced_classes_biases_differ_but_predictions_match_lda() {
+        let mut rng = Rng::new(2);
+        let (x, labels) = random_problem(&mut rng, 35, 10, 4);
+        let reg = RegressionLda::train(&x, &labels, 1e-9).unwrap();
+        let lda = BinaryLda::train(&x, &labels, Reg::Ridge(1e-9)).unwrap();
+        assert!((reg.b_lr - reg.b_lda).abs() > 1e-3, "biases differ when unbalanced");
+        // With the b_LDA adjustment, predicted labels match classic LDA.
+        let pr = reg.predict(&x);
+        let pl = lda.predict(&x);
+        assert_eq!(pr, pl);
+    }
+}

@@ -1,0 +1,181 @@
+//! Linear SVM via dual coordinate descent (Hsieh et al. 2008) — the
+//! kernel-method comparator of §4.4 and the "sometimes similar, slower to
+//! train" baseline of §1.
+//!
+//! L2-regularised L1-loss SVM: `min_w ½‖w‖² + C Σ max(0, 1 − yᵢ wᵀxᵢ)`,
+//! solved in the dual `min_α ½αᵀQα − 1ᵀα, 0 ≤ αᵢ ≤ C`, with
+//! `Q_ij = yᵢyⱼ xᵢᵀxⱼ`, sweeping coordinates with random permutations and
+//! maintaining `w = Σ αᵢyᵢxᵢ` — exactly the cited Algorithm 1.
+
+use crate::linalg::{dot, Mat};
+use crate::util::rng::Rng;
+
+/// Trained linear SVM.
+#[derive(Clone, Debug)]
+pub struct LinearSvm {
+    /// Weight vector (includes the bias through feature augmentation).
+    pub w: Vec<f64>,
+    /// Bias term.
+    pub b: f64,
+    /// Dual variables at convergence.
+    pub alpha: Vec<f64>,
+    /// Outer iterations used.
+    pub iters: usize,
+}
+
+/// Training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SvmParams {
+    /// Soft-margin cost.
+    pub c: f64,
+    /// Maximum outer passes over the data.
+    pub max_iter: usize,
+    /// Stop when the largest projected-gradient violation falls below this.
+    pub tol: f64,
+}
+
+impl Default for SvmParams {
+    fn default() -> Self {
+        SvmParams { c: 1.0, max_iter: 200, tol: 1e-4 }
+    }
+}
+
+impl LinearSvm {
+    /// Train on labels in {0,1} (0 ↔ +1, crate convention). The bias is
+    /// handled by augmenting each sample with a constant 1 feature (the
+    /// standard liblinear trick).
+    pub fn train(x: &Mat, labels: &[usize], params: SvmParams, rng: &mut Rng) -> LinearSvm {
+        let n = x.rows();
+        let p = x.cols();
+        assert_eq!(n, labels.len());
+        let y: Vec<f64> = labels.iter().map(|&l| if l == 0 { 1.0 } else { -1.0 }).collect();
+        // Augmented weight vector: w[p] is the bias.
+        let mut w = vec![0.0; p + 1];
+        let mut alpha = vec![0.0; n];
+        // Qii = ‖x̃ᵢ‖² (augmented).
+        let qii: Vec<f64> = (0..n).map(|i| dot(x.row(i), x.row(i)) + 1.0).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut iters = 0;
+        for it in 0..params.max_iter {
+            iters = it + 1;
+            rng.shuffle(&mut order);
+            let mut max_violation = 0.0f64;
+            for &i in &order {
+                let xi = x.row(i);
+                // G = yᵢ wᵀx̃ᵢ − 1
+                let g = y[i] * (dot(&w[..p], xi) + w[p]) - 1.0;
+                // projected gradient
+                let pg = if alpha[i] <= 0.0 {
+                    g.min(0.0)
+                } else if alpha[i] >= params.c {
+                    g.max(0.0)
+                } else {
+                    g
+                };
+                max_violation = max_violation.max(pg.abs());
+                if pg.abs() > 1e-14 {
+                    let old = alpha[i];
+                    alpha[i] = (old - g / qii[i]).clamp(0.0, params.c);
+                    let delta = (alpha[i] - old) * y[i];
+                    if delta != 0.0 {
+                        for (wj, &xj) in w[..p].iter_mut().zip(xi) {
+                            *wj += delta * xj;
+                        }
+                        w[p] += delta;
+                    }
+                }
+            }
+            if max_violation < params.tol {
+                break;
+            }
+        }
+        let b = w[p];
+        w.truncate(p);
+        LinearSvm { w, b, alpha, iters }
+    }
+
+    /// Decision value `wᵀx + b`.
+    pub fn decision_value(&self, x: &[f64]) -> f64 {
+        dot(&self.w, x) + self.b
+    }
+
+    /// Decision values for all rows.
+    pub fn decision_values(&self, x: &Mat) -> Vec<f64> {
+        (0..x.rows()).map(|i| self.decision_value(x.row(i))).collect()
+    }
+
+    /// Predicted labels (0 ↔ +1 convention).
+    pub fn predict(&self, x: &Mat) -> Vec<usize> {
+        self.decision_values(x).iter().map(|&d| usize::from(d < 0.0)).collect()
+    }
+
+    /// Number of support vectors (αᵢ > 0).
+    pub fn n_support(&self) -> usize {
+        self.alpha.iter().filter(|&&a| a > 1e-12).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::lda_binary::BinaryLda;
+    use crate::model::lda_multiclass::tests::blobs;
+    use crate::model::Reg;
+
+    #[test]
+    fn separable_data_solved() {
+        let mut rng = Rng::new(1);
+        let (x, labels) = blobs(&mut rng, 40, 2, 5, 4.0);
+        let svm = LinearSvm::train(&x, &labels, SvmParams::default(), &mut rng);
+        let acc = crate::cv::metrics::accuracy_labels(&svm.predict(&x), &labels);
+        assert!(acc > 0.95, "acc={acc}");
+        assert!(svm.n_support() < 80, "margin should be sparse in α");
+    }
+
+    #[test]
+    fn dual_feasible_and_kkt_ish() {
+        let mut rng = Rng::new(2);
+        let (x, labels) = blobs(&mut rng, 25, 2, 4, 2.0);
+        let params = SvmParams { c: 0.7, max_iter: 500, tol: 1e-6 };
+        let svm = LinearSvm::train(&x, &labels, params, &mut rng);
+        assert!(svm.alpha.iter().all(|&a| (0.0..=0.7 + 1e-12).contains(&a)));
+        // w equals Σ αᵢ yᵢ xᵢ
+        let mut w_check = vec![0.0; 4];
+        for i in 0..x.rows() {
+            let yi = if labels[i] == 0 { 1.0 } else { -1.0 };
+            for j in 0..4 {
+                w_check[j] += svm.alpha[i] * yi * x[(i, j)];
+            }
+        }
+        for j in 0..4 {
+            assert!((w_check[j] - svm.w[j]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn comparable_accuracy_to_lda_on_gaussian_data() {
+        // §1's claim: LDA ≈ linear SVM on Gaussian-ish problems.
+        let mut rng = Rng::new(3);
+        let (x, labels) = blobs(&mut rng, 60, 2, 10, 1.8);
+        let (xt, lt) = blobs(&mut rng, 40, 2, 10, 1.8);
+        let svm = LinearSvm::train(&x, &labels, SvmParams::default(), &mut rng);
+        let lda = BinaryLda::train(&x, &labels, Reg::Ridge(0.5)).unwrap();
+        let acc_svm = crate::cv::metrics::accuracy_labels(&svm.predict(&xt), &lt);
+        let acc_lda = crate::cv::metrics::accuracy_labels(&lda.predict(&xt), &lt);
+        assert!((acc_svm - acc_lda).abs() < 0.15, "svm {acc_svm} vs lda {acc_lda}");
+    }
+
+    #[test]
+    fn hat_matrix_is_whitened_linear_kernel() {
+        // §4.4: H_ij = x̃ᵢᵀ(X̃ᵀX̃+λI₀)⁻¹x̃ⱼ is a valid (whitened) dot product;
+        // for whitened spherical data H ≈ K/(N) up to the ridge scaling.
+        let mut rng = Rng::new(4);
+        let x = Mat::from_fn(30, 6, |_, _| rng.gauss());
+        let hat = crate::fastcv::hat::HatMatrix::build(&x, 1.0).unwrap();
+        // positive semi-definite: all eigenvalues ≥ −ε
+        let eig = crate::linalg::sym_eig(&hat.h);
+        assert!(eig.values.iter().all(|&v| v > -1e-10), "H must be PSD");
+        // and bounded by 1 (projection shrunk by ridge)
+        assert!(eig.values.iter().all(|&v| v <= 1.0 + 1e-10));
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact registry: parse `artifacts/manifest.json` and resolve
+//! (op, shape) requests to HLO files.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Identity of one compiled graph variant.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ArtifactKey {
+    /// Operation name (`analytic_cv`, `analytic_cv_batch`, `hat_matrix`,
+    /// `analytic_mc_step1`).
+    pub op: String,
+    /// Samples.
+    pub n: usize,
+    /// Features.
+    pub p: usize,
+    /// Folds (0 when not applicable).
+    pub k_folds: usize,
+    /// Permutation batch (0 when not applicable).
+    pub batch: usize,
+    /// Classes (0 when not applicable).
+    pub c: usize,
+}
+
+impl ArtifactKey {
+    /// Key for the single-response analytic CV graph.
+    pub fn analytic_cv(n: usize, p: usize, k_folds: usize) -> ArtifactKey {
+        ArtifactKey { op: "analytic_cv".into(), n, p, k_folds, batch: 0, c: 0 }
+    }
+
+    /// Key for the batched (permutation) analytic CV graph.
+    pub fn analytic_cv_batch(n: usize, p: usize, k_folds: usize, batch: usize) -> ArtifactKey {
+        ArtifactKey { op: "analytic_cv_batch".into(), n, p, k_folds, batch, c: 0 }
+    }
+
+    /// Key for the bare hat-matrix graph.
+    pub fn hat_matrix(n: usize, p: usize) -> ArtifactKey {
+        ArtifactKey { op: "hat_matrix".into(), n, p, k_folds: 0, batch: 0, c: 0 }
+    }
+
+    /// Key for the multi-class step-1 graph.
+    pub fn mc_step1(n: usize, p: usize, c: usize, k_folds: usize) -> ArtifactKey {
+        ArtifactKey { op: "analytic_mc_step1".into(), n, p, k_folds, batch: 0, c }
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub key: ArtifactKey,
+    pub file: PathBuf,
+    pub dtype: String,
+}
+
+/// Parsed manifest: key → file.
+#[derive(Debug, Default)]
+pub struct ArtifactRegistry {
+    entries: BTreeMap<ArtifactKey, ArtifactEntry>,
+    dir: PathBuf,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.json`. A missing manifest yields an empty
+    /// registry (native fallback everywhere) rather than an error.
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest = dir.join("manifest.json");
+        if !manifest.exists() {
+            return Ok(ArtifactRegistry { entries: BTreeMap::new(), dir: dir.to_path_buf() });
+        }
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {}", manifest.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let mut entries = BTreeMap::new();
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing 'artifacts' array")?;
+        let dtype_default =
+            json.get("dtype").and_then(|d| d.as_str()).unwrap_or("f64").to_string();
+        for a in arts {
+            let op = a.get("op").and_then(|v| v.as_str()).context("entry missing op")?;
+            let get = |k: &str| a.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            let key = ArtifactKey {
+                op: op.to_string(),
+                n: get("n"),
+                p: get("p"),
+                k_folds: get("k_folds"),
+                batch: get("batch"),
+                c: get("c"),
+            };
+            let file = a.get("file").and_then(|v| v.as_str()).context("entry missing file")?;
+            let path = dir.join(file);
+            if !path.exists() {
+                bail!("manifest references missing artifact {}", path.display());
+            }
+            entries.insert(
+                key.clone(),
+                ArtifactEntry {
+                    key,
+                    file: path,
+                    dtype: a
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or(&dtype_default)
+                        .to_string(),
+                },
+            );
+        }
+        Ok(ArtifactRegistry { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Load from the conventional location (`$FASTCV_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<ArtifactRegistry> {
+        let dir = std::env::var("FASTCV_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    /// Exact-shape lookup.
+    pub fn find(&self, key: &ArtifactKey) -> Option<&ArtifactEntry> {
+        self.entries.get(key)
+    }
+
+    /// All known entries.
+    pub fn entries(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.values()
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the registry empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Artifact directory this registry was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_empty_registry() {
+        let reg = ArtifactRegistry::load(Path::new("/nonexistent-dir-xyz")).unwrap();
+        assert!(reg.is_empty());
+        assert!(reg.find(&ArtifactKey::analytic_cv(10, 2, 5)).is_none());
+    }
+
+    #[test]
+    fn parses_manifest_fixture() {
+        let dir = std::env::temp_dir().join(format!("fastcv-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"dtype":"f64","artifacts":[
+                {"op":"analytic_cv","file":"a.hlo.txt","n":40,"p":8,"k_folds":5}
+            ]}"#,
+        )
+        .unwrap();
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.len(), 1);
+        let hit = reg.find(&ArtifactKey::analytic_cv(40, 8, 5)).unwrap();
+        assert_eq!(hit.dtype, "f64");
+        assert!(reg.find(&ArtifactKey::analytic_cv(41, 8, 5)).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join(format!("fastcv-test2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"op":"hat_matrix","file":"ghost.hlo.txt","n":4,"p":2}]}"#,
+        )
+        .unwrap();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,189 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts once, execute many
+//! times. Adapted from /opt/xla-example/load_hlo (the smoke-verified
+//! reference wiring for this image).
+
+use super::artifacts::{ArtifactEntry, ArtifactKey, ArtifactRegistry};
+use crate::linalg::Mat;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// A lazily-compiling XLA runtime over the artifact registry.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    // Executable cache keyed by artifact key. PjRtLoadedExecutable is not
+    // Sync-guaranteed by the crate, so the whole cache sits behind a Mutex.
+    cache: Mutex<BTreeMap<ArtifactKey, xla::PjRtLoadedExecutable>>,
+}
+
+/// A host-side value passed to / returned from an artifact call.
+#[derive(Clone, Debug)]
+pub enum Value {
+    /// Scalar f64.
+    Scalar(f64),
+    /// 1-D vector.
+    Vec1(Vec<f64>),
+    /// Row-major matrix.
+    Matrix(Mat),
+    /// Rank-3 tensor (e.g. the (K, N, C) training-fit stack), row-major.
+    Tensor3 { dims: [usize; 3], data: Vec<f64> },
+}
+
+impl Value {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Value::Scalar(x) => xla::Literal::from(*x),
+            Value::Vec1(v) => xla::Literal::vec1(v),
+            Value::Matrix(m) => xla::Literal::vec1(m.as_slice())
+                .reshape(&[m.rows() as i64, m.cols() as i64])?,
+            Value::Tensor3 { dims, data } => xla::Literal::vec1(data)
+                .reshape(&[dims[0] as i64, dims[1] as i64, dims[2] as i64])?,
+        })
+    }
+
+    /// Interpret a literal of known element type f64.
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f64>()?;
+        Ok(match dims.len() {
+            0 => Value::Scalar(data[0]),
+            1 => Value::Vec1(data),
+            2 => Value::Matrix(Mat::from_vec(dims[0], dims[1], data)),
+            3 => Value::Tensor3 { dims: [dims[0], dims[1], dims[2]], data },
+            r => anyhow::bail!("unsupported output rank {r}"),
+        })
+    }
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client over a registry.
+    pub fn new(registry: ArtifactRegistry) -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime { client, registry, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Create from the default artifact location.
+    pub fn load_default() -> Result<XlaRuntime> {
+        Self::new(ArtifactRegistry::load_default()?)
+    }
+
+    /// The registry backing this runtime.
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    /// PJRT platform string (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Is an exact-shape artifact available?
+    pub fn has(&self, key: &ArtifactKey) -> bool {
+        self.registry.find(key).is_some()
+    }
+
+    fn compile_entry(&self, entry: &ArtifactEntry) -> Result<xla::PjRtLoadedExecutable> {
+        let path = entry
+            .file
+            .to_str()
+            .context("artifact path not valid UTF-8")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", entry.file.display()))
+    }
+
+    /// Execute an artifact with the given inputs. Outputs are the elements
+    /// of the result tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, key: &ArtifactKey, inputs: &[Value]) -> Result<Vec<Value>> {
+        let entry = self
+            .registry
+            .find(key)
+            .with_context(|| format!("no artifact for {key:?}"))?
+            .clone();
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.contains_key(key) {
+            let exe = self.compile_entry(&entry)?;
+            cache.insert(key.clone(), exe);
+        }
+        let exe = cache.get(key).unwrap();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing artifact")?[0][0]
+            .to_literal_sync()?;
+        // return_tuple=True → unpack the tuple elements.
+        let tuple = result.to_tuple()?;
+        anyhow::ensure!(!tuple.is_empty(), "empty result tuple");
+        tuple.iter().map(Value::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need `make artifacts` to have run; they are skipped
+    /// (with a note) when the registry is empty so `cargo test` stays
+    /// green in a fresh checkout.
+    fn runtime() -> Option<XlaRuntime> {
+        let rt = XlaRuntime::load_default().ok()?;
+        if rt.registry().is_empty() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(rt)
+    }
+
+    #[test]
+    fn hat_artifact_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let key = ArtifactKey::hat_matrix(40, 8);
+        if !rt.has(&key) {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(42);
+        let x = Mat::from_fn(40, 8, |_, _| rng.gauss());
+        let lambda = 0.5;
+        let out = rt
+            .execute(&key, &[Value::Matrix(x.clone()), Value::Scalar(lambda)])
+            .unwrap();
+        let Value::Matrix(h_xla) = &out[0] else { panic!("expected matrix") };
+        let h_native = crate::fastcv::hat::HatMatrix::build(&x, lambda).unwrap();
+        assert!(
+            h_xla.max_abs_diff(&h_native.h) < 1e-9,
+            "XLA vs native hat matrix: {}",
+            h_xla.max_abs_diff(&h_native.h)
+        );
+    }
+
+    #[test]
+    fn analytic_cv_artifact_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let key = ArtifactKey::analytic_cv(40, 8, 5);
+        if !rt.has(&key) {
+            return;
+        }
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x = Mat::from_fn(40, 8, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..40).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let lambda = 0.3;
+        let out = rt
+            .execute(
+                &key,
+                &[Value::Matrix(x.clone()), Value::Vec1(y.clone()), Value::Scalar(lambda)],
+            )
+            .unwrap();
+        let Value::Vec1(dv_xla) = &out[0] else { panic!("expected vec") };
+        // native with contiguous folds 8×5
+        let folds: Vec<Vec<usize>> = (0..5).map(|k| (k * 8..(k + 1) * 8).collect()).collect();
+        let cv = crate::fastcv::binary::AnalyticBinaryCv::fit(&x, &y, lambda).unwrap();
+        let dv_native = cv.decision_values(&folds).unwrap();
+        crate::util::prop::assert_all_close(dv_xla, &dv_native, 1e-9, "XLA vs native CV");
+    }
+}

@@ -1,0 +1,313 @@
+//! Hybrid dispatch: run analytic CV through an AOT artifact when an exact
+//! shape match exists, otherwise through the native Rust engine.
+//!
+//! The artifact graphs assume **contiguous equal-sized folds** (fold k owns
+//! rows `k·nte..(k+1)·nte`); this module owns the row-permutation dance that
+//! maps an arbitrary fold partition onto that layout and maps decision
+//! values back.
+
+use super::artifacts::ArtifactKey;
+use super::client::{Value, XlaRuntime};
+use crate::fastcv::binary::AnalyticBinaryCv;
+use crate::linalg::Mat;
+use anyhow::{Context, Result};
+
+/// Which engine actually ran.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// AOT artifact through PJRT.
+    Xla,
+    /// Native Rust implementation.
+    Native,
+}
+
+/// Check whether a partition is "contiguous-foldable": all folds the same
+/// size. (Any partition can be permuted into the contiguous layout then.)
+pub fn equal_fold_sizes(folds: &[Vec<usize>]) -> Option<usize> {
+    let nte = folds.first()?.len();
+    folds.iter().all(|f| f.len() == nte).then_some(nte)
+}
+
+/// Row permutation mapping fold-k test rows to block k, i.e. `order[pos] =
+/// original_index`.
+pub fn fold_order(folds: &[Vec<usize>]) -> Vec<usize> {
+    folds.iter().flat_map(|f| f.iter().copied()).collect()
+}
+
+/// Analytic binary CV with hybrid dispatch. Returns the decision values in
+/// the *original* row order plus which engine ran.
+pub fn analytic_cv(
+    rt: Option<&XlaRuntime>,
+    x: &Mat,
+    y: &[f64],
+    folds: &[Vec<usize>],
+    lambda: f64,
+) -> Result<(Vec<f64>, Engine)> {
+    crate::fastcv::validate_folds(folds, x.rows())?;
+    if let (Some(rt), Some(_nte)) = (rt, equal_fold_sizes(folds)) {
+        let covers_all: usize = folds.iter().map(|f| f.len()).sum();
+        let key = ArtifactKey::analytic_cv(x.rows(), x.cols(), folds.len());
+        if covers_all == x.rows() && rt.has(&key) {
+            let order = fold_order(folds);
+            let x_perm = x.take_rows(&order);
+            let y_perm: Vec<f64> = order.iter().map(|&i| y[i]).collect();
+            let out = rt
+                .execute(&key, &[Value::Matrix(x_perm), Value::Vec1(y_perm), Value::Scalar(lambda)])
+                .context("artifact execution failed")?;
+            let Value::Vec1(dv_perm) = &out[0] else {
+                anyhow::bail!("artifact returned unexpected output type")
+            };
+            let mut dvals = vec![f64::NAN; x.rows()];
+            for (pos, &orig) in order.iter().enumerate() {
+                dvals[orig] = dv_perm[pos];
+            }
+            return Ok((dvals, Engine::Xla));
+        }
+    }
+    let cv = AnalyticBinaryCv::fit(x, y, lambda)?;
+    Ok((cv.decision_values(folds)?, Engine::Native))
+}
+
+/// Batched permutation CV (Alg. 1) with hybrid dispatch: `y_batch` rows are
+/// (permuted) responses; returns (B, N) decision values in original order.
+pub fn analytic_cv_batch(
+    rt: Option<&XlaRuntime>,
+    x: &Mat,
+    y_batch: &[Vec<f64>],
+    folds: &[Vec<usize>],
+    lambda: f64,
+) -> Result<(Vec<Vec<f64>>, Engine)> {
+    crate::fastcv::validate_folds(folds, x.rows())?;
+    let b = y_batch.len();
+    if let (Some(rt), Some(_)) = (rt, equal_fold_sizes(folds)) {
+        let covers_all: usize = folds.iter().map(|f| f.len()).sum();
+        let key = ArtifactKey::analytic_cv_batch(x.rows(), x.cols(), folds.len(), b);
+        if covers_all == x.rows() && rt.has(&key) {
+            let order = fold_order(folds);
+            let x_perm = x.take_rows(&order);
+            let mut yb = Mat::zeros(b, x.rows());
+            for (r, y) in y_batch.iter().enumerate() {
+                for (pos, &orig) in order.iter().enumerate() {
+                    yb[(r, pos)] = y[orig];
+                }
+            }
+            let out = rt
+                .execute(&key, &[Value::Matrix(x_perm), Value::Matrix(yb), Value::Scalar(lambda)])
+                .context("artifact execution failed")?;
+            let Value::Matrix(dv) = &out[0] else {
+                anyhow::bail!("artifact returned unexpected output type")
+            };
+            let mut result = vec![vec![f64::NAN; x.rows()]; b];
+            for r in 0..b {
+                for (pos, &orig) in order.iter().enumerate() {
+                    result[r][orig] = dv[(r, pos)];
+                }
+            }
+            return Ok((result, Engine::Xla));
+        }
+    }
+    // Native: one hat matrix + fold cache, response swapped per batch row.
+    let mut cv = AnalyticBinaryCv::fit(x, y_batch.first().context("empty batch")?, lambda)?;
+    let cache = crate::fastcv::FoldCache::prepare(&cv.hat, folds, false)?;
+    let mut result = Vec::with_capacity(b);
+    for y in y_batch {
+        cv.set_response(y);
+        result.push(cv.decision_values_cached(&cache));
+    }
+    Ok((result, Engine::Native))
+}
+
+/// Multi-class analytic CV (Alg. 2) with hybrid dispatch: step 1 (the
+/// expensive indicator-matrix regression + Eq. 14/15 fits) runs through the
+/// `analytic_mc_step1` artifact when shapes match; step 2 (per-fold `C×C`
+/// optimal-scores eig + nearest-centroid) always runs natively, mirroring
+/// the paper's observation that step 2 is negligible.
+pub fn analytic_multiclass_cv(
+    rt: Option<&XlaRuntime>,
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+) -> Result<(Vec<usize>, Engine)> {
+    crate::fastcv::validate_folds(folds, x.rows())?;
+    let n = x.rows();
+    if let (Some(rt), Some(nte)) = (rt, equal_fold_sizes(folds)) {
+        let covers_all: usize = folds.iter().map(|f| f.len()).sum();
+        let key = ArtifactKey::mc_step1(n, x.cols(), c, folds.len());
+        if covers_all == n && rt.has(&key) {
+            let order = fold_order(folds);
+            let x_perm = x.take_rows(&order);
+            let labels_perm: Vec<usize> = order.iter().map(|&i| labels[i]).collect();
+            let y_ind = crate::model::optimal_scoring::indicator_matrix(&labels_perm, c);
+            let out = rt
+                .execute(&key, &[Value::Matrix(x_perm), Value::Matrix(y_ind.clone()), Value::Scalar(lambda)])
+                .context("mc_step1 artifact failed")?;
+            let Value::Matrix(y_dot) = &out[0] else {
+                anyhow::bail!("mc_step1 output 0: expected (N,C) matrix")
+            };
+            let Value::Tensor3 { dims, data } = &out[1] else {
+                anyhow::bail!("mc_step1 output 1: expected (K,N,C) tensor")
+            };
+            anyhow::ensure!(dims == &[folds.len(), n, c], "tensor dims {:?}", dims);
+            // --- step 2 per fold, in permuted coordinates ---
+            let mut pred_perm = vec![usize::MAX; n];
+            for k in 0..folds.len() {
+                let te: Vec<usize> = (k * nte..(k + 1) * nte).collect();
+                let tr: Vec<usize> =
+                    (0..n).filter(|i| !(k * nte..(k + 1) * nte).contains(i)).collect();
+                let counts: Vec<f64> = {
+                    let mut cnt = vec![0.0; c];
+                    for &i in &tr {
+                        cnt[labels_perm[i]] += 1.0;
+                    }
+                    cnt
+                };
+                anyhow::ensure!(
+                    counts.iter().all(|&v| v > 0.0),
+                    "fold {k}: class absent from training set"
+                );
+                let n_tr = tr.len();
+                // Ẏ_Tr from the (K,N,C) tensor; Y_Tr from the indicator.
+                let y_dot_tr = Mat::from_fn(n_tr, c, |j, l| {
+                    data[k * n * c + tr[j] * c + l]
+                });
+                let y_tr = Mat::from_fn(n_tr, c, |j, l| y_ind[(tr[j], l)]);
+                let mut m = crate::linalg::matmul(&y_dot_tr.t(), &y_tr);
+                m.scale(1.0 / n_tr as f64);
+                let dp = Mat::diag(
+                    &counts.iter().map(|&v| v / n_tr as f64).collect::<Vec<_>>(),
+                );
+                let basis = crate::model::optimal_scoring::score_basis(&m, &dp, n_tr)?;
+                let theta_d = Mat::from_fn(c, basis.theta.cols(), |i, j| {
+                    basis.theta[(i, j)] * basis.d[j]
+                });
+                let y_dot_te = Mat::from_fn(nte, c, |j, l| y_dot[(te[j], l)]);
+                let z_te = crate::linalg::matmul(&y_dot_te, &theta_d);
+                let z_tr = crate::linalg::matmul(&y_dot_tr, &theta_d);
+                let mut centroids = Mat::zeros(c, z_tr.cols());
+                for (j, &i) in tr.iter().enumerate() {
+                    let l = labels_perm[i];
+                    for q in 0..z_tr.cols() {
+                        centroids[(l, q)] += z_tr[(j, q)];
+                    }
+                }
+                for l in 0..c {
+                    let inv = 1.0 / counts[l];
+                    for q in 0..z_tr.cols() {
+                        centroids[(l, q)] *= inv;
+                    }
+                }
+                let fold_pred =
+                    crate::model::lda_multiclass::nearest_centroid(&z_te, &centroids);
+                for (j, &i) in te.iter().enumerate() {
+                    pred_perm[i] = fold_pred[j];
+                }
+            }
+            // un-permute
+            let mut pred = vec![usize::MAX; n];
+            for (pos, &orig) in order.iter().enumerate() {
+                pred[orig] = pred_perm[pos];
+            }
+            return Ok((pred, Engine::Xla));
+        }
+    }
+    let cv = crate::fastcv::multiclass::AnalyticMulticlassCv::fit(x, labels, c, lambda)?;
+    Ok((cv.predict(folds)?, Engine::Native))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::kfold;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fold_order_roundtrip() {
+        let folds = vec![vec![3, 5], vec![0, 4], vec![1, 2]];
+        let order = fold_order(&folds);
+        assert_eq!(order, vec![3, 5, 0, 4, 1, 2]);
+        assert_eq!(equal_fold_sizes(&folds), Some(2));
+        let ragged = vec![vec![0], vec![1, 2]];
+        assert_eq!(equal_fold_sizes(&ragged), None);
+    }
+
+    #[test]
+    fn native_fallback_works_without_runtime() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(30, 4, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..30).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let folds = kfold(30, 5, &mut rng);
+        let (dv, engine) = analytic_cv(None, &x, &y, &folds, 0.2).unwrap();
+        assert_eq!(engine, Engine::Native);
+        assert!(dv.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn xla_and_native_agree_when_artifact_present() {
+        let Ok(rt) = XlaRuntime::load_default() else { return };
+        if rt.registry().is_empty() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let key = ArtifactKey::analytic_cv(40, 8, 5);
+        if !rt.has(&key) {
+            return;
+        }
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(40, 8, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..40).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let folds = kfold(40, 5, &mut rng); // random partition, equal sizes
+        let (dv_xla, e1) = analytic_cv(Some(&rt), &x, &y, &folds, 0.7).unwrap();
+        assert_eq!(e1, Engine::Xla);
+        let (dv_nat, e2) = analytic_cv(None, &x, &y, &folds, 0.7).unwrap();
+        assert_eq!(e2, Engine::Native);
+        crate::util::prop::assert_all_close(&dv_xla, &dv_nat, 1e-9, "hybrid parity");
+    }
+
+    #[test]
+    fn multiclass_hybrid_parity() {
+        let Ok(rt) = XlaRuntime::load_default() else { return };
+        let key = ArtifactKey::mc_step1(60, 12, 3, 5);
+        if !rt.has(&key) {
+            eprintln!("skipping: mc_step1 artifact absent");
+            return;
+        }
+        let mut rng = Rng::new(21);
+        let ds = crate::data::synthetic::generate(
+            &crate::data::synthetic::SyntheticSpec::multiclass(60, 12, 3),
+            &mut rng,
+        );
+        let folds = kfold(60, 5, &mut rng);
+        let (pred_xla, e1) =
+            analytic_multiclass_cv(Some(&rt), &ds.x, &ds.labels, 3, &folds, 0.6).unwrap();
+        assert_eq!(e1, Engine::Xla);
+        let (pred_nat, e2) =
+            analytic_multiclass_cv(None, &ds.x, &ds.labels, 3, &folds, 0.6).unwrap();
+        assert_eq!(e2, Engine::Native);
+        assert_eq!(pred_xla, pred_nat, "multiclass hybrid parity");
+        // and against retraining
+        let std =
+            crate::fastcv::multiclass::standard_cv_predict(&ds.x, &ds.labels, 3, &folds, 0.6)
+                .unwrap();
+        assert_eq!(pred_xla, std);
+    }
+
+    #[test]
+    fn batch_native_matches_single_calls() {
+        let mut rng = Rng::new(3);
+        let x = Mat::from_fn(20, 3, |_, _| rng.gauss());
+        let y: Vec<f64> = (0..20).map(|i| if i < 10 { 1.0 } else { -1.0 }).collect();
+        let folds = kfold(20, 4, &mut rng);
+        let mut perms = Vec::new();
+        for _ in 0..3 {
+            let p = rng.permutation(20);
+            perms.push(p.iter().map(|&i| y[i]).collect::<Vec<f64>>());
+        }
+        let (batch, _) = analytic_cv_batch(None, &x, &perms, &folds, 0.4).unwrap();
+        for (row, yp) in batch.iter().zip(&perms) {
+            let (single, _) = analytic_cv(None, &x, yp, &folds, 0.4).unwrap();
+            crate::util::prop::assert_all_close(row, &single, 1e-10, "batch vs single");
+        }
+    }
+}

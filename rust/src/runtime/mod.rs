@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` (Python, build-time only) lowers the L2 graphs to HLO
+//! text under `artifacts/` plus a `manifest.json`. This module is the only
+//! place the `xla` crate is touched: a CPU PJRT client compiles each HLO
+//! module once (cached per artifact) and executes it with `f64` literals
+//! marshalled from [`crate::linalg::Mat`].
+//!
+//! Because HLO artifacts are shape-static while the paper's sweeps vary
+//! (N, P, K) freely, [`hybrid`] dispatches to an exact-shape artifact when
+//! one exists and to the native Rust engine otherwise — with tests pinning
+//! both paths to identical numerics.
+
+pub mod artifacts;
+pub mod client;
+pub mod hybrid;
+
+pub use artifacts::{ArtifactKey, ArtifactRegistry};
+pub use client::XlaRuntime;

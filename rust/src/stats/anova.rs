@@ -1,0 +1,348 @@
+//! Factorial fixed-effects ANOVA.
+//!
+//! The paper's Results section reports three-way ANOVAs (features × N ×
+//! folds, etc.) on relative efficiency. This module reproduces those
+//! statistics: a full-factorial ANOVA with all interaction terms, computed
+//! via effect-coded least squares with sequential (type-I) sums of squares,
+//! plus the F-distribution tail probability through the regularised
+//! incomplete beta function.
+
+use crate::linalg::{matvec, matvec_t, syrk_t, Lu, Mat};
+
+/// One factor: a name and a per-observation level index.
+#[derive(Clone, Debug)]
+pub struct Factor {
+    pub name: String,
+    /// level of each observation, 0-based
+    pub levels: Vec<usize>,
+    /// number of distinct levels
+    pub n_levels: usize,
+}
+
+impl Factor {
+    /// Build a factor from raw level codes (auto-compacted).
+    pub fn new<S: Into<String>>(name: S, raw: &[usize]) -> Factor {
+        let mut uniq: Vec<usize> = raw.to_vec();
+        uniq.sort_unstable();
+        uniq.dedup();
+        let levels = raw.iter().map(|r| uniq.binary_search(r).unwrap()).collect();
+        Factor { name: name.into(), levels, n_levels: uniq.len() }
+    }
+
+    /// Build by binning a continuous covariate into quantile groups — the
+    /// paper treats `features` as continuous; binning gives a close factorial
+    /// analogue for the F-statistics.
+    pub fn from_continuous<S: Into<String>>(name: S, values: &[f64], bins: usize) -> Factor {
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let edges: Vec<f64> = (1..bins)
+            .map(|b| sorted[(b * values.len() / bins).min(values.len() - 1)])
+            .collect();
+        let raw: Vec<usize> = values
+            .iter()
+            .map(|v| edges.iter().take_while(|e| v > e).count())
+            .collect();
+        Factor::new(name, &raw)
+    }
+}
+
+/// One row of the ANOVA table.
+#[derive(Clone, Debug)]
+pub struct AnovaRow {
+    pub term: String,
+    pub df: usize,
+    pub sum_sq: f64,
+    pub f: f64,
+    pub p: f64,
+}
+
+/// Full-factorial ANOVA result.
+#[derive(Clone, Debug)]
+pub struct AnovaTable {
+    pub rows: Vec<AnovaRow>,
+    pub residual_df: usize,
+    pub residual_ss: f64,
+}
+
+/// Effect-coded columns for one factor (n_levels − 1 columns).
+fn effect_columns(f: &Factor, n: usize) -> Vec<Vec<f64>> {
+    let mut cols = Vec::new();
+    for l in 0..f.n_levels.saturating_sub(1) {
+        let mut c = vec![0.0; n];
+        for (i, &li) in f.levels.iter().enumerate() {
+            c[i] = if li == l {
+                1.0
+            } else if li == f.n_levels - 1 {
+                -1.0
+            } else {
+                0.0
+            };
+        }
+        cols.push(c);
+    }
+    cols
+}
+
+/// Element-wise products of column sets (interaction design columns).
+fn interact(a: &[Vec<f64>], b: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let mut out = Vec::new();
+    for ca in a {
+        for cb in b {
+            out.push(ca.iter().zip(cb).map(|(x, y)| x * y).collect());
+        }
+    }
+    out
+}
+
+/// Residual sum of squares of regressing `y` on `[1, cols]`.
+fn rss(cols: &[Vec<f64>], y: &[f64]) -> f64 {
+    let n = y.len();
+    let k = cols.len() + 1;
+    let mut x = Mat::zeros(n, k);
+    for i in 0..n {
+        x[(i, 0)] = 1.0;
+    }
+    for (j, c) in cols.iter().enumerate() {
+        x.set_col(j + 1, c);
+    }
+    let xtx = syrk_t(&x);
+    let xty = matvec_t(&x, y);
+    // Ridge-free normal equations; tiny jitter for numerical rank safety.
+    let mut a = xtx;
+    for i in 0..k {
+        a[(i, i)] += 1e-10;
+    }
+    let beta = Lu::factor(&a).expect("design matrix").solve_vec(&xty);
+    let fitted = matvec(&x, &beta);
+    y.iter().zip(&fitted).map(|(yi, fi)| (yi - fi) * (yi - fi)).sum()
+}
+
+/// Run a full-factorial ANOVA of `y` on the given factors (all main effects
+/// and all interactions up to the full order), sequential sums of squares.
+pub fn anova(y: &[f64], factors: &[Factor]) -> AnovaTable {
+    let n = y.len();
+    assert!(factors.iter().all(|f| f.levels.len() == n), "factor length mismatch");
+    assert!(!factors.is_empty() && factors.len() <= 3, "1..=3 factors supported");
+
+    // Enumerate terms: all non-empty subsets of factors, ordered by size.
+    let nf = factors.len();
+    let mut subsets: Vec<Vec<usize>> = (1..(1usize << nf))
+        .map(|mask| (0..nf).filter(|i| mask & (1 << i) != 0).collect())
+        .collect();
+    subsets.sort_by_key(|s| s.len());
+
+    let fac_cols: Vec<Vec<Vec<f64>>> = factors.iter().map(|f| effect_columns(f, n)).collect();
+
+    // Sequentially grow the design and record SS decrease per term.
+    let mut cols: Vec<Vec<f64>> = Vec::new();
+    let mut prev_rss = rss(&cols, y); // total SS around the mean
+    let mut rows = Vec::new();
+    for s in &subsets {
+        let mut term_cols = fac_cols[s[0]].clone();
+        for &fi in &s[1..] {
+            term_cols = interact(&term_cols, &fac_cols[fi]);
+        }
+        let df = term_cols.len();
+        cols.extend(term_cols);
+        let new_rss = rss(&cols, y);
+        let name = s.iter().map(|&i| factors[i].name.clone()).collect::<Vec<_>>().join(" × ");
+        rows.push((name, df, (prev_rss - new_rss).max(0.0)));
+        prev_rss = new_rss;
+    }
+
+    let model_df: usize = rows.iter().map(|r| r.1).sum();
+    let residual_df = n.saturating_sub(model_df + 1);
+    let residual_ss = prev_rss;
+    let ms_res = residual_ss / residual_df.max(1) as f64;
+
+    let rows = rows
+        .into_iter()
+        .map(|(term, df, ss)| {
+            let f = if ms_res > 0.0 && df > 0 { (ss / df as f64) / ms_res } else { f64::INFINITY };
+            let p = f_tail(f, df as f64, residual_df as f64);
+            AnovaRow { term, df, sum_sq: ss, f, p }
+        })
+        .collect();
+
+    AnovaTable { rows, residual_df, residual_ss }
+}
+
+/// Upper tail of the F(d1, d2) distribution: `P[F > f]`.
+pub fn f_tail(f: f64, d1: f64, d2: f64) -> f64 {
+    if !f.is_finite() {
+        return 0.0;
+    }
+    if f <= 0.0 {
+        return 1.0;
+    }
+    // P[F > f] = I_{d2/(d2 + d1 f)}(d2/2, d1/2)
+    reg_inc_beta(d2 / (d2 + d1 * f), d2 / 2.0, d1 / 2.0)
+}
+
+/// Regularised incomplete beta `I_x(a, b)` (Lentz continued fraction,
+/// Numerical Recipes §6.4).
+pub fn reg_inc_beta(x: f64, a: f64, b: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * beta_cf(x, a, b) / a
+    } else {
+        1.0 - front * beta_cf(1.0 - x, b, a) / b
+    }
+}
+
+fn beta_cf(x: f64, a: f64, b: f64) -> f64 {
+    const MAX_IT: usize = 300;
+    const EPS: f64 = 1e-14;
+    const TINY: f64 = 1e-300;
+    let qab = a + b;
+    let qap = a + 1.0;
+    let qam = a - 1.0;
+    let mut c = 1.0;
+    let mut d = 1.0 - qab * x / qap;
+    if d.abs() < TINY {
+        d = TINY;
+    }
+    d = 1.0 / d;
+    let mut h = d;
+    for m in 1..=MAX_IT {
+        let m = m as f64;
+        let m2 = 2.0 * m;
+        let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        h *= d * c;
+        let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+        d = 1.0 + aa * d;
+        if d.abs() < TINY {
+            d = TINY;
+        }
+        c = 1.0 + aa / c;
+        if c.abs() < TINY {
+            c = TINY;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    h
+}
+
+/// Lanczos log-gamma.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: [f64; 7] = [
+        76.18009172947146,
+        -86.50532032941677,
+        24.01409824083091,
+        -1.231739572450155,
+        0.1208650973866179e-2,
+        -0.5395239384953e-5,
+        2.5066282746310005,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = 1.000000000190015;
+    for g in &G[..6] {
+        y += 1.0;
+        ser += g / y;
+    }
+    -tmp + (G[6] * ser / x).ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ln_gamma_known() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - (24.0f64).ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - (std::f64::consts::PI.sqrt()).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f_tail_sanity() {
+        // F(1, inf-ish) tail at f=3.84 ~ chi2(1) tail ~ 0.05
+        let p = f_tail(3.84, 1.0, 100_000.0);
+        assert!((p - 0.05).abs() < 0.002, "p={p}");
+        assert!(f_tail(0.0, 3.0, 10.0) == 1.0);
+        assert!(f_tail(1e9, 3.0, 10.0) < 1e-6);
+    }
+
+    #[test]
+    fn detects_real_main_effect() {
+        let mut rng = Rng::new(1);
+        let n = 120;
+        let a_levels: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        let b_levels: Vec<usize> = (0..n).map(|i| (i / 2) % 3).collect();
+        let y: Vec<f64> = (0..n)
+            .map(|i| 2.0 * a_levels[i] as f64 + 0.3 * rng.gauss())
+            .collect();
+        let tab = anova(
+            &y,
+            &[Factor::new("A", &a_levels), Factor::new("B", &b_levels)],
+        );
+        let a_row = tab.rows.iter().find(|r| r.term == "A").unwrap();
+        let b_row = tab.rows.iter().find(|r| r.term == "B").unwrap();
+        let ab_row = tab.rows.iter().find(|r| r.term == "A × B").unwrap();
+        assert!(a_row.p < 1e-6, "A should be significant, p={}", a_row.p);
+        assert!(b_row.p > 0.01, "B should be null, p={}", b_row.p);
+        assert!(ab_row.p > 0.01, "A×B should be null, p={}", ab_row.p);
+    }
+
+    #[test]
+    fn detects_pure_interaction() {
+        let mut rng = Rng::new(2);
+        let n = 160;
+        let a: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        let b: Vec<usize> = (0..n).map(|i| (i / 2) % 2).collect();
+        // XOR pattern: no main effects, strong interaction.
+        let y: Vec<f64> = (0..n)
+            .map(|i| if a[i] ^ b[i] == 1 { 1.0 } else { -1.0 } + 0.3 * rng.gauss())
+            .collect();
+        let tab = anova(&y, &[Factor::new("A", &a), Factor::new("B", &b)]);
+        let ab = tab.rows.iter().find(|r| r.term == "A × B").unwrap();
+        assert!(ab.p < 1e-6, "interaction p={}", ab.p);
+    }
+
+    #[test]
+    fn three_way_layout_has_seven_terms() {
+        let n = 80;
+        let a: Vec<usize> = (0..n).map(|i| i % 2).collect();
+        let b: Vec<usize> = (0..n).map(|i| (i / 2) % 2).collect();
+        let c: Vec<usize> = (0..n).map(|i| (i / 4) % 2).collect();
+        let y: Vec<f64> = (0..n).map(|i| i as f64 * 0.01).collect();
+        let tab = anova(
+            &y,
+            &[Factor::new("A", &a), Factor::new("B", &b), Factor::new("C", &c)],
+        );
+        assert_eq!(tab.rows.len(), 7); // 3 mains + 3 two-way + 1 three-way
+    }
+
+    #[test]
+    fn continuous_binning() {
+        let vals: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let f = Factor::from_continuous("x", &vals, 4);
+        assert_eq!(f.n_levels, 4);
+        assert_eq!(f.levels[0], 0);
+        assert_eq!(f.levels[99], 3);
+    }
+}

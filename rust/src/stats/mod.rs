@@ -1,0 +1,117 @@
+//! Statistical sampling and descriptive statistics used by the simulated
+//! workloads (§2.12 of the paper) and by result reporting.
+
+pub mod anova;
+pub mod mvn;
+pub mod wishart;
+
+use crate::linalg::Mat;
+
+/// Per-class sample mean vectors for labelled data.
+/// `labels[i] ∈ 0..c`; returns a `c × p` matrix of class means.
+pub fn class_means(x: &Mat, labels: &[usize], c: usize) -> Mat {
+    assert_eq!(x.rows(), labels.len());
+    let p = x.cols();
+    let mut means = Mat::zeros(c, p);
+    let mut counts = vec![0usize; c];
+    for (i, &l) in labels.iter().enumerate() {
+        assert!(l < c, "label {l} out of range (c={c})");
+        counts[l] += 1;
+        let row = x.row(i);
+        let m = means.row_mut(l);
+        for j in 0..p {
+            m[j] += row[j];
+        }
+    }
+    for l in 0..c {
+        assert!(counts[l] > 0, "class {l} is empty");
+        let inv = 1.0 / counts[l] as f64;
+        for v in means.row_mut(l) {
+            *v *= inv;
+        }
+    }
+    means
+}
+
+/// Counts per class.
+pub fn class_counts(labels: &[usize], c: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; c];
+    for &l in labels {
+        counts[l] += 1;
+    }
+    counts
+}
+
+/// Within-class scatter matrix `S_w = Σ_j Σ_{i∈C_j} (x_i−m_j)(x_i−m_j)ᵀ`.
+pub fn within_scatter(x: &Mat, labels: &[usize], c: usize) -> Mat {
+    let means = class_means(x, labels, c);
+    let p = x.cols();
+    let mut sw = Mat::zeros(p, p);
+    let mut centered = vec![0.0; p];
+    for (i, &l) in labels.iter().enumerate() {
+        let row = x.row(i);
+        let m = means.row(l);
+        for j in 0..p {
+            centered[j] = row[j] - m[j];
+        }
+        crate::linalg::ger(&mut sw, 1.0, &centered, &centered);
+    }
+    sw
+}
+
+/// Between-classes scatter `S_b = Σ_j N_j (m_j−m̄)(m_j−m̄)ᵀ`.
+pub fn between_scatter(x: &Mat, labels: &[usize], c: usize) -> Mat {
+    let means = class_means(x, labels, c);
+    let counts = class_counts(labels, c);
+    let grand = x.col_means();
+    let p = x.cols();
+    let mut sb = Mat::zeros(p, p);
+    let mut d = vec![0.0; p];
+    for l in 0..c {
+        let m = means.row(l);
+        for j in 0..p {
+            d[j] = m[j] - grand[j];
+        }
+        crate::linalg::ger(&mut sb, counts[l] as f64, &d, &d);
+    }
+    sb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_means_and_counts() {
+        let x = Mat::from_rows(&[&[1.0, 0.0], &[3.0, 0.0], &[0.0, 2.0]]);
+        let labels = [0, 0, 1];
+        let m = class_means(&x, &labels, 2);
+        assert_eq!(m.row(0), &[2.0, 0.0]);
+        assert_eq!(m.row(1), &[0.0, 2.0]);
+        assert_eq!(class_counts(&labels, 2), vec![2, 1]);
+    }
+
+    #[test]
+    fn scatter_decomposition() {
+        // Total scatter about the grand mean = S_w + S_b (standard identity).
+        let x = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0], &[5.0, 4.0], &[6.0, 7.0], &[4.0, 4.0]]);
+        let labels = [0, 0, 1, 1, 1];
+        let sw = within_scatter(&x, &labels, 2);
+        let sb = between_scatter(&x, &labels, 2);
+        let grand = x.col_means();
+        let mut st = Mat::zeros(2, 2);
+        for i in 0..x.rows() {
+            let d: Vec<f64> = x.row(i).iter().zip(&grand).map(|(a, b)| a - b).collect();
+            crate::linalg::ger(&mut st, 1.0, &d, &d);
+        }
+        let total = sw.add(&sb);
+        assert!(total.max_abs_diff(&st) < 1e-10);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_class_rejected() {
+        let x = Mat::from_rows(&[&[1.0], &[2.0]]);
+        class_means(&x, &[0, 0], 2);
+    }
+}

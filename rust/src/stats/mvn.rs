@@ -1,0 +1,92 @@
+//! Multivariate normal sampling.
+
+use crate::linalg::{Cholesky, Mat};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Multivariate normal distribution `N(mean, Σ)` prepared for repeated
+/// sampling (Σ factored once).
+pub struct Mvn {
+    mean: Vec<f64>,
+    chol_l: Mat,
+}
+
+impl Mvn {
+    /// Build from mean and covariance (must be SPD).
+    pub fn new(mean: Vec<f64>, cov: &Mat) -> Result<Mvn> {
+        assert_eq!(mean.len(), cov.rows());
+        let ch = Cholesky::factor(cov)?;
+        Ok(Mvn { mean, chol_l: ch.l().clone() })
+    }
+
+    /// Dimensionality.
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Draw one sample into `out`.
+    pub fn sample_into(&self, rng: &mut Rng, out: &mut [f64]) {
+        let p = self.dim();
+        assert_eq!(out.len(), p);
+        // z ~ N(0, I); x = mean + L z
+        let mut z = vec![0.0; p];
+        rng.fill_gauss(&mut z);
+        for i in 0..p {
+            let mut s = self.mean[i];
+            let row = self.chol_l.row(i);
+            for k in 0..=i {
+                s += row[k] * z[k];
+            }
+            out[i] = s;
+        }
+    }
+
+    /// Draw `n` samples as rows of a matrix.
+    pub fn sample_n(&self, rng: &mut Rng, n: usize) -> Mat {
+        let mut out = Mat::zeros(n, self.dim());
+        for i in 0..n {
+            self.sample_into(rng, out.row_mut(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_moments_match() {
+        let mut rng = Rng::new(1);
+        let cov = Mat::from_rows(&[&[2.0, 0.6], &[0.6, 1.0]]);
+        let mvn = Mvn::new(vec![1.0, -2.0], &cov).unwrap();
+        let n = 40_000;
+        let xs = mvn.sample_n(&mut rng, n);
+        let means = xs.col_means();
+        assert!((means[0] - 1.0).abs() < 0.05, "mean0={}", means[0]);
+        assert!((means[1] + 2.0).abs() < 0.05, "mean1={}", means[1]);
+        // empirical covariance
+        let mut c = [[0.0f64; 2]; 2];
+        for i in 0..n {
+            let r = xs.row(i);
+            let d = [r[0] - means[0], r[1] - means[1]];
+            for a in 0..2 {
+                for b in 0..2 {
+                    c[a][b] += d[a] * d[b];
+                }
+            }
+        }
+        for a in 0..2 {
+            for b in 0..2 {
+                c[a][b] /= (n - 1) as f64;
+                assert!((c[a][b] - cov[(a, b)]).abs() < 0.07, "cov[{a}][{b}]={}", c[a][b]);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite_cov() {
+        let cov = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+        assert!(Mvn::new(vec![0.0, 0.0], &cov).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Wishart-distributed random covariance matrices.
+//!
+//! The paper's simulation (§2.12) samples the common within-class covariance
+//! from a Wishart distribution; we use the Bartlett decomposition, which
+//! needs only chi-squared and normal deviates and one triangular product.
+
+use crate::linalg::{matmul, Cholesky, Mat};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Sample `W ~ Wishart(scale, dof)` via the Bartlett decomposition:
+/// with `scale = L Lᵀ`, `W = L A Aᵀ Lᵀ` where `A` is lower triangular with
+/// `A[i,i] = sqrt(chi2(dof - i))` and `A[i,j] ~ N(0,1)` for `i > j`.
+pub fn sample_wishart(scale: &Mat, dof: usize, rng: &mut Rng) -> Result<Mat> {
+    let p = scale.rows();
+    assert!(dof >= p, "Wishart dof ({dof}) must be >= dimension ({p})");
+    let l = Cholesky::factor(scale)?.l().clone();
+    let mut a = Mat::zeros(p, p);
+    for i in 0..p {
+        a[(i, i)] = rng.chi2(dof - i).sqrt();
+        for j in 0..i {
+            a[(i, j)] = rng.gauss();
+        }
+    }
+    let la = matmul(&l, &a);
+    Ok(matmul(&la, &la.t()))
+}
+
+/// A well-conditioned random covariance for the simulations: Wishart draw
+/// with `dof = p + dof_extra`, rescaled to unit average variance, plus a
+/// small diagonal `jitter` to bound the condition number so both the
+/// standard and analytic paths stay numerically comparable.
+pub fn random_covariance(p: usize, dof_extra: usize, jitter: f64, rng: &mut Rng) -> Mat {
+    let mut w = sample_wishart(&Mat::eye(p), p + dof_extra, rng).expect("identity scale is SPD");
+    let scale = p as f64 / w.trace();
+    w.scale(scale);
+    for i in 0..p {
+        w[(i, i)] += jitter;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wishart_mean_is_dof_times_scale() {
+        let mut rng = Rng::new(1);
+        let p = 4;
+        let dof = 12;
+        let scale = Mat::from_fn(p, p, |i, j| if i == j { 1.0 } else { 0.2 });
+        let reps = 400;
+        let mut acc = Mat::zeros(p, p);
+        for _ in 0..reps {
+            acc.axpy(1.0 / reps as f64, &sample_wishart(&scale, dof, &mut rng).unwrap());
+        }
+        // E[W] = dof * scale
+        let mut expect = scale.clone();
+        expect.scale(dof as f64);
+        assert!(acc.max_abs_diff(&expect) < 0.9, "mean deviates: {:?}", acc);
+    }
+
+    #[test]
+    fn draws_are_spd() {
+        let mut rng = Rng::new(2);
+        for p in [1, 3, 8] {
+            let w = sample_wishart(&Mat::eye(p), p + 2, &mut rng).unwrap();
+            assert!(Cholesky::factor(&w).is_ok(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn random_covariance_normalised() {
+        let mut rng = Rng::new(3);
+        let p = 10;
+        let c = random_covariance(p, 5, 0.05, &mut rng);
+        assert!((c.trace() / p as f64 - 1.05).abs() < 1e-9);
+        assert!(Cholesky::factor(&c).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "dof")]
+    fn dof_below_dim_rejected() {
+        let mut rng = Rng::new(4);
+        let _ = sample_wishart(&Mat::eye(5), 3, &mut rng);
+    }
+}

@@ -1,0 +1,153 @@
+//! Minimal command-line parsing (no `clap` in the offline build).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options, flags, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw argument strings (excluding argv[0]).
+    /// `known_flags` lists option names that take *no* value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.opts.insert(body.to_string(), iter.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Self::parse(std::env::args().skip(1), known_flags)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Positional arguments after the subcommand.
+    pub fn rest(&self) -> &[String] {
+        if self.positional.is_empty() {
+            &[]
+        } else {
+            &self.positional[1..]
+        }
+    }
+
+    /// Is `--name` present as a bare flag (or any option with that key)?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.contains_key(name)
+    }
+
+    /// String option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a clear message on bad input.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(s) => match s.parse() {
+                Ok(v) => v,
+                Err(e) => {
+                    eprintln!("error: invalid value for --{name}: {s:?} ({e})");
+                    std::process::exit(2);
+                }
+            },
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--folds 5,10,20`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| match p.trim().parse() {
+                    Ok(v) => v,
+                    Err(e) => {
+                        eprintln!("error: invalid list element for --{name}: {p:?} ({e})");
+                        std::process::exit(2);
+                    }
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from), &["verbose", "quiet"])
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("sweep --exp f3a --n 100 --seed=42 --verbose out.tsv");
+        assert_eq!(a.subcommand(), Some("sweep"));
+        assert_eq!(a.get("exp"), Some("f3a"));
+        assert_eq!(a.get_parse_or("n", 0usize), 100);
+        assert_eq!(a.get_parse_or("seed", 0u64), 42);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.rest(), &["out.tsv".to_string()]);
+    }
+
+    #[test]
+    fn unknown_trailing_flag_without_value() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("sweep --folds 5,10,20");
+        assert_eq!(a.get_list::<usize>("folds", &[]), vec![5, 10, 20]);
+        assert_eq!(a.get_list::<usize>("missing", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_or("mode", "native"), "native");
+        assert_eq!(a.get_parse_or("reps", 20usize), 20);
+        assert!(!a.flag("verbose"));
+    }
+}

@@ -1,0 +1,89 @@
+//! General-purpose substrates built from scratch for the offline
+//! environment: RNG, thread pool, CLI parsing, JSON, tables, property tests,
+//! and timing helpers.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod threadpool;
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Geometrically spaced grid from `lo` to `hi` inclusive with `steps`
+/// points, deduplicated after rounding to integers — mirrors the paper's
+/// "10 to 1000 in 40 logarithmic steps" feature grid.
+pub fn log_grid_usize(lo: usize, hi: usize, steps: usize) -> Vec<usize> {
+    assert!(lo >= 1 && hi >= lo && steps >= 2);
+    let (l0, l1) = ((lo as f64).ln(), (hi as f64).ln());
+    let mut out: Vec<usize> = (0..steps)
+        .map(|i| (l0 + (l1 - l0) * i as f64 / (steps - 1) as f64).exp().round() as usize)
+        .collect();
+    out.dedup();
+    out
+}
+
+/// Median of a slice (copies + sorts; fine for result post-processing).
+pub fn median(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation (0 for n<2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_grid_endpoints_and_monotone() {
+        let g = log_grid_usize(10, 1000, 40);
+        assert_eq!(*g.first().unwrap(), 10);
+        assert_eq!(*g.last().unwrap(), 1000);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn stats_helpers() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(stddev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, dt) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! A miniature property-based testing harness (no `proptest` offline).
+//!
+//! A [`Cases`] driver draws seeded random test cases from user generators and
+//! runs an assertion closure per case; on failure it reports the seed and
+//! case index so the exact case can be replayed. Generators for the shapes
+//! the paper's invariants need (dims, folds, ridge values, class balances)
+//! live here too.
+
+use crate::util::rng::Rng;
+
+/// Property-test driver: `Cases::new(n).run(name, |rng| { ... })`.
+pub struct Cases {
+    n: usize,
+    base_seed: u64,
+}
+
+impl Cases {
+    /// `n` random cases; seed can be overridden via `FASTCV_PROP_SEED`.
+    pub fn new(n: usize) -> Cases {
+        let base_seed = std::env::var("FASTCV_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5eed_cafe);
+        Cases { n, base_seed }
+    }
+
+    /// Run `prop` for each case with a per-case RNG. The closure should
+    /// panic (e.g. via assert!) on property violation.
+    pub fn run<F: Fn(&mut Rng)>(&self, name: &str, prop: F) {
+        for case in 0..self.n {
+            let seed = self.base_seed.wrapping_add(case as u64);
+            let mut rng = Rng::new(seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property {name:?} failed at case {case} (replay with FASTCV_PROP_SEED={seed}): {msg}"
+                );
+            }
+        }
+    }
+}
+
+/// Draw a problem size (n_samples, n_features) biased toward small-but-
+/// interesting shapes, including P > N and P < N regimes.
+pub fn dims(rng: &mut Rng) -> (usize, usize) {
+    let n = 8 + rng.below(40); // 8..48 samples
+    let p = match rng.below(3) {
+        0 => 1 + rng.below(n.saturating_sub(2).max(1)), // P < N (classic)
+        1 => n + rng.below(30),                         // P >= N (needs ridge)
+        _ => 1 + rng.below(6),                          // tiny P
+    };
+    (n, p)
+}
+
+/// Number of folds valid for n samples (2..=min(n,12), occasionally LOO).
+pub fn folds(rng: &mut Rng, n: usize) -> usize {
+    if rng.below(5) == 0 {
+        n // leave-one-out
+    } else {
+        2 + rng.below(n.min(12).saturating_sub(2).max(1))
+    }
+}
+
+/// A ridge penalty: 0 sometimes (when allowed), else log-uniform 1e-4..1e3.
+pub fn ridge(rng: &mut Rng, allow_zero: bool) -> f64 {
+    if allow_zero && rng.below(4) == 0 {
+        0.0
+    } else {
+        10f64.powf(rng.uniform_in(-4.0, 3.0))
+    }
+}
+
+/// Class sizes for `c` classes totalling at least `min_per` each.
+pub fn class_sizes(rng: &mut Rng, c: usize, min_per: usize, extra: usize) -> Vec<usize> {
+    let mut sizes = vec![min_per; c];
+    for _ in 0..extra {
+        let i = rng.below(c);
+        sizes[i] += 1;
+    }
+    sizes
+}
+
+/// Assert two floats match to a relative-or-absolute tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64, what: &str) {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "{what}: {a} vs {b} (|Δ|={}, tol={})",
+        (a - b).abs(),
+        tol * scale
+    );
+}
+
+/// Assert two slices match element-wise (relative-or-absolute tolerance).
+#[track_caller]
+pub fn assert_all_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: {x} vs {y} (|Δ|={}, tol={})",
+            (x - y).abs(),
+            tol * scale
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cases_pass_when_property_holds() {
+        Cases::new(50).run("tautology", |rng| {
+            let x = rng.uniform();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with FASTCV_PROP_SEED=")]
+    fn cases_report_seed_on_failure() {
+        Cases::new(20).run("always-false", |rng| {
+            assert!(rng.uniform() < -1.0);
+        });
+    }
+
+    #[test]
+    fn dims_cover_both_regimes() {
+        let mut rng = Rng::new(1);
+        let (mut wide, mut tall) = (0, 0);
+        for _ in 0..200 {
+            let (n, p) = dims(&mut rng);
+            assert!(n >= 8 && p >= 1);
+            if p >= n {
+                wide += 1;
+            } else {
+                tall += 1;
+            }
+        }
+        assert!(wide > 20 && tall > 20);
+    }
+
+    #[test]
+    fn folds_valid() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let n = 8 + rng.below(40);
+            let k = folds(&mut rng, n);
+            assert!((2..=n).contains(&k));
+        }
+    }
+
+    #[test]
+    fn class_sizes_sum() {
+        let mut rng = Rng::new(3);
+        let s = class_sizes(&mut rng, 4, 3, 10);
+        assert_eq!(s.iter().sum::<usize>(), 22);
+        assert!(s.iter().all(|&x| x >= 3));
+    }
+
+    #[test]
+    fn close_helpers() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, "ok");
+        assert_all_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, "ok");
+    }
+}

@@ -1,0 +1,308 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! No external RNG crates are available in the offline build, so this module
+//! implements PCG64 (permuted congruential generator, O'Neill 2014) with the
+//! DXSM output permutation, plus the distribution samplers the paper's
+//! simulations need: uniform, standard normal (Box–Muller with caching),
+//! Fisher–Yates permutations, and categorical draws.
+//!
+//! Everything is seeded explicitly; the paper resets the seed between the
+//! analytical and standard timing runs so both see identical data and folds
+//! (§2.12) — [`Rng::fork`] supports that pattern cheaply.
+
+/// PCG64-DXSM pseudo-random generator. 128-bit state, 64-bit output.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+    /// Cached second output of the last Box–Muller transform.
+    gauss_cache: Option<f64>,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (stream id fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator with an explicit stream id; different streams are
+    /// statistically independent even for equal seeds.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        // SplitMix64 expansion of the seed into 128-bit state.
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^ (z >> 31)
+        };
+        let state = ((next() as u128) << 64) | next() as u128;
+        let inc = (((stream as u128) << 64) | next() as u128) | 1;
+        let mut rng = Rng { state, inc, gauss_cache: None };
+        // Burn a few outputs so low-entropy seeds decorrelate.
+        for _ in 0..4 {
+            rng.next_u64();
+        }
+        rng
+    }
+
+    /// Derive an independent child generator (used to give each simulated
+    /// subject / worker its own stream while keeping runs reproducible).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::with_stream(self.next_u64() ^ tag, tag.wrapping_mul(2) | 1)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // PCG64 DXSM output function.
+        let state = self.state;
+        self.state = state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let mut hi = (state >> 64) as u64;
+        let lo = (state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xda94_2042_e4dd_58b5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased integer in `[0, n)` (Lemire rejection method).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (second deviate cached).
+    pub fn gauss(&mut self) -> f64 {
+        if let Some(g) = self.gauss_cache.take() {
+            return g;
+        }
+        // Rejection-free polar-less form; u1 strictly positive.
+        let mut u1 = self.uniform();
+        while u1 <= f64::MIN_POSITIVE {
+            u1 = self.uniform();
+        }
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+        self.gauss_cache = Some(r * s);
+        r * c
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.gauss()
+    }
+
+    /// Fill a slice with standard normal deviates.
+    pub fn fill_gauss(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.gauss();
+        }
+    }
+
+    /// A uniformly random permutation of `0..n` (Fisher–Yates).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut p: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (partial Fisher–Yates).
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut p: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            p.swap(i, j);
+        }
+        p.truncate(k);
+        p
+    }
+
+    /// Random unit vector on the P-dimensional hypersphere (used by the
+    /// paper's simulation §2.12 to place class centroids).
+    pub fn unit_vector(&mut self, p: usize) -> Vec<f64> {
+        loop {
+            let mut v = vec![0.0; p];
+            self.fill_gauss(&mut v);
+            let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for x in v.iter_mut() {
+                    *x /= norm;
+                }
+                return v;
+            }
+        }
+    }
+
+    /// Chi-squared deviate with `k` degrees of freedom (sum of squared
+    /// normals for small k, Wilson–Hilferty-corrected gamma for large k).
+    pub fn chi2(&mut self, k: usize) -> f64 {
+        if k <= 32 {
+            let mut s = 0.0;
+            for _ in 0..k {
+                let g = self.gauss();
+                s += g * g;
+            }
+            s
+        } else {
+            // Wilson–Hilferty approximation, adequate for Wishart sampling
+            // of the *simulated* covariance (only distribution shape needed).
+            let kf = k as f64;
+            let z = self.gauss();
+            let c = 2.0 / (9.0 * kf);
+            kf * (1.0 - c + z * c.sqrt()).powi(3).max(0.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let (mut m, mut v) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gauss();
+            m += g;
+            v += g * g;
+        }
+        m /= n as f64;
+        v = v / n as f64 - m * m;
+        assert!(m.abs() < 0.02, "mean={m}");
+        assert!((v - 1.0).abs() < 0.03, "var={v}");
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        let mut r = Rng::new(5);
+        let p = r.permutation(100);
+        let mut seen = vec![false; 100];
+        for &i in &p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn choose_distinct() {
+        let mut r = Rng::new(9);
+        let k = r.choose(50, 10);
+        assert_eq!(k.len(), 10);
+        let mut s = k.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn unit_vector_has_unit_norm() {
+        let mut r = Rng::new(13);
+        for p in [1, 2, 10, 100] {
+            let v = r.unit_vector(p);
+            let n: f64 = v.iter().map(|x| x * x).sum();
+            assert!((n - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn chi2_mean_close_to_k() {
+        let mut r = Rng::new(17);
+        for k in [3usize, 40] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| r.chi2(k)).sum::<f64>() / n as f64;
+            assert!((mean - k as f64).abs() < 0.15 * k as f64, "k={k} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(100);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

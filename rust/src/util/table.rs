@@ -1,0 +1,162 @@
+//! ASCII table rendering for paper-style result reporting.
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new(), title: None }
+    }
+
+    /// Set a title line printed above the table.
+    pub fn with_title<S: Into<String>>(mut self, t: S) -> Table {
+        self.title = Some(t.into());
+        self
+    }
+
+    /// Append a row (stringified cells). Panics if the arity mismatches.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(cells.len(), self.header.len(), "row arity != header arity");
+        self.rows.push(cells);
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no data rows have been added.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with box-drawing separators.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut width = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let sep = |l: char, m: char, r: char| {
+            let mut s = String::new();
+            s.push(l);
+            for (i, w) in width.iter().enumerate() {
+                s.push_str(&"─".repeat(w + 2));
+                s.push(if i + 1 == cols { r } else { m });
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("│");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:>w$} │", c, w = width[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(t);
+            out.push('\n');
+        }
+        out.push_str(&sep('┌', '┬', '┐'));
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&sep('├', '┼', '┤'));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out.push_str(&sep('└', '┴', '┘'));
+        out
+    }
+
+    /// Render as tab-separated values (header + rows) for file dumps.
+    pub fn to_tsv(&self) -> String {
+        let mut out = self.header.join("\t");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `d` significant-looking decimals, trimming noise.
+pub fn fnum(x: f64, d: usize) -> String {
+    if x.abs() >= 1e5 || (x != 0.0 && x.abs() < 1e-4) {
+        format!("{x:.*e}", d)
+    } else {
+        format!("{x:.*}", d)
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn fdur(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["P", "rel.eff"]).with_title("demo");
+        t.row(vec!["10", "0.12"]);
+        t.row(vec!["1000", "3.01"]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("rel.eff"));
+        assert!(s.lines().count() >= 6);
+        // all body lines equal width
+        let widths: Vec<usize> = s.lines().skip(1).map(|l| l.chars().count()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "2"]);
+        assert_eq!(t.to_tsv(), "a\tb\n1\t2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1"]);
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(fnum(1.23456, 2), "1.23");
+        assert!(fnum(1.0e-7, 2).contains('e'));
+        assert!(fdur(0.5e-7).ends_with("ns"));
+        assert!(fdur(0.005).ends_with("ms"));
+        assert!(fdur(5.0).ends_with('s'));
+        assert!(fdur(600.0).ends_with("min"));
+    }
+}
