@@ -23,6 +23,9 @@ use fastcv::fastcv::perm::{
     analytic_binary_permutation, analytic_multiclass_permutation, standard_binary_permutation,
     standard_multiclass_permutation,
 };
+use fastcv::fastcv::perm_batch::{
+    analytic_binary_permutation_batched, analytic_multiclass_permutation_batched, BatchStrategy,
+};
 use fastcv::model::Reg;
 use fastcv::util::rng::Rng;
 use fastcv::util::timed;
@@ -80,23 +83,41 @@ fn main() -> anyhow::Result<()> {
         let folds = stratified_kfold(&ds.labels, 10, &mut rng);
         let mut rng_std = rng.fork(13);
         let mut rng_ana = rng.fork(13);
+        // Clone so the batched engine sees the identical anchor — its null
+        // distribution is then bit-identical to the serial analytic one.
+        let mut rng_bat = rng_ana.clone();
         let (std_res, t_std) = timed(|| {
             standard_binary_permutation(&ds.x, &ds.labels, &folds, Reg::Ridge(lambda), n_perm, &mut rng_std)
         });
         let (ana_res, t_ana) = timed(|| {
             analytic_binary_permutation(&ds.x, &ds.labels, &folds, lambda, n_perm, false, &mut rng_ana)
         });
+        let (bat_res, t_bat) = timed(|| {
+            analytic_binary_permutation_batched(
+                &ds.x, &ds.labels, &folds, lambda, n_perm, false, &mut rng_bat,
+                BatchStrategy::auto(),
+            )
+        });
         std_res?;
         let ana = ana_res?;
+        let bat = bat_res?;
+        assert!(
+            ana.null.iter().zip(&bat.null).all(|(a, b)| (a - b).abs() <= 1e-12),
+            "batched engine must reproduce the serial null distribution"
+        );
         report.push(&format!("subj{subj:02} binary P={}", ds.p()), t_std, t_ana);
+        report.push(&format!("subj{subj:02} binary-batched P={}", ds.p()), t_std, t_bat);
         rel_eff_large.push((t_std / t_ana).log10());
         println!(
-            "  subj{subj:02} binary  P={:<5} observed acc={:.3} p={:.3} | std {:.2}s ana {:.3}s",
+            "  subj{subj:02} binary  P={:<5} observed acc={:.3} p={:.3} | std {:.2}s ana {:.3}s \
+             batched {:.3}s ({:.1}x vs serial analytic)",
             ds.p(),
             ana.observed,
             ana.p_value,
             t_std,
-            t_ana
+            t_ana,
+            t_bat,
+            t_ana / t_bat
         );
 
         // ---- multi-class LDA, small + large (200 ms windows) ----
@@ -107,6 +128,7 @@ fn main() -> anyhow::Result<()> {
             let folds = stratified_kfold(&ds.labels, 10, &mut rng);
             let mut rng_std = rng.fork(17);
             let mut rng_ana = rng.fork(17);
+            let mut rng_bat = rng_ana.clone();
             let (std_res, t_std) = timed(|| {
                 standard_multiclass_permutation(
                     &ds.x, &ds.labels, 3, &folds, Reg::Ridge(lambda), n_perm, &mut rng_std,
@@ -115,19 +137,33 @@ fn main() -> anyhow::Result<()> {
             let (ana_res, t_ana) = timed(|| {
                 analytic_multiclass_permutation(&ds.x, &ds.labels, 3, &folds, lambda, n_perm, &mut rng_ana)
             });
-            let (std_res, ana_res) = (std_res?, ana_res?);
+            let (bat_res, t_bat) = timed(|| {
+                analytic_multiclass_permutation_batched(
+                    &ds.x, &ds.labels, 3, &folds, lambda, n_perm, &mut rng_bat,
+                    BatchStrategy::auto(),
+                )
+            });
+            let (std_res, ana_res, bat_res) = (std_res?, ana_res?, bat_res?);
             assert!(
                 (std_res.observed - ana_res.observed).abs() < 1e-9,
                 "multi-class engines must agree exactly"
             );
+            assert_eq!(
+                ana_res.null, bat_res.null,
+                "batched multi-class engine must reproduce the serial null"
+            );
             report.push(&format!("subj{subj:02} {tag}P={}", ds.p()), t_std, t_ana);
+            report.push(&format!("subj{subj:02} {tag}batched P={}", ds.p()), t_std, t_bat);
             println!(
-                "  subj{subj:02} multi   P={:<5} observed acc={:.3} p={:.3} | std {:.2}s ana {:.3}s",
+                "  subj{subj:02} multi   P={:<5} observed acc={:.3} p={:.3} | std {:.2}s ana {:.3}s \
+                 batched {:.3}s ({:.1}x vs serial analytic)",
                 ds.p(),
                 ana_res.observed,
                 ana_res.p_value,
                 t_std,
-                t_ana
+                t_ana,
+                t_bat,
+                t_ana / t_bat
             );
         }
     }

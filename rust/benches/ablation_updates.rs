@@ -10,17 +10,27 @@
 //!    update, so the "analytic" path degenerates to a refit per fold; timed
 //!    here via the standard engine with shrinkage regularisation.
 //!
+//! Plus the **permutation-engine ablation** (serial vs batched vs
+//! batched+threads) at the Fig. 3b-style scale; its timings are written to
+//! `BENCH_perm.json` (`$FASTCV_BENCH_OUT` or the working directory) for the
+//! perf trajectory.
+//!
 //! Run: `cargo bench --bench ablation_updates`
 
 use fastcv::bench::Bench;
 use fastcv::cv::folds::kfold;
 use fastcv::data::synthetic::{generate, SyntheticSpec};
 use fastcv::fastcv::binary::AnalyticBinaryCv;
+use fastcv::fastcv::perm::analytic_binary_permutation;
+use fastcv::fastcv::perm_batch::{analytic_binary_permutation_batched, BatchStrategy};
 use fastcv::fastcv::{woodbury, FoldCache};
 use fastcv::linalg::matvec;
 use fastcv::model::Reg;
+use fastcv::util::json::Json;
 use fastcv::util::rng::Rng;
 use fastcv::util::table::{fdur, Table};
+use fastcv::util::timed;
+use std::collections::BTreeMap;
 
 fn main() {
     let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
@@ -117,4 +127,108 @@ fn main() {
         table.row(vec![name.to_string(), fdur(t), format!("{:.1}x", t / base)]);
     }
     println!("{}", table.render());
+
+    perm_engine_ablation(tiny);
+}
+
+/// Serial vs batched vs batched+threads permutation engines at the paper's
+/// Fig. 3b-style "large-P" configuration (N=256, P=2048, K=10, 1000 perms
+/// by default; shrunk under FASTCV_BENCH_SCALE=tiny). Every engine produces
+/// a bit-identical null distribution — this ablation measures wall-clock
+/// only. Results go to BENCH_perm.json.
+fn perm_engine_ablation(tiny: bool) {
+    let (n, p, k, n_perm, threads) = if tiny { (40, 30, 5, 50, 2) } else { (256, 2048, 10, 1000, 8) };
+    let batch = 64;
+    let lambda = 1.0;
+    let mut rng = Rng::new(7);
+    let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+    let folds = kfold(n, k, &mut rng);
+
+    // The one-off hat/fold-cache build is shared by every engine; measure
+    // the *permutation stream* as t(n_perm) − t(0) so the ablation shows
+    // the quantity the engines actually change.
+    let stream_time = |run: &dyn Fn(usize)| -> (f64, f64) {
+        let (_, t_setup) = timed(|| run(0));
+        let (_, t_total) = timed(|| run(n_perm));
+        (t_total, (t_total - t_setup).max(1e-9))
+    };
+
+    let serial = |t: usize| {
+        analytic_binary_permutation(&ds.x, &ds.labels, &folds, lambda, t, false, &mut Rng::new(1))
+            .unwrap();
+    };
+    let batched_1 = |t: usize| {
+        analytic_binary_permutation_batched(
+            &ds.x,
+            &ds.labels,
+            &folds,
+            lambda,
+            t,
+            false,
+            &mut Rng::new(1),
+            BatchStrategy::new(batch, 1),
+        )
+        .unwrap();
+    };
+    let batched_t = |t: usize| {
+        analytic_binary_permutation_batched(
+            &ds.x,
+            &ds.labels,
+            &folds,
+            lambda,
+            t,
+            false,
+            &mut Rng::new(1),
+            BatchStrategy::new(batch, threads),
+        )
+        .unwrap();
+    };
+
+    let (serial_total, serial_stream) = stream_time(&serial);
+    let (b1_total, b1_stream) = stream_time(&batched_1);
+    let (bt_total, bt_stream) = stream_time(&batched_t);
+
+    let mut table = Table::new(vec!["engine", "total", "perm stream", "stream speedup"])
+        .with_title(format!(
+            "Ablation: permutation engines (N={n} P={p} K={k}, {n_perm} perms)"
+        ));
+    let mut engines = Vec::new();
+    for (name, total, stream) in [
+        ("serial", serial_total, serial_stream),
+        ("batched-b64-t1", b1_total, b1_stream),
+        (if threads == 8 { "batched-b64-t8" } else { "batched-b64-tN" }, bt_total, bt_stream),
+    ] {
+        let speedup = serial_stream / stream;
+        table.row(vec![name.to_string(), fdur(total), fdur(stream), format!("{speedup:.1}x")]);
+        let mut row = BTreeMap::new();
+        row.insert("engine".to_string(), Json::Str(name.to_string()));
+        row.insert("seconds_total".to_string(), Json::Num(total));
+        row.insert("seconds_perm_stream".to_string(), Json::Num(stream));
+        row.insert("speedup_vs_serial".to_string(), Json::Num(speedup));
+        engines.push(Json::Obj(row));
+    }
+    println!("{}", table.render());
+
+    let mut config = BTreeMap::new();
+    for (key, value) in [
+        ("n", n),
+        ("p", p),
+        ("k", k),
+        ("n_perm", n_perm),
+        ("batch", batch),
+        ("threads", threads),
+    ] {
+        config.insert(key.to_string(), Json::Num(value as f64));
+    }
+    config.insert("lambda".to_string(), Json::Num(lambda));
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("perm_engines".to_string()));
+    doc.insert("config".to_string(), Json::Obj(config));
+    doc.insert("engines".to_string(), Json::Arr(engines));
+    let out_dir = std::env::var("FASTCV_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = format!("{out_dir}/BENCH_perm.json");
+    match std::fs::write(&path, Json::Obj(doc).dump()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

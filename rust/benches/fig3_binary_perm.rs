@@ -1,8 +1,21 @@
-//! Fig. 3b — BinaryPerm sweep: relative efficiency over the feature grid.
+//! Fig. 3b — BinaryPerm sweep: relative efficiency over the feature grid,
+//! with the analytic arm run by both the serial and the batched+threaded
+//! permutation engines (identical accuracies by the determinism contract;
+//! only timing differs).
+//!
+//! Timing protocol: both passes run one point at a time (a 1-worker
+//! scheduler for the serial pass, a plain loop for the batched pass) so the
+//! engine comparison is not confounded by scheduler-level CPU contention,
+//! and the expensive standard arm is measured once — the batched pass
+//! reuses the serial pass's `t_std` instead of re-running it.
+//!
 //! Scale via env: FASTCV_BENCH_SCALE=tiny|medium|paper (default medium).
 //! Run: `cargo bench --bench fig3_binary_perm`
 
-use fastcv::coordinator::sweep::{grid, Experiment, SweepScale};
+use fastcv::coordinator::scheduler::job_seed;
+use fastcv::coordinator::sweep::{
+    grid, run_point_analytic_perm, Experiment, PermEngine, SweepScale,
+};
 use fastcv::coordinator::{Scheduler, SweepReport};
 
 fn scale_from_env() -> SweepScale {
@@ -15,13 +28,48 @@ fn scale_from_env() -> SweepScale {
 
 fn main() {
     let scale = scale_from_env();
-    let points = grid(Experiment::BinaryPerm, &scale);
-    eprintln!("fig3b: {} sweep points", points.len());
-    let sched = Scheduler::new(0, 2018, true);
-    let report = SweepReport::new(sched.run(&points));
-    println!("{}", report.render("Fig. 3b — BinaryPerm"));
+    let seed = 2018u64;
+    let serial_points = grid(Experiment::BinaryPerm, &scale);
+    let threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    eprintln!("fig3b: {} sweep points × 2 engines", serial_points.len());
+
+    let serial_results = Scheduler::new(1, seed, true).run(&serial_points);
+    let serial_report = SweepReport::new(serial_results);
+    println!("{}", serial_report.render("Fig. 3b — BinaryPerm (serial analytic engine)"));
+
+    // Batched pass: analytic arm only, standard-arm timings reused from the
+    // serial pass (same point → same seed → identical data and folds).
+    let mut batched_results = Vec::new();
+    for (i, point) in serial_points.iter().enumerate() {
+        let point = point.with_engine(PermEngine::Batched { batch: 64, threads });
+        match run_point_analytic_perm(&point, job_seed(seed, i)) {
+            Ok(mut r) => {
+                if let Some(s) = serial_report.results.iter().find(|s| {
+                    s.n == r.n && s.p == r.p && s.n_perm == r.n_perm && s.rep == r.rep
+                }) {
+                    r.t_std = s.t_std;
+                    r.acc_std = s.acc_std;
+                }
+                batched_results.push(r);
+            }
+            Err(e) => eprintln!("batched point {} failed: {e:#}", point.label()),
+        }
+    }
+    let batched_report = SweepReport::new(batched_results);
+    println!(
+        "{}",
+        batched_report
+            .render(&format!("Fig. 3b — BinaryPerm (batched engine, B=64 T={threads})"))
+    );
     if let Ok(dir) = std::env::var("FASTCV_BENCH_OUT") {
         std::fs::create_dir_all(&dir).ok();
-        std::fs::write(format!("{dir}/fig3b.tsv"), report.to_tsv()).ok();
+        let mut tsv = serial_report.to_tsv();
+        // Append batched rows minus the duplicated header.
+        let batched_tsv = batched_report.to_tsv();
+        if let Some((_, body)) = batched_tsv.split_once('\n') {
+            tsv.push_str(body);
+        }
+        std::fs::write(format!("{dir}/fig3b.tsv"), tsv).ok();
     }
 }

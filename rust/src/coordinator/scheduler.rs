@@ -16,6 +16,14 @@ pub struct Scheduler {
     verbose: bool,
 }
 
+/// Deterministic per-job RNG seed for job `index` of a sweep anchored at
+/// `base_seed` — the same derivation [`Scheduler::run`] uses, exposed so
+/// out-of-scheduler reruns (e.g. the engine-comparison benches) can
+/// regenerate the identical data and folds for a given point index.
+pub fn job_seed(base_seed: u64, index: usize) -> u64 {
+    base_seed ^ (index as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+}
+
 impl Scheduler {
     /// `workers = 0` → one per logical core (capped at 16).
     pub fn new(workers: usize, base_seed: u64, verbose: bool) -> Scheduler {
@@ -45,7 +53,7 @@ impl Scheduler {
         let verbose = self.verbose;
         self.pool.for_each(total, move |i| {
             let point = &points[i];
-            let seed = base_seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let seed = job_seed(base_seed, i);
             match run_point(point, seed) {
                 Ok(res) => {
                     *slots_ref[i].lock().unwrap() = Some(res);

@@ -12,6 +12,9 @@ use crate::fastcv::perm::{
     analytic_binary_permutation, analytic_multiclass_permutation, standard_binary_permutation,
     standard_multiclass_permutation,
 };
+use crate::fastcv::perm_batch::{
+    analytic_binary_permutation_batched, analytic_multiclass_permutation_batched, BatchStrategy,
+};
 use crate::fastcv::FoldCache;
 use crate::model::lda_binary::signed_codes;
 use crate::model::Reg;
@@ -55,6 +58,40 @@ impl Experiment {
     }
 }
 
+/// Which analytic engine runs the analytic arm of a permutation point.
+/// Ignored for the pure-CV experiments. Either choice yields bit-identical
+/// accuracies (the `perm_batch` determinism contract) — only timing moves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PermEngine {
+    /// One permutation at a time (Alg. 1/2 with cached fold LUs).
+    Serial,
+    /// Batched GEMM/multi-RHS engine, optionally thread-parallel.
+    Batched {
+        /// Permutations per response matrix.
+        batch: usize,
+        /// Worker threads (1 = caller thread only).
+        threads: usize,
+    },
+}
+
+impl PermEngine {
+    /// Short tag for labels / TSV columns.
+    pub fn tag(&self) -> String {
+        match self {
+            PermEngine::Serial => "serial".to_string(),
+            PermEngine::Batched { batch, threads } => format!("batched-b{batch}-t{threads}"),
+        }
+    }
+
+    /// The batching strategy, when batched.
+    pub fn strategy(&self) -> Option<BatchStrategy> {
+        match *self {
+            PermEngine::Serial => None,
+            PermEngine::Batched { batch, threads } => Some(BatchStrategy::new(batch, threads)),
+        }
+    }
+}
+
 /// One configuration to measure.
 #[derive(Clone, Debug)]
 pub struct SweepPoint {
@@ -73,13 +110,16 @@ pub struct SweepPoint {
     pub rep: usize,
     /// Ridge penalty (regularisation keeps wide configs well-posed).
     pub lambda: f64,
+    /// Analytic-arm engine for permutation experiments.
+    pub engine: PermEngine,
 }
 
 impl SweepPoint {
-    /// Short config label for tables.
+    /// Short config label for tables. Non-serial engines are tagged so the
+    /// report aggregates them as distinct configurations.
     pub fn label(&self) -> String {
         let k = if self.k == usize::MAX { "LOO".into() } else { self.k.to_string() };
-        match self.exp {
+        let base = match self.exp {
             Experiment::BinaryCv => format!("N={} P={} K={k}", self.n, self.p),
             Experiment::BinaryPerm => {
                 format!("N={} P={} K={k} T={}", self.n, self.p, self.n_perm)
@@ -88,7 +128,18 @@ impl SweepPoint {
             Experiment::MultiPerm => {
                 format!("N={} P={} K={k} C={} T={}", self.n, self.p, self.c, self.n_perm)
             }
+        };
+        match (self.exp, self.engine) {
+            (Experiment::BinaryPerm | Experiment::MultiPerm, PermEngine::Batched { .. }) => {
+                format!("{base} [{}]", self.engine.tag())
+            }
+            _ => base,
         }
+    }
+
+    /// The same point with a different analytic permutation engine.
+    pub fn with_engine(&self, engine: PermEngine) -> SweepPoint {
+        SweepPoint { engine, ..self.clone() }
     }
 }
 
@@ -97,6 +148,8 @@ impl SweepPoint {
 pub struct SweepResult {
     pub label: String,
     pub exp_tag: String,
+    /// Analytic-arm engine tag (`serial` / `batched-b…-t…`).
+    pub engine: String,
     pub n: usize,
     pub p: usize,
     pub k: usize,
@@ -198,7 +251,17 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                 for &p in &ps {
                     for k in [5usize, 10, 20, usize::MAX] {
                         for rep in 0..scale.reps {
-                            out.push(SweepPoint { exp, n, p, k, c: 2, n_perm: 0, rep, lambda });
+                            out.push(SweepPoint {
+                                exp,
+                                n,
+                                p,
+                                k,
+                                c: 2,
+                                n_perm: 0,
+                                rep,
+                                lambda,
+                                engine: PermEngine::Serial,
+                            });
                         }
                     }
                 }
@@ -209,7 +272,17 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                 for &p in &ps {
                     for &t in scale.perms_binary {
                         for rep in 0..scale.reps {
-                            out.push(SweepPoint { exp, n, p, k: 10, c: 2, n_perm: t, rep, lambda });
+                            out.push(SweepPoint {
+                                exp,
+                                n,
+                                p,
+                                k: 10,
+                                c: 2,
+                                n_perm: t,
+                                rep,
+                                lambda,
+                                engine: PermEngine::Serial,
+                            });
                         }
                     }
                 }
@@ -223,7 +296,17 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                             continue;
                         }
                         for rep in 0..scale.reps {
-                            out.push(SweepPoint { exp, n, p, k: 10, c, n_perm: 0, rep, lambda });
+                            out.push(SweepPoint {
+                                exp,
+                                n,
+                                p,
+                                k: 10,
+                                c,
+                                n_perm: 0,
+                                rep,
+                                lambda,
+                                engine: PermEngine::Serial,
+                            });
                         }
                     }
                 }
@@ -234,7 +317,17 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                 for &p in ps.iter().filter(|&&p| p <= scale.p_max_multi) {
                     for &t in scale.perms_multi {
                         for rep in 0..scale.reps {
-                            out.push(SweepPoint { exp, n, p, k: 10, c: 5, n_perm: t, rep, lambda });
+                            out.push(SweepPoint {
+                                exp,
+                                n,
+                                p,
+                                k: 10,
+                                c: 5,
+                                n_perm: t,
+                                rep,
+                                lambda,
+                                engine: PermEngine::Serial,
+                            });
                         }
                     }
                 }
@@ -267,6 +360,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
     let mut result = SweepResult {
         label: point.label(),
         exp_tag: format!("{:?}", point.exp),
+        engine: point.engine.tag(),
         n: point.n,
         p: point.p,
         k: k_actual,
@@ -299,7 +393,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
         }
         Experiment::BinaryPerm => {
             let mut rng_std = rng.fork(1);
-            let mut rng_ana = rng.fork(1); // same stream: identical permutations
+            let mut rng_ana = rng_std.clone(); // same state: identical permutation anchors
             let (std_res, t_std) = timed(|| {
                 standard_binary_permutation(
                     &ds.x,
@@ -310,8 +404,8 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     &mut rng_std,
                 )
             });
-            let (ana_res, t_ana) = timed(|| {
-                analytic_binary_permutation(
+            let (ana_res, t_ana) = timed(|| match point.engine.strategy() {
+                None => analytic_binary_permutation(
                     &ds.x,
                     &ds.labels,
                     &folds,
@@ -319,7 +413,17 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.n_perm,
                     false,
                     &mut rng_ana,
-                )
+                ),
+                Some(strategy) => analytic_binary_permutation_batched(
+                    &ds.x,
+                    &ds.labels,
+                    &folds,
+                    point.lambda,
+                    point.n_perm,
+                    false,
+                    &mut rng_ana,
+                    strategy,
+                ),
             });
             result.t_std = t_std;
             result.t_ana = t_ana;
@@ -348,7 +452,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
         }
         Experiment::MultiPerm => {
             let mut rng_std = rng.fork(1);
-            let mut rng_ana = rng.fork(1);
+            let mut rng_ana = rng_std.clone(); // same state: identical permutation anchors
             let (std_res, t_std) = timed(|| {
                 standard_multiclass_permutation(
                     &ds.x,
@@ -360,8 +464,8 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     &mut rng_std,
                 )
             });
-            let (ana_res, t_ana) = timed(|| {
-                analytic_multiclass_permutation(
+            let (ana_res, t_ana) = timed(|| match point.engine.strategy() {
+                None => analytic_multiclass_permutation(
                     &ds.x,
                     &ds.labels,
                     point.c,
@@ -369,7 +473,17 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.lambda,
                     point.n_perm,
                     &mut rng_ana,
-                )
+                ),
+                Some(strategy) => analytic_multiclass_permutation_batched(
+                    &ds.x,
+                    &ds.labels,
+                    point.c,
+                    &folds,
+                    point.lambda,
+                    point.n_perm,
+                    &mut rng_ana,
+                    strategy,
+                ),
             });
             result.t_std = t_std;
             result.t_ana = t_ana;
@@ -377,6 +491,100 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
             result.acc_ana = ana_res?.observed;
         }
     }
+    Ok(result)
+}
+
+/// Time only the *analytic* arm of a permutation point (the standard arm
+/// is skipped; `t_std`/`acc_std` are left at their defaults for the caller
+/// to fill from a previous measurement). Data, folds, and the permutation
+/// anchor are derived exactly as in [`run_point`], so for equal `(point,
+/// seed)` the analytic arm sees identical inputs. Errors on pure-CV
+/// experiments, which have no permutation arm to isolate.
+pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
+    anyhow::ensure!(
+        matches!(point.exp, Experiment::BinaryPerm | Experiment::MultiPerm),
+        "run_point_analytic_perm: {:?} is not a permutation experiment",
+        point.exp
+    );
+    let mut rng = Rng::with_stream(seed, (point.rep as u64) << 8);
+    let spec = if point.c == 2 {
+        SyntheticSpec::binary(point.n, point.p)
+    } else {
+        SyntheticSpec::multiclass(point.n, point.p, point.c)
+    };
+    let ds = generate(&spec, &mut rng);
+    let k_actual = if point.k == usize::MAX { point.n } else { point.k };
+    let folds = if point.k == usize::MAX {
+        leave_one_out(point.n)
+    } else if point.c == 2 {
+        kfold(point.n, k_actual, &mut rng)
+    } else {
+        stratified_kfold(&ds.labels, k_actual, &mut rng)
+    };
+    // Mirror run_point's RNG discipline: the analytic arm gets a clone of
+    // the fork the standard arm would have consumed.
+    let rng_std = rng.fork(1);
+    let mut rng_ana = rng_std.clone();
+
+    let mut result = SweepResult {
+        label: point.label(),
+        exp_tag: format!("{:?}", point.exp),
+        engine: point.engine.tag(),
+        n: point.n,
+        p: point.p,
+        k: k_actual,
+        c: point.c,
+        n_perm: point.n_perm,
+        rep: point.rep,
+        ..Default::default()
+    };
+    let (ana_res, t_ana) = if point.exp == Experiment::BinaryPerm {
+        timed(|| match point.engine.strategy() {
+            None => analytic_binary_permutation(
+                &ds.x,
+                &ds.labels,
+                &folds,
+                point.lambda,
+                point.n_perm,
+                false,
+                &mut rng_ana,
+            ),
+            Some(strategy) => analytic_binary_permutation_batched(
+                &ds.x,
+                &ds.labels,
+                &folds,
+                point.lambda,
+                point.n_perm,
+                false,
+                &mut rng_ana,
+                strategy,
+            ),
+        })
+    } else {
+        timed(|| match point.engine.strategy() {
+            None => analytic_multiclass_permutation(
+                &ds.x,
+                &ds.labels,
+                point.c,
+                &folds,
+                point.lambda,
+                point.n_perm,
+                &mut rng_ana,
+            ),
+            Some(strategy) => analytic_multiclass_permutation_batched(
+                &ds.x,
+                &ds.labels,
+                point.c,
+                &folds,
+                point.lambda,
+                point.n_perm,
+                &mut rng_ana,
+                strategy,
+            ),
+        })
+    };
+    result.t_ana = t_ana;
+    result.acc_ana = ana_res?.observed;
     Ok(result)
 }
 
@@ -408,6 +616,7 @@ mod tests {
             n_perm: 0,
             rep: 0,
             lambda: 1.0,
+            engine: PermEngine::Serial,
         };
         let r = run_point(&point, 1234).unwrap();
         assert!(r.t_std > 0.0 && r.t_ana > 0.0);
@@ -427,6 +636,7 @@ mod tests {
             n_perm: 0,
             rep: 0,
             lambda: 1.0,
+            engine: PermEngine::Serial,
         };
         let r = run_point(&point, 99).unwrap();
         assert!(
@@ -449,11 +659,49 @@ mod tests {
                 n_perm: 3,
                 rep: 0,
                 lambda: 1.0,
+                engine: PermEngine::Serial,
             };
             let r = run_point(&point, 7).unwrap();
             assert!(r.t_std > 0.0 && r.t_ana > 0.0);
             assert!((r.acc_std - r.acc_ana).abs() < 1e-9, "{exp:?}");
         }
+    }
+
+    #[test]
+    fn batched_engine_point_matches_serial() {
+        let serial = SweepPoint {
+            exp: Experiment::BinaryPerm,
+            n: 30,
+            p: 8,
+            k: 3,
+            c: 2,
+            n_perm: 6,
+            rep: 0,
+            lambda: 1.0,
+            engine: PermEngine::Serial,
+        };
+        let batched = serial.with_engine(PermEngine::Batched { batch: 4, threads: 2 });
+        let a = run_point(&serial, 7).unwrap();
+        let b = run_point(&batched, 7).unwrap();
+        assert_eq!(a.acc_ana, b.acc_ana, "engines must agree on accuracy");
+        assert_eq!(a.acc_std, b.acc_std);
+        assert_eq!(b.engine, "batched-b4-t2");
+        assert!(b.label.contains("batched"), "batched label tagged: {}", b.label);
+        // analytic-only rerun regenerates identical inputs → same accuracy
+        let only = run_point_analytic_perm(&batched, 7).unwrap();
+        assert_eq!(only.acc_ana, a.acc_ana);
+        assert!(run_point_analytic_perm(&serial.with_engine(PermEngine::Serial), 7)
+            .unwrap()
+            .acc_ana
+            .eq(&a.acc_ana));
+        assert!(
+            run_point_analytic_perm(
+                &SweepPoint { exp: Experiment::BinaryCv, ..serial.clone() },
+                7
+            )
+            .is_err(),
+            "pure-CV points must be rejected"
+        );
     }
 
     #[test]
@@ -467,6 +715,7 @@ mod tests {
             n_perm: 0,
             rep: 2,
             lambda: 0.5,
+            engine: PermEngine::Serial,
         };
         let a = run_point(&point, 42).unwrap();
         let b = run_point(&point, 42).unwrap();

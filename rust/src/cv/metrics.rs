@@ -2,22 +2,52 @@
 
 /// Accuracy of signed decision values against ±1 codes (the paper's
 /// "class +1 for ŷ ≥ 0, class −1 for ŷ < 0").
+///
+/// Samples with a `NaN` decision value are *skipped* — both numerator and
+/// denominator. `validate_folds` deliberately accepts partitions whose test
+/// sets do not cover every sample (subsampled CV), and the engines mark the
+/// uncovered samples `NaN`; counting those as errors would silently deflate
+/// the accuracy. Panics if no sample has a finite decision value.
 pub fn accuracy_signed(dvals: &[f64], y_signed: &[f64]) -> f64 {
     assert_eq!(dvals.len(), y_signed.len());
     assert!(!dvals.is_empty());
-    let correct = dvals
-        .iter()
-        .zip(y_signed)
-        .filter(|(&d, &y)| (d >= 0.0 && y > 0.0) || (d < 0.0 && y < 0.0))
-        .count();
-    correct as f64 / dvals.len() as f64
+    let mut correct = 0usize;
+    let mut covered = 0usize;
+    for (&d, &y) in dvals.iter().zip(y_signed) {
+        if d.is_nan() {
+            continue;
+        }
+        covered += 1;
+        if (d >= 0.0 && y > 0.0) || (d < 0.0 && y < 0.0) {
+            correct += 1;
+        }
+    }
+    assert!(covered > 0, "accuracy_signed: every decision value is NaN (no fold covered any sample)");
+    correct as f64 / covered as f64
 }
 
 /// Accuracy of predicted labels.
+///
+/// Predictions equal to `usize::MAX` — the engines' "not covered by any
+/// test fold" sentinel — are skipped from both numerator and denominator,
+/// mirroring [`accuracy_signed`]'s treatment of `NaN`. Panics if every
+/// prediction is the sentinel.
 pub fn accuracy_labels(pred: &[usize], truth: &[usize]) -> f64 {
     assert_eq!(pred.len(), truth.len());
     assert!(!pred.is_empty());
-    pred.iter().zip(truth).filter(|(a, b)| a == b).count() as f64 / pred.len() as f64
+    let mut correct = 0usize;
+    let mut covered = 0usize;
+    for (&p, &t) in pred.iter().zip(truth) {
+        if p == usize::MAX {
+            continue;
+        }
+        covered += 1;
+        if p == t {
+            correct += 1;
+        }
+    }
+    assert!(covered > 0, "accuracy_labels: every prediction is the uncovered sentinel");
+    correct as f64 / covered as f64
 }
 
 /// Area under the ROC curve via the rank statistic (ties get 0.5 credit).
@@ -136,6 +166,33 @@ mod tests {
         let y = [1.0, -1.0, -1.0, 1.0];
         // correct: 0 (1≥0,+), 1 (−2<0,−); wrong: 2 (0≥0 vs −), 3 (−0.1<0 vs +)
         assert_eq!(accuracy_signed(&dv, &y), 0.5);
+    }
+
+    #[test]
+    fn accuracy_skips_uncovered_samples() {
+        // Partial fold coverage: NaN decision values / usize::MAX labels
+        // are excluded from both numerator and denominator.
+        let dv = [1.0, f64::NAN, -2.0, f64::NAN];
+        let y = [1.0, -1.0, -1.0, 1.0];
+        assert_eq!(accuracy_signed(&dv, &y), 1.0);
+        let dv = [1.0, f64::NAN, 2.0, f64::NAN];
+        let y = [1.0, -1.0, -1.0, 1.0];
+        assert_eq!(accuracy_signed(&dv, &y), 0.5);
+        let pred = [0usize, usize::MAX, 1, usize::MAX];
+        let truth = [0usize, 1, 0, 1];
+        assert_eq!(accuracy_labels(&pred, &truth), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn accuracy_signed_rejects_all_nan() {
+        accuracy_signed(&[f64::NAN, f64::NAN], &[1.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sentinel")]
+    fn accuracy_labels_rejects_all_sentinel() {
+        accuracy_labels(&[usize::MAX, usize::MAX], &[0, 1]);
     }
 
     #[test]

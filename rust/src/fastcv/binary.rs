@@ -80,6 +80,84 @@ impl AnalyticBinaryCv {
         lu.solve_vec(&e_hat)
     }
 
+    /// Matrix-response variant of [`Self::set_response`] +
+    /// [`Self::decision_values_cached`]: each column of `ys` (`N × B`) is an
+    /// independent response (e.g. one label permutation), processed with
+    /// **one** GEMM `Ŷ = H·Y` and one multi-RHS solve per fold instead of
+    /// `B` matvecs and `B·K` single-RHS solves. Returns the `N × B`
+    /// cross-validated decision values (`NaN` for samples not covered by
+    /// any test fold). Does not touch the stored response.
+    pub fn decision_values_cached_mat(&self, cache: &FoldCache, ys: &Mat) -> Mat {
+        assert_eq!(ys.rows(), self.hat.n(), "response rows must equal N");
+        let b = ys.cols();
+        let y_hat = self.hat.fit_response_mat(ys);
+        let mut dvals = Mat::from_fn(self.hat.n(), b, |_, _| f64::NAN);
+        for (k, te) in cache.folds.iter().enumerate() {
+            let e_hat = Mat::from_fn(te.len(), b, |j, col| {
+                ys[(te[j], col)] - y_hat[(te[j], col)]
+            });
+            let e_dot = cache.lus[k].solve_mat(&e_hat);
+            for (j, &i) in te.iter().enumerate() {
+                for col in 0..b {
+                    dvals[(i, col)] = ys[(i, col)] - e_dot[(j, col)];
+                }
+            }
+        }
+        dvals
+    }
+
+    /// Matrix-response variant of [`Self::decision_values_bias_adjusted`]:
+    /// column `b` of `ys` is the signed-code response of the labelling
+    /// `labels_cols[b]`. One GEMM + one multi-RHS solve and one cross-block
+    /// GEMM per fold serve all `B` permutations; the per-column work is only
+    /// the `O(N)` class-mean pass of Eq. 15.
+    pub fn decision_values_bias_adjusted_mat(
+        &self,
+        cache: &FoldCache,
+        ys: &Mat,
+        labels_cols: &[Vec<usize>],
+    ) -> Result<Mat> {
+        assert_eq!(ys.rows(), self.hat.n(), "response rows must equal N");
+        assert_eq!(ys.cols(), labels_cols.len(), "one labelling per response column");
+        let cross = cache
+            .cross
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("FoldCache must be prepared with with_cross=true"))?;
+        let b = ys.cols();
+        let y_hat = self.hat.fit_response_mat(ys);
+        let mut dvals = Mat::from_fn(self.hat.n(), b, |_, _| f64::NAN);
+        for (k, te) in cache.folds.iter().enumerate() {
+            let tr = &cache.trains[k];
+            let e_hat = Mat::from_fn(te.len(), b, |j, col| {
+                ys[(te[j], col)] - y_hat[(te[j], col)]
+            });
+            let e_dot_te = cache.lus[k].solve_mat(&e_hat);
+            // Eq. 15 for all columns at once: corr = H_{Tr,Te} Ė_Te.
+            let corr = crate::linalg::matmul(&cross[k], &e_dot_te);
+            for (col, labels) in labels_cols.iter().enumerate() {
+                let mut sum = [0.0f64; 2];
+                let mut cnt = [0usize; 2];
+                for (j, &i) in tr.iter().enumerate() {
+                    let e_tr = (ys[(i, col)] - y_hat[(i, col)]) + corr[(j, col)];
+                    let ydot_tr = ys[(i, col)] - e_tr;
+                    sum[labels[i]] += ydot_tr;
+                    cnt[labels[i]] += 1;
+                }
+                anyhow::ensure!(
+                    cnt[0] > 0 && cnt[1] > 0,
+                    "fold {k}: a class is absent from the training set"
+                );
+                let mu1 = sum[0] / cnt[0] as f64;
+                let mu2 = sum[1] / cnt[1] as f64;
+                let shift = 0.5 * (mu1 + mu2); // = b_LR − b_LDA
+                for (j, &i) in te.iter().enumerate() {
+                    dvals[(i, col)] = (ys[(i, col)] - e_dot_te[(j, col)]) - shift;
+                }
+            }
+        }
+        Ok(dvals)
+    }
+
     /// Cross-validated decision values with the LDA bias adjustment (§2.5):
     /// for each fold the cross-validated *training* decision values `ẏ_Tr`
     /// (Eq. 15) give the projected class means, from which
@@ -101,7 +179,9 @@ impl AnalyticBinaryCv {
             let e_dot_te = self.fold_errors(te, &cache.lus[k]);
             // Eq. 15: ė_Tr = ê_Tr + H_{Tr,Te} ė_Te ; ẏ_Tr = y_Tr − ė_Tr
             let h_cross = &cross[k];
-            let corr = crate::linalg::matvec(h_cross, &e_dot_te);
+            // GEMM order: bit-identical to one column of the batched
+            // `matmul(cross, Ė)` in `decision_values_bias_adjusted_mat`.
+            let corr = crate::linalg::matvec_gemm_order(h_cross, &e_dot_te);
             // Projected class means on the training set (include b_LR).
             let mut sum = [0.0f64; 2];
             let mut cnt = [0usize; 2];
@@ -326,6 +406,52 @@ mod tests {
         cv.set_response(&y);
         let dv2 = cv.decision_values(&folds).unwrap();
         assert_all_close(&dv1, &dv2, 1e-12, "restored response");
+    }
+
+    #[test]
+    fn mat_variant_matches_serial_per_column() {
+        // Columnwise equality of the batched response path with the serial
+        // set_response path. Both the full-data fits (matvec_gemm_order vs
+        // one GEMM column) and the fold solves (solve_vec vs solve_mat
+        // column) share their accumulation order, so this is bitwise.
+        Cases::new(15).run("mat-response == serial", |rng| {
+            let n1 = 6 + rng.below(10);
+            let n2 = 6 + rng.below(10);
+            let p = 1 + rng.below(8);
+            let (x, labels) = labelled_problem(rng, n1, n2, p);
+            let n = n1 + n2;
+            let lambda = 10f64.powf(rng.uniform_in(-2.0, 1.0));
+            let y = signed_codes(&labels);
+            let folds = kfold(n, 2 + rng.below(4), rng);
+            let mut cv = AnalyticBinaryCv::fit(&x, &y, lambda).unwrap();
+            let cache = FoldCache::prepare(&cv.hat, &folds, true).unwrap();
+            // three permuted responses as columns
+            let b = 3;
+            let mut cols: Vec<Vec<f64>> = Vec::new();
+            let mut labels_cols: Vec<Vec<usize>> = Vec::new();
+            for _ in 0..b {
+                let perm = rng.permutation(n);
+                labels_cols.push(perm.iter().map(|&i| labels[i]).collect());
+                cols.push(signed_codes(labels_cols.last().unwrap()));
+            }
+            let ys = Mat::from_fn(n, b, |i, c| cols[c][i]);
+            let batched = cv.decision_values_cached_mat(&cache, &ys);
+            let adjusted = cv.decision_values_bias_adjusted_mat(&cache, &ys, &labels_cols);
+            for c in 0..b {
+                cv.set_response(&cols[c]);
+                let serial = cv.decision_values_cached(&cache);
+                let col: Vec<f64> = (0..n).map(|i| batched[(i, c)]).collect();
+                assert_all_close(&col, &serial, 1e-14, "cached mat column");
+                if let Ok(adj) = &adjusted {
+                    if let Ok(serial_adj) =
+                        cv.decision_values_bias_adjusted(&cache, &labels_cols[c])
+                    {
+                        let col: Vec<f64> = (0..n).map(|i| adj[(i, c)]).collect();
+                        assert_all_close(&col, &serial_adj, 1e-14, "bias-adjusted mat column");
+                    }
+                }
+            }
+        });
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! reused across every fold *and every label permutation* (§2.7) — that
 //! reuse is the entire source of the paper's speed-up.
 
-use crate::linalg::{gemm_acc, matmul, matvec, Cholesky, Lu, Mat};
+use crate::linalg::{gemm_acc, matmul, matvec_gemm_order, Cholesky, Lu, Mat};
 use crate::model::linreg::gram_ridged;
 use anyhow::{Context, Result};
 
@@ -84,8 +84,12 @@ impl HatMatrix {
     }
 
     /// Full-data fitted values `ŷ = H y` for a response/label vector.
+    ///
+    /// Computed in GEMM accumulation order ([`matvec_gemm_order`]) so the
+    /// result is bit-identical to one column of [`Self::fit_response_mat`]
+    /// — the serial and batched permutation engines rely on that equality.
     pub fn fit_response(&self, y: &[f64]) -> Vec<f64> {
-        matvec(&self.h, y)
+        matvec_gemm_order(&self.h, y)
     }
 
     /// Full-data fits for a response *matrix* (multi-class `Ŷ = H Y`).
@@ -202,7 +206,7 @@ mod tests {
         let hat = HatMatrix::build(&x, 0.7).unwrap();
         for i in [0usize, 4, 8] {
             for j in [1usize, 4, 7] {
-                let sxj = matvec(&hat.inv_gram(), hat.xa.row(j));
+                let sxj = crate::linalg::matvec(&hat.inv_gram(), hat.xa.row(j));
                 let hij = crate::linalg::dot(hat.xa.row(i), &sxj);
                 assert!((hat.h[(i, j)] - hij).abs() < 1e-10);
             }

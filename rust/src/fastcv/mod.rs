@@ -7,10 +7,37 @@
 //!   `b_LDA` bias adjustment (Eq. 15)
 //! - [`multiclass`] — the optimal-scoring extension (Alg. 2)
 //! - [`perm`] — permutation testing with a shared hat matrix (Alg. 1)
+//! - [`perm_batch`] — the batched, thread-parallel permutation engine
 //! - [`woodbury`] — the intermediate Woodbury identities (Eq. 9–12), kept
 //!   as a verifiable derivation and an ablation path
 //! - [`bigdata`] — §4.5's scaling strategies: streaming hat blocks (no
 //!   `N×N` materialisation), sparse random projections, LDA ensembles
+//!
+//! ## Batched permutation design
+//!
+//! Permutation testing is where the analytic approach pays off most
+//! (Fig. 3b/3d, Fig. 4): `H` and the per-fold `(I − H_Te)` LU factors are
+//! label-invariant (§2.7), so only `ŷ = H·y^σ` and the fold solves change
+//! per permutation. [`perm_batch`] pushes the reuse one level further by
+//! stacking `B` permuted responses into an `N×B` matrix: the per-permutation
+//! matvec/solve stream becomes one GEMM plus one multi-RHS solve per fold
+//! per batch, and batches fan out over the
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool). The matrix-response
+//! entry points are [`binary::AnalyticBinaryCv::decision_values_cached_mat`],
+//! [`binary::AnalyticBinaryCv::decision_values_bias_adjusted_mat`], and
+//! [`multiclass::AnalyticMulticlassCv::predict_cached_stacked`].
+//!
+//! ### RNG-stream determinism contract
+//!
+//! Every permutation engine draws exactly **one** `u64` anchor from the
+//! caller's RNG and derives permutation `t` as
+//! [`perm::permuted_labels`]`(labels, anchor, t)`, an independent shuffle
+//! from the counter-seeded [`Rng::stream`](crate::util::rng::Rng::stream).
+//! Permutations are addressable by index: serial, batched, and
+//! batched+threaded engines produce bit-identical null distributions for
+//! any batch size and thread count, and two engines handed RNGs in the
+//! same state see identical permutations. Changing the batching strategy
+//! can therefore never change a scientific result — only wall-clock.
 
 pub mod bigdata;
 pub mod binary;
@@ -18,6 +45,7 @@ pub mod hat;
 pub mod lambda_search;
 pub mod multiclass;
 pub mod perm;
+pub mod perm_batch;
 pub mod woodbury;
 
 use crate::linalg::{Lu, Mat};

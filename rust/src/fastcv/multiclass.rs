@@ -53,7 +53,8 @@ impl AnalyticMulticlassCv {
     }
 
     /// Algorithm 2: cross-validated predicted labels for every sample.
-    /// The cache must be prepared `with_cross = true`.
+    /// The cache must be prepared `with_cross = true`. Samples not covered
+    /// by any test fold keep the `usize::MAX` sentinel.
     pub fn predict_cached(&self, cache: &FoldCache) -> Result<Vec<usize>> {
         let cross = cache
             .cross
@@ -80,44 +81,9 @@ impl AnalyticMulticlassCv {
                 let e_tr = (self.y[(i, l)] - self.y_hat[(i, l)]) + corr[(j, l)];
                 self.y[(i, l)] - e_tr
             });
-            // --- step 2: optimal scores on the training fold ---
             let y_tr = Mat::from_fn(n_tr, c, |j, l| self.y[(tr[j], l)]);
-            let counts: Vec<f64> = {
-                let mut cnt = vec![0.0; c];
-                for &i in tr {
-                    cnt[self.labels[i]] += 1.0;
-                }
-                cnt
-            };
-            ensure!(
-                counts.iter().all(|&x| x > 0.0),
-                "fold {k}: class absent from training set — use stratified folds"
-            );
-            // M = Ẏ_Trᵀ Y_Tr / N_Tr ; Dp = Y_TrᵀY_Tr / N_Tr
-            let mut m = matmul(&y_dot_tr.t(), &y_tr);
-            m.scale(1.0 / n_tr as f64);
-            let dp = Mat::diag(&counts.iter().map(|&x| x / n_tr as f64).collect::<Vec<_>>());
-            let basis = score_basis(&m, &dp, n_tr)?;
-            // Discriminant scores: Ž = Ẏ Θ̇ Ḋ for test and train.
-            let theta_d = scale_cols(&basis.theta, &basis.d);
-            let z_te = matmul(&y_dot_te, &theta_d);
-            let z_tr = matmul(&y_dot_tr, &theta_d);
-            // Class centroids in score space from the training fold.
-            let ncomp = z_tr.cols();
-            let mut centroids = Mat::zeros(c, ncomp);
-            for (j, &i) in tr.iter().enumerate() {
-                let l = self.labels[i];
-                for q in 0..ncomp {
-                    centroids[(l, q)] += z_tr[(j, q)];
-                }
-            }
-            for l in 0..c {
-                let inv = 1.0 / counts[l];
-                for q in 0..ncomp {
-                    centroids[(l, q)] *= inv;
-                }
-            }
-            let fold_pred = nearest_centroid(&z_te, &centroids);
+            let fold_pred =
+                fold_step2_predict(k, c, tr, &self.labels, &y_tr, &y_dot_tr, &y_dot_te)?;
             for (j, &i) in te.iter().enumerate() {
                 pred[i] = fold_pred[j];
             }
@@ -125,11 +91,123 @@ impl AnalyticMulticlassCv {
         Ok(pred)
     }
 
+    /// Matrix-response variant of [`Self::set_labels`] +
+    /// [`Self::predict_cached`]: `y_stack` packs `B` class-indicator
+    /// matrices side by side (`N × B·C`, permutation `b` owning columns
+    /// `b·C..(b+1)·C`, with `labels_cols[b]` its labelling). Step 1 runs as
+    /// **one** GEMM `Ŷ = H·Y_stack` plus one multi-RHS solve and one
+    /// cross-block GEMM per fold for all `B` permutations; step 2 (the
+    /// `C×C` optimal-scores eig) runs per permutation through the *same*
+    /// per-fold code as the serial path, so predictions are bit-identical
+    /// to `B` serial `set_labels` + `predict_cached` calls.
+    ///
+    /// Uses only the label-invariant state of `self` (hat matrix and class
+    /// count) — the stored labelling is untouched.
+    pub fn predict_cached_stacked(
+        &self,
+        cache: &FoldCache,
+        y_stack: &Mat,
+        labels_cols: &[Vec<usize>],
+    ) -> Result<Vec<Vec<usize>>> {
+        let cross = cache
+            .cross
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("FoldCache must be prepared with with_cross=true"))?;
+        let c = self.n_classes;
+        let b = labels_cols.len();
+        let n = self.hat.n();
+        assert_eq!(y_stack.rows(), n, "stacked response rows must equal N");
+        assert_eq!(y_stack.cols(), b * c, "stacked response must be N × B·C");
+        let y_hat = self.hat.fit_response_mat(y_stack);
+        let mut preds = vec![vec![usize::MAX; n]; b];
+        for (k, te) in cache.folds.iter().enumerate() {
+            let tr = &cache.trains[k];
+            let n_tr = tr.len();
+            let e_hat_te = Mat::from_fn(te.len(), b * c, |j, col| {
+                y_stack[(te[j], col)] - y_hat[(te[j], col)]
+            });
+            let e_dot_te = cache.lus[k].solve_mat(&e_hat_te);
+            let corr = matmul(&cross[k], &e_dot_te);
+            for (p, labels) in labels_cols.iter().enumerate() {
+                let off = p * c;
+                let y_dot_te = Mat::from_fn(te.len(), c, |j, l| {
+                    y_stack[(te[j], off + l)] - e_dot_te[(j, off + l)]
+                });
+                let y_dot_tr = Mat::from_fn(n_tr, c, |j, l| {
+                    let i = tr[j];
+                    let e_tr =
+                        (y_stack[(i, off + l)] - y_hat[(i, off + l)]) + corr[(j, off + l)];
+                    y_stack[(i, off + l)] - e_tr
+                });
+                let y_tr = Mat::from_fn(n_tr, c, |j, l| y_stack[(tr[j], off + l)]);
+                let fold_pred =
+                    fold_step2_predict(k, c, tr, labels, &y_tr, &y_dot_tr, &y_dot_te)?;
+                for (j, &i) in te.iter().enumerate() {
+                    preds[p][i] = fold_pred[j];
+                }
+            }
+        }
+        Ok(preds)
+    }
+
     /// Convenience: prepare a cache and predict.
     pub fn predict(&self, folds: &[Vec<usize>]) -> Result<Vec<usize>> {
         let cache = FoldCache::prepare(&self.hat, folds, true)?;
         self.predict_cached(&cache)
     }
+}
+
+/// Step 2 of Algorithm 2 for one fold: from the cross-validated fits
+/// `Ẏ_Tr`/`Ẏ_Te` and the training-fold indicator `Y_Tr`, solve the `C×C`
+/// optimal-scores problem and classify the test fold by nearest centroid.
+/// Shared verbatim by the serial and stacked engines so that equal inputs
+/// yield bit-identical predictions.
+fn fold_step2_predict(
+    k: usize,
+    c: usize,
+    tr: &[usize],
+    labels: &[usize],
+    y_tr: &Mat,
+    y_dot_tr: &Mat,
+    y_dot_te: &Mat,
+) -> Result<Vec<usize>> {
+    let n_tr = tr.len();
+    let counts: Vec<f64> = {
+        let mut cnt = vec![0.0; c];
+        for &i in tr {
+            cnt[labels[i]] += 1.0;
+        }
+        cnt
+    };
+    ensure!(
+        counts.iter().all(|&x| x > 0.0),
+        "fold {k}: class absent from training set — use stratified folds"
+    );
+    // M = Ẏ_Trᵀ Y_Tr / N_Tr ; Dp = Y_TrᵀY_Tr / N_Tr
+    let mut m = matmul(&y_dot_tr.t(), y_tr);
+    m.scale(1.0 / n_tr as f64);
+    let dp = Mat::diag(&counts.iter().map(|&x| x / n_tr as f64).collect::<Vec<_>>());
+    let basis = score_basis(&m, &dp, n_tr)?;
+    // Discriminant scores: Ž = Ẏ Θ̇ Ḋ for test and train.
+    let theta_d = scale_cols(&basis.theta, &basis.d);
+    let z_te = matmul(y_dot_te, &theta_d);
+    let z_tr = matmul(y_dot_tr, &theta_d);
+    // Class centroids in score space from the training fold.
+    let ncomp = z_tr.cols();
+    let mut centroids = Mat::zeros(c, ncomp);
+    for (j, &i) in tr.iter().enumerate() {
+        let l = labels[i];
+        for q in 0..ncomp {
+            centroids[(l, q)] += z_tr[(j, q)];
+        }
+    }
+    for l in 0..c {
+        let inv = 1.0 / counts[l];
+        for q in 0..ncomp {
+            centroids[(l, q)] *= inv;
+        }
+    }
+    Ok(nearest_centroid(&z_te, &centroids))
 }
 
 /// Scale each column `j` of `m` by `d[j]`.
@@ -236,6 +314,33 @@ mod tests {
         assert_eq!(p_ana, p_ref, "permuted labels still exact");
         cv.set_labels(&labels);
         assert_eq!(cv.predict_cached(&cache).unwrap(), p0);
+    }
+
+    #[test]
+    fn stacked_variant_bit_identical_to_serial() {
+        let mut rng = Rng::new(7);
+        let (x, labels) = blobs(&mut rng, 10, 3, 6, 2.0);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let mut cv = AnalyticMulticlassCv::fit(&x, &labels, 3, 0.4).unwrap();
+        let cache = FoldCache::prepare(&cv.hat, &folds, true).unwrap();
+        let b = 4;
+        let mut labels_cols: Vec<Vec<usize>> = Vec::new();
+        for _ in 0..b {
+            let perm = rng.permutation(30);
+            labels_cols.push(perm.iter().map(|&i| labels[i]).collect());
+        }
+        let mut y_stack = Mat::zeros(30, b * 3);
+        for (p, lp) in labels_cols.iter().enumerate() {
+            for (i, &l) in lp.iter().enumerate() {
+                y_stack[(i, p * 3 + l)] = 1.0;
+            }
+        }
+        let stacked = cv.predict_cached_stacked(&cache, &y_stack, &labels_cols).unwrap();
+        for (p, lp) in labels_cols.iter().enumerate() {
+            cv.set_labels(lp);
+            let serial = cv.predict_cached(&cache).unwrap();
+            assert_eq!(stacked[p], serial, "stacked perm {p} must equal serial exactly");
+        }
     }
 
     #[test]

@@ -5,6 +5,20 @@
 //! `(I − H_Te)` LU factors are built **once**. The standard-approach
 //! engines retrain every fold model for every permutation — that contrast
 //! is exactly the paper's Fig. 3b/3d/Fig. 4 measurement.
+//!
+//! ## Permutation indexing (determinism contract)
+//!
+//! Every engine draws **one** `u64` anchor seed from the caller's RNG and
+//! derives permutation `t` as an independent Fisher–Yates shuffle of the
+//! *original* labelling using the counter-seeded stream
+//! [`Rng::stream`]`(anchor, t)` (see [`permuted_labels`]). Permutations are
+//! therefore addressable by index: any engine — serial ([`self`]), batched
+//! or batched+threaded ([`super::perm_batch`]) — that agrees on the anchor
+//! produces the *identical* sequence of permuted labellings, so their null
+//! distributions match bit-for-bit regardless of batch size, thread count,
+//! or evaluation order. Two engines handed RNGs in the same state (e.g.
+//! `Rng::new(s)` twice) also see identical permutations, which is what the
+//! analytic-vs-standard agreement tests rely on.
 
 use super::binary::AnalyticBinaryCv;
 use super::multiclass::AnalyticMulticlassCv;
@@ -28,9 +42,22 @@ pub struct PermutationResult {
     pub p_value: f64,
 }
 
-fn p_value(observed: f64, null: &[f64]) -> f64 {
+pub(crate) fn p_value(observed: f64, null: &[f64]) -> f64 {
     let ge = null.iter().filter(|&&v| v >= observed).count();
     (1 + ge) as f64 / (1 + null.len()) as f64
+}
+
+/// Labels of permutation `idx` in the family anchored at `anchor`: an
+/// independent Fisher–Yates shuffle of the original labelling drawn from
+/// the counter-seeded stream [`Rng::stream`]`(anchor, idx)`.
+///
+/// A pure function of `(labels, anchor, idx)` — the determinism contract
+/// shared by the serial and batched engines (see the module docs).
+pub fn permuted_labels(labels: &[usize], anchor: u64, idx: u64) -> Vec<usize> {
+    let mut rng = Rng::stream(anchor, idx);
+    let mut perm = labels.to_vec();
+    rng.shuffle(&mut perm);
+    perm
 }
 
 /// Analytic binary permutation test (Algorithm 1). Accuracy metric.
@@ -59,10 +86,10 @@ pub fn analytic_binary_permutation(
         }
     };
     let observed = accuracy_signed(&dvals(&cv, labels)?, &y);
+    let anchor = rng.next_u64();
     let mut null = Vec::with_capacity(n_perm);
-    let mut labels_perm = labels.to_vec();
-    for _ in 0..n_perm {
-        rng.shuffle(&mut labels_perm);
+    for t in 0..n_perm {
+        let labels_perm = permuted_labels(labels, anchor, t as u64);
         let y_perm = signed_codes(&labels_perm);
         cv.set_response(&y_perm);
         null.push(accuracy_signed(&dvals(&cv, &labels_perm)?, &y_perm));
@@ -81,10 +108,10 @@ pub fn standard_binary_permutation(
     rng: &mut Rng,
 ) -> Result<PermutationResult> {
     let observed = crate::cv::runner::standard_binary_cv_accuracy(x, labels, folds, reg)?;
+    let anchor = rng.next_u64();
     let mut null = Vec::with_capacity(n_perm);
-    let mut labels_perm = labels.to_vec();
-    for _ in 0..n_perm {
-        rng.shuffle(&mut labels_perm);
+    for t in 0..n_perm {
+        let labels_perm = permuted_labels(labels, anchor, t as u64);
         null.push(crate::cv::runner::standard_binary_cv_accuracy(x, &labels_perm, folds, reg)?);
     }
     Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
@@ -103,10 +130,10 @@ pub fn analytic_multiclass_permutation(
     let mut cv = AnalyticMulticlassCv::fit(x, labels, c, lambda)?;
     let cache = FoldCache::prepare(&cv.hat, folds, true)?;
     let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
+    let anchor = rng.next_u64();
     let mut null = Vec::with_capacity(n_perm);
-    let mut labels_perm = labels.to_vec();
-    for _ in 0..n_perm {
-        rng.shuffle(&mut labels_perm);
+    for t in 0..n_perm {
+        let labels_perm = permuted_labels(labels, anchor, t as u64);
         cv.set_labels(&labels_perm);
         null.push(accuracy_labels(&cv.predict_cached(&cache)?, &labels_perm));
     }
@@ -124,10 +151,10 @@ pub fn standard_multiclass_permutation(
     rng: &mut Rng,
 ) -> Result<PermutationResult> {
     let observed = crate::cv::runner::standard_multiclass_cv_accuracy(x, labels, c, folds, reg)?;
+    let anchor = rng.next_u64();
     let mut null = Vec::with_capacity(n_perm);
-    let mut labels_perm = labels.to_vec();
-    for _ in 0..n_perm {
-        rng.shuffle(&mut labels_perm);
+    for t in 0..n_perm {
+        let labels_perm = permuted_labels(labels, anchor, t as u64);
         null.push(crate::cv::runner::standard_multiclass_cv_accuracy(
             x,
             &labels_perm,

@@ -1,0 +1,413 @@
+//! Batched, thread-parallel permutation testing (the GEMM formulation of
+//! §2.7 / Alg. 1 & 2).
+//!
+//! The serial engine in [`super::perm`] already reuses the hat matrix and
+//! the per-fold `(I − H_Te)` LU factors across permutations, but it still
+//! walks permutations one at a time: a matvec `ŷ = H·y^σ` plus `K`
+//! single-RHS triangular solves per permutation. Following the Gram-level
+//! batching of Engström & Jensen (2024, *Fast Partition-Based
+//! Cross-Validation*), this module stacks `B` permuted responses into an
+//! `N×B` matrix `Y^σ` and turns the whole per-permutation stream into
+//! matrix-level kernels:
+//!
+//! - `Ŷ = H·Y^σ` — one GEMM per batch instead of `B` matvecs;
+//! - `Ė_Te = (I−H_Te)⁻¹ Ê_Te` — one multi-RHS [`crate::linalg::Lu::solve_mat`]
+//!   per fold over all `B` columns;
+//! - Eq. 15 / Alg. 2 cross-terms `H_{Tr,Te}·Ė_Te` — one GEMM per fold.
+//!
+//! Batches are independent, so they fan out across the
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool) via
+//! [`BatchStrategy::threads`].
+//!
+//! ## Determinism
+//!
+//! Permutation `t` is derived from the counter-seeded stream
+//! [`Rng::stream`]`(anchor, t)` (see [`super::perm::permuted_labels`] and
+//! the contract in [`super::perm`]'s module docs), where the anchor is the
+//! single `u64` drawn from the caller's RNG — exactly as the serial engine
+//! draws it. The null distribution is therefore **bit-identical** to the
+//! serial engine's for any batch size and thread count: per-permutation
+//! arithmetic goes through kernels whose per-column results do not depend
+//! on the batch width (GEMM and the multi-RHS solves process columns as
+//! independent lanes), and the multi-class step 2 runs through the very
+//! same per-fold code as the serial path.
+
+use super::binary::AnalyticBinaryCv;
+use super::multiclass::AnalyticMulticlassCv;
+use super::perm::{p_value, permuted_labels, PermutationResult};
+use super::FoldCache;
+use crate::cv::metrics::{accuracy_labels, accuracy_signed};
+use crate::linalg::Mat;
+use crate::model::lda_binary::signed_codes;
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
+
+/// How the batched engine partitions and parallelises the permutation
+/// stream. Neither knob changes results — only wall-clock (see the
+/// determinism notes in the module docs).
+///
+/// Pool lifetime: when more than one batch exists and `threads > 1`, each
+/// engine call spawns (and joins) its own short-lived
+/// [`ThreadPool`](crate::util::threadpool::ThreadPool). Spawn cost is a few
+/// hundred microseconds — negligible against a multi-batch permutation
+/// stream, and single-batch runs (`n_perm ≤ batch_size`) never spawn a
+/// pool at all. If a future caller drives many tiny multi-batch tests in a
+/// tight loop, hoist a shared pool instead of widening this struct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchStrategy {
+    /// Permutations per response matrix (`B`); the GEMM/multi-RHS width.
+    pub batch_size: usize,
+    /// Worker threads batches fan out over (1 = run on the caller thread).
+    pub threads: usize,
+}
+
+impl Default for BatchStrategy {
+    fn default() -> Self {
+        BatchStrategy { batch_size: 64, threads: 1 }
+    }
+}
+
+impl BatchStrategy {
+    /// Explicit batch size and thread count (`threads` is floored at 1).
+    pub fn new(batch_size: usize, threads: usize) -> BatchStrategy {
+        assert!(batch_size > 0, "batch_size must be ≥ 1");
+        BatchStrategy { batch_size, threads: threads.max(1) }
+    }
+
+    /// Batch of 64, one worker per logical core (capped at 16).
+    pub fn auto() -> BatchStrategy {
+        let threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16);
+        BatchStrategy { batch_size: 64, threads }
+    }
+}
+
+/// Split `0..n_perm` into `(start, len)` batches of at most `batch_size`.
+fn batch_ranges(n_perm: usize, batch_size: usize) -> Vec<(usize, usize)> {
+    assert!(batch_size > 0);
+    let mut out = Vec::with_capacity(n_perm.div_ceil(batch_size));
+    let mut start = 0;
+    while start < n_perm {
+        let len = batch_size.min(n_perm - start);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Run every batch (serially or across a pool), concatenating the
+/// per-permutation accuracies in permutation-index order.
+fn run_batches<F>(batches: &[(usize, usize)], threads: usize, run: F) -> Result<Vec<f64>>
+where
+    F: Fn(usize, usize) -> Result<Vec<f64>> + Send + Sync,
+{
+    let per_batch: Vec<Result<Vec<f64>>> = if threads <= 1 || batches.len() <= 1 {
+        batches.iter().map(|&(start, len)| run(start, len)).collect()
+    } else {
+        let pool = ThreadPool::new(threads.min(batches.len()));
+        pool.map(batches.len(), |i| {
+            let (start, len) = batches[i];
+            run(start, len)
+        })
+    };
+    let mut null = Vec::new();
+    for r in per_batch {
+        null.extend(r?);
+    }
+    Ok(null)
+}
+
+/// Batched analytic binary permutation test (Algorithm 1, GEMM form).
+///
+/// Same contract as [`super::perm::analytic_binary_permutation`] — identical
+/// observed value, null distribution, and p-value for an RNG in the same
+/// state — at a fraction of the wall-clock (see `benches/ablation_updates.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_binary_permutation_batched(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    bias_adjust: bool,
+    rng: &mut Rng,
+    strategy: BatchStrategy,
+) -> Result<PermutationResult> {
+    let y = signed_codes(labels);
+    let cv = AnalyticBinaryCv::fit(x, &y, lambda)?;
+    let cache = FoldCache::prepare(&cv.hat, folds, bias_adjust)?;
+    let observed = if bias_adjust {
+        accuracy_signed(&cv.decision_values_bias_adjusted(&cache, labels)?, &y)
+    } else {
+        accuracy_signed(&cv.decision_values_cached(&cache), &y)
+    };
+    let anchor = rng.next_u64();
+    let n = labels.len();
+    let run = |start: usize, len: usize| -> Result<Vec<f64>> {
+        // Y^σ: one column per permutation in this batch.
+        let mut labels_cols: Vec<Vec<usize>> = Vec::with_capacity(len);
+        let mut ys = Mat::zeros(n, len);
+        for col in 0..len {
+            let labels_perm = permuted_labels(labels, anchor, (start + col) as u64);
+            let codes = signed_codes(&labels_perm);
+            for (i, &v) in codes.iter().enumerate() {
+                ys[(i, col)] = v;
+            }
+            labels_cols.push(labels_perm);
+        }
+        let dvals = if bias_adjust {
+            cv.decision_values_bias_adjusted_mat(&cache, &ys, &labels_cols)?
+        } else {
+            cv.decision_values_cached_mat(&cache, &ys)
+        };
+        let mut accs = Vec::with_capacity(len);
+        for col in 0..len {
+            let dv: Vec<f64> = (0..n).map(|i| dvals[(i, col)]).collect();
+            let yc: Vec<f64> = (0..n).map(|i| ys[(i, col)]).collect();
+            accs.push(accuracy_signed(&dv, &yc));
+        }
+        Ok(accs)
+    };
+    let null = run_batches(&batch_ranges(n_perm, strategy.batch_size), strategy.threads, run)?;
+    Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
+}
+
+/// Batched analytic multi-class permutation test (Algorithm 2, GEMM form).
+///
+/// Step 1 of every permutation in a batch runs as stacked matrix kernels
+/// (`N × B·C` responses); step 2 reuses the serial per-fold code, so the
+/// null distribution is bit-identical to
+/// [`super::perm::analytic_multiclass_permutation`] for an RNG in the same
+/// state.
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_multiclass_permutation_batched(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    rng: &mut Rng,
+    strategy: BatchStrategy,
+) -> Result<PermutationResult> {
+    let cv = AnalyticMulticlassCv::fit(x, labels, c, lambda)?;
+    let cache = FoldCache::prepare(&cv.hat, folds, true)?;
+    let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
+    let anchor = rng.next_u64();
+    let n = labels.len();
+    let run = |start: usize, len: usize| -> Result<Vec<f64>> {
+        let labels_cols: Vec<Vec<usize>> = (0..len)
+            .map(|col| permuted_labels(labels, anchor, (start + col) as u64))
+            .collect();
+        // Stacked indicator block: permutation p owns columns p·C..(p+1)·C.
+        let mut y_stack = Mat::zeros(n, len * c);
+        for (p, labels_perm) in labels_cols.iter().enumerate() {
+            for (i, &l) in labels_perm.iter().enumerate() {
+                y_stack[(i, p * c + l)] = 1.0;
+            }
+        }
+        let preds = cv.predict_cached_stacked(&cache, &y_stack, &labels_cols)?;
+        Ok(preds
+            .iter()
+            .zip(&labels_cols)
+            .map(|(pred, labels_perm)| accuracy_labels(pred, labels_perm))
+            .collect())
+    };
+    let null = run_batches(&batch_ranges(n_perm, strategy.batch_size), strategy.threads, run)?;
+    Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cv::folds::stratified_kfold;
+    use crate::fastcv::perm::{analytic_binary_permutation, analytic_multiclass_permutation};
+    use crate::model::lda_multiclass::tests::blobs;
+    use crate::util::prop::Cases;
+
+    /// The tentpole invariant: identical observed, null (±1e-12, which for
+    /// accuracies means identical correct-counts), and p-value.
+    fn assert_same_result(a: &PermutationResult, b: &PermutationResult, what: &str) {
+        assert!(
+            (a.observed - b.observed).abs() <= 1e-12,
+            "{what}: observed {} vs {}",
+            a.observed,
+            b.observed
+        );
+        assert_eq!(a.null.len(), b.null.len(), "{what}: null length");
+        for (i, (x, y)) in a.null.iter().zip(&b.null).enumerate() {
+            assert!((x - y).abs() <= 1e-12, "{what}: null[{i}] {x} vs {y}");
+        }
+        assert!((a.p_value - b.p_value).abs() <= 1e-12, "{what}: p-value");
+    }
+
+    const CONFIGS: [(usize, usize); 5] = [(1, 1), (7, 1), (64, 1), (7, 3), (16, 4)];
+
+    #[test]
+    fn batched_binary_bit_identical_to_serial() {
+        // Property test across shapes, fold counts, ridge values, bias
+        // adjustment, batch sizes, and thread counts.
+        Cases::new(10).run("binary batched == serial", |rng| {
+            let per = 8 + rng.below(10);
+            let p = 2 + rng.below(12);
+            let (x, labels) = blobs(rng, per, 2, p, 2.0);
+            let k = 2 + rng.below(4);
+            let folds = stratified_kfold(&labels, k, rng);
+            let lambda = 10f64.powf(rng.uniform_in(-2.0, 1.0));
+            let n_perm = 1 + rng.below(25);
+            let bias_adjust = rng.below(2) == 1;
+            let seed = rng.next_u64();
+            let serial = match analytic_binary_permutation(
+                &x,
+                &labels,
+                &folds,
+                lambda,
+                n_perm,
+                bias_adjust,
+                &mut Rng::new(seed),
+            ) {
+                Ok(r) => r,
+                Err(_) => return, // degenerate fold draw — valid skip
+            };
+            for (batch_size, threads) in CONFIGS {
+                let batched = analytic_binary_permutation_batched(
+                    &x,
+                    &labels,
+                    &folds,
+                    lambda,
+                    n_perm,
+                    bias_adjust,
+                    &mut Rng::new(seed),
+                    BatchStrategy::new(batch_size, threads),
+                )
+                .unwrap();
+                assert_same_result(
+                    &serial,
+                    &batched,
+                    &format!("binary B={batch_size} T={threads} bias={bias_adjust}"),
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn batched_multiclass_bit_identical_to_serial() {
+        Cases::new(6).run("multiclass batched == serial", |rng| {
+            let c = 3 + rng.below(2);
+            let per = 8 + rng.below(6);
+            let p = 2 + rng.below(10);
+            let (x, labels) = blobs(rng, per, c, p, 2.0);
+            let k = 3 + rng.below(3);
+            let folds = stratified_kfold(&labels, k, rng);
+            let lambda = 10f64.powf(rng.uniform_in(-1.5, 1.0));
+            let n_perm = 1 + rng.below(12);
+            let seed = rng.next_u64();
+            let serial = match analytic_multiclass_permutation(
+                &x,
+                &labels,
+                c,
+                &folds,
+                lambda,
+                n_perm,
+                &mut Rng::new(seed),
+            ) {
+                Ok(r) => r,
+                Err(_) => return, // degenerate permutation draw — valid skip
+            };
+            for (batch_size, threads) in CONFIGS {
+                let batched = analytic_multiclass_permutation_batched(
+                    &x,
+                    &labels,
+                    c,
+                    &folds,
+                    lambda,
+                    n_perm,
+                    &mut Rng::new(seed),
+                    BatchStrategy::new(batch_size, threads),
+                )
+                .unwrap();
+                assert_same_result(
+                    &serial,
+                    &batched,
+                    &format!("multiclass B={batch_size} T={threads}"),
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        // Direct batched-vs-batched check at a fixed batch size: the pool
+        // fan-out must be pure bookkeeping.
+        let mut rng = Rng::new(11);
+        let (x, labels) = blobs(&mut rng, 15, 2, 8, 2.5);
+        let folds = stratified_kfold(&labels, 5, &mut rng);
+        let base = analytic_binary_permutation_batched(
+            &x,
+            &labels,
+            &folds,
+            0.5,
+            40,
+            false,
+            &mut Rng::new(99),
+            BatchStrategy::new(8, 1),
+        )
+        .unwrap();
+        for threads in [2, 4, 8] {
+            let t = analytic_binary_permutation_batched(
+                &x,
+                &labels,
+                &folds,
+                0.5,
+                40,
+                false,
+                &mut Rng::new(99),
+                BatchStrategy::new(8, threads),
+            )
+            .unwrap();
+            assert_eq!(base.null, t.null, "threads={threads} must be bit-identical");
+            assert_eq!(base.p_value, t.p_value);
+        }
+    }
+
+    #[test]
+    fn zero_permutations_gives_p_one() {
+        let mut rng = Rng::new(3);
+        let (x, labels) = blobs(&mut rng, 10, 2, 4, 2.0);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let r = analytic_binary_permutation_batched(
+            &x,
+            &labels,
+            &folds,
+            0.5,
+            0,
+            false,
+            &mut rng,
+            BatchStrategy::default(),
+        )
+        .unwrap();
+        assert!(r.null.is_empty());
+        assert_eq!(r.p_value, 1.0);
+    }
+
+    #[test]
+    fn batch_ranges_cover_exactly() {
+        assert_eq!(batch_ranges(10, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(batch_ranges(3, 64), vec![(0, 3)]);
+        assert!(batch_ranges(0, 8).is_empty());
+        let ranges = batch_ranges(1000, 64);
+        let total: usize = ranges.iter().map(|&(_, l)| l).sum();
+        assert_eq!(total, 1000);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].0 + w[0].1, w[1].0, "contiguous");
+        }
+    }
+
+    #[test]
+    fn strategy_constructors() {
+        assert_eq!(BatchStrategy::default(), BatchStrategy { batch_size: 64, threads: 1 });
+        assert_eq!(BatchStrategy::new(8, 0).threads, 1, "threads floored at 1");
+        assert!(BatchStrategy::auto().threads >= 1);
+    }
+}

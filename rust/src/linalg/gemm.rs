@@ -181,6 +181,31 @@ pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
     (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
 }
 
+/// `y = A·x` with the *exact accumulation order* of [`gemm_acc`]'s blocked
+/// kernel: a sequential partial sum per KC-block of the inner dimension,
+/// block partials added in ascending order. The result is therefore
+/// bit-identical to one column of a `matmul` of any width — which is what
+/// lets the serial permutation engine (single response) and the batched
+/// engine (`N×B` responses) produce byte-equal decision values. Same flop
+/// count as [`matvec`]; only the summation association differs.
+pub fn matvec_gemm_order(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    let mut y = vec![0.0; a.rows()];
+    for k0 in (0..a.cols()).step_by(KC) {
+        let kc = KC.min(a.cols() - k0);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let row = &a.row(i)[k0..k0 + kc];
+            let xs = &x[k0..k0 + kc];
+            let mut acc = 0.0;
+            for (av, xv) in row.iter().zip(xs) {
+                acc += av * xv;
+            }
+            *yi += acc;
+        }
+    }
+    y
+}
+
 /// `y = Aᵀ·x`.
 pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows(), x.len());
@@ -307,6 +332,30 @@ mod tests {
                 for j in 0..p {
                     assert_eq!(g[(i, j)], g[(j, i)]);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_gemm_order_bitwise_matches_matmul_column() {
+        // The determinism contract of the permutation engines rests on this:
+        // a single-column product in GEMM order equals the corresponding
+        // column of a wide GEMM *exactly* (==, not approximately), for inner
+        // dimensions below and above the KC blocking threshold.
+        let mut rng = Rng::new(9);
+        for &(m, k, extra_cols) in &[(5, 7, 3), (33, 64, 5), (17, 300, 2), (64, 513, 4)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, extra_cols + 1);
+            let x = b.col(0);
+            let y = matvec_gemm_order(&a, &x);
+            let c = matmul(&a, &b);
+            for i in 0..m {
+                assert_eq!(y[i], c[(i, 0)], "({m},{k}) row {i}: not bitwise equal");
+            }
+            // and it is the same mathematical product as plain matvec
+            let y_ref = matvec(&a, &x);
+            for i in 0..m {
+                assert!((y[i] - y_ref[i]).abs() < 1e-10);
             }
         }
     }

@@ -16,7 +16,7 @@
 
 use anyhow::Result;
 use fastcv::coordinator::report::AnovaFactor;
-use fastcv::coordinator::sweep::{grid, Experiment, SweepScale};
+use fastcv::coordinator::sweep::{grid, Experiment, PermEngine, SweepScale};
 use fastcv::coordinator::{Scheduler, SweepReport};
 use fastcv::util::cli::Args;
 
@@ -55,6 +55,7 @@ fn print_usage() {
          COMMANDS\n\
            sweep --exp f3a|f3b|f3c|f3d   Fig. 3 relative-efficiency sweeps\n\
                  [--scale tiny|medium|paper] [--seed N] [--workers N] [--out DIR]\n\
+                 [--engine serial|batched] [--batch B] [--threads T]  (perm sweeps)\n\
            parity                        §4.1 N≈P crossover table\n\
            complexity                    Table 1 empirical scaling exponents\n\
            eeg [--subjects N] [--perms N] [--full]   Fig. 4 EEG/MEG permutation study\n\
@@ -88,7 +89,26 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let scale = scale_from(args);
     let seed: u64 = args.get_parse_or("seed", 2018);
     let workers: usize = args.get_parse_or("workers", 0);
-    let points = grid(exp, &scale);
+    let engine = match args.get_or("engine", "serial").as_str() {
+        "serial" => PermEngine::Serial,
+        "batched" => PermEngine::Batched {
+            batch: args.get_parse_or("batch", 64),
+            threads: args.get_parse_or("threads", 1),
+        },
+        other => anyhow::bail!("unknown engine {other:?} (serial|batched)"),
+    };
+    let mut points = grid(exp, &scale);
+    if engine != PermEngine::Serial {
+        // The engine only governs the analytic arm of permutation points;
+        // stamping it on pure-CV points would record an engine that never ran.
+        if matches!(exp, Experiment::BinaryPerm | Experiment::MultiPerm) {
+            for p in points.iter_mut() {
+                p.engine = engine;
+            }
+        } else {
+            eprintln!("--engine is ignored for {} (no permutation arm)", exp.name());
+        }
+    }
     eprintln!("{}: {} points", exp.name(), points.len());
     let sched = Scheduler::new(workers, seed, args.flag("verbose"));
     let results = sched.run(&points);
@@ -117,7 +137,17 @@ fn cmd_parity(args: &Args) -> Result<()> {
         (Experiment::BinaryCv, usize::MAX, 2),
         (Experiment::MultiCv, 10, 5),
     ] {
-        let point = SweepPoint { exp, n, p: n, k, c, n_perm: 0, rep: 0, lambda: 1.0 };
+        let point = SweepPoint {
+            exp,
+            n,
+            p: n,
+            k,
+            c,
+            n_perm: 0,
+            rep: 0,
+            lambda: 1.0,
+            engine: PermEngine::Serial,
+        };
         results.push(run_point(&point, seed)?);
     }
     let report = SweepReport::new(results);
@@ -150,6 +180,7 @@ fn cmd_complexity(args: &Args) -> Result<()> {
             n_perm: 0,
             rep: 0,
             lambda: 1.0,
+            engine: PermEngine::Serial,
         };
         let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
         rows_p.push((p as f64, r.t_std, r.t_ana));
@@ -168,6 +199,7 @@ fn cmd_complexity(args: &Args) -> Result<()> {
             n_perm: 0,
             rep: 0,
             lambda: 1.0,
+            engine: PermEngine::Serial,
         };
         let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
         rows_n.push((n as f64, r.t_std, r.t_ana));

@@ -76,29 +76,43 @@ impl ThreadPool {
     /// Run a batch of scoped closures that may borrow from the caller's
     /// stack; blocks until every closure has finished. Panics in jobs are
     /// counted and re-raised here as a single panic.
+    ///
+    /// Panic accounting is *per scope*: the counter lives in the scope's own
+    /// pending state, so a panicking unrelated [`ThreadPool::execute`] job
+    /// running concurrently on the same pool never fails an innocent scope
+    /// (it still shows up in the pool-wide [`ThreadPool::panic_count`]).
     pub fn scope<'env, F>(&self, jobs: Vec<F>)
     where
         F: FnOnce() + Send + 'env,
     {
-        let pending = Arc::new((Mutex::new(jobs.len()), Condvar::new()));
-        let before = self.panic_count();
+        /// Completion state owned by one `scope` call.
+        struct ScopeState {
+            left: Mutex<usize>,
+            done: Condvar,
+            panics: AtomicUsize,
+        }
 
         /// Decrements the pending counter on drop so a panicking job still
-        /// releases the scope (the panic itself is counted by the worker).
-        struct Guard(Arc<(Mutex<usize>, Condvar)>);
+        /// releases the scope (the panic itself is counted first).
+        struct Guard(Arc<ScopeState>);
         impl Drop for Guard {
             fn drop(&mut self) {
-                let (lock, cv) = &*self.0;
-                let mut left = lock.lock().unwrap();
+                let mut left = self.0.left.lock().unwrap();
                 *left -= 1;
                 if *left == 0 {
-                    cv.notify_all();
+                    self.0.done.notify_all();
                 }
             }
         }
 
+        let state = Arc::new(ScopeState {
+            left: Mutex::new(jobs.len()),
+            done: Condvar::new(),
+            panics: AtomicUsize::new(0),
+        });
+
         for job in jobs {
-            let pending = Arc::clone(&pending);
+            let state = Arc::clone(&state);
             let shared = Arc::clone(&self.shared);
             // SAFETY: we block below until the counter reaches zero, so no
             // scoped closure outlives 'env.
@@ -107,19 +121,22 @@ impl ThreadPool {
             self.execute(move || {
                 // Count the panic *before* the guard releases the scope so
                 // the waiter reliably observes it.
+                let guard = Guard(Arc::clone(&state));
                 if catch_unwind(AssertUnwindSafe(job)).is_err() {
                     shared.panics.fetch_add(1, Ordering::SeqCst);
+                    state.panics.fetch_add(1, Ordering::SeqCst);
                 }
-                drop(Guard(pending));
+                drop(guard);
             });
         }
-        let (lock, cv) = &*pending;
-        let mut left = lock.lock().unwrap();
+        let mut left = state.left.lock().unwrap();
         while *left > 0 {
-            left = cv.wait(left).unwrap();
+            left = state.done.wait(left).unwrap();
         }
-        if self.panic_count() > before {
-            panic!("{} job(s) panicked inside ThreadPool::scope", self.panic_count() - before);
+        drop(left);
+        let scope_panics = state.panics.load(Ordering::SeqCst);
+        if scope_panics > 0 {
+            panic!("{scope_panics} job(s) panicked inside ThreadPool::scope");
         }
     }
 
@@ -149,18 +166,37 @@ impl ThreadPool {
     }
 
     /// Parallel map over `0..n` collecting results in index order.
+    ///
+    /// Each scoped job owns a disjoint `&mut` chunk of the output, so there
+    /// is no per-element locking and `T` needs neither `Default` nor
+    /// `Clone` — this is the batched permutation engine's hot path.
     pub fn map<'env, T, F>(&self, n: usize, f: F) -> Vec<T>
     where
-        T: Send + 'env + Default + Clone,
+        T: Send + 'env,
         F: Fn(usize) -> T + Send + Sync + 'env,
     {
-        let out: Vec<Mutex<T>> = (0..n).map(|_| Mutex::new(T::default())).collect();
-        let out_ref = &out;
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out: Vec<Option<T>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let chunks = (self.size * 4).min(n);
+        let chunk_len = n.div_ceil(chunks);
         let f = &f;
-        self.for_each(n, move |i| {
-            *out_ref[i].lock().unwrap() = f(i);
-        });
-        out.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        let jobs: Vec<_> = out
+            .chunks_mut(chunk_len)
+            .enumerate()
+            .map(|(c, slots)| {
+                move || {
+                    let base = c * chunk_len;
+                    for (off, slot) in slots.iter_mut().enumerate() {
+                        *slot = Some(f(base + off));
+                    }
+                }
+            })
+            .collect();
+        self.scope(jobs);
+        out.into_iter().map(|slot| slot.expect("map slot filled")).collect()
     }
 }
 
@@ -263,5 +299,42 @@ mod tests {
     fn scope_propagates_panics() {
         let pool = ThreadPool::new(2);
         pool.scope(vec![|| panic!("boom")]);
+    }
+
+    #[test]
+    fn scope_ignores_concurrent_unrelated_execute_panic() {
+        // Regression: the old implementation diffed the *pool-wide* panic
+        // counter around the scope, so a panic from an unrelated `execute`
+        // job landing mid-scope failed the innocent scope call.
+        let pool = ThreadPool::new(2);
+        let before = pool.panic_count();
+        let pool_ref = &pool;
+        let sum = AtomicU64::new(0);
+        let sum_ref = &sum;
+        // The single scoped job submits a panicking fire-and-forget job to
+        // the second worker, then blocks until that panic has been counted —
+        // guaranteeing the unrelated panic lands while the scope is open.
+        pool.scope(vec![move || {
+            pool_ref.execute(|| panic!("unrelated execute job"));
+            let t0 = std::time::Instant::now();
+            while pool_ref.panic_count() <= before {
+                assert!(t0.elapsed().as_secs() < 10, "unrelated panic never counted");
+                std::thread::yield_now();
+            }
+            sum_ref.fetch_add(1, Ordering::SeqCst);
+        }]);
+        assert_eq!(sum.load(Ordering::SeqCst), 1, "scope job ran to completion");
+        assert_eq!(pool.panic_count(), before + 1, "pool-wide counter still sees it");
+    }
+
+    #[test]
+    fn map_works_without_default_or_clone() {
+        // T intentionally has no Default/Clone impl.
+        struct Opaque(usize);
+        let pool = ThreadPool::new(4);
+        let out = pool.map(103, Opaque);
+        assert_eq!(out.len(), 103);
+        assert!(out.iter().enumerate().all(|(i, v)| v.0 == i));
+        assert!(pool.map(0, Opaque).is_empty());
     }
 }

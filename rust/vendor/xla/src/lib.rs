@@ -1,0 +1,176 @@
+//! Offline stub of the `xla` PJRT bindings crate.
+//!
+//! The real crate links against libxla/PJRT shared objects that are not
+//! present in this image, and crates.io is unreachable from the build
+//! environment. This stub keeps `fastcv::runtime` compiling with the same
+//! API surface; every entry point reports "unavailable", so
+//! `PjRtClient::cpu()` fails cleanly and all callers take their native-Rust
+//! fallback paths (the runtime tests skip themselves in that case).
+//!
+//! If a real PJRT toolchain becomes available, delete this directory and
+//! point the `xla` dependency in `rust/Cargo.toml` at the real crate — no
+//! call-site changes are needed.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (implements `std::error::Error`,
+/// so `?` into `anyhow::Result` works at the call sites).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: XLA/PJRT runtime not available in this build (vendored stub)"
+    )))
+}
+
+/// PJRT client handle. `cpu()` always fails in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU PJRT client — always unavailable in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform string for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation into an executable.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// A compiled executable. Never constructible through the stub.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals; returns per-device, per-output buffers.
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Copy back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// 1-D literal from a slice.
+    pub fn vec1(_values: &[f64]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Array shape of this literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    /// Copy out as a typed host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Unpack a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+impl From<f64> for Literal {
+    fn from(_x: f64) -> Literal {
+        Literal { _private: () }
+    }
+}
+
+/// Shape of an array literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// An HLO module in proto form.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file — always unavailable in the stub.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// A computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn literal_constructors_exist() {
+        let l = Literal::vec1(&[1.0, 2.0]);
+        assert!(l.reshape(&[2, 1]).is_err());
+        let _scalar: Literal = 3.5.into();
+    }
+}

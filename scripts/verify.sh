@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Tier-1 verification + perf-trajectory artifact.
+#
+#   scripts/verify.sh          # build + test (hard gates), style (advisory),
+#                              # then emit BENCH_perm.json via the
+#                              # permutation-engine ablation bench
+#   FASTCV_SKIP_BENCH=1 scripts/verify.sh   # skip the bench step
+#
+# The style checks are advisory (reported, non-fatal): the seed codebase
+# predates rustfmt/clippy enforcement, and this environment may lack the
+# components entirely. CI runs them the same way.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+  echo "== style (advisory): cargo fmt --check =="
+  cargo fmt --all --check || echo "WARN: rustfmt check failed (advisory)"
+else
+  echo "rustfmt not installed; skipping fmt check"
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+  echo "== style (advisory): cargo clippy -D warnings =="
+  cargo clippy --workspace --all-targets -- -D warnings \
+    || echo "WARN: clippy failed (advisory)"
+else
+  echo "clippy not installed; skipping clippy"
+fi
+
+if [ "${FASTCV_SKIP_BENCH:-0}" != "1" ]; then
+  echo "== perf trajectory: permutation-engine ablation (BENCH_perm.json) =="
+  # tiny scale keeps this step quick; unset FASTCV_BENCH_SCALE for the
+  # paper-scale numbers (N=256, P=2048, 1000 perms, 8 threads).
+  FASTCV_BENCH_OUT="${FASTCV_BENCH_OUT:-.}" \
+    cargo bench --bench ablation_updates
+fi
+
+echo "verify: OK"
