@@ -1,24 +1,225 @@
-//! Ablation: native Rust engine vs AOT XLA artifact (PJRT) for the same
-//! analytic CV — quantifies what the compiled L1/L2 stack buys (or costs)
-//! on this CPU target, for the single-response and batched-permutation
-//! graphs.
+//! Ablation: Gram backends for the analytic CV hat build.
 //!
-//! Needs `make artifacts`; exits cleanly when none are present.
+//! 1. **Backend grid** (always runs) — primal vs dual vs spectral across an
+//!    N/P grid, timing one full analytic CV per backend, plus the λ-grid
+//!    sweep contrast: per-candidate hat rebuild (primal) vs one spectral
+//!    decomposition reused across the whole grid. Emits `BENCH_backend.json`
+//!    (`$FASTCV_BENCH_OUT` or the working directory) for the perf
+//!    trajectory. The headline rows: dual beats primal on the P ≫ N shapes
+//!    and the spectral sweep beats the per-λ rebuild on an 8-point grid.
+//! 2. **XLA artifact comparison** (skips cleanly without `make artifacts`)
+//!    — native Rust engine vs AOT XLA artifact (PJRT) for the same graphs.
+//!
+//! Env: `FASTCV_BENCH_SCALE=tiny` for a fast smoke run (CI).
 //! Run: `cargo bench --bench ablation_backend`
 
 use fastcv::bench::Bench;
 use fastcv::cv::folds::kfold;
 use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::fastcv::binary::AnalyticBinaryCv;
+use fastcv::fastcv::hat::{GramBackend, GramCache, HatMatrix};
+use fastcv::fastcv::lambda_search::{default_grid, hat_for_lambda, search_lambda_backend, SelectBy};
+use fastcv::fastcv::FoldCache;
 use fastcv::runtime::hybrid::{analytic_cv, analytic_cv_batch, Engine};
 use fastcv::runtime::XlaRuntime;
+use fastcv::util::json::Json;
 use fastcv::util::rng::Rng;
 use fastcv::util::table::{fdur, Table};
+use fastcv::util::threadpool::ThreadPool;
+use std::collections::BTreeMap;
 
 fn main() {
+    backend_grid_ablation();
+    xla_ablation();
+}
+
+/// One analytic CV (hat build + fold solves) through a given backend.
+fn run_cv(
+    x: &fastcv::linalg::Mat,
+    y: &[f64],
+    folds: &[Vec<usize>],
+    lambda: f64,
+    backend: GramBackend,
+    pool: Option<&ThreadPool>,
+) -> Vec<f64> {
+    let hat = HatMatrix::build_with(x, lambda, backend, pool).unwrap();
+    let cv = AnalyticBinaryCv::with_hat(hat, y);
+    let cache = FoldCache::prepare(&cv.hat, folds, false).unwrap();
+    cv.decision_values_cached(&cache)
+}
+
+fn backend_grid_ablation() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::quick()
+    };
+    let lambda = 1.0;
+    let shapes: &[(usize, usize)] = if tiny {
+        &[(40, 20), (24, 96), (20, 160)]
+    } else {
+        &[(200, 50), (150, 150), (100, 400), (60, 1200)]
+    };
+    let pool = ThreadPool::with_default_size(8);
+
+    let mut table = Table::new(vec!["shape", "primal", "dual", "spectral", "dual/primal"])
+        .with_title("Ablation: Gram backends, one analytic CV per backend".to_string());
+    let mut grid_rows = Vec::new();
+    for &(n, p) in shapes {
+        let mut rng = Rng::new((n * 131 + p) as u64);
+        let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+        let y = ds.y_signed();
+        let folds = kfold(n, 10.min(n / 3), &mut rng);
+
+        let t_primal =
+            bench.run(|| run_cv(&ds.x, &y, &folds, lambda, GramBackend::Primal, None)).median;
+        let t_dual = bench
+            .run(|| run_cv(&ds.x, &y, &folds, lambda, GramBackend::Dual, Some(&pool)))
+            .median;
+        let t_spectral =
+            bench.run(|| run_cv(&ds.x, &y, &folds, lambda, GramBackend::Spectral, Some(&pool))).median;
+
+        // agreement check rides along so the JSON records correctness too
+        let dv_p = run_cv(&ds.x, &y, &folds, lambda, GramBackend::Primal, None);
+        let dv_d = run_cv(&ds.x, &y, &folds, lambda, GramBackend::Dual, None);
+        let max_diff = dv_p
+            .iter()
+            .zip(&dv_d)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()));
+
+        let speedup = t_primal / t_dual;
+        table.row(vec![
+            format!("N={n} P={p}"),
+            fdur(t_primal),
+            fdur(t_dual),
+            fdur(t_spectral),
+            format!("{speedup:.2}x"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("n".to_string(), Json::Num(n as f64));
+        row.insert("p".to_string(), Json::Num(p as f64));
+        row.insert("seconds_primal".to_string(), Json::Num(t_primal));
+        row.insert("seconds_dual".to_string(), Json::Num(t_dual));
+        row.insert("seconds_spectral".to_string(), Json::Num(t_spectral));
+        row.insert("speedup_dual_vs_primal".to_string(), Json::Num(speedup));
+        row.insert("max_abs_dv_diff_dual".to_string(), Json::Num(max_diff));
+        grid_rows.push(Json::Obj(row));
+    }
+    println!("{}", table.render());
+
+    // λ-grid sweep: per-candidate primal rebuild vs one spectral
+    // decomposition shared across the whole grid (≥ 8 points).
+    let (n, p, k, g) = if tiny { (24, 96, 4, 8) } else { (80, 800, 8, 12) };
+    let mut rng = Rng::new(2024);
+    let mut spec = SyntheticSpec::binary(n, p);
+    spec.separation = 1.5;
+    let ds = generate(&spec, &mut rng);
+    let y = ds.y_signed();
+    let folds = kfold(n, k, &mut rng);
+    let grid = default_grid(g);
+    // True rebuild baseline: a from-scratch primal hat per candidate via
+    // `hat_for_lambda` — the pre-GramCache cost (`search_lambda_backend`
+    // with Primal already shares the gram across the grid, which is a
+    // different, cheaper arm measured separately below).
+    let rebuild_sweep = || {
+        let mut best = (f64::NEG_INFINITY, grid[0]);
+        for &l in &grid {
+            let hat = hat_for_lambda(&ds.x, l).unwrap();
+            let cv = AnalyticBinaryCv::with_hat(hat, &y);
+            let cache = FoldCache::prepare(&cv.hat, &folds, false).unwrap();
+            let acc =
+                fastcv::cv::metrics::accuracy_signed(&cv.decision_values_cached(&cache), &y);
+            if acc > best.0 {
+                best = (acc, l);
+            }
+        }
+        best
+    };
+    let t_rebuild = bench.run(&rebuild_sweep).median;
+    let t_primal_shared = bench
+        .run(|| {
+            search_lambda_backend(
+                &ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, GramBackend::Primal,
+            )
+            .unwrap()
+        })
+        .median;
+    let t_spectral_sweep = bench
+        .run(|| {
+            search_lambda_backend(
+                &ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, GramBackend::Spectral,
+            )
+            .unwrap()
+        })
+        .median;
+    // all three must pick the same winner — record it
+    let (_, rebuild_lambda) = rebuild_sweep();
+    let w_spectral = search_lambda_backend(
+        &ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, GramBackend::Spectral,
+    )
+    .unwrap();
+    let sweep_speedup = t_rebuild / t_spectral_sweep;
+    let mut sweep_table = Table::new(vec!["method", "time", "speedup"]).with_title(format!(
+        "λ-grid sweep: N={n} P={p} K={k}, {g} candidates"
+    ));
+    sweep_table.row(vec![
+        "primal rebuild per λ (hat_for_lambda)".into(),
+        fdur(t_rebuild),
+        "1.00x ref".into(),
+    ]);
+    sweep_table.row(vec![
+        "primal, shared gram (GramCache)".into(),
+        fdur(t_primal_shared),
+        format!("{:.1}x", t_rebuild / t_primal_shared),
+    ]);
+    sweep_table.row(vec![
+        "spectral, one decomposition".into(),
+        fdur(t_spectral_sweep),
+        format!("{sweep_speedup:.1}x"),
+    ]);
+    println!("{}", sweep_table.render());
+    println!(
+        "winner agreement: rebuild λ={} / spectral λ={}",
+        rebuild_lambda,
+        w_spectral.best_lambda()
+    );
+    // spectral GramCache reuse directly (no scoring): per-λ hat cost
+    let cache = GramCache::build(&ds.x, GramBackend::Spectral, Some(&pool));
+    let t_per_lambda = bench.run(|| cache.hat(1.0).unwrap()).median;
+
+    let mut sweep = BTreeMap::new();
+    for (key, value) in [("n", n), ("p", p), ("k", k), ("grid_points", g)] {
+        sweep.insert(key.to_string(), Json::Num(value as f64));
+    }
+    sweep.insert("seconds_primal_rebuild".to_string(), Json::Num(t_rebuild));
+    sweep.insert("seconds_primal_shared_gram".to_string(), Json::Num(t_primal_shared));
+    sweep.insert("seconds_spectral_reuse".to_string(), Json::Num(t_spectral_sweep));
+    sweep.insert("speedup_spectral_vs_rebuild".to_string(), Json::Num(sweep_speedup));
+    sweep.insert("seconds_spectral_hat_per_lambda".to_string(), Json::Num(t_per_lambda));
+    sweep.insert("same_winner".to_string(), Json::Bool(rebuild_lambda == w_spectral.best_lambda()));
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("gram_backends".to_string()));
+    doc.insert("lambda".to_string(), Json::Num(lambda));
+    doc.insert("grid".to_string(), Json::Arr(grid_rows));
+    doc.insert("lambda_grid_sweep".to_string(), Json::Obj(sweep));
+    let out_dir = std::env::var("FASTCV_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = format!("{out_dir}/BENCH_backend.json");
+    match std::fs::write(&path, Json::Obj(doc).dump()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
+/// Native Rust engine vs AOT XLA artifact (PJRT) for the same analytic CV —
+/// quantifies what the compiled L1/L2 stack buys (or costs) on this CPU
+/// target. Needs `make artifacts`; returns cleanly when none are present.
+fn xla_ablation() {
     let rt = match XlaRuntime::load_default() {
         Ok(rt) if !rt.registry().is_empty() => rt,
         _ => {
-            println!("no artifacts — run `make artifacts`; skipping backend ablation.");
+            println!("no artifacts — run `make artifacts`; skipping XLA ablation.");
             return;
         }
     };

@@ -4,9 +4,11 @@
 //! Run: `cargo bench --bench linalg_kernels`
 
 use fastcv::bench::Bench;
-use fastcv::linalg::{matmul, syrk_t, Cholesky, Lu, Mat};
+use fastcv::fastcv::bigdata::SparseProjection;
+use fastcv::linalg::{matmul, matmul_pool, syrk_t, Cholesky, Lu, Mat};
 use fastcv::util::rng::Rng;
 use fastcv::util::table::{fdur, Table};
+use fastcv::util::threadpool::ThreadPool;
 
 fn gflops(flops: f64, secs: f64) -> String {
     format!("{:.2}", flops / secs / 1e9)
@@ -66,5 +68,30 @@ fn main() {
             gflops(2.0 * (s * s * s) as f64 / 3.0, t),
         ]);
     }
+    // pool-parallel GEMM (the dual backend's K_c build path)
+    let pool = ThreadPool::with_default_size(8);
+    for &s in sizes {
+        let a = Mat::from_fn(s, s, |_, _| rng.gauss());
+        let b = Mat::from_fn(s, s, |_, _| rng.gauss());
+        let t = bench.run(|| matmul_pool(&a, &b, Some(&pool))).median;
+        table.row(vec![
+            format!("gemm (pool×{})", pool.size()),
+            format!("{s}x{s}x{s}"),
+            fdur(t),
+            gflops(2.0 * (s * s * s) as f64, t),
+        ]);
+    }
+    // CSC sparse random projection (bigdata §4.5 "too many features" path);
+    // ~1/3 density, flops ≈ 2·nnz·N
+    let (n, p, q) = if tiny { (32, 500, 64) } else { (64, 2000, 256) };
+    let x = Mat::from_fn(n, p, |_, _| rng.gauss());
+    let proj = SparseProjection::sample(p, q, &mut rng);
+    let t = bench.run(|| proj.project(&x)).median;
+    table.row(vec![
+        "sparse-projection (CSC)".into(),
+        format!("{n}x{p}→{q}"),
+        fdur(t),
+        gflops(2.0 * proj.density() * (p * q * n) as f64, t),
+    ]);
     println!("{}", table.render());
 }

@@ -10,6 +10,7 @@ use fastcv::bench::Bench;
 use fastcv::cv::folds::kfold;
 use fastcv::data::synthetic::{generate, SyntheticSpec};
 use fastcv::fastcv::binary::AnalyticBinaryCv;
+use fastcv::fastcv::hat::GramBackend;
 use fastcv::fastcv::FoldCache;
 use fastcv::model::Reg;
 use fastcv::util::rng::Rng;
@@ -105,4 +106,38 @@ fn main() {
     ]);
 
     println!("{}", table.render());
+
+    // --- Gram backends vs P (N fixed, P past N): the primal analytic arm
+    // inherits a P³ factor, the dual arm is linear in P — the P ≫ N
+    // asymptotics that motivated the backend abstraction. ---
+    let time_backend = |n: usize, p: usize, backend: GramBackend, bench: &Bench| -> f64 {
+        let mut rng = Rng::new((n * 17 + p * 3) as u64);
+        let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+        let folds = kfold(n, 8.min(n / 3), &mut rng);
+        let y = ds.y_signed();
+        bench
+            .run(|| {
+                let cv = AnalyticBinaryCv::fit_with(&ds.x, &y, 1.0, backend).unwrap();
+                let cache = FoldCache::prepare(&cv.hat, &folds, false).unwrap();
+                cv.decision_values_cached(&cache)
+            })
+            .median
+    };
+    let ps: Vec<usize> = if tiny { vec![30, 60, 120] } else { vec![100, 200, 400, 800] };
+    let n = if tiny { 24 } else { 80 };
+    let (mut t_primal, mut t_dual) = (Vec::new(), Vec::new());
+    for &p in &ps {
+        t_primal.push(time_backend(n, p, GramBackend::Primal, &bench));
+        t_dual.push(time_backend(n, p, GramBackend::Dual, &bench));
+    }
+    let xs: Vec<f64> = ps.iter().map(|&p| p as f64).collect();
+    let mut bt = Table::new(vec!["axis", "primal slope", "dual slope", "prediction"])
+        .with_title("Gram backends — analytic-arm scaling exponents".to_string());
+    bt.row(vec![
+        format!("time vs P (N={n})"),
+        format!("P^{}", fnum(fit_slope(&xs, &t_primal), 2)),
+        format!("P^{}", fnum(fit_slope(&xs, &t_dual), 2)),
+        "primal ~P²··³ (gram+factor); dual ~P (K_c build only)".into(),
+    ]);
+    println!("{}", bt.render());
 }

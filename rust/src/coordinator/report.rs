@@ -53,13 +53,13 @@ impl SweepReport {
     /// TSV dump of raw per-rep rows.
     pub fn to_tsv(&self) -> String {
         let mut out = String::from(
-            "exp\tengine\tn\tp\tk\tc\tn_perm\trep\tt_std\tt_ana\trel_eff\tacc_std\tacc_ana\n",
+            "exp\tengine\tbackend\tn\tp\tk\tc\tn_perm\trep\tt_std\tt_ana\trel_eff\tacc_std\tacc_ana\n",
         );
         for r in &self.results {
             out.push_str(&format!(
-                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.6e}\t{:.4}\t{:.4}\t{:.4}\n",
-                r.exp_tag, r.engine, r.n, r.p, r.k, r.c, r.n_perm, r.rep, r.t_std, r.t_ana,
-                r.rel_eff(), r.acc_std, r.acc_ana
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.6e}\t{:.4}\t{:.4}\t{:.4}\n",
+                r.exp_tag, r.engine, r.backend, r.n, r.p, r.k, r.c, r.n_perm, r.rep, r.t_std,
+                r.t_ana, r.rel_eff(), r.acc_std, r.acc_ana
             ));
         }
         out
@@ -148,6 +148,7 @@ mod tests {
             label: format!("N={n} P={p} K={k}"),
             exp_tag: "BinaryCv".into(),
             engine: "serial".into(),
+            backend: "primal".into(),
             n,
             p,
             k,

@@ -8,12 +8,14 @@ use crate::cv::folds::{kfold, leave_one_out, stratified_kfold};
 use crate::data::synthetic::{generate, SyntheticSpec};
 use crate::fastcv::binary::AnalyticBinaryCv;
 use crate::fastcv::multiclass::AnalyticMulticlassCv;
+use crate::fastcv::hat::GramBackend;
 use crate::fastcv::perm::{
-    analytic_binary_permutation, analytic_multiclass_permutation, standard_binary_permutation,
-    standard_multiclass_permutation,
+    analytic_binary_permutation_backend, analytic_multiclass_permutation_backend,
+    standard_binary_permutation, standard_multiclass_permutation,
 };
 use crate::fastcv::perm_batch::{
-    analytic_binary_permutation_batched, analytic_multiclass_permutation_batched, BatchStrategy,
+    analytic_binary_permutation_batched_backend, analytic_multiclass_permutation_batched_backend,
+    BatchStrategy,
 };
 use crate::fastcv::FoldCache;
 use crate::model::lda_binary::signed_codes;
@@ -112,6 +114,9 @@ pub struct SweepPoint {
     pub lambda: f64,
     /// Analytic-arm engine for permutation experiments.
     pub engine: PermEngine,
+    /// Gram backend for the analytic arm's hat build (`Auto` resolves by
+    /// the point's P/N ratio; `Primal` reproduces the historical arm).
+    pub backend: GramBackend,
 }
 
 impl SweepPoint {
@@ -129,11 +134,18 @@ impl SweepPoint {
                 format!("N={} P={} K={k} C={} T={}", self.n, self.p, self.c, self.n_perm)
             }
         };
-        match (self.exp, self.engine) {
+        let base = match (self.exp, self.engine) {
             (Experiment::BinaryPerm | Experiment::MultiPerm, PermEngine::Batched { .. }) => {
                 format!("{base} [{}]", self.engine.tag())
             }
             _ => base,
+        };
+        // Non-primal backends are tagged so the report aggregates them as
+        // distinct configurations (accuracies are invariant, timings not).
+        if self.backend == GramBackend::Primal {
+            base
+        } else {
+            format!("{base} [{}]", self.backend.tag())
         }
     }
 
@@ -150,6 +162,8 @@ pub struct SweepResult {
     pub exp_tag: String,
     /// Analytic-arm engine tag (`serial` / `batched-b…-t…`).
     pub engine: String,
+    /// Analytic-arm Gram backend tag (`primal`/`dual`/`spectral`/`auto`).
+    pub backend: String,
     pub n: usize,
     pub p: usize,
     pub k: usize,
@@ -261,6 +275,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 rep,
                                 lambda,
                                 engine: PermEngine::Serial,
+                                backend: GramBackend::Primal,
                             });
                         }
                     }
@@ -282,6 +297,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 rep,
                                 lambda,
                                 engine: PermEngine::Serial,
+                                backend: GramBackend::Primal,
                             });
                         }
                     }
@@ -306,6 +322,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 rep,
                                 lambda,
                                 engine: PermEngine::Serial,
+                                backend: GramBackend::Primal,
                             });
                         }
                     }
@@ -327,6 +344,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 rep,
                                 lambda,
                                 engine: PermEngine::Serial,
+                                backend: GramBackend::Primal,
                             });
                         }
                     }
@@ -361,6 +379,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
         label: point.label(),
         exp_tag: format!("{:?}", point.exp),
         engine: point.engine.tag(),
+        backend: point.backend.tag().to_string(),
         n: point.n,
         p: point.p,
         k: k_actual,
@@ -382,7 +401,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                 )
             });
             let (ana_dv, t_ana) = timed(|| -> Result<Vec<f64>> {
-                let cv = AnalyticBinaryCv::fit(&ds.x, &y, point.lambda)?;
+                let cv = AnalyticBinaryCv::fit_with(&ds.x, &y, point.lambda, point.backend)?;
                 let cache = FoldCache::prepare(&cv.hat, &folds, false)?;
                 Ok(cv.decision_values_cached(&cache))
             });
@@ -405,7 +424,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                 )
             });
             let (ana_res, t_ana) = timed(|| match point.engine.strategy() {
-                None => analytic_binary_permutation(
+                None => analytic_binary_permutation_backend(
                     &ds.x,
                     &ds.labels,
                     &folds,
@@ -413,8 +432,9 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.n_perm,
                     false,
                     &mut rng_ana,
+                    point.backend,
                 ),
-                Some(strategy) => analytic_binary_permutation_batched(
+                Some(strategy) => analytic_binary_permutation_batched_backend(
                     &ds.x,
                     &ds.labels,
                     &folds,
@@ -423,6 +443,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     false,
                     &mut rng_ana,
                     strategy,
+                    point.backend,
                 ),
             });
             result.t_std = t_std;
@@ -441,7 +462,13 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                 )
             });
             let (ana_pred, t_ana) = timed(|| -> Result<Vec<usize>> {
-                let cv = AnalyticMulticlassCv::fit(&ds.x, &ds.labels, point.c, point.lambda)?;
+                let cv = AnalyticMulticlassCv::fit_with(
+                    &ds.x,
+                    &ds.labels,
+                    point.c,
+                    point.lambda,
+                    point.backend,
+                )?;
                 let cache = FoldCache::prepare(&cv.hat, &folds, true)?;
                 cv.predict_cached(&cache)
             });
@@ -465,7 +492,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                 )
             });
             let (ana_res, t_ana) = timed(|| match point.engine.strategy() {
-                None => analytic_multiclass_permutation(
+                None => analytic_multiclass_permutation_backend(
                     &ds.x,
                     &ds.labels,
                     point.c,
@@ -473,8 +500,9 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.lambda,
                     point.n_perm,
                     &mut rng_ana,
+                    point.backend,
                 ),
-                Some(strategy) => analytic_multiclass_permutation_batched(
+                Some(strategy) => analytic_multiclass_permutation_batched_backend(
                     &ds.x,
                     &ds.labels,
                     point.c,
@@ -483,6 +511,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.n_perm,
                     &mut rng_ana,
                     strategy,
+                    point.backend,
                 ),
             });
             result.t_std = t_std;
@@ -530,6 +559,7 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
         label: point.label(),
         exp_tag: format!("{:?}", point.exp),
         engine: point.engine.tag(),
+        backend: point.backend.tag().to_string(),
         n: point.n,
         p: point.p,
         k: k_actual,
@@ -540,7 +570,7 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
     };
     let (ana_res, t_ana) = if point.exp == Experiment::BinaryPerm {
         timed(|| match point.engine.strategy() {
-            None => analytic_binary_permutation(
+            None => analytic_binary_permutation_backend(
                 &ds.x,
                 &ds.labels,
                 &folds,
@@ -548,8 +578,9 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
                 point.n_perm,
                 false,
                 &mut rng_ana,
+                point.backend,
             ),
-            Some(strategy) => analytic_binary_permutation_batched(
+            Some(strategy) => analytic_binary_permutation_batched_backend(
                 &ds.x,
                 &ds.labels,
                 &folds,
@@ -558,11 +589,12 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
                 false,
                 &mut rng_ana,
                 strategy,
+                point.backend,
             ),
         })
     } else {
         timed(|| match point.engine.strategy() {
-            None => analytic_multiclass_permutation(
+            None => analytic_multiclass_permutation_backend(
                 &ds.x,
                 &ds.labels,
                 point.c,
@@ -570,8 +602,9 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
                 point.lambda,
                 point.n_perm,
                 &mut rng_ana,
+                point.backend,
             ),
-            Some(strategy) => analytic_multiclass_permutation_batched(
+            Some(strategy) => analytic_multiclass_permutation_batched_backend(
                 &ds.x,
                 &ds.labels,
                 point.c,
@@ -580,6 +613,7 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
                 point.n_perm,
                 &mut rng_ana,
                 strategy,
+                point.backend,
             ),
         })
     };
@@ -617,6 +651,7 @@ mod tests {
             rep: 0,
             lambda: 1.0,
             engine: PermEngine::Serial,
+            backend: GramBackend::Primal,
         };
         let r = run_point(&point, 1234).unwrap();
         assert!(r.t_std > 0.0 && r.t_ana > 0.0);
@@ -637,6 +672,7 @@ mod tests {
             rep: 0,
             lambda: 1.0,
             engine: PermEngine::Serial,
+            backend: GramBackend::Primal,
         };
         let r = run_point(&point, 99).unwrap();
         assert!(
@@ -660,6 +696,7 @@ mod tests {
                 rep: 0,
                 lambda: 1.0,
                 engine: PermEngine::Serial,
+                backend: GramBackend::Primal,
             };
             let r = run_point(&point, 7).unwrap();
             assert!(r.t_std > 0.0 && r.t_ana > 0.0);
@@ -679,6 +716,7 @@ mod tests {
             rep: 0,
             lambda: 1.0,
             engine: PermEngine::Serial,
+            backend: GramBackend::Primal,
         };
         let batched = serial.with_engine(PermEngine::Batched { batch: 4, threads: 2 });
         let a = run_point(&serial, 7).unwrap();
@@ -705,6 +743,44 @@ mod tests {
     }
 
     #[test]
+    fn backend_equivalence_sweep_point_accuracies_invariant() {
+        // A wide point run through each backend must report the same
+        // analytic accuracy; only timing may move. Labels/TSV tag the
+        // non-primal backends.
+        let base = SweepPoint {
+            exp: Experiment::BinaryCv,
+            n: 24,
+            p: 60,
+            k: 4,
+            c: 2,
+            n_perm: 0,
+            rep: 0,
+            lambda: 1.0,
+            engine: PermEngine::Serial,
+            backend: GramBackend::Primal,
+        };
+        let r_primal = run_point(&base, 11).unwrap();
+        for backend in [GramBackend::Dual, GramBackend::Spectral, GramBackend::Auto] {
+            let point = SweepPoint { backend, ..base.clone() };
+            let r = run_point(&point, 11).unwrap();
+            assert_eq!(r.acc_ana, r_primal.acc_ana, "{backend:?} accuracy moved");
+            assert_eq!(r.acc_std, r_primal.acc_std);
+            assert_eq!(r.backend, backend.tag());
+            assert!(r.label.contains(backend.tag()), "label untagged: {}", r.label);
+        }
+        assert!(!r_primal.label.contains("primal"), "primal label stays bare");
+        // perm experiment: the analytic arm's observed accuracy is
+        // backend-invariant too (b_LR vs b_LDA keeps the std arm apart, so
+        // compare analytic-vs-analytic).
+        let perm_primal =
+            SweepPoint { exp: Experiment::BinaryPerm, n_perm: 4, ..base.clone() };
+        let perm_auto = SweepPoint { backend: GramBackend::Auto, ..perm_primal.clone() };
+        let r_p = run_point(&perm_primal, 11).unwrap();
+        let r_a = run_point(&perm_auto, 11).unwrap();
+        assert_eq!(r_p.acc_ana, r_a.acc_ana, "perm analytic arm backend-invariant");
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let point = SweepPoint {
             exp: Experiment::BinaryCv,
@@ -716,6 +792,7 @@ mod tests {
             rep: 2,
             lambda: 0.5,
             engine: PermEngine::Serial,
+            backend: GramBackend::Primal,
         };
         let a = run_point(&point, 42).unwrap();
         let b = run_point(&point, 42).unwrap();

@@ -24,9 +24,28 @@ pub fn leave_one_out(n: usize) -> Vec<Vec<usize>> {
 }
 
 /// Stratified k-fold: class proportions are (approximately) preserved in
-/// every fold, guaranteeing no fold loses a class when `k ≤ min_j N_j`.
+/// every fold.
+///
+/// Contract (the caller always gets what it asked for, or a loud failure):
+///
+/// * returns **exactly `k`** folds — the round-robin deal assigns sample
+///   `r` to fold `r mod k`, so with `k ≤ N` every fold is non-empty;
+/// * when `k ≤ min_j N_j`, every fold additionally contains at least one
+///   sample of **every** class (each class's run of ≥ k consecutive
+///   round-robin slots covers all k residues);
+/// * when `min_j N_j < k ≤ N`, the partition is still exactly `k` folds
+///   but scarce classes necessarily miss some folds — callers that need
+///   per-fold class coverage must bound `k` by the smallest class size;
+/// * panics when `k > N`: a k-fold partition of fewer samples does not
+///   exist. (The old behaviour silently returned fewer than `k` folds —
+///   a caller requesting 5 folds could get 3 with no signal.)
 pub fn stratified_kfold(labels: &[usize], k: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
     assert!(k >= 2, "need at least 2 folds");
+    assert!(
+        k <= labels.len(),
+        "more folds than samples ({k} > {}) — cannot stratify",
+        labels.len()
+    );
     let c = labels.iter().copied().max().map(|m| m + 1).unwrap_or(0);
     let mut folds = vec![Vec::new(); k];
     let mut fold_rr = 0usize; // round-robin across classes so fold sizes balance
@@ -41,8 +60,11 @@ pub fn stratified_kfold(labels: &[usize], k: usize, rng: &mut Rng) -> Vec<Vec<us
     for f in folds.iter_mut() {
         f.sort_unstable();
     }
-    folds.retain(|f| !f.is_empty());
-    assert!(folds.len() >= 2, "not enough samples to stratify into {k} folds");
+    assert!(
+        folds.iter().all(|f| !f.is_empty()),
+        "stratified_kfold invariant violated: empty fold with k = {k} ≤ N = {}",
+        labels.len()
+    );
     folds
 }
 
@@ -105,6 +127,45 @@ mod tests {
             assert!((3..=5).contains(&c1), "c1={c1}");
             assert!((1..=3).contains(&c2), "c2={c2}");
         }
+    }
+
+    #[test]
+    fn stratified_boundary_k_equals_smallest_class() {
+        // k = min_j N_j: exactly k folds, every fold sees every class.
+        let mut rng = Rng::new(4);
+        let labels: Vec<usize> =
+            std::iter::repeat_n(0, 12).chain(std::iter::repeat_n(1, 4)).collect();
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        assert_eq!(folds.len(), 4, "caller asked for 4 folds, must get 4");
+        assert_partition(&folds, 16);
+        for (j, f) in folds.iter().enumerate() {
+            assert!(f.iter().any(|&i| labels[i] == 0), "fold {j} lost class 0");
+            assert!(f.iter().any(|&i| labels[i] == 1), "fold {j} lost class 1");
+        }
+    }
+
+    #[test]
+    fn stratified_k_beyond_smallest_class_still_exactly_k_folds() {
+        // min_j N_j < k ≤ N: the partition must still have exactly k
+        // non-empty folds (scarce classes miss some folds, documented).
+        // Regression guard on the old `retain`, which could silently
+        // shrink the partition.
+        let mut rng = Rng::new(5);
+        let labels: Vec<usize> =
+            std::iter::repeat_n(0, 10).chain(std::iter::repeat_n(1, 2)).collect();
+        let folds = stratified_kfold(&labels, 6, &mut rng);
+        assert_eq!(folds.len(), 6, "caller asked for 6 folds, must get 6");
+        assert_partition(&folds, 12);
+        assert!(folds.iter().all(|f| !f.is_empty()));
+    }
+
+    #[test]
+    #[should_panic(expected = "more folds than samples")]
+    fn stratified_rejects_more_folds_than_samples() {
+        // Regression: this configuration used to silently return fewer
+        // than k folds instead of signalling the impossible request.
+        let mut rng = Rng::new(6);
+        stratified_kfold(&[0usize, 1, 0], 5, &mut rng);
     }
 
     #[test]

@@ -52,11 +52,17 @@ pub fn accuracy_labels(pred: &[usize], truth: &[usize]) -> f64 {
 
 /// Area under the ROC curve via the rank statistic (ties get 0.5 credit).
 /// Positive class = label 0 (+1 code) with *larger* decision values.
+/// Returns `NaN` when a class is absent from `labels`.
 pub fn auc(dvals: &[f64], labels: &[usize]) -> f64 {
     assert_eq!(dvals.len(), labels.len());
     let pos: Vec<f64> = dvals.iter().zip(labels).filter(|(_, &l)| l == 0).map(|(&d, _)| d).collect();
     let neg: Vec<f64> = dvals.iter().zip(labels).filter(|(_, &l)| l == 1).map(|(&d, _)| d).collect();
-    assert!(!pos.is_empty() && !neg.is_empty(), "AUC needs both classes");
+    if pos.is_empty() || neg.is_empty() {
+        // The ranking is undefined with a single class; NaN (not a panic)
+        // so model selection can order it as worst — see
+        // `fastcv::lambda_search::select_best`.
+        return f64::NAN;
+    }
     let mut wins = 0.0;
     for &p in &pos {
         for &n in &neg {
@@ -201,6 +207,15 @@ mod tests {
         assert_eq!(auc(&[2.0, 1.5, 0.2, -1.0], &labels), 1.0);
         assert_eq!(auc(&[-1.0, 0.2, 1.5, 2.0], &labels), 0.0);
         assert_eq!(auc(&[1.0, 1.0, 1.0, 1.0], &labels), 0.5);
+    }
+
+    #[test]
+    fn auc_single_class_is_nan_not_panic() {
+        // Regression: this used to assert. Single-class labellings occur
+        // under label permutation / degenerate folds; λ selection must be
+        // able to observe the undefined metric and rank it worst.
+        assert!(auc(&[0.5, -0.5], &[0, 0]).is_nan());
+        assert!(auc(&[0.5, -0.5], &[1, 1]).is_nan());
     }
 
     #[test]

@@ -11,27 +11,64 @@
 //!   feature/sample subsets, majority-vote aggregation, trainable in
 //!   parallel.
 
+use super::hat::GramBackend;
 use super::FoldCache;
-use crate::linalg::{matmul, Cholesky, Lu, Mat};
+use crate::linalg::{matmul, matmul_pool, Cholesky, Lu, Mat};
 use crate::model::linreg::gram_ridged;
 use crate::model::Reg;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 use anyhow::{Context, Result};
 
 /// Memory-light analytic CV state: `O(NP)` instead of `O(N²)`.
+///
+/// Two Gram backends, mirroring [`super::hat::HatMatrix`]:
+///
+/// * **Primal** — stores `T = X̃ S` (`N×(P+1)`); fold blocks are
+///   `H_Te = T_Te X̃_Teᵀ`. Build cost `O(NP² + P³)`.
+/// * **Dual** — stores `T_c = (K_c + λI)⁻¹ X_c` (`N×P`) and the column
+///   means; fold blocks are `H_Te = (1/N)𝟙𝟙ᵀ + T_{c,Te} X_{c,Te}ᵀ` with
+///   `X_c` rows re-centered on the fly from `xa`. Build cost
+///   `O(N²P + N³)` — the P ≫ N path. The build materialises `K_c`
+///   **transiently** (steady state stays `O(NP)`); out-of-core `K_c`
+///   tiling is a ROADMAP open item.
 #[derive(Debug)]
 pub struct StreamingHat {
     /// Augmented design.
     pub xa: Mat,
-    /// `T = X̃ S` — the "whitened" design (§4.4's kernel view).
+    /// Primal: `T = X̃ S` (`N×(P+1)`); dual: `T_c = (K_c+λI)⁻¹X_c` (`N×P`).
     pub t: Mat,
     /// Ridge used.
     pub lambda: f64,
+    /// Column means of `x` — present iff built through the dual backend.
+    means: Option<Vec<f64>>,
 }
 
 impl StreamingHat {
-    /// Build from raw data (same contract as [`super::hat::HatMatrix`]).
+    /// Build from raw data (same contract as [`super::hat::HatMatrix`]):
+    /// the primal, bit-stable historical path.
     pub fn build(x: &Mat, lambda: f64) -> Result<StreamingHat> {
+        Self::build_with(x, lambda, GramBackend::Primal, None)
+    }
+
+    /// Build through a chosen [`GramBackend`]. `Auto` resolves by the P/N
+    /// ratio exactly like [`super::hat::GramBackend::resolve`]; `Spectral`
+    /// is treated as `Dual` (a streaming hat serves a single λ, so an
+    /// eigendecomposition buys nothing over one Cholesky).
+    pub fn build_with(
+        x: &Mat,
+        lambda: f64,
+        backend: GramBackend,
+        pool: Option<&ThreadPool>,
+    ) -> Result<StreamingHat> {
+        assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
+        match backend.resolve(x.rows(), x.cols(), lambda) {
+            GramBackend::Dual | GramBackend::Spectral => Self::build_dual(x, lambda, pool),
+            _ => Self::build_primal(x, lambda),
+        }
+    }
+
+    fn build_primal(x: &Mat, lambda: f64) -> Result<StreamingHat> {
         let xa = x.augment_ones();
         let g = gram_ridged(&xa, lambda);
         // T = X̃ G⁻¹ = solve(G, X̃ᵀ)ᵀ — no explicit inverse (see §Perf).
@@ -40,7 +77,28 @@ impl StreamingHat {
             Err(_) => Lu::factor(&g).context("gram singular; increase λ")?.solve_mat(&xa.t()),
         };
         let t = w.t();
-        Ok(StreamingHat { xa, t, lambda })
+        Ok(StreamingHat { xa, t, lambda, means: None })
+    }
+
+    fn build_dual(x: &Mat, lambda: f64, pool: Option<&ThreadPool>) -> Result<StreamingHat> {
+        anyhow::ensure!(
+            lambda > 0.0,
+            "dual streaming backend requires ridge λ > 0 (K_c is always singular: K_c𝟙 = 0)"
+        );
+        let n = x.rows();
+        let xa = x.augment_ones();
+        let means = x.col_means();
+        let xc = Mat::from_fn(n, x.cols(), |i, j| x[(i, j)] - means[j]);
+        // Transient N×N: K_c + λI, factored then discarded.
+        let mut kl = matmul_pool(&xc, &xc.t(), pool);
+        kl.symmetrize();
+        for i in 0..n {
+            kl[(i, i)] += lambda;
+        }
+        let ch = Cholesky::factor(&kl)
+            .context("centered dual Gram K_c + λI not SPD — is λ > 0?")?;
+        let t = ch.solve_mat(&xc); // T_c = (K_c+λI)⁻¹ X_c, N×P
+        Ok(StreamingHat { xa, t, lambda, means: Some(means) })
     }
 
     /// Number of samples.
@@ -48,17 +106,48 @@ impl StreamingHat {
         self.xa.rows()
     }
 
-    /// On-the-fly fold block `H_Te = T_Te X̃_Teᵀ`.
+    /// On-the-fly fold block: `H_Te = T_Te X̃_Teᵀ` (primal) or
+    /// `(1/N)𝟙𝟙ᵀ + T_{c,Te} X_{c,Te}ᵀ` (dual).
     pub fn block(&self, te: &[usize]) -> Mat {
         let t_te = self.t.take_rows(te);
-        let xa_te = self.xa.take_rows(te);
-        matmul(&t_te, &xa_te.t())
+        match &self.means {
+            None => {
+                let xa_te = self.xa.take_rows(te);
+                matmul(&t_te, &xa_te.t())
+            }
+            Some(means) => {
+                let p = means.len();
+                let xc_te =
+                    Mat::from_fn(te.len(), p, |j, l| self.xa[(te[j], l)] - means[l]);
+                let mut m = matmul(&t_te, &xc_te.t());
+                let inv_n = 1.0 / self.n() as f64;
+                for v in m.as_mut_slice() {
+                    *v += inv_n;
+                }
+                m
+            }
+        }
     }
 
-    /// Full-data fits `ŷ = H y` computed as `T (X̃ᵀ y)` — `O(NP)`, no `H`.
+    /// Full-data fits `ŷ = H y` without materialising `H` — `O(NP)` both
+    /// ways: `T (X̃ᵀ y)` (primal) or `T_c (X_cᵀ y) + ȳ𝟙` (dual).
     pub fn fit_response(&self, y: &[f64]) -> Vec<f64> {
         let xty = crate::linalg::matvec_t(&self.xa, y);
-        crate::linalg::matvec(&self.t, &xty)
+        match &self.means {
+            None => crate::linalg::matvec(&self.t, &xty),
+            Some(means) => {
+                // X_cᵀy = Xᵀy − (Σy)·x̄ ; the last entry of X̃ᵀy *is* Σy.
+                let sum_y = xty[means.len()];
+                let z: Vec<f64> =
+                    (0..means.len()).map(|j| xty[j] - sum_y * means[j]).collect();
+                let mut out = crate::linalg::matvec(&self.t, &z);
+                let ybar = sum_y / self.n() as f64;
+                for v in out.iter_mut() {
+                    *v += ybar;
+                }
+                out
+            }
+        }
     }
 
     /// Analytic CV decision values (Eq. 14) without materialising `H`.
@@ -86,10 +175,21 @@ impl StreamingHat {
 /// Achlioptas sparse random projection: entries `±√(3/Q)` with probability
 /// 1/6 each, 0 with probability 2/3 — `E[AAᵀ] = I`, so `XA` approximately
 /// preserves pairwise geometry at `Q = O(log N / ε²)`.
+///
+/// Non-zeros are stored CSC-style (grouped per **output** column): each
+/// output element is one contiguous gather-and-accumulate over its
+/// column's entries, instead of the old full-triplet scan with scattered
+/// writes across the whole output row per input row — `Q×` less write
+/// traffic and sequential reads of the entry list (micro-benched in
+/// `benches/linalg_kernels.rs`). Values are bit-identical to the scatter
+/// formulation: within a column, entries keep ascending input-row order,
+/// which is exactly the order the scatter accumulated them in.
 #[derive(Debug, Clone)]
 pub struct SparseProjection {
-    /// Projection matrix, `P × Q` (stored sparse as (row, col, sign)).
-    triplets: Vec<(u32, u32, f32)>,
+    /// `entries[col_ptr[j]..col_ptr[j+1]]` = the (input row, sign) pairs
+    /// of output column `j`, ascending by input row.
+    col_ptr: Vec<usize>,
+    entries: Vec<(u32, f32)>,
     p: usize,
     q: usize,
     scale: f64,
@@ -99,18 +199,35 @@ impl SparseProjection {
     /// Sample a projection from `p` dims down to `q`.
     pub fn sample(p: usize, q: usize, rng: &mut Rng) -> SparseProjection {
         assert!(q >= 1);
+        // Draw in (row, col) order — the RNG stream is part of the
+        // reproducibility contract — then regroup by column.
         let mut triplets = Vec::with_capacity(p * q / 3 + 1);
         for i in 0..p {
             for j in 0..q {
                 let r = rng.below(6);
                 if r == 0 {
-                    triplets.push((i as u32, j as u32, 1.0));
+                    triplets.push((i as u32, j as u32, 1.0f32));
                 } else if r == 1 {
-                    triplets.push((i as u32, j as u32, -1.0));
+                    triplets.push((i as u32, j as u32, -1.0f32));
                 }
             }
         }
-        SparseProjection { triplets, p, q, scale: (3.0 / q as f64).sqrt() }
+        // Counting sort by output column; row-major draw order means each
+        // column's entries land in ascending input-row order.
+        let mut col_ptr = vec![0usize; q + 1];
+        for &(_, j, _) in &triplets {
+            col_ptr[j as usize + 1] += 1;
+        }
+        for j in 0..q {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let mut next = col_ptr.clone();
+        let mut entries = vec![(0u32, 0.0f32); triplets.len()];
+        for &(i, j, s) in &triplets {
+            entries[next[j as usize]] = (i, s);
+            next[j as usize] += 1;
+        }
+        SparseProjection { col_ptr, entries, p, q, scale: (3.0 / q as f64).sqrt() }
     }
 
     /// Output dimensionality.
@@ -120,7 +237,7 @@ impl SparseProjection {
 
     /// Fraction of non-zero entries (≈1/3).
     pub fn density(&self) -> f64 {
-        self.triplets.len() as f64 / (self.p * self.q) as f64
+        self.entries.len() as f64 / (self.p * self.q) as f64
     }
 
     /// Project a data matrix: `X A` (`N×P` → `N×Q`).
@@ -130,11 +247,14 @@ impl SparseProjection {
         for i in 0..x.rows() {
             let row = x.row(i);
             let orow = out.row_mut(i);
-            for &(pi, qj, sign) in &self.triplets {
-                orow[qj as usize] += sign as f64 * row[pi as usize];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for &(pi, sign) in &self.entries[self.col_ptr[j]..self.col_ptr[j + 1]] {
+                    acc += sign as f64 * row[pi as usize];
+                }
+                *o = acc * self.scale;
             }
         }
-        out.scale(self.scale);
         out
     }
 }
@@ -163,21 +283,36 @@ impl LdaEnsemble {
         let n = x.rows();
         let n_feat = ((p as f64 * feat_frac).ceil() as usize).clamp(1, p);
         let n_samp = ((n as f64 * sample_frac).ceil() as usize).clamp(4, n);
+        // A labelling missing a class can never produce a two-class
+        // subsample — the old unbounded resample loop spun forever here.
+        anyhow::ensure!(
+            labels.iter().any(|&l| l == 0) && labels.iter().any(|&l| l == 1),
+            "LdaEnsemble::train: both classes must be present in `labels` \
+             (got a single-class labelling of {} samples)",
+            labels.len()
+        );
+        // Bound the retries anyway: extreme imbalance + tiny sample_frac
+        // can make a two-class draw arbitrarily rare.
+        const MAX_RESAMPLE: usize = 1000;
         // Pre-draw subsets so training is deterministic regardless of pool.
         let draws: Vec<(Vec<usize>, Vec<usize>)> = (0..n_members)
-            .map(|_| {
-                // resample until both classes present
-                loop {
+            .map(|m| -> Result<(Vec<usize>, Vec<usize>)> {
+                // resample until both classes present (bounded)
+                for _ in 0..MAX_RESAMPLE {
                     let feats = rng.choose(p, n_feat);
                     let samps = rng.choose(n, n_samp);
                     let has0 = samps.iter().any(|&i| labels[i] == 0);
                     let has1 = samps.iter().any(|&i| labels[i] == 1);
                     if has0 && has1 {
-                        return (feats, samps);
+                        return Ok((feats, samps));
                     }
                 }
+                anyhow::bail!(
+                    "LdaEnsemble::train: member {m}: no subsample contained both classes \
+                     after {MAX_RESAMPLE} draws — increase sample_frac or rebalance the data"
+                )
             })
-            .collect();
+            .collect::<Result<Vec<_>>>()?;
         let train_one = |(feats, samps): &(Vec<usize>, Vec<usize>)| -> Result<(Vec<usize>, crate::model::lda_binary::BinaryLda)> {
             let xs = x.take(samps, feats);
             let ls: Vec<usize> = samps.iter().map(|&i| labels[i]).collect();
@@ -278,6 +413,73 @@ mod tests {
         let s = StreamingHat::build(&ds.x, 0.1).unwrap();
         assert_eq!(s.t.shape(), (60, 6));
         assert_eq!(s.xa.shape(), (60, 6));
+    }
+
+    #[test]
+    fn backend_equivalence_streaming_dual_matches_dense_and_primal() {
+        // Wide shape: the dual streaming hat must reproduce the primal
+        // streaming hat and the dense engine to 1e-8 — blocks, fits, and
+        // decision values — while storing only N×P state.
+        let mut rng = Rng::new(7);
+        let ds = generate(&SyntheticSpec::binary(40, 120), &mut rng);
+        let y = ds.y_signed();
+        let folds = kfold(40, 5, &mut rng);
+        let lambda = 0.9;
+        let primal = StreamingHat::build_with(&ds.x, lambda, GramBackend::Primal, None).unwrap();
+        let dual = StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, None).unwrap();
+        assert_eq!(dual.t.shape(), (40, 120), "dual stores T_c (N×P)");
+        let te = &folds[0];
+        let b_p = primal.block(te);
+        let b_d = dual.block(te);
+        assert!(b_p.max_abs_diff(&b_d) < 1e-8, "|Δblock| = {}", b_p.max_abs_diff(&b_d));
+        assert_all_close(&dual.fit_response(&y), &primal.fit_response(&y), 1e-8, "dual ŷ");
+        let dv_p = primal.decision_values(&y, &folds).unwrap();
+        let dv_d = dual.decision_values(&y, &folds).unwrap();
+        assert_all_close(&dv_d, &dv_p, 1e-8, "streaming dual vs primal dvals");
+        // Auto resolves to dual on this wide shape and to primal on tall.
+        let auto = StreamingHat::build_with(&ds.x, lambda, GramBackend::Auto, None).unwrap();
+        assert_eq!(auto.t.shape(), (40, 120));
+        let tall = generate(&SyntheticSpec::binary(50, 10), &mut rng);
+        let auto_tall =
+            StreamingHat::build_with(&tall.x, lambda, GramBackend::Auto, None).unwrap();
+        assert_eq!(auto_tall.t.shape(), (50, 11), "tall Auto keeps primal T = X̃S");
+        // pooled K_c build is bit-identical
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let dual_pooled =
+            StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, Some(&pool)).unwrap();
+        assert_eq!(dual.t.as_slice(), dual_pooled.t.as_slice());
+    }
+
+    #[test]
+    fn ensemble_single_class_labels_errors_not_hangs() {
+        // Regression: the resample loop could never see both classes and
+        // span forever. Must bail with a clear error instead.
+        let mut rng = Rng::new(8);
+        let x = Mat::from_fn(20, 5, |_, _| rng.gauss());
+        let labels = vec![0usize; 20];
+        let res = LdaEnsemble::train(&x, &labels, 3, 0.5, 0.5, Reg::Ridge(1.0), None, &mut rng);
+        let msg = format!("{:#}", res.err().expect("single-class labels must error"));
+        assert!(msg.contains("both classes"), "unexpected error: {msg}");
+        // ...and the all-class-1 flavour too.
+        let labels = vec![1usize; 20];
+        assert!(
+            LdaEnsemble::train(&x, &labels, 3, 0.5, 0.5, Reg::Ridge(1.0), None, &mut rng)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn projection_csc_matches_dense_reference() {
+        // project(I_P) materialises the scaled dense A row by row; a random
+        // X must then satisfy project(X) == X·A through the dense GEMM.
+        let mut rng = Rng::new(9);
+        let (p, q) = (60, 17);
+        let proj = SparseProjection::sample(p, q, &mut rng);
+        let dense_a = proj.project(&Mat::eye(p)); // P × Q, = scale·A
+        let x = Mat::from_fn(8, p, |_, _| rng.gauss());
+        let expect = crate::linalg::matmul(&x, &dense_a);
+        let got = proj.project(&x);
+        assert!(got.max_abs_diff(&expect) < 1e-10, "|Δ| = {}", got.max_abs_diff(&expect));
     }
 
     #[test]

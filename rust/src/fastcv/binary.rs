@@ -13,7 +13,7 @@
 //! linear regression and ridge regression — `y` is then a continuous
 //! response and the bias adjustment is not used.
 
-use super::hat::HatMatrix;
+use super::hat::{GramBackend, HatMatrix};
 use super::FoldCache;
 use crate::linalg::Mat;
 use anyhow::Result;
@@ -32,9 +32,24 @@ pub struct AnalyticBinaryCv {
 impl AnalyticBinaryCv {
     /// Fit the single full-data model. `y` is the paper's response vector;
     /// for classification use ±1 codes ([`crate::model::lda_binary::signed_codes`]).
+    /// Builds the hat through the primal Gram (bit-stable historical path);
+    /// see [`Self::fit_with`] for the P ≫ N backends.
     pub fn fit(x: &Mat, y: &[f64], lambda: f64) -> Result<AnalyticBinaryCv> {
+        Self::fit_with(x, y, lambda, GramBackend::Primal)
+    }
+
+    /// [`Self::fit`] through a chosen [`GramBackend`] (`Auto` picks by the
+    /// P/N ratio — the dual backend turns the wide-data hat build from
+    /// `O(NP² + P³)` into `O(N²P + N³)`). Decision values are backend-
+    /// invariant to ~1e-8.
+    pub fn fit_with(
+        x: &Mat,
+        y: &[f64],
+        lambda: f64,
+        backend: GramBackend,
+    ) -> Result<AnalyticBinaryCv> {
         assert_eq!(x.rows(), y.len(), "response length mismatch");
-        let hat = HatMatrix::build(x, lambda)?;
+        let hat = HatMatrix::build_with(x, lambda, backend, None)?;
         let y_hat = hat.fit_response(y);
         Ok(AnalyticBinaryCv { hat, y: y.to_vec(), y_hat })
     }
@@ -450,6 +465,47 @@ mod tests {
                         assert_all_close(&col, &serial_adj, 1e-14, "bias-adjusted mat column");
                     }
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn backend_equivalence_binary_decision_values() {
+        // Acceptance: primal/dual/spectral decision values agree to 1e-8 —
+        // raw (b_LR) and bias-adjusted (b_LDA) — on wide (P ≫ N) and tall
+        // (N ≫ P) shapes.
+        use crate::fastcv::hat::{GramBackend, SpectralGram};
+        Cases::new(12).run("backend-invariant dvals (binary)", |rng| {
+            let wide = rng.below(2) == 0;
+            let n1 = 8 + rng.below(8);
+            let n2 = 8 + rng.below(8);
+            let n = n1 + n2;
+            let p = if wide { n + 20 + rng.below(60) } else { 1 + rng.below(n / 2) };
+            let (x, labels) = labelled_problem(rng, n1, n2, p);
+            // λ bounded away from the interpolation regime: as λ → 0 with
+            // P ≫ N, (I − H_Te) → 0 and its solve amplifies the ~1e-12
+            // backend roundoff past any fixed tolerance.
+            let lambda = 10f64.powf(rng.uniform_in(-0.5, 1.5));
+            let y = signed_codes(&labels);
+            let folds = kfold(n, 2 + rng.below(4), rng);
+            let primal = AnalyticBinaryCv::fit_with(&x, &y, lambda, GramBackend::Primal).unwrap();
+            let dual = AnalyticBinaryCv::fit_with(&x, &y, lambda, GramBackend::Dual).unwrap();
+            let spectral =
+                AnalyticBinaryCv::with_hat(SpectralGram::build(&x, None).hat(lambda).unwrap(), &y);
+            let cache_p = FoldCache::prepare(&primal.hat, &folds, true).unwrap();
+            let cache_d = FoldCache::prepare(&dual.hat, &folds, true).unwrap();
+            let cache_s = FoldCache::prepare(&spectral.hat, &folds, true).unwrap();
+            let dv_p = primal.decision_values_cached(&cache_p);
+            let dv_d = dual.decision_values_cached(&cache_d);
+            let dv_s = spectral.decision_values_cached(&cache_s);
+            assert_all_close(&dv_d, &dv_p, 1e-8, "dual vs primal dvals");
+            assert_all_close(&dv_s, &dv_p, 1e-8, "spectral vs primal dvals");
+            // bias-adjusted path (skip when a fold loses a class)
+            if let Ok(adj_p) = primal.decision_values_bias_adjusted(&cache_p, &labels) {
+                let adj_d = dual.decision_values_bias_adjusted(&cache_d, &labels).unwrap();
+                let adj_s = spectral.decision_values_bias_adjusted(&cache_s, &labels).unwrap();
+                assert_all_close(&adj_d, &adj_p, 1e-8, "dual vs primal bias-adjusted");
+                assert_all_close(&adj_s, &adj_p, 1e-8, "spectral vs primal bias-adjusted");
             }
         });
     }

@@ -1,18 +1,125 @@
-//! The hat matrix `H = X̃ (X̃ᵀX̃ + λI₀)⁻¹ X̃ᵀ` (§2.4.2, §2.6.1).
+//! The hat matrix `H = X̃ (X̃ᵀX̃ + λI₀)⁻¹ X̃ᵀ` (§2.4.2, §2.6.1) and the
+//! Gram backends that build it.
 //!
 //! Built **once** per dataset; it depends on the features only, so it is
 //! reused across every fold *and every label permutation* (§2.7) — that
 //! reuse is the entire source of the paper's speed-up.
+//!
+//! ## Gram backends
+//!
+//! The same `H` admits three algebraically equivalent constructions with
+//! very different costs (see [`GramBackend`]):
+//!
+//! * **Primal** — factor the `(P+1)×(P+1)` Gram `X̃ᵀX̃ + λI₀` and form
+//!   `H = X̃·solve(G, X̃ᵀ)`: `O(NP² + P³)`. Best for N ≫ P; the historical
+//!   path, and the only one defined at λ = 0.
+//! * **Dual** (§4.4's kernel view) — with the intercept handled by the
+//!   centering decomposition, `H = (1/N)𝟙𝟙ᵀ + K_c (K_c + λI)⁻¹` where
+//!   `K_c = X_c X_cᵀ` is the centered `N×N` Gram: `O(N²P + N³)`. The
+//!   paper's P ≫ N lifeline — the whole point of the 10,000× regime.
+//! * **Spectral** — one symmetric eigendecomposition `K_c = U diag(d) Uᵀ`,
+//!   after which `H(λ) = (1/N)𝟙𝟙ᵀ + U diag(dᵢ/(dᵢ+λ)) Uᵀ` makes every
+//!   additional λ candidate an `O(N³)`-GEMM with no refactorisation — the
+//!   λ-grid workhorse behind [`crate::fastcv::lambda_search`].
+//!
+//! The centering identity: ridge with an unpenalised intercept fits
+//! `w = (X_cᵀX_c + λI)⁻¹ X_cᵀ y`, `b = ȳ − x̄ᵀw`, so the fitted values are
+//! `ŷ = X_c w + ȳ𝟙 = [(1/N)𝟙𝟙ᵀ + X_c (X_cᵀX_c + λI)⁻¹ X_cᵀ] y`, and the
+//! push-through identity turns the inner term into `K_c (K_c + λI)⁻¹`.
+//! Since `K_c𝟙 = 0` (columns of `X_c` are centered), `H𝟙 = 𝟙` holds in
+//! every backend — the unpenalised-intercept invariant.
 
-use crate::linalg::{gemm_acc, matmul, matvec_gemm_order, Cholesky, Lu, Mat};
+use crate::linalg::{
+    gemm_acc, matmul, matmul_pool, matvec_gemm_order, sym_eig, Cholesky, Lu, Mat, SymEig,
+};
 use crate::model::linreg::gram_ridged;
-use anyhow::{Context, Result};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, Context, Result};
+
+/// Which construction of the hat matrix to use. `Auto` picks by the P/N
+/// ratio: `Dual` when `λ > 0` and `P > N`, `Primal` otherwise (λ-grid
+/// callers resolve to `Spectral` instead — see
+/// [`GramBackend::resolve_for_grid`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum GramBackend {
+    /// Pick per shape: `Dual` when `λ > 0 ∧ P > N`, else `Primal`.
+    #[default]
+    Auto,
+    /// Factor the `(P+1)×(P+1)` primal Gram — `O(NP² + P³)`.
+    Primal,
+    /// Factor the centered `N×N` Gram `K_c + λI` — `O(N²P + N³)`, λ > 0.
+    Dual,
+    /// Eigendecompose `K_c` once; each λ is then a GEMM — λ > 0.
+    Spectral,
+}
+
+impl GramBackend {
+    /// Parse a CLI tag (`auto|primal|dual|spectral`).
+    pub fn from_tag(tag: &str) -> Option<GramBackend> {
+        match tag {
+            "auto" => Some(GramBackend::Auto),
+            "primal" => Some(GramBackend::Primal),
+            "dual" => Some(GramBackend::Dual),
+            "spectral" => Some(GramBackend::Spectral),
+            _ => None,
+        }
+    }
+
+    /// Short tag for labels / TSV columns.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            GramBackend::Auto => "auto",
+            GramBackend::Primal => "primal",
+            GramBackend::Dual => "dual",
+            GramBackend::Spectral => "spectral",
+        }
+    }
+
+    /// Resolve `Auto` for a single hat build: `Dual` beats `Primal` exactly
+    /// when the `N×N` side is the smaller problem (`P > N`) and the dual
+    /// form is defined (`λ > 0`).
+    pub fn resolve(self, n: usize, p: usize, lambda: f64) -> GramBackend {
+        match self {
+            GramBackend::Auto => {
+                if lambda > 0.0 && p > n {
+                    GramBackend::Dual
+                } else {
+                    GramBackend::Primal
+                }
+            }
+            other => other,
+        }
+    }
+
+    /// Resolve `Auto` for a λ-grid cache: with ≥ 2 positive candidates on a
+    /// wide shape the one-off eigendecomposition amortises, so `Spectral`;
+    /// a single positive candidate still prefers `Dual`; tall shapes keep
+    /// the primal factor (its `P³` is the cheap side there).
+    pub fn resolve_for_grid(self, n: usize, p: usize, positive_candidates: usize) -> GramBackend {
+        match self {
+            GramBackend::Auto => {
+                if p > n && positive_candidates >= 2 {
+                    GramBackend::Spectral
+                } else if p > n && positive_candidates == 1 {
+                    GramBackend::Dual
+                } else {
+                    GramBackend::Primal
+                }
+            }
+            other => other,
+        }
+    }
+}
 
 /// Which factorisation of the gram matrix backs this hat matrix.
 #[derive(Clone, Debug)]
 enum GramFactor {
     Chol(Cholesky),
     Lu(Lu),
+    /// Dual/spectral builds never factor the primal Gram; the primal-side
+    /// utilities ([`HatMatrix::inv_gram`] / [`HatMatrix::solve_gram`], off
+    /// the hot path) refactor from `xa` on demand.
+    OnDemand,
 }
 
 /// Precomputed full-data quantities shared by the analytic CV paths.
@@ -27,54 +134,272 @@ pub struct HatMatrix {
     factor: GramFactor,
     /// Ridge parameter used.
     pub lambda: f64,
+    /// The (resolved) backend that built `h` — never `Auto`.
+    pub backend: GramBackend,
+}
+
+/// λ-free precomputation shared across a ridge grid: everything about the
+/// chosen Gram backend that does **not** depend on λ. One `GramCache` plus
+/// one [`GramCache::hat`] call per candidate replaces a from-scratch
+/// [`HatMatrix::build_with`] per candidate:
+///
+/// * `Primal` — shares the `O(NP²)` Gram `X̃ᵀX̃`; each λ pays the `P³/3`
+///   factor and the hat GEMM.
+/// * `Dual` — shares the `O(N²P)` centered Gram `K_c`; each λ pays an
+///   `N³/3` Cholesky and an `N³` solve.
+/// * `Spectral` — shares the eigendecomposition of `K_c`; each λ pays one
+///   `N³` GEMM and nothing else. The per-candidate winner for P ≫ N.
+pub enum GramCache {
+    /// `X̃` and the unridged primal Gram `G₀ = X̃ᵀX̃`.
+    Primal { xa: Mat, g0: Mat },
+    /// `X̃` and the centered dual Gram `K_c = X_c X_cᵀ`.
+    Dual { xa: Mat, kc: Mat },
+    /// Eigendecomposition of `K_c`.
+    Spectral(SpectralGram),
+}
+
+impl GramCache {
+    /// Precompute the λ-free state for `backend`. The `K_c` build fans out
+    /// over `pool` when given.
+    ///
+    /// `Auto` here *assumes a multi-candidate grid*: it resolves as
+    /// `resolve_for_grid(n, p, 2)` — `Spectral` when `P > N`, else
+    /// `Primal` — because a cache exists to serve many λ. A caller that
+    /// knows its actual grid (or wants a single hat) should pre-resolve
+    /// with [`GramBackend::resolve_for_grid`] / [`GramBackend::resolve`]
+    /// and pass the result, as [`crate::fastcv::lambda_search`] and
+    /// [`HatMatrix::build_with`] do — on a wide shape with ≤ 1 positive
+    /// candidate, a blind `Auto` pays an eigendecomposition that `Dual`
+    /// would have skipped.
+    pub fn build(x: &Mat, backend: GramBackend, pool: Option<&ThreadPool>) -> GramCache {
+        let backend = match backend {
+            GramBackend::Auto => backend.resolve_for_grid(x.rows(), x.cols(), 2),
+            other => other,
+        };
+        match backend {
+            GramBackend::Primal => {
+                let xa = x.augment_ones();
+                let g0 = crate::linalg::syrk_t(&xa);
+                GramCache::Primal { xa, g0 }
+            }
+            GramBackend::Dual => {
+                let xa = x.augment_ones();
+                let kc = centered_gram(x, pool);
+                GramCache::Dual { xa, kc }
+            }
+            GramBackend::Spectral | GramBackend::Auto => {
+                GramCache::Spectral(SpectralGram::build(x, pool))
+            }
+        }
+    }
+
+    /// The hat matrix for one λ candidate against the cached state.
+    pub fn hat(&self, lambda: f64) -> Result<HatMatrix> {
+        assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
+        match self {
+            GramCache::Primal { xa, g0 } => {
+                let mut g = g0.clone();
+                let p1 = xa.cols();
+                for i in 0..p1 - 1 {
+                    g[(i, i)] += lambda;
+                }
+                hat_from_primal_gram(xa, &g, lambda)
+            }
+            GramCache::Dual { xa, kc } => {
+                if lambda <= 0.0 {
+                    bail!("dual Gram backend requires ridge λ > 0 (K_c is always singular: K_c𝟙 = 0)");
+                }
+                let n = kc.rows();
+                let mut kl = kc.clone();
+                for i in 0..n {
+                    kl[(i, i)] += lambda;
+                }
+                let ch = Cholesky::factor(&kl)
+                    .context("centered dual Gram K_c + λI not SPD — is λ > 0?")?;
+                // H = (1/N)𝟙𝟙ᵀ + (K_c + λI)⁻¹ K_c  (symmetric: both terms
+                // are functions of K_c).
+                let mut h = ch.solve_mat(kc);
+                let inv_n = 1.0 / n as f64;
+                for v in h.as_mut_slice() {
+                    *v += inv_n;
+                }
+                h.symmetrize();
+                Ok(HatMatrix {
+                    h,
+                    xa: xa.clone(),
+                    factor: GramFactor::OnDemand,
+                    lambda,
+                    backend: GramBackend::Dual,
+                })
+            }
+            GramCache::Spectral(sg) => sg.hat(lambda),
+        }
+    }
+}
+
+/// Centered data `X_c = (I − (1/N)𝟙𝟙ᵀ) X`.
+fn centered(x: &Mat) -> Mat {
+    let means = x.col_means();
+    Mat::from_fn(x.rows(), x.cols(), |i, j| x[(i, j)] - means[j])
+}
+
+/// Centered `N×N` Gram `K_c = X_c X_cᵀ`, optionally pool-parallel.
+fn centered_gram(x: &Mat, pool: Option<&ThreadPool>) -> Mat {
+    let xc = centered(x);
+    let mut kc = matmul_pool(&xc, &xc.t(), pool);
+    kc.symmetrize();
+    kc
+}
+
+/// One symmetric eigendecomposition of the centered Gram `K_c`, from which
+/// the hat matrix of **every** ridge value follows by a diagonal rescale:
+/// `H(λ) = (1/N)𝟙𝟙ᵀ + U diag(dᵢ/(dᵢ+λ)) Uᵀ`. This is what lets
+/// [`crate::fastcv::lambda_search::search_lambda`] sweep a grid without a
+/// fresh `O(P³)` factorisation per candidate.
+#[derive(Clone, Debug)]
+pub struct SpectralGram {
+    /// Augmented design (carried into the produced [`HatMatrix`]).
+    xa: Mat,
+    /// Eigenvalues of `K_c`, descending, clamped at 0 (roundoff guard).
+    values: Vec<f64>,
+    /// Matching eigenvectors as columns.
+    vectors: Mat,
+}
+
+impl SpectralGram {
+    /// Center `x`, form `K_c` (pool-parallel when given) and
+    /// eigendecompose it — the one-off `O(N²P + N³)` cost every λ shares.
+    pub fn build(x: &Mat, pool: Option<&ThreadPool>) -> SpectralGram {
+        let xa = x.augment_ones();
+        let kc = centered_gram(x, pool);
+        let SymEig { values, vectors } = sym_eig(&kc);
+        // K_c is PSD; tiny negative eigenvalues are roundoff and would put
+        // d/(d+λ) on the wrong side of 0 — clamp.
+        let values = values.into_iter().map(|d| d.max(0.0)).collect();
+        SpectralGram { xa, values, vectors }
+    }
+
+    /// Number of samples.
+    pub fn n(&self) -> usize {
+        self.xa.rows()
+    }
+
+    /// The hat matrix for one ridge value: `O(N³)` GEMM, no factorisation.
+    pub fn hat(&self, lambda: f64) -> Result<HatMatrix> {
+        if lambda <= 0.0 {
+            bail!("spectral Gram backend requires ridge λ > 0 (K_c is always singular: K_c𝟙 = 0)");
+        }
+        let n = self.n();
+        let scaled = Mat::from_fn(n, n, |i, j| {
+            self.vectors[(i, j)] * (self.values[j] / (self.values[j] + lambda))
+        });
+        let mut h = matmul(&scaled, &self.vectors.t());
+        let inv_n = 1.0 / n as f64;
+        for v in h.as_mut_slice() {
+            *v += inv_n;
+        }
+        h.symmetrize();
+        Ok(HatMatrix {
+            h,
+            xa: self.xa.clone(),
+            factor: GramFactor::OnDemand,
+            lambda,
+            backend: GramBackend::Spectral,
+        })
+    }
+}
+
+/// Primal construction from an already-ridged Gram `G = X̃ᵀX̃ + λI₀`:
+/// factor, multi-RHS solve, hat GEMM. Shared by [`HatMatrix::build`] and
+/// [`GramCache::hat`] so the two are bit-identical.
+fn hat_from_primal_gram(xa: &Mat, g: &Mat, lambda: f64) -> Result<HatMatrix> {
+    // Cholesky (G is SPD whenever invertible here); LU fallback gives a
+    // clean error message for singular unridged fits.
+    let (factor, w) = match Cholesky::factor(g) {
+        Ok(ch) => {
+            let w = ch.solve_mat(&xa.t()); // W = G⁻¹X̃ᵀ, (P+1)×N
+            (GramFactor::Chol(ch), w)
+        }
+        Err(_) => {
+            let lu = Lu::factor(g)
+                .context("gram matrix singular — increase ridge λ (P ≥ N with λ=0?)")?;
+            let w = lu.solve_mat(&xa.t());
+            (GramFactor::Lu(lu), w)
+        }
+    };
+    // H = X̃ W.
+    let mut h = Mat::zeros(xa.rows(), xa.rows());
+    gemm_acc(&mut h, xa, &w, 1.0, 0.0);
+    h.symmetrize(); // exact-math symmetric; tidy roundoff
+    Ok(HatMatrix { h, xa: xa.clone(), factor, lambda, backend: GramBackend::Primal })
 }
 
 impl HatMatrix {
     /// Build from raw data `x` (N×P) with ridge λ (λ=0 allowed when the
-    /// gram matrix is non-singular, i.e. typically N > P).
+    /// gram matrix is non-singular, i.e. typically N > P). Always the
+    /// primal construction — the historical entry point, kept bit-stable;
+    /// use [`HatMatrix::build_with`] to pick a backend.
     ///
     /// Perf note (EXPERIMENTS.md §Perf L3 #4): `H = X̃ G⁻¹ X̃ᵀ` is computed
     /// as `X̃ · solve(G, X̃ᵀ)` — a factorisation (`P³/3`) plus an `O(P²N)`
     /// multi-RHS solve — rather than materialising `G⁻¹` (`≈P³` extra).
     pub fn build(x: &Mat, lambda: f64) -> Result<HatMatrix> {
+        Self::build_with(x, lambda, GramBackend::Primal, None)
+    }
+
+    /// Build through a chosen [`GramBackend`] (`Auto` resolves by the P/N
+    /// ratio). All backends produce the same `H` up to roundoff (≲1e-10 on
+    /// well-conditioned problems); the dual/spectral paths additionally fan
+    /// the `K_c` GEMM over `pool` when one is given.
+    pub fn build_with(
+        x: &Mat,
+        lambda: f64,
+        backend: GramBackend,
+        pool: Option<&ThreadPool>,
+    ) -> Result<HatMatrix> {
         assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
-        let xa = x.augment_ones();
-        let g = gram_ridged(&xa, lambda);
-        // Cholesky (G is SPD whenever invertible here); LU fallback gives a
-        // clean error message for singular unridged fits.
-        let (factor, w) = match Cholesky::factor(&g) {
-            Ok(ch) => {
-                let w = ch.solve_mat(&xa.t()); // W = G⁻¹X̃ᵀ, (P+1)×N
-                (GramFactor::Chol(ch), w)
-            }
-            Err(_) => {
-                let lu = Lu::factor(&g)
-                    .context("gram matrix singular — increase ridge λ (P ≥ N with λ=0?)")?;
-                let w = lu.solve_mat(&xa.t());
-                (GramFactor::Lu(lu), w)
-            }
-        };
-        // H = X̃ W.
-        let mut h = Mat::zeros(xa.rows(), xa.rows());
-        gemm_acc(&mut h, &xa, &w, 1.0, 0.0);
-        h.symmetrize(); // exact-math symmetric; tidy roundoff
-        Ok(HatMatrix { h, xa, factor, lambda })
+        let resolved = backend.resolve(x.rows(), x.cols(), lambda);
+        GramCache::build(x, resolved, pool).hat(lambda)
     }
 
     /// Explicit inverse gram `S = (X̃ᵀX̃ + λI₀)⁻¹` — off the hot path; used
-    /// by the Woodbury derivation utilities and tests.
+    /// by the Woodbury derivation utilities and tests. Dual/spectral-built
+    /// hats factor the primal Gram on demand here (they never needed it).
     pub fn inv_gram(&self) -> Mat {
         match &self.factor {
             GramFactor::Chol(ch) => ch.inverse(),
             GramFactor::Lu(lu) => lu.inverse(),
+            GramFactor::OnDemand => match self.primal_factor() {
+                GramFactor::Chol(ch) => ch.inverse(),
+                GramFactor::Lu(lu) => lu.inverse(),
+                GramFactor::OnDemand => unreachable!(),
+            },
         }
     }
 
-    /// Solve `G z = b` against the stored factorisation.
+    /// Solve `G z = b` against the stored (or on-demand) factorisation.
     pub fn solve_gram(&self, b: &Mat) -> Mat {
         match &self.factor {
             GramFactor::Chol(ch) => ch.solve_mat(b),
             GramFactor::Lu(lu) => lu.solve_mat(b),
+            GramFactor::OnDemand => match self.primal_factor() {
+                GramFactor::Chol(ch) => ch.solve_mat(b),
+                GramFactor::Lu(lu) => lu.solve_mat(b),
+                GramFactor::OnDemand => unreachable!(),
+            },
+        }
+    }
+
+    /// Factor the primal Gram from the stored `xa` (dual/spectral hats
+    /// only). With λ > 0 — the only regime those backends exist in — the
+    /// Gram is SPD, so this cannot fail for a well-formed hat.
+    fn primal_factor(&self) -> GramFactor {
+        let g = gram_ridged(&self.xa, self.lambda);
+        match Cholesky::factor(&g) {
+            Ok(ch) => GramFactor::Chol(ch),
+            Err(_) => GramFactor::Lu(
+                Lu::factor(&g).expect("primal gram singular — dual/spectral hat with λ = 0?"),
+            ),
         }
     }
 
@@ -196,6 +521,131 @@ mod tests {
         let imb = hat.i_minus_block(&te);
         assert!((imb[(0, 0)] - (1.0 - hat.h[(2, 2)])).abs() < 1e-15);
         assert!((imb[(0, 1)] + hat.h[(2, 5)]).abs() < 1e-15);
+    }
+
+    #[test]
+    fn backend_tags_roundtrip_and_auto_resolves_by_shape() {
+        for b in [GramBackend::Auto, GramBackend::Primal, GramBackend::Dual, GramBackend::Spectral]
+        {
+            assert_eq!(GramBackend::from_tag(b.tag()), Some(b));
+        }
+        assert_eq!(GramBackend::from_tag("nope"), None);
+        // single hat: dual only for wide + ridged
+        assert_eq!(GramBackend::Auto.resolve(100, 20, 1.0), GramBackend::Primal);
+        assert_eq!(GramBackend::Auto.resolve(20, 100, 1.0), GramBackend::Dual);
+        assert_eq!(GramBackend::Auto.resolve(20, 100, 0.0), GramBackend::Primal);
+        // grid: wide + several positive candidates → spectral
+        assert_eq!(GramBackend::Auto.resolve_for_grid(20, 100, 4), GramBackend::Spectral);
+        assert_eq!(GramBackend::Auto.resolve_for_grid(20, 100, 1), GramBackend::Dual);
+        assert_eq!(GramBackend::Auto.resolve_for_grid(100, 20, 4), GramBackend::Primal);
+        // explicit choices pass through untouched
+        assert_eq!(GramBackend::Dual.resolve(100, 20, 1.0), GramBackend::Dual);
+        assert_eq!(GramBackend::Primal.resolve_for_grid(20, 100, 4), GramBackend::Primal);
+    }
+
+    #[test]
+    fn backend_equivalence_dual_matches_primal_hat() {
+        // Wide (P ≫ N) and tall (N ≫ P) shapes, several ridge values: the
+        // dual construction must reproduce the primal H to ~1e-8.
+        let mut rng = Rng::new(21);
+        for &(n, p) in &[(12usize, 40usize), (40, 8), (25, 25), (20, 120)] {
+            let x = random_x(&mut rng, n, p);
+            for lambda in [0.05, 1.0, 50.0] {
+                let primal =
+                    HatMatrix::build_with(&x, lambda, GramBackend::Primal, None).unwrap();
+                let dual = HatMatrix::build_with(&x, lambda, GramBackend::Dual, None).unwrap();
+                assert_eq!(dual.backend, GramBackend::Dual);
+                assert!(
+                    primal.h.max_abs_diff(&dual.h) < 1e-8,
+                    "n={n} p={p} λ={lambda}: |ΔH| = {}",
+                    primal.h.max_abs_diff(&dual.h)
+                );
+                // unpenalised intercept: H·1 = 1 in the dual too
+                let ones = vec![1.0; n];
+                assert_all_close(&dual.fit_response(&ones), &ones, 1e-8, "dual H·1");
+            }
+        }
+    }
+
+    #[test]
+    fn backend_equivalence_spectral_matches_primal_across_grid() {
+        // One SpectralGram serves the whole grid; every λ must agree with a
+        // from-scratch primal build.
+        let mut rng = Rng::new(22);
+        for &(n, p) in &[(15usize, 60usize), (35, 10)] {
+            let x = random_x(&mut rng, n, p);
+            let sg = SpectralGram::build(&x, None);
+            assert_eq!(sg.n(), n);
+            for lambda in [0.05, 0.7, 4.0, 200.0] {
+                let primal =
+                    HatMatrix::build_with(&x, lambda, GramBackend::Primal, None).unwrap();
+                let spectral = sg.hat(lambda).unwrap();
+                assert_eq!(spectral.backend, GramBackend::Spectral);
+                assert!(
+                    primal.h.max_abs_diff(&spectral.h) < 1e-8,
+                    "n={n} p={p} λ={lambda}: |ΔH| = {}",
+                    primal.h.max_abs_diff(&spectral.h)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backend_equivalence_gram_cache_primal_bitwise_matches_build() {
+        // The λ-grid cache's primal arm shares G₀ but must reproduce
+        // HatMatrix::build exactly (same floats, same factor path).
+        let mut rng = Rng::new(23);
+        let x = random_x(&mut rng, 30, 12);
+        let cache = GramCache::build(&x, GramBackend::Primal, None);
+        for lambda in [0.0, 0.3, 10.0] {
+            let from_cache = cache.hat(lambda).unwrap();
+            let direct = HatMatrix::build(&x, lambda).unwrap();
+            assert_eq!(from_cache.h.as_slice(), direct.h.as_slice(), "λ={lambda}");
+        }
+    }
+
+    #[test]
+    fn backend_dual_and_spectral_require_positive_lambda() {
+        let mut rng = Rng::new(24);
+        let x = random_x(&mut rng, 10, 30);
+        assert!(HatMatrix::build_with(&x, 0.0, GramBackend::Dual, None).is_err());
+        assert!(SpectralGram::build(&x, None).hat(0.0).is_err());
+        // Auto falls back to primal at λ=0, which errors on wide data with
+        // the usual singular-gram message rather than panicking.
+        assert!(HatMatrix::build_with(&x, 0.0, GramBackend::Auto, None).is_err());
+        // …and on tall data λ=0 stays valid through Auto.
+        let x_tall = random_x(&mut rng, 30, 5);
+        let hat = HatMatrix::build_with(&x_tall, 0.0, GramBackend::Auto, None).unwrap();
+        assert_eq!(hat.backend, GramBackend::Primal);
+    }
+
+    #[test]
+    fn backend_pooled_kc_build_is_bitwise_deterministic() {
+        // matmul_pool must not perturb K_c: dual hats built with and
+        // without a pool are identical to the last bit.
+        let mut rng = Rng::new(25);
+        let x = random_x(&mut rng, 40, 150);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let serial = HatMatrix::build_with(&x, 0.8, GramBackend::Dual, None).unwrap();
+        let pooled = HatMatrix::build_with(&x, 0.8, GramBackend::Dual, Some(&pool)).unwrap();
+        assert_eq!(serial.h.as_slice(), pooled.h.as_slice());
+    }
+
+    #[test]
+    fn backend_on_demand_gram_ops_match_primal() {
+        // inv_gram/solve_gram on a dual-built hat factor the primal Gram on
+        // demand and must agree with the primal-built hat's stored factor.
+        let mut rng = Rng::new(26);
+        let x = random_x(&mut rng, 12, 30);
+        let primal = HatMatrix::build_with(&x, 0.5, GramBackend::Primal, None).unwrap();
+        let dual = HatMatrix::build_with(&x, 0.5, GramBackend::Dual, None).unwrap();
+        let s_primal = primal.inv_gram();
+        let s_dual = dual.inv_gram();
+        assert!(s_primal.max_abs_diff(&s_dual) < 1e-9 * s_primal.max_abs().max(1.0));
+        let b = Mat::from_fn(31, 3, |_, _| rng.gauss());
+        let z_primal = primal.solve_gram(&b);
+        let z_dual = dual.solve_gram(&b);
+        assert!(z_primal.max_abs_diff(&z_dual) < 1e-9 * z_primal.max_abs().max(1.0));
     }
 
     #[test]

@@ -1,14 +1,22 @@
 //! Ridge-parameter selection by analytic cross-validation.
 //!
 //! The classic pain of regularised LDA is that tuning λ multiplies the CV
-//! cost by the grid size. With the analytic approach the gram matrix
-//! `X̃ᵀX̃` is computed **once**; each λ candidate costs one factorisation of
-//! `G + λI₀` plus the `O(N²P)` hat build and the fold solves — no per-fold
-//! refits anywhere. This module implements that loop, plus the §2.6.2
+//! cost by the grid size. The analytic approach shares everything λ-free
+//! across the grid through a [`GramCache`]: the primal path computes the
+//! gram `X̃ᵀX̃` **once** (each candidate pays only the factorisation and the
+//! hat GEMM), and on wide (P ≫ N) shapes the spectral path goes further —
+//! one eigendecomposition of the centered `N×N` Gram after which every
+//! candidate is a single `O(N³)` GEMM, no `O(P³)` anywhere. No per-fold
+//! refits in any case. This module implements that loop, plus the §2.6.2
 //! shrinkage-grid convenience through the Eq. 18 conversion.
+//!
+//! Selection is NaN-safe: an undefined metric (NaN — e.g. AUC on a
+//! single-class labelling) orders below every real score *and* below the
+//! −∞ of an infeasible fit, and a grid on which **every** candidate is
+//! infeasible returns an error instead of silently "selecting" a λ.
 
 use super::binary::AnalyticBinaryCv;
-use super::hat::HatMatrix;
+use super::hat::{GramBackend, GramCache, HatMatrix};
 use super::FoldCache;
 use crate::cv::metrics::{accuracy_signed, auc};
 use crate::linalg::Mat;
@@ -63,6 +71,11 @@ pub fn default_grid(points: usize) -> Vec<f64> {
 
 /// Search a λ grid with the analytic CV. `labels` drive Accuracy/AUC; for
 /// `NegMse` the signed codes in `y` are treated as the regression target.
+///
+/// Backend is [`GramBackend::Auto`]: tall shapes share the primal gram
+/// across the grid; wide shapes share one spectral decomposition, making
+/// each additional candidate nearly free. Use [`search_lambda_backend`] to
+/// force a backend. Errors when every candidate is infeasible.
 pub fn search_lambda(
     x: &Mat,
     y: &[f64],
@@ -71,37 +84,74 @@ pub fn search_lambda(
     grid: &[f64],
     by: SelectBy,
 ) -> Result<LambdaSearch> {
+    search_lambda_backend(x, y, labels, folds, grid, by, GramBackend::Auto)
+}
+
+/// [`search_lambda`] with an explicit [`GramBackend`]. One [`GramCache`]
+/// holds everything λ-free for the whole grid; per candidate only the
+/// λ-dependent factor (primal/dual) or a diagonal rescale GEMM (spectral)
+/// is paid. All backends select the identical winner up to roundoff
+/// (property-tested).
+pub fn search_lambda_backend(
+    x: &Mat,
+    y: &[f64],
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    grid: &[f64],
+    by: SelectBy,
+    backend: GramBackend,
+) -> Result<LambdaSearch> {
     assert!(!grid.is_empty());
+    let positives = grid.iter().filter(|&&l| l > 0.0).count();
+    let resolved = backend.resolve_for_grid(x.rows(), x.cols(), positives);
+    let cache = GramCache::build(x, resolved, None);
     let mut scores = Vec::with_capacity(grid.len());
     for &lambda in grid {
-        // Each λ: fresh hat (G factor + O(N²P) build), shared gram inputs.
-        let score = match AnalyticBinaryCv::fit(x, y, lambda) {
-            Ok(cv) => {
-                let cache = FoldCache::prepare(&cv.hat, folds, false)?;
-                let dv = cv.decision_values_cached(&cache);
+        let score = match cache.hat(lambda) {
+            Ok(hat) => {
+                let cv = AnalyticBinaryCv::with_hat(hat, y);
+                let fold_cache = FoldCache::prepare(&cv.hat, folds, false)?;
+                let dv = cv.decision_values_cached(&fold_cache);
                 match by {
                     SelectBy::Accuracy => accuracy_signed(&dv, y),
                     SelectBy::Auc => auc(&dv, labels),
                     SelectBy::NegMse => -crate::cv::metrics::mse(&dv, y),
                 }
             }
-            // λ too small for a wide design: worst score, not an abort.
+            // λ infeasible for this shape/backend: worst score, not an abort.
             Err(_) => f64::NEG_INFINITY,
         };
         scores.push(LambdaScore { lambda, score });
     }
-    let best = scores
-        .iter()
-        .enumerate()
-        .max_by(|(ia, a), (ib, b)| {
-            a.score
-                .partial_cmp(&b.score)
-                .unwrap()
-                .then(ib.cmp(ia)) // tie → smaller λ (earlier index)
-        })
-        .map(|(i, _)| i)
-        .unwrap();
+    let best = select_best(&scores)?;
     Ok(LambdaSearch { scores, best })
+}
+
+/// Pick the winning grid index: highest score, ties → smaller λ (earlier
+/// index). NaN orders as *worst* — below every real score and below the
+/// −∞ of an infeasible fit — instead of poisoning the comparison (the old
+/// `partial_cmp(..).unwrap()` aborted on the first NaN). When every
+/// candidate is infeasible (NaN or −∞) there is nothing meaningful to
+/// select and an error is returned.
+pub(crate) fn select_best(scores: &[LambdaScore]) -> Result<usize> {
+    let mut best: Option<usize> = None;
+    for (i, s) in scores.iter().enumerate() {
+        if s.score.is_nan() {
+            continue;
+        }
+        match best {
+            None => best = Some(i),
+            Some(b) if s.score > scores[b].score => best = Some(i),
+            _ => {}
+        }
+    }
+    match best {
+        Some(b) if scores[b].score > f64::NEG_INFINITY => Ok(b),
+        _ => anyhow::bail!(
+            "λ search: every grid candidate is infeasible (score NaN or −∞) — \
+             widen the grid, increase λ, or check the labels/metric"
+        ),
+    }
 }
 
 /// §2.6.2 convenience: search over a *shrinkage* grid by converting each
@@ -127,6 +177,8 @@ pub fn search_shrinkage(
 /// Nested CV: outer folds estimate generalisation of the *whole pipeline*
 /// (inner λ search included), the honest protocol for reporting tuned
 /// performance. Returns (outer decision values, per-outer-fold chosen λ).
+/// Inner searches run through [`GramBackend::Auto`] — on wide data each
+/// outer fold pays one spectral decomposition for its whole inner grid.
 pub fn nested_cv(
     x: &Mat,
     y: &[f64],
@@ -137,6 +189,22 @@ pub fn nested_cv(
     by: SelectBy,
     rng: &mut crate::util::rng::Rng,
 ) -> Result<(Vec<f64>, Vec<f64>)> {
+    nested_cv_backend(x, y, labels, outer_folds, inner_k, grid, by, rng, GramBackend::Auto)
+}
+
+/// [`nested_cv`] with an explicit [`GramBackend`] for the inner searches.
+#[allow(clippy::too_many_arguments)]
+pub fn nested_cv_backend(
+    x: &Mat,
+    y: &[f64],
+    labels: &[usize],
+    outer_folds: &[Vec<usize>],
+    inner_k: usize,
+    grid: &[f64],
+    by: SelectBy,
+    rng: &mut crate::util::rng::Rng,
+    backend: GramBackend,
+) -> Result<(Vec<f64>, Vec<f64>)> {
     super::validate_folds(outer_folds, x.rows())?;
     let mut dvals = vec![f64::NAN; x.rows()];
     let mut chosen = Vec::with_capacity(outer_folds.len());
@@ -146,7 +214,7 @@ pub fn nested_cv(
         let y_tr: Vec<f64> = tr.iter().map(|&i| y[i]).collect();
         let l_tr: Vec<usize> = tr.iter().map(|&i| labels[i]).collect();
         let inner_folds = crate::cv::folds::kfold(tr.len(), inner_k.min(tr.len()), rng);
-        let search = search_lambda(&x_tr, &y_tr, &l_tr, &inner_folds, grid, by)?;
+        let search = search_lambda_backend(&x_tr, &y_tr, &l_tr, &inner_folds, grid, by, backend)?;
         let lambda = search.best_lambda();
         chosen.push(lambda);
         // Train on the full outer-training set with the chosen λ, predict Te.
@@ -159,10 +227,9 @@ pub fn nested_cv(
     Ok((dvals, chosen))
 }
 
-/// Reuse a gram factor across λ values? The gram itself is λ-free; expose
-/// the build so callers sweeping huge grids can at least share `X̃ᵀX̃`.
-/// (Kept simple: HatMatrix::build recomputes the gram; this helper exists
-/// so the ablation bench can quantify what sharing would save.)
+/// One hat for one λ — kept for API compatibility and the ablation bench's
+/// "rebuild per candidate" arm. Grid sweeps should use [`GramCache`] (or
+/// just [`search_lambda`]), which share everything λ-free instead.
 pub fn hat_for_lambda(x: &Mat, lambda: f64) -> Result<HatMatrix> {
     HatMatrix::build(x, lambda)
 }
@@ -265,6 +332,103 @@ mod tests {
         assert!(dv.iter().all(|v| v.is_finite()));
         let acc = accuracy_signed(&dv, &y);
         assert!(acc > 0.7, "nested acc={acc}");
+    }
+
+    #[test]
+    fn select_best_orders_nan_as_worst() {
+        // Regression: the old `partial_cmp(..).unwrap()` aborted on the
+        // first NaN score. NaN must lose to every real score — including a
+        // lower one — and to −∞-feasible grids with any finite entry.
+        let mk = |vals: &[f64]| -> Vec<LambdaScore> {
+            vals.iter()
+                .enumerate()
+                .map(|(i, &score)| LambdaScore { lambda: i as f64, score })
+                .collect()
+        };
+        assert_eq!(select_best(&mk(&[f64::NAN, 0.5])).unwrap(), 1);
+        assert_eq!(select_best(&mk(&[0.2, f64::NAN, 0.1])).unwrap(), 0);
+        assert_eq!(select_best(&mk(&[f64::NAN, 0.3, 0.3])).unwrap(), 1, "tie → smaller λ");
+        assert_eq!(select_best(&mk(&[f64::NEG_INFINITY, f64::NAN, 0.1])).unwrap(), 2);
+    }
+
+    #[test]
+    fn select_best_errors_when_every_candidate_is_infeasible() {
+        // Regression: an all-infeasible grid used to silently "select" a λ.
+        let mk = |vals: &[f64]| -> Vec<LambdaScore> {
+            vals.iter()
+                .enumerate()
+                .map(|(i, &score)| LambdaScore { lambda: i as f64, score })
+                .collect()
+        };
+        assert!(select_best(&mk(&[f64::NAN, f64::NAN])).is_err());
+        assert!(select_best(&mk(&[f64::NEG_INFINITY])).is_err());
+        assert!(select_best(&mk(&[f64::NEG_INFINITY, f64::NAN])).is_err());
+    }
+
+    #[test]
+    fn all_infeasible_grid_returns_err_end_to_end() {
+        // Wide data, grid containing only λ=0: every fit is singular, so
+        // the search must refuse rather than return the useless λ=0.
+        let mut rng = Rng::new(6);
+        let ds = generate(&SyntheticSpec::binary(20, 80), &mut rng);
+        let y = ds.y_signed();
+        let folds = stratified_kfold(&ds.labels, 4, &mut rng);
+        let res = search_lambda(&ds.x, &y, &ds.labels, &folds, &[0.0], SelectBy::Accuracy);
+        assert!(res.is_err(), "all-infeasible grid must error");
+    }
+
+    #[test]
+    fn single_class_auc_grid_errors_not_panics() {
+        // AUC is NaN for every λ when the labelling has one class; the
+        // search must order those as worst and, with nothing feasible left,
+        // error — the pre-fix code panicked inside the comparator.
+        let mut rng = Rng::new(7);
+        let x = crate::linalg::Mat::from_fn(20, 5, |_, _| rng.gauss());
+        let labels = vec![0usize; 20];
+        let y = vec![1.0; 20];
+        let folds = crate::cv::folds::kfold(20, 4, &mut rng);
+        let res = search_lambda(&x, &y, &labels, &folds, &default_grid(3), SelectBy::Auc);
+        assert!(res.is_err(), "all-NaN AUC grid must error");
+    }
+
+    #[test]
+    fn backend_equivalence_search_picks_identical_winner() {
+        // Acceptance: primal, dual, and spectral backends must select the
+        // same λ on the same grid — wide and tall shapes.
+        use crate::fastcv::hat::GramBackend;
+        let mut rng = Rng::new(8);
+        for (n, p) in [(50usize, 150usize), (80, 20)] {
+            let mut spec = SyntheticSpec::binary(n, p);
+            spec.separation = 2.0;
+            let ds = generate(&spec, &mut rng);
+            let y = ds.y_signed();
+            let folds = stratified_kfold(&ds.labels, 5, &mut rng);
+            // Moderate ridges only: near-zero λ on wide shapes puts the
+            // fold solves in the interpolation regime where backend
+            // roundoff is amplified enough to flip a knife-edge accuracy.
+            let grid = [0.1, 0.5, 2.0, 10.0, 50.0, 250.0];
+            let runs: Vec<LambdaSearch> = [
+                GramBackend::Primal,
+                GramBackend::Dual,
+                GramBackend::Spectral,
+                GramBackend::Auto,
+            ]
+            .iter()
+            .map(|&b| {
+                search_lambda_backend(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, b)
+                    .unwrap()
+            })
+            .collect();
+            for r in &runs[1..] {
+                assert_eq!(r.best, runs[0].best, "winner differs between backends (n={n} p={p})");
+                assert!(
+                    (r.best_score() - runs[0].best_score()).abs() < 1e-9,
+                    "best score differs: {} vs {}",
+                    r.best_score(),
+                    runs[0].best_score()
+                );
+            }
+        }
     }
 
     #[test]

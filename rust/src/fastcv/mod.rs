@@ -38,6 +38,37 @@
 //! any batch size and thread count, and two engines handed RNGs in the
 //! same state see identical permutations. Changing the batching strategy
 //! can therefore never change a scientific result — only wall-clock.
+//!
+//! ## Gram backends and the selection rule
+//!
+//! Every analytic front-end runs off the same hat matrix, but *how* that
+//! matrix is built is a [`GramBackend`] choice with asymptotically
+//! different costs (full derivations in [`hat`]'s module docs):
+//!
+//! | backend    | cost per hat        | best when                     |
+//! |------------|---------------------|-------------------------------|
+//! | `Primal`   | `O(NP² + P³)`       | N ≫ P, or λ = 0               |
+//! | `Dual`     | `O(N²P + N³)`       | P ≫ N, single λ (λ > 0)       |
+//! | `Spectral` | `O(N²P + N³)` once, then `O(N³)` per λ | P ≫ N, λ grids |
+//!
+//! `Auto` resolves by the P/N ratio: a single hat picks `Dual` when
+//! `λ > 0 ∧ P > N` and `Primal` otherwise
+//! ([`hat::GramBackend::resolve`]); a λ-grid caller
+//! ([`lambda_search::search_lambda`]) upgrades the wide case to `Spectral`
+//! as soon as ≥ 2 positive candidates amortise the eigendecomposition
+//! ([`hat::GramBackend::resolve_for_grid`]). The backends agree to ~1e-8 on
+//! decision values (property-tested as `backend_*` tests across this
+//! module), so the choice is a pure wall-clock knob — exposed as
+//! `--backend primal|dual|spectral|auto` on the CLI sweep alongside
+//! `--engine`. The dual/spectral builds can additionally fan the
+//! `K_c = X_cX_cᵀ` GEMM over a
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool) via
+//! [`crate::linalg::matmul_pool`] when the caller hands one to
+//! [`hat::HatMatrix::build_with`] / [`hat::GramCache::build`] /
+//! [`bigdata::StreamingHat::build_with`]; the analytic front-ends
+//! (`fit_with`, `search_lambda`, the perm engines) currently pass `None` —
+//! the coordinator already parallelises across sweep points, and threading
+//! a pool through the front-ends is a ROADMAP open item.
 
 pub mod bigdata;
 pub mod binary;
@@ -47,6 +78,8 @@ pub mod multiclass;
 pub mod perm;
 pub mod perm_batch;
 pub mod woodbury;
+
+pub use hat::{GramBackend, GramCache, SpectralGram};
 
 use crate::linalg::{Lu, Mat};
 use anyhow::{Context, Result};

@@ -7,7 +7,7 @@
 //! updated, but is `O(C³)` per fold — negligible. Classification is by
 //! nearest centroid in the cross-validated discriminant-score space.
 
-use super::hat::HatMatrix;
+use super::hat::{GramBackend, HatMatrix};
 use super::FoldCache;
 use crate::linalg::{matmul, Mat};
 use crate::model::lda_multiclass::nearest_centroid;
@@ -30,9 +30,23 @@ pub struct AnalyticMulticlassCv {
 }
 
 impl AnalyticMulticlassCv {
-    /// Fit the single full-data multivariate regression.
+    /// Fit the single full-data multivariate regression (primal Gram; see
+    /// [`Self::fit_with`] for the P ≫ N backends).
     pub fn fit(x: &Mat, labels: &[usize], c: usize, lambda: f64) -> Result<AnalyticMulticlassCv> {
-        let hat = HatMatrix::build(x, lambda)?;
+        Self::fit_with(x, labels, c, lambda, GramBackend::Primal)
+    }
+
+    /// [`Self::fit`] through a chosen [`GramBackend`] (`Auto` picks by the
+    /// P/N ratio). Predictions are backend-invariant: step 1's fits agree
+    /// to ~1e-8 and step 2 is a `C×C` problem downstream of them.
+    pub fn fit_with(
+        x: &Mat,
+        labels: &[usize],
+        c: usize,
+        lambda: f64,
+        backend: GramBackend,
+    ) -> Result<AnalyticMulticlassCv> {
+        let hat = HatMatrix::build_with(x, lambda, backend, None)?;
         Ok(Self::with_hat(hat, labels, c))
     }
 
@@ -340,6 +354,29 @@ mod tests {
             cv.set_labels(lp);
             let serial = cv.predict_cached(&cache).unwrap();
             assert_eq!(stacked[p], serial, "stacked perm {p} must equal serial exactly");
+        }
+    }
+
+    #[test]
+    fn backend_equivalence_multiclass_predictions() {
+        // Acceptance: the multi-class front-end predicts identically through
+        // every backend — wide and tall shapes, several class counts.
+        use crate::fastcv::hat::GramBackend;
+        let mut rng = Rng::new(31);
+        for (per, c, p) in [(8usize, 4usize, 80usize), (15, 3, 6), (10, 5, 120)] {
+            let (x, labels) = blobs(&mut rng, per, c, p, 2.5);
+            let folds = stratified_kfold(&labels, 4, &mut rng);
+            let lambda = 1.5;
+            let primal =
+                AnalyticMulticlassCv::fit_with(&x, &labels, c, lambda, GramBackend::Primal)
+                    .unwrap();
+            let pred_p = primal.predict(&folds).unwrap();
+            for backend in [GramBackend::Dual, GramBackend::Spectral, GramBackend::Auto] {
+                let cv =
+                    AnalyticMulticlassCv::fit_with(&x, &labels, c, lambda, backend).unwrap();
+                let pred = cv.predict(&folds).unwrap();
+                assert_eq!(pred, pred_p, "backend {backend:?} predictions differ (c={c} p={p})");
+            }
         }
     }
 

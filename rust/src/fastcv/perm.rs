@@ -21,6 +21,7 @@
 //! analytic-vs-standard agreement tests rely on.
 
 use super::binary::AnalyticBinaryCv;
+use super::hat::GramBackend;
 use super::multiclass::AnalyticMulticlassCv;
 use super::FoldCache;
 use crate::cv::metrics::{accuracy_labels, accuracy_signed};
@@ -75,8 +76,35 @@ pub fn analytic_binary_permutation(
     bias_adjust: bool,
     rng: &mut Rng,
 ) -> Result<PermutationResult> {
+    analytic_binary_permutation_backend(
+        x,
+        labels,
+        folds,
+        lambda,
+        n_perm,
+        bias_adjust,
+        rng,
+        GramBackend::Primal,
+    )
+}
+
+/// [`analytic_binary_permutation`] with an explicit [`GramBackend`] for the
+/// one-off hat build. The permutation stream itself is hat-construction
+/// agnostic — `H` is built once, so the null distribution is backend-
+/// invariant up to the ~1e-8 hat roundoff (property-tested).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_binary_permutation_backend(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    bias_adjust: bool,
+    rng: &mut Rng,
+    backend: GramBackend,
+) -> Result<PermutationResult> {
     let y = signed_codes(labels);
-    let mut cv = AnalyticBinaryCv::fit(x, &y, lambda)?;
+    let mut cv = AnalyticBinaryCv::fit_with(x, &y, lambda, backend)?;
     let cache = FoldCache::prepare(&cv.hat, folds, bias_adjust)?;
     let dvals = |cv: &AnalyticBinaryCv, labels: &[usize]| -> Result<Vec<f64>> {
         if bias_adjust {
@@ -127,7 +155,31 @@ pub fn analytic_multiclass_permutation(
     n_perm: usize,
     rng: &mut Rng,
 ) -> Result<PermutationResult> {
-    let mut cv = AnalyticMulticlassCv::fit(x, labels, c, lambda)?;
+    analytic_multiclass_permutation_backend(
+        x,
+        labels,
+        c,
+        folds,
+        lambda,
+        n_perm,
+        rng,
+        GramBackend::Primal,
+    )
+}
+
+/// [`analytic_multiclass_permutation`] with an explicit [`GramBackend`].
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_multiclass_permutation_backend(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    rng: &mut Rng,
+    backend: GramBackend,
+) -> Result<PermutationResult> {
+    let mut cv = AnalyticMulticlassCv::fit_with(x, labels, c, lambda, backend)?;
     let cache = FoldCache::prepare(&cv.hat, folds, true)?;
     let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
     let anchor = rng.next_u64();
@@ -227,6 +279,45 @@ mod tests {
         assert!((a.observed - b.observed).abs() < 1e-12);
         for (x1, x2) in a.null.iter().zip(&b.null) {
             assert!((x1 - x2).abs() < 1e-12, "null mismatch: {x1} vs {x2}");
+        }
+    }
+
+    #[test]
+    fn backend_equivalence_permutation_null_distributions() {
+        // Acceptance: the perm front-end is backend-invariant — identical
+        // observed accuracy, null distribution, and p-value through every
+        // Gram backend (accuracies are 1/N-quantised, so the ~1e-9 hat
+        // roundoff cannot move them off a knife edge here).
+        let mut rng = Rng::new(9);
+        let (x, labels) = blobs(&mut rng, 12, 2, 60, 2.5); // wide: P ≫ N
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        let base = analytic_binary_permutation_backend(
+            &x, &labels, &folds, 1.0, 15, true, &mut Rng::new(42), GramBackend::Primal,
+        )
+        .unwrap();
+        for backend in [GramBackend::Dual, GramBackend::Spectral, GramBackend::Auto] {
+            let r = analytic_binary_permutation_backend(
+                &x, &labels, &folds, 1.0, 15, true, &mut Rng::new(42), backend,
+            )
+            .unwrap();
+            assert_eq!(r.observed, base.observed, "{backend:?} observed");
+            assert_eq!(r.null, base.null, "{backend:?} null distribution");
+            assert_eq!(r.p_value, base.p_value, "{backend:?} p-value");
+        }
+        // multi-class front-end too
+        let (x, labels) = blobs(&mut rng, 10, 3, 50, 2.5);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let base = analytic_multiclass_permutation_backend(
+            &x, &labels, 3, &folds, 1.0, 8, &mut Rng::new(43), GramBackend::Primal,
+        )
+        .unwrap();
+        for backend in [GramBackend::Dual, GramBackend::Spectral] {
+            let r = analytic_multiclass_permutation_backend(
+                &x, &labels, 3, &folds, 1.0, 8, &mut Rng::new(43), backend,
+            )
+            .unwrap();
+            assert_eq!(r.observed, base.observed, "{backend:?} multiclass observed");
+            assert_eq!(r.null, base.null, "{backend:?} multiclass null");
         }
     }
 

@@ -33,6 +33,7 @@
 //! same per-fold code as the serial path.
 
 use super::binary::AnalyticBinaryCv;
+use super::hat::GramBackend;
 use super::multiclass::AnalyticMulticlassCv;
 use super::perm::{p_value, permuted_labels, PermutationResult};
 use super::FoldCache;
@@ -134,8 +135,37 @@ pub fn analytic_binary_permutation_batched(
     rng: &mut Rng,
     strategy: BatchStrategy,
 ) -> Result<PermutationResult> {
+    analytic_binary_permutation_batched_backend(
+        x,
+        labels,
+        folds,
+        lambda,
+        n_perm,
+        bias_adjust,
+        rng,
+        strategy,
+        GramBackend::Primal,
+    )
+}
+
+/// [`analytic_binary_permutation_batched`] with an explicit
+/// [`GramBackend`] for the one-off hat build. For equal backends the null
+/// distribution stays bit-identical to the serial engine's (the hat is
+/// shared; batching only regroups the downstream kernels).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_binary_permutation_batched_backend(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    bias_adjust: bool,
+    rng: &mut Rng,
+    strategy: BatchStrategy,
+    backend: GramBackend,
+) -> Result<PermutationResult> {
     let y = signed_codes(labels);
-    let cv = AnalyticBinaryCv::fit(x, &y, lambda)?;
+    let cv = AnalyticBinaryCv::fit_with(x, &y, lambda, backend)?;
     let cache = FoldCache::prepare(&cv.hat, folds, bias_adjust)?;
     let observed = if bias_adjust {
         accuracy_signed(&cv.decision_values_bias_adjusted(&cache, labels)?, &y)
@@ -191,7 +221,34 @@ pub fn analytic_multiclass_permutation_batched(
     rng: &mut Rng,
     strategy: BatchStrategy,
 ) -> Result<PermutationResult> {
-    let cv = AnalyticMulticlassCv::fit(x, labels, c, lambda)?;
+    analytic_multiclass_permutation_batched_backend(
+        x,
+        labels,
+        c,
+        folds,
+        lambda,
+        n_perm,
+        rng,
+        strategy,
+        GramBackend::Primal,
+    )
+}
+
+/// [`analytic_multiclass_permutation_batched`] with an explicit
+/// [`GramBackend`].
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_multiclass_permutation_batched_backend(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    rng: &mut Rng,
+    strategy: BatchStrategy,
+    backend: GramBackend,
+) -> Result<PermutationResult> {
+    let cv = AnalyticMulticlassCv::fit_with(x, labels, c, lambda, backend)?;
     let cache = FoldCache::prepare(&cv.hat, folds, true)?;
     let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
     let anchor = rng.next_u64();
@@ -368,6 +425,36 @@ mod tests {
             .unwrap();
             assert_eq!(base.null, t.null, "threads={threads} must be bit-identical");
             assert_eq!(base.p_value, t.p_value);
+        }
+    }
+
+    #[test]
+    fn backend_equivalence_batched_engine_bit_identical_per_backend() {
+        // For a fixed backend the batched engine must stay bit-identical to
+        // the serial engine (the hat is shared, batching is regrouping) —
+        // including through the dual backend on a wide shape.
+        use crate::fastcv::perm::analytic_binary_permutation_backend;
+        let mut rng = Rng::new(17);
+        let (x, labels) = blobs(&mut rng, 10, 2, 50, 2.0); // N=20, P=50
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        for backend in [GramBackend::Dual, GramBackend::Spectral] {
+            let serial = analytic_binary_permutation_backend(
+                &x, &labels, &folds, 0.8, 12, false, &mut Rng::new(5), backend,
+            )
+            .unwrap();
+            let batched = analytic_binary_permutation_batched_backend(
+                &x,
+                &labels,
+                &folds,
+                0.8,
+                12,
+                false,
+                &mut Rng::new(5),
+                BatchStrategy::new(5, 2),
+                backend,
+            )
+            .unwrap();
+            assert_same_result(&serial, &batched, &format!("backend {backend:?}"));
         }
     }
 

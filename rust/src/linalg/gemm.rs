@@ -142,6 +142,39 @@ fn micro_kernel(c: &mut Mat, a_sl: &[f64], b_sl: &[f64], ci: usize, cj: usize, m
     }
 }
 
+/// `C = A·B` with row panels of `A` fanned out over a
+/// [`ThreadPool`](crate::util::threadpool::ThreadPool).
+///
+/// Bit-identical to [`matmul`] for any pool size or panel split: every
+/// output element is produced by the same blocked kernel, and its
+/// accumulation order (sequential within each KC block, blocks added in
+/// ascending `k0`) does not depend on which row panel the element's row
+/// lands in. The dual Gram build (`K_c = X_c X_cᵀ`, `N×N×P` flops) is the
+/// intended caller. Falls back to the serial kernel when no pool is given,
+/// the pool has a single worker, or `A` is too short to split.
+pub fn matmul_pool(a: &Mat, b: &Mat, pool: Option<&crate::util::threadpool::ThreadPool>) -> Mat {
+    let pool = match pool {
+        Some(p) if p.size() > 1 && a.rows() >= 2 * MR => p,
+        _ => return matmul(a, b),
+    };
+    let panels = (pool.size() * 2).min(a.rows());
+    let panel_rows = a.rows().div_ceil(panels);
+    let ranges: Vec<(usize, usize)> = (0..a.rows())
+        .step_by(panel_rows)
+        .map(|lo| (lo, (lo + panel_rows).min(a.rows())))
+        .collect();
+    let blocks = pool.map(ranges.len(), |c| {
+        let (lo, hi) = ranges[c];
+        let idx: Vec<usize> = (lo..hi).collect();
+        matmul(&a.take_rows(&idx), b)
+    });
+    let mut data = Vec::with_capacity(a.rows() * b.cols());
+    for blk in blocks {
+        data.extend_from_slice(blk.as_slice());
+    }
+    Mat::from_vec(a.rows(), b.cols(), data)
+}
+
 /// `AᵀA` symmetric rank-k update (forms the scatter/gram matrix). Only the
 /// upper triangle is computed then mirrored.
 pub fn syrk_t(a: &Mat) -> Mat {
@@ -357,6 +390,24 @@ mod tests {
             for i in 0..m {
                 assert!((y[i] - y_ref[i]).abs() < 1e-10);
             }
+        }
+    }
+
+    #[test]
+    fn matmul_pool_bitwise_matches_serial() {
+        // The dual Gram build relies on this: fanning row panels over the
+        // pool must not change a single bit of the product.
+        let mut rng = Rng::new(11);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        for &(m, k, n) in &[(3, 5, 4), (65, 40, 65), (130, 17, 130), (257, 64, 31)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let serial = matmul(&a, &b);
+            let pooled = matmul_pool(&a, &b, Some(&pool));
+            assert_eq!(serial.as_slice(), pooled.as_slice(), "({m},{k},{n})");
+            // no-pool fallback is the serial kernel itself
+            let none = matmul_pool(&a, &b, None);
+            assert_eq!(serial.as_slice(), none.as_slice(), "({m},{k},{n}) fallback");
         }
     }
 

@@ -18,6 +18,7 @@ use anyhow::Result;
 use fastcv::coordinator::report::AnovaFactor;
 use fastcv::coordinator::sweep::{grid, Experiment, PermEngine, SweepScale};
 use fastcv::coordinator::{Scheduler, SweepReport};
+use fastcv::fastcv::hat::GramBackend;
 use fastcv::util::cli::Args;
 
 fn main() {
@@ -56,6 +57,7 @@ fn print_usage() {
            sweep --exp f3a|f3b|f3c|f3d   Fig. 3 relative-efficiency sweeps\n\
                  [--scale tiny|medium|paper] [--seed N] [--workers N] [--out DIR]\n\
                  [--engine serial|batched] [--batch B] [--threads T]  (perm sweeps)\n\
+                 [--backend primal|dual|spectral|auto]  (analytic-arm Gram backend)\n\
            parity                        §4.1 N≈P crossover table\n\
            complexity                    Table 1 empirical scaling exponents\n\
            eeg [--subjects N] [--perms N] [--full]   Fig. 4 EEG/MEG permutation study\n\
@@ -97,6 +99,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         },
         other => anyhow::bail!("unknown engine {other:?} (serial|batched)"),
     };
+    let backend_tag = args.get_or("backend", "primal");
+    let backend = GramBackend::from_tag(&backend_tag)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_tag:?} (primal|dual|spectral|auto)"))?;
     let mut points = grid(exp, &scale);
     if engine != PermEngine::Serial {
         // The engine only governs the analytic arm of permutation points;
@@ -108,6 +113,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         } else {
             eprintln!("--engine is ignored for {} (no permutation arm)", exp.name());
         }
+    }
+    // The Gram backend governs the analytic arm's hat build on every
+    // experiment (all grid points carry λ > 0, so dual/spectral are always
+    // well-defined; `auto` re-resolves per point's P/N ratio).
+    for p in points.iter_mut() {
+        p.backend = backend;
     }
     eprintln!("{}: {} points", exp.name(), points.len());
     let sched = Scheduler::new(workers, seed, args.flag("verbose"));
@@ -147,6 +158,7 @@ fn cmd_parity(args: &Args) -> Result<()> {
             rep: 0,
             lambda: 1.0,
             engine: PermEngine::Serial,
+            backend: GramBackend::Primal,
         };
         results.push(run_point(&point, seed)?);
     }
@@ -181,6 +193,7 @@ fn cmd_complexity(args: &Args) -> Result<()> {
             rep: 0,
             lambda: 1.0,
             engine: PermEngine::Serial,
+            backend: GramBackend::Primal,
         };
         let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
         rows_p.push((p as f64, r.t_std, r.t_ana));
@@ -200,6 +213,7 @@ fn cmd_complexity(args: &Args) -> Result<()> {
             rep: 0,
             lambda: 1.0,
             engine: PermEngine::Serial,
+            backend: GramBackend::Primal,
         };
         let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
         rows_n.push((n as f64, r.t_std, r.t_ana));

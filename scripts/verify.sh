@@ -18,6 +18,15 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+# The backend-equivalence property tests are the contract that makes the
+# Gram-backend knob a pure wall-clock choice; run them by name so a filtered
+# or flaky-skipped suite can never silently drop them.
+echo "== backend equivalence: cargo test -q backend_ =="
+cargo test -q backend_
+
+echo "== benches compile: cargo bench --no-run =="
+cargo bench --no-run
+
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== style (advisory): cargo fmt --check =="
   cargo fmt --all --check || echo "WARN: rustfmt check failed (advisory)"
@@ -39,6 +48,9 @@ if [ "${FASTCV_SKIP_BENCH:-0}" != "1" ]; then
   # paper-scale numbers (N=256, P=2048, 1000 perms, 8 threads).
   FASTCV_BENCH_OUT="${FASTCV_BENCH_OUT:-.}" \
     cargo bench --bench ablation_updates
+  echo "== perf trajectory: Gram-backend ablation (BENCH_backend.json) =="
+  FASTCV_BENCH_OUT="${FASTCV_BENCH_OUT:-.}" \
+    cargo bench --bench ablation_backend
 fi
 
 echo "verify: OK"
