@@ -7,7 +7,13 @@
 //!    (`$FASTCV_BENCH_OUT` or the working directory) for the perf
 //!    trajectory. The headline rows: dual beats primal on the P ≫ N shapes
 //!    and the spectral sweep beats the per-λ rebuild on an 8-point grid.
-//! 2. **XLA artifact comparison** (skips cleanly without `make artifacts`)
+//! 2. **Pooled Gram builds** — serial vs ComputeContext-pooled `K_c` GEMM
+//!    (dual/spectral) and `syrk_t` primal gram on a wide shape; the pooled
+//!    builds are bit-identical, so the contrast is pure wall-clock.
+//! 3. **Multi-class λ grid** — `search_lambda_multiclass` with one shared
+//!    spectral decomposition vs a from-scratch multi-class rebuild per
+//!    candidate, on a wide shape.
+//! 4. **XLA artifact comparison** (skips cleanly without `make artifacts`)
 //!    — native Rust engine vs AOT XLA artifact (PJRT) for the same graphs.
 //!
 //! Env: `FASTCV_BENCH_SCALE=tiny` for a fast smoke run (CI).
@@ -30,6 +36,8 @@ use std::collections::BTreeMap;
 
 fn main() {
     backend_grid_ablation();
+    pooled_build_ablation();
+    multiclass_grid_ablation();
     xla_ablation();
 }
 
@@ -199,15 +207,173 @@ fn backend_grid_ablation() {
     sweep.insert("seconds_spectral_hat_per_lambda".to_string(), Json::Num(t_per_lambda));
     sweep.insert("same_winner".to_string(), Json::Bool(rebuild_lambda == w_spectral.best_lambda()));
 
+    merge_into_bench_json(vec![
+        ("bench", Json::Str("gram_backends".to_string())),
+        ("lambda", Json::Num(lambda)),
+        ("grid", Json::Arr(grid_rows)),
+        ("lambda_grid_sweep", Json::Obj(sweep)),
+    ]);
+}
+
+/// Serial vs pooled λ-free Gram builds on a wide (P ≫ N) shape: the
+/// dual/spectral `K_c = X_cX_cᵀ` GEMM (`matmul_pool`) and the primal
+/// `G₀ = X̃ᵀX̃` syrk (`syrk_t_pool`). Pooled builds are bit-identical to
+/// serial (asserted below), so any speedup is free. Appends to the
+/// `pooled_builds` section of `BENCH_backend.json`.
+fn pooled_build_ablation() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::quick()
+    };
+    let (n, p) = if tiny { (24usize, 160usize) } else { (100, 1600) };
+    let mut rng = Rng::new(77);
+    let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+    let pool = ThreadPool::with_default_size(8);
+
+    let t_kc_serial =
+        bench.run(|| GramCache::build(&ds.x, GramBackend::Dual, None)).median;
+    let t_kc_pool =
+        bench.run(|| GramCache::build(&ds.x, GramBackend::Dual, Some(&pool))).median;
+    let t_syrk_serial =
+        bench.run(|| GramCache::build(&ds.x, GramBackend::Primal, None)).median;
+    let t_syrk_pool =
+        bench.run(|| GramCache::build(&ds.x, GramBackend::Primal, Some(&pool))).median;
+
+    // bitwise identity rides along so the JSON records correctness too
+    let identical = {
+        let a = GramCache::build(&ds.x, GramBackend::Primal, None);
+        let b = GramCache::build(&ds.x, GramBackend::Primal, Some(&pool));
+        let (GramCache::Primal { g0: ga, .. }, GramCache::Primal { g0: gb, .. }) = (&a, &b)
+        else {
+            unreachable!()
+        };
+        ga.as_slice() == gb.as_slice()
+    };
+
+    let mut table = Table::new(vec!["build", "serial", "pooled", "speedup"])
+        .with_title(format!("Pooled λ-free Gram builds, N={n} P={p}, {} workers", pool.size()));
+    table.row(vec![
+        "K_c = X_cX_cᵀ (dual/spectral)".into(),
+        fdur(t_kc_serial),
+        fdur(t_kc_pool),
+        format!("{:.2}x", t_kc_serial / t_kc_pool),
+    ]);
+    table.row(vec![
+        "G₀ = X̃ᵀX̃ (primal syrk_t)".into(),
+        fdur(t_syrk_serial),
+        fdur(t_syrk_pool),
+        format!("{:.2}x", t_syrk_serial / t_syrk_pool),
+    ]);
+    println!("{}", table.render());
+    println!("pooled primal gram bitwise identical to serial: {identical}");
+
     let mut doc = BTreeMap::new();
-    doc.insert("bench".to_string(), Json::Str("gram_backends".to_string()));
-    doc.insert("lambda".to_string(), Json::Num(lambda));
-    doc.insert("grid".to_string(), Json::Arr(grid_rows));
-    doc.insert("lambda_grid_sweep".to_string(), Json::Obj(sweep));
+    doc.insert("n".to_string(), Json::Num(n as f64));
+    doc.insert("p".to_string(), Json::Num(p as f64));
+    doc.insert("workers".to_string(), Json::Num(pool.size() as f64));
+    doc.insert("seconds_kc_serial".to_string(), Json::Num(t_kc_serial));
+    doc.insert("seconds_kc_pool".to_string(), Json::Num(t_kc_pool));
+    doc.insert("seconds_syrk_serial".to_string(), Json::Num(t_syrk_serial));
+    doc.insert("seconds_syrk_pool".to_string(), Json::Num(t_syrk_pool));
+    doc.insert("speedup_kc".to_string(), Json::Num(t_kc_serial / t_kc_pool));
+    doc.insert("speedup_syrk".to_string(), Json::Num(t_syrk_serial / t_syrk_pool));
+    doc.insert("bitwise_identical".to_string(), Json::Bool(identical));
+    merge_into_bench_json(vec![("pooled_builds", Json::Obj(doc))]);
+}
+
+/// Multi-class λ grid on a wide shape: one shared spectral decomposition
+/// (`search_lambda_multiclass`) vs a from-scratch multi-class rebuild per
+/// candidate — the multi-class analogue of the binary sweep contrast above.
+fn multiclass_grid_ablation() {
+    use fastcv::fastcv::lambda_search::search_lambda_multiclass;
+    use fastcv::fastcv::multiclass::AnalyticMulticlassCv;
+    use fastcv::fastcv::ComputeContext;
+
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::quick()
+    };
+    let (n, p, c, g) = if tiny { (24usize, 96usize, 3usize, 6usize) } else { (60, 900, 5, 10) };
+    let mut rng = Rng::new(4242);
+    let spec = SyntheticSpec::multiclass(n, p, c);
+    let ds = generate(&spec, &mut rng);
+    let folds = fastcv::cv::folds::stratified_kfold(&ds.labels, 4, &mut rng);
+    let grid = default_grid(g);
+
+    // Per-candidate rebuild through the historical primal fit.
+    let rebuild = || {
+        let mut best = (f64::NEG_INFINITY, grid[0]);
+        for &l in &grid {
+            let cv = AnalyticMulticlassCv::fit(&ds.x, &ds.labels, c, l).unwrap();
+            let pred = cv.predict(&folds).unwrap();
+            let acc = fastcv::cv::metrics::accuracy_labels(&pred, &ds.labels);
+            if acc > best.0 {
+                best = (acc, l);
+            }
+        }
+        best
+    };
+    let t_rebuild = bench.run(&rebuild).median;
+    // Serial context on purpose: both arms single-threaded, so the speedup
+    // isolates the one-shared-decomposition reuse (pool fan-out gains are
+    // measured separately in the pooled_builds section).
+    let ctx = ComputeContext::serial().with_backend(GramBackend::Spectral);
+    let t_shared = bench
+        .run(|| search_lambda_multiclass(&ds.x, &ds.labels, c, &folds, &grid, &ctx).unwrap())
+        .median;
+    let (_, lambda_rebuild) = rebuild();
+    let shared = search_lambda_multiclass(&ds.x, &ds.labels, c, &folds, &grid, &ctx).unwrap();
+    let speedup = t_rebuild / t_shared;
+
+    let mut table = Table::new(vec!["method", "time", "speedup"]).with_title(format!(
+        "multi-class λ grid: N={n} P={p} C={c}, {g} candidates (both arms serial)"
+    ));
+    table.row(vec!["primal rebuild per λ".into(), fdur(t_rebuild), "1.00x ref".into()]);
+    table.row(vec![
+        "spectral, one decomposition".into(),
+        fdur(t_shared),
+        format!("{speedup:.1}x"),
+    ]);
+    println!("{}", table.render());
+    println!(
+        "winner agreement: rebuild λ={lambda_rebuild} / shared λ={}",
+        shared.best_lambda()
+    );
+
+    let mut doc = BTreeMap::new();
+    for (key, value) in [("n", n), ("p", p), ("c", c), ("grid_points", g)] {
+        doc.insert(key.to_string(), Json::Num(value as f64));
+    }
+    doc.insert("seconds_rebuild_per_lambda".to_string(), Json::Num(t_rebuild));
+    doc.insert("seconds_spectral_shared".to_string(), Json::Num(t_shared));
+    doc.insert("speedup_shared_vs_rebuild".to_string(), Json::Num(speedup));
+    doc.insert(
+        "same_winner".to_string(),
+        Json::Bool(lambda_rebuild == shared.best_lambda()),
+    );
+    merge_into_bench_json(vec![("multiclass_lambda_grid", Json::Obj(doc))]);
+}
+
+/// Merge sections into `BENCH_backend.json`: read-modify-write, so every
+/// ablation attaches its keys without clobbering the others regardless of
+/// run order (and each works standalone).
+fn merge_into_bench_json(entries: Vec<(&str, Json)>) {
     let out_dir = std::env::var("FASTCV_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
     let path = format!("{out_dir}/BENCH_backend.json");
+    let mut doc = match std::fs::read_to_string(&path).ok().and_then(|s| Json::parse(&s).ok()) {
+        Some(Json::Obj(map)) => map,
+        _ => BTreeMap::new(),
+    };
+    let keys: Vec<String> = entries.iter().map(|(k, _)| k.to_string()).collect();
+    for (key, value) in entries {
+        doc.insert(key.to_string(), value);
+    }
     match std::fs::write(&path, Json::Obj(doc).dump()) {
-        Ok(()) => eprintln!("wrote {path}"),
+        Ok(()) => eprintln!("updated {path} [{}]", keys.join(", ")),
         Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

@@ -10,14 +10,14 @@ use crate::fastcv::binary::AnalyticBinaryCv;
 use crate::fastcv::multiclass::AnalyticMulticlassCv;
 use crate::fastcv::hat::GramBackend;
 use crate::fastcv::perm::{
-    analytic_binary_permutation_backend, analytic_multiclass_permutation_backend,
+    analytic_binary_permutation_ctx, analytic_multiclass_permutation_ctx,
     standard_binary_permutation, standard_multiclass_permutation,
 };
 use crate::fastcv::perm_batch::{
-    analytic_binary_permutation_batched_backend, analytic_multiclass_permutation_batched_backend,
+    analytic_binary_permutation_batched_ctx, analytic_multiclass_permutation_batched_ctx,
     BatchStrategy,
 };
-use crate::fastcv::FoldCache;
+use crate::fastcv::{ComputeContext, FoldCache};
 use crate::model::lda_binary::signed_codes;
 use crate::model::Reg;
 use crate::util::rng::Rng;
@@ -117,6 +117,20 @@ pub struct SweepPoint {
     /// Gram backend for the analytic arm's hat build (`Auto` resolves by
     /// the point's P/N ratio; `Primal` reproduces the historical arm).
     pub backend: GramBackend,
+    /// Worker threads for the analytic arm's *hat build* (the
+    /// [`ComputeContext`] pool; 1 = serial). Pooled builds are bit-identical
+    /// to serial ones, so this is a pure wall-clock knob — unlike
+    /// [`SweepPoint::engine`]'s `threads`, which parallelises permutation
+    /// batches instead. The CLI's `--threads` sets both.
+    ///
+    /// Pool lifetime mirrors [`BatchStrategy`]'s note: each `run_point`
+    /// call owns a short-lived pool (spawn cost is a few hundred
+    /// microseconds against a point that times two full CV arms). Combining
+    /// a large `--workers` with a large `--threads` multiplies OS threads —
+    /// size their product to the machine, or hoist a shared pool via
+    /// [`ComputeContext::borrowing`] if a future caller drives many tiny
+    /// points in a tight loop.
+    pub threads: usize,
 }
 
 impl SweepPoint {
@@ -142,10 +156,16 @@ impl SweepPoint {
         };
         // Non-primal backends are tagged so the report aggregates them as
         // distinct configurations (accuracies are invariant, timings not).
-        if self.backend == GramBackend::Primal {
+        let base = if self.backend == GramBackend::Primal {
             base
         } else {
             format!("{base} [{}]", self.backend.tag())
+        };
+        // Pooled hat builds likewise change timing only.
+        if self.threads > 1 {
+            format!("{base} [pool-t{}]", self.threads)
+        } else {
+            base
         }
     }
 
@@ -164,6 +184,9 @@ pub struct SweepResult {
     pub engine: String,
     /// Analytic-arm Gram backend tag (`primal`/`dual`/`spectral`/`auto`).
     pub backend: String,
+    /// Analytic-arm hat-build pool width (1 = serial; `Default` yields 0,
+    /// normalised to 1 by [`run_point`]).
+    pub threads: usize,
     pub n: usize,
     pub p: usize,
     pub k: usize,
@@ -276,6 +299,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 lambda,
                                 engine: PermEngine::Serial,
                                 backend: GramBackend::Primal,
+                                threads: 1,
                             });
                         }
                     }
@@ -298,6 +322,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 lambda,
                                 engine: PermEngine::Serial,
                                 backend: GramBackend::Primal,
+                                threads: 1,
                             });
                         }
                     }
@@ -323,6 +348,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 lambda,
                                 engine: PermEngine::Serial,
                                 backend: GramBackend::Primal,
+                                threads: 1,
                             });
                         }
                     }
@@ -345,6 +371,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 lambda,
                                 engine: PermEngine::Serial,
                                 backend: GramBackend::Primal,
+                                threads: 1,
                             });
                         }
                     }
@@ -386,8 +413,12 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
         c: point.c,
         n_perm: point.n_perm,
         rep: point.rep,
+        threads: point.threads.max(1),
         ..Default::default()
     };
+    // Pool spawn happens outside the timed closures; with threads ≤ 1 no
+    // pool exists and the context is free.
+    let ctx = ComputeContext::with_threads(point.threads).with_backend(point.backend);
 
     match point.exp {
         Experiment::BinaryCv => {
@@ -401,7 +432,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                 )
             });
             let (ana_dv, t_ana) = timed(|| -> Result<Vec<f64>> {
-                let cv = AnalyticBinaryCv::fit_with(&ds.x, &y, point.lambda, point.backend)?;
+                let cv = AnalyticBinaryCv::fit_ctx(&ds.x, &y, point.lambda, &ctx)?;
                 let cache = FoldCache::prepare(&cv.hat, &folds, false)?;
                 Ok(cv.decision_values_cached(&cache))
             });
@@ -424,7 +455,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                 )
             });
             let (ana_res, t_ana) = timed(|| match point.engine.strategy() {
-                None => analytic_binary_permutation_backend(
+                None => analytic_binary_permutation_ctx(
                     &ds.x,
                     &ds.labels,
                     &folds,
@@ -432,9 +463,9 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.n_perm,
                     false,
                     &mut rng_ana,
-                    point.backend,
+                    &ctx,
                 ),
-                Some(strategy) => analytic_binary_permutation_batched_backend(
+                Some(strategy) => analytic_binary_permutation_batched_ctx(
                     &ds.x,
                     &ds.labels,
                     &folds,
@@ -443,7 +474,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     false,
                     &mut rng_ana,
                     strategy,
-                    point.backend,
+                    &ctx,
                 ),
             });
             result.t_std = t_std;
@@ -462,12 +493,12 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                 )
             });
             let (ana_pred, t_ana) = timed(|| -> Result<Vec<usize>> {
-                let cv = AnalyticMulticlassCv::fit_with(
+                let cv = AnalyticMulticlassCv::fit_ctx(
                     &ds.x,
                     &ds.labels,
                     point.c,
                     point.lambda,
-                    point.backend,
+                    &ctx,
                 )?;
                 let cache = FoldCache::prepare(&cv.hat, &folds, true)?;
                 cv.predict_cached(&cache)
@@ -492,7 +523,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                 )
             });
             let (ana_res, t_ana) = timed(|| match point.engine.strategy() {
-                None => analytic_multiclass_permutation_backend(
+                None => analytic_multiclass_permutation_ctx(
                     &ds.x,
                     &ds.labels,
                     point.c,
@@ -500,9 +531,9 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.lambda,
                     point.n_perm,
                     &mut rng_ana,
-                    point.backend,
+                    &ctx,
                 ),
-                Some(strategy) => analytic_multiclass_permutation_batched_backend(
+                Some(strategy) => analytic_multiclass_permutation_batched_ctx(
                     &ds.x,
                     &ds.labels,
                     point.c,
@@ -511,7 +542,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.n_perm,
                     &mut rng_ana,
                     strategy,
-                    point.backend,
+                    &ctx,
                 ),
             });
             result.t_std = t_std;
@@ -566,11 +597,13 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
         c: point.c,
         n_perm: point.n_perm,
         rep: point.rep,
+        threads: point.threads.max(1),
         ..Default::default()
     };
+    let ctx = ComputeContext::with_threads(point.threads).with_backend(point.backend);
     let (ana_res, t_ana) = if point.exp == Experiment::BinaryPerm {
         timed(|| match point.engine.strategy() {
-            None => analytic_binary_permutation_backend(
+            None => analytic_binary_permutation_ctx(
                 &ds.x,
                 &ds.labels,
                 &folds,
@@ -578,9 +611,9 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
                 point.n_perm,
                 false,
                 &mut rng_ana,
-                point.backend,
+                &ctx,
             ),
-            Some(strategy) => analytic_binary_permutation_batched_backend(
+            Some(strategy) => analytic_binary_permutation_batched_ctx(
                 &ds.x,
                 &ds.labels,
                 &folds,
@@ -589,12 +622,12 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
                 false,
                 &mut rng_ana,
                 strategy,
-                point.backend,
+                &ctx,
             ),
         })
     } else {
         timed(|| match point.engine.strategy() {
-            None => analytic_multiclass_permutation_backend(
+            None => analytic_multiclass_permutation_ctx(
                 &ds.x,
                 &ds.labels,
                 point.c,
@@ -602,9 +635,9 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
                 point.lambda,
                 point.n_perm,
                 &mut rng_ana,
-                point.backend,
+                &ctx,
             ),
-            Some(strategy) => analytic_multiclass_permutation_batched_backend(
+            Some(strategy) => analytic_multiclass_permutation_batched_ctx(
                 &ds.x,
                 &ds.labels,
                 point.c,
@@ -613,7 +646,7 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
                 point.n_perm,
                 &mut rng_ana,
                 strategy,
-                point.backend,
+                &ctx,
             ),
         })
     };
@@ -652,6 +685,7 @@ mod tests {
             lambda: 1.0,
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
+            threads: 1,
         };
         let r = run_point(&point, 1234).unwrap();
         assert!(r.t_std > 0.0 && r.t_ana > 0.0);
@@ -673,6 +707,7 @@ mod tests {
             lambda: 1.0,
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
+            threads: 1,
         };
         let r = run_point(&point, 99).unwrap();
         assert!(
@@ -697,6 +732,7 @@ mod tests {
                 lambda: 1.0,
                 engine: PermEngine::Serial,
                 backend: GramBackend::Primal,
+                threads: 1,
             };
             let r = run_point(&point, 7).unwrap();
             assert!(r.t_std > 0.0 && r.t_ana > 0.0);
@@ -717,6 +753,7 @@ mod tests {
             lambda: 1.0,
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
+            threads: 1,
         };
         let batched = serial.with_engine(PermEngine::Batched { batch: 4, threads: 2 });
         let a = run_point(&serial, 7).unwrap();
@@ -758,6 +795,7 @@ mod tests {
             lambda: 1.0,
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
+            threads: 1,
         };
         let r_primal = run_point(&base, 11).unwrap();
         for backend in [GramBackend::Dual, GramBackend::Spectral, GramBackend::Auto] {
@@ -781,6 +819,42 @@ mod tests {
     }
 
     #[test]
+    fn backend_pool_threads_do_not_change_point_accuracies() {
+        // `--threads` on the analytic path is wall-clock only: a pooled
+        // point must report the identical accuracies, and its label must be
+        // tagged so the report aggregates it separately.
+        let base = SweepPoint {
+            exp: Experiment::BinaryCv,
+            n: 24,
+            p: 70,
+            k: 4,
+            c: 2,
+            n_perm: 0,
+            rep: 0,
+            lambda: 1.0,
+            engine: PermEngine::Serial,
+            backend: GramBackend::Auto,
+            threads: 1,
+        };
+        let serial = run_point(&base, 13).unwrap();
+        let pooled_point = SweepPoint { threads: 4, ..base.clone() };
+        let pooled = run_point(&pooled_point, 13).unwrap();
+        assert_eq!(pooled.acc_ana, serial.acc_ana, "pooled hat build moved the accuracy");
+        assert_eq!(pooled.acc_std, serial.acc_std);
+        assert_eq!(pooled.threads, 4);
+        assert!(pooled.label.contains("pool-t4"), "label untagged: {}", pooled.label);
+        assert!(!serial.label.contains("pool"), "serial label stays bare: {}", serial.label);
+        // perm experiment through the ctx engines too
+        let perm = SweepPoint { exp: Experiment::BinaryPerm, n_perm: 5, ..base.clone() };
+        let perm_pooled = SweepPoint { threads: 3, ..perm.clone() };
+        let a = run_point(&perm, 13).unwrap();
+        let b = run_point(&perm_pooled, 13).unwrap();
+        assert_eq!(a.acc_ana, b.acc_ana);
+        let only = run_point_analytic_perm(&perm_pooled, 13).unwrap();
+        assert_eq!(only.acc_ana, a.acc_ana);
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let point = SweepPoint {
             exp: Experiment::BinaryCv,
@@ -793,6 +867,7 @@ mod tests {
             lambda: 0.5,
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
+            threads: 1,
         };
         let a = run_point(&point, 42).unwrap();
         let b = run_point(&point, 42).unwrap();

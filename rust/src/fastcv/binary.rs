@@ -13,6 +13,7 @@
 //! linear regression and ridge regression — `y` is then a continuous
 //! response and the bias adjustment is not used.
 
+use super::context::ComputeContext;
 use super::hat::{GramBackend, HatMatrix};
 use super::FoldCache;
 use crate::linalg::Mat;
@@ -48,8 +49,21 @@ impl AnalyticBinaryCv {
         lambda: f64,
         backend: GramBackend,
     ) -> Result<AnalyticBinaryCv> {
+        Self::fit_ctx(x, y, lambda, &ComputeContext::serial().with_backend(backend))
+    }
+
+    /// [`Self::fit`] under a [`ComputeContext`]: the context's backend
+    /// picks the Gram construction and its pool (if any) fans out the hat
+    /// build's GEMMs. A pooled context is bit-identical to a serial one —
+    /// the pool is a pure wall-clock knob.
+    pub fn fit_ctx(
+        x: &Mat,
+        y: &[f64],
+        lambda: f64,
+        ctx: &ComputeContext<'_>,
+    ) -> Result<AnalyticBinaryCv> {
         assert_eq!(x.rows(), y.len(), "response length mismatch");
-        let hat = HatMatrix::build_with(x, lambda, backend, None)?;
+        let hat = HatMatrix::build_with(x, lambda, ctx.backend(), ctx.pool())?;
         let y_hat = hat.fit_response(y);
         Ok(AnalyticBinaryCv { hat, y: y.to_vec(), y_hat })
     }
@@ -508,6 +522,29 @@ mod tests {
                 assert_all_close(&adj_s, &adj_p, 1e-8, "spectral vs primal bias-adjusted");
             }
         });
+    }
+
+    #[test]
+    fn backend_pool_fit_ctx_bitwise_matches_fit_with() {
+        // fit_ctx under a pooled context must reproduce fit_with (serial)
+        // to the last bit, for every backend, on a wide shape.
+        use crate::fastcv::hat::GramBackend;
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(15);
+        let (x, labels) = labelled_problem(&mut rng, 10, 10, 70);
+        let y = signed_codes(&labels);
+        let folds = kfold(20, 4, &mut rng);
+        for backend in [GramBackend::Primal, GramBackend::Dual, GramBackend::Spectral] {
+            let serial = AnalyticBinaryCv::fit_with(&x, &y, 1.0, backend).unwrap();
+            let ctx = ComputeContext::with_threads(4).with_backend(backend);
+            let pooled = AnalyticBinaryCv::fit_ctx(&x, &y, 1.0, &ctx).unwrap();
+            assert_eq!(serial.hat.h.as_slice(), pooled.hat.h.as_slice(), "{backend:?} hat");
+            let dv_s = serial.decision_values(&folds).unwrap();
+            let dv_p = pooled.decision_values(&folds).unwrap();
+            for (a, b) in dv_s.iter().zip(&dv_p) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{backend:?} dvals");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,161 @@
+//! A shared compute context for the analytic front-ends.
+//!
+//! PR 2's Gram backends made the hat-matrix construction asymptotically
+//! right for every N/P regime, but the analytic front-ends still built it
+//! serially — `fit_with`, `search_lambda`, and the permutation engines all
+//! passed `pool: None` to the `K_c`/`G₀` builds, so a single large-P job
+//! left most cores idle unless it went through the coordinator's sweep
+//! fan-out. [`ComputeContext`] closes that gap: one value that carries
+//!
+//! * a [`ThreadPool`] — **owned** ([`ComputeContext::with_threads`]) or
+//!   **borrowed** ([`ComputeContext::borrowing`]) so a caller that already
+//!   runs a pool (the coordinator, a bench harness) can lend it instead of
+//!   spawning another;
+//! * the [`GramBackend`] policy for every hat built under the context;
+//! * cache-reuse knobs — currently
+//!   [`ComputeContext::with_nested_sharing`], which lets
+//!   [`crate::fastcv::lambda_search::nested_cv_ctx`] share one full-data
+//!   Gram across all outer folds via the Eq. 9–12-style downdate.
+//!
+//! ## Determinism
+//!
+//! A pooled context never changes results, only wall-clock: every kernel
+//! the pool reaches ([`crate::linalg::matmul_pool`],
+//! [`crate::linalg::syrk_t_pool`]) is bit-identical to its serial
+//! counterpart by construction, so `fit_ctx`/`search_lambda_ctx`/the perm
+//! `_ctx` engines produce byte-equal outputs for any thread count
+//! (property-tested as `backend_pool_*` tests). The reuse knobs are the
+//! exception and are therefore opt-in: nested-fold Gram sharing changes the
+//! float path (agreement is tested at tolerance, not bitwise).
+
+use super::hat::GramBackend;
+use crate::util::threadpool::ThreadPool;
+
+/// An owned-or-borrowed pool handle.
+enum PoolRef<'p> {
+    Owned(ThreadPool),
+    Borrowed(&'p ThreadPool),
+}
+
+/// Shared compute policy for the analytic front-ends: an optional thread
+/// pool, a [`GramBackend`], and cache-reuse knobs. See the module docs.
+///
+/// The default context ([`ComputeContext::serial`]) is serial,
+/// [`GramBackend::Auto`], no reuse knobs — handing it to a `_ctx` entry
+/// point reproduces the corresponding `_backend` entry point with `Auto`.
+#[derive(Default)]
+pub struct ComputeContext<'p> {
+    pool: Option<PoolRef<'p>>,
+    backend: GramBackend,
+    nested_sharing: bool,
+}
+
+impl std::fmt::Debug for ComputeContext<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputeContext")
+            .field("threads", &self.threads())
+            .field("backend", &self.backend)
+            .field("nested_sharing", &self.nested_sharing)
+            .finish()
+    }
+}
+
+impl<'p> ComputeContext<'p> {
+    /// No pool, [`GramBackend::Auto`], no reuse knobs.
+    pub fn serial() -> Self {
+        Self::default()
+    }
+
+    /// Own a fresh pool of `threads` workers. `threads ≤ 1` spawns no pool
+    /// at all (serial context), so a CLI `--threads 1` costs nothing.
+    pub fn with_threads(threads: usize) -> Self {
+        let pool = (threads > 1).then(|| PoolRef::Owned(ThreadPool::new(threads)));
+        ComputeContext { pool, ..Self::default() }
+    }
+
+    /// Borrow an existing pool for the context's lifetime.
+    pub fn borrowing(pool: &'p ThreadPool) -> Self {
+        ComputeContext { pool: Some(PoolRef::Borrowed(pool)), ..Self::default() }
+    }
+
+    /// Set the [`GramBackend`] policy (builder style).
+    pub fn with_backend(mut self, backend: GramBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Enable/disable nested-CV Gram sharing across outer folds (builder
+    /// style). Off by default: it trades bitwise reproduction of the
+    /// per-fold rebuild for an `O(N²P)` → `O(N_tr²)` per-fold Gram cost
+    /// (see [`crate::fastcv::lambda_search::nested_cv_ctx`]).
+    pub fn with_nested_sharing(mut self, on: bool) -> Self {
+        self.nested_sharing = on;
+        self
+    }
+
+    /// The Gram backend policy.
+    pub fn backend(&self) -> GramBackend {
+        self.backend
+    }
+
+    /// Whether nested CV may share one full-data Gram across outer folds.
+    pub fn nested_sharing(&self) -> bool {
+        self.nested_sharing
+    }
+
+    /// The pool to fan kernels over, if any.
+    pub fn pool(&self) -> Option<&ThreadPool> {
+        match &self.pool {
+            None => None,
+            Some(PoolRef::Owned(p)) => Some(p),
+            Some(PoolRef::Borrowed(p)) => Some(p),
+        }
+    }
+
+    /// Worker count (1 when serial).
+    pub fn threads(&self) -> usize {
+        self.pool().map_or(1, ThreadPool::size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_context_has_no_pool_and_auto_backend() {
+        let ctx = ComputeContext::serial();
+        assert!(ctx.pool().is_none());
+        assert_eq!(ctx.threads(), 1);
+        assert_eq!(ctx.backend(), GramBackend::Auto);
+        assert!(!ctx.nested_sharing());
+    }
+
+    #[test]
+    fn with_threads_owns_a_pool_only_above_one() {
+        assert!(ComputeContext::with_threads(0).pool().is_none());
+        assert!(ComputeContext::with_threads(1).pool().is_none());
+        let ctx = ComputeContext::with_threads(3);
+        assert_eq!(ctx.threads(), 3);
+        assert!(ctx.pool().is_some());
+    }
+
+    #[test]
+    fn borrowing_lends_the_callers_pool() {
+        let pool = ThreadPool::new(2);
+        let ctx = ComputeContext::borrowing(&pool);
+        assert_eq!(ctx.threads(), 2);
+        assert!(std::ptr::eq(ctx.pool().unwrap(), &pool));
+    }
+
+    #[test]
+    fn builder_knobs() {
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Spectral)
+            .with_nested_sharing(true);
+        assert_eq!(ctx.backend(), GramBackend::Spectral);
+        assert!(ctx.nested_sharing());
+        let dbg = format!("{ctx:?}");
+        assert!(dbg.contains("Spectral"), "{dbg}");
+    }
+}

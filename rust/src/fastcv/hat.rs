@@ -28,9 +28,26 @@
 //! push-through identity turns the inner term into `K_c (K_c + λI)⁻¹`.
 //! Since `K_c𝟙 = 0` (columns of `X_c` are centered), `H𝟙 = 𝟙` holds in
 //! every backend — the unpenalised-intercept invariant.
+//!
+//! ## Choosing, and parallelising
+//!
+//! `Auto` resolves per shape: a single hat picks `Dual` iff `λ > 0 ∧ P > N`
+//! ([`GramBackend::resolve`]); a λ-grid upgrades the wide case to
+//! `Spectral` once ≥ 2 positive candidates amortise the eigendecomposition
+//! ([`GramBackend::resolve_for_grid`]). The full decision guide — memory
+//! footprints, the λ = 0 caveat, measured orderings — is
+//! `docs/BACKENDS.md` in the repository root.
+//!
+//! Every λ-free build (the `K_c` GEMM, the primal `G₀` syrk) and every
+//! per-candidate GEMM can fan out over a
+//! [`ThreadPool`](crate::util::threadpool::ThreadPool) — usually handed
+//! down from a [`crate::fastcv::context::ComputeContext`] — through
+//! kernels that are bit-identical to their serial forms
+//! ([`crate::linalg::matmul_pool`], [`crate::linalg::syrk_t_pool`]), so
+//! pooling never changes a result.
 
 use crate::linalg::{
-    gemm_acc, matmul, matmul_pool, matvec_gemm_order, sym_eig, Cholesky, Lu, Mat, SymEig,
+    matmul, matmul_pool, matvec_gemm_order, sym_eig, syrk_t_pool, Cholesky, Lu, Mat, SymEig,
 };
 use crate::model::linreg::gram_ridged;
 use crate::util::threadpool::ThreadPool;
@@ -159,8 +176,10 @@ pub enum GramCache {
 }
 
 impl GramCache {
-    /// Precompute the λ-free state for `backend`. The `K_c` build fans out
-    /// over `pool` when given.
+    /// Precompute the λ-free state for `backend`. The λ-free GEMMs — the
+    /// dual/spectral `K_c` build *and* the primal `G₀ = X̃ᵀX̃` `syrk`
+    /// ([`crate::linalg::syrk_t_pool`]) — fan out over `pool` when given;
+    /// pooled and serial builds are bit-identical.
     ///
     /// `Auto` here *assumes a multi-candidate grid*: it resolves as
     /// `resolve_for_grid(n, p, 2)` — `Spectral` when `P > N`, else
@@ -171,6 +190,21 @@ impl GramCache {
     /// [`HatMatrix::build_with`] do — on a wide shape with ≤ 1 positive
     /// candidate, a blind `Auto` pays an eigendecomposition that `Dual`
     /// would have skipped.
+    ///
+    /// ```
+    /// use fastcv::fastcv::hat::{GramBackend, GramCache};
+    /// use fastcv::linalg::Mat;
+    /// use fastcv::util::rng::Rng;
+    ///
+    /// // Wide data (P ≫ N): one spectral decomposition serves the grid.
+    /// let mut rng = Rng::new(7);
+    /// let x = Mat::from_fn(12, 40, |_, _| rng.gauss());
+    /// let cache = GramCache::build(&x, GramBackend::Spectral, None);
+    /// for lambda in [0.1, 1.0, 10.0] {
+    ///     let hat = cache.hat(lambda).unwrap();   // O(N³) GEMM, no refactorisation
+    ///     assert_eq!(hat.h.rows(), 12);
+    /// }
+    /// ```
     pub fn build(x: &Mat, backend: GramBackend, pool: Option<&ThreadPool>) -> GramCache {
         let backend = match backend {
             GramBackend::Auto => backend.resolve_for_grid(x.rows(), x.cols(), 2),
@@ -179,7 +213,7 @@ impl GramCache {
         match backend {
             GramBackend::Primal => {
                 let xa = x.augment_ones();
-                let g0 = crate::linalg::syrk_t(&xa);
+                let g0 = syrk_t_pool(&xa, pool);
                 GramCache::Primal { xa, g0 }
             }
             GramBackend::Dual => {
@@ -193,8 +227,24 @@ impl GramCache {
         }
     }
 
+    /// Number of samples behind the cached state.
+    pub fn n(&self) -> usize {
+        match self {
+            GramCache::Primal { xa, .. } | GramCache::Dual { xa, .. } => xa.rows(),
+            GramCache::Spectral(sg) => sg.n(),
+        }
+    }
+
     /// The hat matrix for one λ candidate against the cached state.
     pub fn hat(&self, lambda: f64) -> Result<HatMatrix> {
+        self.hat_pool(lambda, None)
+    }
+
+    /// [`GramCache::hat`] with the per-candidate GEMMs (the primal
+    /// `H = X̃·W` product, the spectral rescale product) fanned out over
+    /// `pool`. Bit-identical to the serial [`GramCache::hat`] for any pool
+    /// size ([`crate::linalg::matmul_pool`]'s contract).
+    pub fn hat_pool(&self, lambda: f64, pool: Option<&ThreadPool>) -> Result<HatMatrix> {
         assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
         match self {
             GramCache::Primal { xa, g0 } => {
@@ -203,7 +253,7 @@ impl GramCache {
                 for i in 0..p1 - 1 {
                     g[(i, i)] += lambda;
                 }
-                hat_from_primal_gram(xa, &g, lambda)
+                hat_from_primal_gram(xa, &g, lambda, pool)
             }
             GramCache::Dual { xa, kc } => {
                 if lambda <= 0.0 {
@@ -232,7 +282,7 @@ impl GramCache {
                     backend: GramBackend::Dual,
                 })
             }
-            GramCache::Spectral(sg) => sg.hat(lambda),
+            GramCache::Spectral(sg) => sg.hat_pool(lambda, pool),
         }
     }
 }
@@ -279,6 +329,19 @@ impl SpectralGram {
         SpectralGram { xa, values, vectors }
     }
 
+    /// Assemble from an already-computed eigendecomposition of a centered
+    /// Gram. `xa` is the augmented design the produced hats will carry,
+    /// `values`/`vectors` the eigenpairs of its centered `N×N` Gram
+    /// (values are clamped at 0 here, as [`SpectralGram::build`] does).
+    /// This is how [`SharedNestedGram`] turns a downdated full-data Gram
+    /// into a per-fold spectral cache without touching `X` again.
+    pub fn from_parts(xa: Mat, values: Vec<f64>, vectors: Mat) -> SpectralGram {
+        assert_eq!(xa.rows(), vectors.rows(), "eigenvector rows must equal N");
+        assert_eq!(values.len(), vectors.cols(), "one eigenvalue per eigenvector");
+        let values = values.into_iter().map(|d| d.max(0.0)).collect();
+        SpectralGram { xa, values, vectors }
+    }
+
     /// Number of samples.
     pub fn n(&self) -> usize {
         self.xa.rows()
@@ -286,6 +349,12 @@ impl SpectralGram {
 
     /// The hat matrix for one ridge value: `O(N³)` GEMM, no factorisation.
     pub fn hat(&self, lambda: f64) -> Result<HatMatrix> {
+        self.hat_pool(lambda, None)
+    }
+
+    /// [`SpectralGram::hat`] with the rescale GEMM fanned out over `pool`
+    /// (bit-identical to serial for any pool size).
+    pub fn hat_pool(&self, lambda: f64, pool: Option<&ThreadPool>) -> Result<HatMatrix> {
         if lambda <= 0.0 {
             bail!("spectral Gram backend requires ridge λ > 0 (K_c is always singular: K_c𝟙 = 0)");
         }
@@ -293,7 +362,7 @@ impl SpectralGram {
         let scaled = Mat::from_fn(n, n, |i, j| {
             self.vectors[(i, j)] * (self.values[j] / (self.values[j] + lambda))
         });
-        let mut h = matmul(&scaled, &self.vectors.t());
+        let mut h = matmul_pool(&scaled, &self.vectors.t(), pool);
         let inv_n = 1.0 / n as f64;
         for v in h.as_mut_slice() {
             *v += inv_n;
@@ -309,10 +378,76 @@ impl SpectralGram {
     }
 }
 
+/// One full-data **uncentered** Gram `K = XXᵀ` shared across the outer
+/// folds of a nested CV (the Gram-level analogue of the paper's Eq. 9–12
+/// downdates: instead of rebuilding each training set's Gram from `X` —
+/// `O(N_tr²P)` per fold — the training block is *downdated* out of the one
+/// `O(N²P)` full Gram by index selection, then re-centered in `O(N_tr²)`).
+///
+/// The identity: with `C = I − (1/m)𝟙𝟙ᵀ` the centering projector on the
+/// `m = |Tr|` training rows,
+///
+/// ```text
+/// K_c^{Tr} = X_c^{Tr} (X_c^{Tr})ᵀ = C K[Tr,Tr] C
+///          = K_ij − rowmean_i − rowmean_j + grandmean   (double-centering)
+/// ```
+///
+/// so each outer fold's centered training Gram — and from it the
+/// [`SpectralGram`] that serves the whole inner λ grid — follows from the
+/// shared `K` without touching the `P`-dimensional data again. Feature
+/// work is paid **once** for the entire nested CV instead of once per
+/// outer fold.
+///
+/// The downdated Gram equals the rebuilt one in exact arithmetic but not
+/// bitwise (different accumulation order), so this path is opt-in — see
+/// [`crate::fastcv::context::ComputeContext::with_nested_sharing`] and
+/// [`crate::fastcv::lambda_search::nested_cv_ctx`]. Agreement is
+/// property-tested at tolerance.
+pub struct SharedNestedGram {
+    /// `K = XXᵀ`, `N×N`, symmetric.
+    k: Mat,
+}
+
+impl SharedNestedGram {
+    /// One `O(N²P)` Gram build (pool-parallel when given) for the whole
+    /// nested CV.
+    pub fn build(x: &Mat, pool: Option<&ThreadPool>) -> SharedNestedGram {
+        let mut k = matmul_pool(x, &x.t(), pool);
+        k.symmetrize();
+        SharedNestedGram { k }
+    }
+
+    /// Number of samples in the full dataset.
+    pub fn n(&self) -> usize {
+        self.k.rows()
+    }
+
+    /// The spectral cache for one outer fold's training set: select
+    /// `K[Tr,Tr]`, double-center it, eigendecompose. `x_tr` must be the
+    /// matching training rows of the data (only used to carry the augmented
+    /// design into the produced hats — no `O(N_tr²P)` Gram rebuild).
+    pub fn fold_spectral(&self, x_tr: &Mat, tr: &[usize]) -> SpectralGram {
+        assert_eq!(x_tr.rows(), tr.len(), "x_tr rows must match the training index set");
+        let m = tr.len();
+        let kt = self.k.take(tr, tr);
+        let row_means: Vec<f64> = (0..m).map(|i| kt.row(i).iter().sum::<f64>() / m as f64).collect();
+        let grand = row_means.iter().sum::<f64>() / m as f64;
+        let kc = Mat::from_fn(m, m, |i, j| kt[(i, j)] - row_means[i] - row_means[j] + grand);
+        let SymEig { values, vectors } = sym_eig(&kc);
+        SpectralGram::from_parts(x_tr.augment_ones(), values, vectors)
+    }
+}
+
 /// Primal construction from an already-ridged Gram `G = X̃ᵀX̃ + λI₀`:
-/// factor, multi-RHS solve, hat GEMM. Shared by [`HatMatrix::build`] and
+/// factor, multi-RHS solve, hat GEMM (pool-parallel when `pool` is given —
+/// bit-identical to serial). Shared by [`HatMatrix::build`] and
 /// [`GramCache::hat`] so the two are bit-identical.
-fn hat_from_primal_gram(xa: &Mat, g: &Mat, lambda: f64) -> Result<HatMatrix> {
+fn hat_from_primal_gram(
+    xa: &Mat,
+    g: &Mat,
+    lambda: f64,
+    pool: Option<&ThreadPool>,
+) -> Result<HatMatrix> {
     // Cholesky (G is SPD whenever invertible here); LU fallback gives a
     // clean error message for singular unridged fits.
     let (factor, w) = match Cholesky::factor(g) {
@@ -328,8 +463,7 @@ fn hat_from_primal_gram(xa: &Mat, g: &Mat, lambda: f64) -> Result<HatMatrix> {
         }
     };
     // H = X̃ W.
-    let mut h = Mat::zeros(xa.rows(), xa.rows());
-    gemm_acc(&mut h, xa, &w, 1.0, 0.0);
+    let mut h = matmul_pool(xa, &w, pool);
     h.symmetrize(); // exact-math symmetric; tidy roundoff
     Ok(HatMatrix { h, xa: xa.clone(), factor, lambda, backend: GramBackend::Primal })
 }
@@ -359,7 +493,7 @@ impl HatMatrix {
     ) -> Result<HatMatrix> {
         assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
         let resolved = backend.resolve(x.rows(), x.cols(), lambda);
-        GramCache::build(x, resolved, pool).hat(lambda)
+        GramCache::build(x, resolved, pool).hat_pool(lambda, pool)
     }
 
     /// Explicit inverse gram `S = (X̃ᵀX̃ + λI₀)⁻¹` — off the hot path; used
@@ -629,6 +763,73 @@ mod tests {
         let serial = HatMatrix::build_with(&x, 0.8, GramBackend::Dual, None).unwrap();
         let pooled = HatMatrix::build_with(&x, 0.8, GramBackend::Dual, Some(&pool)).unwrap();
         assert_eq!(serial.h.as_slice(), pooled.h.as_slice());
+    }
+
+    #[test]
+    fn backend_pool_primal_and_spectral_hats_bitwise_match_serial() {
+        // The ctx plumbing's contract: a pool changes wall-clock only. The
+        // pooled primal gram (syrk_t_pool), the pooled primal hat GEMM, and
+        // the pooled spectral rescale GEMM must all reproduce the serial
+        // floats exactly.
+        let mut rng = Rng::new(27);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        // tall: primal arm (syrk + hat GEMM)
+        let x_tall = random_x(&mut rng, 60, 25);
+        let serial = GramCache::build(&x_tall, GramBackend::Primal, None);
+        let pooled = GramCache::build(&x_tall, GramBackend::Primal, Some(&pool));
+        for lambda in [0.0, 0.4, 20.0] {
+            let hs = serial.hat(lambda).unwrap();
+            let hp = pooled.hat_pool(lambda, Some(&pool)).unwrap();
+            assert_eq!(hs.h.as_slice(), hp.h.as_slice(), "primal λ={lambda}");
+            // and the direct build_with entry point with a pool
+            let direct = HatMatrix::build_with(&x_tall, lambda, GramBackend::Primal, Some(&pool))
+                .unwrap();
+            assert_eq!(hs.h.as_slice(), direct.h.as_slice(), "build_with λ={lambda}");
+        }
+        // wide: spectral arm (K_c GEMM + rescale GEMM)
+        let x_wide = random_x(&mut rng, 30, 120);
+        let sg_serial = SpectralGram::build(&x_wide, None);
+        let sg_pooled = SpectralGram::build(&x_wide, Some(&pool));
+        for lambda in [0.3, 5.0] {
+            let hs = sg_serial.hat(lambda).unwrap();
+            let hp = sg_pooled.hat_pool(lambda, Some(&pool)).unwrap();
+            assert_eq!(hs.h.as_slice(), hp.h.as_slice(), "spectral λ={lambda}");
+        }
+    }
+
+    #[test]
+    fn backend_shared_nested_gram_matches_direct_spectral() {
+        // The Eq. 9–12-style downdate: selecting + double-centering the full
+        // XXᵀ must reproduce the per-fold centered Gram's hats to roundoff.
+        let mut rng = Rng::new(28);
+        let n = 30;
+        let x = random_x(&mut rng, n, 90);
+        let shared = SharedNestedGram::build(&x, None);
+        assert_eq!(shared.n(), n);
+        let te: Vec<usize> = (0..n).filter(|i| i % 4 == 1).collect();
+        let tr = crate::fastcv::complement(&te, n);
+        let x_tr = x.take_rows(&tr);
+        let sg_down = shared.fold_spectral(&x_tr, &tr);
+        assert_eq!(sg_down.n(), tr.len());
+        let direct = SpectralGram::build(&x_tr, None);
+        for lambda in [0.2, 1.0, 30.0] {
+            let h_down = sg_down.hat(lambda).unwrap().h;
+            let h_direct = direct.hat(lambda).unwrap().h;
+            let scale = h_direct.max_abs().max(1.0);
+            assert!(
+                h_down.max_abs_diff(&h_direct) < 1e-8 * scale,
+                "λ={lambda}: |ΔH| = {}",
+                h_down.max_abs_diff(&h_direct)
+            );
+            // the primal reference too
+            let h_primal =
+                HatMatrix::build_with(&x_tr, lambda, GramBackend::Primal, None).unwrap().h;
+            assert!(
+                h_down.max_abs_diff(&h_primal) < 1e-7 * scale,
+                "λ={lambda} vs primal: |ΔH| = {}",
+                h_down.max_abs_diff(&h_primal)
+            );
+        }
     }
 
     #[test]

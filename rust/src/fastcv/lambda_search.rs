@@ -7,19 +7,34 @@
 //! hat GEMM), and on wide (P ≫ N) shapes the spectral path goes further —
 //! one eigendecomposition of the centered `N×N` Gram after which every
 //! candidate is a single `O(N³)` GEMM, no `O(P³)` anywhere. No per-fold
-//! refits in any case. This module implements that loop, plus the §2.6.2
-//! shrinkage-grid convenience through the Eq. 18 conversion.
+//! refits in any case. This module implements that loop for binary/
+//! regression responses ([`search_lambda`]) **and** for multi-class LDA
+//! ([`search_lambda_multiclass`], where step 1 of optimal scoring shares
+//! the cache and step 2 is `O(C³)` per candidate), plus the §2.6.2
+//! shrinkage-grid convenience through the Eq. 18 conversion and nested CV
+//! ([`nested_cv`]) for honest reporting of tuned performance.
+//!
+//! The `_ctx` entry points take a
+//! [`ComputeContext`](super::context::ComputeContext): its pool fans out
+//! the Gram/hat GEMMs (bit-identically to serial), and its nested-sharing
+//! knob lets [`nested_cv_ctx`] reuse one full-data Gram across all outer
+//! folds through the [`SharedNestedGram`] downdate.
 //!
 //! Selection is NaN-safe: an undefined metric (NaN — e.g. AUC on a
 //! single-class labelling) orders below every real score *and* below the
-//! −∞ of an infeasible fit, and a grid on which **every** candidate is
-//! infeasible returns an error instead of silently "selecting" a λ.
+//! −∞ of an infeasible candidate (one whose hat build **or** fold factor
+//! `(I − H_Te)` is singular at that λ), and a grid on which **every**
+//! candidate is infeasible returns an error instead of silently
+//! "selecting" a λ.
 
 use super::binary::AnalyticBinaryCv;
-use super::hat::{GramBackend, GramCache, HatMatrix};
+use super::context::ComputeContext;
+use super::hat::{GramBackend, GramCache, HatMatrix, SharedNestedGram};
+use super::multiclass::AnalyticMulticlassCv;
 use super::FoldCache;
-use crate::cv::metrics::{accuracy_signed, auc};
+use crate::cv::metrics::{accuracy_labels, accuracy_signed, auc};
 use crate::linalg::Mat;
+use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
 
 /// Model-selection metric.
@@ -75,7 +90,24 @@ pub fn default_grid(points: usize) -> Vec<f64> {
 /// Backend is [`GramBackend::Auto`]: tall shapes share the primal gram
 /// across the grid; wide shapes share one spectral decomposition, making
 /// each additional candidate nearly free. Use [`search_lambda_backend`] to
-/// force a backend. Errors when every candidate is infeasible.
+/// force a backend (or [`search_lambda_ctx`] for a pooled context).
+/// Errors when every candidate is infeasible.
+///
+/// ```
+/// use fastcv::cv::folds::kfold;
+/// use fastcv::data::synthetic::{generate, SyntheticSpec};
+/// use fastcv::fastcv::lambda_search::{default_grid, search_lambda, SelectBy};
+/// use fastcv::util::rng::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let ds = generate(&SyntheticSpec::binary(30, 8), &mut rng);
+/// let folds = kfold(30, 3, &mut rng);
+/// let search = search_lambda(
+///     &ds.x, &ds.y_signed(), &ds.labels, &folds, &default_grid(4), SelectBy::Accuracy,
+/// ).unwrap();
+/// assert_eq!(search.scores.len(), 4);
+/// assert!(search.best_lambda() > 0.0);
+/// ```
 pub fn search_lambda(
     x: &Mat,
     y: &[f64],
@@ -101,24 +133,134 @@ pub fn search_lambda_backend(
     by: SelectBy,
     backend: GramBackend,
 ) -> Result<LambdaSearch> {
+    search_lambda_ctx(x, y, labels, folds, grid, by, &ComputeContext::serial().with_backend(backend))
+}
+
+/// [`search_lambda`] under a [`ComputeContext`]: the context's backend is
+/// resolved for the grid and its pool (if any) fans out the shared Gram
+/// build and each candidate's hat GEMM. A pooled context selects the
+/// bit-identical winner with bit-identical scores — the pool is a pure
+/// wall-clock knob (property-tested).
+pub fn search_lambda_ctx(
+    x: &Mat,
+    y: &[f64],
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    grid: &[f64],
+    by: SelectBy,
+    ctx: &ComputeContext<'_>,
+) -> Result<LambdaSearch> {
     assert!(!grid.is_empty());
     let positives = grid.iter().filter(|&&l| l > 0.0).count();
-    let resolved = backend.resolve_for_grid(x.rows(), x.cols(), positives);
-    let cache = GramCache::build(x, resolved, None);
+    let resolved = ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives);
+    let cache = GramCache::build(x, resolved, ctx.pool());
+    search_lambda_with_cache(&cache, y, labels, folds, grid, by, ctx.pool())
+}
+
+/// The scoring loop of [`search_lambda`] against an already-built
+/// [`GramCache`] — the λ-free state may come from anywhere: a plain
+/// [`GramCache::build`], or a [`SharedNestedGram`] fold downdate (which is
+/// how [`nested_cv_ctx`] shares one full-data Gram across outer folds).
+pub fn search_lambda_with_cache(
+    cache: &GramCache,
+    y: &[f64],
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    grid: &[f64],
+    by: SelectBy,
+    pool: Option<&ThreadPool>,
+) -> Result<LambdaSearch> {
+    assert!(!grid.is_empty());
+    // Structural fold errors (out-of-range index, overlap, empty test set)
+    // are λ-independent caller bugs — surface them with their precise
+    // message instead of letting every candidate score −∞ below.
+    super::validate_folds(folds, cache.n())?;
     let mut scores = Vec::with_capacity(grid.len());
     for &lambda in grid {
-        let score = match cache.hat(lambda) {
+        let score = match cache.hat_pool(lambda, pool) {
             Ok(hat) => {
                 let cv = AnalyticBinaryCv::with_hat(hat, y);
-                let fold_cache = FoldCache::prepare(&cv.hat, folds, false)?;
-                let dv = cv.decision_values_cached(&fold_cache);
-                match by {
-                    SelectBy::Accuracy => accuracy_signed(&dv, y),
-                    SelectBy::Auc => auc(&dv, labels),
-                    SelectBy::NegMse => -crate::cv::metrics::mse(&dv, y),
+                match FoldCache::prepare(&cv.hat, folds, false) {
+                    // a singular (I − H_Te) is λ-specific (the fold model
+                    // itself is degenerate there) — score it out rather
+                    // than abort a grid whose other candidates are fine,
+                    // matching the multi-class search's handling.
+                    Err(_) => f64::NEG_INFINITY,
+                    Ok(fold_cache) => {
+                        let dv = cv.decision_values_cached(&fold_cache);
+                        match by {
+                            SelectBy::Accuracy => accuracy_signed(&dv, y),
+                            SelectBy::Auc => auc(&dv, labels),
+                            SelectBy::NegMse => -crate::cv::metrics::mse(&dv, y),
+                        }
+                    }
                 }
             }
             // λ infeasible for this shape/backend: worst score, not an abort.
+            Err(_) => f64::NEG_INFINITY,
+        };
+        scores.push(LambdaScore { lambda, score });
+    }
+    let best = select_best(&scores)?;
+    Ok(LambdaSearch { scores, best })
+}
+
+/// Multi-class λ selection through the analytic CV (the ROADMAP
+/// "multi-class spectral λ-grid reuse" item): one [`GramCache`] — on wide
+/// shapes one spectral decomposition — serves the entire grid exactly as in
+/// the binary search, because step 1 of optimal scoring (the multivariate
+/// ridge regression `Ŷ = HY`) is the only place λ and the features meet.
+/// Per candidate the additional cost over the binary search is step 2's
+/// `C×C` optimal-scores eigenproblem per fold — `O(C³)`, negligible.
+///
+/// Scores are cross-validated label accuracies
+/// ([`AnalyticMulticlassCv::predict_cached`] + nearest-centroid). An
+/// infeasible candidate (singular fold system) scores −∞; a grid with no
+/// feasible candidate errors. Ties resolve to the smaller λ, matching
+/// [`search_lambda`].
+pub fn search_lambda_multiclass(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    grid: &[f64],
+    ctx: &ComputeContext<'_>,
+) -> Result<LambdaSearch> {
+    assert!(!grid.is_empty());
+    let positives = grid.iter().filter(|&&l| l > 0.0).count();
+    let resolved = ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives);
+    let cache = GramCache::build(x, resolved, ctx.pool());
+    search_lambda_multiclass_with_cache(&cache, labels, c, folds, grid, ctx.pool())
+}
+
+/// The scoring loop of [`search_lambda_multiclass`] against an
+/// already-built [`GramCache`].
+pub fn search_lambda_multiclass_with_cache(
+    cache: &GramCache,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    grid: &[f64],
+    pool: Option<&ThreadPool>,
+) -> Result<LambdaSearch> {
+    assert!(!grid.is_empty());
+    // λ-independent fold-structure errors keep their precise message (see
+    // search_lambda_with_cache).
+    super::validate_folds(folds, cache.n())?;
+    let mut scores = Vec::with_capacity(grid.len());
+    for &lambda in grid {
+        let score = match cache.hat_pool(lambda, pool) {
+            Ok(hat) => {
+                let cv = AnalyticMulticlassCv::with_hat(hat, labels, c);
+                match FoldCache::prepare(&cv.hat, folds, true) {
+                    // a singular fold system is λ-specific — score it out
+                    Err(_) => f64::NEG_INFINITY,
+                    Ok(fold_cache) => {
+                        let pred = cv.predict_cached(&fold_cache)?;
+                        accuracy_labels(&pred, labels)
+                    }
+                }
+            }
             Err(_) => f64::NEG_INFINITY,
         };
         scores.push(LambdaScore { lambda, score });
@@ -205,7 +347,57 @@ pub fn nested_cv_backend(
     rng: &mut crate::util::rng::Rng,
     backend: GramBackend,
 ) -> Result<(Vec<f64>, Vec<f64>)> {
+    nested_cv_ctx(
+        x,
+        y,
+        labels,
+        outer_folds,
+        inner_k,
+        grid,
+        by,
+        rng,
+        &ComputeContext::serial().with_backend(backend),
+    )
+}
+
+/// [`nested_cv`] under a [`ComputeContext`]. Beyond the pool fan-out, this
+/// is where the context's nested-sharing knob
+/// ([`ComputeContext::with_nested_sharing`]) pays off: outer training sets
+/// overlap in all but one fold's worth of rows, so instead of rebuilding
+/// each fold's centered Gram from the `P`-dimensional data (`O(N_tr²P)` per
+/// outer fold), one full-data Gram `K = XXᵀ` is built **once** and each
+/// fold's training Gram is *downdated* out of it by index selection +
+/// re-centering (`O(N_tr²)`) — the Gram-level analogue of the paper's
+/// Eq. 9–12 fold downdates (see [`SharedNestedGram`]). The per-fold
+/// spectral decomposition then serves that fold's whole inner grid.
+///
+/// Sharing engages only when it is well-defined and profitable: the knob is
+/// on **and** the grid/shape resolve to the spectral backend (wide data,
+/// ≥ 2 positive candidates). The downdated Gram equals the rebuilt one in
+/// exact arithmetic but not bitwise, so the default (knob off) reproduces
+/// [`nested_cv_backend`] exactly; agreement between the two modes is
+/// property-tested at tolerance.
+#[allow(clippy::too_many_arguments)]
+pub fn nested_cv_ctx(
+    x: &Mat,
+    y: &[f64],
+    labels: &[usize],
+    outer_folds: &[Vec<usize>],
+    inner_k: usize,
+    grid: &[f64],
+    by: SelectBy,
+    rng: &mut crate::util::rng::Rng,
+    ctx: &ComputeContext<'_>,
+) -> Result<(Vec<f64>, Vec<f64>)> {
     super::validate_folds(outer_folds, x.rows())?;
+    let positives = grid.iter().filter(|&&l| l > 0.0).count();
+    // Share one full-data Gram across outer folds when every fold's inner
+    // search would go spectral anyway (P > N_full implies P > N_tr for all
+    // training subsets, so gating on the full shape is conservative).
+    let shared = (ctx.nested_sharing()
+        && ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives)
+            == GramBackend::Spectral)
+        .then(|| SharedNestedGram::build(x, ctx.pool()));
     let mut dvals = vec![f64::NAN; x.rows()];
     let mut chosen = Vec::with_capacity(outer_folds.len());
     for te in outer_folds {
@@ -214,7 +406,13 @@ pub fn nested_cv_backend(
         let y_tr: Vec<f64> = tr.iter().map(|&i| y[i]).collect();
         let l_tr: Vec<usize> = tr.iter().map(|&i| labels[i]).collect();
         let inner_folds = crate::cv::folds::kfold(tr.len(), inner_k.min(tr.len()), rng);
-        let search = search_lambda_backend(&x_tr, &y_tr, &l_tr, &inner_folds, grid, by, backend)?;
+        let search = match &shared {
+            Some(gram) => {
+                let cache = GramCache::Spectral(gram.fold_spectral(&x_tr, &tr));
+                search_lambda_with_cache(&cache, &y_tr, &l_tr, &inner_folds, grid, by, ctx.pool())?
+            }
+            None => search_lambda_ctx(&x_tr, &y_tr, &l_tr, &inner_folds, grid, by, ctx)?,
+        };
         let lambda = search.best_lambda();
         chosen.push(lambda);
         // Train on the full outer-training set with the chosen λ, predict Te.
@@ -429,6 +627,187 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn backend_pool_search_lambda_bitwise_matches_serial() {
+        // A pooled context must reproduce the serial search bit-for-bit:
+        // identical per-candidate scores and the identical winner, on both
+        // the spectral (wide) and primal (tall) resolutions of Auto.
+        let mut rng = Rng::new(41);
+        for (n, p) in [(30usize, 90usize), (60, 15)] {
+            let mut spec = SyntheticSpec::binary(n, p);
+            spec.separation = 1.5;
+            let ds = generate(&spec, &mut rng);
+            let y = ds.y_signed();
+            let folds = stratified_kfold(&ds.labels, 4, &mut rng);
+            let grid = [0.1, 1.0, 10.0, 100.0];
+            let serial = search_lambda_backend(
+                &ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, GramBackend::Auto,
+            )
+            .unwrap();
+            let ctx = crate::fastcv::ComputeContext::with_threads(4);
+            let pooled =
+                search_lambda_ctx(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, &ctx)
+                    .unwrap();
+            assert_eq!(pooled.best, serial.best, "winner moved under a pool (n={n} p={p})");
+            for (s, q) in serial.scores.iter().zip(&pooled.scores) {
+                assert_eq!(s.score.to_bits(), q.score.to_bits(), "score moved (n={n} p={p})");
+            }
+        }
+    }
+
+    #[test]
+    fn multiclass_search_agrees_with_per_lambda_rebuild() {
+        // The tentpole reuse claim: one GramCache serving the whole grid
+        // must score and select exactly like a from-scratch multi-class
+        // rebuild per candidate — and the spectral cache must agree with
+        // the primal one on the winner.
+        use crate::fastcv::ComputeContext;
+        use crate::model::lda_multiclass::tests::blobs;
+        let mut rng = Rng::new(42);
+        let (x, labels) = blobs(&mut rng, 10, 4, 90, 2.0); // N=40, P=90 (wide)
+        let c = 4;
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        let grid = [0.1, 1.0, 10.0, 100.0];
+        // reference: per-λ rebuild through the historical primal fit
+        let mut rebuild = Vec::new();
+        for &l in &grid {
+            let cv = crate::fastcv::multiclass::AnalyticMulticlassCv::fit(&x, &labels, c, l)
+                .unwrap();
+            let pred = cv.predict(&folds).unwrap();
+            rebuild.push(crate::cv::metrics::accuracy_labels(&pred, &labels));
+        }
+        let primal = search_lambda_multiclass(
+            &x,
+            &labels,
+            c,
+            &folds,
+            &grid,
+            &ComputeContext::serial().with_backend(GramBackend::Primal),
+        )
+        .unwrap();
+        for (s, &r) in primal.scores.iter().zip(&rebuild) {
+            assert_eq!(s.score, r, "primal cache must reproduce the rebuild exactly");
+        }
+        let spectral = search_lambda_multiclass(
+            &x,
+            &labels,
+            c,
+            &folds,
+            &grid,
+            &ComputeContext::serial().with_backend(GramBackend::Spectral),
+        )
+        .unwrap();
+        assert_eq!(spectral.best, primal.best, "spectral reuse picked a different λ");
+        // predictions are backend-invariant (property-tested in multiclass),
+        // so the 1/N-quantised accuracies must match exactly here too
+        for (s, q) in primal.scores.iter().zip(&spectral.scores) {
+            assert_eq!(s.score, q.score, "spectral score moved at λ={}", s.lambda);
+        }
+        // pooled context: bitwise identical to the serial spectral run
+        let pooled = search_lambda_multiclass(
+            &x,
+            &labels,
+            c,
+            &folds,
+            &grid,
+            &ComputeContext::with_threads(4).with_backend(GramBackend::Spectral),
+        )
+        .unwrap();
+        assert_eq!(pooled.best, spectral.best);
+        for (s, q) in spectral.scores.iter().zip(&pooled.scores) {
+            assert_eq!(s.score.to_bits(), q.score.to_bits());
+        }
+    }
+
+    #[test]
+    fn multiclass_search_all_infeasible_errors() {
+        use crate::fastcv::ComputeContext;
+        use crate::model::lda_multiclass::tests::blobs;
+        let mut rng = Rng::new(43);
+        let (x, labels) = blobs(&mut rng, 6, 3, 60, 2.0); // wide: λ=0 singular
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let res =
+            search_lambda_multiclass(&x, &labels, 3, &folds, &[0.0], &ComputeContext::serial());
+        assert!(res.is_err(), "all-infeasible multi-class grid must error");
+    }
+
+    #[test]
+    fn nested_cv_shared_spectral_agrees_with_rebuild() {
+        // The Eq. 9–12-style Gram sharing across outer folds must pick the
+        // same λ per fold and produce decision values matching the per-fold
+        // rebuild to tolerance (the downdate changes the float path, not
+        // the math).
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(44);
+        let mut spec = SyntheticSpec::binary(48, 160); // wide: spectral regime
+        spec.separation = 2.0;
+        let ds = generate(&spec, &mut rng);
+        let y = ds.y_signed();
+        let outer = stratified_kfold(&ds.labels, 4, &mut rng);
+        let grid = [0.5, 2.0, 10.0, 50.0];
+        let run = |ctx: &ComputeContext, seed: u64| {
+            nested_cv_ctx(
+                &ds.x,
+                &y,
+                &ds.labels,
+                &outer,
+                3,
+                &grid,
+                SelectBy::Accuracy,
+                &mut Rng::new(seed),
+                ctx,
+            )
+            .unwrap()
+        };
+        let (dv_rebuild, lam_rebuild) = run(&ComputeContext::serial(), 9);
+        let (dv_shared, lam_shared) = run(&ComputeContext::serial().with_nested_sharing(true), 9);
+        assert_eq!(lam_shared, lam_rebuild, "shared mode picked different λs");
+        for (a, b) in dv_rebuild.iter().zip(&dv_shared) {
+            assert!((a - b).abs() < 1e-6, "dvals diverged: {a} vs {b}");
+        }
+        // pooled + shared is bitwise identical to serial + shared
+        let (dv_pool, lam_pool) =
+            run(&ComputeContext::with_threads(4).with_nested_sharing(true), 9);
+        assert_eq!(lam_pool, lam_shared);
+        for (a, b) in dv_shared.iter().zip(&dv_pool) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pool must be a pure wall-clock knob");
+        }
+        // default ctx (sharing off) reproduces nested_cv_backend bitwise
+        let (dv_backend, lam_backend) = nested_cv_backend(
+            &ds.x,
+            &y,
+            &ds.labels,
+            &outer,
+            3,
+            &grid,
+            SelectBy::Accuracy,
+            &mut Rng::new(9),
+            GramBackend::Auto,
+        )
+        .unwrap();
+        assert_eq!(lam_backend, lam_rebuild);
+        for (a, b) in dv_rebuild.iter().zip(&dv_backend) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fold_singular_lambda_scores_neg_infinity_not_error() {
+        // N=12, P=8, 2 folds: the full-data gram is fine at λ=0 (N > P+1)
+        // but each training fold has 6 samples for 9 coefficients, so the
+        // fold model is degenerate and (I − H_Te) is exactly singular.
+        // That λ must be scored out (−∞), not abort the grid — the λ>0
+        // candidates are perfectly feasible.
+        let mut rng = Rng::new(51);
+        let ds = generate(&SyntheticSpec::binary(12, 8), &mut rng);
+        let y = ds.y_signed();
+        let folds = vec![(0..6).collect::<Vec<_>>(), (6..12).collect::<Vec<_>>()];
+        let s = search_lambda(&ds.x, &y, &ds.labels, &folds, &[0.0, 1.0], SelectBy::Accuracy)
+            .unwrap();
+        assert_eq!(s.scores[0].score, f64::NEG_INFINITY, "fold-singular λ=0 scored out");
+        assert_eq!(s.best_lambda(), 1.0);
     }
 
     #[test]

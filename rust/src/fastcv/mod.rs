@@ -60,18 +60,35 @@
 //! decision values (property-tested as `backend_*` tests across this
 //! module), so the choice is a pure wall-clock knob — exposed as
 //! `--backend primal|dual|spectral|auto` on the CLI sweep alongside
-//! `--engine`. The dual/spectral builds can additionally fan the
-//! `K_c = X_cX_cᵀ` GEMM over a
-//! [`ThreadPool`](crate::util::threadpool::ThreadPool) via
-//! [`crate::linalg::matmul_pool`] when the caller hands one to
-//! [`hat::HatMatrix::build_with`] / [`hat::GramCache::build`] /
-//! [`bigdata::StreamingHat::build_with`]; the analytic front-ends
-//! (`fit_with`, `search_lambda`, the perm engines) currently pass `None` —
-//! the coordinator already parallelises across sweep points, and threading
-//! a pool through the front-ends is a ROADMAP open item.
+//! `--engine`.
+//!
+//! ## The compute context
+//!
+//! All Gram builds — the dual/spectral `K_c = X_cX_cᵀ` GEMM
+//! ([`crate::linalg::matmul_pool`]), the primal `G₀ = X̃ᵀX̃` syrk
+//! ([`crate::linalg::syrk_t_pool`]), and the per-candidate hat GEMMs — can
+//! fan out over a [`ThreadPool`](crate::util::threadpool::ThreadPool).
+//! Rather than threading a bare pool through every signature, the analytic
+//! front-ends take a [`context::ComputeContext`] (owned or borrowed pool +
+//! backend policy + cache-reuse knobs) through their `_ctx` entry points:
+//! [`binary::AnalyticBinaryCv::fit_ctx`],
+//! [`multiclass::AnalyticMulticlassCv::fit_ctx`],
+//! [`lambda_search::search_lambda_ctx`],
+//! [`lambda_search::search_lambda_multiclass`],
+//! [`lambda_search::nested_cv_ctx`], and the four permutation engines
+//! ([`perm::analytic_binary_permutation_ctx`],
+//! [`perm::analytic_multiclass_permutation_ctx`],
+//! [`perm_batch::analytic_binary_permutation_batched_ctx`],
+//! [`perm_batch::analytic_multiclass_permutation_batched_ctx`]). Every
+//! pooled kernel is bit-identical to its serial counterpart, so a context
+//! never changes results — only wall-clock (property-tested as
+//! `backend_pool_*` tests). The historical no-pool entry points (`fit`,
+//! `fit_with`, `search_lambda`, the `_backend` engines) delegate to the
+//! `_ctx` forms with a serial context and keep their bitwise outputs.
 
 pub mod bigdata;
 pub mod binary;
+pub mod context;
 pub mod hat;
 pub mod lambda_search;
 pub mod multiclass;
@@ -79,7 +96,8 @@ pub mod perm;
 pub mod perm_batch;
 pub mod woodbury;
 
-pub use hat::{GramBackend, GramCache, SpectralGram};
+pub use context::ComputeContext;
+pub use hat::{GramBackend, GramCache, SharedNestedGram, SpectralGram};
 
 use crate::linalg::{Lu, Mat};
 use anyhow::{Context, Result};

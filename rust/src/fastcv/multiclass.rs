@@ -7,6 +7,7 @@
 //! updated, but is `O(C³)` per fold — negligible. Classification is by
 //! nearest centroid in the cross-validated discriminant-score space.
 
+use super::context::ComputeContext;
 use super::hat::{GramBackend, HatMatrix};
 use super::FoldCache;
 use crate::linalg::{matmul, Mat};
@@ -46,7 +47,20 @@ impl AnalyticMulticlassCv {
         lambda: f64,
         backend: GramBackend,
     ) -> Result<AnalyticMulticlassCv> {
-        let hat = HatMatrix::build_with(x, lambda, backend, None)?;
+        Self::fit_ctx(x, labels, c, lambda, &ComputeContext::serial().with_backend(backend))
+    }
+
+    /// [`Self::fit`] under a [`ComputeContext`]: the context's backend
+    /// picks the Gram construction and its pool (if any) fans out the hat
+    /// build's GEMMs, bit-identically to a serial build.
+    pub fn fit_ctx(
+        x: &Mat,
+        labels: &[usize],
+        c: usize,
+        lambda: f64,
+        ctx: &ComputeContext<'_>,
+    ) -> Result<AnalyticMulticlassCv> {
+        let hat = HatMatrix::build_with(x, lambda, ctx.backend(), ctx.pool())?;
         Ok(Self::with_hat(hat, labels, c))
     }
 
@@ -377,6 +391,27 @@ mod tests {
                 let pred = cv.predict(&folds).unwrap();
                 assert_eq!(pred, pred_p, "backend {backend:?} predictions differ (c={c} p={p})");
             }
+        }
+    }
+
+    #[test]
+    fn backend_pool_fit_ctx_bitwise_matches_fit_with() {
+        // The pooled multi-class fit must predict identically to the serial
+        // one — the pool only fans out the hat build's GEMMs.
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(33);
+        let (x, labels) = blobs(&mut rng, 8, 4, 70, 2.5); // N=32, P=70
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        for backend in [GramBackend::Primal, GramBackend::Dual, GramBackend::Spectral] {
+            let serial = AnalyticMulticlassCv::fit_with(&x, &labels, 4, 1.0, backend).unwrap();
+            let ctx = ComputeContext::with_threads(4).with_backend(backend);
+            let pooled = AnalyticMulticlassCv::fit_ctx(&x, &labels, 4, 1.0, &ctx).unwrap();
+            assert_eq!(serial.hat.h.as_slice(), pooled.hat.h.as_slice(), "{backend:?} hat");
+            assert_eq!(
+                serial.predict(&folds).unwrap(),
+                pooled.predict(&folds).unwrap(),
+                "{backend:?} predictions"
+            );
         }
     }
 

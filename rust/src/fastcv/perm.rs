@@ -21,6 +21,7 @@
 //! analytic-vs-standard agreement tests rely on.
 
 use super::binary::AnalyticBinaryCv;
+use super::context::ComputeContext;
 use super::hat::GramBackend;
 use super::multiclass::AnalyticMulticlassCv;
 use super::FoldCache;
@@ -103,8 +104,35 @@ pub fn analytic_binary_permutation_backend(
     rng: &mut Rng,
     backend: GramBackend,
 ) -> Result<PermutationResult> {
+    analytic_binary_permutation_ctx(
+        x,
+        labels,
+        folds,
+        lambda,
+        n_perm,
+        bias_adjust,
+        rng,
+        &ComputeContext::serial().with_backend(backend),
+    )
+}
+
+/// [`analytic_binary_permutation`] under a [`ComputeContext`]: the
+/// context's pool fans out the one-off hat build (the only feature-side
+/// work — everything per permutation is `O(N²)`), bit-identically to a
+/// serial build, so the null distribution is pool-invariant.
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_binary_permutation_ctx(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    bias_adjust: bool,
+    rng: &mut Rng,
+    ctx: &ComputeContext<'_>,
+) -> Result<PermutationResult> {
     let y = signed_codes(labels);
-    let mut cv = AnalyticBinaryCv::fit_with(x, &y, lambda, backend)?;
+    let mut cv = AnalyticBinaryCv::fit_ctx(x, &y, lambda, ctx)?;
     let cache = FoldCache::prepare(&cv.hat, folds, bias_adjust)?;
     let dvals = |cv: &AnalyticBinaryCv, labels: &[usize]| -> Result<Vec<f64>> {
         if bias_adjust {
@@ -179,7 +207,32 @@ pub fn analytic_multiclass_permutation_backend(
     rng: &mut Rng,
     backend: GramBackend,
 ) -> Result<PermutationResult> {
-    let mut cv = AnalyticMulticlassCv::fit_with(x, labels, c, lambda, backend)?;
+    analytic_multiclass_permutation_ctx(
+        x,
+        labels,
+        c,
+        folds,
+        lambda,
+        n_perm,
+        rng,
+        &ComputeContext::serial().with_backend(backend),
+    )
+}
+
+/// [`analytic_multiclass_permutation`] under a [`ComputeContext`] (pool
+/// fan-out of the one-off hat build; bit-identical to serial).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_multiclass_permutation_ctx(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    rng: &mut Rng,
+    ctx: &ComputeContext<'_>,
+) -> Result<PermutationResult> {
+    let mut cv = AnalyticMulticlassCv::fit_ctx(x, labels, c, lambda, ctx)?;
     let cache = FoldCache::prepare(&cv.hat, folds, true)?;
     let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
     let anchor = rng.next_u64();
@@ -319,6 +372,42 @@ mod tests {
             assert_eq!(r.observed, base.observed, "{backend:?} multiclass observed");
             assert_eq!(r.null, base.null, "{backend:?} multiclass null");
         }
+    }
+
+    #[test]
+    fn backend_pool_permutation_null_bitwise_matches_serial() {
+        // A pooled context must not move a single bit of either engine's
+        // observed accuracy, null distribution, or p-value.
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(23);
+        let (x, labels) = blobs(&mut rng, 12, 2, 70, 2.5); // wide
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        let serial = analytic_binary_permutation_backend(
+            &x, &labels, &folds, 1.0, 12, true, &mut Rng::new(6), GramBackend::Dual,
+        )
+        .unwrap();
+        let ctx = ComputeContext::with_threads(4).with_backend(GramBackend::Dual);
+        let pooled = analytic_binary_permutation_ctx(
+            &x, &labels, &folds, 1.0, 12, true, &mut Rng::new(6), &ctx,
+        )
+        .unwrap();
+        assert_eq!(pooled.observed, serial.observed);
+        assert_eq!(pooled.null, serial.null);
+        assert_eq!(pooled.p_value, serial.p_value);
+        // multi-class front-end too
+        let (x, labels) = blobs(&mut rng, 10, 3, 50, 2.5);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let serial = analytic_multiclass_permutation_backend(
+            &x, &labels, 3, &folds, 1.0, 6, &mut Rng::new(8), GramBackend::Spectral,
+        )
+        .unwrap();
+        let ctx = ComputeContext::with_threads(4).with_backend(GramBackend::Spectral);
+        let pooled = analytic_multiclass_permutation_ctx(
+            &x, &labels, 3, &folds, 1.0, 6, &mut Rng::new(8), &ctx,
+        )
+        .unwrap();
+        assert_eq!(pooled.observed, serial.observed);
+        assert_eq!(pooled.null, serial.null);
     }
 
     #[test]

@@ -33,6 +33,7 @@
 //! same per-fold code as the serial path.
 
 use super::binary::AnalyticBinaryCv;
+use super::context::ComputeContext;
 use super::hat::GramBackend;
 use super::multiclass::AnalyticMulticlassCv;
 use super::perm::{p_value, permuted_labels, PermutationResult};
@@ -50,11 +51,13 @@ use anyhow::Result;
 ///
 /// Pool lifetime: when more than one batch exists and `threads > 1`, each
 /// engine call spawns (and joins) its own short-lived
-/// [`ThreadPool`](crate::util::threadpool::ThreadPool). Spawn cost is a few
-/// hundred microseconds — negligible against a multi-batch permutation
+/// [`ThreadPool`](crate::util::threadpool::ThreadPool) — unless the call
+/// went through a `_ctx` entry point whose [`ComputeContext`] already
+/// holds a pool, in which case that pool is borrowed for the batch
+/// fan-out too (one pool serves hat build and batches). Spawn cost is a
+/// few hundred microseconds — negligible against a multi-batch permutation
 /// stream, and single-batch runs (`n_perm ≤ batch_size`) never spawn a
-/// pool at all. If a future caller drives many tiny multi-batch tests in a
-/// tight loop, hoist a shared pool instead of widening this struct.
+/// pool at all.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BatchStrategy {
     /// Permutations per response matrix (`B`); the GEMM/multi-RHS width.
@@ -99,18 +102,33 @@ fn batch_ranges(n_perm: usize, batch_size: usize) -> Vec<(usize, usize)> {
 
 /// Run every batch (serially or across a pool), concatenating the
 /// per-permutation accuracies in permutation-index order.
-fn run_batches<F>(batches: &[(usize, usize)], threads: usize, run: F) -> Result<Vec<f64>>
+///
+/// When the caller already holds a pool (a [`ComputeContext`] with one),
+/// it is borrowed for the batch fan-out instead of spawning a second,
+/// mostly-redundant pool next to it; otherwise a short-lived pool of
+/// `threads` workers is spawned as before. Either way results are
+/// bit-identical — batch evaluation order never affects values.
+fn run_batches<F>(
+    batches: &[(usize, usize)],
+    threads: usize,
+    borrowed: Option<&ThreadPool>,
+    run: F,
+) -> Result<Vec<f64>>
 where
     F: Fn(usize, usize) -> Result<Vec<f64>> + Send + Sync,
 {
-    let per_batch: Vec<Result<Vec<f64>>> = if threads <= 1 || batches.len() <= 1 {
-        batches.iter().map(|&(start, len)| run(start, len)).collect()
-    } else {
-        let pool = ThreadPool::new(threads.min(batches.len()));
+    let fan_out = |pool: &ThreadPool| {
         pool.map(batches.len(), |i| {
             let (start, len) = batches[i];
             run(start, len)
         })
+    };
+    let per_batch: Vec<Result<Vec<f64>>> = if threads <= 1 || batches.len() <= 1 {
+        batches.iter().map(|&(start, len)| run(start, len)).collect()
+    } else if let Some(pool) = borrowed {
+        fan_out(pool)
+    } else {
+        fan_out(&ThreadPool::new(threads.min(batches.len())))
     };
     let mut null = Vec::new();
     for r in per_batch {
@@ -164,8 +182,38 @@ pub fn analytic_binary_permutation_batched_backend(
     strategy: BatchStrategy,
     backend: GramBackend,
 ) -> Result<PermutationResult> {
+    analytic_binary_permutation_batched_ctx(
+        x,
+        labels,
+        folds,
+        lambda,
+        n_perm,
+        bias_adjust,
+        rng,
+        strategy,
+        &ComputeContext::serial().with_backend(backend),
+    )
+}
+
+/// [`analytic_binary_permutation_batched`] under a [`ComputeContext`]: the
+/// context's pool fans out the one-off hat build **and**, when
+/// `strategy.threads > 1`, is borrowed for the batch fan-out (one pool
+/// serves both phases instead of two pools sitting half-idle). Neither
+/// axis moves a bit of the null distribution.
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_binary_permutation_batched_ctx(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    bias_adjust: bool,
+    rng: &mut Rng,
+    strategy: BatchStrategy,
+    ctx: &ComputeContext<'_>,
+) -> Result<PermutationResult> {
     let y = signed_codes(labels);
-    let cv = AnalyticBinaryCv::fit_with(x, &y, lambda, backend)?;
+    let cv = AnalyticBinaryCv::fit_ctx(x, &y, lambda, ctx)?;
     let cache = FoldCache::prepare(&cv.hat, folds, bias_adjust)?;
     let observed = if bias_adjust {
         accuracy_signed(&cv.decision_values_bias_adjusted(&cache, labels)?, &y)
@@ -199,7 +247,7 @@ pub fn analytic_binary_permutation_batched_backend(
         }
         Ok(accs)
     };
-    let null = run_batches(&batch_ranges(n_perm, strategy.batch_size), strategy.threads, run)?;
+    let null = run_batches(&batch_ranges(n_perm, strategy.batch_size), strategy.threads, ctx.pool(), run)?;
     Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
 }
 
@@ -248,7 +296,36 @@ pub fn analytic_multiclass_permutation_batched_backend(
     strategy: BatchStrategy,
     backend: GramBackend,
 ) -> Result<PermutationResult> {
-    let cv = AnalyticMulticlassCv::fit_with(x, labels, c, lambda, backend)?;
+    analytic_multiclass_permutation_batched_ctx(
+        x,
+        labels,
+        c,
+        folds,
+        lambda,
+        n_perm,
+        rng,
+        strategy,
+        &ComputeContext::serial().with_backend(backend),
+    )
+}
+
+/// [`analytic_multiclass_permutation_batched`] under a [`ComputeContext`]
+/// (the context's pool serves the one-off hat build and, when
+/// `strategy.threads > 1`, the batch fan-out; bit-identical results
+/// either way).
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_multiclass_permutation_batched_ctx(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+    n_perm: usize,
+    rng: &mut Rng,
+    strategy: BatchStrategy,
+    ctx: &ComputeContext<'_>,
+) -> Result<PermutationResult> {
+    let cv = AnalyticMulticlassCv::fit_ctx(x, labels, c, lambda, ctx)?;
     let cache = FoldCache::prepare(&cv.hat, folds, true)?;
     let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
     let anchor = rng.next_u64();
@@ -271,7 +348,7 @@ pub fn analytic_multiclass_permutation_batched_backend(
             .map(|(pred, labels_perm)| accuracy_labels(pred, labels_perm))
             .collect())
     };
-    let null = run_batches(&batch_ranges(n_perm, strategy.batch_size), strategy.threads, run)?;
+    let null = run_batches(&batch_ranges(n_perm, strategy.batch_size), strategy.threads, ctx.pool(), run)?;
     Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
 }
 
@@ -456,6 +533,74 @@ mod tests {
             .unwrap();
             assert_same_result(&serial, &batched, &format!("backend {backend:?}"));
         }
+    }
+
+    #[test]
+    fn backend_pool_batched_engine_bitwise_matches_serial_ctx() {
+        // Hat-build pool (ctx) and batch pool (strategy) compose without
+        // moving a bit: serial-ctx serial-batch == pooled-ctx threaded-batch.
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(29);
+        let (x, labels) = blobs(&mut rng, 12, 2, 60, 2.0); // wide
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        let base = analytic_binary_permutation_batched_backend(
+            &x,
+            &labels,
+            &folds,
+            0.9,
+            20,
+            true,
+            &mut Rng::new(3),
+            BatchStrategy::new(7, 1),
+            GramBackend::Spectral,
+        )
+        .unwrap();
+        let ctx = ComputeContext::with_threads(4).with_backend(GramBackend::Spectral);
+        let pooled = analytic_binary_permutation_batched_ctx(
+            &x,
+            &labels,
+            &folds,
+            0.9,
+            20,
+            true,
+            &mut Rng::new(3),
+            BatchStrategy::new(7, 3),
+            &ctx,
+        )
+        .unwrap();
+        assert_eq!(pooled.observed, base.observed);
+        assert_eq!(pooled.null, base.null);
+        assert_eq!(pooled.p_value, base.p_value);
+        // multi-class engine
+        let (x, labels) = blobs(&mut rng, 9, 3, 40, 2.0);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let base = analytic_multiclass_permutation_batched_backend(
+            &x,
+            &labels,
+            3,
+            &folds,
+            1.2,
+            9,
+            &mut Rng::new(4),
+            BatchStrategy::new(4, 1),
+            GramBackend::Dual,
+        )
+        .unwrap();
+        let ctx = ComputeContext::with_threads(3).with_backend(GramBackend::Dual);
+        let pooled = analytic_multiclass_permutation_batched_ctx(
+            &x,
+            &labels,
+            3,
+            &folds,
+            1.2,
+            9,
+            &mut Rng::new(4),
+            BatchStrategy::new(4, 2),
+            &ctx,
+        )
+        .unwrap();
+        assert_eq!(pooled.observed, base.observed);
+        assert_eq!(pooled.null, base.null);
     }
 
     #[test]

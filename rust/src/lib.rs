@@ -14,6 +14,13 @@
 //! a sweep/permutation coordinator ([`coordinator`]), and a PJRT runtime
 //! that executes the JAX/Pallas-compiled HLO artifacts ([`runtime`]).
 //!
+//! Performance is governed by three orthogonal, correctness-preserving
+//! levers: the Gram backend ([`fastcv::hat::GramBackend`]; decision guide
+//! in `docs/BACKENDS.md`), the permutation engine
+//! ([`fastcv::perm_batch`]), and the thread pool a
+//! [`fastcv::context::ComputeContext`] hands to the analytic front-ends.
+//! The repository-root `README.md` maps the paper's equations to modules.
+//!
 //! ## Quick start
 //!
 //! ```no_run

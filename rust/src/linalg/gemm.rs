@@ -176,22 +176,36 @@ pub fn matmul_pool(a: &Mat, b: &Mat, pool: Option<&crate::util::threadpool::Thre
 }
 
 /// `AᵀA` symmetric rank-k update (forms the scatter/gram matrix). Only the
-/// upper triangle is computed then mirrored.
+/// upper triangle is computed then mirrored. See [`syrk_t_pool`] for the
+/// pool-parallel panel fan-out (bit-identical output).
 pub fn syrk_t(a: &Mat) -> Mat {
+    let p = a.cols();
+    let mut g = syrk_t_rows(a, 0, p);
+    mirror_upper(&mut g);
+    g
+}
+
+/// Rows `lo..hi` of the upper triangle of `AᵀA`, as an `(hi-lo)×p` block
+/// (entries left of the diagonal stay zero). The accumulation into every
+/// element `g[(j,k)]` runs over the sample index `i` in ascending order, so
+/// the per-element float sequence — and hence the result — is independent
+/// of how `0..p` is split into `[lo, hi)` panels. That independence is what
+/// makes [`syrk_t_pool`] bit-identical to [`syrk_t`].
+fn syrk_t_rows(a: &Mat, lo: usize, hi: usize) -> Mat {
     let (n, p) = a.shape();
-    let mut g = Mat::zeros(p, p);
+    let mut g = Mat::zeros(hi - lo, p);
     // Process in row panels of A to keep accumulation cache-friendly.
     const PANEL: usize = 64;
     for i0 in (0..n).step_by(PANEL) {
         let i1 = (i0 + PANEL).min(n);
         for i in i0..i1 {
             let row = a.row(i);
-            for j in 0..p {
+            for j in lo..hi {
                 let aij = row[j];
                 if aij == 0.0 {
                     continue;
                 }
-                let grow = g.row_mut(j);
+                let grow = g.row_mut(j - lo);
                 // upper triangle only
                 for (k, &aik) in row.iter().enumerate().skip(j) {
                     grow[k] += aij * aik;
@@ -199,12 +213,56 @@ pub fn syrk_t(a: &Mat) -> Mat {
             }
         }
     }
-    // mirror
+    g
+}
+
+/// Copy the upper triangle of `g` onto the lower.
+fn mirror_upper(g: &mut Mat) {
+    let p = g.rows();
     for j in 0..p {
         for k in (j + 1)..p {
             g[(k, j)] = g[(j, k)];
         }
     }
+}
+
+/// [`syrk_t`] with panels of output columns fanned out over a
+/// [`ThreadPool`](crate::util::threadpool::ThreadPool).
+///
+/// Bit-identical to the serial kernel for any pool size or panel split:
+/// every upper-triangle element accumulates over the sample index in the
+/// same (ascending) order whichever panel its row lands in — see
+/// `syrk_t_rows`. The primal gram build `G₀ = X̃ᵀX̃`
+/// ([`crate::fastcv::hat::GramCache`]'s `Primal` arm) is the intended
+/// caller; it is `O(NP²)`, dominated by `P` on wide shapes, which is
+/// exactly where the panels are plentiful. Falls back to the serial kernel
+/// when no pool is given, the pool has one worker, or `A` is too narrow to
+/// split.
+pub fn syrk_t_pool(a: &Mat, pool: Option<&crate::util::threadpool::ThreadPool>) -> Mat {
+    let p = a.cols();
+    let pool = match pool {
+        Some(pl) if pl.size() > 1 && p >= 16 => pl,
+        _ => return syrk_t(a),
+    };
+    // 4× oversubscription: the leading panels own longer upper-triangle
+    // rows, so extra chunks let idle workers steal the short tail.
+    let chunks = (pool.size() * 4).min(p);
+    let chunk_len = p.div_ceil(chunks);
+    let ranges: Vec<(usize, usize)> = (0..p)
+        .step_by(chunk_len)
+        .map(|lo| (lo, (lo + chunk_len).min(p)))
+        .collect();
+    let blocks = pool.map(ranges.len(), |c| {
+        let (lo, hi) = ranges[c];
+        syrk_t_rows(a, lo, hi)
+    });
+    let mut g = Mat::zeros(p, p);
+    for (&(lo, hi), blk) in ranges.iter().zip(&blocks) {
+        for j in lo..hi {
+            g.row_mut(j).copy_from_slice(blk.row(j - lo));
+        }
+    }
+    mirror_upper(&mut g);
     g
 }
 
@@ -390,6 +448,32 @@ mod tests {
             for i in 0..m {
                 assert!((y[i] - y_ref[i]).abs() < 1e-10);
             }
+        }
+    }
+
+    #[test]
+    fn backend_pool_syrk_t_bitwise_matches_serial() {
+        // The pooled primal gram build relies on this: fanning upper-triangle
+        // column panels over the pool must not change a single bit, including
+        // through the aij == 0 skip path.
+        let mut rng = Rng::new(12);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        for &(n, p) in &[(10usize, 4usize), (5, 17), (40, 33), (30, 130), (64, 257)] {
+            let mut a = random_mat(&mut rng, n, p);
+            // sprinkle exact zeros so the skip branch is exercised
+            for i in 0..n {
+                for j in 0..p {
+                    if (i + j) % 7 == 0 {
+                        a[(i, j)] = 0.0;
+                    }
+                }
+            }
+            let serial = syrk_t(&a);
+            let pooled = syrk_t_pool(&a, Some(&pool));
+            assert_eq!(serial.as_slice(), pooled.as_slice(), "({n},{p})");
+            // no-pool fallback is the serial kernel itself
+            let none = syrk_t_pool(&a, None);
+            assert_eq!(serial.as_slice(), none.as_slice(), "({n},{p}) fallback");
         }
     }
 

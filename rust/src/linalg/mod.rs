@@ -15,6 +15,9 @@ pub mod mat;
 
 pub use chol::Cholesky;
 pub use eig::{gen_sym_eig, sym_eig, SymEig};
-pub use gemm::{dot, gemm_acc, ger, matmul, matmul_pool, matvec, matvec_gemm_order, matvec_t, syrk_t};
+pub use gemm::{
+    dot, gemm_acc, ger, matmul, matmul_pool, matvec, matvec_gemm_order, matvec_t, syrk_t,
+    syrk_t_pool,
+};
 pub use lu::{solve, solve_mat, Lu};
 pub use mat::Mat;

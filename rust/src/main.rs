@@ -56,8 +56,9 @@ fn print_usage() {
          COMMANDS\n\
            sweep --exp f3a|f3b|f3c|f3d   Fig. 3 relative-efficiency sweeps\n\
                  [--scale tiny|medium|paper] [--seed N] [--workers N] [--out DIR]\n\
-                 [--engine serial|batched] [--batch B] [--threads T]  (perm sweeps)\n\
+                 [--engine serial|batched] [--batch B]  (perm sweeps)\n\
                  [--backend primal|dual|spectral|auto]  (analytic-arm Gram backend)\n\
+                 [--threads T]  (analytic-arm pool: hat builds + perm batches)\n\
            parity                        §4.1 N≈P crossover table\n\
            complexity                    Table 1 empirical scaling exponents\n\
            eeg [--subjects N] [--perms N] [--full]   Fig. 4 EEG/MEG permutation study\n\
@@ -91,12 +92,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let scale = scale_from(args);
     let seed: u64 = args.get_parse_or("seed", 2018);
     let workers: usize = args.get_parse_or("workers", 0);
+    let threads: usize = args.get_parse_or("threads", 1);
     let engine = match args.get_or("engine", "serial").as_str() {
         "serial" => PermEngine::Serial,
-        "batched" => PermEngine::Batched {
-            batch: args.get_parse_or("batch", 64),
-            threads: args.get_parse_or("threads", 1),
-        },
+        "batched" => PermEngine::Batched { batch: args.get_parse_or("batch", 64), threads },
         other => anyhow::bail!("unknown engine {other:?} (serial|batched)"),
     };
     let backend_tag = args.get_or("backend", "primal");
@@ -116,9 +115,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     // The Gram backend governs the analytic arm's hat build on every
     // experiment (all grid points carry λ > 0, so dual/spectral are always
-    // well-defined; `auto` re-resolves per point's P/N ratio).
+    // well-defined; `auto` re-resolves per point's P/N ratio). `--threads`
+    // likewise reaches every analytic arm: each point's hat build fans its
+    // Gram/GEMM work over a ComputeContext pool of that width (bit-identical
+    // to serial — wall-clock only), not just the perm batcher.
     for p in points.iter_mut() {
         p.backend = backend;
+        p.threads = threads;
     }
     eprintln!("{}: {} points", exp.name(), points.len());
     let sched = Scheduler::new(workers, seed, args.flag("verbose"));
@@ -159,6 +162,7 @@ fn cmd_parity(args: &Args) -> Result<()> {
             lambda: 1.0,
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
+            threads: 1,
         };
         results.push(run_point(&point, seed)?);
     }
@@ -194,6 +198,7 @@ fn cmd_complexity(args: &Args) -> Result<()> {
             lambda: 1.0,
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
+            threads: 1,
         };
         let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
         rows_p.push((p as f64, r.t_std, r.t_ana));
@@ -214,6 +219,7 @@ fn cmd_complexity(args: &Args) -> Result<()> {
             lambda: 1.0,
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
+            threads: 1,
         };
         let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
         rows_n.push((n as f64, r.t_std, r.t_ana));

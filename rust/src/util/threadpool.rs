@@ -5,6 +5,14 @@
 //! shared injector queue, plus a [`ThreadPool::scope`] API that lets callers
 //! borrow stack data safely (all scoped jobs are joined before `scope`
 //! returns).
+//!
+//! Two layers consume it: the coordinator fans *sweep points* out over a
+//! pool ([`crate::coordinator::Scheduler`]), and the analytic front-ends
+//! fan a *single job's* Gram/GEMM kernels out through a
+//! [`crate::fastcv::context::ComputeContext`] (which can own a pool or
+//! borrow this one — see its `borrowing` constructor). The pooled kernels
+//! ([`crate::linalg::matmul_pool`], [`crate::linalg::syrk_t_pool`]) are
+//! bit-identical to their serial forms, so pool size never changes results.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};

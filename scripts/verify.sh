@@ -27,6 +27,11 @@ cargo test -q backend_
 echo "== benches compile: cargo bench --no-run =="
 cargo bench --no-run
 
+# Docs are a hard gate: broken intra-doc links (or any rustdoc warning)
+# fail the build, keeping README/BACKENDS.md's module map trustworthy.
+echo "== docs: cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== style (advisory): cargo fmt --check =="
   cargo fmt --all --check || echo "WARN: rustfmt check failed (advisory)"
