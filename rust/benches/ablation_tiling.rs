@@ -1,0 +1,167 @@
+//! Ablation: tiled vs one-shot `N×N` Gram builds (the §4.5 memory-bounded
+//! engine) → `BENCH_tiling.json`.
+//!
+//! Over an N/P/tile grid, measures
+//!
+//! 1. the dual **streaming-hat** build (`StreamingHat`): one-shot
+//!    (`TilePolicy::Off` — full centered copy + transpose + out-of-place
+//!    Cholesky) vs tiled (slab-assembled `K_c`, in-place blocked factor,
+//!    in-place solve), and
+//! 2. the dual **GramCache** `K_c` build, one-shot vs tiled,
+//!
+//! with a **resident-bytes estimate** column per arm (the accounting
+//! documented in `docs/BACKENDS.md` "Memory-bounded builds"): beyond the
+//! `O(NP)` outputs both arms share, the one-shot build transiently holds
+//! `X_c` + its transpose + `K_c` + a second `N×N` for the factor + an
+//! `N×P` solve clone, while the tiled build holds the in-place factor
+//! (the irreducible `N×N` of the single-λ dual form) plus `tile`-bounded
+//! slabs only. Bitwise equality of the two arms rides along so the JSON
+//! records correctness, not just speed.
+//!
+//! Env: `FASTCV_BENCH_SCALE=tiny` for a fast smoke run (CI);
+//! `FASTCV_BENCH_OUT` for the output directory.
+//! Run: `cargo bench --bench ablation_tiling`
+
+use fastcv::bench::Bench;
+use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::fastcv::bigdata::StreamingHat;
+use fastcv::fastcv::hat::{GramBackend, GramCache};
+use fastcv::fastcv::ComputeContext;
+use fastcv::linalg::TilePolicy;
+use fastcv::util::json::Json;
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fdur, Table};
+use std::collections::BTreeMap;
+
+/// Transient resident-bytes estimate of the one-shot dual streaming build,
+/// beyond the `xa`/`t` outputs both arms share: `X_c` (N·P) + its transpose
+/// copy (N·P) + `K_c + λI` (N²) + the out-of-place factor `L` (N²) + the
+/// solve's RHS clone (N·P).
+fn resident_one_shot(n: usize, p: usize) -> usize {
+    8 * (2 * n * n + 3 * n * p)
+}
+
+/// Transient resident-bytes estimate of the tiled build: the in-place
+/// factor (N², irreducible for a single-λ dual solve) + the centered RHS
+/// solved in place (N·P) + three `tile×P` slabs (own band, partner band,
+/// partner's transposed copy) and a `tile×N` output strip per worker.
+fn resident_tiled(n: usize, p: usize, tile: usize) -> usize {
+    8 * (n * n + n * p + tile * (3 * p + n))
+}
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::quick()
+    };
+    let lambda = 1.0;
+    // Wide shapes only: tiling targets the P ≫ N (dual/spectral) quadrant.
+    let shapes: &[(usize, usize)] = if tiny { &[(24, 96)] } else { &[(100, 800), (200, 1600)] };
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(vec![
+        "shape",
+        "tile",
+        "stream one-shot",
+        "stream tiled",
+        "K_c one-shot",
+        "K_c tiled",
+        "resident tiled/one-shot",
+        "bitwise",
+    ])
+    .with_title("Ablation: tiled vs one-shot N×N Gram builds (dual backend)".to_string());
+
+    for &(n, p) in shapes {
+        let mut rng = Rng::new((n * 37 + p) as u64);
+        let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+        let tiles: Vec<usize> = if tiny { vec![4, n / 2] } else { vec![16, 64, n / 2] };
+
+        let t_stream_off = bench
+            .run(|| StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, None).unwrap())
+            .median;
+        let t_kc_off =
+            bench.run(|| GramCache::build(&ds.x, GramBackend::Dual, None)).median;
+        let reference =
+            StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, None).unwrap();
+        let kc_reference = GramCache::build(&ds.x, GramBackend::Dual, None);
+
+        for tile in tiles {
+            let ctx = ComputeContext::with_threads(if tiny { 2 } else { 4 })
+                .with_backend(GramBackend::Dual)
+                .with_tile_policy(TilePolicy::Rows(tile));
+            let t_stream_tiled =
+                bench.run(|| StreamingHat::build_ctx(&ds.x, lambda, &ctx).unwrap()).median;
+            let t_kc_tiled = bench
+                .run(|| {
+                    GramCache::build_tiled(
+                        &ds.x,
+                        GramBackend::Dual,
+                        ctx.pool(),
+                        TilePolicy::Rows(tile),
+                    )
+                })
+                .median;
+
+            // correctness rides along: both arms bitwise-equal
+            let tiled = StreamingHat::build_ctx(&ds.x, lambda, &ctx).unwrap();
+            let kc_tiled = GramCache::build_tiled(
+                &ds.x,
+                GramBackend::Dual,
+                ctx.pool(),
+                TilePolicy::Rows(tile),
+            );
+            let (GramCache::Dual { kc: kc_a, .. }, GramCache::Dual { kc: kc_b, .. }) =
+                (&kc_reference, &kc_tiled)
+            else {
+                unreachable!()
+            };
+            let bitwise = reference.t.as_slice() == tiled.t.as_slice()
+                && kc_a.as_slice() == kc_b.as_slice();
+
+            let res_off = resident_one_shot(n, p);
+            let res_tiled = resident_tiled(n, p, tile);
+            let ratio = res_tiled as f64 / res_off as f64;
+            table.row(vec![
+                format!("N={n} P={p}"),
+                format!("{tile}"),
+                fdur(t_stream_off),
+                fdur(t_stream_tiled),
+                fdur(t_kc_off),
+                fdur(t_kc_tiled),
+                format!("{ratio:.2}"),
+                format!("{bitwise}"),
+            ]);
+            let mut row = BTreeMap::new();
+            row.insert("n".to_string(), Json::Num(n as f64));
+            row.insert("p".to_string(), Json::Num(p as f64));
+            row.insert("tile".to_string(), Json::Num(tile as f64));
+            row.insert("seconds_stream_one_shot".to_string(), Json::Num(t_stream_off));
+            row.insert("seconds_stream_tiled".to_string(), Json::Num(t_stream_tiled));
+            row.insert("seconds_kc_one_shot".to_string(), Json::Num(t_kc_off));
+            row.insert("seconds_kc_tiled".to_string(), Json::Num(t_kc_tiled));
+            row.insert("resident_bytes_one_shot".to_string(), Json::Num(res_off as f64));
+            row.insert("resident_bytes_tiled".to_string(), Json::Num(res_tiled as f64));
+            row.insert("resident_ratio".to_string(), Json::Num(ratio));
+            row.insert("bitwise_identical".to_string(), Json::Bool(bitwise));
+            rows.push(Json::Obj(row));
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "resident-bytes model: one-shot = 8·(2N² + 3NP), tiled = 8·(N² + NP + tile·(3P + N)) \
+         — transients beyond the shared O(NP) outputs; see docs/BACKENDS.md"
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("tiled_gram_builds".to_string()));
+    doc.insert("lambda".to_string(), Json::Num(lambda));
+    doc.insert("grid".to_string(), Json::Arr(rows));
+    let out_dir = std::env::var("FASTCV_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = format!("{out_dir}/BENCH_tiling.json");
+    match std::fs::write(&path, Json::Obj(doc).dump()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -53,13 +53,14 @@ impl SweepReport {
     /// TSV dump of raw per-rep rows.
     pub fn to_tsv(&self) -> String {
         let mut out = String::from(
-            "exp\tengine\tbackend\tthreads\tn\tp\tk\tc\tn_perm\trep\tt_std\tt_ana\trel_eff\tacc_std\tacc_ana\n",
+            "exp\tengine\tbackend\tthreads\ttile\tn\tp\tk\tc\tn_perm\trep\tt_std\tt_ana\trel_eff\tacc_std\tacc_ana\n",
         );
         for r in &self.results {
+            let tile = if r.tile.is_empty() { "off" } else { r.tile.as_str() };
             out.push_str(&format!(
-                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.6e}\t{:.4}\t{:.4}\t{:.4}\n",
-                r.exp_tag, r.engine, r.backend, r.threads.max(1), r.n, r.p, r.k, r.c, r.n_perm,
-                r.rep, r.t_std, r.t_ana, r.rel_eff(), r.acc_std, r.acc_ana
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.6e}\t{:.4}\t{:.4}\t{:.4}\n",
+                r.exp_tag, r.engine, r.backend, r.threads.max(1), tile, r.n, r.p, r.k, r.c,
+                r.n_perm, r.rep, r.t_std, r.t_ana, r.rel_eff(), r.acc_std, r.acc_ana
             ));
         }
         out
@@ -149,6 +150,8 @@ mod tests {
             exp_tag: "BinaryCv".into(),
             engine: "serial".into(),
             backend: "primal".into(),
+            threads: 1,
+            tile: "off".into(),
             n,
             p,
             k,

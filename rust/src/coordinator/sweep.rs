@@ -18,6 +18,7 @@ use crate::fastcv::perm_batch::{
     BatchStrategy,
 };
 use crate::fastcv::{ComputeContext, FoldCache};
+use crate::linalg::TilePolicy;
 use crate::model::lda_binary::signed_codes;
 use crate::model::Reg;
 use crate::util::rng::Rng;
@@ -131,6 +132,11 @@ pub struct SweepPoint {
     /// [`ComputeContext::borrowing`] if a future caller drives many tiny
     /// points in a tight loop.
     pub threads: usize,
+    /// [`TilePolicy`] for the analytic arm's `N×N` Gram builds/Cholesky
+    /// (`Off` = the historical one-shot kernels; tiled modes are
+    /// bit-identical, memory-bounded — the CLI's `--tile-rows` /
+    /// `--mem-budget`). Pure wall-clock/memory knob: accuracies never move.
+    pub tile: TilePolicy,
 }
 
 impl SweepPoint {
@@ -162,10 +168,16 @@ impl SweepPoint {
             format!("{base} [{}]", self.backend.tag())
         };
         // Pooled hat builds likewise change timing only.
-        if self.threads > 1 {
+        let base = if self.threads > 1 {
             format!("{base} [pool-t{}]", self.threads)
         } else {
             base
+        };
+        // Tiled builds change memory/timing only.
+        if self.tile.is_off() {
+            base
+        } else {
+            format!("{base} [{}]", self.tile.tag())
         }
     }
 
@@ -187,6 +199,9 @@ pub struct SweepResult {
     /// Analytic-arm hat-build pool width (1 = serial; `Default` yields 0,
     /// normalised to 1 by [`run_point`]).
     pub threads: usize,
+    /// Analytic-arm tile-policy tag (`off`, `tile-r64`, `tile-b256m`;
+    /// `Default` yields the empty string, normalised to `off` in the TSV).
+    pub tile: String,
     pub n: usize,
     pub p: usize,
     pub k: usize,
@@ -300,6 +315,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 engine: PermEngine::Serial,
                                 backend: GramBackend::Primal,
                                 threads: 1,
+                                tile: TilePolicy::Off,
                             });
                         }
                     }
@@ -323,6 +339,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 engine: PermEngine::Serial,
                                 backend: GramBackend::Primal,
                                 threads: 1,
+                                tile: TilePolicy::Off,
                             });
                         }
                     }
@@ -349,6 +366,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 engine: PermEngine::Serial,
                                 backend: GramBackend::Primal,
                                 threads: 1,
+                                tile: TilePolicy::Off,
                             });
                         }
                     }
@@ -372,6 +390,7 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
                                 engine: PermEngine::Serial,
                                 backend: GramBackend::Primal,
                                 threads: 1,
+                                tile: TilePolicy::Off,
                             });
                         }
                     }
@@ -414,11 +433,14 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
         n_perm: point.n_perm,
         rep: point.rep,
         threads: point.threads.max(1),
+        tile: point.tile.tag(),
         ..Default::default()
     };
     // Pool spawn happens outside the timed closures; with threads ≤ 1 no
     // pool exists and the context is free.
-    let ctx = ComputeContext::with_threads(point.threads).with_backend(point.backend);
+    let ctx = ComputeContext::with_threads(point.threads)
+        .with_backend(point.backend)
+        .with_tile_policy(point.tile);
 
     match point.exp {
         Experiment::BinaryCv => {
@@ -433,7 +455,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
             });
             let (ana_dv, t_ana) = timed(|| -> Result<Vec<f64>> {
                 let cv = AnalyticBinaryCv::fit_ctx(&ds.x, &y, point.lambda, &ctx)?;
-                let cache = FoldCache::prepare(&cv.hat, &folds, false)?;
+                let cache = FoldCache::prepare_pool(&cv.hat, &folds, false, ctx.pool())?;
                 Ok(cv.decision_values_cached(&cache))
             });
             result.t_std = t_std;
@@ -500,7 +522,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
                     point.lambda,
                     &ctx,
                 )?;
-                let cache = FoldCache::prepare(&cv.hat, &folds, true)?;
+                let cache = FoldCache::prepare_pool(&cv.hat, &folds, true, ctx.pool())?;
                 cv.predict_cached(&cache)
             });
             result.t_std = t_std;
@@ -598,9 +620,12 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
         n_perm: point.n_perm,
         rep: point.rep,
         threads: point.threads.max(1),
+        tile: point.tile.tag(),
         ..Default::default()
     };
-    let ctx = ComputeContext::with_threads(point.threads).with_backend(point.backend);
+    let ctx = ComputeContext::with_threads(point.threads)
+        .with_backend(point.backend)
+        .with_tile_policy(point.tile);
     let (ana_res, t_ana) = if point.exp == Experiment::BinaryPerm {
         timed(|| match point.engine.strategy() {
             None => analytic_binary_permutation_ctx(
@@ -686,6 +711,7 @@ mod tests {
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
             threads: 1,
+            tile: TilePolicy::Off,
         };
         let r = run_point(&point, 1234).unwrap();
         assert!(r.t_std > 0.0 && r.t_ana > 0.0);
@@ -708,6 +734,7 @@ mod tests {
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
             threads: 1,
+            tile: TilePolicy::Off,
         };
         let r = run_point(&point, 99).unwrap();
         assert!(
@@ -733,6 +760,7 @@ mod tests {
                 engine: PermEngine::Serial,
                 backend: GramBackend::Primal,
                 threads: 1,
+                tile: TilePolicy::Off,
             };
             let r = run_point(&point, 7).unwrap();
             assert!(r.t_std > 0.0 && r.t_ana > 0.0);
@@ -754,6 +782,7 @@ mod tests {
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
             threads: 1,
+            tile: TilePolicy::Off,
         };
         let batched = serial.with_engine(PermEngine::Batched { batch: 4, threads: 2 });
         let a = run_point(&serial, 7).unwrap();
@@ -796,6 +825,7 @@ mod tests {
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
             threads: 1,
+            tile: TilePolicy::Off,
         };
         let r_primal = run_point(&base, 11).unwrap();
         for backend in [GramBackend::Dual, GramBackend::Spectral, GramBackend::Auto] {
@@ -835,6 +865,7 @@ mod tests {
             engine: PermEngine::Serial,
             backend: GramBackend::Auto,
             threads: 1,
+            tile: TilePolicy::Off,
         };
         let serial = run_point(&base, 13).unwrap();
         let pooled_point = SweepPoint { threads: 4, ..base.clone() };
@@ -855,6 +886,52 @@ mod tests {
     }
 
     #[test]
+    fn tiled_sweep_point_accuracies_invariant_and_labelled() {
+        // `--tile-rows`/`--mem-budget` are memory/wall-clock knobs: a tiled
+        // point must report identical accuracies, and its label/TSV row
+        // must be tagged so the report aggregates it separately.
+        let base = SweepPoint {
+            exp: Experiment::BinaryCv,
+            n: 24,
+            p: 70,
+            k: 4,
+            c: 2,
+            n_perm: 0,
+            rep: 0,
+            lambda: 1.0,
+            engine: PermEngine::Serial,
+            backend: GramBackend::Auto,
+            threads: 1,
+            tile: TilePolicy::Off,
+        };
+        let off = run_point(&base, 17).unwrap();
+        assert_eq!(off.tile, "off");
+        assert!(!off.label.contains("tile"), "Off label stays bare: {}", off.label);
+        for tile in [TilePolicy::Rows(8), TilePolicy::Budget { bytes: 1 << 20 }] {
+            let point = SweepPoint { tile, ..base.clone() };
+            let r = run_point(&point, 17).unwrap();
+            assert_eq!(r.acc_ana, off.acc_ana, "{tile:?} accuracy moved");
+            assert_eq!(r.acc_std, off.acc_std);
+            assert_eq!(r.tile, tile.tag());
+            assert!(r.label.contains(&tile.tag()), "label untagged: {}", r.label);
+        }
+        // perm experiment reaches the tiled build through the ctx engines
+        let perm = SweepPoint {
+            exp: Experiment::BinaryPerm,
+            n_perm: 4,
+            backend: GramBackend::Dual,
+            ..base.clone()
+        };
+        let perm_tiled = SweepPoint { tile: TilePolicy::Rows(5), ..perm.clone() };
+        let a = run_point(&perm, 17).unwrap();
+        let b = run_point(&perm_tiled, 17).unwrap();
+        assert_eq!(a.acc_ana, b.acc_ana, "tiled perm arm accuracy moved");
+        let only = run_point_analytic_perm(&perm_tiled, 17).unwrap();
+        assert_eq!(only.acc_ana, a.acc_ana);
+        assert_eq!(only.tile, "tile-r5");
+    }
+
+    #[test]
     fn deterministic_given_seed() {
         let point = SweepPoint {
             exp: Experiment::BinaryCv,
@@ -868,6 +945,7 @@ mod tests {
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
             threads: 1,
+            tile: TilePolicy::Off,
         };
         let a = run_point(&point, 42).unwrap();
         let b = run_point(&point, 42).unwrap();

@@ -10,10 +10,18 @@
 //! * **Both** → [`LdaEnsemble`]: weak regularised-LDA learners on random
 //!   feature/sample subsets, majority-vote aggregation, trainable in
 //!   parallel.
+//!
+//! Every strategy has a `_ctx` entry point
+//! ([`StreamingHat::build_ctx`], [`SparseProjection::project_ctx`],
+//! [`LdaEnsemble::train_ctx`], [`projected_analytic_cv_ctx`]) taking a
+//! [`ComputeContext`], so `--threads` (and, for the dual streaming build,
+//! `--tile-rows`/`--mem-budget`) reaches every §4.5 mode; the historical
+//! signatures delegate with a serial context, bitwise-unchanged.
 
+use super::context::ComputeContext;
 use super::hat::GramBackend;
 use super::FoldCache;
-use crate::linalg::{matmul, matmul_pool, Cholesky, Lu, Mat};
+use crate::linalg::{gram_tiled, matmul, matmul_pool, Cholesky, Lu, Mat, TilePolicy};
 use crate::model::linreg::gram_ridged;
 use crate::model::Reg;
 use crate::util::rng::Rng;
@@ -29,9 +37,13 @@ use anyhow::{Context, Result};
 /// * **Dual** — stores `T_c = (K_c + λI)⁻¹ X_c` (`N×P`) and the column
 ///   means; fold blocks are `H_Te = (1/N)𝟙𝟙ᵀ + T_{c,Te} X_{c,Te}ᵀ` with
 ///   `X_c` rows re-centered on the fly from `xa`. Build cost
-///   `O(N²P + N³)` — the P ≫ N path. The build materialises `K_c`
-///   **transiently** (steady state stays `O(NP)`); out-of-core `K_c`
-///   tiling is a ROADMAP open item.
+///   `O(N²P + N³)` — the P ≫ N path. The build needs the `N×N` Gram
+///   transiently (steady state stays `O(NP)`); under a tiled
+///   [`ComputeContext`] ([`StreamingHat::build_ctx`]) it is assembled from
+///   `tile×P` centered slabs and factored **in place**, so beyond the one
+///   irreducible `N×N` factor and the `O(NP)` outputs every transient is
+///   tile-bounded (see `docs/BACKENDS.md` "Memory-bounded builds" and
+///   `BENCH_tiling.json` for the resident-bytes accounting).
 #[derive(Debug)]
 pub struct StreamingHat {
     /// Augmented design.
@@ -40,8 +52,16 @@ pub struct StreamingHat {
     pub t: Mat,
     /// Ridge used.
     pub lambda: f64,
+    /// The backend that actually built this hat — never `Auto`, and never
+    /// `Spectral`: a streaming hat serves a single λ, so a `Spectral`
+    /// request is **coerced to `Dual`** (recorded in
+    /// [`StreamingHat::backend_label`] so CLI/report output is never
+    /// mislabeled).
+    pub backend: GramBackend,
     /// Column means of `x` — present iff built through the dual backend.
     means: Option<Vec<f64>>,
+    /// Was a `Spectral` request coerced to `Dual`?
+    spectral_coerced: bool,
 }
 
 impl StreamingHat {
@@ -53,17 +73,55 @@ impl StreamingHat {
 
     /// Build through a chosen [`GramBackend`]. `Auto` resolves by the P/N
     /// ratio exactly like [`super::hat::GramBackend::resolve`]; `Spectral`
-    /// is treated as `Dual` (a streaming hat serves a single λ, so an
-    /// eigendecomposition buys nothing over one Cholesky).
+    /// is **coerced to `Dual`** (a streaming hat serves a single λ, so an
+    /// eigendecomposition buys nothing over one Cholesky) — the coercion
+    /// is recorded on the result: [`StreamingHat::backend`] reports `Dual`
+    /// and [`StreamingHat::backend_label`] spells out the coercion so a
+    /// `--backend spectral` streaming run is never silently mislabeled.
     pub fn build_with(
         x: &Mat,
         lambda: f64,
         backend: GramBackend,
         pool: Option<&ThreadPool>,
     ) -> Result<StreamingHat> {
+        Self::build_impl(x, lambda, backend, pool, TilePolicy::Off)
+    }
+
+    /// Build under a full [`ComputeContext`] — backend policy, pool
+    /// fan-out, and the context's [`TilePolicy`] for the dual arm's `K_c`
+    /// assembly + in-place blocked Cholesky. Bit-identical to
+    /// [`StreamingHat::build_with`] for any context.
+    ///
+    /// ```
+    /// use fastcv::fastcv::bigdata::StreamingHat;
+    /// use fastcv::fastcv::{ComputeContext, GramBackend};
+    /// use fastcv::linalg::{Mat, TilePolicy};
+    /// use fastcv::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(3);
+    /// let x = Mat::from_fn(20, 60, |_, _| rng.gauss());   // P ≫ N
+    /// let ctx = ComputeContext::with_threads(2)
+    ///     .with_backend(GramBackend::Auto)
+    ///     .with_tile_policy(TilePolicy::Rows(8));         // tile-bounded K_c
+    /// let hat = StreamingHat::build_ctx(&x, 0.5, &ctx).unwrap();
+    /// assert_eq!(hat.t.shape(), (20, 60));                // T_c is N×P
+    /// assert_eq!(hat.backend, GramBackend::Dual);         // Auto → dual (wide)
+    /// ```
+    pub fn build_ctx(x: &Mat, lambda: f64, ctx: &ComputeContext<'_>) -> Result<StreamingHat> {
+        Self::build_impl(x, lambda, ctx.backend(), ctx.pool(), ctx.tile_policy())
+    }
+
+    fn build_impl(
+        x: &Mat,
+        lambda: f64,
+        backend: GramBackend,
+        pool: Option<&ThreadPool>,
+        tile: TilePolicy,
+    ) -> Result<StreamingHat> {
         assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
         match backend.resolve(x.rows(), x.cols(), lambda) {
-            GramBackend::Dual | GramBackend::Spectral => Self::build_dual(x, lambda, pool),
+            GramBackend::Dual => Self::build_dual(x, lambda, pool, tile, false),
+            GramBackend::Spectral => Self::build_dual(x, lambda, pool, tile, true),
             _ => Self::build_primal(x, lambda),
         }
     }
@@ -77,28 +135,90 @@ impl StreamingHat {
             Err(_) => Lu::factor(&g).context("gram singular; increase λ")?.solve_mat(&xa.t()),
         };
         let t = w.t();
-        Ok(StreamingHat { xa, t, lambda, means: None })
+        Ok(StreamingHat {
+            xa,
+            t,
+            lambda,
+            backend: GramBackend::Primal,
+            means: None,
+            spectral_coerced: false,
+        })
     }
 
-    fn build_dual(x: &Mat, lambda: f64, pool: Option<&ThreadPool>) -> Result<StreamingHat> {
+    fn build_dual(
+        x: &Mat,
+        lambda: f64,
+        pool: Option<&ThreadPool>,
+        tile: TilePolicy,
+        spectral_coerced: bool,
+    ) -> Result<StreamingHat> {
         anyhow::ensure!(
             lambda > 0.0,
             "dual streaming backend requires ridge λ > 0 (K_c is always singular: K_c𝟙 = 0)"
         );
         let n = x.rows();
+        let p = x.cols();
         let xa = x.augment_ones();
         let means = x.col_means();
-        let xc = Mat::from_fn(n, x.cols(), |i, j| x[(i, j)] - means[j]);
-        // Transient N×N: K_c + λI, factored then discarded.
-        let mut kl = matmul_pool(&xc, &xc.t(), pool);
-        kl.symmetrize();
-        for i in 0..n {
-            kl[(i, i)] += lambda;
+        let t = match tile.tile_rows(n, p) {
+            // Historical one-shot path, bitwise-unchanged (TilePolicy::Off).
+            None => {
+                let xc = Mat::from_fn(n, p, |i, j| x[(i, j)] - means[j]);
+                // Transient N×N: K_c + λI, factored then discarded.
+                let mut kl = matmul_pool(&xc, &xc.t(), pool);
+                kl.symmetrize();
+                for i in 0..n {
+                    kl[(i, i)] += lambda;
+                }
+                let ch = Cholesky::factor(&kl)
+                    .context("centered dual Gram K_c + λI not SPD — is λ > 0?")?;
+                ch.solve_mat(&xc) // T_c = (K_c+λI)⁻¹ X_c, N×P
+            }
+            // Tiled path (bit-identical): K_c assembled from tile×P
+            // centered slabs — no full X_c copy, no P×N transpose — then
+            // factored in place (no second N×N) and solved directly into
+            // the centered buffer. Beyond the one N×N factor and the O(NP)
+            // steady state, every transient is tile-bounded.
+            Some(tile_rows) => {
+                // Same slab centering as `hat::centered_gram_tiled`, but
+                // reusing the `means` already computed above — no second
+                // O(NP) column-means sweep over X.
+                let mut kl = gram_tiled(
+                    n,
+                    tile_rows,
+                    |lo, hi| Mat::from_fn(hi - lo, p, |r, j| x[(lo + r, j)] - means[j]),
+                    pool,
+                );
+                for i in 0..n {
+                    kl[(i, i)] += lambda;
+                }
+                let ch = Cholesky::factor_into(kl, tile_rows, pool)
+                    .context("centered dual Gram K_c + λI not SPD — is λ > 0?")?;
+                let mut t = Mat::from_fn(n, p, |i, j| x[(i, j)] - means[j]);
+                ch.solve_mat_in_place(&mut t); // X_c buffer becomes T_c
+                t
+            }
+        };
+        Ok(StreamingHat {
+            xa,
+            t,
+            lambda,
+            backend: GramBackend::Dual,
+            means: Some(means),
+            spectral_coerced,
+        })
+    }
+
+    /// Human-readable backend label for reports/CLI: the resolved backend
+    /// tag, with the `Spectral` → `Dual` coercion spelled out so streaming
+    /// output built from a `--backend spectral` request is not mislabeled
+    /// as a spectral build.
+    pub fn backend_label(&self) -> String {
+        if self.spectral_coerced {
+            format!("{} (spectral coerced: streaming serves a single λ)", self.backend.tag())
+        } else {
+            self.backend.tag().to_string()
         }
-        let ch = Cholesky::factor(&kl)
-            .context("centered dual Gram K_c + λI not SPD — is λ > 0?")?;
-        let t = ch.solve_mat(&xc); // T_c = (K_c+λI)⁻¹ X_c, N×P
-        Ok(StreamingHat { xa, t, lambda, means: Some(means) })
     }
 
     /// Number of samples.
@@ -242,18 +362,49 @@ impl SparseProjection {
 
     /// Project a data matrix: `X A` (`N×P` → `N×Q`).
     pub fn project(&self, x: &Mat) -> Mat {
+        self.project_pool(x, None)
+    }
+
+    /// [`SparseProjection::project`] under a [`ComputeContext`]: output
+    /// rows are independent, so they fan out over the context's pool —
+    /// per-row arithmetic is untouched, making the pooled projection
+    /// bit-identical to the serial one (`--threads` now reaches the §4.5
+    /// "too many features" path).
+    pub fn project_ctx(&self, x: &Mat, ctx: &ComputeContext<'_>) -> Mat {
+        self.project_pool(x, ctx.pool())
+    }
+
+    /// [`SparseProjection::project`] with an explicit optional pool.
+    pub fn project_pool(&self, x: &Mat, pool: Option<&ThreadPool>) -> Mat {
         assert_eq!(x.cols(), self.p, "projection dimension mismatch");
-        let mut out = Mat::zeros(x.rows(), self.q);
-        for i in 0..x.rows() {
-            let row = x.row(i);
-            let orow = out.row_mut(i);
-            for (j, o) in orow.iter_mut().enumerate() {
-                let mut acc = 0.0f64;
-                for &(pi, sign) in &self.entries[self.col_ptr[j]..self.col_ptr[j + 1]] {
-                    acc += sign as f64 * row[pi as usize];
+        let n = x.rows();
+        let q = self.q;
+        let mut out = Mat::zeros(n, q);
+        let project_rows = |lo: usize, rows: &mut [f64]| {
+            for (r, orow) in rows.chunks_mut(q).enumerate() {
+                let row = x.row(lo + r);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for &(pi, sign) in &self.entries[self.col_ptr[j]..self.col_ptr[j + 1]] {
+                        acc += sign as f64 * row[pi as usize];
+                    }
+                    *o = acc * self.scale;
                 }
-                *o = acc * self.scale;
             }
+        };
+        match pool {
+            Some(pool) if pool.size() > 1 && n >= 2 && q > 0 => {
+                let band_rows = n.div_ceil((pool.size() * 4).min(n));
+                let project_rows = &project_rows;
+                let jobs: Vec<_> = out
+                    .as_mut_slice()
+                    .chunks_mut(band_rows * q)
+                    .enumerate()
+                    .map(|(b, band)| move || project_rows(b * band_rows, band))
+                    .collect();
+                pool.scope(jobs);
+            }
+            _ => project_rows(0, out.as_mut_slice()),
         }
         out
     }
@@ -266,8 +417,28 @@ pub struct LdaEnsemble {
 }
 
 impl LdaEnsemble {
+    /// [`LdaEnsemble::train`] under a [`ComputeContext`] — members train in
+    /// parallel on the context's pool; subset draws are consumed from `rng`
+    /// *before* any training starts, so the ensemble is identical for any
+    /// thread count (`--threads` now reaches the §4.5 "both too large"
+    /// path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_ctx(
+        x: &Mat,
+        labels: &[usize],
+        n_members: usize,
+        feat_frac: f64,
+        sample_frac: f64,
+        reg: Reg,
+        ctx: &ComputeContext<'_>,
+        rng: &mut Rng,
+    ) -> Result<LdaEnsemble> {
+        Self::train(x, labels, n_members, feat_frac, sample_frac, reg, ctx.pool(), rng)
+    }
+
     /// Train `n_members` weak learners, each on `feat_frac` of the features
     /// and `sample_frac` of the samples, optionally in parallel on `pool`.
+    #[allow(clippy::too_many_arguments)]
     pub fn train(
         x: &Mat,
         labels: &[usize],
@@ -364,7 +535,8 @@ impl LdaEnsemble {
 }
 
 /// Analytic CV on randomly projected data: the §4.5 "too many features"
-/// pipeline in one call.
+/// pipeline in one call. The historical entry point — primal hat, serial;
+/// see [`projected_analytic_cv_ctx`] for the pooled/backended form.
 pub fn projected_analytic_cv(
     x: &Mat,
     y: &[f64],
@@ -373,10 +545,53 @@ pub fn projected_analytic_cv(
     lambda: f64,
     rng: &mut Rng,
 ) -> Result<Vec<f64>> {
+    // Primal, serial: exactly the historical float path.
+    projected_analytic_cv_ctx(
+        x,
+        y,
+        folds,
+        q,
+        lambda,
+        rng,
+        &ComputeContext::serial().with_backend(GramBackend::Primal),
+    )
+}
+
+/// [`projected_analytic_cv`] under a [`ComputeContext`]: the projection's
+/// row loop, the hat build on the projected data, and the per-fold LU
+/// factors all fan out over the context's pool (bit-identically —
+/// `--threads` now reaches the whole §4.5 projection pipeline), and the
+/// context's backend/tile knobs govern the hat on `XA`.
+///
+/// ```
+/// use fastcv::cv::folds::kfold;
+/// use fastcv::fastcv::bigdata::projected_analytic_cv_ctx;
+/// use fastcv::fastcv::ComputeContext;
+/// use fastcv::linalg::Mat;
+/// use fastcv::util::rng::Rng;
+///
+/// let mut rng = Rng::new(11);
+/// let x = Mat::from_fn(30, 400, |_, _| rng.gauss());   // P ≫ N
+/// let y: Vec<f64> = (0..30).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+/// let folds = kfold(30, 3, &mut rng);
+/// let ctx = ComputeContext::with_threads(2);
+/// let dv = projected_analytic_cv_ctx(&x, &y, &folds, 50, 1.0, &mut rng, &ctx).unwrap();
+/// assert_eq!(dv.len(), 30);
+/// assert!(dv.iter().all(|v| v.is_finite()));
+/// ```
+pub fn projected_analytic_cv_ctx(
+    x: &Mat,
+    y: &[f64],
+    folds: &[Vec<usize>],
+    q: usize,
+    lambda: f64,
+    rng: &mut Rng,
+    ctx: &ComputeContext<'_>,
+) -> Result<Vec<f64>> {
     let proj = SparseProjection::sample(x.cols(), q, rng);
-    let xq = proj.project(x);
-    let cv = super::binary::AnalyticBinaryCv::fit(&xq, y, lambda)?;
-    let cache = FoldCache::prepare(&cv.hat, folds, false)?;
+    let xq = proj.project_ctx(x, ctx);
+    let cv = super::binary::AnalyticBinaryCv::fit_ctx(&xq, y, lambda, ctx)?;
+    let cache = FoldCache::prepare_pool(&cv.hat, folds, false, ctx.pool())?;
     Ok(cv.decision_values_cached(&cache))
 }
 
@@ -448,6 +663,150 @@ mod tests {
         let dual_pooled =
             StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, Some(&pool)).unwrap();
         assert_eq!(dual.t.as_slice(), dual_pooled.t.as_slice());
+    }
+
+    #[test]
+    fn tiled_streaming_dual_bitwise_matches_untiled_across_tile_sizes() {
+        // Acceptance: the tiled dual streaming build — slab-assembled K_c,
+        // in-place blocked Cholesky, in-place solve — reproduces the
+        // one-shot build to the last bit across tile heights {1, 7, N, N+3}
+        // (remainder panel included), serial and pooled.
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(19);
+        let n = 26;
+        let ds = generate(&SyntheticSpec::binary(n, 80), &mut rng);
+        let y = ds.y_signed();
+        let folds = kfold(n, 4, &mut rng);
+        let lambda = 0.7;
+        let reference = StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, None).unwrap();
+        let dv_ref = reference.decision_values(&y, &folds).unwrap();
+        for tile in [1usize, 7, n, n + 3] {
+            for threads in [1usize, 4] {
+                let ctx = ComputeContext::with_threads(threads)
+                    .with_backend(GramBackend::Dual)
+                    .with_tile_policy(TilePolicy::Rows(tile));
+                let tiled = StreamingHat::build_ctx(&ds.x, lambda, &ctx).unwrap();
+                assert_eq!(
+                    reference.t.as_slice(),
+                    tiled.t.as_slice(),
+                    "T_c moved (tile={tile} threads={threads})"
+                );
+                assert_eq!(tiled.backend, GramBackend::Dual);
+                let dv = tiled.decision_values(&y, &folds).unwrap();
+                for (a, b) in dv_ref.iter().zip(&dv) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "dvals moved (tile={tile})");
+                }
+            }
+        }
+        // Budget policy engages and stays bitwise too.
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Dual)
+            .with_tile_policy(TilePolicy::Budget { bytes: 32 << 10 });
+        let budget = StreamingHat::build_ctx(&ds.x, lambda, &ctx).unwrap();
+        assert_eq!(reference.t.as_slice(), budget.t.as_slice());
+        // …and an Off context reproduces build_with exactly (bitwise).
+        let off = StreamingHat::build_ctx(
+            &ds.x,
+            lambda,
+            &ComputeContext::serial().with_backend(GramBackend::Dual),
+        )
+        .unwrap();
+        assert_eq!(reference.t.as_slice(), off.t.as_slice());
+    }
+
+    #[test]
+    fn streaming_spectral_request_is_coerced_to_dual_and_labelled() {
+        // Small-fix satellite: a `--backend spectral` streaming build runs
+        // the dual path — that was always the behaviour, but it was silent.
+        // Pin it: the resolved backend reports Dual, the label path spells
+        // out the coercion, and the numbers equal an explicit Dual build.
+        let mut rng = Rng::new(20);
+        let ds = generate(&SyntheticSpec::binary(18, 50), &mut rng);
+        let spectral =
+            StreamingHat::build_with(&ds.x, 0.9, GramBackend::Spectral, None).unwrap();
+        assert_eq!(spectral.backend, GramBackend::Dual, "Spectral must coerce to Dual");
+        assert!(
+            spectral.backend_label().contains("spectral coerced"),
+            "coercion missing from label: {}",
+            spectral.backend_label()
+        );
+        assert!(spectral.backend_label().starts_with("dual"), "{}", spectral.backend_label());
+        let dual = StreamingHat::build_with(&ds.x, 0.9, GramBackend::Dual, None).unwrap();
+        assert_eq!(spectral.t.as_slice(), dual.t.as_slice(), "coerced build must equal dual");
+        assert_eq!(dual.backend_label(), "dual", "no coercion note on a genuine dual build");
+        // the primal/auto paths stay plainly labelled
+        let primal = StreamingHat::build(&ds.x, 0.9).unwrap();
+        assert_eq!(primal.backend, GramBackend::Primal);
+        assert_eq!(primal.backend_label(), "primal");
+    }
+
+    #[test]
+    fn backend_pool_project_ctx_bitwise_matches_serial() {
+        // Row fan-out of the sparse projection is a pure wall-clock knob.
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(21);
+        let (p, q) = (300, 40);
+        let proj = SparseProjection::sample(p, q, &mut rng);
+        let x = Mat::from_fn(37, p, |_, _| rng.gauss());
+        let serial = proj.project(&x);
+        let ctx = ComputeContext::with_threads(4);
+        let pooled = proj.project_ctx(&x, &ctx);
+        assert_eq!(serial.as_slice(), pooled.as_slice());
+        // serial ctx falls back to the serial kernel
+        let none = proj.project_ctx(&x, &ComputeContext::serial());
+        assert_eq!(serial.as_slice(), none.as_slice());
+    }
+
+    #[test]
+    fn backend_pool_projected_cv_and_ensemble_ctx_match_historical() {
+        // The ported §4.5 entry points: historical signatures delegate with
+        // a serial context (bitwise), and a pooled context changes nothing.
+        use crate::fastcv::ComputeContext;
+        let mut rng_a = Rng::new(22);
+        let mut rng_b = Rng::new(22);
+        let mut rng_c = Rng::new(22);
+        let ds = generate(&SyntheticSpec::binary(40, 200), &mut Rng::new(5));
+        let y = ds.y_signed();
+        let folds = kfold(40, 4, &mut Rng::new(6));
+        let historical = projected_analytic_cv(&ds.x, &y, &folds, 60, 1.0, &mut rng_a).unwrap();
+        let serial_ctx = projected_analytic_cv_ctx(
+            &ds.x,
+            &y,
+            &folds,
+            60,
+            1.0,
+            &mut rng_b,
+            &ComputeContext::serial().with_backend(GramBackend::Primal),
+        )
+        .unwrap();
+        let pooled_ctx = projected_analytic_cv_ctx(
+            &ds.x,
+            &y,
+            &folds,
+            60,
+            1.0,
+            &mut rng_c,
+            &ComputeContext::with_threads(4).with_backend(GramBackend::Primal),
+        )
+        .unwrap();
+        for ((a, b), c) in historical.iter().zip(&serial_ctx).zip(&pooled_ctx) {
+            assert_eq!(a.to_bits(), b.to_bits(), "serial ctx moved the projected CV");
+            assert_eq!(a.to_bits(), c.to_bits(), "pooled ctx moved the projected CV");
+        }
+        // ensemble: train_ctx(pooled) == train(serial) member-for-member
+        let mut rng_d = Rng::new(23);
+        let mut rng_e = Rng::new(23);
+        let ds2 = generate(&SyntheticSpec::binary(60, 30), &mut Rng::new(7));
+        let serial = LdaEnsemble::train(
+            &ds2.x, &ds2.labels, 9, 0.4, 0.6, Reg::Ridge(1.0), None, &mut rng_d,
+        )
+        .unwrap();
+        let ctx = ComputeContext::with_threads(3);
+        let pooled = LdaEnsemble::train_ctx(
+            &ds2.x, &ds2.labels, 9, 0.4, 0.6, Reg::Ridge(1.0), &ctx, &mut rng_e,
+        )
+        .unwrap();
+        assert_eq!(serial.predict(&ds2.x), pooled.predict(&ds2.x));
     }
 
     #[test]

@@ -53,9 +53,10 @@ impl AnalyticBinaryCv {
     }
 
     /// [`Self::fit`] under a [`ComputeContext`]: the context's backend
-    /// picks the Gram construction and its pool (if any) fans out the hat
-    /// build's GEMMs. A pooled context is bit-identical to a serial one —
-    /// the pool is a pure wall-clock knob.
+    /// picks the Gram construction, its pool (if any) fans out the hat
+    /// build's GEMMs, and its [`crate::linalg::TilePolicy`] bounds the dual
+    /// `K_c` build's transients. Pooled and tiled contexts are bit-identical
+    /// to a serial one — both are pure wall-clock/memory knobs.
     pub fn fit_ctx(
         x: &Mat,
         y: &[f64],
@@ -63,7 +64,7 @@ impl AnalyticBinaryCv {
         ctx: &ComputeContext<'_>,
     ) -> Result<AnalyticBinaryCv> {
         assert_eq!(x.rows(), y.len(), "response length mismatch");
-        let hat = HatMatrix::build_with(x, lambda, ctx.backend(), ctx.pool())?;
+        let hat = HatMatrix::build_ctx(x, lambda, ctx)?;
         let y_hat = hat.fit_response(y);
         Ok(AnalyticBinaryCv { hat, y: y.to_vec(), y_hat })
     }

@@ -15,7 +15,11 @@
 //! * cache-reuse knobs — currently
 //!   [`ComputeContext::with_nested_sharing`], which lets
 //!   [`crate::fastcv::lambda_search::nested_cv_ctx`] share one full-data
-//!   Gram across all outer folds via the Eq. 9–12-style downdate.
+//!   Gram across all outer folds via the Eq. 9–12-style downdate;
+//! * a [`TilePolicy`] for the `N×N` Gram builds and their Cholesky —
+//!   `Off` (default) keeps the historical one-shot kernels bitwise, the
+//!   tiled modes bound transient slabs for the §4.5 big-data regime (see
+//!   [`crate::linalg::tiled`]).
 //!
 //! ## Determinism
 //!
@@ -29,6 +33,7 @@
 //! float path (agreement is tested at tolerance, not bitwise).
 
 use super::hat::GramBackend;
+use crate::linalg::TilePolicy;
 use crate::util::threadpool::ThreadPool;
 
 /// An owned-or-borrowed pool handle.
@@ -48,6 +53,7 @@ pub struct ComputeContext<'p> {
     pool: Option<PoolRef<'p>>,
     backend: GramBackend,
     nested_sharing: bool,
+    tile_policy: TilePolicy,
 }
 
 impl std::fmt::Debug for ComputeContext<'_> {
@@ -56,6 +62,7 @@ impl std::fmt::Debug for ComputeContext<'_> {
             .field("threads", &self.threads())
             .field("backend", &self.backend)
             .field("nested_sharing", &self.nested_sharing)
+            .field("tile_policy", &self.tile_policy)
             .finish()
     }
 }
@@ -93,9 +100,26 @@ impl<'p> ComputeContext<'p> {
         self
     }
 
+    /// Set the [`TilePolicy`] for the `N×N` Gram builds and their Cholesky
+    /// (builder style). [`TilePolicy::Off`] — the default — keeps the
+    /// historical one-shot kernels; the tiled modes are **bit-identical**
+    /// to them (`tiled_*` property tests) but bound every transient slab
+    /// beyond the factor itself to `O(tile)` rows — the §4.5 memory-bounded
+    /// regime. Surfaced on the CLI as `--tile-rows` / `--mem-budget`.
+    pub fn with_tile_policy(mut self, tile: TilePolicy) -> Self {
+        self.tile_policy = tile;
+        self
+    }
+
     /// The Gram backend policy.
     pub fn backend(&self) -> GramBackend {
         self.backend
+    }
+
+    /// The tiling policy for `N×N` Gram builds ([`TilePolicy::Off`] by
+    /// default).
+    pub fn tile_policy(&self) -> TilePolicy {
+        self.tile_policy
     }
 
     /// Whether nested CV may share one full-data Gram across outer folds.
@@ -152,10 +176,19 @@ mod tests {
     fn builder_knobs() {
         let ctx = ComputeContext::serial()
             .with_backend(GramBackend::Spectral)
-            .with_nested_sharing(true);
+            .with_nested_sharing(true)
+            .with_tile_policy(TilePolicy::Rows(32));
         assert_eq!(ctx.backend(), GramBackend::Spectral);
         assert!(ctx.nested_sharing());
+        assert_eq!(ctx.tile_policy(), TilePolicy::Rows(32));
         let dbg = format!("{ctx:?}");
         assert!(dbg.contains("Spectral"), "{dbg}");
+        assert!(dbg.contains("Rows"), "{dbg}");
+    }
+
+    #[test]
+    fn tiled_default_context_tiling_is_off() {
+        assert!(ComputeContext::serial().tile_policy().is_off());
+        assert!(ComputeContext::with_threads(2).tile_policy().is_off());
     }
 }

@@ -46,12 +46,19 @@
 //! ([`crate::linalg::matmul_pool`], [`crate::linalg::syrk_t_pool`]), so
 //! pooling never changes a result.
 
+use super::context::ComputeContext;
 use crate::linalg::{
-    matmul, matmul_pool, matvec_gemm_order, sym_eig, syrk_t_pool, Cholesky, Lu, Mat, SymEig,
+    gram_tiled, matmul, matmul_pool, matvec_gemm_order, sym_eig, syrk_t_pool, Cholesky, Lu, Mat,
+    SymEig, TilePolicy,
 };
 use crate::model::linreg::gram_ridged;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Context, Result};
+
+/// Panel width for the pooled per-λ `K_c + λI` Cholesky when no explicit
+/// tile height is in force (the factor is `N×N`, so any fixed panel works;
+/// the value only shapes the pool fan-out granularity).
+const CHOL_PANEL: usize = 64;
 
 /// Which construction of the hat matrix to use. `Auto` picks by the P/N
 /// ratio: `Dual` when `λ > 0` and `P > N`, `Primal` otherwise (λ-grid
@@ -206,6 +213,22 @@ impl GramCache {
     /// }
     /// ```
     pub fn build(x: &Mat, backend: GramBackend, pool: Option<&ThreadPool>) -> GramCache {
+        Self::build_tiled(x, backend, pool, TilePolicy::Off)
+    }
+
+    /// [`GramCache::build`] under a [`TilePolicy`]: with tiling on, the
+    /// dual/spectral `K_c` is assembled from `tile×P` centered slabs
+    /// ([`crate::linalg::gram_tiled`]) instead of a full `O(NP)` centered
+    /// copy plus its transpose — bit-identical output, tile-bounded
+    /// transients. [`TilePolicy::Off`] reproduces the one-shot build
+    /// verbatim. The primal arm is untouched by tiling (its Gram is
+    /// `(P+1)²` over the raw design; there is no `N×N` to bound).
+    pub fn build_tiled(
+        x: &Mat,
+        backend: GramBackend,
+        pool: Option<&ThreadPool>,
+        tile: TilePolicy,
+    ) -> GramCache {
         let backend = match backend {
             GramBackend::Auto => backend.resolve_for_grid(x.rows(), x.cols(), 2),
             other => other,
@@ -218,11 +241,14 @@ impl GramCache {
             }
             GramBackend::Dual => {
                 let xa = x.augment_ones();
-                let kc = centered_gram(x, pool);
+                let kc = match tile.tile_rows(x.rows(), x.cols()) {
+                    None => centered_gram(x, pool),
+                    Some(t) => centered_gram_tiled(x, t, pool),
+                };
                 GramCache::Dual { xa, kc }
             }
             GramBackend::Spectral | GramBackend::Auto => {
-                GramCache::Spectral(SpectralGram::build(x, pool))
+                GramCache::Spectral(SpectralGram::build_tiled(x, pool, tile))
             }
         }
     }
@@ -245,6 +271,20 @@ impl GramCache {
     /// `pool`. Bit-identical to the serial [`GramCache::hat`] for any pool
     /// size ([`crate::linalg::matmul_pool`]'s contract).
     pub fn hat_pool(&self, lambda: f64, pool: Option<&ThreadPool>) -> Result<HatMatrix> {
+        self.hat_pool_tiled(lambda, pool, TilePolicy::Off)
+    }
+
+    /// [`GramCache::hat_pool`] under a [`TilePolicy`]: the dual arm's per-λ
+    /// `K_c + λI` Cholesky goes through the panel-blocked, pool-parallel
+    /// [`Cholesky::factor_into`] — in place (no second `N×N`), with the
+    /// panel updates fanned out over `pool`. Bit-identical to the serial
+    /// factor for any tile/pool combination (the `tiled_*` contract).
+    pub fn hat_pool_tiled(
+        &self,
+        lambda: f64,
+        pool: Option<&ThreadPool>,
+        tile: TilePolicy,
+    ) -> Result<HatMatrix> {
         assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
         match self {
             GramCache::Primal { xa, g0 } => {
@@ -264,8 +304,13 @@ impl GramCache {
                 for i in 0..n {
                     kl[(i, i)] += lambda;
                 }
-                let ch = Cholesky::factor(&kl)
-                    .context("centered dual Gram K_c + λI not SPD — is λ > 0?")?;
+                let panel = tile.tile_rows(n, n);
+                let ch = if panel.is_none() && pool.is_none() {
+                    Cholesky::factor(&kl)
+                } else {
+                    Cholesky::factor_into(kl, panel.unwrap_or(CHOL_PANEL), pool)
+                }
+                .context("centered dual Gram K_c + λI not SPD — is λ > 0?")?;
                 // H = (1/N)𝟙𝟙ᵀ + (K_c + λI)⁻¹ K_c  (symmetric: both terms
                 // are functions of K_c).
                 let mut h = ch.solve_mat(kc);
@@ -301,6 +346,23 @@ fn centered_gram(x: &Mat, pool: Option<&ThreadPool>) -> Mat {
     kc
 }
 
+/// [`centered_gram`] through the tiled engine: centered `tile×P` row slabs
+/// are materialised on demand (never the full `X_c` copy or its `P×N`
+/// transpose), the upper block triangle fans out over `pool`, and the
+/// result is bit-identical to the one-shot build
+/// ([`crate::linalg::gram_tiled`]'s contract — the per-slab centering
+/// performs the exact subtraction the full `X_c` copy would).
+pub(crate) fn centered_gram_tiled(x: &Mat, tile: usize, pool: Option<&ThreadPool>) -> Mat {
+    let means = x.col_means();
+    let p = x.cols();
+    gram_tiled(
+        x.rows(),
+        tile,
+        |lo, hi| Mat::from_fn(hi - lo, p, |r, j| x[(lo + r, j)] - means[j]),
+        pool,
+    )
+}
+
 /// One symmetric eigendecomposition of the centered Gram `K_c`, from which
 /// the hat matrix of **every** ridge value follows by a diagonal rescale:
 /// `H(λ) = (1/N)𝟙𝟙ᵀ + U diag(dᵢ/(dᵢ+λ)) Uᵀ`. This is what lets
@@ -320,8 +382,20 @@ impl SpectralGram {
     /// Center `x`, form `K_c` (pool-parallel when given) and
     /// eigendecompose it — the one-off `O(N²P + N³)` cost every λ shares.
     pub fn build(x: &Mat, pool: Option<&ThreadPool>) -> SpectralGram {
+        Self::build_tiled(x, pool, TilePolicy::Off)
+    }
+
+    /// [`SpectralGram::build`] under a [`TilePolicy`]: the `K_c` assembly
+    /// goes through the tile-bounded engine (bit-identical; see
+    /// [`GramCache::build_tiled`]). The eigendecomposition itself is dense
+    /// `N×N` either way — spectral reuse is for λ *grids*, where that
+    /// one-off cost is the point.
+    pub fn build_tiled(x: &Mat, pool: Option<&ThreadPool>, tile: TilePolicy) -> SpectralGram {
         let xa = x.augment_ones();
-        let kc = centered_gram(x, pool);
+        let kc = match tile.tile_rows(x.rows(), x.cols()) {
+            None => centered_gram(x, pool),
+            Some(t) => centered_gram_tiled(x, t, pool),
+        };
         let SymEig { values, vectors } = sym_eig(&kc);
         // K_c is PSD; tiny negative eigenvalues are roundoff and would put
         // d/(d+λ) on the wrong side of 0 — clamp.
@@ -412,8 +486,29 @@ impl SharedNestedGram {
     /// One `O(N²P)` Gram build (pool-parallel when given) for the whole
     /// nested CV.
     pub fn build(x: &Mat, pool: Option<&ThreadPool>) -> SharedNestedGram {
-        let mut k = matmul_pool(x, &x.t(), pool);
-        k.symmetrize();
+        Self::build_tiled(x, pool, TilePolicy::Off)
+    }
+
+    /// [`SharedNestedGram::build`] under a [`TilePolicy`]: the full `XXᵀ`
+    /// is assembled from raw `tile×P` row slabs — no `P×N` transpose copy —
+    /// bit-identical to the one-shot build (the tiled engine's contract).
+    pub fn build_tiled(x: &Mat, pool: Option<&ThreadPool>, tile: TilePolicy) -> SharedNestedGram {
+        let k = match tile.tile_rows(x.rows(), x.cols()) {
+            None => {
+                let mut k = matmul_pool(x, &x.t(), pool);
+                k.symmetrize();
+                k
+            }
+            Some(t) => {
+                let p = x.cols();
+                gram_tiled(
+                    x.rows(),
+                    t,
+                    |lo, hi| Mat::from_fn(hi - lo, p, |r, j| x[(lo + r, j)]),
+                    pool,
+                )
+            }
+        };
         SharedNestedGram { k }
     }
 
@@ -422,19 +517,39 @@ impl SharedNestedGram {
         self.k.rows()
     }
 
+    /// One outer fold's centered training Gram `K_c^{Tr}` by the Eq. 9–12
+    /// style downdate: select `K[Tr,Tr]`, double-center in `O(N_tr²)` — no
+    /// `O(N_tr²P)` feature-side rebuild.
+    fn fold_gram(&self, tr: &[usize]) -> Mat {
+        let m = tr.len();
+        let kt = self.k.take(tr, tr);
+        let row_means: Vec<f64> = (0..m).map(|i| kt.row(i).iter().sum::<f64>() / m as f64).collect();
+        let grand = row_means.iter().sum::<f64>() / m as f64;
+        Mat::from_fn(m, m, |i, j| kt[(i, j)] - row_means[i] - row_means[j] + grand)
+    }
+
     /// The spectral cache for one outer fold's training set: select
     /// `K[Tr,Tr]`, double-center it, eigendecompose. `x_tr` must be the
     /// matching training rows of the data (only used to carry the augmented
     /// design into the produced hats — no `O(N_tr²P)` Gram rebuild).
     pub fn fold_spectral(&self, x_tr: &Mat, tr: &[usize]) -> SpectralGram {
         assert_eq!(x_tr.rows(), tr.len(), "x_tr rows must match the training index set");
-        let m = tr.len();
-        let kt = self.k.take(tr, tr);
-        let row_means: Vec<f64> = (0..m).map(|i| kt.row(i).iter().sum::<f64>() / m as f64).collect();
-        let grand = row_means.iter().sum::<f64>() / m as f64;
-        let kc = Mat::from_fn(m, m, |i, j| kt[(i, j)] - row_means[i] - row_means[j] + grand);
+        let kc = self.fold_gram(tr);
         let SymEig { values, vectors } = sym_eig(&kc);
         SpectralGram::from_parts(x_tr.augment_ones(), values, vectors)
+    }
+
+    /// The **dual** cache for one outer fold's training set — the
+    /// single-positive-λ sibling of [`SharedNestedGram::fold_spectral`]:
+    /// the same downdated `K_c^{Tr}`, but served as a [`GramCache::Dual`]
+    /// so the fold pays one Cholesky instead of an eigendecomposition.
+    /// This is what lets [`crate::fastcv::lambda_search::nested_cv_ctx`]
+    /// share the full-data Gram on wide shapes whose grid has exactly one
+    /// positive candidate (where [`GramBackend::resolve_for_grid`] picks
+    /// `Dual`, not `Spectral`).
+    pub fn fold_dual(&self, x_tr: &Mat, tr: &[usize]) -> GramCache {
+        assert_eq!(x_tr.rows(), tr.len(), "x_tr rows must match the training index set");
+        GramCache::Dual { xa: x_tr.augment_ones(), kc: self.fold_gram(tr) }
     }
 }
 
@@ -494,6 +609,19 @@ impl HatMatrix {
         assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
         let resolved = backend.resolve(x.rows(), x.cols(), lambda);
         GramCache::build(x, resolved, pool).hat_pool(lambda, pool)
+    }
+
+    /// Build under a full [`ComputeContext`]: backend policy, pool fan-out,
+    /// **and** the context's [`TilePolicy`] — with tiling on, the dual
+    /// `K_c` assembly and its Cholesky stay tile-bounded/in-place
+    /// ([`GramCache::build_tiled`], [`GramCache::hat_pool_tiled`]).
+    /// Bit-identical to [`HatMatrix::build_with`] for any context (the
+    /// pool and tile knobs never move a float).
+    pub fn build_ctx(x: &Mat, lambda: f64, ctx: &ComputeContext<'_>) -> Result<HatMatrix> {
+        assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
+        let resolved = ctx.backend().resolve(x.rows(), x.cols(), lambda);
+        GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy())
+            .hat_pool_tiled(lambda, ctx.pool(), ctx.tile_policy())
     }
 
     /// Explicit inverse gram `S = (X̃ᵀX̃ + λI₀)⁻¹` — off the hot path; used
@@ -828,6 +956,133 @@ mod tests {
                 h_down.max_abs_diff(&h_primal) < 1e-7 * scale,
                 "λ={lambda} vs primal: |ΔH| = {}",
                 h_down.max_abs_diff(&h_primal)
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_gram_cache_bitwise_matches_untiled_across_tile_sizes() {
+        // Acceptance: the tiled K_c build reproduces the one-shot build to
+        // the last bit across tile heights {1, 7, N, N+3} (remainder panel
+        // included), serial and pooled — and the hats that follow are
+        // bitwise equal too.
+        let mut rng = Rng::new(61);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let n = 26;
+        let x = random_x(&mut rng, n, 90);
+        let reference = GramCache::build(&x, GramBackend::Dual, None);
+        let GramCache::Dual { kc: kc_ref, .. } = &reference else { unreachable!() };
+        for t in [1usize, 7, n, n + 3] {
+            for pool_opt in [None, Some(&pool)] {
+                let tiled =
+                    GramCache::build_tiled(&x, GramBackend::Dual, pool_opt, TilePolicy::Rows(t));
+                let GramCache::Dual { kc, .. } = &tiled else { unreachable!() };
+                assert_eq!(kc.as_slice(), kc_ref.as_slice(), "K_c moved (tile={t})");
+                for lambda in [0.3, 5.0] {
+                    let h_ref = reference.hat(lambda).unwrap();
+                    let h_tiled =
+                        tiled.hat_pool_tiled(lambda, pool_opt, TilePolicy::Rows(t)).unwrap();
+                    assert_eq!(
+                        h_ref.h.as_slice(),
+                        h_tiled.h.as_slice(),
+                        "hat moved (tile={t} λ={lambda})"
+                    );
+                }
+            }
+        }
+        // Budget policy resolves to some tile and stays bitwise too.
+        let budget = TilePolicy::Budget { bytes: 64 << 10 };
+        assert!(budget.tile_rows(n, 90).is_some());
+        let tiled = GramCache::build_tiled(&x, GramBackend::Dual, Some(&pool), budget);
+        let GramCache::Dual { kc, .. } = &tiled else { unreachable!() };
+        assert_eq!(kc.as_slice(), kc_ref.as_slice(), "budget-tiled K_c moved");
+    }
+
+    #[test]
+    fn tiled_policy_off_reproduces_todays_gram_cache_hats() {
+        // Acceptance: TilePolicy::Off is the historical path, bitwise — for
+        // every backend arm of the cache.
+        let mut rng = Rng::new(62);
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        for &(n, p) in &[(30usize, 12usize), (14, 50)] {
+            let x = random_x(&mut rng, n, p);
+            for backend in [GramBackend::Primal, GramBackend::Dual, GramBackend::Spectral] {
+                if backend != GramBackend::Primal && p < n {
+                    continue;
+                }
+                let today = GramCache::build(&x, backend, None);
+                let off = GramCache::build_tiled(&x, backend, None, TilePolicy::Off);
+                for lambda in [0.4, 8.0] {
+                    let a = today.hat(lambda).unwrap();
+                    let b = off.hat_pool_tiled(lambda, None, TilePolicy::Off).unwrap();
+                    assert_eq!(a.h.as_slice(), b.h.as_slice(), "{backend:?} λ={lambda}");
+                    // pooled Off too (the pooled in-place Cholesky is
+                    // bit-identical to the serial factor)
+                    let c = off.hat_pool_tiled(lambda, Some(&pool), TilePolicy::Off).unwrap();
+                    assert_eq!(a.h.as_slice(), c.h.as_slice(), "{backend:?} pooled λ={lambda}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_spectral_and_shared_nested_builds_bitwise_match() {
+        let mut rng = Rng::new(63);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        let n = 21;
+        let x = random_x(&mut rng, n, 70);
+        let sg_ref = SpectralGram::build(&x, None);
+        for t in [1usize, 7, n, n + 3] {
+            let sg = SpectralGram::build_tiled(&x, Some(&pool), TilePolicy::Rows(t));
+            for lambda in [0.5, 12.0] {
+                assert_eq!(
+                    sg_ref.hat(lambda).unwrap().h.as_slice(),
+                    sg.hat(lambda).unwrap().h.as_slice(),
+                    "spectral tile={t} λ={lambda}"
+                );
+            }
+        }
+        let shared_ref = SharedNestedGram::build(&x, None);
+        let shared_tiled = SharedNestedGram::build_tiled(&x, Some(&pool), TilePolicy::Rows(7));
+        assert_eq!(shared_ref.k.as_slice(), shared_tiled.k.as_slice(), "XXᵀ moved");
+    }
+
+    #[test]
+    fn tiled_build_ctx_honours_the_context_and_stays_bitwise() {
+        // HatMatrix::build_ctx = build_with + tile knob, bitwise.
+        let mut rng = Rng::new(64);
+        let x = random_x(&mut rng, 18, 60);
+        let reference = HatMatrix::build_with(&x, 0.7, GramBackend::Dual, None).unwrap();
+        let ctx = super::super::context::ComputeContext::with_threads(3)
+            .with_backend(GramBackend::Dual)
+            .with_tile_policy(TilePolicy::Rows(5));
+        let tiled = HatMatrix::build_ctx(&x, 0.7, &ctx).unwrap();
+        assert_eq!(reference.h.as_slice(), tiled.h.as_slice());
+        assert_eq!(tiled.backend, GramBackend::Dual);
+    }
+
+    #[test]
+    fn backend_shared_nested_dual_downdate_matches_direct() {
+        // fold_dual serves the same downdated K_c^{Tr} as fold_spectral —
+        // its hats must agree with a direct per-fold dual build to roundoff
+        // (same float-path caveat as the spectral downdate).
+        let mut rng = Rng::new(65);
+        let n = 24;
+        let x = random_x(&mut rng, n, 80);
+        let shared = SharedNestedGram::build(&x, None);
+        let te: Vec<usize> = (0..n).filter(|i| i % 3 == 1).collect();
+        let tr = crate::fastcv::complement(&te, n);
+        let x_tr = x.take_rows(&tr);
+        let down = shared.fold_dual(&x_tr, &tr);
+        let direct = GramCache::build(&x_tr, GramBackend::Dual, None);
+        for lambda in [0.4, 2.0, 25.0] {
+            let h_down = down.hat(lambda).unwrap().h;
+            let h_direct = direct.hat(lambda).unwrap().h;
+            let scale = h_direct.max_abs().max(1.0);
+            assert!(
+                h_down.max_abs_diff(&h_direct) < 1e-8 * scale,
+                "λ={lambda}: |ΔH| = {}",
+                h_down.max_abs_diff(&h_direct)
             );
         }
     }

@@ -33,7 +33,7 @@ use super::hat::{GramBackend, GramCache, HatMatrix, SharedNestedGram};
 use super::multiclass::AnalyticMulticlassCv;
 use super::FoldCache;
 use crate::cv::metrics::{accuracy_labels, accuracy_signed, auc};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, TilePolicy};
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
 
@@ -153,8 +153,8 @@ pub fn search_lambda_ctx(
     assert!(!grid.is_empty());
     let positives = grid.iter().filter(|&&l| l > 0.0).count();
     let resolved = ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives);
-    let cache = GramCache::build(x, resolved, ctx.pool());
-    search_lambda_with_cache(&cache, y, labels, folds, grid, by, ctx.pool())
+    let cache = GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy());
+    search_lambda_with_cache_tiled(&cache, y, labels, folds, grid, by, ctx.pool(), ctx.tile_policy())
 }
 
 /// The scoring loop of [`search_lambda`] against an already-built
@@ -170,6 +170,25 @@ pub fn search_lambda_with_cache(
     by: SelectBy,
     pool: Option<&ThreadPool>,
 ) -> Result<LambdaSearch> {
+    search_lambda_with_cache_tiled(cache, y, labels, folds, grid, by, pool, TilePolicy::Off)
+}
+
+/// [`search_lambda_with_cache`] under a [`TilePolicy`]: each candidate's
+/// dual `K_c + λI` Cholesky goes through the blocked in-place factor and
+/// the per-fold `(I − H_Te)` LU factors fan out **fold-wise** over `pool`
+/// ([`FoldCache::prepare_pool`]) — both bit-identical to their serial
+/// forms, so scores and winner never move.
+#[allow(clippy::too_many_arguments)]
+pub fn search_lambda_with_cache_tiled(
+    cache: &GramCache,
+    y: &[f64],
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    grid: &[f64],
+    by: SelectBy,
+    pool: Option<&ThreadPool>,
+    tile: TilePolicy,
+) -> Result<LambdaSearch> {
     assert!(!grid.is_empty());
     // Structural fold errors (out-of-range index, overlap, empty test set)
     // are λ-independent caller bugs — surface them with their precise
@@ -177,10 +196,10 @@ pub fn search_lambda_with_cache(
     super::validate_folds(folds, cache.n())?;
     let mut scores = Vec::with_capacity(grid.len());
     for &lambda in grid {
-        let score = match cache.hat_pool(lambda, pool) {
+        let score = match cache.hat_pool_tiled(lambda, pool, tile) {
             Ok(hat) => {
                 let cv = AnalyticBinaryCv::with_hat(hat, y);
-                match FoldCache::prepare(&cv.hat, folds, false) {
+                match FoldCache::prepare_pool(&cv.hat, folds, false, pool) {
                     // a singular (I − H_Te) is λ-specific (the fold model
                     // itself is degenerate there) — score it out rather
                     // than abort a grid whose other candidates are fine,
@@ -229,8 +248,16 @@ pub fn search_lambda_multiclass(
     assert!(!grid.is_empty());
     let positives = grid.iter().filter(|&&l| l > 0.0).count();
     let resolved = ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives);
-    let cache = GramCache::build(x, resolved, ctx.pool());
-    search_lambda_multiclass_with_cache(&cache, labels, c, folds, grid, ctx.pool())
+    let cache = GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy());
+    search_lambda_multiclass_with_cache_tiled(
+        &cache,
+        labels,
+        c,
+        folds,
+        grid,
+        ctx.pool(),
+        ctx.tile_policy(),
+    )
 }
 
 /// The scoring loop of [`search_lambda_multiclass`] against an
@@ -243,16 +270,31 @@ pub fn search_lambda_multiclass_with_cache(
     grid: &[f64],
     pool: Option<&ThreadPool>,
 ) -> Result<LambdaSearch> {
+    search_lambda_multiclass_with_cache_tiled(cache, labels, c, folds, grid, pool, TilePolicy::Off)
+}
+
+/// [`search_lambda_multiclass_with_cache`] under a [`TilePolicy`] (see
+/// [`search_lambda_with_cache_tiled`] — same blocked-Cholesky and
+/// fold-wise fan-out, same bitwise contract).
+pub fn search_lambda_multiclass_with_cache_tiled(
+    cache: &GramCache,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    grid: &[f64],
+    pool: Option<&ThreadPool>,
+    tile: TilePolicy,
+) -> Result<LambdaSearch> {
     assert!(!grid.is_empty());
     // λ-independent fold-structure errors keep their precise message (see
     // search_lambda_with_cache).
     super::validate_folds(folds, cache.n())?;
     let mut scores = Vec::with_capacity(grid.len());
     for &lambda in grid {
-        let score = match cache.hat_pool(lambda, pool) {
+        let score = match cache.hat_pool_tiled(lambda, pool, tile) {
             Ok(hat) => {
                 let cv = AnalyticMulticlassCv::with_hat(hat, labels, c);
-                match FoldCache::prepare(&cv.hat, folds, true) {
+                match FoldCache::prepare_pool(&cv.hat, folds, true, pool) {
                     // a singular fold system is λ-specific — score it out
                     Err(_) => f64::NEG_INFINITY,
                     Ok(fold_cache) => {
@@ -372,11 +414,14 @@ pub fn nested_cv_backend(
 /// spectral decomposition then serves that fold's whole inner grid.
 ///
 /// Sharing engages only when it is well-defined and profitable: the knob is
-/// on **and** the grid/shape resolve to the spectral backend (wide data,
-/// ≥ 2 positive candidates). The downdated Gram equals the rebuilt one in
-/// exact arithmetic but not bitwise, so the default (knob off) reproduces
-/// [`nested_cv_backend`] exactly; agreement between the two modes is
-/// property-tested at tolerance.
+/// on **and** the grid/shape resolve to an `N×N` backend — `Spectral`
+/// (wide data, ≥ 2 positive candidates; per-fold eigendecomposition) or
+/// `Dual` (wide data, exactly one positive candidate; the downdated
+/// `K[Tr,Tr]` feeds a single per-fold Cholesky instead of an `O(N_tr²P)`
+/// rebuild — the ROADMAP "nested sharing for the dual backend" item). The
+/// downdated Gram equals the rebuilt one in exact arithmetic but not
+/// bitwise, so the default (knob off) reproduces [`nested_cv_backend`]
+/// exactly; agreement between the modes is property-tested at tolerance.
 #[allow(clippy::too_many_arguments)]
 pub fn nested_cv_ctx(
     x: &Mat,
@@ -391,13 +436,16 @@ pub fn nested_cv_ctx(
 ) -> Result<(Vec<f64>, Vec<f64>)> {
     super::validate_folds(outer_folds, x.rows())?;
     let positives = grid.iter().filter(|&&l| l > 0.0).count();
-    // Share one full-data Gram across outer folds when every fold's inner
-    // search would go spectral anyway (P > N_full implies P > N_tr for all
-    // training subsets, so gating on the full shape is conservative).
+    // Share one full-data Gram across outer folds whenever every fold's
+    // inner search stays on the N×N side anyway — `Spectral` (wide, ≥ 2
+    // positive candidates) *or* `Dual` (wide, exactly one positive
+    // candidate: the downdated K[Tr,Tr] feeds one per-fold Cholesky
+    // instead of a rebuild). P > N_full implies P > N_tr for all training
+    // subsets, so gating on the full shape is conservative.
+    let resolved = ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives);
     let shared = (ctx.nested_sharing()
-        && ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives)
-            == GramBackend::Spectral)
-        .then(|| SharedNestedGram::build(x, ctx.pool()));
+        && matches!(resolved, GramBackend::Spectral | GramBackend::Dual))
+        .then(|| SharedNestedGram::build_tiled(x, ctx.pool(), ctx.tile_policy()));
     let mut dvals = vec![f64::NAN; x.rows()];
     let mut chosen = Vec::with_capacity(outer_folds.len());
     for te in outer_folds {
@@ -408,8 +456,21 @@ pub fn nested_cv_ctx(
         let inner_folds = crate::cv::folds::kfold(tr.len(), inner_k.min(tr.len()), rng);
         let search = match &shared {
             Some(gram) => {
-                let cache = GramCache::Spectral(gram.fold_spectral(&x_tr, &tr));
-                search_lambda_with_cache(&cache, &y_tr, &l_tr, &inner_folds, grid, by, ctx.pool())?
+                let cache = if resolved == GramBackend::Dual {
+                    gram.fold_dual(&x_tr, &tr)
+                } else {
+                    GramCache::Spectral(gram.fold_spectral(&x_tr, &tr))
+                };
+                search_lambda_with_cache_tiled(
+                    &cache,
+                    &y_tr,
+                    &l_tr,
+                    &inner_folds,
+                    grid,
+                    by,
+                    ctx.pool(),
+                    ctx.tile_policy(),
+                )?
             }
             None => search_lambda_ctx(&x_tr, &y_tr, &l_tr, &inner_folds, grid, by, ctx)?,
         };
@@ -790,6 +851,87 @@ mod tests {
         assert_eq!(lam_backend, lam_rebuild);
         for (a, b) in dv_rebuild.iter().zip(&dv_backend) {
             assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn backend_nested_cv_dual_sharing_agrees_with_rebuild() {
+        // The ROADMAP "nested sharing for the dual backend" item: on a
+        // single-positive-λ grid over wide data, the shared full-data Gram
+        // is downdated into one per-fold *Cholesky* (no eigendecomposition)
+        // and must pick the same λ per fold with decision values matching
+        // the per-fold rebuild to tolerance.
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(46);
+        let mut spec = SyntheticSpec::binary(40, 130); // wide: dual regime
+        spec.separation = 2.0;
+        let ds = generate(&spec, &mut rng);
+        let y = ds.y_signed();
+        let outer = stratified_kfold(&ds.labels, 4, &mut rng);
+        let grid = [2.0]; // exactly one positive candidate → Auto resolves Dual
+        assert_eq!(
+            GramBackend::Auto.resolve_for_grid(40, 130, 1),
+            GramBackend::Dual,
+            "precondition: this grid must resolve to the dual backend"
+        );
+        let run = |ctx: &ComputeContext, seed: u64| {
+            nested_cv_ctx(
+                &ds.x,
+                &y,
+                &ds.labels,
+                &outer,
+                3,
+                &grid,
+                SelectBy::Accuracy,
+                &mut Rng::new(seed),
+                ctx,
+            )
+            .unwrap()
+        };
+        let (dv_rebuild, lam_rebuild) = run(&ComputeContext::serial(), 5);
+        let (dv_shared, lam_shared) = run(&ComputeContext::serial().with_nested_sharing(true), 5);
+        assert_eq!(lam_shared, lam_rebuild, "dual sharing picked different λs");
+        for (a, b) in dv_rebuild.iter().zip(&dv_shared) {
+            assert!((a - b).abs() < 1e-6, "dvals diverged: {a} vs {b}");
+        }
+        // pooled + tiled + shared is bitwise identical to serial + shared
+        let ctx = ComputeContext::with_threads(4)
+            .with_nested_sharing(true)
+            .with_tile_policy(crate::linalg::TilePolicy::Rows(8));
+        let (dv_pool, lam_pool) = run(&ctx, 5);
+        assert_eq!(lam_pool, lam_shared);
+        for (a, b) in dv_shared.iter().zip(&dv_pool) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pool/tile must be pure wall-clock knobs");
+        }
+    }
+
+    #[test]
+    fn tiled_search_lambda_ctx_bitwise_matches_untiled() {
+        // A tiled context must reproduce the untiled search bit-for-bit:
+        // identical per-candidate scores and winner on both the spectral
+        // (wide) and primal (tall) resolutions of Auto.
+        use crate::fastcv::ComputeContext;
+        use crate::linalg::TilePolicy;
+        let mut rng = Rng::new(47);
+        for (n, p) in [(24usize, 70usize), (50, 12)] {
+            let mut spec = SyntheticSpec::binary(n, p);
+            spec.separation = 1.5;
+            let ds = generate(&spec, &mut rng);
+            let y = ds.y_signed();
+            let folds = stratified_kfold(&ds.labels, 4, &mut rng);
+            let grid = [0.1, 1.0, 10.0];
+            let untiled = search_lambda(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy)
+                .unwrap();
+            for tile in [TilePolicy::Rows(1), TilePolicy::Rows(7), TilePolicy::Rows(n + 3)] {
+                let ctx = ComputeContext::with_threads(3).with_tile_policy(tile);
+                let tiled =
+                    search_lambda_ctx(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, &ctx)
+                        .unwrap();
+                assert_eq!(tiled.best, untiled.best, "winner moved (n={n} p={p} {tile:?})");
+                for (s, q) in untiled.scores.iter().zip(&tiled.scores) {
+                    assert_eq!(s.score.to_bits(), q.score.to_bits(), "score moved (n={n} p={p})");
+                }
+            }
         }
     }
 

@@ -97,9 +97,11 @@ pub mod perm_batch;
 pub mod woodbury;
 
 pub use context::ComputeContext;
+pub use crate::linalg::TilePolicy;
 pub use hat::{GramBackend, GramCache, SharedNestedGram, SpectralGram};
 
 use crate::linalg::{Lu, Mat};
+use crate::util::threadpool::ThreadPool;
 use anyhow::{Context, Result};
 use hat::HatMatrix;
 
@@ -125,20 +127,45 @@ impl FoldCache {
     /// Factor every fold of a partition. `with_cross` additionally gathers
     /// the `H_{Tr,Te}` blocks needed by Eq. 15 / Alg. 2.
     pub fn prepare(hat: &HatMatrix, folds: &[Vec<usize>], with_cross: bool) -> Result<FoldCache> {
+        Self::prepare_pool(hat, folds, with_cross, None)
+    }
+
+    /// [`FoldCache::prepare`] with the per-fold `(I − H_Te)` LU factors
+    /// fanned out **fold-wise** over `pool` — folds are independent, each
+    /// factor's arithmetic is untouched, so the cache is bit-identical to
+    /// the serial one for any pool size. This was the last serial section
+    /// of a pooled λ search; the `_ctx` front-ends route here.
+    pub fn prepare_pool(
+        hat: &HatMatrix,
+        folds: &[Vec<usize>],
+        with_cross: bool,
+        pool: Option<&ThreadPool>,
+    ) -> Result<FoldCache> {
         let n = hat.n();
         validate_folds(folds, n)?;
         let trains: Vec<Vec<usize>> = folds.iter().map(|te| complement(te, n)).collect();
-        let mut lus = Vec::with_capacity(folds.len());
-        for (k, te) in folds.iter().enumerate() {
-            let m = hat.i_minus_block(te);
-            let lu = Lu::factor(&m).with_context(|| {
-                format!(
-                    "fold {k}: (I − H_Te) singular — the fold model itself is \
-                     degenerate (λ=0 with P ≥ N_train?); increase ridge λ"
-                )
-            })?;
-            lus.push(lu);
-        }
+        let fold_err = |k: usize| {
+            format!(
+                "fold {k}: (I − H_Te) singular — the fold model itself is \
+                 degenerate (λ=0 with P ≥ N_train?); increase ridge λ"
+            )
+        };
+        let lus: Vec<Lu> = match pool {
+            Some(pool) if pool.size() > 1 && folds.len() > 1 => pool
+                .map(folds.len(), |k| Lu::factor(&hat.i_minus_block(&folds[k])))
+                .into_iter()
+                .enumerate()
+                .map(|(k, r)| r.with_context(|| fold_err(k)))
+                .collect::<Result<Vec<_>>>()?,
+            _ => {
+                let mut lus = Vec::with_capacity(folds.len());
+                for (k, te) in folds.iter().enumerate() {
+                    let m = hat.i_minus_block(te);
+                    lus.push(Lu::factor(&m).with_context(|| fold_err(k))?);
+                }
+                lus
+            }
+        };
         let cross = if with_cross {
             Some(
                 folds
@@ -229,5 +256,35 @@ mod tests {
         assert_eq!(cross[1].shape(), (8, 4));
         let no_cross = FoldCache::prepare(&hat, &folds, false).unwrap();
         assert!(no_cross.cross.is_none());
+    }
+
+    #[test]
+    fn backend_pool_fold_cache_prepare_bitwise_matches_serial() {
+        // Fold-wise LU fan-out is a pure wall-clock knob: the factors a
+        // pooled prepare produces must solve to the identical floats.
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(24, 5, |_, _| rng.gauss());
+        let hat = HatMatrix::build(&x, 0.3).unwrap();
+        let folds: Vec<Vec<usize>> = (0..4).map(|k| (6 * k..6 * (k + 1)).collect()).collect();
+        let serial = FoldCache::prepare(&hat, &folds, true).unwrap();
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let pooled = FoldCache::prepare_pool(&hat, &folds, true, Some(&pool)).unwrap();
+        assert_eq!(serial.k(), pooled.k());
+        let rhs: Vec<f64> = (0..6).map(|i| i as f64 - 2.5).collect();
+        for k in 0..serial.k() {
+            let a = serial.lus[k].solve_vec(&rhs);
+            let b = pooled.lus[k].solve_vec(&rhs);
+            for (x1, x2) in a.iter().zip(&b) {
+                assert_eq!(x1.to_bits(), x2.to_bits(), "fold {k} factor moved");
+            }
+        }
+        // a singular fold still errors with the fold-indexed message
+        let wide = Mat::from_fn(12, 8, |_, _| rng.gauss());
+        let hat0 = HatMatrix::build(&wide, 0.0).unwrap();
+        let halves = vec![(0..6).collect::<Vec<_>>(), (6..12).collect::<Vec<_>>()];
+        let err = FoldCache::prepare_pool(&hat0, &halves, false, Some(&pool))
+            .err()
+            .expect("degenerate folds must error under a pool too");
+        assert!(format!("{err:#}").contains("fold"), "{err:#}");
     }
 }

@@ -51,8 +51,9 @@ impl AnalyticMulticlassCv {
     }
 
     /// [`Self::fit`] under a [`ComputeContext`]: the context's backend
-    /// picks the Gram construction and its pool (if any) fans out the hat
-    /// build's GEMMs, bit-identically to a serial build.
+    /// picks the Gram construction, its pool (if any) fans out the hat
+    /// build's GEMMs, and its [`crate::linalg::TilePolicy`] bounds the dual
+    /// `K_c` build's transients — all bit-identically to a serial build.
     pub fn fit_ctx(
         x: &Mat,
         labels: &[usize],
@@ -60,7 +61,7 @@ impl AnalyticMulticlassCv {
         lambda: f64,
         ctx: &ComputeContext<'_>,
     ) -> Result<AnalyticMulticlassCv> {
-        let hat = HatMatrix::build_with(x, lambda, ctx.backend(), ctx.pool())?;
+        let hat = HatMatrix::build_ctx(x, lambda, ctx)?;
         Ok(Self::with_hat(hat, labels, c))
     }
 

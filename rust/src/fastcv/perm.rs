@@ -133,7 +133,7 @@ pub fn analytic_binary_permutation_ctx(
 ) -> Result<PermutationResult> {
     let y = signed_codes(labels);
     let mut cv = AnalyticBinaryCv::fit_ctx(x, &y, lambda, ctx)?;
-    let cache = FoldCache::prepare(&cv.hat, folds, bias_adjust)?;
+    let cache = FoldCache::prepare_pool(&cv.hat, folds, bias_adjust, ctx.pool())?;
     let dvals = |cv: &AnalyticBinaryCv, labels: &[usize]| -> Result<Vec<f64>> {
         if bias_adjust {
             cv.decision_values_bias_adjusted(&cache, labels)
@@ -233,7 +233,7 @@ pub fn analytic_multiclass_permutation_ctx(
     ctx: &ComputeContext<'_>,
 ) -> Result<PermutationResult> {
     let mut cv = AnalyticMulticlassCv::fit_ctx(x, labels, c, lambda, ctx)?;
-    let cache = FoldCache::prepare(&cv.hat, folds, true)?;
+    let cache = FoldCache::prepare_pool(&cv.hat, folds, true, ctx.pool())?;
     let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
     let anchor = rng.next_u64();
     let mut null = Vec::with_capacity(n_perm);

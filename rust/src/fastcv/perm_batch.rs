@@ -214,7 +214,7 @@ pub fn analytic_binary_permutation_batched_ctx(
 ) -> Result<PermutationResult> {
     let y = signed_codes(labels);
     let cv = AnalyticBinaryCv::fit_ctx(x, &y, lambda, ctx)?;
-    let cache = FoldCache::prepare(&cv.hat, folds, bias_adjust)?;
+    let cache = FoldCache::prepare_pool(&cv.hat, folds, bias_adjust, ctx.pool())?;
     let observed = if bias_adjust {
         accuracy_signed(&cv.decision_values_bias_adjusted(&cache, labels)?, &y)
     } else {
@@ -326,7 +326,7 @@ pub fn analytic_multiclass_permutation_batched_ctx(
     ctx: &ComputeContext<'_>,
 ) -> Result<PermutationResult> {
     let cv = AnalyticMulticlassCv::fit_ctx(x, labels, c, lambda, ctx)?;
-    let cache = FoldCache::prepare(&cv.hat, folds, true)?;
+    let cache = FoldCache::prepare_pool(&cv.hat, folds, true, ctx.pool())?;
     let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
     let anchor = rng.next_u64();
     let n = labels.len();
@@ -641,5 +641,137 @@ mod tests {
         assert_eq!(BatchStrategy::default(), BatchStrategy { batch_size: 64, threads: 1 });
         assert_eq!(BatchStrategy::new(8, 0).threads, 1, "threads floored at 1");
         assert!(BatchStrategy::auto().threads >= 1);
+    }
+
+    #[test]
+    fn backend_golden_null_distributions_recorded_for_default_flip() {
+        // Backend-aware perm defaults, **step 1** (ROADMAP): before the
+        // engines' implicit backend can flip `Primal` → `Auto`, the
+        // per-backend null distributions must be a recorded contract. This
+        // test is that record, over a fixed-seed (N, P) grid covering both
+        // Auto resolutions:
+        //
+        //   1. the golden reference is the serial engine under `Primal` at
+        //      a pinned anchor seed;
+        //   2. all four engines — serial/batched × binary/multiclass —
+        //      reproduce it bit-for-bit under every explicit backend (the
+        //      hat is shared per run and accuracies are 1/N-quantised, so
+        //      the ~1e-9 hat roundoff cannot move them at these λ);
+        //   3. the *default* entry points are pinned to the `Primal`
+        //      golden: flipping the default to `Auto` must consciously
+        //      update this test, not silently re-anchor recorded nulls.
+        //
+        // The default itself stays `Primal` in this PR.
+        use crate::fastcv::perm::{
+            analytic_binary_permutation_backend, analytic_multiclass_permutation_backend,
+        };
+        let backends = [GramBackend::Primal, GramBackend::Dual, GramBackend::Spectral];
+        // Fixed-seed grid: (samples-per-class, P) with wide and tall shapes.
+        for &(per, p, seed) in &[(8usize, 40usize, 401u64), (12, 6, 402)] {
+            let mut rng = Rng::new(seed);
+            let (x, labels) = blobs(&mut rng, per, 2, p, 2.0);
+            let folds = stratified_kfold(&labels, 4, &mut rng);
+            let anchor = 1234 + seed;
+            let golden = analytic_binary_permutation_backend(
+                &x, &labels, &folds, 1.0, 10, false, &mut Rng::new(anchor), GramBackend::Primal,
+            )
+            .unwrap();
+            for backend in backends {
+                let serial = analytic_binary_permutation_backend(
+                    &x, &labels, &folds, 1.0, 10, false, &mut Rng::new(anchor), backend,
+                )
+                .unwrap();
+                assert_eq!(serial.null, golden.null, "binary serial {backend:?} (P={p})");
+                assert_eq!(serial.observed, golden.observed);
+                let batched = analytic_binary_permutation_batched_backend(
+                    &x,
+                    &labels,
+                    &folds,
+                    1.0,
+                    10,
+                    false,
+                    &mut Rng::new(anchor),
+                    BatchStrategy::new(4, 2),
+                    backend,
+                )
+                .unwrap();
+                assert_eq!(batched.null, golden.null, "binary batched {backend:?} (P={p})");
+            }
+            // default entry points pinned to the Primal golden
+            let default_serial = analytic_binary_permutation(
+                &x, &labels, &folds, 1.0, 10, false, &mut Rng::new(anchor),
+            )
+            .unwrap();
+            assert_eq!(
+                default_serial.null, golden.null,
+                "the serial default is recorded as Primal — flipping it must update this contract"
+            );
+            let default_batched = analytic_binary_permutation_batched(
+                &x,
+                &labels,
+                &folds,
+                1.0,
+                10,
+                false,
+                &mut Rng::new(anchor),
+                BatchStrategy::new(4, 2),
+            )
+            .unwrap();
+            assert_eq!(default_batched.null, golden.null, "batched default recorded as Primal");
+        }
+        // Multi-class pair of engines, same discipline. The cross-backend
+        // sweep runs on the wide shape only — on tall data `Auto` resolves
+        // to `Primal`, so the flip never changes the tall path; there the
+        // engines + defaults are pinned under `Primal` alone.
+        for &(per, p, seed) in &[(7usize, 36usize, 403u64), (9, 5, 404)] {
+            let mut rng = Rng::new(seed);
+            let (x, labels) = blobs(&mut rng, per, 3, p, 2.5);
+            let folds = stratified_kfold(&labels, 3, &mut rng);
+            let anchor = 4321 + seed;
+            let golden = analytic_multiclass_permutation_backend(
+                &x, &labels, 3, &folds, 1.0, 6, &mut Rng::new(anchor), GramBackend::Primal,
+            )
+            .unwrap();
+            let wide = p > labels.len();
+            let swept: &[GramBackend] =
+                if wide { &backends } else { &[GramBackend::Primal] };
+            for &backend in swept {
+                let serial = analytic_multiclass_permutation_backend(
+                    &x, &labels, 3, &folds, 1.0, 6, &mut Rng::new(anchor), backend,
+                )
+                .unwrap();
+                assert_eq!(serial.null, golden.null, "multi serial {backend:?} (P={p})");
+                let batched = analytic_multiclass_permutation_batched_backend(
+                    &x,
+                    &labels,
+                    3,
+                    &folds,
+                    1.0,
+                    6,
+                    &mut Rng::new(anchor),
+                    BatchStrategy::new(3, 2),
+                    backend,
+                )
+                .unwrap();
+                assert_eq!(batched.null, golden.null, "multi batched {backend:?} (P={p})");
+            }
+            let default_serial = analytic_multiclass_permutation(
+                &x, &labels, 3, &folds, 1.0, 6, &mut Rng::new(anchor),
+            )
+            .unwrap();
+            assert_eq!(default_serial.null, golden.null, "multi serial default is Primal");
+            let default_batched = analytic_multiclass_permutation_batched(
+                &x,
+                &labels,
+                3,
+                &folds,
+                1.0,
+                6,
+                &mut Rng::new(anchor),
+                BatchStrategy::new(3, 2),
+            )
+            .unwrap();
+            assert_eq!(default_batched.null, golden.null, "multi batched default is Primal");
+        }
     }
 }

@@ -7,6 +7,7 @@
 
 use super::gemm::dot;
 use super::mat::Mat;
+use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Result};
 
 /// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
@@ -43,6 +44,84 @@ impl Cholesky {
         Ok(Cholesky { l })
     }
 
+    /// Panel-blocked, pool-parallel factorisation — **bit-identical** to
+    /// [`Cholesky::factor`] for any `tile` or pool size. Each column's
+    /// subdiagonal entries are independent once the pivot is known, so
+    /// they fan out over `pool` in `tile`-row chunks; every element keeps
+    /// the serial recurrence's exact arithmetic (full-prefix [`dot`]), so
+    /// blocking moves work between threads without re-associating a single
+    /// sum. See [`crate::linalg::tiled`] for the design notes (and why a
+    /// right-looking trailing-GEMM update was rejected: it would break
+    /// bit-identity).
+    pub fn factor_blocked(a: &Mat, tile: usize, pool: Option<&ThreadPool>) -> Result<Cholesky> {
+        Self::factor_into(a.clone(), tile, pool)
+    }
+
+    /// [`Cholesky::factor_blocked`] that factors **in place**, consuming
+    /// the input buffer instead of allocating a second `N×N` — the memory
+    /// half of the §4.5 tiled story: a Gram built tile-by-tile can be
+    /// factored without ever holding two `N×N` matrices. The upper
+    /// triangle is zeroed afterwards so [`Cholesky::l`] is a proper lower
+    /// factor. Values are bit-identical to [`Cholesky::factor`].
+    pub fn factor_into(mut a: Mat, tile: usize, pool: Option<&ThreadPool>) -> Result<Cholesky> {
+        let n = a.rows();
+        assert_eq!(a.rows(), a.cols(), "cholesky of non-square");
+        let tile = tile.clamp(1, n.max(1));
+        // Same relative pivot floor as `factor` — computed up front, before
+        // the diagonal is overwritten by factor values.
+        let floor = 1e-10 * (0..n).map(|i| a[(i, i)].abs()).fold(0.0f64, f64::max);
+        for j in 0..n {
+            // Column j: rows < j hold final L values, rows ≥ j still hold A.
+            let mut d = a[(j, j)] - dot(&a.row(j)[..j], &a.row(j)[..j]);
+            if d <= floor || !d.is_finite() {
+                bail!("matrix not positive definite at pivot {j} (d={d})");
+            }
+            d = d.sqrt();
+            a[(j, j)] = d;
+            let below = n - j - 1;
+            match pool {
+                // Fan the subdiagonal column out in tile-row chunks; each
+                // element reads only finalised data (columns < j plus the
+                // pivot row prefix), so values are computed against the
+                // immutable borrow and written back afterwards.
+                Some(pool) if pool.size() > 1 && below >= 2 * tile => {
+                    let ranges: Vec<(usize, usize)> = (j + 1..n)
+                        .step_by(tile)
+                        .map(|lo| (lo, (lo + tile).min(n)))
+                        .collect();
+                    let a_ref = &a;
+                    let cols: Vec<Vec<f64>> = pool.map(ranges.len(), |c| {
+                        let (lo, hi) = ranges[c];
+                        (lo..hi)
+                            .map(|i| {
+                                (a_ref[(i, j)] - dot(&a_ref.row(i)[..j], &a_ref.row(j)[..j])) / d
+                            })
+                            .collect()
+                    });
+                    for (&(lo, _), vals) in ranges.iter().zip(&cols) {
+                        for (off, &v) in vals.iter().enumerate() {
+                            a[(lo + off, j)] = v;
+                        }
+                    }
+                }
+                _ => {
+                    for i in (j + 1)..n {
+                        let s = a[(i, j)] - dot_rows(&a, i, j, j);
+                        a[(i, j)] = s / d;
+                    }
+                }
+            }
+        }
+        // The upper triangle still holds A's entries; zero it so the
+        // factor is exactly what `factor` would have produced.
+        for i in 0..n {
+            for k in (i + 1)..n {
+                a[(i, k)] = 0.0;
+            }
+        }
+        Ok(Cholesky { l: a })
+    }
+
     /// The lower factor.
     pub fn l(&self) -> &Mat {
         &self.l
@@ -76,10 +155,18 @@ impl Cholesky {
 
     /// Solve `A X = B` for a matrix right-hand side.
     pub fn solve_mat(&self, b: &Mat) -> Mat {
-        let n = self.n();
-        assert_eq!(b.rows(), n);
-        let nrhs = b.cols();
         let mut x = b.clone();
+        self.solve_mat_in_place(&mut x);
+        x
+    }
+
+    /// [`Cholesky::solve_mat`] overwriting the right-hand side in place —
+    /// no extra `N×nrhs` clone. The dual streaming-hat build uses this to
+    /// turn its centered-data buffer directly into `T_c = (K_c+λI)⁻¹X_c`.
+    pub fn solve_mat_in_place(&self, x: &mut Mat) {
+        let n = self.n();
+        assert_eq!(x.rows(), n);
+        let nrhs = x.cols();
         // forward substitution across all RHS columns (row-major friendly).
         for i in 0..n {
             // x.row(i) -= sum_k<i L[i,k] * x.row(k); then /= L[i,i]
@@ -119,7 +206,6 @@ impl Cholesky {
                 *v /= d;
             }
         }
-        x
     }
 
     /// Explicit inverse `A⁻¹` (used for the hat matrix where the full
@@ -275,6 +361,72 @@ mod tests {
         let a = Mat::from_rows(&[&[4.0, 1.0], &[1.0, 3.0]]);
         let ch = Cholesky::factor(&a).unwrap();
         assert!((ch.log_det() - (11.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiled_factor_blocked_bitwise_matches_serial() {
+        // Acceptance: the blocked/pooled Cholesky reproduces the serial
+        // factor to the last bit across tile sizes {1, 7, N, N+3} —
+        // including the non-divisible remainder panel — with and without a
+        // pool, and through the in-place variant.
+        let mut rng = Rng::new(7);
+        let pool = crate::util::threadpool::ThreadPool::new(4);
+        for n in [5usize, 23, 40] {
+            let a = spd(&mut rng, n);
+            let serial = Cholesky::factor(&a).unwrap();
+            for tile in [1usize, 7, n, n + 3] {
+                // through the free-function alias the tiled layer exports
+                let blocked = crate::linalg::chol_blocked(&a, tile, None).unwrap();
+                assert_eq!(
+                    serial.l().as_slice(),
+                    blocked.l().as_slice(),
+                    "serial blocked n={n} tile={tile}"
+                );
+                let pooled = Cholesky::factor_blocked(&a, tile, Some(&pool)).unwrap();
+                assert_eq!(
+                    serial.l().as_slice(),
+                    pooled.l().as_slice(),
+                    "pooled blocked n={n} tile={tile}"
+                );
+                let in_place = Cholesky::factor_into(a.clone(), tile, Some(&pool)).unwrap();
+                assert_eq!(
+                    serial.l().as_slice(),
+                    in_place.l().as_slice(),
+                    "in-place n={n} tile={tile}"
+                );
+            }
+            // identical factors ⇒ identical solves
+            let b = Mat::from_fn(n, 3, |_, _| rng.gauss());
+            let blocked = Cholesky::factor_blocked(&a, 7, Some(&pool)).unwrap();
+            assert_eq!(serial.solve_mat(&b).as_slice(), blocked.solve_mat(&b).as_slice());
+        }
+    }
+
+    #[test]
+    fn tiled_factor_into_rejects_indefinite_and_zeroes_upper() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(Cholesky::factor_into(a, 4, None).is_err());
+        let mut rng = Rng::new(8);
+        let g = spd(&mut rng, 9);
+        let ch = Cholesky::factor_into(g, 4, None).unwrap();
+        for i in 0..9 {
+            for k in (i + 1)..9 {
+                assert_eq!(ch.l()[(i, k)], 0.0, "upper triangle not zeroed at ({i},{k})");
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_solve_mat_in_place_matches_solve_mat() {
+        let mut rng = Rng::new(9);
+        let n = 17;
+        let a = spd(&mut rng, n);
+        let ch = Cholesky::factor(&a).unwrap();
+        let b = Mat::from_fn(n, 5, |_, _| rng.gauss());
+        let out = ch.solve_mat(&b);
+        let mut in_place = b.clone();
+        ch.solve_mat_in_place(&mut in_place);
+        assert_eq!(out.as_slice(), in_place.as_slice());
     }
 
     #[test]

@@ -152,6 +152,11 @@ fn micro_kernel(c: &mut Mat, a_sl: &[f64], b_sl: &[f64], ci: usize, cj: usize, m
 /// lands in. The dual Gram build (`K_c = X_c X_cᵀ`, `N×N×P` flops) is the
 /// intended caller. Falls back to the serial kernel when no pool is given,
 /// the pool has a single worker, or `A` is too short to split.
+///
+/// The same split-invariance of the per-element accumulation order is what
+/// makes [`crate::linalg::tiled::gram_tiled`]'s two-sided tiling — row
+/// *and* column panels, with operand slabs materialised on demand — bit-
+/// identical to this kernel; see that module for the memory-bounded form.
 pub fn matmul_pool(a: &Mat, b: &Mat, pool: Option<&crate::util::threadpool::ThreadPool>) -> Mat {
     let pool = match pool {
         Some(p) if p.size() > 1 && a.rows() >= 2 * MR => p,

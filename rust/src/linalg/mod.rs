@@ -6,12 +6,15 @@
 //! - [`chol`] — Cholesky factor/solve for SPD scatter matrices
 //! - [`lu`] — partially pivoted LU for general systems
 //! - [`eig`] — Jacobi symmetric + generalised symmetric-definite eig
+//! - [`tiled`] — panel-tiled Gram builds + blocked Cholesky for the §4.5
+//!   memory-bounded regime ([`TilePolicy`], [`gram_tiled`], [`chol_blocked`])
 
 pub mod chol;
 pub mod eig;
 pub mod gemm;
 pub mod lu;
 pub mod mat;
+pub mod tiled;
 
 pub use chol::Cholesky;
 pub use eig::{gen_sym_eig, sym_eig, SymEig};
@@ -21,3 +24,4 @@ pub use gemm::{
 };
 pub use lu::{solve, solve_mat, Lu};
 pub use mat::Mat;
+pub use tiled::{chol_blocked, gram_tiled, TilePolicy};

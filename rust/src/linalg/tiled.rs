@@ -1,0 +1,328 @@
+//! Panel-tiled Gram construction and the blocked Cholesky — the §4.5
+//! "big data" memory-bounded build layer.
+//!
+//! The dual/spectral Gram backends ([`crate::fastcv::hat`]) and the dual
+//! [`crate::fastcv::bigdata::StreamingHat`] all need the centered `N×N`
+//! Gram `K_c = X_c X_cᵀ`. The one-shot build materialises the full
+//! centered copy `X_c` (`O(NP)`) *and* transposes it (`O(NP)` again) before
+//! a single `N×N×P` GEMM; in the P ≫ N **and** N-huge quadrant that is
+//! exactly where memory runs out first. This module provides the blockwise
+//! alternative (in the spirit of Engstrøm & Jensen 2024's partition-based
+//! `XᵀX`/`XᵀY` formulation — blockwise with centering folded in is *exact*,
+//! not approximate):
+//!
+//! * [`gram_tiled`] — `G = V Vᵀ` from row *slabs* of `V` produced on
+//!   demand by a closure, so no more than three `tile×P` slabs (per
+//!   worker: own band, partner band, partner's transposed copy) exist at
+//!   once. Tile pairs of the upper triangle fan out over a
+//!   [`ThreadPool`]; the lower triangle is mirrored.
+//! * [`chol_blocked`] — panel-blocked Cholesky whose per-column
+//!   subdiagonal updates fan out over the pool in `tile`-row chunks (see
+//!   [`Cholesky::factor_blocked`]; an in-place variant,
+//!   [`Cholesky::factor_into`], factors a Gram buffer without allocating a
+//!   second `N×N`).
+//! * [`TilePolicy`] — the knob the [`crate::fastcv::context::ComputeContext`]
+//!   carries: `Off` reproduces the historical one-shot kernels bitwise,
+//!   `Rows`/`Budget` pick a tile height (the latter from a transient-memory
+//!   budget in bytes).
+//!
+//! ## Bitwise determinism
+//!
+//! Tiling is a **pure memory/wall-clock knob**: every tiled kernel is
+//! bit-identical to its one-shot counterpart (property-tested as the
+//! `tiled_*` suite).
+//!
+//! * For [`gram_tiled`]: an output element `G[i,j] = Σ_k v_ik·v_jk`
+//!   accumulates over the inner dimension in [`matmul`]'s fixed KC-block
+//!   order, which is independent of how the *output* rows/columns are
+//!   split into tiles (the same argument that makes
+//!   [`crate::linalg::matmul_pool`] bit-identical to [`matmul`]). The
+//!   mirrored lower triangle is exact because IEEE multiplication
+//!   commutes: `G[j,i]` accumulates the identical products in the
+//!   identical order, so `G[i,j] == G[j,i]` to the last bit — which also
+//!   makes the one-shot path's trailing `symmetrize()` (`0.5·(a+a) = a`)
+//!   a no-op on these values.
+//! * For the blocked Cholesky: each element keeps the serial recurrence's
+//!   exact arithmetic — a full-prefix [`crate::linalg::dot`] — so blocking
+//!   governs *which thread* computes an element, never *how*. (A classical
+//!   right-looking trailing-GEMM update would re-associate the sums and
+//!   break bit-identity; the panel fan-out here parallelises the same
+//!   recurrence instead.)
+
+use super::chol::Cholesky;
+use super::gemm::matmul;
+use super::mat::Mat;
+use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
+
+/// How (whether) to tile the `N×N` Gram builds and their Cholesky.
+///
+/// Carried by [`crate::fastcv::context::ComputeContext`] and surfaced on
+/// the CLI as `--tile-rows R` / `--mem-budget MB`. `Off` (the default)
+/// reproduces the historical one-shot kernels bitwise; the tiled modes are
+/// bit-identical to them (see the module docs) but bound every transient
+/// slab to `O(tile)` rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TilePolicy {
+    /// No tiling: the historical one-shot kernels, bitwise-unchanged.
+    #[default]
+    Off,
+    /// Fixed tile height in rows (clamped to `[1, N]` per build).
+    Rows(usize),
+    /// Pick the tile height from a transient-memory budget in bytes: the
+    /// largest `tile` such that one worker's slabs — the `tile×P` row slab
+    /// for its own band, the partner band's slab **plus its `P×tile`
+    /// transposed copy** (the GEMM's B operand), and a `tile×N` output
+    /// strip — fit the budget.
+    Budget {
+        /// Transient budget in bytes (per concurrent worker).
+        bytes: usize,
+    },
+}
+
+impl TilePolicy {
+    /// Build from the CLI knobs: `--tile-rows R` wins when both are given,
+    /// `--mem-budget MB` (mebibytes) otherwise, `Off` when neither.
+    pub fn from_cli(tile_rows: usize, mem_budget_mb: usize) -> TilePolicy {
+        if tile_rows > 0 {
+            TilePolicy::Rows(tile_rows)
+        } else if mem_budget_mb > 0 {
+            TilePolicy::Budget { bytes: mem_budget_mb << 20 }
+        } else {
+            TilePolicy::Off
+        }
+    }
+
+    /// Is this the bitwise-historical no-tiling mode?
+    pub fn is_off(&self) -> bool {
+        matches!(self, TilePolicy::Off)
+    }
+
+    /// Resolve the tile height for an `N×P` build: `None` when off,
+    /// otherwise a height in `[1, N]`.
+    pub fn tile_rows(&self, n: usize, p: usize) -> Option<usize> {
+        match *self {
+            TilePolicy::Off => None,
+            TilePolicy::Rows(t) => Some(t.clamp(1, n.max(1))),
+            TilePolicy::Budget { bytes } => {
+                // Three tile×P slabs live at once inside a worker (own band,
+                // partner band, partner's transposed copy) plus the tile×N
+                // output strip — see `fill_upper_band`.
+                let per_row = 8 * (3 * p + n).max(1);
+                Some((bytes / per_row).clamp(1, n.max(1)))
+            }
+        }
+    }
+
+    /// Short tag for labels / TSV columns (`off`, `tile-r64`, `tile-b256m`;
+    /// sub-MiB budgets print in KiB so distinct budgets never collide on a
+    /// `b0m` label).
+    pub fn tag(&self) -> String {
+        match *self {
+            TilePolicy::Off => "off".to_string(),
+            TilePolicy::Rows(t) => format!("tile-r{t}"),
+            TilePolicy::Budget { bytes } if bytes >= (1 << 20) => {
+                format!("tile-b{}m", bytes >> 20)
+            }
+            TilePolicy::Budget { bytes } => format!("tile-b{}k", bytes >> 10),
+        }
+    }
+}
+
+/// `G = V Vᵀ` (`N×N`, symmetric) where rows `lo..hi` of `V` are produced on
+/// demand by `slab(lo, hi)` — never materialising more than three
+/// tile-high slabs (per worker) at once. `tile` is the slab height; tile
+/// pairs of the upper triangle fan out over `pool` when given (each worker
+/// owns disjoint row bands of the output), and the strictly-lower triangle
+/// is mirrored.
+///
+/// Bit-identical to `matmul(&v, &v.t())` followed by `symmetrize()` for
+/// any tile height, pool size, or slab split — see the module docs. The
+/// centered Gram `K_c` (slab = centered rows of `X`) and the uncentered
+/// nested-CV Gram `K = XXᵀ` (slab = raw rows) are the intended callers.
+pub fn gram_tiled<F>(n: usize, tile: usize, slab: F, pool: Option<&ThreadPool>) -> Mat
+where
+    F: Fn(usize, usize) -> Mat + Sync,
+{
+    let tile = tile.clamp(1, n.max(1));
+    let tiles: Vec<(usize, usize)> =
+        (0..n).step_by(tile).map(|lo| (lo, (lo + tile).min(n))).collect();
+    let mut out = Mat::zeros(n, n);
+    match pool {
+        Some(pool) if pool.size() > 1 && tiles.len() > 1 => {
+            // Chunk the output into per-tile row bands (row-major ⇒ each
+            // band is one contiguous slice) so jobs write without locks;
+            // every band is tile·n elements except the remainder, which is
+            // exactly how `tiles` was built. Upper-triangle bands have
+            // skewed work (band t computes T−t blocks): when there are
+            // enough bands to keep the pool busy, each job pairs band `t`
+            // with band `T−1−t` so every pair owns T+1 blocks (balanced
+            // instead of a 1..T staircase); with few bands, one job per
+            // band maximises overlap (pairing T=2 bands into one job would
+            // serialise the whole build on a single worker).
+            let tiles_ref = &tiles;
+            let slab_ref = &slab;
+            let t_count = tiles.len();
+            let pair = t_count.div_ceil(2) >= pool.size();
+            let mut bands: Vec<Option<(usize, &mut [f64])>> =
+                out.as_mut_slice().chunks_mut(tile * n).enumerate().map(Some).collect();
+            let job_count = if pair { t_count.div_ceil(2) } else { t_count };
+            let jobs: Vec<_> = (0..job_count)
+                .map(|lo| {
+                    let (t_first, first) = bands[lo].take().expect("band consumed once");
+                    let hi = t_count - 1 - lo;
+                    let second = if pair && hi > lo { bands[hi].take() } else { None };
+                    move || {
+                        fill_upper_band(t_first, first, n, tiles_ref, slab_ref);
+                        if let Some((t_second, band)) = second {
+                            fill_upper_band(t_second, band, n, tiles_ref, slab_ref);
+                        }
+                    }
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        _ => {
+            for (t, &(lo, hi)) in tiles.iter().enumerate() {
+                let band = &mut out.as_mut_slice()[lo * n..hi * n];
+                fill_upper_band(t, band, n, &tiles, &slab);
+            }
+        }
+    }
+    // Mirror the strictly-lower blocks from the computed upper triangle
+    // (exact: IEEE multiplication commutes, so G[j,i] == G[i,j] bitwise).
+    for i in 0..n {
+        for j in 0..i {
+            out[(i, j)] = out[(j, i)];
+        }
+    }
+    out
+}
+
+/// Fill row band `t` of the upper block triangle: blocks `(t, u)` for
+/// `u ≥ t`. `band` is rows `tiles[t]` of the output as one flat slice.
+fn fill_upper_band<F>(t: usize, band: &mut [f64], n: usize, tiles: &[(usize, usize)], slab: &F)
+where
+    F: Fn(usize, usize) -> Mat,
+{
+    let (lo_i, hi_i) = tiles[t];
+    let v_i = slab(lo_i, hi_i);
+    for (u, &(lo_j, hi_j)) in tiles.iter().enumerate().skip(t) {
+        let block = if u == t {
+            matmul(&v_i, &v_i.t())
+        } else {
+            let v_j = slab(lo_j, hi_j);
+            matmul(&v_i, &v_j.t())
+        };
+        for r in 0..(hi_i - lo_i) {
+            band[r * n + lo_j..r * n + hi_j].copy_from_slice(block.row(r));
+        }
+    }
+}
+
+/// Panel-blocked, pool-parallel Cholesky — a free-function alias for
+/// [`Cholesky::factor_blocked`] (bit-identical to [`Cholesky::factor`]
+/// for any tile height or pool size). The per-λ `K_c + λI` factor of the
+/// dual Gram backend and the dual streaming-hat build are the intended
+/// callers.
+pub fn chol_blocked(a: &Mat, tile: usize, pool: Option<&ThreadPool>) -> Result<Cholesky> {
+    Cholesky::factor_blocked(a, tile, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.gauss())
+    }
+
+    /// Reference: the one-shot path the dual/spectral backends use today.
+    fn gram_one_shot(v: &Mat) -> Mat {
+        let mut g = matmul(v, &v.t());
+        g.symmetrize();
+        g
+    }
+
+    #[test]
+    fn tiled_gram_bitwise_matches_one_shot_across_tile_sizes() {
+        // Acceptance: tile heights {1, 7, N, N+3} — including the
+        // non-divisible remainder panel — reproduce the one-shot Gram to
+        // the last bit, serial and pooled.
+        let mut rng = Rng::new(31);
+        let pool = ThreadPool::new(4);
+        for &(n, p) in &[(13usize, 40usize), (24, 7), (40, 150)] {
+            let v = random_mat(&mut rng, n, p);
+            let reference = gram_one_shot(&v);
+            for tile in [1usize, 7, n, n + 3] {
+                let slab = |lo: usize, hi: usize| {
+                    Mat::from_fn(hi - lo, p, |r, j| v[(lo + r, j)])
+                };
+                let serial = gram_tiled(n, tile, slab, None);
+                assert_eq!(
+                    serial.as_slice(),
+                    reference.as_slice(),
+                    "serial n={n} p={p} tile={tile}"
+                );
+                let pooled = gram_tiled(n, tile, slab, Some(&pool));
+                assert_eq!(
+                    pooled.as_slice(),
+                    reference.as_slice(),
+                    "pooled n={n} p={p} tile={tile}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_gram_slabs_are_requested_in_bounds() {
+        // The slab closure must only ever be asked for in-range, tile-high
+        // row windows (this is what bounds the transient memory).
+        let n = 29;
+        let tile = 8;
+        let max_seen = std::sync::atomic::AtomicUsize::new(0);
+        let g = gram_tiled(
+            n,
+            tile,
+            |lo, hi| {
+                assert!(lo < hi && hi <= n, "slab [{lo},{hi}) out of range");
+                assert!(hi - lo <= tile, "slab higher than the tile");
+                max_seen.fetch_max(hi - lo, std::sync::atomic::Ordering::Relaxed);
+                Mat::from_fn(hi - lo, 3, |r, j| (lo + r) as f64 + j as f64)
+            },
+            None,
+        );
+        assert_eq!(g.shape(), (n, n));
+        assert_eq!(max_seen.load(std::sync::atomic::Ordering::Relaxed), tile);
+    }
+
+    #[test]
+    fn tiled_policy_resolves_rows_and_budget() {
+        assert_eq!(TilePolicy::Off.tile_rows(100, 50), None);
+        assert!(TilePolicy::Off.is_off());
+        assert_eq!(TilePolicy::Rows(16).tile_rows(100, 50), Some(16));
+        // clamped to [1, N]
+        assert_eq!(TilePolicy::Rows(0).tile_rows(100, 50), Some(1));
+        assert_eq!(TilePolicy::Rows(500).tile_rows(100, 50), Some(100));
+        // budget: 8·(3P + N) bytes per tile row (three slabs + output strip)
+        let per_row = 8 * (3 * 50 + 100);
+        let policy = TilePolicy::Budget { bytes: 10 * per_row };
+        assert_eq!(policy.tile_rows(100, 50), Some(10));
+        // a tiny budget still yields a usable tile of 1
+        assert_eq!(TilePolicy::Budget { bytes: 1 }.tile_rows(100, 50), Some(1));
+        // CLI mapping: rows wins, then budget, else off
+        assert_eq!(TilePolicy::from_cli(32, 0), TilePolicy::Rows(32));
+        assert_eq!(TilePolicy::from_cli(32, 7), TilePolicy::Rows(32));
+        assert_eq!(TilePolicy::from_cli(0, 2), TilePolicy::Budget { bytes: 2 << 20 });
+        assert_eq!(TilePolicy::from_cli(0, 0), TilePolicy::Off);
+        // tags
+        assert_eq!(TilePolicy::Off.tag(), "off");
+        assert_eq!(TilePolicy::Rows(64).tag(), "tile-r64");
+        assert_eq!(TilePolicy::Budget { bytes: 256 << 20 }.tag(), "tile-b256m");
+        // sub-MiB budgets stay distinguishable (KiB units, never "b0m")
+        assert_eq!(TilePolicy::Budget { bytes: 32 << 10 }.tag(), "tile-b32k");
+        assert_eq!(TilePolicy::Budget { bytes: 512 << 10 }.tag(), "tile-b512k");
+    }
+}

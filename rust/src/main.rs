@@ -39,6 +39,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("parity") => cmd_parity(args),
         Some("complexity") => cmd_complexity(args),
         Some("eeg") => cmd_eeg(args),
+        Some("bigdata") => cmd_bigdata(args),
         Some("quickstart") => cmd_quickstart(args),
         Some("artifacts") => cmd_artifacts(args),
         _ => {
@@ -59,9 +60,16 @@ fn print_usage() {
                  [--engine serial|batched] [--batch B]  (perm sweeps)\n\
                  [--backend primal|dual|spectral|auto]  (analytic-arm Gram backend)\n\
                  [--threads T]  (analytic-arm pool: hat builds + perm batches)\n\
+                 [--tile-rows R | --mem-budget MB]  (tile the N×N Gram builds:\n\
+                 fixed rows, or auto-sized from a transient-memory budget;\n\
+                 bit-identical to untiled — memory/wall-clock only)\n\
            parity                        §4.1 N≈P crossover table\n\
            complexity                    Table 1 empirical scaling exponents\n\
            eeg [--subjects N] [--perms N] [--full]   Fig. 4 EEG/MEG permutation study\n\
+           bigdata [--n N] [--p P] [--q Q] [--lambda L]   §4.5 strategies demo:\n\
+                 streaming hat + sparse projection + LDA ensemble, all through\n\
+                 one ComputeContext ([--threads T] [--backend ...]\n\
+                 [--tile-rows R | --mem-budget MB])\n\
            quickstart                    30-second end-to-end demo\n\
            artifacts                     list AOT artifacts and PJRT platform"
     );
@@ -101,6 +109,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let backend_tag = args.get_or("backend", "primal");
     let backend = GramBackend::from_tag(&backend_tag)
         .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_tag:?} (primal|dual|spectral|auto)"))?;
+    let tile = fastcv::linalg::TilePolicy::from_cli(
+        args.get_parse_or("tile-rows", 0usize),
+        args.get_parse_or("mem-budget", 0usize),
+    );
     let mut points = grid(exp, &scale);
     if engine != PermEngine::Serial {
         // The engine only governs the analytic arm of permutation points;
@@ -118,10 +130,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // well-defined; `auto` re-resolves per point's P/N ratio). `--threads`
     // likewise reaches every analytic arm: each point's hat build fans its
     // Gram/GEMM work over a ComputeContext pool of that width (bit-identical
-    // to serial — wall-clock only), not just the perm batcher.
+    // to serial — wall-clock only), not just the perm batcher. `--tile-rows`
+    // / `--mem-budget` tile the N×N Gram builds + Cholesky the same way
+    // (bit-identical; bounds transient memory instead of wall-clock).
     for p in points.iter_mut() {
         p.backend = backend;
         p.threads = threads;
+        p.tile = tile;
     }
     eprintln!("{}: {} points", exp.name(), points.len());
     let sched = Scheduler::new(workers, seed, args.flag("verbose"));
@@ -163,6 +178,7 @@ fn cmd_parity(args: &Args) -> Result<()> {
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
             threads: 1,
+            tile: fastcv::linalg::TilePolicy::Off,
         };
         results.push(run_point(&point, seed)?);
     }
@@ -199,6 +215,7 @@ fn cmd_complexity(args: &Args) -> Result<()> {
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
             threads: 1,
+            tile: fastcv::linalg::TilePolicy::Off,
         };
         let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
         rows_p.push((p as f64, r.t_std, r.t_ana));
@@ -220,6 +237,7 @@ fn cmd_complexity(args: &Args) -> Result<()> {
             engine: PermEngine::Serial,
             backend: GramBackend::Primal,
             threads: 1,
+            tile: fastcv::linalg::TilePolicy::Off,
         };
         let r = fastcv::coordinator::sweep::run_point(&point, seed)?;
         rows_n.push((n as f64, r.t_std, r.t_ana));
@@ -338,6 +356,78 @@ fn cmd_eeg(args: &Args) -> Result<()> {
     }
     println!("{}", report.render());
     maybe_write(args, "fig4_eeg.tsv", &tsv)?;
+    Ok(())
+}
+
+/// §4.5 "what about big data?" — run all three coping strategies through
+/// one `ComputeContext`, so `--threads`, `--backend`, and
+/// `--tile-rows`/`--mem-budget` reach every big-data mode from the CLI.
+fn cmd_bigdata(args: &Args) -> Result<()> {
+    use fastcv::data::synthetic::{generate, SyntheticSpec};
+    use fastcv::fastcv::bigdata::{projected_analytic_cv_ctx, LdaEnsemble, StreamingHat};
+    use fastcv::fastcv::ComputeContext;
+    use fastcv::util::rng::Rng;
+
+    let n: usize = args.get_parse_or("n", 200);
+    let p: usize = args.get_parse_or("p", 1000);
+    let q: usize = args.get_parse_or("q", 200);
+    let lambda: f64 = args.get_parse_or("lambda", 1.0);
+    let seed: u64 = args.get_parse_or("seed", 2018);
+    let threads: usize = args.get_parse_or("threads", 1);
+    let backend_tag = args.get_or("backend", "auto");
+    let backend = GramBackend::from_tag(&backend_tag)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend {backend_tag:?} (primal|dual|spectral|auto)"))?;
+    let tile = fastcv::linalg::TilePolicy::from_cli(
+        args.get_parse_or("tile-rows", 0usize),
+        args.get_parse_or("mem-budget", 0usize),
+    );
+    let ctx = ComputeContext::with_threads(threads).with_backend(backend).with_tile_policy(tile);
+
+    let mut rng = Rng::new(seed);
+    let mut spec = SyntheticSpec::binary(n, p);
+    spec.separation = 2.0;
+    let ds = generate(&spec, &mut rng);
+    let y = ds.y_signed();
+    let folds = fastcv::cv::folds::kfold(n, 10.min(n / 3).max(2), &mut rng);
+    println!("bigdata demo: N={n} P={p} λ={lambda} ({ctx:?})");
+
+    // 1. Too many samples: streaming hat (no N×N H; tiled K_c when asked).
+    let (hat, t_stream) =
+        fastcv::util::timed(|| StreamingHat::build_ctx(&ds.x, lambda, &ctx));
+    let hat = hat?;
+    let dv = hat.decision_values(&y, &folds)?;
+    let acc = fastcv::cv::metrics::accuracy_signed(&dv, &y);
+    println!(
+        "  streaming hat  [{:>7}]: {:.3}s  acc={acc:.3}  (T is {}×{})",
+        hat.backend_label(),
+        t_stream,
+        hat.t.shape().0,
+        hat.t.shape().1
+    );
+
+    // 2. Too many features: sparse random projection → analytic CV.
+    let (dv_proj, t_proj) =
+        fastcv::util::timed(|| projected_analytic_cv_ctx(&ds.x, &y, &folds, q, lambda, &mut rng, &ctx));
+    let acc_proj = fastcv::cv::metrics::accuracy_signed(&dv_proj?, &y);
+    println!("  projection → Q={q:<5}: {t_proj:.3}s  acc={acc_proj:.3}");
+
+    // 3. Both: ensemble of weak LDA learners on random subsets.
+    let (ens, t_ens) = fastcv::util::timed(|| {
+        LdaEnsemble::train_ctx(
+            &ds.x,
+            &ds.labels,
+            15,
+            0.2,
+            0.6,
+            fastcv::model::Reg::Ridge(lambda),
+            &ctx,
+            &mut rng,
+        )
+    });
+    let ens = ens?;
+    let acc_ens =
+        fastcv::cv::metrics::accuracy_labels(&ens.predict(&ds.x), &ds.labels);
+    println!("  LDA ensemble ({} members): {:.3}s  train-acc={acc_ens:.3}", ens.len(), t_ens);
     Ok(())
 }
 

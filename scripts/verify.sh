@@ -24,6 +24,12 @@ cargo test -q
 echo "== backend equivalence: cargo test -q backend_ =="
 cargo test -q backend_
 
+# The tiled-engine property tests are the contract that makes TilePolicy a
+# pure memory/wall-clock knob (tiled K_c + blocked Cholesky bitwise equal
+# to the one-shot kernels); run them by name so they can never be dropped.
+echo "== tiled-engine equivalence: cargo test -q tiled_ =="
+cargo test -q tiled_
+
 echo "== benches compile: cargo bench --no-run =="
 cargo bench --no-run
 
@@ -56,6 +62,9 @@ if [ "${FASTCV_SKIP_BENCH:-0}" != "1" ]; then
   echo "== perf trajectory: Gram-backend ablation (BENCH_backend.json) =="
   FASTCV_BENCH_OUT="${FASTCV_BENCH_OUT:-.}" \
     cargo bench --bench ablation_backend
+  echo "== perf trajectory: tiled Gram-engine ablation (BENCH_tiling.json) =="
+  FASTCV_BENCH_OUT="${FASTCV_BENCH_OUT:-.}" \
+    cargo bench --bench ablation_tiling
 fi
 
 echo "verify: OK"
