@@ -1,0 +1,199 @@
+//! Ablation: out-of-core spilled Gram + Cholesky vs the tiled and one-shot
+//! in-RAM builds (ROADMAP's "true out-of-core spill") → `BENCH_spill.json`.
+//!
+//! Over an N/P/tile grid, measures the dual **streaming-hat** build four
+//! ways — one-shot (`TilePolicy::Off`), tiled (`Rows`, in-place factor),
+//! spilled with RAM panels (`Spill { dir: None }`, the blocked out-of-core
+//! schedule without disk IO), and spilled to disk files (`Spill { dir }`)
+//! — plus the primal `syrk_tiled` vs `syrk_t` arm. Each row carries the
+//! **resident-bytes model** (the accounting documented in
+//! `docs/BACKENDS.md` "Out-of-core spill"): beyond the `O(NP)` streamed
+//! outputs every arm shares, the spilled build holds only `O(tile·(N+P))`
+//! slabs — the `N×N` never exists in RAM. Bitwise equality of all arms
+//! rides along so the JSON records correctness, not just speed.
+//!
+//! Env: `FASTCV_BENCH_SCALE=tiny` for a fast smoke run (CI);
+//! `FASTCV_BENCH_OUT` for the output directory.
+//! Run: `cargo bench --bench ablation_spill`
+
+use fastcv::bench::Bench;
+use fastcv::data::synthetic::{generate, SyntheticSpec};
+use fastcv::fastcv::bigdata::StreamingHat;
+use fastcv::fastcv::hat::GramBackend;
+use fastcv::fastcv::ComputeContext;
+use fastcv::linalg::{syrk_t, syrk_tiled, TilePolicy};
+use fastcv::util::json::Json;
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fdur, Table};
+use std::collections::BTreeMap;
+
+/// Transient resident bytes of the one-shot dual streaming build, beyond
+/// the `xa`/`t` outputs all arms share: `X_c` + its transpose copy + `K_c`
+/// + the out-of-place factor + the solve's RHS clone.
+fn resident_one_shot(n: usize, p: usize) -> usize {
+    8 * (2 * n * n + 3 * n * p)
+}
+
+/// Tiled build: the in-place factor (`N²`) + the in-place-solved centered
+/// RHS (`N·P`) + tile-bounded slabs.
+fn resident_tiled(n: usize, p: usize, tile: usize) -> usize {
+    8 * (n * n + n * p + tile * (3 * p + n))
+}
+
+/// Spilled build: **no resident square at all** — the centered RHS solved
+/// in place (`N·P`) + per-worker assembly slabs (three `tile×P` operands +
+/// a `tile×N` band) + the factor/solve panels (≤ two `tile×N` + one
+/// `N×tile` column strip ≈ `tile·N` terms, dominated by the band model).
+fn resident_spill(n: usize, p: usize, tile: usize) -> usize {
+    8 * (n * p + tile * (3 * p + 2 * n))
+}
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let bench = if tiny {
+        Bench { min_iters: 1, max_iters: 2, target_time: 0.05, warmup: 0 }
+    } else {
+        Bench::quick()
+    };
+    let lambda = 1.0;
+    // Wide shapes: spilling targets the P ≫ N dual quadrant (and, via
+    // syrk_tiled, the P-huge primal one).
+    let shapes: &[(usize, usize)] = if tiny { &[(24, 96)] } else { &[(100, 800), (200, 1600)] };
+    let spill_base = std::env::temp_dir()
+        .join(format!("fastcv-ablation-spill-{}", std::process::id()));
+
+    let mut rows = Vec::new();
+    let mut table = Table::new(vec![
+        "shape",
+        "tile",
+        "one-shot",
+        "tiled",
+        "spill (RAM)",
+        "spill (disk)",
+        "resident spill/one-shot",
+        "bitwise",
+    ])
+    .with_title("Ablation: spilled vs tiled vs one-shot dual streaming builds".to_string());
+
+    for &(n, p) in shapes {
+        let mut rng = Rng::new((n * 41 + p) as u64);
+        let ds = generate(&SyntheticSpec::binary(n, p), &mut rng);
+        let tiles: Vec<usize> = if tiny { vec![4, n / 2] } else { vec![16, 64, n / 2] };
+        let threads = if tiny { 2 } else { 4 };
+
+        let t_off = bench
+            .run(|| StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, None).unwrap())
+            .median;
+        let reference =
+            StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, None).unwrap();
+
+        for tile in tiles {
+            let ctx_for = |policy: TilePolicy| {
+                ComputeContext::with_threads(threads)
+                    .with_backend(GramBackend::Dual)
+                    .with_tile_policy(policy)
+            };
+            let ctx_tiled = ctx_for(TilePolicy::Rows(tile));
+            let ctx_ram = ctx_for(TilePolicy::Spill { dir: None, tile });
+            let ctx_disk = ctx_for(TilePolicy::Spill { dir: Some(spill_base.clone()), tile });
+
+            let t_tiled =
+                bench.run(|| StreamingHat::build_ctx(&ds.x, lambda, &ctx_tiled).unwrap()).median;
+            let t_ram =
+                bench.run(|| StreamingHat::build_ctx(&ds.x, lambda, &ctx_ram).unwrap()).median;
+            let t_disk =
+                bench.run(|| StreamingHat::build_ctx(&ds.x, lambda, &ctx_disk).unwrap()).median;
+
+            // correctness rides along: every arm bitwise-equal to one-shot
+            let h_tiled = StreamingHat::build_ctx(&ds.x, lambda, &ctx_tiled).unwrap();
+            let h_ram = StreamingHat::build_ctx(&ds.x, lambda, &ctx_ram).unwrap();
+            let h_disk = StreamingHat::build_ctx(&ds.x, lambda, &ctx_disk).unwrap();
+            let bitwise = reference.t.as_slice() == h_tiled.t.as_slice()
+                && reference.t.as_slice() == h_ram.t.as_slice()
+                && reference.t.as_slice() == h_disk.t.as_slice();
+
+            let res_off = resident_one_shot(n, p);
+            let res_spill = resident_spill(n, p, tile);
+            let ratio = res_spill as f64 / res_off as f64;
+            table.row(vec![
+                format!("N={n} P={p}"),
+                format!("{tile}"),
+                fdur(t_off),
+                fdur(t_tiled),
+                fdur(t_ram),
+                fdur(t_disk),
+                format!("{ratio:.3}"),
+                format!("{bitwise}"),
+            ]);
+            let mut row = BTreeMap::new();
+            row.insert("n".to_string(), Json::Num(n as f64));
+            row.insert("p".to_string(), Json::Num(p as f64));
+            row.insert("tile".to_string(), Json::Num(tile as f64));
+            row.insert("seconds_one_shot".to_string(), Json::Num(t_off));
+            row.insert("seconds_tiled".to_string(), Json::Num(t_tiled));
+            row.insert("seconds_spill_ram".to_string(), Json::Num(t_ram));
+            row.insert("seconds_spill_disk".to_string(), Json::Num(t_disk));
+            row.insert("resident_bytes_one_shot".to_string(), Json::Num(res_off as f64));
+            row.insert(
+                "resident_bytes_tiled".to_string(),
+                Json::Num(resident_tiled(n, p, tile) as f64),
+            );
+            row.insert("resident_bytes_spill".to_string(), Json::Num(res_spill as f64));
+            row.insert("resident_ratio_spill".to_string(), Json::Num(ratio));
+            row.insert("bitwise_identical".to_string(), Json::Bool(bitwise));
+            rows.push(Json::Obj(row));
+        }
+    }
+
+    // Primal quadrant: the tiled syrk vs the one-shot kernel (the
+    // ROADMAP "tiled primal syrk" rung — output bands instead of one
+    // monolithic accumulation; bitwise-equal, so a pure memory knob).
+    let mut syrk_rows = Vec::new();
+    let (sn, sp) = if tiny { (48, 128) } else { (200, 1200) };
+    let mut rng = Rng::new(7);
+    let a = fastcv::linalg::Mat::from_fn(sn, sp, |_, _| rng.gauss());
+    let t_syrk = bench.run(|| syrk_t(&a)).median;
+    let g_ref = syrk_t(&a);
+    for tile in if tiny { vec![8usize, 32] } else { vec![64usize, 256] } {
+        let t_tiled = bench.run(|| syrk_tiled(&a, tile, None)).median;
+        let bitwise = syrk_tiled(&a, tile, None).as_slice() == g_ref.as_slice();
+        let mut row = BTreeMap::new();
+        row.insert("n".to_string(), Json::Num(sn as f64));
+        row.insert("p".to_string(), Json::Num(sp as f64));
+        row.insert("tile".to_string(), Json::Num(tile as f64));
+        row.insert("seconds_syrk_t".to_string(), Json::Num(t_syrk));
+        row.insert("seconds_syrk_tiled".to_string(), Json::Num(t_tiled));
+        row.insert("bitwise_identical".to_string(), Json::Bool(bitwise));
+        syrk_rows.push(Json::Obj(row));
+        table.row(vec![
+            format!("syrk N={sn} P={sp}"),
+            format!("{tile}"),
+            fdur(t_syrk),
+            fdur(t_tiled),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{bitwise}"),
+        ]);
+    }
+
+    println!("{}", table.render());
+    println!(
+        "resident-bytes model: one-shot = 8·(2N² + 3NP), tiled = 8·(N² + NP + tile·(3P + N)), \
+         spilled = 8·(NP + tile·(3P + 2N)) — no resident N×N; see docs/BACKENDS.md \
+         \"Out-of-core spill\""
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("spilled_gram_builds".to_string()));
+    doc.insert("lambda".to_string(), Json::Num(lambda));
+    doc.insert("grid".to_string(), Json::Arr(rows));
+    doc.insert("primal_syrk".to_string(), Json::Arr(syrk_rows));
+    let out_dir = std::env::var("FASTCV_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = format!("{out_dir}/BENCH_spill.json");
+    match std::fs::write(&path, Json::Obj(doc).dump()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&spill_base);
+}

@@ -101,6 +101,7 @@ fn main() {
                         ctx.pool(),
                         TilePolicy::Rows(tile),
                     )
+                    .unwrap()
                 })
                 .median;
 
@@ -111,7 +112,8 @@ fn main() {
                 GramBackend::Dual,
                 ctx.pool(),
                 TilePolicy::Rows(tile),
-            );
+            )
+            .unwrap();
             let (GramCache::Dual { kc: kc_a, .. }, GramCache::Dual { kc: kc_b, .. }) =
                 (&kc_reference, &kc_tiled)
             else {

@@ -5,7 +5,7 @@
 
 use fastcv::bench::Bench;
 use fastcv::fastcv::bigdata::SparseProjection;
-use fastcv::linalg::{matmul, matmul_pool, syrk_t, Cholesky, Lu, Mat};
+use fastcv::linalg::{matmul, matmul_pool, syrk_t, syrk_tiled, Cholesky, Lu, Mat};
 use fastcv::util::rng::Rng;
 use fastcv::util::table::{fdur, Table};
 use fastcv::util::threadpool::ThreadPool;
@@ -37,11 +37,33 @@ fn main() {
             gflops(2.0 * (s * s * s) as f64, t),
         ]);
     }
+    // Pack-bound GEMM: a skinny B (8 columns) makes the A-packing loop the
+    // dominant cost, so this arm tracks the slice-based `pack_a`/`pack_b`
+    // rewrite (bitwise-identical packing; see linalg::gemm).
+    for &s in sizes {
+        let a = Mat::from_fn(s, s, |_, _| rng.gauss());
+        let b = Mat::from_fn(s, 8, |_, _| rng.gauss());
+        let t = bench.run(|| matmul(&a, &b)).median;
+        table.row(vec![
+            "gemm (pack-bound)".into(),
+            format!("{s}x{s}x8"),
+            fdur(t),
+            gflops(2.0 * (s * s * 8) as f64, t),
+        ]);
+    }
     for &s in sizes {
         let a = Mat::from_fn(2 * s, s, |_, _| rng.gauss());
         let t = bench.run(|| syrk_t(&a)).median;
         table.row(vec![
             "syrk (XᵀX)".into(),
+            format!("{}x{s}", 2 * s),
+            fdur(t),
+            gflops((2 * s) as f64 * (s * s) as f64, t),
+        ]);
+        // the banded form (tiled primal syrk) — bitwise-equal output
+        let t = bench.run(|| syrk_tiled(&a, 64, None)).median;
+        table.row(vec![
+            "syrk_tiled (64-row bands)".into(),
             format!("{}x{s}", 2 * s),
             fdur(t),
             gflops((2 * s) as f64 * (s * s) as f64, t),

@@ -440,7 +440,7 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
     // pool exists and the context is free.
     let ctx = ComputeContext::with_threads(point.threads)
         .with_backend(point.backend)
-        .with_tile_policy(point.tile);
+        .with_tile_policy(point.tile.clone());
 
     match point.exp {
         Experiment::BinaryCv => {
@@ -625,7 +625,7 @@ pub fn run_point_analytic_perm(point: &SweepPoint, seed: u64) -> Result<SweepRes
     };
     let ctx = ComputeContext::with_threads(point.threads)
         .with_backend(point.backend)
-        .with_tile_policy(point.tile);
+        .with_tile_policy(point.tile.clone());
     let (ana_res, t_ana) = if point.exp == Experiment::BinaryPerm {
         timed(|| match point.engine.strategy() {
             None => analytic_binary_permutation_ctx(
@@ -907,8 +907,12 @@ mod tests {
         let off = run_point(&base, 17).unwrap();
         assert_eq!(off.tile, "off");
         assert!(!off.label.contains("tile"), "Off label stays bare: {}", off.label);
-        for tile in [TilePolicy::Rows(8), TilePolicy::Budget { bytes: 1 << 20 }] {
-            let point = SweepPoint { tile, ..base.clone() };
+        for tile in [
+            TilePolicy::Rows(8),
+            TilePolicy::Budget { bytes: 1 << 20 },
+            TilePolicy::Spill { dir: None, tile: 8 },
+        ] {
+            let point = SweepPoint { tile: tile.clone(), ..base.clone() };
             let r = run_point(&point, 17).unwrap();
             assert_eq!(r.acc_ana, off.acc_ana, "{tile:?} accuracy moved");
             assert_eq!(r.acc_std, off.acc_std);

@@ -21,7 +21,10 @@
 use super::context::ComputeContext;
 use super::hat::GramBackend;
 use super::FoldCache;
-use crate::linalg::{gram_tiled, matmul, matmul_pool, Cholesky, Lu, Mat, TilePolicy};
+use crate::linalg::{
+    chol_spill, chol_spill_ridged, gram_spill, gram_tiled, matmul, matmul_pool, syrk_spill,
+    Cholesky, Lu, Mat, PanelStore, TilePolicy,
+};
 use crate::model::linreg::gram_ridged;
 use crate::model::Reg;
 use crate::util::rng::Rng;
@@ -42,8 +45,14 @@ use anyhow::{Context, Result};
 ///   [`ComputeContext`] ([`StreamingHat::build_ctx`]) it is assembled from
 ///   `tile×P` centered slabs and factored **in place**, so beyond the one
 ///   irreducible `N×N` factor and the `O(NP)` outputs every transient is
-///   tile-bounded (see `docs/BACKENDS.md` "Memory-bounded builds" and
-///   `BENCH_tiling.json` for the resident-bytes accounting).
+///   tile-bounded — and under a `TilePolicy::Spill` context even that
+///   factor goes: Gram and factor live as
+///   [`PanelStore`](crate::linalg::spill::PanelStore) panels (RAM or
+///   `--spill-dir` files) streamed through the left-looking
+///   [`crate::linalg::spill::chol_spill`], so **nothing `N×N` is ever
+///   resident** (see `docs/BACKENDS.md` "Out-of-core spill" and
+///   `BENCH_spill.json`/`BENCH_tiling.json` for the resident-bytes
+///   accounting).
 #[derive(Debug)]
 pub struct StreamingHat {
     /// Augmented design.
@@ -122,12 +131,75 @@ impl StreamingHat {
         match backend.resolve(x.rows(), x.cols(), lambda) {
             GramBackend::Dual => Self::build_dual(x, lambda, pool, tile, false),
             GramBackend::Spectral => Self::build_dual(x, lambda, pool, tile, true),
-            _ => Self::build_primal(x, lambda),
+            _ => Self::build_primal(x, lambda, pool, tile),
         }
     }
 
-    fn build_primal(x: &Mat, lambda: f64) -> Result<StreamingHat> {
+    fn build_primal(
+        x: &Mat,
+        lambda: f64,
+        pool: Option<&ThreadPool>,
+        tile: TilePolicy,
+    ) -> Result<StreamingHat> {
         let xa = x.augment_ones();
+        // Out-of-core (`TilePolicy::Spill`): the primal Gram `G₀ = X̃ᵀX̃` is
+        // assembled as tile×(P+1) panels (bitwise = syrk_t, hence =
+        // gram_ridged's basis) and factored with the ridge folded onto the
+        // diagonal at panel load — the (P+1)×(P+1) square never exists in
+        // RAM, matching the dual arm's guarantee on the other quadrant.
+        // Bitwise-identical to the in-RAM Cholesky path below; the LU
+        // fallback for singular unridged grams has no out-of-core form and
+        // errors cleanly instead.
+        if let Some((dir, tile_rows)) = tile.spill() {
+            let p1 = xa.cols();
+            let mut g0 = PanelStore::new(p1, tile_rows, dir)
+                .context("creating the streaming-hat primal spill store")?;
+            syrk_spill(&mut g0, &xa, pool)?;
+            let ch = chol_spill_ridged(&g0, lambda, true, dir, pool).context(
+                "spilled primal-gram factor failed: gram not SPD (increase ridge λ — \
+                 no LU fallback out of core) or spill-store IO (see cause)",
+            )?;
+            drop(g0); // λ-free panels are no longer needed during the solve
+            let mut w = xa.t();
+            ch.solve_mat_in_place(&mut w)?;
+            let t = w.t();
+            return Ok(StreamingHat {
+                xa,
+                t,
+                lambda,
+                backend: GramBackend::Primal,
+                means: None,
+                spectral_coerced: false,
+            });
+        }
+        // Tiled (`Rows`/`Budget`): banded Gram build + in-place blocked
+        // factor — bitwise the one-shot Cholesky path below (syrk_tiled ==
+        // syrk_t, factor_into == factor), with tile-bounded band
+        // transients and no second (P+1)² for the factor. The rare
+        // singular-gram rescue rebuilds densely for the pivoted LU,
+        // exactly like the one-shot arm.
+        let p1 = xa.cols();
+        if let Some(t_rows) = tile.tile_rows(p1, p1) {
+            let mut g = crate::linalg::syrk_tiled(&xa, t_rows, pool);
+            for i in 0..p1 - 1 {
+                g[(i, i)] += lambda;
+            }
+            let w = match Cholesky::factor_into(g, t_rows, pool) {
+                Ok(ch) => ch.solve_mat(&xa.t()),
+                Err(_) => Lu::factor(&gram_ridged(&xa, lambda))
+                    .context("gram singular; increase λ")?
+                    .solve_mat(&xa.t()),
+            };
+            let t = w.t();
+            return Ok(StreamingHat {
+                xa,
+                t,
+                lambda,
+                backend: GramBackend::Primal,
+                means: None,
+                spectral_coerced: false,
+            });
+        }
         let g = gram_ridged(&xa, lambda);
         // T = X̃ G⁻¹ = solve(G, X̃ᵀ)ᵀ — no explicit inverse (see §Perf).
         let w = match Cholesky::factor(&g) {
@@ -160,6 +232,38 @@ impl StreamingHat {
         let p = x.cols();
         let xa = x.augment_ones();
         let means = x.col_means();
+        // Out-of-core (`TilePolicy::Spill`): K_c + λI is assembled straight
+        // into a PanelStore (centered tile×P slabs, ridge folded onto the
+        // assembled diagonal — same float op as the dense `+= λ`), factored
+        // by the left-looking spilled Cholesky, and solved by streaming
+        // panels over the centered O(NP) buffer. The N×N **never exists in
+        // RAM**: peak residency is T_c plus O(tile·(N+P)) slabs — this is
+        // the "memory-bounded fast-CV at any N" build. Bitwise-identical
+        // to the one-shot and tiled paths (spill_* property tests).
+        if let Some((dir, tile_rows)) = tile.spill() {
+            let mut store = PanelStore::new(n, tile_rows, dir)
+                .context("creating the streaming-hat spill store")?;
+            gram_spill(
+                &mut store,
+                lambda,
+                |lo, hi| Mat::from_fn(hi - lo, p, |r, j| x[(lo + r, j)] - means[j]),
+                pool,
+            )?;
+            let ch = chol_spill(store, pool).context(
+                "spilled dual factor failed: K_c + λI not SPD (is λ > 0?) \
+                 or spill-store IO (see cause)",
+            )?;
+            let mut t = Mat::from_fn(n, p, |i, j| x[(i, j)] - means[j]);
+            ch.solve_mat_in_place(&mut t)?;
+            return Ok(StreamingHat {
+                xa,
+                t,
+                lambda,
+                backend: GramBackend::Dual,
+                means: Some(means),
+                spectral_coerced,
+            });
+        }
         let t = match tile.tile_rows(n, p) {
             // Historical one-shot path, bitwise-unchanged (TilePolicy::Off).
             None => {
@@ -712,6 +816,101 @@ mod tests {
         )
         .unwrap();
         assert_eq!(reference.t.as_slice(), off.t.as_slice());
+    }
+
+    #[test]
+    fn spill_streaming_dual_bitwise_matches_one_shot() {
+        // Acceptance: the out-of-core dual streaming build — K_c+λI panels
+        // in a PanelStore, left-looking spilled factor, streamed solve —
+        // reproduces the one-shot build to the last bit across tile
+        // heights {1, 7, N, N+3}, RAM and disk panels, serial and pooled;
+        // decision values follow bitwise.
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(91);
+        let n = 23;
+        let ds = generate(&SyntheticSpec::binary(n, 70), &mut rng);
+        let y = ds.y_signed();
+        let folds = kfold(n, 4, &mut rng);
+        let lambda = 0.8;
+        let reference = StreamingHat::build_with(&ds.x, lambda, GramBackend::Dual, None).unwrap();
+        let dv_ref = reference.decision_values(&y, &folds).unwrap();
+        let base = std::env::temp_dir()
+            .join(format!("fastcv-stream-spill-{}", std::process::id()));
+        for tile in [1usize, 7, n, n + 3] {
+            for disk in [false, true] {
+                for threads in [1usize, 3] {
+                    let dir = disk.then(|| base.clone());
+                    let ctx = ComputeContext::with_threads(threads)
+                        .with_backend(GramBackend::Dual)
+                        .with_tile_policy(TilePolicy::Spill { dir, tile });
+                    let spilled = StreamingHat::build_ctx(&ds.x, lambda, &ctx).unwrap();
+                    assert_eq!(
+                        reference.t.as_slice(),
+                        spilled.t.as_slice(),
+                        "T_c moved (tile={tile} disk={disk} threads={threads})"
+                    );
+                    assert_eq!(spilled.backend, GramBackend::Dual);
+                    let dv = spilled.decision_values(&y, &folds).unwrap();
+                    for (a, b) in dv_ref.iter().zip(&dv) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "dvals moved (tile={tile})");
+                    }
+                }
+            }
+        }
+        // λ = 0 through the spilled path errors cleanly, like the dense dual
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Dual)
+            .with_tile_policy(TilePolicy::Spill { dir: None, tile: 8 });
+        assert!(StreamingHat::build_ctx(&ds.x, 0.0, &ctx).is_err());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_streaming_primal_bitwise_matches_one_shot() {
+        // The primal streaming arm honours TilePolicy::Spill too: G₀
+        // panels + ridge-on-load factor + streamed solve must reproduce
+        // the one-shot primal build (its Cholesky path) to the last bit —
+        // no resident (P+1)×(P+1) on the tall quadrant either.
+        use crate::fastcv::ComputeContext;
+        let mut rng = Rng::new(92);
+        let ds = generate(&SyntheticSpec::binary(40, 12), &mut rng);
+        let y = ds.y_signed();
+        let folds = kfold(40, 4, &mut rng);
+        for lambda in [0.0, 0.5] {
+            let reference = StreamingHat::build(&ds.x, lambda).unwrap();
+            let dv_ref = reference.decision_values(&y, &folds).unwrap();
+            for tile in [1usize, 7, 13, 16] {
+                for policy in
+                    [TilePolicy::Spill { dir: None, tile }, TilePolicy::Rows(tile)]
+                {
+                    let ctx = ComputeContext::with_threads(2)
+                        .with_backend(GramBackend::Primal)
+                        .with_tile_policy(policy.clone());
+                    let spilled = StreamingHat::build_ctx(&ds.x, lambda, &ctx).unwrap();
+                    assert_eq!(spilled.backend, GramBackend::Primal);
+                    assert_eq!(spilled.t.shape(), (40, 13), "primal T = X̃S stays N×(P+1)");
+                    assert_eq!(
+                        reference.t.as_slice(),
+                        spilled.t.as_slice(),
+                        "primal T moved ({policy:?} λ={lambda})"
+                    );
+                    let dv = spilled.decision_values(&y, &folds).unwrap();
+                    for (a, b) in dv_ref.iter().zip(&dv) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "dvals moved ({policy:?})");
+                    }
+                }
+            }
+        }
+        // Wide + λ=0 through the spilled primal arm: the in-RAM LU
+        // fallback has no out-of-core form — clean error, not a panic.
+        let wide = generate(&SyntheticSpec::binary(12, 40), &mut rng);
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Primal)
+            .with_tile_policy(TilePolicy::Spill { dir: None, tile: 8 });
+        let err = StreamingHat::build_ctx(&wide.x, 0.0, &ctx)
+            .err()
+            .expect("singular spilled primal gram must error");
+        assert!(format!("{err:#}").contains("increase ridge"), "{err:#}");
     }
 
     #[test]

@@ -105,7 +105,10 @@ impl<'p> ComputeContext<'p> {
     /// historical one-shot kernels; the tiled modes are **bit-identical**
     /// to them (`tiled_*` property tests) but bound every transient slab
     /// beyond the factor itself to `O(tile)` rows — the §4.5 memory-bounded
-    /// regime. Surfaced on the CLI as `--tile-rows` / `--mem-budget`.
+    /// regime — and [`TilePolicy::Spill`] removes the resident factor too,
+    /// persisting Gram/factor panels through the
+    /// [`crate::linalg::spill`] layer (`spill_*` property tests). Surfaced
+    /// on the CLI as `--tile-rows` / `--mem-budget` / `--spill-dir`.
     pub fn with_tile_policy(mut self, tile: TilePolicy) -> Self {
         self.tile_policy = tile;
         self
@@ -116,10 +119,25 @@ impl<'p> ComputeContext<'p> {
         self.backend
     }
 
+    /// Resolve this context's backend for a λ-grid (`positives` positive
+    /// candidates on an `n×p` shape), **accounting for the tile policy**:
+    /// under [`TilePolicy::Spill`], an `Auto` that would pick `Spectral`
+    /// picks `Dual` instead — the spectral eigenvector matrix is an
+    /// irreducible resident `N×N`, which is exactly what `--spill-dir`
+    /// asks to avoid, while the dual per-λ Cholesky streams fully out of
+    /// core (each candidate pays an `N³/3` spilled factor instead of
+    /// sharing one eigendecomposition; winners agree across backends per
+    /// the `backend_*` equivalence contract). An *explicit* backend —
+    /// including `Spectral` — is always honoured.
+    pub fn resolve_for_grid(&self, n: usize, p: usize, positives: usize) -> GramBackend {
+        self.backend.resolve_for_grid_spill_aware(n, p, positives, &self.tile_policy)
+    }
+
     /// The tiling policy for `N×N` Gram builds ([`TilePolicy::Off`] by
-    /// default).
+    /// default). Returned by clone — the `Spill` variant carries its
+    /// spill-directory path.
     pub fn tile_policy(&self) -> TilePolicy {
-        self.tile_policy
+        self.tile_policy.clone()
     }
 
     /// Whether nested CV may share one full-data Gram across outer folds.
@@ -190,5 +208,29 @@ mod tests {
     fn tiled_default_context_tiling_is_off() {
         assert!(ComputeContext::serial().tile_policy().is_off());
         assert!(ComputeContext::with_threads(2).tile_policy().is_off());
+    }
+
+    #[test]
+    fn spill_auto_grid_resolution_prefers_dual_out_of_core() {
+        // --spill-dir asks for no resident square; a spectral cache cannot
+        // provide that (its eigenvector matrix is N×N), so Auto λ-grid
+        // resolution under a Spill policy picks the fully-streamable Dual.
+        let spill = TilePolicy::Spill { dir: None, tile: 8 };
+        let ctx = ComputeContext::serial().with_tile_policy(spill.clone());
+        assert_eq!(ctx.resolve_for_grid(20, 100, 4), GramBackend::Dual);
+        // without spill, the usual spectral upgrade
+        assert_eq!(
+            ComputeContext::serial().resolve_for_grid(20, 100, 4),
+            GramBackend::Spectral
+        );
+        // tall shapes keep primal either way
+        assert_eq!(ctx.resolve_for_grid(100, 20, 4), GramBackend::Primal);
+        // a single positive candidate was dual already
+        assert_eq!(ctx.resolve_for_grid(20, 100, 1), GramBackend::Dual);
+        // an explicit Spectral request is honoured (assembly-tiled only)
+        let explicit = ComputeContext::serial()
+            .with_backend(GramBackend::Spectral)
+            .with_tile_policy(spill);
+        assert_eq!(explicit.resolve_for_grid(20, 100, 4), GramBackend::Spectral);
     }
 }

@@ -48,12 +48,13 @@
 
 use super::context::ComputeContext;
 use crate::linalg::{
-    gram_tiled, matmul, matmul_pool, matvec_gemm_order, sym_eig, syrk_t_pool, Cholesky, Lu, Mat,
-    SymEig, TilePolicy,
+    chol_spill_ridged, gram_spill, gram_tiled, matmul, matmul_pool, matvec_gemm_order, sym_eig,
+    syrk_spill, syrk_t_pool, syrk_tiled, Cholesky, Lu, Mat, PanelStore, SymEig, TilePolicy,
 };
 use crate::model::linreg::gram_ridged;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
 
 /// Panel width for the pooled per-λ `K_c + λI` Cholesky when no explicit
 /// tile height is in force (the factor is `N×N`, so any fixed panel works;
@@ -133,6 +134,33 @@ impl GramBackend {
             other => other,
         }
     }
+
+    /// [`GramBackend::resolve_for_grid`] made **spill-aware** — the single
+    /// source of the out-of-core downgrade rule: under a
+    /// [`TilePolicy::Spill`] policy, an `Auto` that would pick `Spectral`
+    /// picks `Dual` instead (the spectral eigenvector matrix is an
+    /// irreducible resident `N×N`, which is exactly what spilling asks to
+    /// avoid; the dual per-λ Cholesky streams fully out of core). Explicit
+    /// backends — including `Spectral` — pass through untouched. Called by
+    /// [`crate::fastcv::context::ComputeContext::resolve_for_grid`] and
+    /// [`GramCache::build_tiled`]'s blind-`Auto` fallback.
+    pub fn resolve_for_grid_spill_aware(
+        self,
+        n: usize,
+        p: usize,
+        positive_candidates: usize,
+        tile: &TilePolicy,
+    ) -> GramBackend {
+        let resolved = self.resolve_for_grid(n, p, positive_candidates);
+        if self == GramBackend::Auto
+            && resolved == GramBackend::Spectral
+            && tile.spill().is_some()
+        {
+            GramBackend::Dual
+        } else {
+            resolved
+        }
+    }
 }
 
 /// Which factorisation of the gram matrix backs this hat matrix.
@@ -180,6 +208,36 @@ pub enum GramCache {
     Dual { xa: Mat, kc: Mat },
     /// Eigendecomposition of `K_c`.
     Spectral(SpectralGram),
+    /// Out-of-core primal ([`TilePolicy::Spill`]): `G₀` lives as
+    /// [`PanelStore`] panels; each λ streams a left-looking factor through
+    /// [`crate::linalg::spill::chol_spill_ridged`] (ridge folded onto the
+    /// diagonal at panel load — no intermediate ridged store), so the
+    /// `(P+1)×(P+1)` quadrant never coexists in RAM. Hats are bitwise what
+    /// the in-RAM primal arm produces (on its Cholesky path — out of core
+    /// there is no LU fallback for singular unridged grams).
+    PrimalSpill {
+        /// Augmented design `X̃` (`O(NP)` — the streamed working set).
+        xa: Mat,
+        /// `G₀ = X̃ᵀX̃` as `tile×(P+1)` panels, values bitwise equal to
+        /// [`crate::linalg::syrk_t`]'s.
+        g0: PanelStore,
+        /// Spill directory for the per-λ factor stores (`None` = RAM
+        /// panels).
+        spill_dir: Option<PathBuf>,
+    },
+    /// Out-of-core dual ([`TilePolicy::Spill`]): `K_c` lives as
+    /// [`PanelStore`] panels; each λ streams a left-looking factor through
+    /// [`crate::linalg::spill::chol_spill_ridged`]. Beyond the `N×N` hat
+    /// output itself, nothing square is resident.
+    DualSpill {
+        /// Augmented design `X̃`.
+        xa: Mat,
+        /// Centered `K_c = X_c X_cᵀ` as `tile×N` panels, values bitwise
+        /// equal to the one-shot centered Gram.
+        kc: PanelStore,
+        /// Spill directory for the per-λ factor stores.
+        spill_dir: Option<PathBuf>,
+    },
 }
 
 impl GramCache {
@@ -214,49 +272,84 @@ impl GramCache {
     /// ```
     pub fn build(x: &Mat, backend: GramBackend, pool: Option<&ThreadPool>) -> GramCache {
         Self::build_tiled(x, backend, pool, TilePolicy::Off)
+            .expect("TilePolicy::Off builds cannot fail")
     }
 
     /// [`GramCache::build`] under a [`TilePolicy`]: with tiling on, the
     /// dual/spectral `K_c` is assembled from `tile×P` centered slabs
     /// ([`crate::linalg::gram_tiled`]) instead of a full `O(NP)` centered
-    /// copy plus its transpose — bit-identical output, tile-bounded
-    /// transients. [`TilePolicy::Off`] reproduces the one-shot build
-    /// verbatim. The primal arm is untouched by tiling (its Gram is
-    /// `(P+1)²` over the raw design; there is no `N×N` to bound).
+    /// copy plus its transpose, and the primal `G₀ = X̃ᵀX̃` goes through the
+    /// banded [`crate::linalg::syrk_tiled`] — bit-identical output,
+    /// tile-bounded transients. [`TilePolicy::Spill`] goes out of core:
+    /// the primal/dual Gram lives as [`PanelStore`] panels (RAM or disk)
+    /// and every per-λ factor streams through
+    /// [`crate::linalg::spill::chol_spill_ridged`] — see
+    /// [`GramCache::PrimalSpill`] / [`GramCache::DualSpill`]. [`TilePolicy::Off`] reproduces the
+    /// one-shot build verbatim. Errors only on spill-store IO.
     pub fn build_tiled(
         x: &Mat,
         backend: GramBackend,
         pool: Option<&ThreadPool>,
         tile: TilePolicy,
-    ) -> GramCache {
-        let backend = match backend {
-            GramBackend::Auto => backend.resolve_for_grid(x.rows(), x.cols(), 2),
-            other => other,
-        };
-        match backend {
+    ) -> Result<GramCache> {
+        // A blind Auto under an out-of-core policy must not build a
+        // resident spectral cache — same rule as the ctx-level resolution.
+        let backend = backend.resolve_for_grid_spill_aware(x.rows(), x.cols(), 2, &tile);
+        Ok(match backend {
             GramBackend::Primal => {
                 let xa = x.augment_ones();
-                let g0 = syrk_t_pool(&xa, pool);
-                GramCache::Primal { xa, g0 }
+                let p1 = xa.cols();
+                if let Some((dir, t)) = tile.spill() {
+                    let mut g0 = PanelStore::new(p1, t, dir)
+                        .context("creating the primal spill store")?;
+                    syrk_spill(&mut g0, &xa, pool)?;
+                    GramCache::PrimalSpill { xa, g0, spill_dir: dir.map(Path::to_path_buf) }
+                } else {
+                    // Band height resolved against the (P+1)-dim output —
+                    // the primal Gram has no N×N; its slab is a band row of
+                    // width P+1.
+                    let g0 = match tile.tile_rows(p1, p1) {
+                        None => syrk_t_pool(&xa, pool),
+                        Some(t) => syrk_tiled(&xa, t, pool),
+                    };
+                    GramCache::Primal { xa, g0 }
+                }
             }
             GramBackend::Dual => {
                 let xa = x.augment_ones();
-                let kc = match tile.tile_rows(x.rows(), x.cols()) {
-                    None => centered_gram(x, pool),
-                    Some(t) => centered_gram_tiled(x, t, pool),
-                };
-                GramCache::Dual { xa, kc }
+                if let Some((dir, t)) = tile.spill() {
+                    let mut kc = PanelStore::new(x.rows(), t, dir)
+                        .context("creating the dual spill store")?;
+                    let means = x.col_means();
+                    let p = x.cols();
+                    gram_spill(
+                        &mut kc,
+                        0.0,
+                        |lo, hi| Mat::from_fn(hi - lo, p, |r, j| x[(lo + r, j)] - means[j]),
+                        pool,
+                    )?;
+                    GramCache::DualSpill { xa, kc, spill_dir: dir.map(Path::to_path_buf) }
+                } else {
+                    let kc = match tile.tile_rows(x.rows(), x.cols()) {
+                        None => centered_gram(x, pool),
+                        Some(t) => centered_gram_tiled(x, t, pool),
+                    };
+                    GramCache::Dual { xa, kc }
+                }
             }
             GramBackend::Spectral | GramBackend::Auto => {
                 GramCache::Spectral(SpectralGram::build_tiled(x, pool, tile))
             }
-        }
+        })
     }
 
     /// Number of samples behind the cached state.
     pub fn n(&self) -> usize {
         match self {
-            GramCache::Primal { xa, .. } | GramCache::Dual { xa, .. } => xa.rows(),
+            GramCache::Primal { xa, .. }
+            | GramCache::Dual { xa, .. }
+            | GramCache::PrimalSpill { xa, .. }
+            | GramCache::DualSpill { xa, .. } => xa.rows(),
             GramCache::Spectral(sg) => sg.n(),
         }
     }
@@ -328,6 +421,58 @@ impl GramCache {
                 })
             }
             GramCache::Spectral(sg) => sg.hat_pool(lambda, pool),
+            GramCache::PrimalSpill { xa, g0, spill_dir } => {
+                // Left-looking spilled factor with the ridge folded onto
+                // each panel's diagonal at load (intercept unpenalised,
+                // like the in-RAM `g[(i,i)] += λ` loop — no intermediate
+                // ridged store), streamed solve of `W = G⁻¹X̃ᵀ`, then the
+                // same hat GEMM — bitwise the in-RAM primal Cholesky path.
+                // Neutral context: the cause may be a non-SPD gram *or*
+                // spill-store IO — the error chain carries the specifics.
+                let ch = chol_spill_ridged(g0, lambda, true, spill_dir.as_deref(), pool)
+                    .context(
+                        "spilled primal-gram factor failed: gram not SPD (increase ridge λ — \
+                         out of core there is no LU fallback) or spill-store IO (see cause)",
+                    )?;
+                let mut w = xa.t();
+                ch.solve_mat_in_place(&mut w)?;
+                let mut h = matmul_pool(xa, &w, pool);
+                h.symmetrize();
+                Ok(HatMatrix {
+                    h,
+                    xa: xa.clone(),
+                    factor: GramFactor::OnDemand,
+                    lambda,
+                    backend: GramBackend::Primal,
+                })
+            }
+            GramCache::DualSpill { xa, kc, spill_dir } => {
+                if lambda <= 0.0 {
+                    bail!("dual Gram backend requires ridge λ > 0 (K_c is always singular: K_c𝟙 = 0)");
+                }
+                let ch = chol_spill_ridged(kc, lambda, false, spill_dir.as_deref(), pool)
+                    .context(
+                        "spilled dual factor failed: K_c + λI not SPD (is λ > 0?) \
+                         or spill-store IO (see cause)",
+                    )?;
+                // The RHS K_c becomes H in place — the one N×N that must
+                // exist (it is the output); the factor streams past it.
+                let mut h = kc.to_mat()?;
+                ch.solve_mat_in_place(&mut h)?;
+                let n = kc.n();
+                let inv_n = 1.0 / n as f64;
+                for v in h.as_mut_slice() {
+                    *v += inv_n;
+                }
+                h.symmetrize();
+                Ok(HatMatrix {
+                    h,
+                    xa: xa.clone(),
+                    factor: GramFactor::OnDemand,
+                    lambda,
+                    backend: GramBackend::Dual,
+                })
+            }
         }
     }
 }
@@ -389,7 +534,11 @@ impl SpectralGram {
     /// goes through the tile-bounded engine (bit-identical; see
     /// [`GramCache::build_tiled`]). The eigendecomposition itself is dense
     /// `N×N` either way — spectral reuse is for λ *grids*, where that
-    /// one-off cost is the point.
+    /// one-off cost is the point. A [`TilePolicy::Spill`] therefore only
+    /// tile-bounds the *assembly* here (the eigenvector matrix is an
+    /// irreducible resident `N×N`); single-λ wide callers that must stay
+    /// out of core should use the dual backend, whose
+    /// [`GramCache::DualSpill`] arm never holds a resident square.
     pub fn build_tiled(x: &Mat, pool: Option<&ThreadPool>, tile: TilePolicy) -> SpectralGram {
         let xa = x.augment_ones();
         let kc = match tile.tile_rows(x.rows(), x.cols()) {
@@ -478,8 +627,17 @@ impl SpectralGram {
 /// [`crate::fastcv::lambda_search::nested_cv_ctx`]. Agreement is
 /// property-tested at tolerance.
 pub struct SharedNestedGram {
-    /// `K = XXᵀ`, `N×N`, symmetric.
-    k: Mat,
+    /// `K = XXᵀ`, `N×N`, symmetric — dense, or spilled to
+    /// [`PanelStore`] panels under a [`TilePolicy::Spill`] (the shared
+    /// Gram is long-lived across all outer folds, so spilling it is a real
+    /// `8N²`-byte saving; each fold gathers only its `N_tr²` selection).
+    k: NestedGramStorage,
+}
+
+/// Dense-or-spilled storage for the shared nested-CV Gram.
+enum NestedGramStorage {
+    Dense(Mat),
+    Spilled(PanelStore),
 }
 
 impl SharedNestedGram {
@@ -487,56 +645,83 @@ impl SharedNestedGram {
     /// nested CV.
     pub fn build(x: &Mat, pool: Option<&ThreadPool>) -> SharedNestedGram {
         Self::build_tiled(x, pool, TilePolicy::Off)
+            .expect("TilePolicy::Off builds cannot fail")
     }
 
     /// [`SharedNestedGram::build`] under a [`TilePolicy`]: the full `XXᵀ`
     /// is assembled from raw `tile×P` row slabs — no `P×N` transpose copy —
     /// bit-identical to the one-shot build (the tiled engine's contract).
-    pub fn build_tiled(x: &Mat, pool: Option<&ThreadPool>, tile: TilePolicy) -> SharedNestedGram {
-        let k = match tile.tile_rows(x.rows(), x.cols()) {
-            None => {
-                let mut k = matmul_pool(x, &x.t(), pool);
-                k.symmetrize();
-                k
-            }
-            Some(t) => {
-                let p = x.cols();
-                gram_tiled(
-                    x.rows(),
-                    t,
-                    |lo, hi| Mat::from_fn(hi - lo, p, |r, j| x[(lo + r, j)]),
-                    pool,
-                )
-            }
+    /// Under [`TilePolicy::Spill`] the assembled panels stay in the
+    /// [`PanelStore`] (disk when a dir is given); per-fold selections
+    /// gather from the panels ([`PanelStore::take_square`], a pure
+    /// gather, bitwise). Errors only on spill-store IO.
+    pub fn build_tiled(
+        x: &Mat,
+        pool: Option<&ThreadPool>,
+        tile: TilePolicy,
+    ) -> Result<SharedNestedGram> {
+        let p = x.cols();
+        let raw_slab = |lo: usize, hi: usize| Mat::from_fn(hi - lo, p, |r, j| x[(lo + r, j)]);
+        let k = if let Some((dir, t)) = tile.spill() {
+            let mut store = PanelStore::new(x.rows(), t, dir)
+                .context("creating the nested-CV spill store")?;
+            gram_spill(&mut store, 0.0, raw_slab, pool)?;
+            NestedGramStorage::Spilled(store)
+        } else {
+            NestedGramStorage::Dense(match tile.tile_rows(x.rows(), x.cols()) {
+                None => {
+                    let mut k = matmul_pool(x, &x.t(), pool);
+                    k.symmetrize();
+                    k
+                }
+                Some(t) => gram_tiled(x.rows(), t, raw_slab, pool),
+            })
         };
-        SharedNestedGram { k }
+        Ok(SharedNestedGram { k })
     }
 
     /// Number of samples in the full dataset.
     pub fn n(&self) -> usize {
-        self.k.rows()
+        match &self.k {
+            NestedGramStorage::Dense(k) => k.rows(),
+            NestedGramStorage::Spilled(store) => store.n(),
+        }
+    }
+
+    /// Gather the shared Gram into a dense matrix (tests / callers that
+    /// decide it fits after all). A no-copy borrow is impossible for the
+    /// spilled form, so this always allocates.
+    pub fn to_dense(&self) -> Result<Mat> {
+        match &self.k {
+            NestedGramStorage::Dense(k) => Ok(k.clone()),
+            NestedGramStorage::Spilled(store) => store.to_mat(),
+        }
     }
 
     /// One outer fold's centered training Gram `K_c^{Tr}` by the Eq. 9–12
     /// style downdate: select `K[Tr,Tr]`, double-center in `O(N_tr²)` — no
-    /// `O(N_tr²P)` feature-side rebuild.
-    fn fold_gram(&self, tr: &[usize]) -> Mat {
+    /// `O(N_tr²P)` feature-side rebuild. Errors only on spill-store IO.
+    fn fold_gram(&self, tr: &[usize]) -> Result<Mat> {
         let m = tr.len();
-        let kt = self.k.take(tr, tr);
+        let kt = match &self.k {
+            NestedGramStorage::Dense(k) => k.take(tr, tr),
+            NestedGramStorage::Spilled(store) => store.take_square(tr)?,
+        };
         let row_means: Vec<f64> = (0..m).map(|i| kt.row(i).iter().sum::<f64>() / m as f64).collect();
         let grand = row_means.iter().sum::<f64>() / m as f64;
-        Mat::from_fn(m, m, |i, j| kt[(i, j)] - row_means[i] - row_means[j] + grand)
+        Ok(Mat::from_fn(m, m, |i, j| kt[(i, j)] - row_means[i] - row_means[j] + grand))
     }
 
     /// The spectral cache for one outer fold's training set: select
     /// `K[Tr,Tr]`, double-center it, eigendecompose. `x_tr` must be the
     /// matching training rows of the data (only used to carry the augmented
     /// design into the produced hats — no `O(N_tr²P)` Gram rebuild).
-    pub fn fold_spectral(&self, x_tr: &Mat, tr: &[usize]) -> SpectralGram {
+    /// Errors only on spill-store IO.
+    pub fn fold_spectral(&self, x_tr: &Mat, tr: &[usize]) -> Result<SpectralGram> {
         assert_eq!(x_tr.rows(), tr.len(), "x_tr rows must match the training index set");
-        let kc = self.fold_gram(tr);
+        let kc = self.fold_gram(tr)?;
         let SymEig { values, vectors } = sym_eig(&kc);
-        SpectralGram::from_parts(x_tr.augment_ones(), values, vectors)
+        Ok(SpectralGram::from_parts(x_tr.augment_ones(), values, vectors))
     }
 
     /// The **dual** cache for one outer fold's training set — the
@@ -546,10 +731,10 @@ impl SharedNestedGram {
     /// This is what lets [`crate::fastcv::lambda_search::nested_cv_ctx`]
     /// share the full-data Gram on wide shapes whose grid has exactly one
     /// positive candidate (where [`GramBackend::resolve_for_grid`] picks
-    /// `Dual`, not `Spectral`).
-    pub fn fold_dual(&self, x_tr: &Mat, tr: &[usize]) -> GramCache {
+    /// `Dual`, not `Spectral`). Errors only on spill-store IO.
+    pub fn fold_dual(&self, x_tr: &Mat, tr: &[usize]) -> Result<GramCache> {
         assert_eq!(x_tr.rows(), tr.len(), "x_tr rows must match the training index set");
-        GramCache::Dual { xa: x_tr.augment_ones(), kc: self.fold_gram(tr) }
+        Ok(GramCache::Dual { xa: x_tr.augment_ones(), kc: self.fold_gram(tr)? })
     }
 }
 
@@ -620,7 +805,7 @@ impl HatMatrix {
     pub fn build_ctx(x: &Mat, lambda: f64, ctx: &ComputeContext<'_>) -> Result<HatMatrix> {
         assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
         let resolved = ctx.backend().resolve(x.rows(), x.cols(), lambda);
-        GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy())
+        GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy())?
             .hat_pool_tiled(lambda, ctx.pool(), ctx.tile_policy())
     }
 
@@ -652,9 +837,12 @@ impl HatMatrix {
         }
     }
 
-    /// Factor the primal Gram from the stored `xa` (dual/spectral hats
-    /// only). With λ > 0 — the only regime those backends exist in — the
-    /// Gram is SPD, so this cannot fail for a well-formed hat.
+    /// Factor the primal Gram from the stored `xa` (hats whose builder
+    /// kept no factor: dual/spectral, and the spilled primal/dual arms —
+    /// for those this **re-materialises the dense `(P+1)²` Gram** the
+    /// spill policy avoided, so keep [`HatMatrix::inv_gram`] /
+    /// [`HatMatrix::solve_gram`] off out-of-core hot paths). With λ > 0
+    /// the Gram is SPD, so this cannot fail for a well-formed hat.
     fn primal_factor(&self) -> GramFactor {
         let g = gram_ridged(&self.xa, self.lambda);
         match Cholesky::factor(&g) {
@@ -937,7 +1125,7 @@ mod tests {
         let te: Vec<usize> = (0..n).filter(|i| i % 4 == 1).collect();
         let tr = crate::fastcv::complement(&te, n);
         let x_tr = x.take_rows(&tr);
-        let sg_down = shared.fold_spectral(&x_tr, &tr);
+        let sg_down = shared.fold_spectral(&x_tr, &tr).unwrap();
         assert_eq!(sg_down.n(), tr.len());
         let direct = SpectralGram::build(&x_tr, None);
         for lambda in [0.2, 1.0, 30.0] {
@@ -975,7 +1163,8 @@ mod tests {
         for t in [1usize, 7, n, n + 3] {
             for pool_opt in [None, Some(&pool)] {
                 let tiled =
-                    GramCache::build_tiled(&x, GramBackend::Dual, pool_opt, TilePolicy::Rows(t));
+                    GramCache::build_tiled(&x, GramBackend::Dual, pool_opt, TilePolicy::Rows(t))
+                        .unwrap();
                 let GramCache::Dual { kc, .. } = &tiled else { unreachable!() };
                 assert_eq!(kc.as_slice(), kc_ref.as_slice(), "K_c moved (tile={t})");
                 for lambda in [0.3, 5.0] {
@@ -993,7 +1182,7 @@ mod tests {
         // Budget policy resolves to some tile and stays bitwise too.
         let budget = TilePolicy::Budget { bytes: 64 << 10 };
         assert!(budget.tile_rows(n, 90).is_some());
-        let tiled = GramCache::build_tiled(&x, GramBackend::Dual, Some(&pool), budget);
+        let tiled = GramCache::build_tiled(&x, GramBackend::Dual, Some(&pool), budget).unwrap();
         let GramCache::Dual { kc, .. } = &tiled else { unreachable!() };
         assert_eq!(kc.as_slice(), kc_ref.as_slice(), "budget-tiled K_c moved");
     }
@@ -1011,7 +1200,7 @@ mod tests {
                     continue;
                 }
                 let today = GramCache::build(&x, backend, None);
-                let off = GramCache::build_tiled(&x, backend, None, TilePolicy::Off);
+                let off = GramCache::build_tiled(&x, backend, None, TilePolicy::Off).unwrap();
                 for lambda in [0.4, 8.0] {
                     let a = today.hat(lambda).unwrap();
                     let b = off.hat_pool_tiled(lambda, None, TilePolicy::Off).unwrap();
@@ -1043,8 +1232,175 @@ mod tests {
             }
         }
         let shared_ref = SharedNestedGram::build(&x, None);
-        let shared_tiled = SharedNestedGram::build_tiled(&x, Some(&pool), TilePolicy::Rows(7));
-        assert_eq!(shared_ref.k.as_slice(), shared_tiled.k.as_slice(), "XXᵀ moved");
+        let shared_tiled =
+            SharedNestedGram::build_tiled(&x, Some(&pool), TilePolicy::Rows(7)).unwrap();
+        assert_eq!(
+            shared_ref.to_dense().unwrap().as_slice(),
+            shared_tiled.to_dense().unwrap().as_slice(),
+            "XXᵀ moved"
+        );
+    }
+
+    #[test]
+    fn spill_gram_cache_dual_hats_bitwise_match_in_ram() {
+        // Acceptance: the out-of-core dual cache — K_c panels + per-λ
+        // spilled factor + streamed solve — reproduces the in-RAM dual
+        // hats to the last bit across tile heights {1, 7, N, N+3}, RAM and
+        // disk panels, serial and pooled.
+        let mut rng = Rng::new(71);
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let n = 22;
+        let x = random_x(&mut rng, n, 70);
+        let reference = GramCache::build(&x, GramBackend::Dual, None);
+        let base = std::env::temp_dir()
+            .join(format!("fastcv-hat-spill-{}", std::process::id()));
+        for t in [1usize, 7, n, n + 3] {
+            for dir in [None, Some(base.as_path())] {
+                let tile = TilePolicy::Spill { dir: dir.map(|d| d.to_path_buf()), tile: t };
+                let spilled =
+                    GramCache::build_tiled(&x, GramBackend::Dual, Some(&pool), tile.clone())
+                        .unwrap();
+                assert!(matches!(spilled, GramCache::DualSpill { .. }));
+                for lambda in [0.3, 5.0] {
+                    let h_ref = reference.hat(lambda).unwrap();
+                    let h_spill =
+                        spilled.hat_pool_tiled(lambda, Some(&pool), tile.clone()).unwrap();
+                    assert_eq!(
+                        h_ref.h.as_slice(),
+                        h_spill.h.as_slice(),
+                        "hat moved (tile={t} disk={} λ={lambda})",
+                        dir.is_some()
+                    );
+                    assert_eq!(h_spill.backend, GramBackend::Dual);
+                }
+                // λ = 0 stays a clean error, like the in-RAM dual arm
+                assert!(spilled.hat(0.0).is_err());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_gram_cache_primal_hats_bitwise_match_in_ram() {
+        // The spilled primal quadrant: G₀ panels via syrk_spill + per-λ
+        // spilled factor must reproduce the in-RAM primal hats (their
+        // Cholesky path) bitwise — tall shape, λ ≥ 0.
+        let mut rng = Rng::new(72);
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let x = random_x(&mut rng, 30, 12);
+        let reference = GramCache::build(&x, GramBackend::Primal, None);
+        for t in [1usize, 5, 13, 16] {
+            let tile = TilePolicy::Spill { dir: None, tile: t };
+            let spilled =
+                GramCache::build_tiled(&x, GramBackend::Primal, Some(&pool), tile.clone())
+                    .unwrap();
+            assert!(matches!(spilled, GramCache::PrimalSpill { .. }));
+            assert_eq!(spilled.n(), 30);
+            for lambda in [0.0, 0.3, 10.0] {
+                let h_ref = reference.hat(lambda).unwrap();
+                let h_spill = spilled.hat_pool_tiled(lambda, Some(&pool), tile.clone()).unwrap();
+                assert_eq!(
+                    h_ref.h.as_slice(),
+                    h_spill.h.as_slice(),
+                    "primal hat moved (tile={t} λ={lambda})"
+                );
+                assert_eq!(h_spill.backend, GramBackend::Primal);
+            }
+        }
+        // Wide + λ=0: the in-RAM arm falls back to LU; out of core this is
+        // a clean error telling the caller to ridge, not a panic.
+        let x_wide = random_x(&mut rng, 10, 30);
+        let spilled = GramCache::build_tiled(
+            &x_wide,
+            GramBackend::Primal,
+            None,
+            TilePolicy::Spill { dir: None, tile: 8 },
+        )
+        .unwrap();
+        let err = spilled.hat(0.0).err().expect("singular spilled gram must error");
+        assert!(format!("{err:#}").contains("increase ridge"), "{err:#}");
+    }
+
+    #[test]
+    fn spill_tiled_primal_gram_cache_uses_syrk_tiled_bitwise() {
+        // The tiled-primal-syrk wiring: a Rows/Budget policy now routes the
+        // primal G₀ through syrk_tiled — bitwise the same cache and hats as
+        // the historical syrk_t_pool build.
+        let mut rng = Rng::new(73);
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        let x = random_x(&mut rng, 26, 14);
+        let reference = GramCache::build(&x, GramBackend::Primal, Some(&pool));
+        let GramCache::Primal { g0: g0_ref, .. } = &reference else { unreachable!() };
+        for tile in [TilePolicy::Rows(1), TilePolicy::Rows(7), TilePolicy::Budget { bytes: 4 << 10 }]
+        {
+            let tiled =
+                GramCache::build_tiled(&x, GramBackend::Primal, Some(&pool), tile.clone())
+                    .unwrap();
+            let GramCache::Primal { g0, .. } = &tiled else { unreachable!() };
+            assert_eq!(g0.as_slice(), g0_ref.as_slice(), "G₀ moved ({tile:?})");
+            for lambda in [0.0, 2.0] {
+                assert_eq!(
+                    reference.hat(lambda).unwrap().h.as_slice(),
+                    tiled.hat_pool_tiled(lambda, Some(&pool), tile.clone()).unwrap().h.as_slice(),
+                    "primal hat moved ({tile:?} λ={lambda})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spill_shared_nested_gram_matches_dense() {
+        // A spilled shared XXᵀ must gather to the dense build bitwise, and
+        // its fold downdates must feed identical spectral/dual caches.
+        let mut rng = Rng::new(74);
+        let n = 24;
+        let x = random_x(&mut rng, n, 60);
+        let dense = SharedNestedGram::build(&x, None);
+        let spilled = SharedNestedGram::build_tiled(
+            &x,
+            None,
+            TilePolicy::Spill { dir: None, tile: 7 },
+        )
+        .unwrap();
+        assert_eq!(spilled.n(), n);
+        assert_eq!(
+            dense.to_dense().unwrap().as_slice(),
+            spilled.to_dense().unwrap().as_slice(),
+            "spilled XXᵀ moved"
+        );
+        let te: Vec<usize> = (0..n).filter(|i| i % 4 == 2).collect();
+        let tr = crate::fastcv::complement(&te, n);
+        let x_tr = x.take_rows(&tr);
+        let sg_dense = dense.fold_spectral(&x_tr, &tr).unwrap();
+        let sg_spill = spilled.fold_spectral(&x_tr, &tr).unwrap();
+        for lambda in [0.5, 8.0] {
+            assert_eq!(
+                sg_dense.hat(lambda).unwrap().h.as_slice(),
+                sg_spill.hat(lambda).unwrap().h.as_slice(),
+                "downdated spectral hat moved (λ={lambda})"
+            );
+        }
+        let (dual_dense, dual_spill) =
+            (dense.fold_dual(&x_tr, &tr).unwrap(), spilled.fold_dual(&x_tr, &tr).unwrap());
+        assert_eq!(
+            dual_dense.hat(1.3).unwrap().h.as_slice(),
+            dual_spill.hat(1.3).unwrap().h.as_slice(),
+            "downdated dual hat moved"
+        );
+    }
+
+    #[test]
+    fn spill_build_ctx_routes_the_policy_and_stays_bitwise() {
+        // HatMatrix::build_ctx under a Spill policy (Auto → dual on this
+        // wide shape) equals the plain dual build bitwise.
+        let mut rng = Rng::new(75);
+        let x = random_x(&mut rng, 18, 55);
+        let reference = HatMatrix::build_with(&x, 0.7, GramBackend::Dual, None).unwrap();
+        let ctx = super::super::context::ComputeContext::with_threads(2)
+            .with_tile_policy(TilePolicy::Spill { dir: None, tile: 5 });
+        let spilled = HatMatrix::build_ctx(&x, 0.7, &ctx).unwrap();
+        assert_eq!(reference.h.as_slice(), spilled.h.as_slice());
+        assert_eq!(spilled.backend, GramBackend::Dual);
     }
 
     #[test]
@@ -1073,7 +1429,7 @@ mod tests {
         let te: Vec<usize> = (0..n).filter(|i| i % 3 == 1).collect();
         let tr = crate::fastcv::complement(&te, n);
         let x_tr = x.take_rows(&tr);
-        let down = shared.fold_dual(&x_tr, &tr);
+        let down = shared.fold_dual(&x_tr, &tr).unwrap();
         let direct = GramCache::build(&x_tr, GramBackend::Dual, None);
         for lambda in [0.4, 2.0, 25.0] {
             let h_down = down.hat(lambda).unwrap().h;

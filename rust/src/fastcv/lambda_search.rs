@@ -152,8 +152,10 @@ pub fn search_lambda_ctx(
 ) -> Result<LambdaSearch> {
     assert!(!grid.is_empty());
     let positives = grid.iter().filter(|&&l| l > 0.0).count();
-    let resolved = ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives);
-    let cache = GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy());
+    // Spill-aware: an Auto grid under `--spill-dir` resolves to the fully
+    // streamable dual cache instead of a resident spectral one.
+    let resolved = ctx.resolve_for_grid(x.rows(), x.cols(), positives);
+    let cache = GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy())?;
     search_lambda_with_cache_tiled(&cache, y, labels, folds, grid, by, ctx.pool(), ctx.tile_policy())
 }
 
@@ -196,7 +198,7 @@ pub fn search_lambda_with_cache_tiled(
     super::validate_folds(folds, cache.n())?;
     let mut scores = Vec::with_capacity(grid.len());
     for &lambda in grid {
-        let score = match cache.hat_pool_tiled(lambda, pool, tile) {
+        let score = match cache.hat_pool_tiled(lambda, pool, tile.clone()) {
             Ok(hat) => {
                 let cv = AnalyticBinaryCv::with_hat(hat, y);
                 match FoldCache::prepare_pool(&cv.hat, folds, false, pool) {
@@ -247,8 +249,8 @@ pub fn search_lambda_multiclass(
 ) -> Result<LambdaSearch> {
     assert!(!grid.is_empty());
     let positives = grid.iter().filter(|&&l| l > 0.0).count();
-    let resolved = ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives);
-    let cache = GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy());
+    let resolved = ctx.resolve_for_grid(x.rows(), x.cols(), positives);
+    let cache = GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy())?;
     search_lambda_multiclass_with_cache_tiled(
         &cache,
         labels,
@@ -291,7 +293,7 @@ pub fn search_lambda_multiclass_with_cache_tiled(
     super::validate_folds(folds, cache.n())?;
     let mut scores = Vec::with_capacity(grid.len());
     for &lambda in grid {
-        let score = match cache.hat_pool_tiled(lambda, pool, tile) {
+        let score = match cache.hat_pool_tiled(lambda, pool, tile.clone()) {
             Ok(hat) => {
                 let cv = AnalyticMulticlassCv::with_hat(hat, labels, c);
                 match FoldCache::prepare_pool(&cv.hat, folds, true, pool) {
@@ -442,10 +444,14 @@ pub fn nested_cv_ctx(
     // candidate: the downdated K[Tr,Tr] feeds one per-fold Cholesky
     // instead of a rebuild). P > N_full implies P > N_tr for all training
     // subsets, so gating on the full shape is conservative.
-    let resolved = ctx.backend().resolve_for_grid(x.rows(), x.cols(), positives);
-    let shared = (ctx.nested_sharing()
-        && matches!(resolved, GramBackend::Spectral | GramBackend::Dual))
-        .then(|| SharedNestedGram::build_tiled(x, ctx.pool(), ctx.tile_policy()));
+    let resolved = ctx.resolve_for_grid(x.rows(), x.cols(), positives);
+    let shared = if ctx.nested_sharing()
+        && matches!(resolved, GramBackend::Spectral | GramBackend::Dual)
+    {
+        Some(SharedNestedGram::build_tiled(x, ctx.pool(), ctx.tile_policy())?)
+    } else {
+        None
+    };
     let mut dvals = vec![f64::NAN; x.rows()];
     let mut chosen = Vec::with_capacity(outer_folds.len());
     for te in outer_folds {
@@ -457,9 +463,9 @@ pub fn nested_cv_ctx(
         let search = match &shared {
             Some(gram) => {
                 let cache = if resolved == GramBackend::Dual {
-                    gram.fold_dual(&x_tr, &tr)
+                    gram.fold_dual(&x_tr, &tr)?
                 } else {
-                    GramCache::Spectral(gram.fold_spectral(&x_tr, &tr))
+                    GramCache::Spectral(gram.fold_spectral(&x_tr, &tr)?)
                 };
                 search_lambda_with_cache_tiled(
                     &cache,
@@ -923,7 +929,7 @@ mod tests {
             let untiled = search_lambda(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy)
                 .unwrap();
             for tile in [TilePolicy::Rows(1), TilePolicy::Rows(7), TilePolicy::Rows(n + 3)] {
-                let ctx = ComputeContext::with_threads(3).with_tile_policy(tile);
+                let ctx = ComputeContext::with_threads(3).with_tile_policy(tile.clone());
                 let tiled =
                     search_lambda_ctx(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, &ctx)
                         .unwrap();
@@ -933,6 +939,71 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn spill_search_lambda_ctx_bitwise_matches_untiled() {
+        // A Spill policy must reproduce the in-RAM search bit-for-bit on
+        // both out-of-core resolutions of Auto: the spilled primal cache
+        // (tall shape) and the spilled dual cache (wide shape, exactly one
+        // positive candidate).
+        use crate::fastcv::ComputeContext;
+        use crate::linalg::TilePolicy;
+        let mut rng = Rng::new(55);
+        // tall → PrimalSpill serves the whole grid
+        let mut spec = SyntheticSpec::binary(40, 12);
+        spec.separation = 1.5;
+        let ds = generate(&spec, &mut rng);
+        let y = ds.y_signed();
+        let folds = stratified_kfold(&ds.labels, 4, &mut rng);
+        let grid = [0.1, 1.0, 10.0];
+        let untiled =
+            search_lambda(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy).unwrap();
+        let ctx = ComputeContext::with_threads(2)
+            .with_tile_policy(TilePolicy::Spill { dir: None, tile: 5 });
+        let spilled =
+            search_lambda_ctx(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, &ctx)
+                .unwrap();
+        assert_eq!(spilled.best, untiled.best, "primal-spill winner moved");
+        for (s, q) in untiled.scores.iter().zip(&spilled.scores) {
+            assert_eq!(s.score.to_bits(), q.score.to_bits(), "primal-spill score moved");
+        }
+        // wide + single positive λ → DualSpill
+        let mut spec = SyntheticSpec::binary(24, 70);
+        spec.separation = 1.5;
+        let ds = generate(&spec, &mut rng);
+        let y = ds.y_signed();
+        let folds = stratified_kfold(&ds.labels, 4, &mut rng);
+        let grid = [1.0];
+        assert_eq!(GramBackend::Auto.resolve_for_grid(24, 70, 1), GramBackend::Dual);
+        let untiled =
+            search_lambda(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy).unwrap();
+        let ctx = ComputeContext::serial()
+            .with_tile_policy(TilePolicy::Spill { dir: None, tile: 7 });
+        let spilled =
+            search_lambda_ctx(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, &ctx)
+                .unwrap();
+        for (s, q) in untiled.scores.iter().zip(&spilled.scores) {
+            assert_eq!(s.score.to_bits(), q.score.to_bits(), "dual-spill score moved");
+        }
+        // wide + multi-λ Auto under Spill: the spill-aware resolution picks
+        // the fully-streamable dual cache (not a resident spectral one) —
+        // scores equal an explicit in-RAM Dual search bitwise, and the
+        // winner agrees with the spectral run (backend-equivalence grid).
+        let grid = [0.5, 2.0, 10.0, 50.0];
+        let dual_ref = search_lambda_backend(
+            &ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, GramBackend::Dual,
+        )
+        .unwrap();
+        let spilled =
+            search_lambda_ctx(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy, &ctx)
+                .unwrap();
+        for (s, q) in dual_ref.scores.iter().zip(&spilled.scores) {
+            assert_eq!(s.score.to_bits(), q.score.to_bits(), "auto-spill grid score moved");
+        }
+        let spectral = search_lambda(&ds.x, &y, &ds.labels, &folds, &grid, SelectBy::Accuracy)
+            .unwrap();
+        assert_eq!(spilled.best, spectral.best, "auto-spill winner diverged from spectral");
     }
 
     #[test]

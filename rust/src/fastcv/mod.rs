@@ -60,7 +60,13 @@
 //! decision values (property-tested as `backend_*` tests across this
 //! module), so the choice is a pure wall-clock knob — exposed as
 //! `--backend primal|dual|spectral|auto` on the CLI sweep alongside
-//! `--engine`.
+//! `--engine`. The permutation engines' *default* backend is `Auto` (the
+//! ROADMAP `Primal` → `Auto` flip): the hat is shared per run and null
+//! accuracies are 1/N-quantised, so the ~1e-9 cross-backend hat roundoff
+//! only moves a recorded null when a decision value sits within that
+//! roundoff of the threshold — invariance is pinned on fixed-seed grids
+//! by the golden contract in [`perm_batch`], and the `_backend` entry
+//! points reproduce the historical `Primal` build exactly on demand.
 //!
 //! ## The compute context
 //!

@@ -68,6 +68,19 @@ pub fn permuted_labels(labels: &[usize], anchor: u64, idx: u64) -> Vec<usize> {
 /// the paper's Alg. 1 as printed); `bias_adjust = true` applies the §2.5
 /// correction per fold so results are *identical* to retraining classic LDA
 /// with `b_LDA` even for unbalanced training folds.
+///
+/// The default backend is [`GramBackend::Auto`] (ROADMAP's `Primal` → `Auto`
+/// flip): the one-off hat build resolves per shape — `Dual` on wide
+/// (`P > N`, λ > 0) data, `Primal` otherwise. Null distributions are
+/// backend-invariant in practice: the hat is shared per run and accuracies
+/// are 1/N-quantised, so the ~1e-9 cross-backend hat roundoff can only
+/// move a null entry when a decision value lands within that roundoff of
+/// the classification threshold. The invariance is pinned on fixed-seed
+/// grids by the golden contract
+/// `backend_golden_null_distributions_recorded_for_default_flip`; a
+/// caller with a knife-edge dataset who needs the historical build
+/// bit-for-bit should force it via
+/// [`analytic_binary_permutation_backend`] with `Primal`.
 pub fn analytic_binary_permutation(
     x: &Mat,
     labels: &[usize],
@@ -85,7 +98,7 @@ pub fn analytic_binary_permutation(
         n_perm,
         bias_adjust,
         rng,
-        GramBackend::Primal,
+        GramBackend::Auto,
     )
 }
 
@@ -173,7 +186,9 @@ pub fn standard_binary_permutation(
     Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
 }
 
-/// Analytic multi-class permutation test (Algorithm 2).
+/// Analytic multi-class permutation test (Algorithm 2). Default backend
+/// [`GramBackend::Auto`], like [`analytic_binary_permutation`] (same
+/// backend-invariance argument, same golden-contract pin).
 pub fn analytic_multiclass_permutation(
     x: &Mat,
     labels: &[usize],
@@ -191,7 +206,7 @@ pub fn analytic_multiclass_permutation(
         lambda,
         n_perm,
         rng,
-        GramBackend::Primal,
+        GramBackend::Auto,
     )
 }
 

@@ -142,6 +142,9 @@ where
 /// Same contract as [`super::perm::analytic_binary_permutation`] — identical
 /// observed value, null distribution, and p-value for an RNG in the same
 /// state — at a fraction of the wall-clock (see `benches/ablation_updates.rs`).
+/// Like the serial engine, the default backend is [`GramBackend::Auto`]
+/// (per-shape hat build; null distributions are backend-invariant, pinned
+/// by the golden contract).
 #[allow(clippy::too_many_arguments)]
 pub fn analytic_binary_permutation_batched(
     x: &Mat,
@@ -162,7 +165,7 @@ pub fn analytic_binary_permutation_batched(
         bias_adjust,
         rng,
         strategy,
-        GramBackend::Primal,
+        GramBackend::Auto,
     )
 }
 
@@ -257,7 +260,7 @@ pub fn analytic_binary_permutation_batched_ctx(
 /// (`N × B·C` responses); step 2 reuses the serial per-fold code, so the
 /// null distribution is bit-identical to
 /// [`super::perm::analytic_multiclass_permutation`] for an RNG in the same
-/// state.
+/// state. Default backend [`GramBackend::Auto`], like every engine.
 #[allow(clippy::too_many_arguments)]
 pub fn analytic_multiclass_permutation_batched(
     x: &Mat,
@@ -278,7 +281,7 @@ pub fn analytic_multiclass_permutation_batched(
         n_perm,
         rng,
         strategy,
-        GramBackend::Primal,
+        GramBackend::Auto,
     )
 }
 
@@ -645,23 +648,23 @@ mod tests {
 
     #[test]
     fn backend_golden_null_distributions_recorded_for_default_flip() {
-        // Backend-aware perm defaults, **step 1** (ROADMAP): before the
-        // engines' implicit backend can flip `Primal` → `Auto`, the
-        // per-backend null distributions must be a recorded contract. This
-        // test is that record, over a fixed-seed (N, P) grid covering both
-        // Auto resolutions:
+        // Backend-aware perm defaults, **step 2** (ROADMAP): the engines'
+        // implicit backend is now `Auto`. This fixed-seed contract is what
+        // made the flip safe, over an (N, P) grid covering both Auto
+        // resolutions:
         //
         //   1. the golden reference is the serial engine under `Primal` at
-        //      a pinned anchor seed;
+        //      a pinned anchor seed — the *historical* default, so the flip
+        //      is proven not to re-anchor any recorded null;
         //   2. all four engines — serial/batched × binary/multiclass —
         //      reproduce it bit-for-bit under every explicit backend (the
         //      hat is shared per run and accuracies are 1/N-quantised, so
         //      the ~1e-9 hat roundoff cannot move them at these λ);
-        //   3. the *default* entry points are pinned to the `Primal`
-        //      golden: flipping the default to `Auto` must consciously
-        //      update this test, not silently re-anchor recorded nulls.
-        //
-        // The default itself stays `Primal` in this PR.
+        //   3. the *default* entry points are pinned to that same golden
+        //      **and** the backend `Auto` resolves to is asserted per
+        //      shape: `Dual` on the wide grids (the flip's payoff — the
+        //      one-off hat build drops from O(NP²+P³) to O(N²P+N³)),
+        //      `Primal` on the tall ones (where nothing changes).
         use crate::fastcv::perm::{
             analytic_binary_permutation_backend, analytic_multiclass_permutation_backend,
         };
@@ -671,6 +674,15 @@ mod tests {
             let mut rng = Rng::new(seed);
             let (x, labels) = blobs(&mut rng, per, 2, p, 2.0);
             let folds = stratified_kfold(&labels, 4, &mut rng);
+            // What the flipped default actually builds with, per shape.
+            let wide = p > labels.len();
+            let resolved = GramBackend::Auto.resolve(labels.len(), p, 1.0);
+            assert_eq!(
+                resolved,
+                if wide { GramBackend::Dual } else { GramBackend::Primal },
+                "Auto resolution moved (N={}, P={p})",
+                labels.len()
+            );
             let anchor = 1234 + seed;
             let golden = analytic_binary_permutation_backend(
                 &x, &labels, &folds, 1.0, 10, false, &mut Rng::new(anchor), GramBackend::Primal,
@@ -697,14 +709,16 @@ mod tests {
                 .unwrap();
                 assert_eq!(batched.null, golden.null, "binary batched {backend:?} (P={p})");
             }
-            // default entry points pinned to the Primal golden
+            // default entry points (now Auto) stay pinned to the Primal-built
+            // golden — the flip changed the hat build's cost, not a bit of
+            // any recorded null distribution.
             let default_serial = analytic_binary_permutation(
                 &x, &labels, &folds, 1.0, 10, false, &mut Rng::new(anchor),
             )
             .unwrap();
             assert_eq!(
                 default_serial.null, golden.null,
-                "the serial default is recorded as Primal — flipping it must update this contract"
+                "the Auto default must reproduce the recorded Primal golden (resolved {resolved:?})"
             );
             let default_batched = analytic_binary_permutation_batched(
                 &x,
@@ -717,22 +731,28 @@ mod tests {
                 BatchStrategy::new(4, 2),
             )
             .unwrap();
-            assert_eq!(default_batched.null, golden.null, "batched default recorded as Primal");
+            assert_eq!(default_batched.null, golden.null, "batched Auto default vs golden");
         }
         // Multi-class pair of engines, same discipline. The cross-backend
         // sweep runs on the wide shape only — on tall data `Auto` resolves
-        // to `Primal`, so the flip never changes the tall path; there the
+        // to `Primal`, so the flip never changed the tall path; there the
         // engines + defaults are pinned under `Primal` alone.
         for &(per, p, seed) in &[(7usize, 36usize, 403u64), (9, 5, 404)] {
             let mut rng = Rng::new(seed);
             let (x, labels) = blobs(&mut rng, per, 3, p, 2.5);
             let folds = stratified_kfold(&labels, 3, &mut rng);
+            let wide = p > labels.len();
+            assert_eq!(
+                GramBackend::Auto.resolve(labels.len(), p, 1.0),
+                if wide { GramBackend::Dual } else { GramBackend::Primal },
+                "multi-class Auto resolution moved (N={}, P={p})",
+                labels.len()
+            );
             let anchor = 4321 + seed;
             let golden = analytic_multiclass_permutation_backend(
                 &x, &labels, 3, &folds, 1.0, 6, &mut Rng::new(anchor), GramBackend::Primal,
             )
             .unwrap();
-            let wide = p > labels.len();
             let swept: &[GramBackend] =
                 if wide { &backends } else { &[GramBackend::Primal] };
             for &backend in swept {
@@ -759,7 +779,10 @@ mod tests {
                 &x, &labels, 3, &folds, 1.0, 6, &mut Rng::new(anchor),
             )
             .unwrap();
-            assert_eq!(default_serial.null, golden.null, "multi serial default is Primal");
+            assert_eq!(
+                default_serial.null, golden.null,
+                "multi serial Auto default must reproduce the recorded Primal golden"
+            );
             let default_batched = analytic_multiclass_permutation_batched(
                 &x,
                 &labels,
@@ -771,7 +794,7 @@ mod tests {
                 BatchStrategy::new(3, 2),
             )
             .unwrap();
-            assert_eq!(default_batched.null, golden.null, "multi batched default is Primal");
+            assert_eq!(default_batched.null, golden.null, "multi batched Auto default vs golden");
         }
     }
 }

@@ -122,6 +122,14 @@ impl Cholesky {
         Ok(Cholesky { l: a })
     }
 
+    /// Wrap an already-computed lower factor (no validation) — how the
+    /// spilled factor ([`crate::linalg::spill::SpilledCholesky`]) gathers
+    /// back into an in-RAM `Cholesky` when a caller decides it fits.
+    pub(crate) fn from_lower(l: Mat) -> Cholesky {
+        assert_eq!(l.rows(), l.cols(), "cholesky factor must be square");
+        Cholesky { l }
+    }
+
     /// The lower factor.
     pub fn l(&self) -> &Mat {
         &self.l

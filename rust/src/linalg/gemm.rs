@@ -42,7 +42,7 @@ pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
 
     // Packed panels reused across the j-loop.
     let mut a_pack = vec![0.0f64; MC * KC];
-    let mut b_pack = vec![0.0f64; KC * n.next_multiple_of(NR).min(n + NR)];
+    let mut b_pack = vec![0.0f64; KC * n.next_multiple_of(NR)];
 
     for k0 in (0..ka).step_by(KC) {
         let kc = KC.min(ka - k0);
@@ -58,14 +58,22 @@ pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
 }
 
 fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, pack: &mut [f64]) {
-    // layout: for each MR-sliver s, kc columns of MR values
+    // layout: for each MR-sliver s, kc columns of MR values. Row slices are
+    // resolved once per sliver so the hot loop reads contiguous slices
+    // instead of going through the (r, c) indexing operator per element —
+    // identical packed bytes, fewer index computations and bounds checks.
+    const EMPTY: &[f64] = &[];
     let mut idx = 0;
     let mut i = 0;
     while i < mc {
         let mr = MR.min(mc - i);
+        let mut rows: [&[f64]; MR] = [EMPTY; MR];
+        for (r, slot) in rows.iter_mut().enumerate().take(mr) {
+            *slot = &a.row(i0 + i + r)[k0..k0 + kc];
+        }
         for k in 0..kc {
-            for r in 0..MR {
-                pack[idx] = if r < mr { a[(i0 + i + r, k0 + k)] } else { 0.0 };
+            for (r, row) in rows.iter().enumerate() {
+                pack[idx] = if r < mr { row[k] } else { 0.0 };
                 idx += 1;
             }
         }
@@ -74,17 +82,18 @@ fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, pack: &mut [f64])
 }
 
 fn pack_b(b: &Mat, k0: usize, kc: usize, pack: &mut [f64]) {
+    // NR-wide slivers copied as contiguous sub-row slices (tail lanes
+    // zero-filled) — identical packed bytes to the old per-element loop.
     let n = b.cols();
     let mut idx = 0;
     let mut j = 0;
     while j < n {
         let nr = NR.min(n - j);
         for k in 0..kc {
-            let row = b.row(k0 + k);
-            for r in 0..NR {
-                pack[idx] = if r < nr { row[j + r] } else { 0.0 };
-                idx += 1;
-            }
+            let row = &b.row(k0 + k)[j..j + nr];
+            pack[idx..idx + nr].copy_from_slice(row);
+            pack[idx + nr..idx + NR].fill(0.0);
+            idx += NR;
         }
         j += NR;
     }
@@ -197,8 +206,18 @@ pub fn syrk_t(a: &Mat) -> Mat {
 /// of how `0..p` is split into `[lo, hi)` panels. That independence is what
 /// makes [`syrk_t_pool`] bit-identical to [`syrk_t`].
 fn syrk_t_rows(a: &Mat, lo: usize, hi: usize) -> Mat {
+    let mut g = Mat::zeros(hi - lo, a.cols());
+    syrk_t_rows_into(a, lo, hi, g.as_mut_slice());
+    g
+}
+
+/// The accumulation loop of `syrk_t_rows` into a caller-owned zeroed band
+/// (`(hi-lo)×p`, row-major) — what lets [`crate::linalg::syrk_tiled`]
+/// write its output bands straight into disjoint slices of the final `p×p`
+/// Gram without holding per-band copies. Identical arithmetic.
+pub(crate) fn syrk_t_rows_into(a: &Mat, lo: usize, hi: usize, band: &mut [f64]) {
     let (n, p) = a.shape();
-    let mut g = Mat::zeros(hi - lo, p);
+    debug_assert_eq!(band.len(), (hi - lo) * p);
     // Process in row panels of A to keep accumulation cache-friendly.
     const PANEL: usize = 64;
     for i0 in (0..n).step_by(PANEL) {
@@ -210,7 +229,7 @@ fn syrk_t_rows(a: &Mat, lo: usize, hi: usize) -> Mat {
                 if aij == 0.0 {
                     continue;
                 }
-                let grow = g.row_mut(j - lo);
+                let grow = &mut band[(j - lo) * p..(j - lo + 1) * p];
                 // upper triangle only
                 for (k, &aik) in row.iter().enumerate().skip(j) {
                     grow[k] += aij * aik;
@@ -218,11 +237,10 @@ fn syrk_t_rows(a: &Mat, lo: usize, hi: usize) -> Mat {
             }
         }
     }
-    g
 }
 
 /// Copy the upper triangle of `g` onto the lower.
-fn mirror_upper(g: &mut Mat) {
+pub(crate) fn mirror_upper(g: &mut Mat) {
     let p = g.rows();
     for j in 0..p {
         for k in (j + 1)..p {
@@ -497,6 +515,51 @@ mod tests {
             // no-pool fallback is the serial kernel itself
             let none = matmul_pool(&a, &b, None);
             assert_eq!(serial.as_slice(), none.as_slice(), "({m},{k},{n}) fallback");
+        }
+    }
+
+    #[test]
+    fn pack_a_b_match_elementwise_reference() {
+        // The slice-based packers must produce the identical buffers the
+        // old per-element (r, c)-indexed loops did — including the
+        // zero-padded MR/NR tail lanes of awkward shapes.
+        let mut rng = Rng::new(21);
+        for &(m, k) in &[(3usize, 5usize), (9, 17), (130, 300)] {
+            let a = random_mat(&mut rng, m, k);
+            let (i0, mc) = (0, m.min(MC));
+            let (k0, kc) = (0, k.min(KC));
+            let mut pack = vec![f64::NAN; mc.next_multiple_of(MR) * kc];
+            pack_a(&a, i0, mc, k0, kc, &mut pack);
+            let mut idx = 0;
+            let mut i = 0;
+            while i < mc {
+                let mr = MR.min(mc - i);
+                for kk in 0..kc {
+                    for r in 0..MR {
+                        let want = if r < mr { a[(i0 + i + r, k0 + kk)] } else { 0.0 };
+                        assert_eq!(pack[idx], want, "pack_a ({m},{k}) idx {idx}");
+                        idx += 1;
+                    }
+                }
+                i += MR;
+            }
+            let b = random_mat(&mut rng, k, m);
+            let n = b.cols();
+            let mut packb = vec![f64::NAN; kc * n.next_multiple_of(NR)];
+            pack_b(&b, k0, kc, &mut packb);
+            let mut idx = 0;
+            let mut j = 0;
+            while j < n {
+                let nr = NR.min(n - j);
+                for kk in 0..kc {
+                    for r in 0..NR {
+                        let want = if r < nr { b[(k0 + kk, j + r)] } else { 0.0 };
+                        assert_eq!(packb[idx], want, "pack_b ({m},{k}) idx {idx}");
+                        idx += 1;
+                    }
+                }
+                j += NR;
+            }
         }
     }
 

@@ -123,6 +123,23 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Borrow rows `lo..hi` as one contiguous row-major slice (row-major
+    /// storage makes any row band a single slab). The GEMM packers and the
+    /// spill layer's panel copies read/write through this instead of
+    /// element-by-element `(r, c)` indexing.
+    #[inline]
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> &[f64] {
+        debug_assert!(lo <= hi && hi <= self.rows);
+        &self.data[lo * self.cols..hi * self.cols]
+    }
+
+    /// Mutable variant of [`Mat::rows_slice`].
+    #[inline]
+    pub fn rows_slice_mut(&mut self, lo: usize, hi: usize) -> &mut [f64] {
+        debug_assert!(lo <= hi && hi <= self.rows);
+        &mut self.data[lo * self.cols..hi * self.cols]
+    }
+
     /// Copy column `j` out.
     pub fn col(&self, j: usize) -> Vec<f64> {
         (0..self.rows).map(|i| self[(i, j)]).collect()
@@ -366,6 +383,17 @@ mod tests {
                 assert_eq!(t[(j, i)], m[(i, j)]);
             }
         }
+    }
+
+    #[test]
+    fn rows_slice_is_the_contiguous_band() {
+        let m = Mat::from_fn(5, 3, |i, j| (10 * i + j) as f64);
+        assert_eq!(m.rows_slice(1, 3), &m.as_slice()[3..9]);
+        assert_eq!(m.rows_slice(0, 0), &[] as &[f64]);
+        let mut w = m.clone();
+        w.rows_slice_mut(2, 3).copy_from_slice(&[7.0, 8.0, 9.0]);
+        assert_eq!(w.row(2), &[7.0, 8.0, 9.0]);
+        assert_eq!(w.row(1), m.row(1));
     }
 
     #[test]

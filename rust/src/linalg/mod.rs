@@ -7,13 +7,18 @@
 //! - [`lu`] — partially pivoted LU for general systems
 //! - [`eig`] — Jacobi symmetric + generalised symmetric-definite eig
 //! - [`tiled`] — panel-tiled Gram builds + blocked Cholesky for the §4.5
-//!   memory-bounded regime ([`TilePolicy`], [`gram_tiled`], [`chol_blocked`])
+//!   memory-bounded regime ([`TilePolicy`], [`gram_tiled`], [`syrk_tiled`],
+//!   [`chol_blocked`])
+//! - [`spill`] — out-of-core panel persistence ([`PanelStore`], RAM or
+//!   disk) + the left-looking spilled Cholesky ([`chol_spill`]) and
+//!   streaming solves, all bitwise-identical to the in-RAM kernels
 
 pub mod chol;
 pub mod eig;
 pub mod gemm;
 pub mod lu;
 pub mod mat;
+pub mod spill;
 pub mod tiled;
 
 pub use chol::Cholesky;
@@ -24,4 +29,5 @@ pub use gemm::{
 };
 pub use lu::{solve, solve_mat, Lu};
 pub use mat::Mat;
-pub use tiled::{chol_blocked, gram_tiled, TilePolicy};
+pub use spill::{chol_spill, chol_spill_ridged, gram_spill, syrk_spill, PanelStore, SpilledCholesky};
+pub use tiled::{chol_blocked, gram_tiled, syrk_tiled, TilePolicy};

@@ -1,0 +1,1045 @@
+//! Out-of-core Gram spill: panel persistence + a left-looking spilled
+//! Cholesky whose panels never all coexist in RAM.
+//!
+//! The tiled engine ([`crate::linalg::tiled`]) bounded every *transient*
+//! of the §4.5 big-data builds to `O(tile)` slabs — but the factor itself
+//! (the dual `N×N`, or the primal `(P+1)×(P+1)`) still had to live
+//! resident for the in-place Cholesky. This module removes that last
+//! resident square:
+//!
+//! * [`PanelStore`] — the Gram (and later its factor) as contiguous
+//!   `tile×N` row-slab *panels*, held either in RAM (accounting/tests) or
+//!   as files under a spill directory (`--spill-dir` on the CLI).
+//! * [`gram_spill`] / [`syrk_spill`] — assemble `V Vᵀ` (dual/nested side)
+//!   or `AᵀA` (primal side) straight into a store, panel by panel, with
+//!   values **bitwise-identical** to the one-shot kernels
+//!   ([`crate::linalg::gram_tiled`] + mirror, [`crate::linalg::syrk_t`]).
+//! * [`chol_spill`] — a **left-looking, panel-at-a-time blocked
+//!   Cholesky**: each panel is loaded, updated against the previously
+//!   factored panels, factored in place, and written back. Every element
+//!   keeps [`Cholesky::factor_into`]'s per-element arithmetic (one
+//!   full-prefix [`dot`], one subtract, one divide), so the spilled factor
+//!   is **bitwise-identical** to the in-RAM one (`spill_*` property
+//!   tests).
+//! * [`SpilledCholesky::solve_mat_in_place`] — triangular solves that
+//!   stream panels the same way, bitwise-identical to
+//!   [`Cholesky::solve_mat_in_place`].
+//!
+//! ## Bitwise determinism
+//!
+//! Spilling, like tiling, is a pure memory/IO knob. The factor argument:
+//! element `L[i,j]` is `(A[i,j] − dot(L[i,..j], L[j,..j])) / L[j,j]`, a
+//! function of *final* prefix values only — so the left-looking schedule
+//! (all columns `< lo` applied to panel `[lo,hi)` before its diagonal
+//! block) performs the identical arithmetic the serial column-major
+//! recurrence does, merely in a different global order. The solve
+//! argument: forward substitution consumes row prefixes (one streaming
+//! pass); backward substitution consumes *column* strips, which are
+//! gathered from the row-slab panels per target panel (≈`T/2` re-reads of
+//! the factor — the documented IO cost of keeping row-major panels).
+//!
+//! ## Resident-memory model
+//!
+//! Beyond the streamed `O(NP)` outputs a caller keeps anyway, every phase
+//! holds `O(tile·(N+P))`: assembly has three `tile×P` operand slabs plus a
+//! `tile×N` band; the factor holds two `tile×N` panels; the backward solve
+//! holds one `tile×N` panel plus one `N×tile` column strip. The `N²` (or
+//! `(P+1)²`) square never exists in RAM. `benches/ablation_spill.rs`
+//! records the model per row in `BENCH_spill.json`.
+
+use super::chol::Cholesky;
+use super::gemm::{dot, matmul, syrk_t_rows_into};
+use super::mat::Mat;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide counter so every disk-backed store gets its own
+/// subdirectory under the caller's `--spill-dir` (per-λ factor stores and
+/// the λ-free Gram store would otherwise collide on panel file names).
+static STORE_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Where a [`PanelStore`]'s panels live.
+enum StoreBackend {
+    /// Panels resident as plain buffers — the accounting/testing backend
+    /// (also the right choice when the point of spilling is the blocked
+    /// *schedule*, not disk: peak residency is still `O(tile·N)` per
+    /// loaded panel plus the store itself).
+    Ram(Vec<Option<Vec<f64>>>),
+    /// One file per panel (`panel_{t}.bin`, little-endian `f64`) under a
+    /// store-private subdirectory of the spill dir; removed on drop.
+    Disk { dir: PathBuf },
+}
+
+/// An `N×N` symmetric matrix (a Gram, or its Cholesky factor) persisted as
+/// contiguous `tile×N` row-slab panels — the storage layer behind
+/// [`chol_spill`] and the `TilePolicy::Spill` builds.
+///
+/// Panel `t` holds rows `[t·tile, min((t+1)·tile, N))` as one row-major
+/// buffer. With `dir = None` panels live in RAM; with `dir = Some(..)`
+/// each panel is a file under a store-private subdirectory (created on
+/// demand, removed when the store is dropped). Reads verify the file
+/// length, so a torn panel (partial write, crash) is detected rather than
+/// silently read.
+///
+/// ```
+/// use fastcv::linalg::{Mat, PanelStore};
+///
+/// let g = Mat::from_fn(6, 6, |i, j| (1 + i * 6 + j) as f64);
+/// let mut store = PanelStore::new(6, 4, None).unwrap(); // RAM panels, remainder panel of 2
+/// store.write_mat(&g).unwrap();
+/// assert_eq!(store.panels(), 2);
+/// assert_eq!(store.range(1), (4, 6));
+/// assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice());
+/// ```
+pub struct PanelStore {
+    n: usize,
+    tile: usize,
+    backend: StoreBackend,
+    /// The matrix diagonal, refreshed on every [`PanelStore::write_panel`]
+    /// — `O(N)` resident, and what lets the per-λ pivot floor be computed
+    /// without an extra full pass over the (possibly on-disk) panels.
+    diag: Vec<f64>,
+}
+
+impl PanelStore {
+    /// A store for an `n×n` matrix in `tile`-row panels. `dir = None` keeps
+    /// panels in RAM; `dir = Some(base)` spills each panel to a file under
+    /// a fresh subdirectory of `base` (created here).
+    pub fn new(n: usize, tile: usize, dir: Option<&Path>) -> Result<PanelStore> {
+        let tile = tile.clamp(1, n.max(1));
+        let backend = match dir {
+            None => StoreBackend::Ram(vec![None; n.div_ceil(tile.max(1))]),
+            Some(base) => {
+                let sub = base.join(format!(
+                    "store-{}-{}",
+                    std::process::id(),
+                    STORE_COUNTER.fetch_add(1, Ordering::Relaxed)
+                ));
+                std::fs::create_dir_all(&sub)
+                    .with_context(|| format!("creating spill dir {}", sub.display()))?;
+                StoreBackend::Disk { dir: sub }
+            }
+        };
+        Ok(PanelStore { n, tile, backend, diag: vec![0.0; n] })
+    }
+
+    /// Matrix dimension `N`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Panel height (the last panel may be shorter).
+    pub fn tile(&self) -> usize {
+        self.tile
+    }
+
+    /// Number of panels.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(self.tile)
+    }
+
+    /// Row range `[lo, hi)` of panel `t`.
+    pub fn range(&self, t: usize) -> (usize, usize) {
+        let lo = t * self.tile;
+        (lo, (lo + self.tile).min(self.n))
+    }
+
+    /// Is this store disk-backed?
+    pub fn is_disk(&self) -> bool {
+        matches!(self.backend, StoreBackend::Disk { .. })
+    }
+
+    /// The on-disk path of panel `t` (`None` for a RAM store). Exposed for
+    /// the crash-safety tests and for operators inspecting a spill dir.
+    pub fn panel_path(&self, t: usize) -> Option<PathBuf> {
+        match &self.backend {
+            StoreBackend::Ram(_) => None,
+            StoreBackend::Disk { dir } => Some(dir.join(format!("panel_{t}.bin"))),
+        }
+    }
+
+    /// Persist panel `t`. `panel` must be the exact `(hi−lo)×N` slab.
+    pub fn write_panel(&mut self, t: usize, panel: Mat) -> Result<()> {
+        let (lo, hi) = self.range(t);
+        ensure!(
+            panel.shape() == (hi - lo, self.n),
+            "panel {t}: shape {:?} does not match the {}×{} slab",
+            panel.shape(),
+            hi - lo,
+            self.n
+        );
+        for r in 0..(hi - lo) {
+            self.diag[lo + r] = panel[(r, lo + r)];
+        }
+        match &mut self.backend {
+            StoreBackend::Ram(slots) => slots[t] = Some(panel.into_vec()),
+            StoreBackend::Disk { dir } => {
+                let path = dir.join(format!("panel_{t}.bin"));
+                let mut bytes = Vec::with_capacity(panel.as_slice().len() * 8);
+                for v in panel.as_slice() {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                std::fs::write(&path, bytes)
+                    .with_context(|| format!("writing spill panel {}", path.display()))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Load panel `t` as an owned matrix. Disk reads verify the byte
+    /// length first, so a torn panel file errors instead of being silently
+    /// misinterpreted. Read-only consumers should prefer
+    /// [`PanelStore::panel_cow`], which borrows RAM panels without a copy.
+    pub fn read_panel(&self, t: usize) -> Result<Mat> {
+        let (lo, hi) = self.range(t);
+        Ok(Mat::from_vec(hi - lo, self.n, self.panel_cow(t)?.into_owned()))
+    }
+
+    /// Panel `t`'s row-major buffer, borrow-or-read: RAM panels come back
+    /// as a **borrow** (no copy — the factor's left-looking updates and the
+    /// solves re-read panels `O(T²/2)` times, which must not mean `O(T²/2)`
+    /// allocations in the in-RAM mode), disk panels as an owned,
+    /// length-checked read.
+    pub fn panel_cow(&self, t: usize) -> Result<std::borrow::Cow<'_, [f64]>> {
+        let (lo, hi) = self.range(t);
+        let rows = hi - lo;
+        match &self.backend {
+            StoreBackend::Ram(slots) => match &slots[t] {
+                Some(data) => Ok(std::borrow::Cow::Borrowed(data.as_slice())),
+                None => bail!("panel {t} was never written"),
+            },
+            StoreBackend::Disk { dir } => {
+                let path = dir.join(format!("panel_{t}.bin"));
+                let bytes = std::fs::read(&path)
+                    .with_context(|| format!("reading spill panel {}", path.display()))?;
+                let expected = rows * self.n * 8;
+                ensure!(
+                    bytes.len() == expected,
+                    "torn panel file {}: {} bytes, expected {expected}",
+                    path.display(),
+                    bytes.len()
+                );
+                let data: Vec<f64> = bytes
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(std::borrow::Cow::Owned(data))
+            }
+        }
+    }
+
+    /// Split a dense square matrix into this store's panels (tests and the
+    /// "spill an existing Gram" path).
+    pub fn write_mat(&mut self, m: &Mat) -> Result<()> {
+        ensure!(m.shape() == (self.n, self.n), "write_mat: shape mismatch");
+        for t in 0..self.panels() {
+            let (lo, hi) = self.range(t);
+            let panel =
+                Mat::from_vec(hi - lo, self.n, m.rows_slice(lo, hi).to_vec());
+            self.write_panel(t, panel)?;
+        }
+        Ok(())
+    }
+
+    /// Gather every panel into a dense matrix (tests; the dual hat's RHS).
+    pub fn to_mat(&self) -> Result<Mat> {
+        let mut out = Mat::zeros(self.n, self.n);
+        for t in 0..self.panels() {
+            let (lo, hi) = self.range(t);
+            out.rows_slice_mut(lo, hi).copy_from_slice(&self.panel_cow(t)?);
+        }
+        Ok(out)
+    }
+
+    /// Gather the `idx × idx` principal submatrix, one panel at a time —
+    /// the spilled analogue of [`Mat::take`]`(idx, idx)` (bitwise: a pure
+    /// gather). Backs [`crate::fastcv::hat::SharedNestedGram`]'s per-fold
+    /// downdates when the shared `XXᵀ` is spilled.
+    pub fn take_square(&self, idx: &[usize]) -> Result<Mat> {
+        // Mat::take would hit an out-of-bounds panic on a bad index; the
+        // panel gather must not silently zero-fill instead.
+        ensure!(
+            idx.iter().all(|&i| i < self.n),
+            "take_square: index out of range (n = {})",
+            self.n
+        );
+        let m = idx.len();
+        let mut out = Mat::zeros(m, m);
+        for t in 0..self.panels() {
+            let (lo, hi) = self.range(t);
+            if !idx.iter().any(|&i| lo <= i && i < hi) {
+                continue;
+            }
+            let panel = self.panel_cow(t)?;
+            for (pos, &i) in idx.iter().enumerate() {
+                if lo <= i && i < hi {
+                    let src = &panel[(i - lo) * self.n..(i - lo + 1) * self.n];
+                    let dst = out.row_mut(pos);
+                    for (l, &j) in idx.iter().enumerate() {
+                        dst[l] = src[j];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+}
+
+impl Drop for PanelStore {
+    fn drop(&mut self) {
+        if let StoreBackend::Disk { dir } = &self.backend {
+            // Best-effort cleanup of the store-private subdirectory; a
+            // crashed process leaves its panels for inspection instead.
+            let _ = std::fs::remove_dir_all(dir);
+        }
+    }
+}
+
+impl std::fmt::Debug for PanelStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PanelStore")
+            .field("n", &self.n)
+            .field("tile", &self.tile)
+            .field("disk", &self.is_disk())
+            .finish()
+    }
+}
+
+/// Assemble the symmetric `G = V Vᵀ + ridge·I` straight into `store`,
+/// panel by panel, from row slabs of `V` produced on demand by
+/// `slab(lo, hi)` — the spilled sibling of [`crate::linalg::gram_tiled`].
+///
+/// Every element is **bitwise-identical** to the one-shot
+/// `matmul(&v, &v.t())` + `symmetrize()` build (and hence to
+/// `gram_tiled`): diagonal and upper blocks run the identical blocked
+/// GEMM, and a lower block `(t, u<t)` is **transpose-copied from the
+/// already-written panel `u`** — the exact mirror `gram_tiled` performs,
+/// done panel-at-a-time, so no block's flops are ever paid twice. `ridge`
+/// is added to the assembled diagonal (pass `0.0` for a λ-free Gram),
+/// exactly as the in-RAM paths ridge after assembly. Per-panel GEMM blocks
+/// fan out over `pool`; peak residency is the current `tile×N` band plus
+/// per-worker `tile×P` operand slabs (and one earlier panel during the
+/// mirror copy).
+pub fn gram_spill<F>(
+    store: &mut PanelStore,
+    ridge: f64,
+    slab: F,
+    pool: Option<&ThreadPool>,
+) -> Result<()>
+where
+    F: Fn(usize, usize) -> Mat + Sync,
+{
+    let n = store.n();
+    let t_count = store.panels();
+    for t in 0..t_count {
+        let (lo, hi) = store.range(t);
+        let rows = hi - lo;
+        let v_t = slab(lo, hi);
+        let mut band = Mat::zeros(rows, n);
+        // Strictly-lower blocks: mirror from the already-written panels —
+        // band[r, j] = G[lo+r, j] := G[j, lo+r], which panel u computed as
+        // part of its upper block (u, t). A panel read replaces a GEMM.
+        for u in 0..t {
+            let (lo_u, hi_u) = store.range(u);
+            let pu = store.panel_cow(u)?;
+            for r in 0..rows {
+                let brow = band.row_mut(r);
+                for j in lo_u..hi_u {
+                    brow[j] = pu[(j - lo_u) * n + lo + r];
+                }
+            }
+        }
+        // Diagonal + upper blocks: the blocked GEMM, fanned over the pool.
+        let block_of = |u: usize| -> Mat {
+            let (lo_u, hi_u) = store.range(u);
+            if u == t {
+                matmul(&v_t, &v_t.t())
+            } else {
+                let v_u = slab(lo_u, hi_u);
+                matmul(&v_t, &v_u.t())
+            }
+        };
+        let blocks: Vec<Mat> = match pool {
+            Some(pool) if pool.size() > 1 && t_count - t > 1 => {
+                pool.map(t_count - t, |k| block_of(t + k))
+            }
+            _ => (t..t_count).map(block_of).collect(),
+        };
+        for (k, block) in blocks.iter().enumerate() {
+            let (lo_u, hi_u) = store.range(t + k);
+            for r in 0..rows {
+                band.row_mut(r)[lo_u..hi_u].copy_from_slice(block.row(r));
+            }
+        }
+        if ridge != 0.0 {
+            for r in 0..rows {
+                band[(r, lo + r)] += ridge;
+            }
+        }
+        store.write_panel(t, band)?;
+    }
+    Ok(())
+}
+
+/// Assemble the primal Gram `G = AᵀA` into `store` (`store.n()` must equal
+/// `A.cols()`), panel by panel, with every element **bitwise-identical**
+/// to [`crate::linalg::syrk_t`]'s (mirrored) output — the spilled form of
+/// the `(P+1)×(P+1)` quadrant. Like [`gram_spill`], no flops are paid
+/// twice: each band computes only its upper-triangle part through
+/// `syrk_t_rows`'s recurrence (row chunks fanned over `pool`;
+/// row-split-invariant accumulation, so pooling moves no bits), mirrors
+/// its own diagonal block in place, and mirror-copies the columns left of
+/// the band from the already-written panels — a panel read per earlier
+/// panel instead of a duplicate accumulation.
+pub fn syrk_spill(store: &mut PanelStore, a: &Mat, pool: Option<&ThreadPool>) -> Result<()> {
+    let p = store.n();
+    ensure!(
+        p == a.cols(),
+        "syrk_spill: store holds a {}-dim matrix but AᵀA is {}-dim",
+        p,
+        a.cols()
+    );
+    for t in 0..store.panels() {
+        let (lo, hi) = store.range(t);
+        let rows = hi - lo;
+        let mut band = Mat::zeros(rows, p);
+        // Columns [0, lo): mirror from the already-written panels —
+        // band[r, j] = G[lo+r, j] := G[j, lo+r], computed in panel(j)'s
+        // upper part (exactly the copy syrk_t's mirror_upper performs).
+        for u in 0..t {
+            let (lo_u, hi_u) = store.range(u);
+            let pu = store.panel_cow(u)?;
+            for r in 0..rows {
+                let brow = band.row_mut(r);
+                for j in lo_u..hi_u {
+                    brow[j] = pu[(j - lo_u) * p + lo + r];
+                }
+            }
+        }
+        // Columns ≥ row: the upper-triangle recurrence, row chunks over
+        // the pool (it never touches columns < its row, so the mirrored
+        // prefix above is untouched).
+        match pool {
+            Some(pool) if pool.size() > 1 && rows >= 2 => {
+                let chunk = rows.div_ceil(pool.size() * 2).max(1);
+                let jobs: Vec<_> = band
+                    .as_mut_slice()
+                    .chunks_mut(chunk * p)
+                    .enumerate()
+                    .map(|(c, slice)| {
+                        let clo = lo + c * chunk;
+                        let chi = (clo + chunk).min(hi);
+                        move || syrk_t_rows_into(a, clo, chi, slice)
+                    })
+                    .collect();
+                pool.scope(jobs);
+            }
+            _ => syrk_t_rows_into(a, lo, hi, band.as_mut_slice()),
+        }
+        // Diagonal block's strictly-lower part: mirror within the band
+        // (the source rows above are final once the recurrence is done).
+        for r in 1..rows {
+            for j in lo..(lo + r) {
+                band[(r, j)] = band[(j - lo, lo + r)];
+            }
+        }
+        store.write_panel(t, band)?;
+    }
+    Ok(())
+}
+
+/// The spilled lower Cholesky factor: panels of `L` living in the
+/// [`PanelStore`] that [`chol_spill`] consumed and factored in place.
+#[derive(Debug)]
+pub struct SpilledCholesky {
+    store: PanelStore,
+}
+
+/// Left-looking, panel-at-a-time blocked Cholesky over a [`PanelStore`]
+/// holding the SPD matrix `A` (lower triangle + diagonal are read; the
+/// upper triangle is ignored and comes back zeroed, exactly like
+/// [`Cholesky::factor_into`]). Panels are factored in place and written
+/// back — the full `N×N` never exists in RAM.
+///
+/// **Bitwise-identical** to [`Cholesky::factor`] /
+/// [`Cholesky::factor_into`] for any tile height or pool size: each
+/// element keeps the serial recurrence's exact arithmetic (one
+/// full-prefix [`dot`] against final `L` values, one subtract, one
+/// divide), and the relative pivot floor is computed from the same
+/// original diagonal (cached `O(N)` by the store at write time — no extra
+/// panel pass). The left-looking
+/// update of a panel against each previously factored panel fans its rows
+/// out over `pool` (rows are independent; per-element arithmetic is
+/// untouched).
+///
+/// ```
+/// use fastcv::linalg::{chol_spill, syrk_t, Cholesky, Mat, PanelStore};
+/// use fastcv::util::rng::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let a = Mat::from_fn(12, 9, |_, _| rng.gauss());
+/// let mut g = syrk_t(&a);
+/// for i in 0..9 {
+///     g[(i, i)] += 0.5;
+/// }
+/// let mut store = PanelStore::new(9, 4, None).unwrap();
+/// store.write_mat(&g).unwrap();
+/// let spilled = chol_spill(store, None).unwrap();
+/// let serial = Cholesky::factor(&g).unwrap();
+/// assert_eq!(spilled.store().to_mat().unwrap().as_slice(), serial.l().as_slice());
+/// ```
+pub fn chol_spill(mut store: PanelStore, pool: Option<&ThreadPool>) -> Result<SpilledCholesky> {
+    let floor = pivot_floor(&store, 0.0, false);
+    for t in 0..store.panels() {
+        let (lo, hi) = store.range(t);
+        let mut w = store.read_panel(t)?;
+        // Left-looking: apply every previously factored panel (in place,
+        // panels < t already hold final L rows), then the diagonal block.
+        for u in 0..t {
+            let (lo_u, hi_u) = store.range(u);
+            let lu = store.panel_cow(u)?;
+            left_looking_update(&mut w, &lu, lo_u, hi_u, pool);
+        }
+        factor_diagonal_block(&mut w, lo, hi, floor)?;
+        store.write_panel(t, w)?;
+    }
+    Ok(SpilledCholesky { store })
+}
+
+/// Relative pivot floor `1e-10·max|A_ii + ridge|` over a store's diagonal
+/// (the exact floor the in-RAM [`Cholesky::factor`] computes after the
+/// caller's `+= λ` loop; `skip_last` mirrors the primal unpenalised
+/// intercept). Reads the `O(N)` diagonal the store caches at write time —
+/// no panel IO. Shared by both spilled factorisations.
+fn pivot_floor(store: &PanelStore, ridge: f64, skip_last: bool) -> f64 {
+    let last = store.n().saturating_sub(1);
+    let mut max_diag = 0.0f64;
+    for (i, &v) in store.diag.iter().enumerate() {
+        let mut d = v;
+        if ridge != 0.0 && !(skip_last && i == last) {
+            d += ridge;
+        }
+        max_diag = max_diag.max(d.abs());
+    }
+    1e-10 * max_diag
+}
+
+/// One left-looking update of working panel `w` against an already
+/// factored panel (`lu` = rows `[lo_u, hi_u)` of `L`, flat row-major):
+/// for each of its columns `j`, `w[r, j] = (w[r, j] −
+/// dot(w[r, ..j], L[j, ..j])) / L[j, j]` — the serial recurrence's exact
+/// per-element arithmetic. Rows of `w` are independent (each consumes
+/// only its own prefix plus `lu`'s final rows), so they fan out over
+/// `pool` in row chunks. Shared by [`chol_spill`] / [`chol_spill_ridged`].
+fn left_looking_update(
+    w: &mut Mat,
+    lu: &[f64],
+    lo_u: usize,
+    hi_u: usize,
+    pool: Option<&ThreadPool>,
+) {
+    let n = w.cols();
+    let rows = w.rows();
+    let update_rows = |w_rows: &mut [f64]| {
+        for row_w in w_rows.chunks_mut(n) {
+            for j in lo_u..hi_u {
+                let lrow = &lu[(j - lo_u) * n..(j - lo_u + 1) * n];
+                let s = row_w[j] - dot(&row_w[..j], &lrow[..j]);
+                row_w[j] = s / lrow[j];
+            }
+        }
+    };
+    match pool {
+        Some(pool) if pool.size() > 1 && rows >= 2 => {
+            let chunk = rows.div_ceil(pool.size() * 2).max(1);
+            let update_rows = &update_rows;
+            let jobs: Vec<_> = w
+                .as_mut_slice()
+                .chunks_mut(chunk * n)
+                .map(|w_rows| move || update_rows(w_rows))
+                .collect();
+            pool.scope(jobs);
+        }
+        _ => update_rows(w.as_mut_slice()),
+    }
+}
+
+/// Factor the diagonal block of working panel `w` (global rows `[lo, hi)`)
+/// with the serial recurrence — rows and columns both panel-local,
+/// prefixes final — then zero the panel's upper triangle so the gathered
+/// factor is exactly [`Cholesky::factor`]'s `L`. Shared tail of both
+/// spilled factorisations.
+fn factor_diagonal_block(w: &mut Mat, lo: usize, hi: usize, floor: f64) -> Result<()> {
+    let rows = hi - lo;
+    for j in lo..hi {
+        let r_j = j - lo;
+        let d = w[(r_j, j)] - dot(&w.row(r_j)[..j], &w.row(r_j)[..j]);
+        if d <= floor || !d.is_finite() {
+            bail!("matrix not positive definite at pivot {j} (d={d})");
+        }
+        let d = d.sqrt();
+        w[(r_j, j)] = d;
+        for r in (r_j + 1)..rows {
+            let s = w[(r, j)] - dot(&w.row(r)[..j], &w.row(r_j)[..j]);
+            w[(r, j)] = s / d;
+        }
+    }
+    for r in 0..rows {
+        let i = lo + r;
+        w.row_mut(r)[(i + 1)..].fill(0.0);
+    }
+    Ok(())
+}
+
+/// [`chol_spill`] of `src + ridge·diag` **without materialising the ridged
+/// copy**: each `A` panel is loaded once from the λ-free `src` store with
+/// the ridge folded onto its diagonal at load time — the identical `+= λ`
+/// float op the in-RAM paths apply to their dense Gram — and the factored
+/// panels stream into a fresh store under `dir`. `skip_last` leaves the
+/// final diagonal entry unridged (the primal Gram's unpenalised-intercept
+/// convention, `λI₀`). This is the per-λ-candidate factor of the spilled
+/// [`crate::fastcv::hat::GramCache`] arms: `src` stays intact for the next
+/// candidate (and for the dual RHS), and no intermediate ridged store is
+/// ever written and re-read. Bitwise-identical to ridging the dense Gram
+/// and calling [`Cholesky::factor`].
+pub fn chol_spill_ridged(
+    src: &PanelStore,
+    ridge: f64,
+    skip_last: bool,
+    dir: Option<&Path>,
+    pool: Option<&ThreadPool>,
+) -> Result<SpilledCholesky> {
+    let n = src.n();
+    let last = n.saturating_sub(1);
+    let mut dest =
+        PanelStore::new(n, src.tile(), dir).context("creating the spilled-factor store")?;
+    let floor = pivot_floor(src, ridge, skip_last);
+    for t in 0..src.panels() {
+        let (lo, hi) = src.range(t);
+        // Load the A panel once, folding the ridge onto its diagonal — the
+        // identical `+= λ` float op the in-RAM paths apply to their dense
+        // Gram.
+        let mut w = src.read_panel(t)?;
+        if ridge != 0.0 {
+            for r in 0..(hi - lo) {
+                let i = lo + r;
+                if !(skip_last && i == last) {
+                    w[(r, i)] += ridge;
+                }
+            }
+        }
+        // Left-looking updates read the factored panels from `dest`; the
+        // arithmetic is chol_spill's (and hence Cholesky::factor's) exactly.
+        for u in 0..t {
+            let (lo_u, hi_u) = dest.range(u);
+            let lu = dest.panel_cow(u)?;
+            left_looking_update(&mut w, &lu, lo_u, hi_u, pool);
+        }
+        factor_diagonal_block(&mut w, lo, hi, floor)?;
+        dest.write_panel(t, w)?;
+    }
+    Ok(SpilledCholesky { store: dest })
+}
+
+impl SpilledCholesky {
+    /// Dimension.
+    pub fn n(&self) -> usize {
+        self.store.n()
+    }
+
+    /// The factor's panel store (panel `t` holds rows `[lo, hi)` of `L`).
+    pub fn store(&self) -> &PanelStore {
+        &self.store
+    }
+
+    /// Consume into the underlying store.
+    pub fn into_store(self) -> PanelStore {
+        self.store
+    }
+
+    /// Solve `A X = B` overwriting `x` in place, streaming factor panels —
+    /// **bitwise-identical** to [`Cholesky::solve_mat_in_place`] (same
+    /// subtraction sequence per row, same zero-skip, same divides).
+    ///
+    /// Forward substitution consumes row prefixes: one ascending pass over
+    /// the panels. Backward substitution consumes *columns* of `L`, so per
+    /// target panel (descending) the needed `(N−lo)×tile` column strip is
+    /// gathered from panels `t..T` — ≈`T/2` re-reads of the factor, the IO
+    /// price of row-slab panels; residency stays `O(tile·N)`.
+    pub fn solve_mat_in_place(&self, x: &mut Mat) -> Result<()> {
+        let n = self.n();
+        assert_eq!(x.rows(), n, "solve RHS row mismatch");
+        let nrhs = x.cols();
+        let t_count = self.store.panels();
+        // forward: L Y = B
+        for t in 0..t_count {
+            let (lo, hi) = self.store.range(t);
+            let lp = self.store.panel_cow(t)?;
+            for i in lo..hi {
+                let lrow = &lp[(i - lo) * n..(i - lo + 1) * n];
+                for (k, &lik) in lrow[..i].iter().enumerate() {
+                    if lik == 0.0 {
+                        continue;
+                    }
+                    let (head, tail) = x.as_mut_slice().split_at_mut(i * nrhs);
+                    let xk = &head[k * nrhs..(k + 1) * nrhs];
+                    let xi = &mut tail[..nrhs];
+                    for c in 0..nrhs {
+                        xi[c] -= lik * xk[c];
+                    }
+                }
+                let d = lrow[i];
+                for v in x.row_mut(i) {
+                    *v /= d;
+                }
+            }
+        }
+        // backward: Lᵀ X = Y — target panels descending; per target panel
+        // gather the column strip L[lo.., lo..hi] from panels t..T, then
+        // run the serial row loop against the strip.
+        for t in (0..t_count).rev() {
+            let (lo, hi) = self.store.range(t);
+            let width = hi - lo;
+            let mut strip = Mat::zeros(n - lo, width);
+            for u in t..t_count {
+                let (lo_u, hi_u) = self.store.range(u);
+                let lp = self.store.panel_cow(u)?;
+                for k in lo_u..hi_u {
+                    strip
+                        .row_mut(k - lo)
+                        .copy_from_slice(&lp[(k - lo_u) * n + lo..(k - lo_u) * n + hi]);
+                }
+            }
+            for i in (lo..hi).rev() {
+                let ci = i - lo;
+                for k in (i + 1)..n {
+                    let lki = strip[(k - lo, ci)];
+                    if lki == 0.0 {
+                        continue;
+                    }
+                    let (head, tail) = x.as_mut_slice().split_at_mut(k * nrhs);
+                    let xi = &mut head[i * nrhs..(i + 1) * nrhs];
+                    let xk = &tail[..nrhs];
+                    for c in 0..nrhs {
+                        xi[c] -= lki * xk[c];
+                    }
+                }
+                let d = strip[(ci, ci)];
+                for v in x.row_mut(i) {
+                    *v /= d;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// [`SpilledCholesky::solve_mat_in_place`] on a copy of the RHS.
+    pub fn solve_mat(&self, b: &Mat) -> Result<Mat> {
+        let mut x = b.clone();
+        self.solve_mat_in_place(&mut x)?;
+        Ok(x)
+    }
+
+    /// Gather the factor into an in-RAM [`Cholesky`] (tests / callers that
+    /// decide the factor fits after all).
+    pub fn to_cholesky(&self) -> Result<Cholesky> {
+        Ok(Cholesky::from_lower(self.store.to_mat()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::syrk_t;
+    use crate::linalg::tiled::gram_tiled;
+    use crate::util::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::from_fn(n + 3, n, |_, _| rng.gauss());
+        let mut g = syrk_t(&a);
+        for i in 0..n {
+            g[(i, i)] += 0.5;
+        }
+        g
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("fastcv-spill-test-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn spill_panel_store_ram_roundtrip() {
+        let g = Mat::from_fn(7, 7, |i, j| (i * 7 + j) as f64);
+        let mut store = PanelStore::new(7, 3, None).unwrap();
+        assert_eq!(store.panels(), 3);
+        assert_eq!(store.range(2), (6, 7));
+        assert!(!store.is_disk());
+        assert!(store.panel_path(0).is_none());
+        // reading before writing is an error, not garbage
+        assert!(store.read_panel(1).is_err());
+        store.write_mat(&g).unwrap();
+        assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice());
+        // RAM panels are borrowed, not copied, on read-only access
+        assert!(matches!(store.panel_cow(0).unwrap(), std::borrow::Cow::Borrowed(_)));
+        assert_eq!(&*store.panel_cow(1).unwrap(), store.read_panel(1).unwrap().as_slice());
+        // take_square is a pure gather
+        let idx = [0usize, 2, 5, 6];
+        assert_eq!(
+            store.take_square(&idx).unwrap().as_slice(),
+            g.take(&idx, &idx).as_slice()
+        );
+    }
+
+    #[test]
+    fn spill_panel_store_disk_roundtrip_and_cleanup() {
+        let base = temp_dir("roundtrip");
+        let g = Mat::from_fn(9, 9, |i, j| (i as f64) - 0.5 * j as f64);
+        let panel0;
+        {
+            let mut store = PanelStore::new(9, 4, Some(&base)).unwrap();
+            assert!(store.is_disk());
+            store.write_mat(&g).unwrap();
+            panel0 = store.panel_path(0).unwrap();
+            assert!(panel0.exists(), "panel file must exist after write");
+            assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice());
+            // disk panels come back owned (read from the file)
+            assert!(matches!(store.panel_cow(0).unwrap(), std::borrow::Cow::Owned(_)));
+            let idx = [1usize, 4, 8];
+            assert_eq!(
+                store.take_square(&idx).unwrap().as_slice(),
+                g.take(&idx, &idx).as_slice()
+            );
+        }
+        // drop removed the store-private subdirectory
+        assert!(!panel0.exists(), "dropped store must clean its panels up");
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_torn_panel_file_is_detected() {
+        // Crash safety: a partially written panel must be *detected* by the
+        // length check, not silently read as a shorter matrix.
+        let base = temp_dir("torn");
+        let g = Mat::from_fn(6, 6, |i, j| (i + j) as f64);
+        let mut store = PanelStore::new(6, 4, Some(&base)).unwrap();
+        store.write_mat(&g).unwrap();
+        let path = store.panel_path(1).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 5]).unwrap(); // tear it
+        let err = store.read_panel(1).err().expect("torn panel must error");
+        assert!(format!("{err:#}").contains("torn panel file"), "{err:#}");
+        // the intact panel still reads fine
+        assert!(store.read_panel(0).is_ok());
+        drop(store);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_chol_bitwise_matches_factor_across_tiles() {
+        // Acceptance: the spilled factor equals Cholesky::factor to the
+        // last bit across tile heights {1, 7, N, N+3} (remainder panels
+        // included), serial and pooled.
+        let mut rng = Rng::new(31);
+        let pool = ThreadPool::new(4);
+        for n in [5usize, 23, 40] {
+            let g = spd(&mut rng, n);
+            let serial = Cholesky::factor(&g).unwrap();
+            for tile in [1usize, 7, n, n + 3] {
+                for pool_opt in [None, Some(&pool)] {
+                    let mut store = PanelStore::new(n, tile, None).unwrap();
+                    store.write_mat(&g).unwrap();
+                    let spilled = chol_spill(store, pool_opt).unwrap();
+                    assert_eq!(
+                        spilled.store().to_mat().unwrap().as_slice(),
+                        serial.l().as_slice(),
+                        "n={n} tile={tile} pooled={}",
+                        pool_opt.is_some()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spill_solves_bitwise_match_in_ram() {
+        let mut rng = Rng::new(32);
+        let pool = ThreadPool::new(3);
+        for n in [6usize, 19, 30] {
+            let g = spd(&mut rng, n);
+            let serial = Cholesky::factor(&g).unwrap();
+            let b = Mat::from_fn(n, 5, |_, _| rng.gauss());
+            let mut expect = b.clone();
+            serial.solve_mat_in_place(&mut expect);
+            for tile in [1usize, 7, n, n + 3] {
+                let mut store = PanelStore::new(n, tile, None).unwrap();
+                store.write_mat(&g).unwrap();
+                let spilled = chol_spill(store, Some(&pool)).unwrap();
+                let mut x = b.clone();
+                spilled.solve_mat_in_place(&mut x).unwrap();
+                assert_eq!(x.as_slice(), expect.as_slice(), "n={n} tile={tile}");
+                // solve_mat and to_cholesky agree too
+                assert_eq!(
+                    spilled.solve_mat(&b).unwrap().as_slice(),
+                    expect.as_slice()
+                );
+                assert_eq!(
+                    spilled.to_cholesky().unwrap().l().as_slice(),
+                    serial.l().as_slice()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spill_chol_ridged_bitwise_matches_factor_of_ridged_gram() {
+        // The per-λ-candidate factor: ridge folded onto the diagonal at
+        // panel load (λ-free source store untouched) must equal ridging
+        // the dense Gram then Cholesky::factor, bitwise — both diagonal
+        // conventions, RAM and disk destinations, serial and pooled.
+        let mut rng = Rng::new(36);
+        let pool = ThreadPool::new(3);
+        let base = temp_dir("ridged");
+        for n in [6usize, 19, 31] {
+            // A PSD-but-unridged Gram of a wide matrix: singular without λ,
+            // SPD once ridged — exactly the per-candidate situation.
+            let a = Mat::from_fn(n.div_ceil(2), n, |_, _| rng.gauss());
+            let g0 = crate::linalg::gemm::syrk_t(&a);
+            for tile in [1usize, 7, n, n + 3] {
+                let mut src = PanelStore::new(n, tile, None).unwrap();
+                src.write_mat(&g0).unwrap();
+                for &(lambda, skip_last) in &[(0.7, false), (2.5, true)] {
+                    let mut ridged = g0.clone();
+                    let cut = if skip_last { n - 1 } else { n };
+                    for i in 0..cut {
+                        ridged[(i, i)] += lambda;
+                    }
+                    let serial = match Cholesky::factor(&ridged) {
+                        Ok(ch) => ch,
+                        // skip_last leaves the unridged corner: the dense
+                        // factor can legitimately reject; so must we.
+                        Err(_) => {
+                            assert!(
+                                chol_spill_ridged(&src, lambda, skip_last, None, None).is_err(),
+                                "dense factor rejected but spilled accepted (n={n})"
+                            );
+                            continue;
+                        }
+                    };
+                    for dir in [None, Some(base.as_path())] {
+                        let spilled =
+                            chol_spill_ridged(&src, lambda, skip_last, dir, Some(&pool)).unwrap();
+                        assert_eq!(
+                            spilled.store().to_mat().unwrap().as_slice(),
+                            serial.l().as_slice(),
+                            "n={n} tile={tile} λ={lambda} skip_last={skip_last}"
+                        );
+                    }
+                    // the λ-free source store is untouched
+                    assert_eq!(src.to_mat().unwrap().as_slice(), g0.as_slice());
+                }
+                // unridged + singular must fail cleanly
+                assert!(chol_spill_ridged(&src, 0.0, false, None, None).is_err());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_chol_rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        let mut store = PanelStore::new(2, 1, None).unwrap();
+        store.write_mat(&a).unwrap();
+        let err = chol_spill(store, None).err().expect("indefinite must fail");
+        assert!(format!("{err:#}").contains("not positive definite"), "{err:#}");
+    }
+
+    #[test]
+    fn spill_gram_spill_bitwise_matches_gram_tiled() {
+        // gram_spill's panels (upper blocks by GEMM + lower blocks
+        // mirror-copied from the already-written panels) must equal
+        // gram_tiled's (upper blocks + in-RAM mirror) to the last bit,
+        // with and without ridge, serial and pooled.
+        let mut rng = Rng::new(33);
+        let pool = ThreadPool::new(4);
+        for &(n, p) in &[(13usize, 40usize), (24, 7)] {
+            let v = Mat::from_fn(n, p, |_, _| rng.gauss());
+            for tile in [1usize, 7, n, n + 3] {
+                let slab = |lo: usize, hi: usize| {
+                    Mat::from_fn(hi - lo, p, |r, j| v[(lo + r, j)])
+                };
+                let mut reference = gram_tiled(n, tile, slab, None);
+                for ridge in [0.0, 0.8] {
+                    if ridge != 0.0 {
+                        for i in 0..n {
+                            reference[(i, i)] += ridge;
+                        }
+                    }
+                    for pool_opt in [None, Some(&pool)] {
+                        let mut store = PanelStore::new(n, tile, None).unwrap();
+                        gram_spill(&mut store, ridge, slab, pool_opt).unwrap();
+                        assert_eq!(
+                            store.to_mat().unwrap().as_slice(),
+                            reference.as_slice(),
+                            "n={n} p={p} tile={tile} ridge={ridge}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spill_disk_chol_end_to_end() {
+        // Disk-backed store through assembly, factorisation, and solve.
+        let base = temp_dir("chol");
+        let mut rng = Rng::new(34);
+        let n = 17;
+        let g = spd(&mut rng, n);
+        let serial = Cholesky::factor(&g).unwrap();
+        let mut store = PanelStore::new(n, 5, Some(&base)).unwrap();
+        store.write_mat(&g).unwrap();
+        let spilled = chol_spill(store, None).unwrap();
+        assert_eq!(spilled.store().to_mat().unwrap().as_slice(), serial.l().as_slice());
+        let b = Mat::from_fn(n, 3, |_, _| rng.gauss());
+        let mut expect = b.clone();
+        serial.solve_mat_in_place(&mut expect);
+        let mut x = b.clone();
+        spilled.solve_mat_in_place(&mut x).unwrap();
+        assert_eq!(x.as_slice(), expect.as_slice());
+        drop(spilled);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_syrk_spill_bitwise_matches_syrk_t() {
+        let mut rng = Rng::new(35);
+        let pool = ThreadPool::new(4);
+        for &(n, p) in &[(20usize, 9usize), (8, 26)] {
+            let mut a = Mat::from_fn(n, p, |_, _| rng.gauss());
+            // sprinkle exact zeros so the skip branches are exercised
+            for i in 0..n {
+                for j in 0..p {
+                    if (i + j) % 5 == 0 {
+                        a[(i, j)] = 0.0;
+                    }
+                }
+            }
+            let reference = syrk_t(&a);
+            for tile in [1usize, 7, p, p + 3] {
+                for pool_opt in [None, Some(&pool)] {
+                    let mut store = PanelStore::new(p, tile, None).unwrap();
+                    syrk_spill(&mut store, &a, pool_opt).unwrap();
+                    assert_eq!(
+                        store.to_mat().unwrap().as_slice(),
+                        reference.as_slice(),
+                        "n={n} p={p} tile={tile} pooled={}",
+                        pool_opt.is_some()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -16,6 +16,10 @@
 //!   worker: own band, partner band, partner's transposed copy) exist at
 //!   once. Tile pairs of the upper triangle fan out over a
 //!   [`ThreadPool`]; the lower triangle is mirrored.
+//! * [`syrk_tiled`] — the primal sibling: `AᵀA` in `tile`-row output
+//!   bands (bit-identical to [`crate::linalg::syrk_t`]), so the
+//!   `(P+1)×(P+1)` primal quadrant gets the same slab treatment the dual
+//!   side got.
 //! * [`chol_blocked`] — panel-blocked Cholesky whose per-column
 //!   subdiagonal updates fan out over the pool in `tile`-row chunks (see
 //!   [`Cholesky::factor_blocked`]; an in-place variant,
@@ -24,7 +28,9 @@
 //! * [`TilePolicy`] — the knob the [`crate::fastcv::context::ComputeContext`]
 //!   carries: `Off` reproduces the historical one-shot kernels bitwise,
 //!   `Rows`/`Budget` pick a tile height (the latter from a transient-memory
-//!   budget in bytes).
+//!   budget in bytes), and `Spill` routes the Gram *and its factor*
+//!   through the out-of-core [`crate::linalg::spill`] layer (panels on
+//!   disk or in RAM; nothing `N×N` ever resident).
 //!
 //! ## Bitwise determinism
 //!
@@ -50,19 +56,44 @@
 //!   recurrence instead.)
 
 use super::chol::Cholesky;
-use super::gemm::matmul;
+use super::gemm::{matmul, mirror_upper, syrk_t_rows_into};
 use super::mat::Mat;
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// Default spill panel height when `--spill-dir` is given without an
+/// explicit `--tile-rows`.
+const DEFAULT_SPILL_TILE: usize = 256;
 
 /// How (whether) to tile the `N×N` Gram builds and their Cholesky.
 ///
 /// Carried by [`crate::fastcv::context::ComputeContext`] and surfaced on
-/// the CLI as `--tile-rows R` / `--mem-budget MB`. `Off` (the default)
-/// reproduces the historical one-shot kernels bitwise; the tiled modes are
-/// bit-identical to them (see the module docs) but bound every transient
-/// slab to `O(tile)` rows.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+/// the CLI as `--tile-rows R` / `--mem-budget MB` / `--spill-dir PATH`.
+/// `Off` (the default) reproduces the historical one-shot kernels bitwise;
+/// the tiled modes are bit-identical to them (see the module docs) but
+/// bound every transient slab to `O(tile)` rows, and `Spill` goes further:
+/// the Gram and its Cholesky factor live as
+/// [`PanelStore`](crate::linalg::spill::PanelStore) panels (RAM or disk)
+/// and never coexist in RAM (the [`crate::linalg::spill`] layer — still
+/// bitwise, property-tested as the `spill_*` suite).
+///
+/// ```
+/// use fastcv::fastcv::bigdata::StreamingHat;
+/// use fastcv::fastcv::{ComputeContext, GramBackend};
+/// use fastcv::linalg::{Mat, TilePolicy};
+/// use fastcv::util::rng::Rng;
+///
+/// let mut rng = Rng::new(3);
+/// let x = Mat::from_fn(20, 60, |_, _| rng.gauss());   // P ≫ N
+/// let ctx = ComputeContext::serial()
+///     .with_backend(GramBackend::Dual)
+///     // RAM panels; pass `dir: Some(path)` to spill them to disk
+///     .with_tile_policy(TilePolicy::Spill { dir: None, tile: 8 });
+/// let hat = StreamingHat::build_ctx(&x, 0.5, &ctx).unwrap();
+/// assert_eq!(hat.t.shape(), (20, 60));                // K_c never lived in RAM
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
 pub enum TilePolicy {
     /// No tiling: the historical one-shot kernels, bitwise-unchanged.
     #[default]
@@ -78,13 +109,31 @@ pub enum TilePolicy {
         /// Transient budget in bytes (per concurrent worker).
         bytes: usize,
     },
+    /// Out-of-core: Gram panels (and the Cholesky factor's) are persisted
+    /// in a [`PanelStore`](crate::linalg::spill::PanelStore) and streamed
+    /// through the left-looking [`crate::linalg::spill::chol_spill`], so
+    /// the `N×N` (or primal `(P+1)×(P+1)`) square never coexists in RAM.
+    /// Bitwise-identical to the one-shot builds, like every other mode.
+    Spill {
+        /// `Some(dir)` writes panels as files under `dir` (the CLI's
+        /// `--spill-dir`); `None` keeps panels as RAM buffers — the
+        /// blocked out-of-core *schedule* without the disk IO.
+        dir: Option<PathBuf>,
+        /// Panel height in rows (clamped to `[1, N]` per build).
+        tile: usize,
+    },
 }
 
 impl TilePolicy {
-    /// Build from the CLI knobs: `--tile-rows R` wins when both are given,
-    /// `--mem-budget MB` (mebibytes) otherwise, `Off` when neither.
-    pub fn from_cli(tile_rows: usize, mem_budget_mb: usize) -> TilePolicy {
-        if tile_rows > 0 {
+    /// Build from the CLI knobs: `--spill-dir` selects the out-of-core
+    /// mode (panel height from `--tile-rows`, else a 256-row default);
+    /// otherwise `--tile-rows R` wins when both remaining knobs are given,
+    /// `--mem-budget MB` (mebibytes) next, `Off` when none.
+    pub fn from_cli(tile_rows: usize, mem_budget_mb: usize, spill_dir: Option<&str>) -> TilePolicy {
+        if let Some(dir) = spill_dir {
+            let tile = if tile_rows > 0 { tile_rows } else { DEFAULT_SPILL_TILE };
+            TilePolicy::Spill { dir: Some(PathBuf::from(dir)), tile }
+        } else if tile_rows > 0 {
             TilePolicy::Rows(tile_rows)
         } else if mem_budget_mb > 0 {
             TilePolicy::Budget { bytes: mem_budget_mb << 20 }
@@ -98,12 +147,23 @@ impl TilePolicy {
         matches!(self, TilePolicy::Off)
     }
 
+    /// The spill parameters `(dir, tile)` when this is the out-of-core
+    /// mode — builders check this *before* [`TilePolicy::tile_rows`], which
+    /// treats `Spill` as a plain in-RAM tiling for consumers that have no
+    /// spilled form (the spectral eigendecomposition, say).
+    pub fn spill(&self) -> Option<(Option<&Path>, usize)> {
+        match self {
+            TilePolicy::Spill { dir, tile } => Some((dir.as_deref(), *tile)),
+            _ => None,
+        }
+    }
+
     /// Resolve the tile height for an `N×P` build: `None` when off,
     /// otherwise a height in `[1, N]`.
     pub fn tile_rows(&self, n: usize, p: usize) -> Option<usize> {
-        match *self {
+        match self {
             TilePolicy::Off => None,
-            TilePolicy::Rows(t) => Some(t.clamp(1, n.max(1))),
+            TilePolicy::Rows(t) => Some((*t).clamp(1, n.max(1))),
             TilePolicy::Budget { bytes } => {
                 // Three tile×P slabs live at once inside a worker (own band,
                 // partner band, partner's transposed copy) plus the tile×N
@@ -111,20 +171,23 @@ impl TilePolicy {
                 let per_row = 8 * (3 * p + n).max(1);
                 Some((bytes / per_row).clamp(1, n.max(1)))
             }
+            TilePolicy::Spill { tile, .. } => Some((*tile).clamp(1, n.max(1))),
         }
     }
 
-    /// Short tag for labels / TSV columns (`off`, `tile-r64`, `tile-b256m`;
-    /// sub-MiB budgets print in KiB so distinct budgets never collide on a
-    /// `b0m` label).
+    /// Short tag for labels / TSV columns (`off`, `tile-r64`, `tile-b256m`,
+    /// `spill-r256[-disk]`; sub-MiB budgets print in KiB so distinct
+    /// budgets never collide on a `b0m` label).
     pub fn tag(&self) -> String {
-        match *self {
+        match self {
             TilePolicy::Off => "off".to_string(),
             TilePolicy::Rows(t) => format!("tile-r{t}"),
-            TilePolicy::Budget { bytes } if bytes >= (1 << 20) => {
+            TilePolicy::Budget { bytes } if *bytes >= (1 << 20) => {
                 format!("tile-b{}m", bytes >> 20)
             }
             TilePolicy::Budget { bytes } => format!("tile-b{}k", bytes >> 10),
+            TilePolicy::Spill { dir: None, tile } => format!("spill-r{tile}"),
+            TilePolicy::Spill { dir: Some(_), tile } => format!("spill-r{tile}-disk"),
         }
     }
 }
@@ -220,6 +283,64 @@ where
     }
 }
 
+/// `G = AᵀA` in `tile`-row output bands — the **tiled primal syrk**
+/// (ROADMAP's `(P+1)`-huge-quadrant sibling of [`gram_tiled`]). Bands of
+/// the upper block triangle are computed straight into disjoint row slabs
+/// of the output (no per-band copies beyond the accumulator itself) and
+/// fan out over `pool` with the same balanced head/tail pairing as
+/// [`gram_tiled`] (leading bands own the long upper-triangle rows); the
+/// strictly-lower triangle is mirrored.
+///
+/// Bit-identical to [`crate::linalg::syrk_t`] / `syrk_t_pool` for any tile
+/// height, pool size, or remainder panel: every upper-triangle element
+/// accumulates over the sample index in ascending order whichever band its
+/// row lands in (the `syrk_t_rows` split-invariance), and the mirror is an
+/// exact copy. The primal `G₀ = X̃ᵀX̃` build of
+/// [`crate::fastcv::hat::GramCache`] routes here under a tiled
+/// [`TilePolicy`]; the spilled form is
+/// [`crate::linalg::spill::syrk_spill`].
+pub fn syrk_tiled(a: &Mat, tile: usize, pool: Option<&ThreadPool>) -> Mat {
+    let p = a.cols();
+    let tile = tile.clamp(1, p.max(1));
+    let tiles: Vec<(usize, usize)> =
+        (0..p).step_by(tile).map(|lo| (lo, (lo + tile).min(p))).collect();
+    let mut g = Mat::zeros(p, p);
+    match pool {
+        Some(pool) if pool.size() > 1 && tiles.len() > 1 => {
+            let tiles_ref = &tiles;
+            let t_count = tiles.len();
+            let pair = t_count.div_ceil(2) >= pool.size();
+            let mut bands: Vec<Option<(usize, &mut [f64])>> =
+                g.as_mut_slice().chunks_mut(tile * p).enumerate().map(Some).collect();
+            let job_count = if pair { t_count.div_ceil(2) } else { t_count };
+            let jobs: Vec<_> = (0..job_count)
+                .map(|lo_idx| {
+                    let (t_first, first) = bands[lo_idx].take().expect("band consumed once");
+                    let hi_idx = t_count - 1 - lo_idx;
+                    let second = if pair && hi_idx > lo_idx { bands[hi_idx].take() } else { None };
+                    move || {
+                        let (lo, hi) = tiles_ref[t_first];
+                        syrk_t_rows_into(a, lo, hi, first);
+                        if let Some((t_second, band)) = second {
+                            let (lo, hi) = tiles_ref[t_second];
+                            syrk_t_rows_into(a, lo, hi, band);
+                        }
+                    }
+                })
+                .collect();
+            pool.scope(jobs);
+        }
+        _ => {
+            for &(lo, hi) in &tiles {
+                let band = &mut g.as_mut_slice()[lo * p..hi * p];
+                syrk_t_rows_into(a, lo, hi, band);
+            }
+        }
+    }
+    mirror_upper(&mut g);
+    g
+}
+
 /// Panel-blocked, pool-parallel Cholesky — a free-function alias for
 /// [`Cholesky::factor_blocked`] (bit-identical to [`Cholesky::factor`]
 /// for any tile height or pool size). The per-λ `K_c + λI` factor of the
@@ -312,11 +433,20 @@ mod tests {
         assert_eq!(policy.tile_rows(100, 50), Some(10));
         // a tiny budget still yields a usable tile of 1
         assert_eq!(TilePolicy::Budget { bytes: 1 }.tile_rows(100, 50), Some(1));
-        // CLI mapping: rows wins, then budget, else off
-        assert_eq!(TilePolicy::from_cli(32, 0), TilePolicy::Rows(32));
-        assert_eq!(TilePolicy::from_cli(32, 7), TilePolicy::Rows(32));
-        assert_eq!(TilePolicy::from_cli(0, 2), TilePolicy::Budget { bytes: 2 << 20 });
-        assert_eq!(TilePolicy::from_cli(0, 0), TilePolicy::Off);
+        // CLI mapping: spill-dir wins, then rows, then budget, else off
+        assert_eq!(TilePolicy::from_cli(32, 0, None), TilePolicy::Rows(32));
+        assert_eq!(TilePolicy::from_cli(32, 7, None), TilePolicy::Rows(32));
+        assert_eq!(TilePolicy::from_cli(0, 2, None), TilePolicy::Budget { bytes: 2 << 20 });
+        assert_eq!(TilePolicy::from_cli(0, 0, None), TilePolicy::Off);
+        assert_eq!(
+            TilePolicy::from_cli(32, 0, Some("/tmp/s")),
+            TilePolicy::Spill { dir: Some("/tmp/s".into()), tile: 32 }
+        );
+        assert_eq!(
+            TilePolicy::from_cli(0, 0, Some("/tmp/s")),
+            TilePolicy::Spill { dir: Some("/tmp/s".into()), tile: 256 },
+            "--spill-dir without --tile-rows uses the default panel height"
+        );
         // tags
         assert_eq!(TilePolicy::Off.tag(), "off");
         assert_eq!(TilePolicy::Rows(64).tag(), "tile-r64");
@@ -324,5 +454,49 @@ mod tests {
         // sub-MiB budgets stay distinguishable (KiB units, never "b0m")
         assert_eq!(TilePolicy::Budget { bytes: 32 << 10 }.tag(), "tile-b32k");
         assert_eq!(TilePolicy::Budget { bytes: 512 << 10 }.tag(), "tile-b512k");
+        assert_eq!(TilePolicy::Spill { dir: None, tile: 64 }.tag(), "spill-r64");
+        assert_eq!(
+            TilePolicy::Spill { dir: Some("/tmp/s".into()), tile: 64 }.tag(),
+            "spill-r64-disk"
+        );
+        // spill() exposes the parameters, tile_rows() the assembly height
+        let spill = TilePolicy::Spill { dir: None, tile: 8 };
+        assert_eq!(spill.spill(), Some((None, 8)));
+        assert_eq!(spill.tile_rows(100, 50), Some(8));
+        assert!(!spill.is_off());
+        assert_eq!(TilePolicy::Rows(8).spill(), None);
+    }
+
+    #[test]
+    fn spill_syrk_tiled_bitwise_matches_syrk_t_pool() {
+        // Acceptance: the tiled primal syrk reproduces syrk_t (and the
+        // pooled syrk_t_pool, which equals it) to the last bit across tile
+        // heights {1, 7, P, P+3} — remainder bands included — serial and
+        // pooled, including through the == 0.0 skip path.
+        use crate::linalg::gemm::{syrk_t, syrk_t_pool};
+        let mut rng = Rng::new(41);
+        let pool = ThreadPool::new(4);
+        for &(n, p) in &[(20usize, 9usize), (8, 26), (30, 64)] {
+            let mut a = random_mat(&mut rng, n, p);
+            for i in 0..n {
+                for j in 0..p {
+                    if (i + j) % 6 == 0 {
+                        a[(i, j)] = 0.0;
+                    }
+                }
+            }
+            let reference = syrk_t(&a);
+            assert_eq!(
+                reference.as_slice(),
+                syrk_t_pool(&a, Some(&pool)).as_slice(),
+                "precondition: pooled syrk equals serial"
+            );
+            for tile in [1usize, 7, p, p + 3] {
+                let serial = syrk_tiled(&a, tile, None);
+                assert_eq!(serial.as_slice(), reference.as_slice(), "serial ({n},{p}) tile={tile}");
+                let pooled = syrk_tiled(&a, tile, Some(&pool));
+                assert_eq!(pooled.as_slice(), reference.as_slice(), "pooled ({n},{p}) tile={tile}");
+            }
+        }
     }
 }

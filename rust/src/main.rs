@@ -63,13 +63,16 @@ fn print_usage() {
                  [--tile-rows R | --mem-budget MB]  (tile the N×N Gram builds:\n\
                  fixed rows, or auto-sized from a transient-memory budget;\n\
                  bit-identical to untiled — memory/wall-clock only)\n\
+                 [--spill-dir PATH]  (out-of-core: Gram + Cholesky factor live\n\
+                 as tile×N panel files under PATH, never resident at once;\n\
+                 panel height from --tile-rows, default 256; still bit-identical)\n\
            parity                        §4.1 N≈P crossover table\n\
            complexity                    Table 1 empirical scaling exponents\n\
            eeg [--subjects N] [--perms N] [--full]   Fig. 4 EEG/MEG permutation study\n\
            bigdata [--n N] [--p P] [--q Q] [--lambda L]   §4.5 strategies demo:\n\
                  streaming hat + sparse projection + LDA ensemble, all through\n\
                  one ComputeContext ([--threads T] [--backend ...]\n\
-                 [--tile-rows R | --mem-budget MB])\n\
+                 [--tile-rows R | --mem-budget MB | --spill-dir PATH])\n\
            quickstart                    30-second end-to-end demo\n\
            artifacts                     list AOT artifacts and PJRT platform"
     );
@@ -112,6 +115,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let tile = fastcv::linalg::TilePolicy::from_cli(
         args.get_parse_or("tile-rows", 0usize),
         args.get_parse_or("mem-budget", 0usize),
+        args.get("spill-dir"),
     );
     let mut points = grid(exp, &scale);
     if engine != PermEngine::Serial {
@@ -136,7 +140,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     for p in points.iter_mut() {
         p.backend = backend;
         p.threads = threads;
-        p.tile = tile;
+        p.tile = tile.clone();
     }
     eprintln!("{}: {} points", exp.name(), points.len());
     let sched = Scheduler::new(workers, seed, args.flag("verbose"));
@@ -380,6 +384,7 @@ fn cmd_bigdata(args: &Args) -> Result<()> {
     let tile = fastcv::linalg::TilePolicy::from_cli(
         args.get_parse_or("tile-rows", 0usize),
         args.get_parse_or("mem-budget", 0usize),
+        args.get("spill-dir"),
     );
     let ctx = ComputeContext::with_threads(threads).with_backend(backend).with_tile_policy(tile);
 

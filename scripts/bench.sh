@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Perf-trajectory recorder: run the ablation benches and write their
+# BENCH_*.json artifacts to the repo root (or $FASTCV_BENCH_OUT), so the
+# performance trajectory of the Gram backends, the tiled engine, and the
+# out-of-core spill layer is actually recorded per machine.
+#
+#   scripts/bench.sh                         # full-scale ablations
+#   FASTCV_BENCH_SCALE=tiny scripts/bench.sh # CI-sized smoke run
+#   FASTCV_BENCH_OUT=results scripts/bench.sh
+#
+# Wired into scripts/verify.sh behind BENCH=1 (the default verify run keeps
+# only the quick permutation-engine trajectory).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT="${FASTCV_BENCH_OUT:-.}"
+for b in ablation_backend ablation_tiling ablation_spill; do
+  echo "== bench: $b =="
+  FASTCV_BENCH_OUT="$OUT" cargo bench --bench "$b"
+done
+echo "bench: wrote $OUT/BENCH_backend.json $OUT/BENCH_tiling.json $OUT/BENCH_spill.json"
