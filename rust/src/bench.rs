@@ -60,10 +60,10 @@ impl Bench {
             black_box(f());
             times.push(t.elapsed().as_secs_f64());
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.total_cmp(b));
         let median = times[times.len() / 2];
         let mut dev: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
-        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        dev.sort_by(|a, b| a.total_cmp(b));
         Sample { median, mad: dev[dev.len() / 2], min: times[0], iters: times.len() }
     }
 }

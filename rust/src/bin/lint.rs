@@ -1,0 +1,56 @@
+//! `fastcv-lint` standalone binary.
+//!
+//! Walks every `.rs` file in the workspace and enforces the determinism &
+//! safety rule set (L1–L5; see `docs/LINTS.md`). Exits non-zero when any
+//! violation is found, printing `file:line: [rule] message` diagnostics.
+//!
+//! ```text
+//! cargo run --release --bin lint            # lint the workspace
+//! cargo run --release --bin lint -- --root /path/to/repo
+//! ```
+//!
+//! The same engine backs the `fastcv lint` subcommand and the
+//! `lint_self_check_*` test; this binary is what `scripts/verify.sh` and CI
+//! run *before* the test suite (fail fast).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                println!("fastcv-lint: determinism & safety static analysis (docs/LINTS.md)");
+                println!("usage: lint [--root REPO_ROOT]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("lint: unknown argument {other:?} (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // Default to the repo root this binary was compiled in: the parent of
+    // the rust/ package directory. `--root` overrides for out-of-tree use.
+    let root = root.unwrap_or_else(|| {
+        let manifest: PathBuf = env!("CARGO_MANIFEST_DIR").into();
+        manifest.parent().map(PathBuf::from).unwrap_or(manifest)
+    });
+    match fastcv::lint::lint_workspace(&root) {
+        Ok(report) => {
+            print!("{}", report.render());
+            if report.violations() == 0 {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("lint: failed to walk workspace at {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}

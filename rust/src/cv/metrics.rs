@@ -90,13 +90,16 @@ pub fn confusion(pred: &[usize], truth: &[usize], c: usize) -> Vec<Vec<usize>> {
 pub fn mse(pred: &[f64], truth: &[f64]) -> f64 {
     assert_eq!(pred.len(), truth.len());
     assert!(!pred.is_empty());
+    // lint:allow(float_accum, reason = "serial scalar metric in one canonical order; metrics never run under a parallel backend")
     pred.iter().zip(truth).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / pred.len() as f64
 }
 
 /// Coefficient of determination R².
 pub fn r_squared(pred: &[f64], truth: &[f64]) -> f64 {
     let m = crate::util::mean(truth);
+    // lint:allow(float_accum, reason = "serial scalar metric in one canonical order; metrics never run under a parallel backend")
     let ss_res: f64 = pred.iter().zip(truth).map(|(a, b)| (b - a) * (b - a)).sum();
+    // lint:allow(float_accum, reason = "serial scalar metric in one canonical order; metrics never run under a parallel backend")
     let ss_tot: f64 = truth.iter().map(|b| (b - m) * (b - m)).sum();
     1.0 - ss_res / ss_tot
 }
@@ -109,9 +112,11 @@ pub fn ldc_from_dvals(dvals: &[f64], labels: &[usize]) -> f64 {
     let (mut s0, mut n0, mut s1, mut n1) = (0.0, 0usize, 0.0, 0usize);
     for (&d, &l) in dvals.iter().zip(labels) {
         if l == 0 {
+            // lint:allow(float_accum, reason = "serial class-sum in one canonical order; metrics never run under a parallel backend")
             s0 += d;
             n0 += 1;
         } else {
+            // lint:allow(float_accum, reason = "serial class-sum in one canonical order; metrics never run under a parallel backend")
             s1 += d;
             n1 += 1;
         }
@@ -127,8 +132,10 @@ pub fn balanced_accuracy(pred: &[usize], truth: &[usize], c: usize) -> f64 {
     let mut acc = 0.0;
     let mut classes = 0;
     for t in 0..c {
+        // lint:allow(float_accum, reason = "integer confusion-matrix count — exact arithmetic")
         let total: usize = m[t].iter().sum();
         if total > 0 {
+            // lint:allow(float_accum, reason = "serial balanced-accuracy sum in one canonical order; metrics never run under a parallel backend")
             acc += m[t][t] as f64 / total as f64;
             classes += 1;
         }

@@ -123,8 +123,10 @@ pub fn simulate_subject(spec: &EegSpec, rng: &mut Rng) -> SubjectEpochs {
         let n_base = (-T0 * FS as f64) as usize; // samples before onset
         for ch in 0..nc {
             let base: f64 =
+                // lint:allow(float_accum, reason = "serial per-channel baseline mean in the simulator; single canonical order, never backend-fanned")
                 (0..n_base).map(|it| ep[(ch, it)]).sum::<f64>() / n_base as f64;
             for it in 0..N_T {
+                // lint:allow(float_accum, reason = "serial baseline subtraction in the simulator; each sample touched once")
                 ep[(ch, it)] -= base;
             }
         }
@@ -171,6 +173,7 @@ impl SubjectEpochs {
                 let hi = lo + win;
                 for ch in 0..self.n_channels {
                     let mean: f64 =
+                        // lint:allow(float_accum, reason = "serial window mean in the simulator; single canonical order, never backend-fanned")
                         (lo..hi).map(|it| ep[(ch, it)]).sum::<f64>() / win as f64;
                     x[(tr, w * self.n_channels + ch)] = mean;
                 }

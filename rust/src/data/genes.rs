@@ -64,6 +64,7 @@ pub fn generate(spec: &GeneSpec, rng: &mut Rng) -> Dataset {
             *v = 0.6 * shared[g / module] + 0.8 * rng.gauss();
         }
         for &(g, eff) in &de_sets[class] {
+            // lint:allow(float_accum, reason = "serial effect injection in the simulator; each gene cell written once per class")
             row[g] += eff;
         }
     }

@@ -62,6 +62,7 @@ pub fn generate(spec: &SyntheticSpec, rng: &mut Rng) -> Dataset {
     let mut row = 0;
     for (class, centroid) in centroids.iter().enumerate() {
         let size = spec.n / c + usize::from(class < spec.n % c);
+        // lint:allow(panic, reason = "covariance is Wishart plus diagonal jitter, SPD by construction, so Mvn::new cannot fail")
         let mvn = Mvn::new(centroid.clone(), &cov).expect("jittered Wishart cov is SPD");
         for _ in 0..size {
             mvn.sample_into(rng, x.row_mut(row));

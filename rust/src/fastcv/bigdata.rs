@@ -182,6 +182,7 @@ impl StreamingHat {
         if let Some(t_rows) = tile.tile_rows(p1, p1) {
             let mut g = crate::linalg::syrk_tiled(&xa, t_rows, pool);
             for i in 0..p1 - 1 {
+                // lint:allow(float_accum, reason = "ridge diagonal add: each entry touched exactly once — order-free")
                 g[(i, i)] += lambda;
             }
             let w = match Cholesky::factor_into(g, t_rows, pool) {
@@ -272,6 +273,7 @@ impl StreamingHat {
                 let mut kl = matmul_pool(&xc, &xc.t(), pool);
                 kl.symmetrize();
                 for i in 0..n {
+                    // lint:allow(float_accum, reason = "ridge diagonal add: each entry touched exactly once — order-free")
                     kl[(i, i)] += lambda;
                 }
                 let ch = Cholesky::factor(&kl)
@@ -294,6 +296,7 @@ impl StreamingHat {
                     pool,
                 );
                 for i in 0..n {
+                    // lint:allow(float_accum, reason = "ridge diagonal add: each entry touched exactly once — order-free")
                     kl[(i, i)] += lambda;
                 }
                 let ch = Cholesky::factor_into(kl, tile_rows, pool)
@@ -346,6 +349,7 @@ impl StreamingHat {
                 let mut m = matmul(&t_te, &xc_te.t());
                 let inv_n = 1.0 / self.n() as f64;
                 for v in m.as_mut_slice() {
+                    // lint:allow(float_accum, reason = "uniform centering offset: each entry touched exactly once — order-free")
                     *v += inv_n;
                 }
                 m
@@ -367,6 +371,7 @@ impl StreamingHat {
                 let mut out = crate::linalg::matvec(&self.t, &z);
                 let ybar = sum_y / self.n() as f64;
                 for v in out.iter_mut() {
+                    // lint:allow(float_accum, reason = "uniform centering offset: each entry touched exactly once — order-free")
                     *v += ybar;
                 }
                 out
@@ -443,6 +448,7 @@ impl SparseProjection {
             col_ptr[j as usize + 1] += 1;
         }
         for j in 0..q {
+            // lint:allow(float_accum, reason = "integer CSC prefix sum — exact arithmetic")
             col_ptr[j + 1] += col_ptr[j];
         }
         let mut next = col_ptr.clone();
@@ -490,6 +496,7 @@ impl SparseProjection {
                 for (j, o) in orow.iter_mut().enumerate() {
                     let mut acc = 0.0f64;
                     for &(pi, sign) in &self.entries[self.col_ptr[j]..self.col_ptr[j + 1]] {
+                        // lint:allow(float_accum, reason = "SparseProjection's own serial kernel; this loop is its canonical accumulation order")
                         acc += sign as f64 * row[pi as usize];
                     }
                     *o = acc * self.scale;
@@ -601,10 +608,12 @@ impl LdaEnsemble {
                 let slots_ref = &slots;
                 let draws_ref = &draws;
                 pool.for_each(n_members, move |i| {
+                    // lint:allow(panic, reason = "pool job stores a computed value; a poisoned slot mutex is unreachable")
                     *slots_ref[i].lock().unwrap() = Some(train_one(&draws_ref[i]));
                 });
                 slots
                     .into_iter()
+                    // lint:allow(panic, reason = "every slot is filled by for_each over 0..n_members, and no job panics while holding its lock")
                     .map(|s| s.into_inner().unwrap().unwrap())
                     .collect::<Result<Vec<_>>>()?
             }
@@ -630,6 +639,7 @@ impl LdaEnsemble {
         for (feats, model) in &self.members {
             let xs = x.take_cols(feats);
             for (i, &l) in model.predict(&xs).iter().enumerate() {
+                // lint:allow(float_accum, reason = "integer vote tally — exact arithmetic")
                 votes1[i] += l;
             }
         }

@@ -170,6 +170,7 @@ impl AnalyticBinaryCv {
                 for (j, &i) in tr.iter().enumerate() {
                     let e_tr = (ys[(i, col)] - y_hat[(i, col)]) + corr[(j, col)];
                     let ydot_tr = ys[(i, col)] - e_tr;
+                    // lint:allow(float_accum, reason = "serial class-sum in canonical sample order; never pool-fanned")
                     sum[labels[i]] += ydot_tr;
                     cnt[labels[i]] += 1;
                 }
@@ -218,6 +219,7 @@ impl AnalyticBinaryCv {
             for (j, &i) in tr.iter().enumerate() {
                 let e_tr = (self.y[i] - self.y_hat[i]) + corr[j];
                 let ydot_tr = self.y[i] - e_tr;
+                // lint:allow(float_accum, reason = "serial class-sum in canonical sample order; never pool-fanned")
                 sum[labels[i]] += ydot_tr;
                 cnt[labels[i]] += 1;
             }

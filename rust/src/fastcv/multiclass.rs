@@ -227,6 +227,7 @@ fn fold_step2_predict(
     for (j, &i) in tr.iter().enumerate() {
         let l = labels[i];
         for q in 0..ncomp {
+            // lint:allow(float_accum, reason = "serial centroid accumulation in canonical sample order; never pool-fanned")
             centroids[(l, q)] += z_tr[(j, q)];
         }
     }

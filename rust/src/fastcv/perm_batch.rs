@@ -95,6 +95,7 @@ fn batch_ranges(n_perm: usize, batch_size: usize) -> Vec<(usize, usize)> {
     while start < n_perm {
         let len = batch_size.min(n_perm - start);
         out.push((start, len));
+        // lint:allow(float_accum, reason = "integer batch offset accumulation — exact arithmetic")
         start += len;
     }
     out

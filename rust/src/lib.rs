@@ -44,6 +44,7 @@ pub mod cv;
 pub mod data;
 pub mod fastcv;
 pub mod linalg;
+pub mod lint;
 pub mod model;
 pub mod runtime;
 pub mod stats;

@@ -177,7 +177,7 @@ pub fn sym_eig_ql(a: &Mat) -> SymEig {
 
     // Sort descending (columns of z follow d).
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+    idx.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
     let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
     let vectors = z.take_cols(&idx);
     SymEig { values, vectors }
@@ -244,7 +244,7 @@ pub fn sym_eig_jacobi(a: &Mat) -> SymEig {
     // Extract, sort descending.
     let mut idx: Vec<usize> = (0..n).collect();
     let vals: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
-    idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+    idx.sort_by(|&a, &b| vals[b].total_cmp(&vals[a]));
     let values: Vec<f64> = idx.iter().map(|&i| vals[i]).collect();
     let vectors = v.take_cols(&idx);
     SymEig { values, vectors }

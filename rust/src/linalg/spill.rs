@@ -223,6 +223,7 @@ impl PanelStore {
                 );
                 let data: Vec<f64> = bytes
                     .chunks_exact(8)
+                    // lint:allow(panic, reason = "chunks_exact(8) guarantees every chunk converts to [u8; 8]")
                     .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
                     .collect();
                 Ok(std::borrow::Cow::Owned(data))

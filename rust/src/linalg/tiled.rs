@@ -232,6 +232,7 @@ where
             let job_count = if pair { t_count.div_ceil(2) } else { t_count };
             let jobs: Vec<_> = (0..job_count)
                 .map(|lo| {
+                    // lint:allow(panic, reason = "each band index is taken exactly once per job build; a None here is a scheduler bug")
                     let (t_first, first) = bands[lo].take().expect("band consumed once");
                     let hi = t_count - 1 - lo;
                     let second = if pair && hi > lo { bands[hi].take() } else { None };
@@ -315,6 +316,7 @@ pub fn syrk_tiled(a: &Mat, tile: usize, pool: Option<&ThreadPool>) -> Mat {
             let job_count = if pair { t_count.div_ceil(2) } else { t_count };
             let jobs: Vec<_> = (0..job_count)
                 .map(|lo_idx| {
+                    // lint:allow(panic, reason = "each band index is taken exactly once per job build; a None here is a scheduler bug")
                     let (t_first, first) = bands[lo_idx].take().expect("band consumed once");
                     let hi_idx = t_count - 1 - lo_idx;
                     let second = if pair && hi_idx > lo_idx { bands[hi_idx].take() } else { None };

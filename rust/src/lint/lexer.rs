@@ -1,0 +1,477 @@
+//! A minimal hand-rolled Rust lexer for `fastcv-lint`.
+//!
+//! No external parser crates exist in the offline build, so the lint rules
+//! run over a flat token stream produced here. The lexer understands exactly
+//! as much Rust as the rules need: identifiers (including raw `r#ident`
+//! forms), integer vs float literals, all four string-literal families
+//! (cooked, raw, byte, raw-byte) plus char literals, lifetimes vs chars
+//! after a `'`, nested block comments, and multi-character operators. Every
+//! token carries its 1-based source line so diagnostics are clickable.
+//!
+//! Comments are *retained* as trivia (they never enter the token stream):
+//! rule L3 looks for adjacent `// SAFETY:` text, rule L5 for rustdoc, and
+//! the suppression machinery for `// lint:allow(...)` markers.
+
+/// Token classification — just enough structure for the rules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`for`, `unsafe`, `HashMap`, ...).
+    Ident,
+    /// Lifetime or loop label (`'a`, `'outer`).
+    Lifetime,
+    /// Integer literal (`42`, `0xff_u8`).
+    Int,
+    /// Float literal (`1.0`, `1e-3`, `2f64`).
+    Float,
+    /// Any string/char/byte literal — contents are never inspected.
+    Str,
+    /// Operator or delimiter, possibly multi-character (`+=`, `::`).
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// One comment (line or block) with its starting line; `doc` marks rustdoc
+/// forms (`///`, `//!`, `/**`, `/*!`).
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub line: u32,
+    pub text: String,
+    pub doc: bool,
+}
+
+fn ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+const PUNCT2: [&str; 14] = [
+    "+=", "-=", "*=", "/=", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "..",
+];
+
+/// Lex `src` into (tokens, comments). Never fails: unterminated constructs
+/// are consumed to end-of-file, which is the right behaviour for a linter
+/// that must keep scanning after malformed input.
+pub fn lex(src: &str) -> (Vec<Token>, Vec<Comment>) {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let at = |j: usize| -> char {
+        if j < n {
+            chars[j]
+        } else {
+            '\0'
+        }
+    };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (incl. /// //! doc forms).
+        if c == '/' && at(i + 1) == '/' {
+            let mut j = i;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[i..j].iter().collect();
+            let doc = text.starts_with("///") || text.starts_with("//!");
+            comments.push(Comment { line, text, doc });
+            i = j;
+            continue;
+        }
+        // Block comment, nesting allowed.
+        if c == '/' && at(i + 1) == '*' {
+            let start_line = line;
+            let doc = at(i + 2) == '*' || at(i + 2) == '!';
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut buf = String::from("/*");
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                }
+                if chars[j] == '/' && at(j + 1) == '*' {
+                    depth += 1;
+                    buf.push_str("/*");
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '*' && at(j + 1) == '/' {
+                    depth -= 1;
+                    buf.push_str("*/");
+                    j += 2;
+                    continue;
+                }
+                buf.push(chars[j]);
+                j += 1;
+            }
+            comments.push(Comment { line: start_line, text: buf, doc });
+            i = j;
+            continue;
+        }
+        // Raw strings r"..." / r#"..."#, or raw idents r#ident.
+        if c == 'r' && (at(i + 1) == '"' || at(i + 1) == '#') {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if at(j) == '"' {
+                j += 1;
+                while j < n {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    if chars[j] == '"' {
+                        let mut k = j + 1;
+                        let mut h = 0usize;
+                        while k < n && h < hashes && chars[k] == '#' {
+                            h += 1;
+                            k += 1;
+                        }
+                        if h == hashes {
+                            j = k;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                toks.push(Token { kind: TokKind::Str, text: String::new(), line });
+                i = j.max(i + 1);
+                continue;
+            } else if hashes == 1 && ident_start(at(j)) {
+                // raw identifier r#type
+                let start = j;
+                while j < n && ident_cont(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Ident,
+                    text: chars[start..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // else: plain identifier starting with 'r', handled below.
+        }
+        // Byte strings / byte chars: b"..." b'x' br"..." br#"..."#.
+        if c == 'b' && (at(i + 1) == '"' || at(i + 1) == '\'') {
+            if at(i + 1) == '"' {
+                let mut j = i + 2;
+                while j < n {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    if chars[j] == '\\' {
+                        if at(j + 1) == '\n' {
+                            line += 1;
+                        }
+                        j += 2;
+                        continue;
+                    }
+                    if chars[j] == '"' {
+                        j += 1;
+                        break;
+                    }
+                    j += 1;
+                }
+                toks.push(Token { kind: TokKind::Str, text: String::new(), line });
+                i = j;
+                continue;
+            }
+            let mut j = i + 2;
+            if at(j) == '\\' {
+                j += 1;
+            }
+            j += 1;
+            while j < n && chars[j] != '\'' {
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Str, text: String::new(), line });
+            i = j + 1;
+            continue;
+        }
+        if c == 'b' && at(i + 1) == 'r' && (at(i + 2) == '"' || at(i + 2) == '#') {
+            let mut j = i + 2;
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if at(j) == '"' {
+                j += 1;
+                while j < n {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    if chars[j] == '"' {
+                        let mut k = j + 1;
+                        let mut h = 0usize;
+                        while k < n && h < hashes && chars[k] == '#' {
+                            h += 1;
+                            k += 1;
+                        }
+                        if h == hashes {
+                            j = k;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                toks.push(Token { kind: TokKind::Str, text: String::new(), line });
+                i = j.max(i + 1);
+                continue;
+            }
+        }
+        // Identifier / keyword.
+        if ident_start(c) {
+            let start = i;
+            let mut j = i;
+            while j < n && ident_cont(chars[j]) {
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Ident,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // Numeric literal.
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            let mut kind = TokKind::Int;
+            if c == '0' && matches!(at(j + 1), 'x' | 'b' | 'o') {
+                j += 2;
+                while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                    j += 1;
+                }
+            } else {
+                while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                    j += 1;
+                }
+                if at(j) == '.' {
+                    let nxt = at(j + 1);
+                    if nxt.is_ascii_digit() {
+                        kind = TokKind::Float;
+                        j += 1;
+                        while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                            j += 1;
+                        }
+                    } else if nxt != '.' && !ident_start(nxt) {
+                        // `1.` — a float; `1..n` is a range, `1.max()` a call.
+                        kind = TokKind::Float;
+                        j += 1;
+                    }
+                }
+                if matches!(at(j), 'e' | 'E') {
+                    let mut k = j + 1;
+                    if matches!(at(k), '+' | '-') {
+                        k += 1;
+                    }
+                    if at(k).is_ascii_digit() {
+                        kind = TokKind::Float;
+                        j = k;
+                        while j < n && (chars[j].is_ascii_digit() || chars[j] == '_') {
+                            j += 1;
+                        }
+                    }
+                }
+                if ident_start(at(j)) {
+                    let sfx = j;
+                    while j < n && ident_cont(chars[j]) {
+                        j += 1;
+                    }
+                    let suffix: String = chars[sfx..j].iter().collect();
+                    if suffix == "f32" || suffix == "f64" {
+                        kind = TokKind::Float;
+                    }
+                }
+            }
+            toks.push(Token { kind, text: chars[start..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        // Cooked string.
+        if c == '"' {
+            let mut j = i + 1;
+            while j < n {
+                if chars[j] == '\n' {
+                    line += 1;
+                }
+                if chars[j] == '\\' {
+                    // An escaped newline (line continuation) must still
+                    // advance the line counter or every diagnostic after a
+                    // multi-line string would drift.
+                    if at(j + 1) == '\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Str, text: String::new(), line });
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if at(i + 1) == '\\' {
+                // Escaped char literal: skip the escape head, scan to the
+                // closing quote (covers \n, \\, \', \u{...}).
+                let mut j = i + 3;
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                toks.push(Token { kind: TokKind::Str, text: String::new(), line });
+                i = j + 1;
+                continue;
+            }
+            if ident_start(at(i + 1)) || at(i + 1).is_ascii_digit() {
+                if at(i + 2) == '\'' {
+                    toks.push(Token { kind: TokKind::Str, text: String::new(), line });
+                    i += 3;
+                    continue;
+                }
+                let start = i;
+                let mut j = i + 1;
+                while j < n && ident_cont(chars[j]) {
+                    j += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Lifetime,
+                    text: chars[start..j].iter().collect(),
+                    line,
+                });
+                i = j;
+                continue;
+            }
+            // Punctuation char literal like '(' or ' '.
+            let mut j = i + 1;
+            while j < n && chars[j] != '\'' {
+                j += 1;
+            }
+            toks.push(Token { kind: TokKind::Str, text: String::new(), line });
+            i = j + 1;
+            continue;
+        }
+        // Operators: greedy two-char match, then single char.
+        if i + 1 < n {
+            let two: String = chars[i..i + 2].iter().collect();
+            if PUNCT2.contains(&two.as_str()) {
+                toks.push(Token { kind: TokKind::Punct, text: two, line });
+                i += 2;
+                continue;
+            }
+        }
+        toks.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).0.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let ks = kinds("a += b.c::<f64>();");
+        assert_eq!(ks[0], (TokKind::Ident, "a".into()));
+        assert_eq!(ks[1], (TokKind::Punct, "+=".into()));
+        assert!(ks.iter().any(|k| k == &(TokKind::Punct, "::".into())));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        // `.unwrap()` inside a string must not produce ident tokens.
+        let (toks, _) = lex(r#"let s = "x.unwrap() += HashMap";"#);
+        assert!(!toks.iter().any(|t| t.text == "unwrap" || t.text == "HashMap"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn comments_are_trivia_with_doc_flag() {
+        let (toks, comments) = lex("/// doc\n// SAFETY: fine\nfn f() {}\n/* block */");
+        assert_eq!(comments.len(), 3);
+        assert!(comments[0].doc);
+        assert!(!comments[1].doc);
+        assert_eq!(comments[1].line, 2);
+        assert!(comments[1].text.contains("SAFETY:"));
+        assert!(toks.iter().any(|t| t.text == "fn"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let (toks, comments) = lex("/* a /* b */ c */ fn");
+        assert_eq!(comments.len(), 1);
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].text, "fn");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let ks = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let d = '\\n'; }");
+        assert_eq!(ks.iter().filter(|k| k.0 == TokKind::Lifetime).count(), 2);
+        // 'x' and '\n' are char literals; `str` stays an ident.
+        assert_eq!(ks.iter().filter(|k| k.0 == TokKind::Str).count(), 2);
+    }
+
+    #[test]
+    fn int_vs_float_literals() {
+        let ks = kinds("1 1.0 1e-3 2f64 0xff 1..4 3.max(4)");
+        let floats: Vec<_> = ks.iter().filter(|k| k.0 == TokKind::Float).collect();
+        let ints: Vec<_> = ks.iter().filter(|k| k.0 == TokKind::Int).collect();
+        assert_eq!(floats.len(), 3, "{floats:?}");
+        // 1, 0xff, 1, 4 (range ends), 3 (method receiver), 4 (argument).
+        assert_eq!(ints.len(), 6, "{ints:?}");
+    }
+
+    #[test]
+    fn escaped_newline_in_string_keeps_line_count() {
+        let (toks, _) = lex("let s = \"a\\\n   b\";\nlet t = 1;");
+        let t_tok = toks.iter().find(|t| t.text == "t");
+        assert_eq!(t_tok.map(|t| t.line), Some(3));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        let ks = kinds(r##"let s = r#"raw "quoted" body"#; let r#type = 1;"##);
+        assert!(ks.iter().any(|k| k == &(TokKind::Ident, "type".into())));
+        assert!(!ks.iter().any(|k| k.1 == "quoted"));
+    }
+}

@@ -1,0 +1,326 @@
+//! # `fastcv-lint` — repo-local determinism & safety static analysis
+//!
+//! Every speedup this repo ships (pooled GEMM, tiled Cholesky, out-of-core
+//! spill, the `Auto` backend flip) rests on one invariant: all backends
+//! reproduce the serial accumulation order **bitwise**, so the paper's
+//! analytic CV and its permutation nulls stay exact rather than
+//! approximately equal. The dynamic property suites (`backend_*`, `tiled_*`,
+//! `spill_*`) enforce that contract at run time; this module enforces its
+//! *preconditions* at the source level, before any test runs:
+//!
+//! - **L1 `float_accum`** — float accumulation (`+=`/`-=` in loops, iterator
+//!   `.sum`/`.fold`/`.product`) only inside the canonical-kernel allowlist.
+//! - **L2 `nondet`** — no `HashMap`/`HashSet`, wall-clock types, or
+//!   entropy-seeded RNGs on library paths; permutation engines construct
+//!   RNGs only via counter-seeded `Rng::stream(seed, idx)`.
+//! - **L3 `unsafe`** — every `unsafe` needs an adjacent `// SAFETY:` comment
+//!   and must live in an audited file.
+//! - **L4 `panic`** — no `unwrap`/`expect`/`panic!` on library paths outside
+//!   the documented allowlist (groundwork for a `fastcv serve` daemon).
+//! - **L5 `doc`** — every public `_ctx` entry point carries rustdoc.
+//!
+//! Violations are suppressed site-by-site with
+//! `// lint:allow(<rule>, reason = "...")`; suppressions are counted,
+//! reported, and themselves linted (unknown rule, missing reason, unused).
+//! The full rule set, allowlist policy, and known blind spots are written up
+//! in `docs/LINTS.md`.
+//!
+//! Entry points: the `lint` binary (`cargo run --release --bin lint`), the
+//! `fastcv lint` subcommand, and [`lint_workspace`] for the self-check test.
+
+pub mod lexer;
+pub mod rules;
+
+use rules::{FileInfo, FileLint};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Rule identifiers, named as they appear in `lint:allow(...)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// L1: float accumulation outside the kernel allowlist.
+    FloatAccum,
+    /// L2: nondeterminism sources (hash iteration, wall clock, entropy RNG).
+    Nondet,
+    /// L3: unsafe hygiene.
+    Unsafe,
+    /// L4: panic hygiene on library paths.
+    Panic,
+    /// L5: doc/contract drift on public `_ctx` entry points.
+    Doc,
+    /// Meta: malformed or unused `lint:allow` markers.
+    Suppression,
+}
+
+impl Rule {
+    /// The name used in `lint:allow(<name>, ...)` and diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::FloatAccum => "float_accum",
+            Rule::Nondet => "nondet",
+            Rule::Unsafe => "unsafe",
+            Rule::Panic => "panic",
+            Rule::Doc => "doc",
+            Rule::Suppression => "suppression",
+        }
+    }
+
+    /// Parse a `lint:allow` rule name (the meta `suppression` rule cannot
+    /// itself be suppressed).
+    pub fn parse(name: &str) -> Option<Rule> {
+        match name {
+            "float_accum" => Some(Rule::FloatAccum),
+            "nondet" => Some(Rule::Nondet),
+            "unsafe" => Some(Rule::Unsafe),
+            "panic" => Some(Rule::Panic),
+            "doc" => Some(Rule::Doc),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One finding at a file line.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub line: u32,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+// ---------------------------------------------------------------------------
+// Allowlists. Every entry carries its reason here, in one audited place;
+// docs/LINTS.md explains the policy for growing or shrinking these.
+// ---------------------------------------------------------------------------
+
+/// Numeric modules: where L1 (float accumulation) and the `Instant` ban
+/// apply. The coordinator/runtime/util layers orchestrate and report — they
+/// never produce numbers that feed results.
+const NUMERIC_DIRS: [&str; 6] = [
+    "rust/src/fastcv/",
+    "rust/src/linalg/",
+    "rust/src/stats/",
+    "rust/src/model/",
+    "rust/src/cv/",
+    "rust/src/data/",
+];
+
+/// L1 kernel allowlist: files whose float accumulation order *is* the
+/// repo-wide contract. Everything else routes through these.
+const KERNEL_FILES: [&str; 8] = [
+    "rust/src/linalg/gemm.rs",  // blocked GEMM microkernel: the canonical order
+    "rust/src/linalg/tiled.rs", // tiled Gram/syrk — bitwise = gemm order (tiled_* suite)
+    "rust/src/linalg/spill.rs", // out-of-core panels — bitwise = in-RAM (spill_* suite)
+    "rust/src/linalg/chol.rs",  // Cholesky recurrence: serial order pinned by factor_into
+    "rust/src/linalg/lu.rs",    // LU recurrence, same contract
+    "rust/src/linalg/eig.rs",   // symmetric eig sweeps (spectral backend contract)
+    "rust/src/linalg/mat.rs",   // Mat primitives (matvec_gemm_order et al.)
+    "rust/src/linalg/mod.rs",   // pooled wrappers (matmul_pool/syrk_t_pool)
+];
+
+/// L3: files whose `unsafe` blocks have been audited (see the SAFETY
+/// comments in situ and the ThreadSanitizer CI job).
+const UNSAFE_AUDITED_FILES: [&str; 1] = ["rust/src/util/threadpool.rs"];
+
+/// L4 file allowlist: panicking is these files' documented policy.
+const PANIC_ALLOWED_FILES: [&str; 2] = [
+    // Lock-poisoning propagation and scope panic re-raise are the pool's
+    // contract (audited with L3; jobs are individually catch_unwind-ed).
+    "rust/src/util/threadpool.rs",
+    // The property-test harness reports failures by panicking.
+    "rust/src/util/prop.rs",
+];
+
+/// L2: permutation engines — RNG construction restricted to `Rng::stream`.
+const PERM_ENGINE_FILES: [&str; 2] =
+    ["rust/src/fastcv/perm.rs", "rust/src/fastcv/perm_batch.rs"];
+
+/// Directory names never descended into when walking the workspace.
+const SKIP_DIRS: [&str; 3] = [
+    "vendor",        // offline API stubs: external code, not ours to lint
+    "target",
+    "lint_fixtures", // deliberately-violating corpus for the lint tests
+];
+
+/// How a file participates in linting, derived from its repo-relative path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileClass {
+    /// `rust/vendor/**` — skipped entirely.
+    Vendor,
+    /// Tests, benches, examples: only L3 (unsafe hygiene) applies.
+    Exempt,
+    /// `rust/src/**`: the full rule set.
+    Library,
+}
+
+/// Classify a repo-relative path (forward slashes).
+pub fn classify(rel: &str) -> FileClass {
+    if rel.starts_with("rust/vendor/") {
+        FileClass::Vendor
+    } else if rel.starts_with("rust/src/") {
+        FileClass::Library
+    } else {
+        FileClass::Exempt
+    }
+}
+
+/// Build the per-file rule facts for a repo-relative path.
+pub fn file_info(rel: &str) -> FileInfo<'_> {
+    let class = classify(rel);
+    FileInfo {
+        rel,
+        library: class == FileClass::Library,
+        numeric: NUMERIC_DIRS.iter().any(|d| rel.starts_with(d)),
+        kernel: KERNEL_FILES.contains(&rel),
+        unsafe_audited: UNSAFE_AUDITED_FILES.contains(&rel),
+        panic_allowed: PANIC_ALLOWED_FILES.contains(&rel),
+        perm_engine: PERM_ENGINE_FILES.contains(&rel),
+    }
+}
+
+/// Lint one file's source under its repo-relative path. Vendor paths return
+/// an empty report.
+pub fn lint_source(rel: &str, src: &str) -> FileLint {
+    if classify(rel) == FileClass::Vendor {
+        return FileLint::default();
+    }
+    let (toks, comments) = lexer::lex(src);
+    rules::lint_tokens(&file_info(rel), &toks, &comments)
+}
+
+/// One file's findings inside a workspace report.
+#[derive(Debug)]
+pub struct FileReport {
+    pub rel: String,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+/// Workspace-wide lint result.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub files: Vec<FileReport>,
+    pub files_scanned: usize,
+    pub suppressions_used: usize,
+}
+
+impl Report {
+    /// Total violation count.
+    pub fn violations(&self) -> usize {
+        self.files.iter().map(|f| f.diagnostics.len()).sum()
+    }
+
+    /// Render `file:line: [rule] message` diagnostics plus a summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.files {
+            for d in &f.diagnostics {
+                out.push_str(&format!("{}:{}: [{}] {}\n", f.rel, d.line, d.rule, d.msg));
+            }
+        }
+        out.push_str(&format!(
+            "fastcv-lint: {} violation(s), {} suppression(s) in use, {} file(s) scanned\n",
+            self.violations(),
+            self.suppressions_used,
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+/// The workspace sub-trees the linter walks (relative to the repo root).
+const WALK_ROOTS: [&str; 4] = ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Collect every lintable `.rs` file under `root` in a deterministic
+/// (sorted) order.
+pub fn workspace_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for top in WALK_ROOTS {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut out)?;
+        }
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<Result<_, _>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            let skip = path
+                .file_name()
+                .map(|n| SKIP_DIRS.iter().any(|s| n == std::ffi::OsStr::new(s)))
+                .unwrap_or(true);
+            if !skip {
+                collect_rs(&path, out)?;
+            }
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every workspace file under `root` (the repo root — the directory
+/// holding `rust/` and `examples/`).
+pub fn lint_workspace(root: &Path) -> std::io::Result<Report> {
+    let mut report = Report::default();
+    for path in workspace_files(root)? {
+        let rel_path = path.strip_prefix(root).unwrap_or(&path);
+        let rel = rel_path.to_string_lossy().replace('\\', "/");
+        let src = std::fs::read_to_string(&path)?;
+        let lint = lint_source(&rel, &src);
+        report.files_scanned += 1;
+        report.suppressions_used += lint.suppressions_used;
+        if !lint.diagnostics.is_empty() {
+            report.files.push(FileReport { rel, diagnostics: lint.diagnostics });
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_partitions_the_tree() {
+        assert_eq!(classify("rust/vendor/anyhow/src/lib.rs"), FileClass::Vendor);
+        assert_eq!(classify("rust/tests/integration.rs"), FileClass::Exempt);
+        assert_eq!(classify("rust/benches/fig4_eeg.rs"), FileClass::Exempt);
+        assert_eq!(classify("examples/quickstart.rs"), FileClass::Exempt);
+        assert_eq!(classify("rust/src/fastcv/hat.rs"), FileClass::Library);
+    }
+
+    #[test]
+    fn file_info_flags() {
+        let fi = file_info("rust/src/linalg/gemm.rs");
+        assert!(fi.kernel && fi.numeric && fi.library);
+        let fi = file_info("rust/src/fastcv/perm.rs");
+        assert!(fi.perm_engine && !fi.kernel);
+        let fi = file_info("rust/src/util/threadpool.rs");
+        assert!(fi.unsafe_audited && fi.panic_allowed && !fi.numeric);
+    }
+
+    #[test]
+    fn rule_names_round_trip() {
+        for r in [Rule::FloatAccum, Rule::Nondet, Rule::Unsafe, Rule::Panic, Rule::Doc] {
+            assert_eq!(Rule::parse(r.name()), Some(r));
+        }
+        assert_eq!(Rule::parse("suppression"), None);
+        assert_eq!(Rule::parse("bogus"), None);
+    }
+
+    #[test]
+    fn vendor_paths_lint_empty() {
+        let lint = lint_source("rust/vendor/anyhow/src/lib.rs", "fn f() { x.unwrap(); }");
+        assert!(lint.diagnostics.is_empty());
+    }
+}

@@ -1,0 +1,387 @@
+//! The five `fastcv-lint` rules (L1–L5) plus the suppression machinery,
+//! evaluated over one file's token stream. See `docs/LINTS.md` for the
+//! written rule set and the rationale mapping each rule to the repo's
+//! bitwise-determinism contract.
+
+use super::lexer::{Comment, TokKind, Token};
+use super::{Diagnostic, Rule};
+
+/// Per-file facts the rules condition on, derived from the relative path by
+/// [`super::file_info`] (class, numeric-module membership, allowlists).
+#[derive(Debug, Clone, Copy)]
+pub struct FileInfo<'a> {
+    pub rel: &'a str,
+    /// `rust/src/**` — full rule set applies.
+    pub library: bool,
+    /// Numeric module (fastcv/linalg/stats/model/cv/data): L1 + `Instant`.
+    pub numeric: bool,
+    /// L1 kernel allowlist: float accumulation is this file's contract.
+    pub kernel: bool,
+    /// L3 audited-unsafe allowlist.
+    pub unsafe_audited: bool,
+    /// L4 file allowlist (documented panic policy, e.g. the thread pool).
+    pub panic_allowed: bool,
+    /// Permutation engine: only `Rng::stream(seed, idx)` construction.
+    pub perm_engine: bool,
+}
+
+struct Suppression {
+    line: u32,
+    rule: Rule,
+    used: bool,
+}
+
+/// Result of linting one file.
+#[derive(Debug, Default)]
+pub struct FileLint {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Number of `lint:allow` suppressions that matched a violation.
+    pub suppressions_used: usize,
+}
+
+const INT_TYPES: [&str; 12] = [
+    "usize", "u8", "u16", "u32", "u64", "u128", "isize", "i8", "i16", "i32", "i64", "i128",
+];
+
+/// Run all rules over one file's lexed form.
+pub fn lint_tokens(info: &FileInfo<'_>, toks: &[Token], comments: &[Comment]) -> FileLint {
+    let mut out = FileLint::default();
+
+    // ---- test region: from the first `#[cfg(test)]` or `#[test]` to EOF.
+    // The repo convention keeps test modules at the bottom of each file;
+    // the linter leans on that (documented in docs/LINTS.md).
+    let mut test_from: Option<u32> = None;
+    for k in 0..toks.len() {
+        if tok_is(toks, k, TokKind::Punct, "#") && tok_is(toks, k + 1, TokKind::Punct, "[") {
+            if tok_is(toks, k + 2, TokKind::Ident, "cfg")
+                && tok_is(toks, k + 3, TokKind::Punct, "(")
+                && tok_is(toks, k + 4, TokKind::Ident, "test")
+            {
+                test_from = Some(toks[k].line);
+                break;
+            }
+            if tok_is(toks, k + 2, TokKind::Ident, "test") && tok_is(toks, k + 3, TokKind::Punct, "]")
+            {
+                test_from = Some(toks[k].line);
+                break;
+            }
+        }
+    }
+    let in_test = |line: u32| test_from.is_some_and(|t| line >= t);
+
+    // ---- parse `lint:allow(rule, reason = "...")` suppressions.
+    let mut sups: Vec<Suppression> = Vec::new();
+    for c in comments {
+        // A directive is a plain `//` line comment starting with lint:allow(;
+        // doc comments and prose mentions are not directives.
+        if c.doc || !c.text.trim_start_matches('/').trim_start().starts_with("lint:allow(") {
+            continue;
+        }
+        let Some(idx) = c.text.find("lint:allow(") else { continue };
+        let inner = &c.text[idx + "lint:allow(".len()..];
+        let body = match inner.find(')') {
+            Some(close) => &inner[..close],
+            None => inner,
+        };
+        let rule_name = body.split(',').next().unwrap_or("").trim();
+        let rest = &c.text[idx..];
+        let reason = rest.find("reason").and_then(|ridx| {
+            let q1 = rest[ridx..].find('"').map(|q| ridx + q)?;
+            let q2 = rest[q1 + 1..].find('"').map(|q| q1 + 1 + q)?;
+            Some(&rest[q1 + 1..q2])
+        });
+        let Some(rule) = Rule::parse(rule_name) else {
+            out.diagnostics.push(Diagnostic {
+                line: c.line,
+                rule: Rule::Suppression,
+                msg: format!("unknown rule `{rule_name}` in lint:allow"),
+            });
+            continue;
+        };
+        if !matches!(reason, Some(r) if !r.is_empty()) {
+            out.diagnostics.push(Diagnostic {
+                line: c.line,
+                rule: Rule::Suppression,
+                msg: format!("lint:allow({rule_name}) missing reason = \"...\""),
+            });
+            continue;
+        }
+        sups.push(Suppression { line: c.line, rule, used: false });
+    }
+
+    // A suppression covers its own line and the first token-bearing line
+    // after it (the annotate-above idiom).
+    let mut tok_lines: Vec<u32> = toks.iter().map(|t| t.line).collect();
+    tok_lines.dedup();
+    let next_tok_line = |after: u32| -> Option<u32> {
+        tok_lines.iter().copied().find(|&l| l > after)
+    };
+    let covered = |line: u32, rule: Rule, sups: &mut Vec<Suppression>| -> bool {
+        for s in sups.iter_mut() {
+            if s.rule != rule {
+                continue;
+            }
+            if s.line == line || next_tok_line(s.line) == Some(line) {
+                s.used = true;
+                return true;
+            }
+        }
+        false
+    };
+
+    // ---- token walk with just enough structure for the rules.
+    let mut brace_is_loop: Vec<bool> = Vec::new();
+    let mut loop_depth = 0usize;
+    let mut pending_loop = false;
+    let mut paren = 0usize;
+    let mut bracket = 0usize;
+    let m = toks.len();
+
+    for k in 0..m {
+        let t = &toks[k];
+        let line = t.line;
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" => paren += 1,
+                ")" => paren = paren.saturating_sub(1),
+                "[" => bracket += 1,
+                "]" => bracket = bracket.saturating_sub(1),
+                "{" => {
+                    let is_loop = pending_loop && paren == 0 && bracket == 0;
+                    if is_loop {
+                        pending_loop = false;
+                        loop_depth += 1;
+                    }
+                    brace_is_loop.push(is_loop);
+                }
+                "}" => {
+                    if brace_is_loop.pop() == Some(true) {
+                        loop_depth = loop_depth.saturating_sub(1);
+                    }
+                }
+                _ => {}
+            }
+        }
+        if t.kind == TokKind::Ident && matches!(t.text.as_str(), "for" | "while" | "loop") {
+            // `for<'a>` higher-ranked bounds are not loops.
+            if !(t.text == "for" && tok_is(toks, k + 1, TokKind::Punct, "<")) {
+                pending_loop = true;
+            }
+        }
+
+        // ---- L1: float accumulation outside the kernel allowlist.
+        if info.library && info.numeric && !info.kernel {
+            if t.kind == TokKind::Punct && (t.text == "+=" || t.text == "-=") && loop_depth > 0 {
+                let literal_rhs = toks
+                    .get(k + 1)
+                    .is_some_and(|n| n.kind == TokKind::Int || n.kind == TokKind::Float)
+                    && tok_is(toks, k + 2, TokKind::Punct, ";");
+                if !literal_rhs && !in_test(line) && !covered(line, Rule::FloatAccum, &mut sups) {
+                    out.diagnostics.push(Diagnostic {
+                        line,
+                        rule: Rule::FloatAccum,
+                        msg: format!(
+                            "compound accumulation `{}` in a loop outside the kernel allowlist \
+                             — route through linalg kernels or lint:allow with a reason",
+                            t.text
+                        ),
+                    });
+                }
+            }
+            if t.kind == TokKind::Ident
+                && matches!(t.text.as_str(), "sum" | "product" | "fold")
+                && prev_is(toks, k, TokKind::Punct, ".")
+                && (tok_is(toks, k + 1, TokKind::Punct, "(") || tok_is(toks, k + 1, TokKind::Punct, "::"))
+            {
+                // `.sum::<usize>()` and friends are integer-exact: exempt.
+                let int_turbofish = tok_is(toks, k + 1, TokKind::Punct, "::")
+                    && tok_is(toks, k + 2, TokKind::Punct, "<")
+                    && toks
+                        .get(k + 3)
+                        .is_some_and(|n| n.kind == TokKind::Ident && INT_TYPES.contains(&n.text.as_str()));
+                if !int_turbofish && !in_test(line) && !covered(line, Rule::FloatAccum, &mut sups) {
+                    out.diagnostics.push(Diagnostic {
+                        line,
+                        rule: Rule::FloatAccum,
+                        msg: format!(
+                            "iterator reduction `.{}` outside the kernel allowlist \
+                             — route through linalg kernels or lint:allow with a reason",
+                            t.text
+                        ),
+                    });
+                }
+            }
+        }
+
+        // ---- L2: nondeterminism sources.
+        if info.library && t.kind == TokKind::Ident {
+            let nondet_msg: Option<String> = match t.text.as_str() {
+                "HashMap" | "HashSet" => Some(format!(
+                    "`{}` iteration order is nondeterministic; use BTreeMap/BTreeSet/Vec",
+                    t.text
+                )),
+                "SystemTime" | "UNIX_EPOCH" => {
+                    Some(format!("wall-clock `{}` in library code", t.text))
+                }
+                "thread_rng" | "from_entropy" | "OsRng" | "getrandom" => Some(format!(
+                    "entropy-seeded RNG `{}` — all randomness must be explicitly seeded",
+                    t.text
+                )),
+                "Instant" if info.numeric => {
+                    Some("`Instant` in a numeric module — wall-clock must never feed results".into())
+                }
+                _ => None,
+            };
+            if let Some(msg) = nondet_msg {
+                if !in_test(line) && !covered(line, Rule::Nondet, &mut sups) {
+                    out.diagnostics.push(Diagnostic { line, rule: Rule::Nondet, msg });
+                }
+            }
+            if info.perm_engine {
+                if t.text == "Rng"
+                    && tok_is(toks, k + 1, TokKind::Punct, "::")
+                    && toks.get(k + 2).is_some_and(|n| {
+                        n.kind == TokKind::Ident && (n.text == "new" || n.text == "with_stream")
+                    })
+                {
+                    if !in_test(line) && !covered(line, Rule::Nondet, &mut sups) {
+                        out.diagnostics.push(Diagnostic {
+                            line,
+                            rule: Rule::Nondet,
+                            msg: format!(
+                                "`Rng::{}` in a permutation engine — only counter-seeded \
+                                 `Rng::stream(seed, idx)` keeps engines order-independent",
+                                toks[k + 2].text
+                            ),
+                        });
+                    }
+                }
+                if t.text == "fork" && prev_is(toks, k, TokKind::Punct, ".") {
+                    if !in_test(line) && !covered(line, Rule::Nondet, &mut sups) {
+                        out.diagnostics.push(Diagnostic {
+                            line,
+                            rule: Rule::Nondet,
+                            msg: "stateful `.fork()` in a permutation engine — use \
+                                  `Rng::stream(seed, idx)`"
+                                .into(),
+                        });
+                    }
+                }
+            }
+        }
+
+        // ---- L3: unsafe hygiene (applies in tests too).
+        if t.kind == TokKind::Ident && t.text == "unsafe" {
+            // A SAFETY argument may be long: locate the comment block that
+            // ends within 5 lines above the `unsafe`, then search the whole
+            // contiguous block for the marker.
+            let comment_lines: std::collections::BTreeSet<u32> =
+                comments.iter().map(|c| c.line).collect();
+            let nearest = comment_lines
+                .iter()
+                .copied()
+                .filter(|&cl| cl <= line && cl + 5 >= line)
+                .max();
+            let has_safety = nearest.is_some_and(|nearest| {
+                let mut start = nearest;
+                while start > 0 && comment_lines.contains(&(start - 1)) {
+                    start -= 1;
+                }
+                comments
+                    .iter()
+                    .any(|c| c.line >= start && c.line <= nearest && c.text.contains("SAFETY:"))
+            });
+            if !has_safety && !covered(line, Rule::Unsafe, &mut sups) {
+                out.diagnostics.push(Diagnostic {
+                    line,
+                    rule: Rule::Unsafe,
+                    msg: "unsafe block without an adjacent `// SAFETY:` comment".into(),
+                });
+            }
+            if !info.unsafe_audited && !covered(line, Rule::Unsafe, &mut sups) {
+                out.diagnostics.push(Diagnostic {
+                    line,
+                    rule: Rule::Unsafe,
+                    msg: format!("`unsafe` outside the audited-file allowlist ({})", info.rel),
+                });
+            }
+        }
+
+        // ---- L4: panic hygiene on library paths.
+        if info.library && !info.panic_allowed {
+            let panicky = if t.kind == TokKind::Ident
+                && (t.text == "unwrap" || t.text == "expect")
+                && prev_is(toks, k, TokKind::Punct, ".")
+                && tok_is(toks, k + 1, TokKind::Punct, "(")
+            {
+                Some(format!(
+                    "`.{}()` on a library path — propagate the error or lint:allow with a reason",
+                    t.text
+                ))
+            } else if t.kind == TokKind::Ident
+                && matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+                && tok_is(toks, k + 1, TokKind::Punct, "!")
+            {
+                Some(format!(
+                    "`{}!` on a library path — return Err or lint:allow with a reason",
+                    t.text
+                ))
+            } else {
+                None
+            };
+            if let Some(msg) = panicky {
+                if !in_test(line) && !covered(line, Rule::Panic, &mut sups) {
+                    out.diagnostics.push(Diagnostic { line, rule: Rule::Panic, msg });
+                }
+            }
+        }
+
+        // ---- L5: public `_ctx` entry points need rustdoc.
+        if info.library
+            && t.kind == TokKind::Ident
+            && t.text == "pub"
+            && tok_is(toks, k + 1, TokKind::Ident, "fn")
+            && toks
+                .get(k + 2)
+                .is_some_and(|n| n.kind == TokKind::Ident && n.text.ends_with("_ctx"))
+        {
+            let has_doc = comments
+                .iter()
+                .any(|c| c.doc && c.line + 3 >= line && c.line < line);
+            if !has_doc && !in_test(line) && !covered(line, Rule::Doc, &mut sups) {
+                out.diagnostics.push(Diagnostic {
+                    line,
+                    rule: Rule::Doc,
+                    msg: format!(
+                        "public `{}` entry point without rustdoc — the ComputeContext surface \
+                         is the documented API",
+                        toks[k + 2].text
+                    ),
+                });
+            }
+        }
+    }
+
+    // Unused suppressions are violations: an allow that no longer matches
+    // anything is stale documentation.
+    for s in &sups {
+        if !s.used && !in_test(s.line) {
+            out.diagnostics.push(Diagnostic {
+                line: s.line,
+                rule: Rule::Suppression,
+                msg: format!("unused lint:allow({})", s.rule.name()),
+            });
+        }
+    }
+    out.suppressions_used = sups.iter().filter(|s| s.used).count();
+    out.diagnostics.sort_by_key(|d| d.line);
+    out
+}
+
+fn tok_is(toks: &[Token], k: usize, kind: TokKind, text: &str) -> bool {
+    toks.get(k).is_some_and(|t| t.kind == kind && t.text == text)
+}
+
+fn prev_is(toks: &[Token], k: usize, kind: TokKind, text: &str) -> bool {
+    k > 0 && toks[k - 1].kind == kind && toks[k - 1].text == text
+}

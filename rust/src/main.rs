@@ -9,6 +9,7 @@
 //! fastcv eeg [--subjects 16] [--perms 100] [--full]   # Fig. 4
 //! fastcv quickstart                  # end-to-end smoke run
 //! fastcv artifacts                   # list AOT artifacts + PJRT platform
+//! fastcv lint                        # determinism & safety static analysis
 //! ```
 //!
 //! Every command prints paper-style tables and (with `--out DIR`) writes
@@ -42,6 +43,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("bigdata") => cmd_bigdata(args),
         Some("quickstart") => cmd_quickstart(args),
         Some("artifacts") => cmd_artifacts(args),
+        Some("lint") => cmd_lint(args),
         _ => {
             print_usage();
             Ok(())
@@ -74,8 +76,26 @@ fn print_usage() {
                  one ComputeContext ([--threads T] [--backend ...]\n\
                  [--tile-rows R | --mem-budget MB | --spill-dir PATH])\n\
            quickstart                    30-second end-to-end demo\n\
-           artifacts                     list AOT artifacts and PJRT platform"
+           artifacts                     list AOT artifacts and PJRT platform\n\
+           lint [--root DIR]             determinism & safety static analysis\n\
+                 (docs/LINTS.md; non-zero exit on any violation)"
     );
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    // Same engine and default root as the standalone `lint` binary: the
+    // repo this binary was compiled in, unless --root points elsewhere.
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => {
+            let manifest = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+            manifest.parent().map(std::path::PathBuf::from).unwrap_or(manifest)
+        }
+    };
+    let report = fastcv::lint::lint_workspace(&root)?;
+    print!("{}", report.render());
+    anyhow::ensure!(report.violations() == 0, "{} lint violation(s)", report.violations());
+    Ok(())
 }
 
 fn scale_from(args: &Args) -> SweepScale {
@@ -485,7 +505,7 @@ fn cmd_artifacts(_args: &Args) -> Result<()> {
             e.key.k_folds,
             e.key.batch,
             e.key.c,
-            e.file.file_name().unwrap().to_string_lossy()
+            e.file.file_name().unwrap_or(e.file.as_os_str()).to_string_lossy()
         );
     }
     Ok(())

@@ -67,6 +67,7 @@ pub fn nearest_centroid(z: &Mat, centroids: &Mat) -> Vec<usize> {
             let mut best_d = f64::INFINITY;
             for cidx in 0..centroids.rows() {
                 let c = centroids.row(cidx);
+                // lint:allow(float_accum, reason = "serial per-row squared distance in canonical feature order; prediction is single-threaded")
                 let d: f64 = row.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
                 if d < best_d {
                     best_d = d;

@@ -22,6 +22,7 @@ pub fn gram_ridged(xa: &Mat, lambda: f64) -> Mat {
     let mut g = syrk_t(xa);
     let p1 = xa.cols();
     for i in 0..p1 - 1 {
+        // lint:allow(float_accum, reason = "ridge diagonal add: each entry touched exactly once — order-free")
         g[(i, i)] += lambda;
     }
     g

@@ -39,6 +39,7 @@ impl Reg {
             Reg::Ridge(lambda) => {
                 assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
                 for i in 0..p {
+                    // lint:allow(float_accum, reason = "ridge diagonal add: each entry touched exactly once — order-free")
                     sw[(i, i)] += lambda;
                 }
                 1.0
@@ -48,6 +49,7 @@ impl Reg {
                 let nu = sw.trace() / p as f64;
                 sw.scale(1.0 - lambda);
                 for i in 0..p {
+                    // lint:allow(float_accum, reason = "shrinkage diagonal add: each entry touched exactly once — order-free")
                     sw[(i, i)] += lambda * nu;
                 }
                 1.0 - lambda

@@ -59,7 +59,9 @@ pub fn score_basis(m: &Mat, dp: &Mat, n: usize) -> Result<ScoreBasis> {
     // Alignment of each eigenvector with 1 (Dp metric): |θᵀ Dp 1|.
     // Vectors are Dp-orthonormal so this is a cosine against the (unit-norm)
     // constant score; the trivial one has |cos| ≈ 1.
+    // lint:allow(float_accum, reason = "serial cosine test against the constant score; canonical order, single-threaded")
     let dp1: Vec<f64> = (0..c).map(|i| (0..c).map(|j| dp[(i, j)]).sum()).collect();
+    // lint:allow(float_accum, reason = "serial cosine test against the constant score; canonical order, single-threaded")
     let norm1 = (0..c).map(|i| dp1[i]).sum::<f64>().sqrt(); // sqrt(1ᵀDp1)
     let mut trivial = 0usize;
     let mut best = -1.0;

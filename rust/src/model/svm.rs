@@ -79,8 +79,10 @@ impl LinearSvm {
                     let delta = (alpha[i] - old) * y[i];
                     if delta != 0.0 {
                         for (wj, &xj) in w[..p].iter_mut().zip(xi) {
+                            // lint:allow(float_accum, reason = "serial SGD weight update; the subgradient loop is inherently sequential")
                             *wj += delta * xj;
                         }
+                        // lint:allow(float_accum, reason = "serial SGD bias update; the subgradient loop is inherently sequential")
                         w[p] += delta;
                     }
                 }

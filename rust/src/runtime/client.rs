@@ -105,12 +105,12 @@ impl XlaRuntime {
             .find(key)
             .with_context(|| format!("no artifact for {key:?}"))?
             .clone();
+        // lint:allow(panic, reason = "mutex poisoning requires a panic while holding the cache lock; compile/insert below propagate errors instead of panicking")
         let mut cache = self.cache.lock().unwrap();
-        if !cache.contains_key(key) {
-            let exe = self.compile_entry(&entry)?;
-            cache.insert(key.clone(), exe);
-        }
-        let exe = cache.get(key).unwrap();
+        let exe = match cache.entry(key.clone()) {
+            std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::btree_map::Entry::Vacant(v) => v.insert(self.compile_entry(&entry)?),
+        };
         let literals: Vec<xla::Literal> =
             inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
         let result = exe

@@ -25,6 +25,7 @@ impl Factor {
         let mut uniq: Vec<usize> = raw.to_vec();
         uniq.sort_unstable();
         uniq.dedup();
+        // lint:allow(panic, reason = "every level value was collected into uniq above, so binary_search always finds it")
         let levels = raw.iter().map(|r| uniq.binary_search(r).unwrap()).collect();
         Factor { name: name.into(), levels, n_levels: uniq.len() }
     }
@@ -34,7 +35,7 @@ impl Factor {
     /// analogue for the F-statistics.
     pub fn from_continuous<S: Into<String>>(name: S, values: &[f64], bins: usize) -> Factor {
         let mut sorted = values.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let edges: Vec<f64> = (1..bins)
             .map(|b| sorted[(b * values.len() / bins).min(values.len() - 1)])
             .collect();
@@ -112,8 +113,10 @@ fn rss(cols: &[Vec<f64>], y: &[f64]) -> f64 {
     for i in 0..k {
         a[(i, i)] += 1e-10;
     }
+    // lint:allow(panic, reason = "design gram carries a 1e-10 diagonal jitter, so the LU factor cannot be singular")
     let beta = Lu::factor(&a).expect("design matrix").solve_vec(&xty);
     let fitted = matvec(&x, &beta);
+    // lint:allow(float_accum, reason = "serial residual sum of squares in canonical order; single-threaded")
     y.iter().zip(&fitted).map(|(yi, fi)| (yi - fi) * (yi - fi)).sum()
 }
 
@@ -150,6 +153,7 @@ pub fn anova(y: &[f64], factors: &[Factor]) -> AnovaTable {
         prev_rss = new_rss;
     }
 
+    // lint:allow(float_accum, reason = "integer degrees-of-freedom sum — exact arithmetic")
     let model_df: usize = rows.iter().map(|r| r.1).sum();
     let residual_df = n.saturating_sub(model_df + 1);
     let residual_ss = prev_rss;
@@ -261,6 +265,7 @@ pub fn ln_gamma(x: f64) -> f64 {
     let mut ser = 1.000000000190015;
     for g in &G[..6] {
         y += 1.0;
+        // lint:allow(float_accum, reason = "Lanczos series for ln Γ: fixed six-term serial sum in canonical order")
         ser += g / y;
     }
     -tmp + (G[6] * ser / x).ln()

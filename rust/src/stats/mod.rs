@@ -20,6 +20,7 @@ pub fn class_means(x: &Mat, labels: &[usize], c: usize) -> Mat {
         let row = x.row(i);
         let m = means.row_mut(l);
         for j in 0..p {
+            // lint:allow(float_accum, reason = "serial class-mean accumulation in canonical sample order; single-threaded")
             m[j] += row[j];
         }
     }

@@ -35,6 +35,7 @@ impl Mvn {
             let mut s = self.mean[i];
             let row = self.chol_l.row(i);
             for k in 0..=i {
+                // lint:allow(float_accum, reason = "serial lower-triangular matvec inside the sampler; canonical order, single-threaded")
                 s += row[k] * z[k];
             }
             out[i] = s;

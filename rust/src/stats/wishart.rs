@@ -31,10 +31,12 @@ pub fn sample_wishart(scale: &Mat, dof: usize, rng: &mut Rng) -> Result<Mat> {
 /// small diagonal `jitter` to bound the condition number so both the
 /// standard and analytic paths stay numerically comparable.
 pub fn random_covariance(p: usize, dof_extra: usize, jitter: f64, rng: &mut Rng) -> Mat {
+    // lint:allow(panic, reason = "the identity scale matrix is SPD, so the Wishart sampler cannot fail")
     let mut w = sample_wishart(&Mat::eye(p), p + dof_extra, rng).expect("identity scale is SPD");
     let scale = p as f64 / w.trace();
     w.scale(scale);
     for i in 0..p {
+        // lint:allow(float_accum, reason = "diagonal jitter add: each entry touched exactly once — order-free")
         w[(i, i)] += jitter;
     }
     w

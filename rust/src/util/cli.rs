@@ -25,8 +25,8 @@ impl Args {
                     out.opts.insert(k.to_string(), v.to_string());
                 } else if known_flags.contains(&body) {
                     out.flags.push(body.to_string());
-                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    out.opts.insert(body.to_string(), iter.next().unwrap());
+                } else if let Some(value) = iter.next_if(|n| !n.starts_with("--")) {
+                    out.opts.insert(body.to_string(), value);
                 } else {
                     out.flags.push(body.to_string());
                 }

@@ -221,7 +221,9 @@ impl<'a> Parser<'a> {
                 Some(_) => {
                     // copy a full UTF-8 scalar
                     let rest = std::str::from_utf8(&self.src[self.pos..]).map_err(|e| e.to_string())?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        return Err("unterminated string".to_string());
+                    };
                     s.push(c);
                     self.pos += c.len_utf8();
                 }

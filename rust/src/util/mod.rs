@@ -35,7 +35,7 @@ pub fn log_grid_usize(lo: usize, hi: usize, steps: usize) -> Vec<usize> {
 pub fn median(xs: &[f64]) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]

@@ -122,8 +122,19 @@ impl ThreadPool {
         for job in jobs {
             let state = Arc::clone(&state);
             let shared = Arc::clone(&self.shared);
-            // SAFETY: we block below until the counter reaches zero, so no
-            // scoped closure outlives 'env.
+            // SAFETY: this transmute only erases the `'env` lifetime of the
+            // boxed closure (`Box<dyn FnOnce + Send + 'env>` →
+            // `Box<dyn FnOnce + Send + 'static>`); layout is identical, so
+            // the only obligation is that the closure never runs after
+            // `'env` ends. That holds because this function does not return
+            // before every job has dropped its `Guard`: the wait loop below
+            // blocks on `state.done` until `left == 0`, and `Guard::drop`
+            // decrements `left` even when the job panics (the panic is
+            // counted first, then caught by `catch_unwind`, so a panicking
+            // job still releases the scope rather than poisoning it). A
+            // worker can therefore never hold a `'env` borrow once the
+            // caller resumes. Audited 2026-08; exercised under
+            // ThreadSanitizer by the nightly `tsan` CI job.
             let job: Box<dyn FnOnce() + Send + 'env> = Box::new(job);
             let job: Job = unsafe { std::mem::transmute(job) };
             self.execute(move || {

@@ -1,0 +1,174 @@
+//! Fixture-driven tests for the `fastcv-lint` engine (rules L1–L5 plus the
+//! suppression machinery), and the self-check that the shipped tree is
+//! lint-clean. Fixtures live in `tests/lint_fixtures/` — a directory the
+//! workspace walk deliberately skips — and are linted under *virtual*
+//! repo-relative paths so one snippet can be checked against several file
+//! classes (numeric module, kernel allowlist, exempt bench, ...).
+
+use fastcv::lint::{lint_source, lint_workspace, Rule};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures").join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Lines carrying a diagnostic of `rule`, in file order.
+fn lines_of(src: &str, rel: &str, rule: Rule) -> Vec<u32> {
+    lint_source(rel, src)
+        .diagnostics
+        .iter()
+        .filter(|d| d.rule == rule)
+        .map(|d| d.line)
+        .collect()
+}
+
+// ---------------------------------------------------------------- L1
+
+#[test]
+fn l1_flags_float_accumulation_in_numeric_modules() {
+    let src = fixture("bad_l1.rs");
+    // `acc += x * 2.0` in a loop, and an untyped `.sum()` reduction.
+    assert_eq!(lines_of(&src, "rust/src/fastcv/bad_l1.rs", Rule::FloatAccum), vec![4, 6]);
+}
+
+#[test]
+fn l1_accepts_literal_steps_and_integer_turbofish() {
+    let src = fixture("good_l1.rs");
+    let lint = lint_source("rust/src/fastcv/good_l1.rs", &src);
+    assert!(lint.diagnostics.is_empty(), "{:?}", lint.diagnostics);
+}
+
+#[test]
+fn l1_is_silent_inside_the_kernel_allowlist() {
+    let src = fixture("bad_l1.rs");
+    assert!(lines_of(&src, "rust/src/linalg/gemm.rs", Rule::FloatAccum).is_empty());
+}
+
+#[test]
+fn l1_is_silent_in_exempt_files() {
+    let src = fixture("bad_l1.rs");
+    assert!(lines_of(&src, "rust/benches/bad_l1.rs", Rule::FloatAccum).is_empty());
+}
+
+// ---------------------------------------------------------------- L2
+
+#[test]
+fn l2_flags_hash_iteration_wall_clock_and_entropy_rngs() {
+    let src = fixture("bad_l2.rs");
+    // HashMap, SystemTime, thread_rng — one per line.
+    assert_eq!(lines_of(&src, "rust/src/fastcv/bad_l2.rs", Rule::Nondet), vec![1, 2, 3]);
+}
+
+#[test]
+fn l2_restricts_perm_engine_rng_construction() {
+    let src = fixture("bad_l2_perm.rs");
+    // `Rng::new` and `.fork()` under a permutation-engine path.
+    assert_eq!(lines_of(&src, "rust/src/fastcv/perm_batch.rs", Rule::Nondet), vec![2, 3]);
+}
+
+#[test]
+fn l2_accepts_counter_seeded_streams_in_perm_engines() {
+    let src = fixture("good_l2_perm.rs");
+    let lint = lint_source("rust/src/fastcv/perm_batch.rs", &src);
+    assert!(lint.diagnostics.is_empty(), "{:?}", lint.diagnostics);
+}
+
+// ---------------------------------------------------------------- L3
+
+#[test]
+fn l3_flags_unsafe_without_safety_comment_or_audit() {
+    let src = fixture("bad_l3.rs");
+    // Two findings at the same line: missing SAFETY + unaudited file.
+    assert_eq!(lines_of(&src, "rust/src/util/helpers.rs", Rule::Unsafe), vec![2, 2]);
+}
+
+#[test]
+fn l3_applies_even_in_exempt_test_files() {
+    let src = fixture("bad_l3.rs");
+    assert_eq!(lines_of(&src, "rust/tests/some_test.rs", Rule::Unsafe), vec![2, 2]);
+}
+
+#[test]
+fn l3_accepts_safety_comment_in_audited_file() {
+    let src = fixture("good_l3.rs");
+    let lint = lint_source("rust/src/util/threadpool.rs", &src);
+    assert!(lint.diagnostics.is_empty(), "{:?}", lint.diagnostics);
+}
+
+// ---------------------------------------------------------------- L4
+
+#[test]
+fn l4_flags_unwrap_and_panic_on_library_paths() {
+    let src = fixture("bad_l4.rs");
+    assert_eq!(lines_of(&src, "rust/src/cv/bad_l4.rs", Rule::Panic), vec![2, 4]);
+}
+
+#[test]
+fn l4_exempts_the_test_region() {
+    let src = fixture("good_l4.rs");
+    let lint = lint_source("rust/src/cv/good_l4.rs", &src);
+    assert!(lint.diagnostics.is_empty(), "{:?}", lint.diagnostics);
+}
+
+#[test]
+fn l4_is_silent_in_panic_allowed_files() {
+    let src = fixture("bad_l4.rs");
+    assert!(lines_of(&src, "rust/src/util/prop.rs", Rule::Panic).is_empty());
+}
+
+// ---------------------------------------------------------------- L5
+
+#[test]
+fn l5_flags_undocumented_public_ctx_entry_points() {
+    let src = fixture("bad_l5.rs");
+    assert_eq!(lines_of(&src, "rust/src/fastcv/bad_l5.rs", Rule::Doc), vec![1]);
+}
+
+#[test]
+fn l5_accepts_rustdoc_directly_above() {
+    let src = fixture("good_l5.rs");
+    let lint = lint_source("rust/src/fastcv/good_l5.rs", &src);
+    assert!(lint.diagnostics.is_empty(), "{:?}", lint.diagnostics);
+}
+
+// ---------------------------------------------------------------- suppressions
+
+#[test]
+fn suppressions_are_themselves_linted() {
+    let src = fixture("bad_suppression.rs");
+    // Unknown rule, missing reason, and an unused (stale) allow.
+    assert_eq!(
+        lines_of(&src, "rust/src/fastcv/bad_sup.rs", Rule::Suppression),
+        vec![1, 4, 7]
+    );
+}
+
+#[test]
+fn a_matching_suppression_silences_and_is_counted() {
+    let src = fixture("good_suppression.rs");
+    let lint = lint_source("rust/src/model/good_sup.rs", &src);
+    assert!(lint.diagnostics.is_empty(), "{:?}", lint.diagnostics);
+    assert_eq!(lint.suppressions_used, 1);
+}
+
+// ---------------------------------------------------------------- self-check
+
+/// The shipped tree must be lint-clean: this is the same walk `verify.sh`
+/// and CI run via the `lint` binary, executed in-process.
+#[test]
+fn shipped_tree_is_lint_clean() {
+    // CARGO_MANIFEST_DIR is rust/; the workspace root is its parent.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+    let report = lint_workspace(&root).expect("walking the workspace");
+    assert_eq!(report.violations(), 0, "lint violations:\n{}", report.render());
+    assert!(
+        report.suppressions_used > 0,
+        "the tree carries lint:allow annotations; none matching means the rules drifted"
+    );
+    assert!(
+        report.files_scanned >= 40,
+        "only {} files scanned — walk roots look wrong",
+        report.files_scanned
+    );
+}

@@ -1,0 +1,8 @@
+pub fn accumulate(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in xs {
+        acc += x * 2.0;
+    }
+    let extra: f64 = xs.iter().sum();
+    acc + extra
+}

@@ -1,0 +1,5 @@
+pub fn bad(map: std::collections::HashMap<u32, u32>) -> u64 {
+    let _now = std::time::SystemTime::now();
+    let _r = thread_rng();
+    map.len() as u64
+}

@@ -1,0 +1,4 @@
+pub fn shuffle(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let _child = rng.fork();
+}

@@ -1,0 +1,7 @@
+pub fn pick(v: &[f64]) -> f64 {
+    let first = v.first().unwrap();
+    if *first < 0.0 {
+        panic!("negative");
+    }
+    *first
+}

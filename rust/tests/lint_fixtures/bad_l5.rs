@@ -1,0 +1,3 @@
+pub fn solve_ctx(n: usize) -> usize {
+    n
+}

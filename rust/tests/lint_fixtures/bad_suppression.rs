@@ -1,0 +1,8 @@
+// lint:allow(bogus, reason = "no such rule")
+pub fn a() {}
+
+// lint:allow(panic)
+pub fn b() {}
+
+// lint:allow(panic, reason = "stale: nothing here panics")
+pub fn c() {}

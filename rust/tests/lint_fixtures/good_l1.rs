@@ -1,0 +1,9 @@
+pub fn count_and_step(xs: &[f64]) -> usize {
+    let n = xs.iter().map(|_| 1usize).sum::<usize>();
+    let mut steps = 0.0;
+    for _ in 0..n {
+        steps += 1.0;
+    }
+    let _ = steps;
+    n
+}

@@ -1,0 +1,4 @@
+pub fn shuffle(seed: u64, idx: u64) -> u64 {
+    let mut rng = Rng::stream(seed, idx);
+    rng.next_u64()
+}

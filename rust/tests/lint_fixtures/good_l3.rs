@@ -1,0 +1,4 @@
+pub fn peek(v: &[u8]) -> u8 {
+    // SAFETY: caller guarantees v is non-empty.
+    unsafe { *v.get_unchecked(0) }
+}

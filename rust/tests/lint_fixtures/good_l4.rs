@@ -1,0 +1,12 @@
+pub fn pick(v: &[f64]) -> Option<f64> {
+    v.first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn picks() {
+        assert_eq!(super::pick(&[1.0]), Some(1.0));
+        super::pick(&[]).map(|_| ()).ok_or("empty").unwrap_err();
+    }
+}

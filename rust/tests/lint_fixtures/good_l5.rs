@@ -1,0 +1,4 @@
+/// Solve with a shared compute context.
+pub fn solve_ctx(n: usize) -> usize {
+    n
+}

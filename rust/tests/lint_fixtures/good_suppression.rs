@@ -1,0 +1,8 @@
+pub fn mix(xs: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in xs {
+        // lint:allow(float_accum, reason = "fixture: serial accumulation in one canonical order")
+        acc += x;
+    }
+    acc
+}
