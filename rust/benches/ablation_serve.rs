@@ -1,0 +1,95 @@
+//! Serve-daemon ablation: what the shared [`FactorStore`] and permutation
+//! request coalescing buy a long-lived `fastcv serve` process.
+//!
+//! 1. **cold** — first perm request on a fresh server: pays the dataset's
+//!    factor build (store miss).
+//! 2. **warm** — same dataset key again: hat build served from the store.
+//! 3. **coalesced pair** — two queued requests on one key merged into a
+//!    single jobs-engine pass (one hat build, one fold prep, one GEMM
+//!    stream spanning both requests' permutation columns).
+//! 4. **serial pair** — the same two requests issued back-to-back (the
+//!    store still shares the Gram, but fold prep + observed pass run
+//!    twice).
+//!
+//! All four answer bit-identically (the serve coalescing property tests);
+//! this ablation measures wall-clock only. Results go to
+//! `BENCH_serve.json` (`$FASTCV_BENCH_OUT` or the working directory);
+//! `FASTCV_BENCH_SCALE=tiny` shrinks the workload for CI.
+//!
+//! Run: `cargo bench --bench ablation_serve`
+
+use fastcv::serve::{stats_tag, ServeConfig, Server};
+use fastcv::util::json::Json;
+use fastcv::util::table::{fdur, Table};
+use fastcv::util::timed;
+use std::collections::BTreeMap;
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    let (n, p, k, n_perm) = if tiny { (40, 60, 5, 10) } else { (200, 1000, 10, 200) };
+    let req = |id: usize, seed: u64| {
+        format!(
+            r#"{{"id":{id},"op":"perm","data":{{"synthetic":{{"n":{n},"p":{p},"seed":3}}}},"folds":{{"k":{k}}},"lambda":1.0,"n_perm":{n_perm},"seed":{seed}}}"#
+        )
+    };
+
+    // Cold vs warm on one long-lived server.
+    let server = Server::new(ServeConfig::default());
+    let (cold_resp, t_cold) = timed(|| server.process_batch(&[req(1, 100)]));
+    let (warm_resp, t_warm) = timed(|| server.process_batch(&[req(2, 100)]));
+    assert!(cold_resp[0].contains("\"ok\":true"), "{}", cold_resp[0]);
+    assert!(warm_resp[0].contains("\"ok\":true"), "{}", warm_resp[0]);
+    let stats = server.store().stats();
+    assert!(stats.hits >= 1, "warm request must hit the store: {stats:?}");
+
+    // Coalesced pair vs the same pair served back-to-back.
+    let merged = Server::new(ServeConfig::default());
+    let pair = [req(3, 102), req(4, 103)];
+    let (_, t_coalesced) = timed(|| merged.process_batch(&pair));
+    assert_eq!(merged.coalesced(), 1, "the pair must merge into one pass");
+    let serial = Server::new(ServeConfig::default());
+    let (_, t_serial) = timed(|| {
+        serial.process_batch(&pair[..1]);
+        serial.process_batch(&pair[1..]);
+    });
+
+    let mut table = Table::new(vec!["request shape", "time", "vs cold"]).with_title(format!(
+        "Ablation: fastcv serve store + coalescing (N={n} P={p} K={k}, {n_perm} perms/request)"
+    ));
+    let mut rows = Vec::new();
+    for (name, t) in [
+        ("cold (store miss)", t_cold),
+        ("warm (store hit)", t_warm),
+        ("pair, coalesced (1 pass)", t_coalesced),
+        ("pair, serial (2 passes)", t_serial),
+    ] {
+        table.row(vec![name.to_string(), fdur(t), format!("{:.2}x", t / t_cold.max(1e-9))]);
+        let mut row = BTreeMap::new();
+        row.insert("shape".to_string(), Json::Str(name.to_string()));
+        row.insert("seconds".to_string(), Json::Num(t));
+        rows.push(Json::Obj(row));
+    }
+    println!("{}", table.render());
+    println!("store after cold+warm: {}", stats_tag(&stats));
+
+    let mut config = BTreeMap::new();
+    for (key, value) in [("n", n), ("p", p), ("k", k), ("n_perm", n_perm)] {
+        config.insert(key.to_string(), Json::Num(value as f64));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("serve_store".to_string()));
+    doc.insert("config".to_string(), Json::Obj(config));
+    doc.insert("requests".to_string(), Json::Arr(rows));
+    doc.insert("cache".to_string(), Json::Str(stats_tag(&stats)));
+    doc.insert("warm_speedup".to_string(), Json::Num(t_cold / t_warm.max(1e-9)));
+    doc.insert(
+        "coalesce_speedup".to_string(),
+        Json::Num(t_serial / t_coalesced.max(1e-9)),
+    );
+    let out_dir = std::env::var("FASTCV_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = format!("{out_dir}/BENCH_serve.json");
+    match std::fs::write(&path, Json::Obj(doc).dump()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

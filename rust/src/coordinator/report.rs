@@ -50,17 +50,22 @@ impl SweepReport {
         t.render()
     }
 
-    /// TSV dump of raw per-rep rows.
+    /// TSV dump of raw per-rep rows. `t_point` is the whole-point wall
+    /// clock when the sweep ran through [`super::Scheduler::run_clocked`]
+    /// (0 on the historical path); `cache` is the point's
+    /// [`crate::store::FactorStore`] counter delta (`-` without a store).
     pub fn to_tsv(&self) -> String {
         let mut out = String::from(
-            "exp\tengine\tbackend\tthreads\ttile\tn\tp\tk\tc\tn_perm\trep\tt_std\tt_ana\trel_eff\tacc_std\tacc_ana\n",
+            "exp\tengine\tbackend\tthreads\ttile\tn\tp\tk\tc\tn_perm\trep\tt_std\tt_ana\tt_point\trel_eff\tacc_std\tacc_ana\tcache\n",
         );
         for r in &self.results {
             let tile = if r.tile.is_empty() { "off" } else { r.tile.as_str() };
+            let cache = if r.cache.is_empty() { "-" } else { r.cache.as_str() };
             out.push_str(&format!(
-                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.6e}\t{:.4}\t{:.4}\t{:.4}\n",
+                "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.6e}\t{:.6e}\t{:.6e}\t{:.4}\t{:.4}\t{:.4}\t{}\n",
                 r.exp_tag, r.engine, r.backend, r.threads.max(1), tile, r.n, r.p, r.k, r.c,
-                r.n_perm, r.rep, r.t_std, r.t_ana, r.rel_eff(), r.acc_std, r.acc_ana
+                r.n_perm, r.rep, r.t_std, r.t_ana, r.t_point, r.rel_eff(), r.acc_std,
+                r.acc_ana, cache
             ));
         }
         out
@@ -162,6 +167,8 @@ mod tests {
             t_ana: 1.0,
             acc_std: 0.9,
             acc_ana: 0.9,
+            t_point: 0.0,
+            cache: String::new(),
         }
     }
 
@@ -179,7 +186,11 @@ mod tests {
         assert!((first.1 - 1.5).abs() < 1e-12);
         assert_eq!(first.4, 2);
         assert!(rep.render("t").contains("rel.eff"));
-        assert_eq!(rep.to_tsv().lines().count(), 4);
+        let tsv = rep.to_tsv();
+        assert_eq!(tsv.lines().count(), 4);
+        let header = tsv.lines().next().unwrap();
+        assert!(header.contains("\tt_point\t") && header.ends_with("\tcache"));
+        assert!(tsv.lines().nth(1).unwrap().ends_with("\t-"), "empty cache renders as -");
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! index), so results are identical regardless of worker count or
 //! completion order. Progress is reported through a shared atomic counter.
 
-use super::sweep::{run_point, SweepPoint, SweepResult};
+use super::sweep::{run_point_store, SweepPoint, SweepResult};
+use crate::store::FactorStore;
 use crate::util::threadpool::ThreadPool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -42,20 +43,76 @@ impl Scheduler {
 
     /// Run all points; results come back in input order. Failed points are
     /// reported and skipped (they do not abort the sweep).
+    ///
+    /// Historical entry point: per-index job seeds, no clock, no store —
+    /// results are bitwise-identical to every prior release (`t_point`
+    /// stays 0.0 and `cache` empty). Callers that want real per-point wall
+    /// time or cross-point factor sharing use [`Scheduler::run_clocked`].
     pub fn run(&self, points: &[SweepPoint]) -> Vec<SweepResult> {
+        self.run_clocked(points, &|| 0.0, None)
+    }
+
+    /// [`Scheduler::run`] with a caller-injected monotonic clock and an
+    /// optional shared [`FactorStore`].
+    ///
+    /// The clock is *passed in* rather than read here so numeric modules
+    /// keep their `Instant` ban (lint L2): the CLI hands in
+    /// [`crate::util::monotonic_clock`], tests can hand in `|| 0.0` or a
+    /// counter. Each point's `t_point` is the clock delta around its whole
+    /// run; with a store, `cache` records the point's counter delta
+    /// ([`crate::store::StoreStats::since`]) — exact at one worker,
+    /// approximate when concurrent workers interleave on the store.
+    ///
+    /// **Store mode changes seeding.** Without a store every point gets
+    /// `job_seed(base, index)` (the historical contract). With one, a
+    /// point instead gets the seed of the *first* point in `points` with
+    /// the same `(n, p, c, rep)` — equal-spec points (e.g. the same
+    /// dataset swept over fold counts) then generate identical data, so
+    /// their Gram fingerprints collide and the store actually shares
+    /// factors across points. That remap moves accuracies relative to
+    /// `run`, which is why sharing is opt-in (`fastcv sweep --cache`, the
+    /// serve daemon) and never the default path.
+    pub fn run_clocked(
+        &self,
+        points: &[SweepPoint],
+        clock: &(dyn Fn() -> f64 + Sync),
+        store: Option<&FactorStore>,
+    ) -> Vec<SweepResult> {
         let total = points.len();
         let done = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<SweepResult>>> =
             (0..total).map(|_| Mutex::new(None)).collect();
+        // Store mode: canonical seed index = first equal-spec point, so
+        // shared datasets become shared store keys (see the doc above).
+        let canon: Vec<usize> = match store {
+            None => (0..total).collect(),
+            Some(_) => points
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    points[..i]
+                        .iter()
+                        .position(|q| (q.n, q.p, q.c, q.rep) == (p.n, p.p, p.c, p.rep))
+                        .unwrap_or(i)
+                })
+                .collect(),
+        };
         let slots_ref = &slots;
         let done_ref = &done;
+        let canon_ref = &canon;
         let base_seed = self.base_seed;
         let verbose = self.verbose;
         self.pool.for_each(total, move |i| {
             let point = &points[i];
-            let seed = job_seed(base_seed, i);
-            match run_point(point, seed) {
-                Ok(res) => {
+            let seed = job_seed(base_seed, canon_ref[i]);
+            let before = store.map(FactorStore::stats);
+            let t0 = clock();
+            match run_point_store(point, seed, store) {
+                Ok(mut res) => {
+                    res.t_point = clock() - t0;
+                    if let (Some(s), Some(b)) = (store, &before) {
+                        res.cache = s.stats().since(b).tag();
+                    }
                     // lint:allow(panic, reason = "mutex poisoning is unreachable: the closure stores a value and cannot panic while holding the lock")
                     *slots_ref[i].lock().unwrap() = Some(res);
                 }
@@ -90,6 +147,58 @@ mod tests {
             assert_eq!(p.label(), r.label, "order preserved");
             assert!(r.t_std > 0.0 && r.t_ana > 0.0);
         }
+    }
+
+    #[test]
+    fn run_clocked_without_store_matches_run_and_times_points() {
+        let scale = SweepScale::tiny();
+        let mut points = grid(Experiment::BinaryCv, &scale);
+        points.truncate(4);
+        let sched = Scheduler::new(2, 41, false);
+        let plain = sched.run(&points);
+        let ticks = std::sync::atomic::AtomicUsize::new(0);
+        let clock = || ticks.fetch_add(1, std::sync::atomic::Ordering::SeqCst) as f64;
+        let clocked = sched.run_clocked(&points, &clock, None);
+        assert_eq!(plain.len(), clocked.len());
+        for (a, b) in plain.iter().zip(&clocked) {
+            assert_eq!(a.acc_std, b.acc_std, "{}", a.label);
+            assert_eq!(a.acc_ana, b.acc_ana, "{}", a.label);
+            assert_eq!(a.t_point, 0.0, "run never reads a clock");
+            assert_eq!(b.t_point, 1.0, "counter clock ticks once per bracket");
+            assert!(a.cache.is_empty() && b.cache.is_empty(), "no store, no tag");
+        }
+    }
+
+    #[test]
+    fn store_mode_shares_factors_across_equal_spec_points() {
+        // Tiny BinaryCv points: fold counts vary while (n, p, c, rep)
+        // repeats, so canonical seeding must produce real store hits.
+        let scale = SweepScale::tiny();
+        let mut points = grid(Experiment::BinaryCv, &scale);
+        points.truncate(6);
+        let store = crate::store::FactorStore::new();
+        let sched = Scheduler::new(1, 99, false);
+        let results = sched.run_clocked(&points, &|| 0.0, Some(&store));
+        assert_eq!(results.len(), 6);
+        let stats = store.stats();
+        assert!(stats.hits >= 1, "equal-spec points must share factors: {stats:?}");
+        assert!(stats.misses >= 1, "first touch of a key still builds: {stats:?}");
+        assert!(
+            results.iter().all(|r| !r.cache.is_empty()),
+            "per-point cache tags must be filled in store mode"
+        );
+        // At one worker the per-point deltas are exact: they sum to the
+        // store totals.
+        let parse = |tag: &str, idx: usize| -> u64 {
+            tag.split('/').nth(idx).and_then(|s| s[1..].parse().ok()).unwrap()
+        };
+        let (mut h, mut m) = (0u64, 0u64);
+        for r in &results {
+            h += parse(&r.cache, 0);
+            m += parse(&r.cache, 1);
+        }
+        assert_eq!(h, stats.hits);
+        assert_eq!(m, stats.misses);
     }
 
     #[test]

@@ -216,6 +216,14 @@ pub struct SweepResult {
     pub acc_std: f64,
     /// Accuracy from the analytic arm.
     pub acc_ana: f64,
+    /// End-to-end point wall-clock (s) from the caller-injected monotonic
+    /// clock (see [`crate::coordinator::Scheduler::run_clocked`]); 0.0
+    /// when no clock was injected (the historical [`run_point`] path).
+    pub t_point: f64,
+    /// [`crate::store::FactorStore`] counter delta for this point
+    /// (`h…/m…/e…/d…`), filled by the scheduler in store mode; empty
+    /// (rendered `-` in the TSV) otherwise.
+    pub cache: String,
 }
 
 impl SweepResult {
@@ -405,6 +413,19 @@ pub fn grid(exp: Experiment, scale: &SweepScale) -> Vec<SweepPoint> {
 /// identical data/folds (fresh RNG forks per arm mimic the paper's seed
 /// reset), and sanity-check that the two arms agree on accuracy.
 pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
+    run_point_store(point, seed, None)
+}
+
+/// [`run_point`] with an optional shared [`FactorStore`]: the analytic
+/// arm's [`ComputeContext`] borrows the store, so its factor builds land
+/// in (and are served from) the cross-point cache. The store is a pure
+/// wall-clock/memory knob — `run_point_store(p, s, Some(store))` returns
+/// bitwise the same result as `run_point(p, s)`; only `t_*` timings move.
+pub fn run_point_store(
+    point: &SweepPoint,
+    seed: u64,
+    store: Option<&crate::store::FactorStore>,
+) -> Result<SweepResult> {
     let mut rng = Rng::with_stream(seed, (point.rep as u64) << 8);
     let spec = if point.c == 2 {
         SyntheticSpec::binary(point.n, point.p)
@@ -438,9 +459,12 @@ pub fn run_point(point: &SweepPoint, seed: u64) -> Result<SweepResult> {
     };
     // Pool spawn happens outside the timed closures; with threads ≤ 1 no
     // pool exists and the context is free.
-    let ctx = ComputeContext::with_threads(point.threads)
+    let mut ctx = ComputeContext::with_threads(point.threads)
         .with_backend(point.backend)
         .with_tile_policy(point.tile.clone());
+    if let Some(s) = store {
+        ctx = ctx.with_store(s);
+    }
 
     match point.exp {
         Experiment::BinaryCv => {

@@ -53,7 +53,7 @@ use anyhow::{Context, Result};
 ///   resident** (see `docs/BACKENDS.md` "Out-of-core spill" and
 ///   `BENCH_spill.json`/`BENCH_tiling.json` for the resident-bytes
 ///   accounting).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct StreamingHat {
     /// Augmented design.
     pub xa: Mat,
@@ -117,7 +117,49 @@ impl StreamingHat {
     /// assert_eq!(hat.backend, GramBackend::Dual);         // Auto → dual (wide)
     /// ```
     pub fn build_ctx(x: &Mat, lambda: f64, ctx: &ComputeContext<'_>) -> Result<StreamingHat> {
-        Self::build_impl(x, lambda, ctx.backend(), ctx.pool(), ctx.tile_policy())
+        match ctx.store() {
+            None => Self::build_impl(x, lambda, ctx.backend(), ctx.pool(), ctx.tile_policy()),
+            // A store-carrying context serves the cached state (same floats
+            // — the store's bitwise contract); the by-value signature is
+            // kept, so the caller receives a copy of the shared artifact.
+            // Zero-copy callers use `fetch_ctx`.
+            Some(_) => Ok((*Self::fetch_ctx(x, lambda, ctx)?).clone()),
+        }
+    }
+
+    /// Store-aware sibling of [`StreamingHat::build_ctx`] returning the
+    /// shared artifact without copying: with a
+    /// [`crate::store::FactorStore`] on the context, the λ-specific
+    /// streaming state is fetched through the keyed cache
+    /// (`ArtifactKind::Streaming`, keyed on data × λ bits × resolved
+    /// backend × tile — a `--backend spectral` request keys separately so
+    /// its coercion label survives); without one it builds fresh.
+    pub fn fetch_ctx(
+        x: &Mat,
+        lambda: f64,
+        ctx: &ComputeContext<'_>,
+    ) -> Result<std::sync::Arc<StreamingHat>> {
+        match ctx.store() {
+            None => Ok(std::sync::Arc::new(Self::build_impl(
+                x,
+                lambda,
+                ctx.backend(),
+                ctx.pool(),
+                ctx.tile_policy(),
+            )?)),
+            Some(store) => {
+                // Key on the pre-coercion resolution: Spectral requests are
+                // coerced to Dual *inside* the build but carry a distinct
+                // `backend_label`, so they must not share a cache slot with
+                // genuine Dual requests.
+                let resolved = ctx.backend().resolve(x.rows(), x.cols(), lambda);
+                let key =
+                    crate::store::ArtifactKey::streaming(x, lambda, resolved, &ctx.tile_policy());
+                store.get_or_build_streaming(&key, || {
+                    Self::build_impl(x, lambda, ctx.backend(), ctx.pool(), ctx.tile_policy())
+                })
+            }
+        }
     }
 
     fn build_impl(
@@ -331,6 +373,17 @@ impl StreamingHat {
     /// Number of samples.
     pub fn n(&self) -> usize {
         self.xa.rows()
+    }
+
+    /// Resident heap footprint in bytes — the [`crate::store::FactorStore`]
+    /// budget currency. Counts the augmented design `X̃`, the `N×P`
+    /// projector `T`, and the dual column-means vector; both matrices are
+    /// dense, so the streaming hat never has a spill-resident discount.
+    pub fn resident_bytes(&self) -> usize {
+        (self.xa.rows() * self.xa.cols()
+            + self.t.rows() * self.t.cols()
+            + self.means.as_ref().map_or(0, Vec::len))
+            * 8
     }
 
     /// On-the-fly fold block: `H_Te = T_Te X̃_Teᵀ` (primal) or
@@ -826,6 +879,51 @@ mod tests {
         )
         .unwrap();
         assert_eq!(reference.t.as_slice(), off.t.as_slice());
+    }
+
+    #[test]
+    fn store_served_streaming_hat_bitwise_matches_fresh() {
+        // A lent FactorStore must be a pure wall-clock knob: the fetched
+        // Arc (hit) serves the exact floats a storeless build produces,
+        // and the Spectral→Dual-coerced request keys separately from a
+        // plain Dual one so its label survives caching.
+        use crate::fastcv::ComputeContext;
+        use crate::store::FactorStore;
+        let mut rng = Rng::new(23);
+        let ds = generate(&SyntheticSpec::binary(24, 70), &mut rng);
+        let lambda = 0.4;
+        let fresh = StreamingHat::build_ctx(
+            &ds.x,
+            lambda,
+            &ComputeContext::serial().with_backend(GramBackend::Dual),
+        )
+        .unwrap();
+        let store = FactorStore::new();
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Dual)
+            .with_store(&store);
+        let first = StreamingHat::fetch_ctx(&ds.x, lambda, &ctx).unwrap();
+        let second = StreamingHat::fetch_ctx(&ds.x, lambda, &ctx).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&first, &second), "second fetch must hit");
+        assert_eq!(first.t.as_slice(), fresh.t.as_slice());
+        assert_eq!(first.xa.as_slice(), fresh.xa.as_slice());
+        // build_ctx with a store routes through the same cache entry.
+        let cloned = StreamingHat::build_ctx(&ds.x, lambda, &ctx).unwrap();
+        assert_eq!(cloned.t.as_slice(), fresh.t.as_slice());
+        let stats = store.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (2, 1, 1));
+        // A Spectral request coerces to a dual build but keys on the
+        // pre-coercion backend: it must NOT alias the Dual entry.
+        let ctx_spec = ComputeContext::serial()
+            .with_backend(GramBackend::Spectral)
+            .with_store(&store);
+        let coerced = StreamingHat::fetch_ctx(&ds.x, lambda, &ctx_spec).unwrap();
+        assert!(!std::sync::Arc::ptr_eq(&first, &coerced));
+        assert!(coerced.backend_label().contains("coerced"));
+        assert!(!first.backend_label().contains("coerced"));
+        assert_eq!(coerced.t.as_slice(), fresh.t.as_slice(), "same floats either key");
+        assert_eq!(store.stats().entries, 2);
+        assert!(first.resident_bytes() > 0);
     }
 
     #[test]

@@ -34,6 +34,7 @@
 
 use super::hat::GramBackend;
 use crate::linalg::TilePolicy;
+use crate::store::FactorStore;
 use crate::util::threadpool::ThreadPool;
 
 /// An owned-or-borrowed pool handle.
@@ -54,6 +55,7 @@ pub struct ComputeContext<'p> {
     backend: GramBackend,
     nested_sharing: bool,
     tile_policy: TilePolicy,
+    store: Option<&'p FactorStore>,
 }
 
 impl std::fmt::Debug for ComputeContext<'_> {
@@ -63,6 +65,7 @@ impl std::fmt::Debug for ComputeContext<'_> {
             .field("backend", &self.backend)
             .field("nested_sharing", &self.nested_sharing)
             .field("tile_policy", &self.tile_policy)
+            .field("store", &self.store.is_some())
             .finish()
     }
 }
@@ -112,6 +115,25 @@ impl<'p> ComputeContext<'p> {
     pub fn with_tile_policy(mut self, tile: TilePolicy) -> Self {
         self.tile_policy = tile;
         self
+    }
+
+    /// Lend a [`FactorStore`] to every factor build under this context
+    /// (builder style). With a store, the `_ctx` entry points fetch their
+    /// [`crate::fastcv::hat::GramCache`] / nested-Gram /
+    /// [`crate::fastcv::bigdata::StreamingHat`] state through the keyed
+    /// cache ([`crate::store::gram_for_ctx`] and siblings) instead of
+    /// rebuilding per call; a hit serves the **same floats** a fresh build
+    /// would (the store's bitwise contract), so this knob — like the pool
+    /// and tile knobs — never moves a result. Without one (the default)
+    /// every historical build path runs untouched.
+    pub fn with_store(mut self, store: &'p FactorStore) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// The lent [`FactorStore`], if any.
+    pub fn store(&self) -> Option<&'p FactorStore> {
+        self.store
     }
 
     /// The Gram backend policy.
@@ -208,6 +230,16 @@ mod tests {
     fn tiled_default_context_tiling_is_off() {
         assert!(ComputeContext::serial().tile_policy().is_off());
         assert!(ComputeContext::with_threads(2).tile_policy().is_off());
+    }
+
+    #[test]
+    fn store_knob_is_off_by_default_and_borrowable() {
+        assert!(ComputeContext::serial().store().is_none());
+        let store = FactorStore::new();
+        let ctx = ComputeContext::serial().with_store(&store);
+        assert!(std::ptr::eq(ctx.store().unwrap(), &store));
+        let dbg = format!("{ctx:?}");
+        assert!(dbg.contains("store: true"), "{dbg}");
     }
 
     #[test]

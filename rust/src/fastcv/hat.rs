@@ -355,6 +355,24 @@ impl GramCache {
         }
     }
 
+    /// Approximate resident RAM in bytes (the
+    /// [`crate::store::FactorStore`] budget currency): the `f64` payload of
+    /// every dense member. Disk-backed spill panels count ~0 — that is
+    /// exactly what demoting a dense cache into the spill layer buys;
+    /// RAM-backed panels count their full square.
+    pub fn resident_bytes(&self) -> usize {
+        let mat_bytes = |m: &Mat| m.rows() * m.cols() * 8;
+        let store_bytes =
+            |s: &PanelStore| if s.is_disk() { 0 } else { s.n() * s.n() * 8 };
+        match self {
+            GramCache::Primal { xa, g0 } => mat_bytes(xa) + mat_bytes(g0),
+            GramCache::Dual { xa, kc } => mat_bytes(xa) + mat_bytes(kc),
+            GramCache::Spectral(sg) => sg.resident_bytes(),
+            GramCache::PrimalSpill { xa, g0, .. } => mat_bytes(xa) + store_bytes(g0),
+            GramCache::DualSpill { xa, kc, .. } => mat_bytes(xa) + store_bytes(kc),
+        }
+    }
+
     /// The hat matrix for one λ candidate against the cached state.
     pub fn hat(&self, lambda: f64) -> Result<HatMatrix> {
         self.hat_pool(lambda, None)
@@ -575,6 +593,16 @@ impl SpectralGram {
         self.xa.rows()
     }
 
+    /// Approximate resident RAM in bytes (`X̃` + eigenpairs) — the
+    /// [`crate::store::FactorStore`] budget currency. A spectral cache is
+    /// always fully resident: its eigenvector matrix cannot spill.
+    pub fn resident_bytes(&self) -> usize {
+        (self.xa.rows() * self.xa.cols()
+            + self.values.len()
+            + self.vectors.rows() * self.vectors.cols())
+            * 8
+    }
+
     /// The hat matrix for one ridge value: `O(N³)` GEMM, no factorisation.
     pub fn hat(&self, lambda: f64) -> Result<HatMatrix> {
         self.hat_pool(lambda, None)
@@ -695,6 +723,22 @@ impl SharedNestedGram {
         }
     }
 
+    /// Approximate resident RAM in bytes — the
+    /// [`crate::store::FactorStore`] budget currency. Disk-spilled storage
+    /// counts ~0, dense storage its full `N×N`.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.k {
+            NestedGramStorage::Dense(k) => k.rows() * k.cols() * 8,
+            NestedGramStorage::Spilled(store) => {
+                if store.is_disk() {
+                    0
+                } else {
+                    store.n() * store.n() * 8
+                }
+            }
+        }
+    }
+
     /// Gather the shared Gram into a dense matrix (tests / callers that
     /// decide it fits after all). A no-copy borrow is impossible for the
     /// spilled form, so this always allocates.
@@ -810,11 +854,16 @@ impl HatMatrix {
     /// `K_c` assembly and its Cholesky stay tile-bounded/in-place
     /// ([`GramCache::build_tiled`], [`GramCache::hat_pool_tiled`]).
     /// Bit-identical to [`HatMatrix::build_with`] for any context (the
-    /// pool and tile knobs never move a float).
+    /// pool and tile knobs never move a float). When the context lends a
+    /// [`crate::store::FactorStore`], the λ-free [`GramCache`] is fetched
+    /// through it ([`crate::store::gram_for_ctx`]) — this one seam puts
+    /// every `fit_ctx` front-end, and through them all four permutation
+    /// engines, on the shared cache; a hit serves the same floats a fresh
+    /// build would (the store's bitwise contract).
     pub fn build_ctx(x: &Mat, lambda: f64, ctx: &ComputeContext<'_>) -> Result<HatMatrix> {
         assert!(lambda >= 0.0, "ridge λ must be ≥ 0");
         let resolved = ctx.backend().resolve(x.rows(), x.cols(), lambda);
-        GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy())?
+        crate::store::gram_for_ctx(x, resolved, ctx)?
             .hat_pool_tiled(lambda, ctx.pool(), ctx.tile_policy())
     }
 

@@ -153,9 +153,13 @@ pub fn search_lambda_ctx(
     assert!(!grid.is_empty());
     let positives = grid.iter().filter(|&&l| l > 0.0).count();
     // Spill-aware: an Auto grid under `--spill-dir` resolves to the fully
-    // streamable dual cache instead of a resident spectral one.
+    // streamable dual cache instead of a resident spectral one. The cache
+    // itself comes through the context's FactorStore when one is lent
+    // (keyed on data × resolved backend × tile — a hit serves the same
+    // floats a fresh build would); without a store this is the historical
+    // per-call build.
     let resolved = ctx.resolve_for_grid(x.rows(), x.cols(), positives);
-    let cache = GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy())?;
+    let cache = crate::store::gram_for_ctx(x, resolved, ctx)?;
     search_lambda_with_cache_tiled(&cache, y, labels, folds, grid, by, ctx.pool(), ctx.tile_policy())
 }
 
@@ -250,7 +254,8 @@ pub fn search_lambda_multiclass(
     assert!(!grid.is_empty());
     let positives = grid.iter().filter(|&&l| l > 0.0).count();
     let resolved = ctx.resolve_for_grid(x.rows(), x.cols(), positives);
-    let cache = GramCache::build_tiled(x, resolved, ctx.pool(), ctx.tile_policy())?;
+    // Store-aware fetch, same seam as `search_lambda_ctx`.
+    let cache = crate::store::gram_for_ctx(x, resolved, ctx)?;
     search_lambda_multiclass_with_cache_tiled(
         &cache,
         labels,
@@ -448,7 +453,11 @@ pub fn nested_cv_ctx(
     let shared = if ctx.nested_sharing()
         && matches!(resolved, GramBackend::Spectral | GramBackend::Dual)
     {
-        Some(SharedNestedGram::build_tiled(x, ctx.pool(), ctx.tile_policy())?)
+        // Store-aware: with a FactorStore on the context the full-data
+        // `XXᵀ` is fetched through the keyed cache (`ArtifactKind::Nested`)
+        // — a repeated nested CV on the same data reuses the one `O(N²P)`
+        // build; without a store this is the historical per-call build.
+        Some(crate::store::nested_for_ctx(x, ctx)?)
     } else {
         None
     };

@@ -356,6 +356,167 @@ pub fn analytic_multiclass_permutation_batched_ctx(
     Ok(PermutationResult { observed, p_value: p_value(observed, &null), null })
 }
 
+/// One queued permutation request inside a coalesced engine pass: the
+/// request's determinism anchor plus its permutation count.
+///
+/// The anchor is the single `u64` the request's RNG would have produced
+/// before permuting (the serve layer computes it as
+/// `Rng::new(seed).next_u64()` — the exact draw
+/// [`analytic_binary_permutation_batched_ctx`] makes from a fresh
+/// `Rng::new(seed)`, since fit and fold prep consume no randomness), so a
+/// job's permutation `t` derives from `Rng::stream(anchor, t)` exactly as
+/// a standalone run derives it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PermJob {
+    /// Determinism anchor: the one `u64` drawn from the request's RNG.
+    pub anchor: u64,
+    /// Number of permutations this request asked for.
+    pub n_perm: usize,
+}
+
+/// Prefix offsets of the jobs' permutation counts: `offsets[j]` is the
+/// first global column owned by job `j`, `offsets[jobs.len()]` the total.
+fn job_offsets(jobs: &[PermJob]) -> Vec<usize> {
+    let mut offsets = Vec::with_capacity(jobs.len() + 1);
+    offsets.push(0usize);
+    for job in jobs {
+        offsets.push(offsets[offsets.len() - 1] + job.n_perm);
+    }
+    offsets
+}
+
+/// Map a global permutation column to `(job index, local permutation t)`.
+fn job_of(offsets: &[usize], global: usize) -> (usize, usize) {
+    let j = offsets.partition_point(|&o| o <= global) - 1;
+    (j, global - offsets[j])
+}
+
+/// Slice the concatenated null back into per-job [`PermutationResult`]s.
+fn split_jobs(null_all: &[f64], offsets: &[usize], observed: f64) -> Vec<PermutationResult> {
+    offsets
+        .windows(2)
+        .map(|w| {
+            let null = null_all[w[0]..w[1]].to_vec();
+            PermutationResult { observed, p_value: p_value(observed, &null), null }
+        })
+        .collect()
+}
+
+/// Coalesced analytic binary permutation testing: several queued requests
+/// on the **same** (data, folds, λ, bias-adjust) key run as one engine
+/// pass — one hat build, one [`FoldCache`], one observed accuracy, and one
+/// permutation stream whose GEMM batches span every request's columns.
+///
+/// Job `j`'s permutation `t` uses `Rng::stream(jobs[j].anchor, t)` exactly
+/// as a standalone run would, and the batched kernels process columns as
+/// independent lanes (the module-docs determinism contract), so result `j`
+/// is **bit-identical** to running that request alone through
+/// [`analytic_binary_permutation_batched_ctx`] with an RNG whose first
+/// draw is `jobs[j].anchor` — for any batch size, thread count, or job
+/// interleaving (property-tested below). This is the `fastcv serve`
+/// coalescing engine: merging M concurrent requests on one key costs one
+/// hat build instead of M.
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_binary_permutation_jobs_ctx(
+    x: &Mat,
+    labels: &[usize],
+    folds: &[Vec<usize>],
+    lambda: f64,
+    jobs: &[PermJob],
+    bias_adjust: bool,
+    strategy: BatchStrategy,
+    ctx: &ComputeContext<'_>,
+) -> Result<Vec<PermutationResult>> {
+    let y = signed_codes(labels);
+    let cv = AnalyticBinaryCv::fit_ctx(x, &y, lambda, ctx)?;
+    let cache = FoldCache::prepare_pool(&cv.hat, folds, bias_adjust, ctx.pool())?;
+    let observed = if bias_adjust {
+        accuracy_signed(&cv.decision_values_bias_adjusted(&cache, labels)?, &y)
+    } else {
+        accuracy_signed(&cv.decision_values_cached(&cache), &y)
+    };
+    let offsets = job_offsets(jobs);
+    let total = offsets[jobs.len()];
+    let n = labels.len();
+    let run = |start: usize, len: usize| -> Result<Vec<f64>> {
+        let mut labels_cols: Vec<Vec<usize>> = Vec::with_capacity(len);
+        let mut ys = Mat::zeros(n, len);
+        for col in 0..len {
+            let (j, t) = job_of(&offsets, start + col);
+            let labels_perm = permuted_labels(labels, jobs[j].anchor, t as u64);
+            let codes = signed_codes(&labels_perm);
+            for (i, &v) in codes.iter().enumerate() {
+                ys[(i, col)] = v;
+            }
+            labels_cols.push(labels_perm);
+        }
+        let dvals = if bias_adjust {
+            cv.decision_values_bias_adjusted_mat(&cache, &ys, &labels_cols)?
+        } else {
+            cv.decision_values_cached_mat(&cache, &ys)
+        };
+        let mut accs = Vec::with_capacity(len);
+        for col in 0..len {
+            let dv: Vec<f64> = (0..n).map(|i| dvals[(i, col)]).collect();
+            let yc: Vec<f64> = (0..n).map(|i| ys[(i, col)]).collect();
+            accs.push(accuracy_signed(&dv, &yc));
+        }
+        Ok(accs)
+    };
+    let null_all =
+        run_batches(&batch_ranges(total, strategy.batch_size), strategy.threads, ctx.pool(), run)?;
+    Ok(split_jobs(&null_all, &offsets, observed))
+}
+
+/// Coalesced analytic multi-class permutation testing — the Algorithm 2
+/// sibling of [`analytic_binary_permutation_jobs_ctx`], with the same
+/// contract: one fit + fold prep serves every job, and result `j` is
+/// bit-identical to a standalone
+/// [`analytic_multiclass_permutation_batched_ctx`] run whose RNG's first
+/// draw is `jobs[j].anchor`.
+#[allow(clippy::too_many_arguments)]
+pub fn analytic_multiclass_permutation_jobs_ctx(
+    x: &Mat,
+    labels: &[usize],
+    c: usize,
+    folds: &[Vec<usize>],
+    lambda: f64,
+    jobs: &[PermJob],
+    strategy: BatchStrategy,
+    ctx: &ComputeContext<'_>,
+) -> Result<Vec<PermutationResult>> {
+    let cv = AnalyticMulticlassCv::fit_ctx(x, labels, c, lambda, ctx)?;
+    let cache = FoldCache::prepare_pool(&cv.hat, folds, true, ctx.pool())?;
+    let observed = accuracy_labels(&cv.predict_cached(&cache)?, labels);
+    let offsets = job_offsets(jobs);
+    let total = offsets[jobs.len()];
+    let n = labels.len();
+    let run = |start: usize, len: usize| -> Result<Vec<f64>> {
+        let labels_cols: Vec<Vec<usize>> = (0..len)
+            .map(|col| {
+                let (j, t) = job_of(&offsets, start + col);
+                permuted_labels(labels, jobs[j].anchor, t as u64)
+            })
+            .collect();
+        // Stacked indicator block: batch column p owns p·C..(p+1)·C.
+        let mut y_stack = Mat::zeros(n, len * c);
+        for (p, labels_perm) in labels_cols.iter().enumerate() {
+            for (i, &l) in labels_perm.iter().enumerate() {
+                y_stack[(i, p * c + l)] = 1.0;
+            }
+        }
+        let preds = cv.predict_cached_stacked(&cache, &y_stack, &labels_cols)?;
+        Ok(preds
+            .iter()
+            .zip(&labels_cols)
+            .map(|(pred, labels_perm)| accuracy_labels(pred, labels_perm))
+            .collect())
+    };
+    let null_all =
+        run_batches(&batch_ranges(total, strategy.batch_size), strategy.threads, ctx.pool(), run)?;
+    Ok(split_jobs(&null_all, &offsets, observed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -605,6 +766,163 @@ mod tests {
         .unwrap();
         assert_eq!(pooled.observed, base.observed);
         assert_eq!(pooled.null, base.null);
+    }
+
+    #[test]
+    fn coalesced_jobs_bit_identical_to_standalone_runs() {
+        // Acceptance property for the serve coalescing engine: merging two
+        // requests into one jobs pass returns, per job, exactly the null
+        // distribution / p-value a standalone batched run with that job's
+        // seed produces — bitwise, across bias adjustment, batch size, and
+        // thread count (batch boundaries differ between the merged and
+        // standalone runs, so this also re-proves lane independence).
+        let mut rng = Rng::new(41);
+        let (x, labels) = blobs(&mut rng, 12, 2, 30, 2.0);
+        let folds = stratified_kfold(&labels, 4, &mut rng);
+        let lambda = 0.6;
+        let seeds = [900u64, 901];
+        let n_perms = [11usize, 17];
+        for bias_adjust in [false, true] {
+            let solo: Vec<PermutationResult> = seeds
+                .iter()
+                .zip(n_perms)
+                .map(|(&s, np)| {
+                    analytic_binary_permutation_batched_ctx(
+                        &x,
+                        &labels,
+                        &folds,
+                        lambda,
+                        np,
+                        bias_adjust,
+                        &mut Rng::new(s),
+                        BatchStrategy::new(6, 1),
+                        &ComputeContext::serial(),
+                    )
+                    .unwrap()
+                })
+                .collect();
+            // The serve layer's anchor: the first draw of the request RNG,
+            // exactly what the batched engine draws post-fit.
+            let jobs: Vec<PermJob> = seeds
+                .iter()
+                .zip(n_perms)
+                .map(|(&s, np)| PermJob { anchor: Rng::new(s).next_u64(), n_perm: np })
+                .collect();
+            for (batch, threads) in [(10usize, 1usize), (4, 3), (64, 2)] {
+                let merged = analytic_binary_permutation_jobs_ctx(
+                    &x,
+                    &labels,
+                    &folds,
+                    lambda,
+                    &jobs,
+                    bias_adjust,
+                    BatchStrategy::new(batch, threads),
+                    &ComputeContext::serial(),
+                )
+                .unwrap();
+                assert_eq!(merged.len(), 2);
+                for (m, s) in merged.iter().zip(&solo) {
+                    assert_eq!(m.observed, s.observed, "bias={bias_adjust} B={batch}");
+                    assert_eq!(m.null, s.null, "bias={bias_adjust} B={batch} T={threads}");
+                    assert_eq!(m.p_value, s.p_value);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_multiclass_jobs_bit_identical_to_standalone_runs() {
+        let mut rng = Rng::new(43);
+        let c = 3;
+        let (x, labels) = blobs(&mut rng, 9, c, 24, 2.5);
+        let folds = stratified_kfold(&labels, 3, &mut rng);
+        let lambda = 1.1;
+        let seeds = [77u64, 78, 79];
+        let n_perms = [5usize, 9, 1];
+        let solo: Vec<PermutationResult> = seeds
+            .iter()
+            .zip(n_perms)
+            .map(|(&s, np)| {
+                analytic_multiclass_permutation_batched_ctx(
+                    &x,
+                    &labels,
+                    c,
+                    &folds,
+                    lambda,
+                    np,
+                    &mut Rng::new(s),
+                    BatchStrategy::new(4, 1),
+                    &ComputeContext::serial(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let jobs: Vec<PermJob> = seeds
+            .iter()
+            .zip(n_perms)
+            .map(|(&s, np)| PermJob { anchor: Rng::new(s).next_u64(), n_perm: np })
+            .collect();
+        let merged = analytic_multiclass_permutation_jobs_ctx(
+            &x,
+            &labels,
+            c,
+            &folds,
+            lambda,
+            &jobs,
+            BatchStrategy::new(7, 2),
+            &ComputeContext::serial(),
+        )
+        .unwrap();
+        assert_eq!(merged.len(), 3);
+        for (j, (m, s)) in merged.iter().zip(&solo).enumerate() {
+            assert_eq!(m.observed, s.observed, "job {j}");
+            assert_eq!(m.null, s.null, "job {j}");
+            assert_eq!(m.p_value, s.p_value, "job {j}");
+        }
+        // Degenerate shapes: no jobs, and a zero-permutation job.
+        let empty = analytic_binary_permutation_jobs_ctx(
+            &x,
+            &labels,
+            &folds,
+            lambda,
+            &[],
+            false,
+            BatchStrategy::default(),
+            &ComputeContext::serial(),
+        )
+        .unwrap();
+        assert!(empty.is_empty());
+        let zero = analytic_binary_permutation_jobs_ctx(
+            &x,
+            &labels,
+            &folds,
+            lambda,
+            &[PermJob { anchor: 1, n_perm: 0 }],
+            false,
+            BatchStrategy::default(),
+            &ComputeContext::serial(),
+        )
+        .unwrap();
+        assert_eq!(zero.len(), 1);
+        assert!(zero[0].null.is_empty());
+        assert_eq!(zero[0].p_value, 1.0);
+    }
+
+    #[test]
+    fn job_offsets_and_mapping_cover_exactly() {
+        let jobs = [
+            PermJob { anchor: 1, n_perm: 3 },
+            PermJob { anchor: 2, n_perm: 0 },
+            PermJob { anchor: 3, n_perm: 2 },
+        ];
+        let offsets = job_offsets(&jobs);
+        assert_eq!(offsets, vec![0, 3, 3, 5]);
+        assert_eq!(job_of(&offsets, 0), (0, 0));
+        assert_eq!(job_of(&offsets, 2), (0, 2));
+        // global 3 skips the empty job and lands on job 2's first perm
+        assert_eq!(job_of(&offsets, 3), (2, 0));
+        assert_eq!(job_of(&offsets, 4), (2, 1));
+        assert_eq!(job_offsets(&[]), vec![0]);
     }
 
     #[test]

@@ -47,5 +47,7 @@ pub mod linalg;
 pub mod lint;
 pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
+pub mod store;
 pub mod util;

@@ -17,7 +17,9 @@
 //!   and must live in an audited file.
 //! - **L4 `panic`** — no `unwrap`/`expect`/`panic!` on library paths outside
 //!   the documented allowlist (groundwork for a `fastcv serve` daemon).
-//! - **L5 `doc`** — every public `_ctx` entry point carries rustdoc.
+//! - **L5 `doc`** — every public `_ctx` entry point carries rustdoc; under
+//!   `rust/src/store/` and `rust/src/serve/` (the daemon's public API) the
+//!   requirement widens to every `pub fn`/`pub struct`/`pub enum`.
 //!
 //! Violations are suppressed site-by-site with
 //! `// lint:allow(<rule>, reason = "...")`; suppressions are counted,
@@ -140,6 +142,11 @@ const PANIC_ALLOWED_FILES: [&str; 2] = [
 const PERM_ENGINE_FILES: [&str; 2] =
     ["rust/src/fastcv/perm.rs", "rust/src/fastcv/perm_batch.rs"];
 
+/// L5 doc-everything surface: the factor store and the serve daemon are
+/// public API whose whole item set (not just `_ctx` functions) must carry
+/// rustdoc — their keying/eviction/coalescing semantics live in the docs.
+const DOC_ALL_PUBLIC_DIRS: [&str; 2] = ["rust/src/store/", "rust/src/serve/"];
+
 /// Directory names never descended into when walking the workspace.
 const SKIP_DIRS: [&str; 3] = [
     "vendor",        // offline API stubs: external code, not ours to lint
@@ -180,6 +187,7 @@ pub fn file_info(rel: &str) -> FileInfo<'_> {
         unsafe_audited: UNSAFE_AUDITED_FILES.contains(&rel),
         panic_allowed: PANIC_ALLOWED_FILES.contains(&rel),
         perm_engine: PERM_ENGINE_FILES.contains(&rel),
+        doc_all_public: DOC_ALL_PUBLIC_DIRS.iter().any(|d| rel.starts_with(d)),
     }
 }
 
@@ -307,6 +315,12 @@ mod tests {
         assert!(fi.perm_engine && !fi.kernel);
         let fi = file_info("rust/src/util/threadpool.rs");
         assert!(fi.unsafe_audited && fi.panic_allowed && !fi.numeric);
+        let fi = file_info("rust/src/store/mod.rs");
+        assert!(fi.doc_all_public && fi.library && !fi.numeric);
+        let fi = file_info("rust/src/serve/mod.rs");
+        assert!(fi.doc_all_public && !fi.perm_engine);
+        let fi = file_info("rust/src/fastcv/hat.rs");
+        assert!(!fi.doc_all_public);
     }
 
     #[test]

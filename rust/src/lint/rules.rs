@@ -23,6 +23,9 @@ pub struct FileInfo<'a> {
     pub panic_allowed: bool,
     /// Permutation engine: only `Rng::stream(seed, idx)` construction.
     pub perm_engine: bool,
+    /// Doc-everything surface (the store/serve daemon API): L5 extends
+    /// beyond `_ctx` functions to every `pub fn`/`pub struct`/`pub enum`.
+    pub doc_all_public: bool,
 }
 
 struct Suppression {
@@ -336,28 +339,45 @@ pub fn lint_tokens(info: &FileInfo<'_>, toks: &[Token], comments: &[Comment]) ->
             }
         }
 
-        // ---- L5: public `_ctx` entry points need rustdoc.
+        // ---- L5: rustdoc on the public contract surface. Everywhere:
+        // public `_ctx` entry points. In doc-all files (the store/serve
+        // daemon API): every `pub fn`/`pub struct`/`pub enum`
+        // (`pub(crate)` is internal and stays exempt).
         if info.library
             && t.kind == TokKind::Ident
             && t.text == "pub"
-            && tok_is(toks, k + 1, TokKind::Ident, "fn")
-            && toks
-                .get(k + 2)
-                .is_some_and(|n| n.kind == TokKind::Ident && n.text.ends_with("_ctx"))
+            && !tok_is(toks, k + 1, TokKind::Punct, "(")
         {
-            let has_doc = comments
-                .iter()
-                .any(|c| c.doc && c.line + 3 >= line && c.line < line);
-            if !has_doc && !in_test(line) && !covered(line, Rule::Doc, &mut sups) {
-                out.diagnostics.push(Diagnostic {
-                    line,
-                    rule: Rule::Doc,
-                    msg: format!(
-                        "public `{}` entry point without rustdoc — the ComputeContext surface \
-                         is the documented API",
-                        toks[k + 2].text
-                    ),
-                });
+            let kw = toks.get(k + 1).filter(|n| n.kind == TokKind::Ident);
+            let name = toks.get(k + 2).filter(|n| n.kind == TokKind::Ident);
+            let needs_doc = match (kw, name) {
+                (Some(kw), Some(nm)) if kw.text == "fn" => {
+                    nm.text.ends_with("_ctx") || info.doc_all_public
+                }
+                (Some(kw), Some(_)) if kw.text == "struct" || kw.text == "enum" => {
+                    info.doc_all_public
+                }
+                _ => false,
+            };
+            if needs_doc {
+                let has_doc = comments
+                    .iter()
+                    .any(|c| c.doc && c.line + 3 >= line && c.line < line);
+                if !has_doc && !in_test(line) && !covered(line, Rule::Doc, &mut sups) {
+                    let surface = if info.doc_all_public {
+                        "the store/serve API documents every public item"
+                    } else {
+                        "the ComputeContext surface is the documented API"
+                    };
+                    out.diagnostics.push(Diagnostic {
+                        line,
+                        rule: Rule::Doc,
+                        msg: format!(
+                            "public `{}` without rustdoc — {surface}",
+                            toks[k + 2].text
+                        ),
+                    });
+                }
             }
         }
     }

@@ -23,7 +23,7 @@ use fastcv::fastcv::hat::GramBackend;
 use fastcv::util::cli::Args;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "full", "help"]);
+    let args = Args::from_env(&["verbose", "full", "help", "cache"]);
     let code = match dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -42,6 +42,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("eeg") => cmd_eeg(args),
         Some("bigdata") => cmd_bigdata(args),
         Some("quickstart") => cmd_quickstart(args),
+        Some("serve") => cmd_serve(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("lint") => cmd_lint(args),
         _ => {
@@ -68,6 +69,10 @@ fn print_usage() {
                  [--spill-dir PATH]  (out-of-core: Gram + Cholesky factor live\n\
                  as tile×N panel files under PATH, never resident at once;\n\
                  panel height from --tile-rows, default 256; still bit-identical)\n\
+                 [--cache [--budget-mb MB]]  (share factor builds across sweep\n\
+                 points through a FactorStore: equal-spec points reuse Grams;\n\
+                 adds hit/miss counters to the TSV cache column; note this\n\
+                 remaps per-point seeds so equal-spec points share datasets)\n\
            parity                        §4.1 N≈P crossover table\n\
            complexity                    Table 1 empirical scaling exponents\n\
            eeg [--subjects N] [--perms N] [--full]   Fig. 4 EEG/MEG permutation study\n\
@@ -76,6 +81,12 @@ fn print_usage() {
                  one ComputeContext ([--threads T] [--backend ...]\n\
                  [--tile-rows R | --mem-budget MB | --spill-dir PATH])\n\
            quickstart                    30-second end-to-end demo\n\
+           serve [--workers N] [--threads T] [--budget-mb MB]\n\
+                 [--tile-rows R | --mem-budget MB | --spill-dir PATH]\n\
+                 [--socket PATH]         long-lived NDJSON job daemon over a\n\
+                 shared FactorStore (stdin/stdout, or a Unix socket); queued\n\
+                 permutation requests on one dataset key coalesce into a\n\
+                 single batched GEMM pass — see docs/SERVE.md\n\
            artifacts                     list AOT artifacts and PJRT platform\n\
            lint [--root DIR]             determinism & safety static analysis\n\
                  (docs/LINTS.md; non-zero exit on any violation)"
@@ -164,7 +175,36 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     eprintln!("{}: {} points", exp.name(), points.len());
     let sched = Scheduler::new(workers, seed, args.flag("verbose"));
-    let results = sched.run(&points);
+    // Clock injection (not read inside the scheduler) keeps lint L2's
+    // Instant ban on numeric modules intact; --cache opts into a shared
+    // FactorStore, which also remaps seeds so equal-spec points share
+    // datasets (documented on Scheduler::run_clocked).
+    let clock = fastcv::util::monotonic_clock();
+    let store = if args.flag("cache") {
+        let store = match args.get_parse_or("budget-mb", 0usize) {
+            0 => fastcv::store::FactorStore::new(),
+            mb => fastcv::store::FactorStore::with_budget(mb * 1024 * 1024),
+        };
+        Some(match args.get("spill-dir") {
+            Some(dir) => store.with_spill(
+                std::path::PathBuf::from(dir),
+                args.get_parse_or("tile-rows", 256usize),
+            ),
+            None => store,
+        })
+    } else {
+        None
+    };
+    let results = sched.run_clocked(&points, &clock, store.as_ref());
+    if let Some(s) = &store {
+        let stats = s.stats();
+        eprintln!(
+            "factor store: {} — {} entries, {} resident bytes",
+            stats.tag(),
+            stats.entries,
+            stats.resident_bytes
+        );
+    }
     let report = SweepReport::new(results);
     println!("{}", report.render(exp.name()));
     let factor = match exp {
@@ -485,6 +525,48 @@ fn cmd_quickstart(args: &Args) -> Result<()> {
     println!("  standard approach: {:.3}s  acc={acc_std:.3}", t_std);
     println!("  analytic approach: {:.3}s  acc={acc_ana:.3}", t_ana);
     println!("  speedup: {:.1}x (rel.eff {:.2})", t_std / t_ana, (t_std / t_ana).log10());
+    Ok(())
+}
+
+/// Long-lived job daemon: NDJSON requests over stdin/stdout (or a Unix
+/// socket), answered through one shared `FactorStore` with permutation
+/// request coalescing — see docs/SERVE.md for the protocol.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use fastcv::serve::{ServeConfig, Server};
+    let workers: usize = args.get_parse_or("workers", 1);
+    let threads: usize = args.get_parse_or("threads", 1);
+    let budget_mb: usize = args.get_parse_or("budget-mb", 0);
+    let tile = fastcv::linalg::TilePolicy::from_cli(
+        args.get_parse_or("tile-rows", 0usize),
+        args.get_parse_or("mem-budget", 0usize),
+        args.get("spill-dir"),
+    );
+    let config = ServeConfig {
+        workers: workers.max(1),
+        threads: threads.max(1),
+        budget_bytes: (budget_mb > 0).then(|| budget_mb * 1024 * 1024),
+        spill_dir: args.get("spill-dir").map(std::path::PathBuf::from),
+        tile,
+    };
+    let server = Server::new(config);
+    match args.get("socket") {
+        Some(path) => {
+            eprintln!("fastcv serve: listening on {path} ({workers} worker(s))");
+            server.serve_unix(std::path::Path::new(path))?;
+        }
+        None => {
+            eprintln!("fastcv serve: NDJSON requests on stdin ({workers} worker(s))");
+            let stdin = std::io::stdin();
+            server.serve_stream(stdin.lock(), std::io::stdout())?;
+        }
+    }
+    let stats = server.store().stats();
+    eprintln!(
+        "fastcv serve: done — cache {} ({} entries), {} request(s) coalesced",
+        stats.tag(),
+        stats.entries,
+        server.coalesced()
+    );
     Ok(())
 }
 

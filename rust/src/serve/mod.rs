@@ -1,0 +1,875 @@
+//! # `fastcv serve` — a threaded job queue over a shared [`FactorStore`]
+//!
+//! The sweep CLI amortises factor builds *within* one process invocation;
+//! this module amortises them *across* requests: a long-lived daemon owns
+//! one [`FactorStore`] and a pool of request workers, so every search /
+//! permutation / sweep request that lands on the same dataset key reuses
+//! the factors earlier requests paid for. Protocol, keying, eviction, and
+//! coalescing semantics are documented in `docs/SERVE.md`.
+//!
+//! ## Protocol
+//!
+//! Newline-delimited JSON (NDJSON): one request object per line on stdin
+//! (or a Unix socket via `--socket`), one response object per line out.
+//! Every response carries the request's `id` (echoed verbatim), `"ok"`,
+//! and a `"cache"` counter tag ([`StoreStats::tag`]). With more than one
+//! worker, response *order* is not guaranteed — match responses to
+//! requests by `id`.
+//!
+//! Ops: `search` (λ grid through
+//! [`search_lambda_ctx`](crate::fastcv::lambda_search::search_lambda_ctx)),
+//! `perm` (binary/multi-class permutation test), `sweep` (a Fig. 3 grid
+//! through the coordinator's [`Scheduler`] sharing this server's store),
+//! `stats` (store counters), `shutdown`.
+//!
+//! ## Coalescing
+//!
+//! Queued `perm` requests with an equal coalesce key — synthetic dataset
+//! spec × fold spec × λ bits × bias × backend policy × tile tag — are
+//! drained together and run as **one** pass of the jobs engine
+//! ([`analytic_binary_permutation_jobs_ctx`]): one hat build, one fold
+//! prep, one GEMM stream spanning every request's permutation columns.
+//! Each request keeps its own determinism anchor
+//! (`Rng::new(seed).next_u64()`), so its null distribution is
+//! **bit-identical** to a standalone run with that seed (the jobs-engine
+//! property tests). Requests with inline (non-synthetic) data are never
+//! coalesced — fingerprinting them for a merge key would cost more than
+//! the merge saves on typical inline payloads.
+//!
+//! ## Determinism
+//!
+//! No wall time or OS entropy feeds any result: datasets come from seeded
+//! [`Rng`] streams, folds from a seeded fold RNG, permutation anchors from
+//! request seeds. The store is a pure wall-clock/memory knob (its bitwise
+//! contract), so a warm cache serves byte-identical results to a cold one.
+
+use crate::coordinator::sweep::{grid, Experiment, PermEngine, SweepScale};
+use crate::coordinator::{Scheduler, SweepReport};
+use crate::cv::folds::{kfold, stratified_kfold};
+use crate::data::synthetic::{generate, SyntheticSpec};
+use crate::data::Dataset;
+use crate::fastcv::hat::GramBackend;
+use crate::fastcv::lambda_search::{
+    search_lambda_ctx, search_lambda_multiclass, SelectBy,
+};
+use crate::fastcv::perm_batch::{
+    analytic_binary_permutation_jobs_ctx, analytic_multiclass_permutation_jobs_ctx,
+    BatchStrategy, PermJob,
+};
+use crate::fastcv::ComputeContext;
+use crate::linalg::{Mat, TilePolicy};
+use crate::model::lda_binary::signed_codes;
+use crate::store::{FactorStore, StoreStats};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, PoisonError};
+
+/// Server configuration — the CLI's `fastcv serve` flags.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Request worker threads draining the queue (floored at 1). One
+    /// worker preserves response order; more trade order for throughput.
+    pub workers: usize,
+    /// [`ComputeContext`] pool width per request (hat builds, fold prep,
+    /// permutation batches). Wall-clock only — never moves a result.
+    pub threads: usize,
+    /// [`FactorStore`] resident-byte budget (`None` = unbounded).
+    pub budget_bytes: Option<usize>,
+    /// Spill directory for LRU demotion (and for the tile policy's
+    /// out-of-core mode when `tile` is `Spill`).
+    pub spill_dir: Option<PathBuf>,
+    /// [`TilePolicy`] applied to every request's factor builds.
+    pub tile: TilePolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 1,
+            threads: 1,
+            budget_bytes: None,
+            spill_dir: None,
+            tile: TilePolicy::Off,
+        }
+    }
+}
+
+/// The daemon: one [`FactorStore`] shared by every request, a coalescing
+/// request queue, and the op handlers. Construct with [`Server::new`],
+/// then drive it with [`Server::serve_stream`] (stdin/stdout or a socket
+/// connection) or [`Server::process_batch`] (in-process: tests, benches).
+pub struct Server {
+    config: ServeConfig,
+    store: FactorStore,
+    /// Requests that rode along in another request's engine pass.
+    coalesced: AtomicU64,
+}
+
+/// Parsed request envelope: the echoed `id`, the op, and the raw body for
+/// op-specific fields.
+struct Request {
+    id: Json,
+    op: String,
+    body: Json,
+}
+
+impl Request {
+    fn parse(line: &str) -> Result<Request> {
+        let body = Json::parse(line).map_err(|e| anyhow!("bad request JSON: {e}"))?;
+        let op = body
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request needs a string \"op\" field"))?
+            .to_string();
+        let id = body.get("id").cloned().unwrap_or(Json::Null);
+        Ok(Request { id, op, body })
+    }
+
+    /// Merge key for queued `perm` requests (see the module docs); `None`
+    /// for every other op and for inline-data perm requests.
+    fn coalesce_key(&self) -> Option<String> {
+        if self.op != "perm" {
+            return None;
+        }
+        let syn = self.body.get("data")?.get("synthetic")?;
+        let n = syn.get("n")?.as_usize()?;
+        let p = syn.get("p")?.as_usize()?;
+        let c = syn.get("c").and_then(Json::as_usize).unwrap_or(2);
+        let dseed = syn.get("seed").and_then(Json::as_usize).unwrap_or(0);
+        let k = self.body.get("folds")?.get("k")?.as_usize()?;
+        let fseed = fold_seed(&self.body);
+        let lambda = self.body.get("lambda").and_then(Json::as_f64).unwrap_or(1.0);
+        let bias = truthy(&self.body, "bias_adjust");
+        let backend = self.body.get("backend").and_then(Json::as_str).unwrap_or("auto");
+        Some(format!(
+            "n{n}|p{p}|c{c}|d{dseed}|k{k}|f{fseed}|l{:016x}|b{}|{backend}",
+            lambda.to_bits(),
+            u8::from(bias)
+        ))
+    }
+}
+
+/// Fold-RNG seed: `folds.seed`, defaulting to 1 (independent of the data
+/// stream so equal fold specs reproduce across data sources).
+fn fold_seed(body: &Json) -> u64 {
+    body.get("folds")
+        .and_then(|f| f.get("seed"))
+        .and_then(Json::as_usize)
+        .unwrap_or(1) as u64
+}
+
+fn truthy(body: &Json, key: &str) -> bool {
+    matches!(body.get(key), Some(Json::Bool(true)))
+}
+
+/// Shared queue state between the reader (caller thread) and the workers.
+struct Queue {
+    jobs: Mutex<VecDeque<Request>>,
+    ready: Condvar,
+    open: AtomicBool,
+}
+
+impl Queue {
+    fn new() -> Queue {
+        Queue { jobs: Mutex::new(VecDeque::new()), ready: Condvar::new(), open: AtomicBool::new(true) }
+    }
+
+    fn push(&self, req: Request) {
+        self.jobs.lock().unwrap_or_else(PoisonError::into_inner).push_back(req);
+        self.ready.notify_one();
+    }
+
+    fn close(&self) {
+        self.open.store(false, Ordering::SeqCst);
+        self.ready.notify_all();
+    }
+
+    /// Block for the next request; drain queued requests sharing its
+    /// coalesce key in the same critical section. `None` once the queue is
+    /// closed and empty.
+    fn next_job(&self) -> Option<(Request, Vec<Request>)> {
+        let mut q = self.jobs.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(head) = q.pop_front() {
+                let mut mates = Vec::new();
+                if let Some(key) = head.coalesce_key() {
+                    let mut rest = VecDeque::with_capacity(q.len());
+                    while let Some(r) = q.pop_front() {
+                        if r.coalesce_key().as_deref() == Some(key.as_str()) {
+                            mates.push(r);
+                        } else {
+                            rest.push_back(r);
+                        }
+                    }
+                    *q = rest;
+                }
+                return Some((head, mates));
+            }
+            if !self.open.load(Ordering::SeqCst) {
+                return None;
+            }
+            q = self.ready.wait(q).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+impl Server {
+    /// Build a server: the store takes the config's budget and (when a
+    /// spill directory is configured) demotes LRU entries there.
+    pub fn new(config: ServeConfig) -> Server {
+        let store = match config.budget_bytes {
+            Some(b) => FactorStore::with_budget(b),
+            None => FactorStore::new(),
+        };
+        let store = match &config.spill_dir {
+            Some(dir) => store.with_spill(dir.clone(), 256),
+            None => store,
+        };
+        Server { config, store, coalesced: AtomicU64::new(0) }
+    }
+
+    /// The shared factor store (counters, tests, benches).
+    pub fn store(&self) -> &FactorStore {
+        &self.store
+    }
+
+    /// How many requests rode along in another request's coalesced engine
+    /// pass so far (a group of M counts M − 1).
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::SeqCst)
+    }
+
+    /// Serve one NDJSON stream until EOF or a `shutdown` op, fanning
+    /// requests over `config.workers` worker threads. Returns `true` if a
+    /// `shutdown` op ended the stream (so a socket accept-loop knows to
+    /// stop). Malformed lines get an immediate `ok:false` response and do
+    /// not enter the queue.
+    pub fn serve_stream<R: BufRead, W: Write + Send>(&self, reader: R, writer: W) -> Result<bool> {
+        let queue = Queue::new();
+        let out: Mutex<W> = Mutex::new(writer);
+        let mut saw_shutdown = false;
+        std::thread::scope(|scope| -> Result<()> {
+            for _ in 0..self.config.workers.max(1) {
+                scope.spawn(|| self.worker_loop(&queue, &out));
+            }
+            for line in reader.lines() {
+                let line = line.context("reading request stream")?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match Request::parse(&line) {
+                    Ok(req) => {
+                        let stop = req.op == "shutdown";
+                        queue.push(req);
+                        if stop {
+                            saw_shutdown = true;
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        write_line(&out, &error_response(&Json::Null, &format!("{e:#}")));
+                    }
+                }
+            }
+            queue.close();
+            Ok(())
+        })?;
+        Ok(saw_shutdown)
+    }
+
+    /// Bind a Unix socket and serve connections sequentially until a
+    /// `shutdown` op arrives on one of them. A pre-existing socket file at
+    /// `path` is replaced.
+    pub fn serve_unix(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::remove_file(path).ok();
+        let listener = std::os::unix::net::UnixListener::bind(path)
+            .with_context(|| format!("binding unix socket {}", path.display()))?;
+        for conn in listener.incoming() {
+            let conn = conn.context("accepting serve connection")?;
+            let reader = std::io::BufReader::new(conn.try_clone().context("cloning socket")?);
+            if self.serve_stream(reader, conn)? {
+                break;
+            }
+        }
+        std::fs::remove_file(path).ok();
+        Ok(())
+    }
+
+    /// Process a batch of request lines in-process (tests, the
+    /// `ablation_serve` bench, one-shot scripting): coalescing applies
+    /// across the whole batch, and responses come back **in input order**
+    /// (unlike multi-worker streams). Each line yields exactly one
+    /// response line.
+    pub fn process_batch(&self, lines: &[String]) -> Vec<String> {
+        let parsed: Vec<Result<Request>> = lines.iter().map(|l| Request::parse(l)).collect();
+        let mut responses: Vec<Option<Json>> = (0..lines.len()).map(|_| None).collect();
+        for i in 0..parsed.len() {
+            if responses[i].is_some() {
+                continue;
+            }
+            match &parsed[i] {
+                Err(e) => responses[i] = Some(error_response(&Json::Null, &format!("{e:#}"))),
+                Ok(head) => match head.coalesce_key() {
+                    None => responses[i] = Some(self.handle_single(head)),
+                    Some(key) => {
+                        let mut idx = vec![i];
+                        for (j, later) in parsed.iter().enumerate().skip(i + 1) {
+                            if responses[j].is_none()
+                                && later
+                                    .as_ref()
+                                    .ok()
+                                    .and_then(Request::coalesce_key)
+                                    .as_deref()
+                                    == Some(key.as_str())
+                            {
+                                idx.push(j);
+                            }
+                        }
+                        let group: Vec<&Request> = idx
+                            .iter()
+                            .filter_map(|&j| parsed[j].as_ref().ok())
+                            .collect();
+                        let group_resps = self.handle_perm_group(&group);
+                        for (&j, resp) in idx.iter().zip(group_resps) {
+                            responses[j] = Some(resp);
+                        }
+                    }
+                },
+            }
+        }
+        responses
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|| error_response(&Json::Null, "internal: unprocessed slot")).dump())
+            .collect()
+    }
+
+    fn worker_loop<W: Write>(&self, queue: &Queue, out: &Mutex<W>) {
+        while let Some((head, mates)) = queue.next_job() {
+            if head.op == "shutdown" {
+                write_line(out, &ok_response(&head.id, "shutdown", BTreeMap::new(), &self.store));
+                queue.close();
+                continue;
+            }
+            if mates.is_empty() && head.coalesce_key().is_none() {
+                write_line(out, &self.handle_single(&head));
+            } else {
+                let mut group = vec![&head];
+                group.extend(mates.iter());
+                for resp in self.handle_perm_group(&group) {
+                    write_line(out, &resp);
+                }
+            }
+        }
+    }
+
+    /// One non-coalesced request → one response (never panics; errors
+    /// become `ok:false` responses).
+    fn handle_single(&self, req: &Request) -> Json {
+        let result = match req.op.as_str() {
+            "search" => self.op_search(req),
+            "perm" => self
+                .handle_perm_group(&[req])
+                .pop()
+                .ok_or_else(|| anyhow!("internal: empty perm group")),
+            "sweep" => self.op_sweep(req),
+            "stats" => self.op_stats(req),
+            "shutdown" => Ok(ok_response(&req.id, "shutdown", BTreeMap::new(), &self.store)),
+            other => Err(anyhow!("unknown op {other:?} (search|perm|sweep|stats|shutdown)")),
+        };
+        match result {
+            Ok(resp) => resp,
+            Err(e) => error_response(&req.id, &format!("{e:#}")),
+        }
+    }
+
+    /// A group of perm requests sharing one coalesce key → one jobs-engine
+    /// pass → one response per request, in group order. Also the single
+    /// perm path (group of one).
+    fn handle_perm_group(&self, group: &[&Request]) -> Vec<Json> {
+        match self.run_perm_group(group) {
+            Ok(resps) => resps,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                group.iter().map(|r| error_response(&r.id, &msg)).collect()
+            }
+        }
+    }
+
+    fn run_perm_group(&self, group: &[&Request]) -> Result<Vec<Json>> {
+        let head = group.first().ok_or_else(|| anyhow!("internal: empty perm group"))?;
+        let (ds, folds) = parse_dataset_and_folds(&head.body)?;
+        let lambda = head.body.get("lambda").and_then(Json::as_f64).unwrap_or(1.0);
+        let bias = truthy(&head.body, "bias_adjust");
+        let batch = head.body.get("batch").and_then(Json::as_usize).unwrap_or(64);
+        // Per-request anchors: the first draw of each request's RNG — the
+        // exact draw a standalone engine run with that seed would make.
+        let jobs: Vec<PermJob> = group
+            .iter()
+            .map(|r| {
+                let seed = r.body.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+                let n_perm = r.body.get("n_perm").and_then(Json::as_usize).unwrap_or(100);
+                PermJob { anchor: Rng::new(seed).next_u64(), n_perm }
+            })
+            .collect();
+        let (ctx, resolved) =
+            self.request_ctx(&head.body, ds.x.rows(), ds.x.cols(), usize::from(lambda > 0.0))?;
+        let strategy = BatchStrategy::new(batch.max(1), self.config.threads.max(1));
+        let results = if ds.n_classes == 2 {
+            analytic_binary_permutation_jobs_ctx(
+                &ds.x, &ds.labels, &folds, lambda, &jobs, bias, strategy, &ctx,
+            )?
+        } else {
+            analytic_multiclass_permutation_jobs_ctx(
+                &ds.x, &ds.labels, ds.n_classes, &folds, lambda, &jobs, strategy, &ctx,
+            )?
+        };
+        self.coalesced.fetch_add(group.len() as u64 - 1, Ordering::SeqCst);
+        Ok(group
+            .iter()
+            .zip(results)
+            .map(|(req, res)| {
+                let mut extra = BTreeMap::new();
+                extra.insert("observed".into(), Json::Num(res.observed));
+                extra.insert("p_value".into(), Json::Num(res.p_value));
+                extra.insert("n_perm".into(), Json::Num(res.null.len() as f64));
+                extra.insert("backend".into(), Json::Str(resolved.tag().to_string()));
+                extra.insert("coalesced".into(), Json::Num(group.len() as f64));
+                if truthy(&req.body, "return_null") {
+                    extra.insert(
+                        "null".into(),
+                        Json::Arr(res.null.iter().map(|&v| Json::Num(v)).collect()),
+                    );
+                }
+                ok_response(&req.id, "perm", extra, &self.store)
+            })
+            .collect())
+    }
+
+    fn op_search(&self, req: &Request) -> Result<Json> {
+        let (ds, folds) = parse_dataset_and_folds(&req.body)?;
+        let grid_vals: Vec<f64> = match req.body.get("grid").and_then(Json::as_arr) {
+            Some(arr) => arr.iter().filter_map(Json::as_f64).collect(),
+            None => vec![0.01, 0.1, 1.0, 10.0, 100.0],
+        };
+        if grid_vals.is_empty() {
+            bail!("search: \"grid\" must hold at least one number");
+        }
+        let by = match req.body.get("by").and_then(Json::as_str).unwrap_or("accuracy") {
+            "accuracy" => SelectBy::Accuracy,
+            "auc" => SelectBy::Auc,
+            "negmse" => SelectBy::NegMse,
+            other => bail!("search: unknown \"by\" {other:?} (accuracy|auc|negmse)"),
+        };
+        let positives = grid_vals.iter().filter(|&&l| l > 0.0).count();
+        let (ctx, resolved) =
+            self.request_ctx(&req.body, ds.x.rows(), ds.x.cols(), positives)?;
+        let search = if ds.n_classes == 2 {
+            let y = signed_codes(&ds.labels);
+            search_lambda_ctx(&ds.x, &y, &ds.labels, &folds, &grid_vals, by, &ctx)?
+        } else {
+            search_lambda_multiclass(&ds.x, &ds.labels, ds.n_classes, &folds, &grid_vals, &ctx)?
+        };
+        let mut extra = BTreeMap::new();
+        extra.insert("lambda".into(), Json::Num(search.best_lambda()));
+        extra.insert("score".into(), Json::Num(search.scores[search.best].score));
+        extra.insert("backend".into(), Json::Str(resolved.tag().to_string()));
+        extra.insert(
+            "scores".into(),
+            Json::Arr(
+                search
+                    .scores
+                    .iter()
+                    .map(|s| {
+                        let mut o = BTreeMap::new();
+                        o.insert("lambda".into(), Json::Num(s.lambda));
+                        o.insert("score".into(), Json::Num(s.score));
+                        Json::Obj(o)
+                    })
+                    .collect(),
+            ),
+        );
+        Ok(ok_response(&req.id, "search", extra, &self.store))
+    }
+
+    fn op_sweep(&self, req: &Request) -> Result<Json> {
+        let tag = req.body.get("exp").and_then(Json::as_str).unwrap_or("f3a").to_string();
+        let exp = Experiment::from_tag(&tag)
+            .ok_or_else(|| anyhow!("sweep: unknown experiment {tag:?} (f3a..f3d)"))?;
+        let scale = match req.body.get("scale").and_then(Json::as_str).unwrap_or("tiny") {
+            "paper" => SweepScale::paper(),
+            "medium" => SweepScale::medium(),
+            _ => SweepScale::tiny(),
+        };
+        let seed = req.body.get("seed").and_then(Json::as_usize).unwrap_or(2018) as u64;
+        let workers = req.body.get("workers").and_then(Json::as_usize).unwrap_or(1);
+        let backend_tag =
+            req.body.get("backend").and_then(Json::as_str).unwrap_or("primal").to_string();
+        let backend = GramBackend::from_tag(&backend_tag)
+            .ok_or_else(|| anyhow!("sweep: unknown backend {backend_tag:?}"))?;
+        let mut points = grid(exp, &scale);
+        if let Some(limit) = req.body.get("limit").and_then(Json::as_usize) {
+            points.truncate(limit);
+        }
+        for p in points.iter_mut() {
+            p.backend = backend;
+            p.threads = self.config.threads;
+            p.tile = self.config.tile.clone();
+            p.engine = PermEngine::Serial;
+        }
+        let sched = Scheduler::new(workers.max(1), seed, false);
+        let clock = crate::util::monotonic_clock();
+        let results = sched.run_clocked(&points, &clock, Some(&self.store));
+        let report = SweepReport::new(results);
+        let mut extra = BTreeMap::new();
+        extra.insert("points".into(), Json::Num(points.len() as f64));
+        extra.insert("tsv".into(), Json::Str(report.to_tsv()));
+        Ok(ok_response(&req.id, "sweep", extra, &self.store))
+    }
+
+    fn op_stats(&self, req: &Request) -> Result<Json> {
+        let s = self.store.stats();
+        let mut extra = BTreeMap::new();
+        extra.insert("hits".into(), Json::Num(s.hits as f64));
+        extra.insert("misses".into(), Json::Num(s.misses as f64));
+        extra.insert("evictions".into(), Json::Num(s.evictions as f64));
+        extra.insert("demotions".into(), Json::Num(s.demotions as f64));
+        extra.insert("entries".into(), Json::Num(s.entries as f64));
+        extra.insert("resident_bytes".into(), Json::Num(s.resident_bytes as f64));
+        extra.insert("coalesced".into(), Json::Num(self.coalesced() as f64));
+        if let Some(b) = s.budget_bytes {
+            extra.insert("budget_bytes".into(), Json::Num(b as f64));
+        }
+        Ok(ok_response(&req.id, "stats", extra, &self.store))
+    }
+
+    /// Build the per-request [`ComputeContext`]: the server's pool/tile/
+    /// store plus the request's backend policy resolved for its shape —
+    /// `auto` resolves through [`ComputeContext::resolve_for_grid`], so a
+    /// spill-configured server steers Auto λ-grids to the fully
+    /// streamable dual cache exactly like the CLI.
+    fn request_ctx(
+        &self,
+        body: &Json,
+        n: usize,
+        p: usize,
+        positives: usize,
+    ) -> Result<(ComputeContext<'_>, GramBackend)> {
+        let tag = body.get("backend").and_then(Json::as_str).unwrap_or("auto").to_string();
+        let policy = GramBackend::from_tag(&tag)
+            .ok_or_else(|| anyhow!("unknown backend {tag:?} (primal|dual|spectral|auto)"))?;
+        let base = ComputeContext::with_threads(self.config.threads)
+            .with_backend(policy)
+            .with_tile_policy(self.config.tile.clone())
+            .with_store(&self.store);
+        let resolved = base.resolve_for_grid(n, p, positives.max(1));
+        Ok((base.with_backend(resolved), resolved))
+    }
+}
+
+/// Parse the request's dataset + folds: synthetic
+/// (`{"data":{"synthetic":{n,p,c,seed}}}`) or inline
+/// (`{"data":{"x":[[…]],"labels":[…]}}`), folds `{"k":K,"seed":S}` —
+/// k-fold for binary, stratified for multi-class, drawn from
+/// `Rng::new(folds.seed)` (default 1) so equal fold specs reproduce.
+fn parse_dataset_and_folds(body: &Json) -> Result<(Dataset, Vec<Vec<usize>>)> {
+    let data = body.get("data").ok_or_else(|| anyhow!("request needs a \"data\" object"))?;
+    let ds = if let Some(syn) = data.get("synthetic") {
+        let n = syn
+            .get("n")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("synthetic data needs \"n\""))?;
+        let p = syn
+            .get("p")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("synthetic data needs \"p\""))?;
+        let c = syn.get("c").and_then(Json::as_usize).unwrap_or(2);
+        let seed = syn.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let spec = if c == 2 {
+            SyntheticSpec::binary(n, p)
+        } else {
+            SyntheticSpec::multiclass(n, p, c)
+        };
+        generate(&spec, &mut Rng::new(seed))
+    } else {
+        let rows = data
+            .get("x")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("data needs \"synthetic\" or inline \"x\" rows"))?;
+        let labels: Vec<usize> = data
+            .get("labels")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("inline data needs \"labels\""))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("labels must be non-negative integers")))
+            .collect::<Result<_>>()?;
+        let n = rows.len();
+        anyhow::ensure!(n > 0 && n == labels.len(), "inline x/labels shape mismatch");
+        let p = rows[0].as_arr().map_or(0, <[Json]>::len);
+        anyhow::ensure!(p > 0, "inline x rows must be non-empty arrays");
+        let mut x = Mat::zeros(n, p);
+        for (i, row) in rows.iter().enumerate() {
+            let vals = row.as_arr().ok_or_else(|| anyhow!("x row {i} is not an array"))?;
+            anyhow::ensure!(vals.len() == p, "x row {i} has {} cols, expected {p}", vals.len());
+            for (j, v) in vals.iter().enumerate() {
+                x[(i, j)] = v.as_f64().ok_or_else(|| anyhow!("x[{i}][{j}] is not a number"))?;
+            }
+        }
+        let c = data
+            .get("c")
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| labels.iter().max().map_or(2, |&m| (m + 1).max(2)));
+        Dataset { x, labels, n_classes: c }
+    };
+    let k = body
+        .get("folds")
+        .and_then(|f| f.get("k"))
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("request needs folds {{\"k\": K}}"))?;
+    anyhow::ensure!(k >= 2 && k <= ds.n(), "folds k={k} out of range for n={}", ds.n());
+    let mut frng = Rng::new(fold_seed(body));
+    let folds = if ds.n_classes == 2 {
+        kfold(ds.n(), k, &mut frng)
+    } else {
+        stratified_kfold(&ds.labels, k, &mut frng)
+    };
+    Ok((ds, folds))
+}
+
+/// `{"id":…, "ok":true, "op":…, …extra…, "cache":"h…/m…/e…/d…"}` — every
+/// success response carries the store's counter tag (satellite: counters
+/// surface in serve responses).
+fn ok_response(id: &Json, op: &str, extra: BTreeMap<String, Json>, store: &FactorStore) -> Json {
+    let mut obj = extra;
+    obj.insert("id".into(), id.clone());
+    obj.insert("ok".into(), Json::Bool(true));
+    obj.insert("op".into(), Json::Str(op.to_string()));
+    obj.insert("cache".into(), Json::Str(store.stats().tag()));
+    Json::Obj(obj)
+}
+
+/// `{"id":…, "ok":false, "error":…}`.
+fn error_response(id: &Json, msg: &str) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("id".into(), id.clone());
+    obj.insert("ok".into(), Json::Bool(false));
+    obj.insert("error".into(), Json::Str(msg.to_string()));
+    Json::Obj(obj)
+}
+
+fn write_line<W: Write>(out: &Mutex<W>, resp: &Json) {
+    let mut w = out.lock().unwrap_or_else(PoisonError::into_inner);
+    // A torn-down client is not a server error: drop the response.
+    let _ = writeln!(w, "{}", resp.dump());
+    let _ = w.flush();
+}
+
+/// A [`StoreStats`] counter snapshot rendered as the serve/TSV tag —
+/// exported for the bench harness so it does not reach into the store.
+pub fn stats_tag(stats: &StoreStats) -> String {
+    stats.tag()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(s: &str) -> String {
+        s.to_string()
+    }
+
+    fn parse_ok(resp: &str) -> Json {
+        let v = Json::parse(resp).unwrap();
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        v
+    }
+
+    #[test]
+    fn stats_shutdown_and_errors_roundtrip() {
+        let server = Server::new(ServeConfig::default());
+        let out = server.process_batch(&[
+            line(r#"{"id":1,"op":"stats"}"#),
+            line("not json"),
+            line(r#"{"id":2,"op":"frobnicate"}"#),
+            line(r#"{"id":3,"op":"shutdown"}"#),
+        ]);
+        assert_eq!(out.len(), 4);
+        let stats = parse_ok(&out[0]);
+        assert_eq!(stats.get("id").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(stats.get("hits").and_then(Json::as_f64), Some(0.0));
+        assert!(stats.get("cache").and_then(Json::as_str).is_some());
+        let bad = Json::parse(&out[1]).unwrap();
+        assert_eq!(bad.get("ok"), Some(&Json::Bool(false)));
+        let unknown = Json::parse(&out[2]).unwrap();
+        assert_eq!(unknown.get("ok"), Some(&Json::Bool(false)));
+        assert!(unknown.get("error").and_then(Json::as_str).is_some());
+        parse_ok(&out[3]);
+    }
+
+    #[test]
+    fn perm_requests_coalesce_and_match_standalone_runs() {
+        // Two queued perm requests on one key run as a single engine pass
+        // and still answer exactly what standalone servers answer.
+        let req_a = line(
+            r#"{"id":"a","op":"perm","data":{"synthetic":{"n":24,"p":12,"seed":5}},"folds":{"k":4},"lambda":1.0,"n_perm":8,"seed":100,"return_null":true}"#,
+        );
+        let req_b = line(
+            r#"{"id":"b","op":"perm","data":{"synthetic":{"n":24,"p":12,"seed":5}},"folds":{"k":4},"lambda":1.0,"n_perm":8,"seed":101,"return_null":true}"#,
+        );
+        let merged_server = Server::new(ServeConfig::default());
+        let merged = merged_server.process_batch(&[req_a.clone(), req_b.clone()]);
+        assert_eq!(merged_server.coalesced(), 1, "one rider in the merged pass");
+        let solo_a = Server::new(ServeConfig::default()).process_batch(&[req_a])[0].clone();
+        let solo_b = Server::new(ServeConfig::default()).process_batch(&[req_b])[0].clone();
+        for (got, want) in [(&merged[0], &solo_a), (&merged[1], &solo_b)] {
+            let g = parse_ok(got);
+            let w = parse_ok(want);
+            assert_eq!(g.get("observed"), w.get("observed"));
+            assert_eq!(g.get("p_value"), w.get("p_value"));
+            assert_eq!(g.get("null"), w.get("null"), "coalesced null must be bitwise equal");
+        }
+        let g0 = parse_ok(&merged[0]);
+        assert_eq!(g0.get("coalesced").and_then(Json::as_f64), Some(2.0));
+        // Requests on a *different* key must not join the group.
+        let other = Server::new(ServeConfig::default());
+        let out = other.process_batch(&[
+            line(
+                r#"{"op":"perm","data":{"synthetic":{"n":24,"p":12,"seed":5}},"folds":{"k":4},"lambda":1.0,"n_perm":4,"seed":1}"#,
+            ),
+            line(
+                r#"{"op":"perm","data":{"synthetic":{"n":24,"p":12,"seed":6}},"folds":{"k":4},"lambda":1.0,"n_perm":4,"seed":1}"#,
+            ),
+        ]);
+        assert_eq!(out.len(), 2);
+        assert_eq!(other.coalesced(), 0, "different data seeds must not merge");
+    }
+
+    #[test]
+    fn warm_store_serves_repeat_requests_from_cache() {
+        let server = Server::new(ServeConfig::default());
+        let req = line(
+            r#"{"op":"perm","data":{"synthetic":{"n":20,"p":30,"seed":9}},"folds":{"k":4},"lambda":0.5,"n_perm":5,"seed":7}"#,
+        );
+        let cold = server.process_batch(&[req.clone()]);
+        let cold_stats = server.store().stats();
+        assert!(cold_stats.misses >= 1 && cold_stats.hits == 0, "{cold_stats:?}");
+        let warm = server.process_batch(&[req]);
+        let warm_stats = server.store().stats();
+        assert!(warm_stats.hits >= 1, "repeat request must hit: {warm_stats:?}");
+        // Warm answers are byte-identical to cold ones (modulo the cache
+        // tag, which is allowed to move).
+        let c = parse_ok(&cold[0]);
+        let w = parse_ok(&warm[0]);
+        assert_eq!(c.get("observed"), w.get("observed"));
+        assert_eq!(c.get("p_value"), w.get("p_value"));
+    }
+
+    #[test]
+    fn search_op_selects_from_grid_and_reports_backend() {
+        let server = Server::new(ServeConfig::default());
+        let out = server.process_batch(&[line(
+            r#"{"op":"search","data":{"synthetic":{"n":30,"p":50,"seed":3}},"folds":{"k":5},"grid":[0.1,1.0,10.0]}"#,
+        )]);
+        let v = parse_ok(&out[0]);
+        let lambda = v.get("lambda").and_then(Json::as_f64).unwrap();
+        assert!([0.1, 1.0, 10.0].contains(&lambda), "winner {lambda} must come from the grid");
+        // P > N with ≥2 positive candidates → Auto resolves to spectral.
+        assert_eq!(v.get("backend").and_then(Json::as_str), Some("spectral"));
+        assert_eq!(v.get("scores").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
+        // multi-class arm
+        let out = server.process_batch(&[line(
+            r#"{"op":"search","data":{"synthetic":{"n":40,"p":10,"c":4,"seed":3}},"folds":{"k":4},"grid":[0.5,5.0]}"#,
+        )]);
+        let v = parse_ok(&out[0]);
+        assert!(v.get("lambda").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn inline_data_perm_runs_without_coalescing() {
+        let server = Server::new(ServeConfig::default());
+        let req = line(
+            r#"{"op":"perm","data":{"x":[[0.1,1.2],[1.3,-0.4],[0.5,0.9],[-1.1,0.2],[0.7,1.1],[1.2,-0.8]],"labels":[0,1,0,1,0,1]},"folds":{"k":3},"lambda":1.0,"n_perm":4,"seed":2}"#,
+        );
+        let out = server.process_batch(&[req.clone(), req]);
+        assert_eq!(out.len(), 2);
+        let a = parse_ok(&out[0]);
+        let b = parse_ok(&out[1]);
+        assert_eq!(a.get("observed"), b.get("observed"));
+        assert_eq!(server.coalesced(), 0, "inline data never merges");
+        assert_eq!(a.get("coalesced").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn sweep_op_returns_tsv_and_shares_the_store() {
+        let server = Server::new(ServeConfig::default());
+        let out = server.process_batch(&[line(
+            r#"{"op":"sweep","exp":"f3a","scale":"tiny","seed":2018,"limit":6}"#,
+        )]);
+        let v = parse_ok(&out[0]);
+        assert_eq!(v.get("points").and_then(Json::as_usize), Some(6));
+        let tsv = v.get("tsv").and_then(Json::as_str).unwrap();
+        assert_eq!(tsv.lines().count(), 7, "header + 6 rows");
+        assert!(tsv.starts_with("exp\t"), "{tsv}");
+        // The first six tiny f3a points share one (n,p,rep) dataset across
+        // fold counts → the scheduler's canonical-seed sharing must score
+        // real store hits.
+        let s = server.store().stats();
+        assert!(s.hits >= 1, "sweep points sharing a dataset must share factors: {s:?}");
+        // And the sweep is reproducible through a fresh server.
+        let again = Server::new(ServeConfig::default()).process_batch(&[line(
+            r#"{"op":"sweep","exp":"f3a","scale":"tiny","seed":2018,"limit":6}"#,
+        )]);
+        let v2 = parse_ok(&again[0]);
+        let strip_timing = |t: &str| -> Vec<String> {
+            t.lines()
+                .map(|l| {
+                    l.split('\t')
+                        .enumerate()
+                        .filter(|(i, _)| ![11, 12, 13, 14].contains(i))
+                        .map(|(_, f)| f.to_string())
+                        .collect::<Vec<_>>()
+                        .join("\t")
+                })
+                .collect()
+        };
+        assert_eq!(
+            strip_timing(tsv),
+            strip_timing(v2.get("tsv").and_then(Json::as_str).unwrap()),
+            "non-timing sweep columns must reproduce"
+        );
+    }
+
+    #[test]
+    fn serve_stream_answers_every_request_and_stops_on_shutdown() {
+        let server = Server::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+        let input = [
+            r#"{"id":1,"op":"stats"}"#,
+            r#"{"id":2,"op":"perm","data":{"synthetic":{"n":20,"p":8,"seed":4}},"folds":{"k":4},"lambda":1.0,"n_perm":3,"seed":11}"#,
+            r#"{"id":3,"op":"perm","data":{"synthetic":{"n":20,"p":8,"seed":4}},"folds":{"k":4},"lambda":1.0,"n_perm":3,"seed":12}"#,
+            r#"{"id":4,"op":"shutdown"}"#,
+            r#"{"id":5,"op":"stats"}"#,
+        ]
+        .join("\n");
+        let mut out: Vec<u8> = Vec::new();
+        let shut = server
+            .serve_stream(std::io::Cursor::new(input.into_bytes()), &mut out)
+            .unwrap();
+        assert!(shut, "shutdown op must be reported");
+        let text = String::from_utf8(out).unwrap();
+        let responses: Vec<Json> =
+            text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        // Requests after shutdown are never read: exactly 4 responses.
+        assert_eq!(responses.len(), 4, "{text}");
+        let mut ids: Vec<f64> =
+            responses.iter().filter_map(|r| r.get("id").and_then(Json::as_f64)).collect();
+        ids.sort_by(f64::total_cmp);
+        assert_eq!(ids, vec![1.0, 2.0, 3.0, 4.0]);
+        for r in &responses {
+            assert_eq!(r.get("ok"), Some(&Json::Bool(true)), "{text}");
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Deterministic fingerprints for [`super::ArtifactKey`].
+//!
+//! A factor artifact is reusable exactly when every input that determines
+//! its floats matches: the data bytes, the fold partition (for
+//! fold-dependent artifacts), the *resolved* backend, the tile policy, the
+//! preprocessing stage, and — for λ-specific artifacts — the ridge value.
+//! The fingerprints here hash those inputs with FNV-1a over the exact bit
+//! patterns (`f64::to_bits`), so two datasets collide only if they are
+//! byte-identical in the same shape — which is precisely when sharing the
+//! factor is bitwise-safe. No wall clock, no pointer identity, no entropy:
+//! the same inputs fingerprint identically across runs and machines.
+//!
+//! Cost: one `O(NP)` pass per lookup — noise next to the `O(N²P)`/`O(NP²)`
+//! Gram build a hit avoids.
+
+use crate::linalg::Mat;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a stream of `u64` words (each mixed byte-by-byte).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+}
+
+impl Fnv {
+    /// Fresh hasher at the FNV-1a offset basis.
+    pub fn new() -> Fnv {
+        Fnv::default()
+    }
+
+    /// Mix one 64-bit word (little-endian byte order).
+    pub fn word(mut self, w: u64) -> Fnv {
+        let mut h = self.0;
+        for b in w.to_le_bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+        self
+    }
+
+    /// Mix a string (length-prefixed so `"ab","c"` ≠ `"a","bc"`).
+    pub fn str(mut self, s: &str) -> Fnv {
+        self = self.word(s.len() as u64);
+        let mut h = self.0;
+        for b in s.bytes() {
+            h = (h ^ u64::from(b)).wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+        self
+    }
+
+    /// The digest.
+    pub fn finish(self) -> u64 {
+        self.0
+    }
+}
+
+/// Fingerprint a matrix: shape plus every entry's exact bit pattern, in
+/// row-major order. Bitwise-equal matrices of equal shape — and only those
+/// — fingerprint equal (up to the 64-bit collision bound).
+pub fn fingerprint_mat(m: &Mat) -> u64 {
+    let mut h = Fnv::new().word(m.rows() as u64).word(m.cols() as u64);
+    for v in m.as_slice() {
+        h = h.word(v.to_bits());
+    }
+    h.finish()
+}
+
+/// Fingerprint a label vector (`f64` labels, exact bit patterns).
+pub fn fingerprint_labels(labels: &[f64]) -> u64 {
+    let mut h = Fnv::new().word(labels.len() as u64);
+    for v in labels {
+        h = h.word(v.to_bits());
+    }
+    h.finish()
+}
+
+/// Fingerprint a fold partition: fold count, then each fold's length and
+/// test indices in order. Permuting folds or indices changes the digest —
+/// fold-dependent artifacts are only safe to share for the identical
+/// partition.
+pub fn fingerprint_folds(folds: &[Vec<usize>]) -> u64 {
+    let mut h = Fnv::new().word(folds.len() as u64);
+    for fold in folds {
+        h = h.word(fold.len() as u64);
+        for &i in fold {
+            h = h.word(i as u64);
+        }
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_fingerprint_is_deterministic_and_shape_sensitive() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let b = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let c = Mat::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(fingerprint_mat(&a), fingerprint_mat(&b));
+        assert_ne!(fingerprint_mat(&a), fingerprint_mat(&c));
+        let mut d = a.clone();
+        d[(2, 1)] += 1e-9;
+        assert_ne!(fingerprint_mat(&a), fingerprint_mat(&d));
+    }
+
+    #[test]
+    fn negative_zero_is_distinct_from_positive_zero() {
+        // The cache key must match *bitwise* reuse semantics: -0.0 and 0.0
+        // are == but have different bit patterns, and a backend could in
+        // principle produce different signs downstream.
+        let a = Mat::from_fn(1, 1, |_, _| 0.0);
+        let b = Mat::from_fn(1, 1, |_, _| -0.0);
+        assert_ne!(fingerprint_mat(&a), fingerprint_mat(&b));
+    }
+
+    #[test]
+    fn fold_fingerprint_is_order_sensitive() {
+        let f1 = vec![vec![0usize, 1], vec![2, 3]];
+        let f2 = vec![vec![2usize, 3], vec![0, 1]];
+        let f3 = vec![vec![0usize, 1], vec![2, 3]];
+        assert_eq!(fingerprint_folds(&f1), fingerprint_folds(&f3));
+        assert_ne!(fingerprint_folds(&f1), fingerprint_folds(&f2));
+    }
+
+    #[test]
+    fn label_fingerprint_separates_length_prefixes() {
+        assert_ne!(fingerprint_labels(&[1.0, 2.0]), fingerprint_labels(&[1.0, 2.0, 0.0]));
+    }
+
+    #[test]
+    fn str_mixing_is_length_prefixed() {
+        let a = Fnv::new().str("ab").str("c").finish();
+        let b = Fnv::new().str("a").str("bc").finish();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,666 @@
+//! # `FactorStore` — a keyed, budgeted cache of factor artifacts
+//!
+//! The paper's speed-up comes from building one Gram/factor structure and
+//! amortising it across folds, λ grids, and permutations. Before this
+//! module, that reuse logic was re-implemented ad hoc at every site:
+//! `search_lambda_ctx` threaded a [`GramCache`] by hand,
+//! `nested_cv_ctx` built its own [`SharedNestedGram`], each perm engine
+//! rebuilt the hat from scratch, and the sweep coordinator rebuilt
+//! everything per grid point. [`FactorStore`] centralises it: a keyed map
+//!
+//! ```text
+//! ArtifactKey (data fp × fold fp × backend × tile × prep × λ) → Artifact
+//! ```
+//!
+//! with an explicit memory budget, LRU eviction that *demotes* dense Gram
+//! artifacts into the existing [`PanelStore`] spill layer before dropping
+//! them, and hit/miss/evict/demote counters surfaced in `fastcv sweep`'s
+//! TSV and `fastcv serve` responses.
+//!
+//! ## Bitwise contract
+//!
+//! A store hit returns the **same floats** a fresh build would produce:
+//! the key covers every input that determines the artifact's bytes — the
+//! exact data bit patterns ([`key::fingerprint_mat`]), the *resolved*
+//! backend, the tile policy, the preprocessing stage, and (for λ-specific
+//! artifacts) the ridge bits. Demotion to the spill layer preserves this:
+//! [`PanelStore::write_mat`] is a pure byte round-trip and the spilled hat
+//! paths are bitwise-identical to the dense Cholesky paths (the `spill_*`
+//! property suites) — so evict-to-spill + readmit round-trips bitwise.
+//! The one corner: a demoted `Primal` cache has no LU fallback, so a
+//! λ = 0 fit on a *singular* Gram errors out of core instead of falling
+//! back (same rule as [`TilePolicy::Spill`] itself).
+//!
+//! The store is strictly **opt-in**: a
+//! [`ComputeContext`](crate::fastcv::context::ComputeContext) without one
+//! (the default) takes the historical build paths untouched, so every
+//! pre-existing entry point stays bitwise-unchanged.
+//!
+//! ## Concurrency
+//!
+//! All state sits behind one poison-tolerant [`Mutex`]; builds run
+//! *outside* the lock (two threads may race to build the same key — the
+//! first insert wins, the loser's work is dropped, both get the same
+//! `Arc`). Recency is a logical clock, not wall time, so eviction order
+//! is deterministic for a deterministic access sequence.
+
+pub mod key;
+
+use crate::fastcv::bigdata::StreamingHat;
+use crate::fastcv::context::ComputeContext;
+use crate::fastcv::hat::{GramBackend, GramCache, SharedNestedGram};
+use crate::linalg::{Mat, PanelStore, TilePolicy};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// What kind of factor an [`ArtifactKey`] names. Part of the key so the
+/// same dataset can carry e.g. a λ-grid [`GramCache`] *and* a nested-CV
+/// [`SharedNestedGram`] side by side.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// A λ-free [`GramCache`] (primal/dual/spectral, dense or spilled).
+    Gram,
+    /// A [`SharedNestedGram`] (full-data uncentered `XXᵀ`).
+    Nested,
+    /// A λ-specific [`StreamingHat`] (§4.5 big-data hat state).
+    Streaming,
+}
+
+/// Preprocessing stage baked into the cached factor. Currently only `Raw`
+/// exists; the ROADMAP's fold-safe z-score/min-max stage will extend this
+/// enum, and keying on it now means those artifacts can never collide with
+/// raw ones.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Prep {
+    /// No preprocessing — the factor is built from the data as given.
+    Raw,
+}
+
+/// The full reuse key: two requests may share a cached factor **iff** their
+/// keys are equal. Every field is an input that determines the factor's
+/// float bytes — see the module docs for the bitwise contract.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ArtifactKey {
+    /// Which artifact family (Gram / nested / streaming).
+    pub kind: ArtifactKind,
+    /// FNV-1a fingerprint of the data matrix ([`key::fingerprint_mat`]).
+    pub data: u64,
+    /// Fold-partition fingerprint ([`key::fingerprint_folds`]); `0` for
+    /// fold-free artifacts (all three current kinds — the hat machinery is
+    /// fold-free by construction, that is the paper's point).
+    pub folds: u64,
+    /// The **resolved** backend tag ([`GramBackend::tag`]) — never `auto`,
+    /// callers resolve first so a cache built as `dual` is never served to
+    /// a `spectral` request.
+    pub backend: &'static str,
+    /// Tile-policy tag ([`TilePolicy::tag`]). Policies differing only in
+    /// spill *directory* share a tag (the directory moves bytes, never
+    /// floats).
+    pub tile: String,
+    /// Preprocessing stage.
+    pub prep: Prep,
+    /// `λ.to_bits()` for λ-specific artifacts ([`StreamingHat`]); `0` for
+    /// λ-free caches, which exist precisely to serve every λ.
+    pub lambda_bits: u64,
+}
+
+impl ArtifactKey {
+    /// Key for a λ-free [`GramCache`] of `x` under a resolved `backend`
+    /// and tile policy.
+    pub fn gram(x: &Mat, backend: GramBackend, tile: &TilePolicy) -> ArtifactKey {
+        ArtifactKey {
+            kind: ArtifactKind::Gram,
+            data: key::fingerprint_mat(x),
+            folds: 0,
+            backend: backend.tag(),
+            tile: tile.tag(),
+            prep: Prep::Raw,
+            lambda_bits: 0,
+        }
+    }
+
+    /// Key for the backend-free [`SharedNestedGram`] of `x` (the raw
+    /// uncentered `XXᵀ` every outer fold downdates from).
+    pub fn nested(x: &Mat, tile: &TilePolicy) -> ArtifactKey {
+        ArtifactKey {
+            kind: ArtifactKind::Nested,
+            data: key::fingerprint_mat(x),
+            folds: 0,
+            backend: "nested",
+            tile: tile.tag(),
+            prep: Prep::Raw,
+            lambda_bits: 0,
+        }
+    }
+
+    /// Key for a λ-specific [`StreamingHat`] of `x` under a resolved
+    /// `backend` and tile policy.
+    pub fn streaming(
+        x: &Mat,
+        lambda: f64,
+        backend: GramBackend,
+        tile: &TilePolicy,
+    ) -> ArtifactKey {
+        ArtifactKey {
+            kind: ArtifactKind::Streaming,
+            data: key::fingerprint_mat(x),
+            folds: 0,
+            backend: backend.tag(),
+            tile: tile.tag(),
+            prep: Prep::Raw,
+            lambda_bits: lambda.to_bits(),
+        }
+    }
+}
+
+/// A cached factor, shared by `Arc` — a hit and the build that produced it
+/// alias the same allocation.
+#[derive(Clone)]
+pub enum Artifact {
+    /// λ-free Gram cache (primal/dual/spectral, dense or spilled).
+    Gram(Arc<GramCache>),
+    /// Shared nested-CV Gram.
+    Nested(Arc<SharedNestedGram>),
+    /// λ-specific streaming hat state.
+    Streaming(Arc<StreamingHat>),
+}
+
+impl Artifact {
+    /// Approximate resident RAM of the artifact in bytes (disk-backed
+    /// panels count ~0 — that is what demotion buys).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Artifact::Gram(g) => g.resident_bytes(),
+            Artifact::Nested(g) => g.resident_bytes(),
+            Artifact::Streaming(s) => s.resident_bytes(),
+        }
+    }
+}
+
+/// One cache slot: the artifact, its byte cost, and a logical-clock stamp
+/// for LRU ordering.
+struct Entry {
+    artifact: Artifact,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    entries: BTreeMap<ArtifactKey, Entry>,
+    /// Logical access clock — monotone per store operation, no wall time,
+    /// so eviction order is a pure function of the access sequence.
+    clock: u64,
+    budget: Option<usize>,
+    /// Demotion target: spill directory + panel tile height. Without one,
+    /// over-budget entries are dropped instead of demoted.
+    spill: Option<(PathBuf, usize)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    demotions: u64,
+}
+
+/// Counter snapshot returned by [`FactorStore::stats`]; the sweep TSV's
+/// `cache` column and `fastcv serve`'s `stats` op render
+/// [`StoreStats::tag`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that had to build.
+    pub misses: u64,
+    /// Entries dropped outright under budget pressure.
+    pub evictions: u64,
+    /// Dense Gram entries demoted into the spill layer under budget
+    /// pressure (kept servable, resident cost ≈ the `X̃` working set).
+    pub demotions: u64,
+    /// Live entries.
+    pub entries: usize,
+    /// Total resident bytes across live entries.
+    pub resident_bytes: usize,
+    /// The configured budget (`None` = unbounded).
+    pub budget_bytes: Option<usize>,
+}
+
+impl StoreStats {
+    /// Compact `h<hits>/m<misses>/e<evictions>/d<demotions>` tag for TSV
+    /// columns and serve responses.
+    pub fn tag(&self) -> String {
+        format!("h{}/m{}/e{}/d{}", self.hits, self.misses, self.evictions, self.demotions)
+    }
+
+    /// Counter-wise difference against an earlier snapshot (for per-point
+    /// deltas in the sweep TSV). Entry/byte gauges are taken from `self`.
+    pub fn since(&self, earlier: &StoreStats) -> StoreStats {
+        StoreStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+            demotions: self.demotions - earlier.demotions,
+            entries: self.entries,
+            resident_bytes: self.resident_bytes,
+            budget_bytes: self.budget_bytes,
+        }
+    }
+}
+
+/// The keyed factor cache. See the module docs for semantics; see
+/// [`gram_for_ctx`] / [`nested_for_ctx`] for how the `_ctx` entry points
+/// route through it.
+pub struct FactorStore {
+    inner: Mutex<Inner>,
+}
+
+impl std::fmt::Debug for FactorStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("FactorStore")
+            .field("entries", &s.entries)
+            .field("resident_bytes", &s.resident_bytes)
+            .field("budget_bytes", &s.budget_bytes)
+            .field("counters", &s.tag())
+            .finish()
+    }
+}
+
+impl FactorStore {
+    /// An unbounded store (no budget, no spill demotion).
+    pub fn new() -> FactorStore {
+        FactorStore {
+            inner: Mutex::new(Inner {
+                entries: BTreeMap::new(),
+                clock: 0,
+                budget: None,
+                spill: None,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+                demotions: 0,
+            }),
+        }
+    }
+
+    /// A store that keeps at most `budget_bytes` of resident factor state;
+    /// beyond it, LRU entries are demoted (see [`FactorStore::with_spill`])
+    /// or evicted.
+    pub fn with_budget(budget_bytes: usize) -> FactorStore {
+        let store = FactorStore::new();
+        store.lock().budget = Some(budget_bytes);
+        store
+    }
+
+    /// Configure a spill directory + panel tile height as the demotion
+    /// target (builder style): under budget pressure, dense primal/dual
+    /// Gram caches are rewritten as disk-backed [`PanelStore`] panels —
+    /// still servable, bitwise-identical hats — before anything is dropped.
+    pub fn with_spill(self, dir: PathBuf, tile: usize) -> FactorStore {
+        self.lock().spill = Some((dir, tile.max(1)));
+        self
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> StoreStats {
+        let g = self.lock();
+        StoreStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            demotions: g.demotions,
+            entries: g.entries.len(),
+            resident_bytes: resident_total(&g),
+            budget_bytes: g.budget,
+        }
+    }
+
+    /// Fetch the [`GramCache`] under `key`, building it with `build` on a
+    /// miss. The returned `Arc` is shared with the cache slot.
+    pub fn get_or_build_gram(
+        &self,
+        key: &ArtifactKey,
+        build: impl FnOnce() -> Result<GramCache>,
+    ) -> Result<Arc<GramCache>> {
+        match self.fetch(key, || Ok(Artifact::Gram(Arc::new(build()?))))? {
+            Artifact::Gram(g) => Ok(g),
+            _ => bail!("factor store: key {key:?} holds a non-Gram artifact"),
+        }
+    }
+
+    /// Fetch the [`SharedNestedGram`] under `key`, building on a miss.
+    pub fn get_or_build_nested(
+        &self,
+        key: &ArtifactKey,
+        build: impl FnOnce() -> Result<SharedNestedGram>,
+    ) -> Result<Arc<SharedNestedGram>> {
+        match self.fetch(key, || Ok(Artifact::Nested(Arc::new(build()?))))? {
+            Artifact::Nested(g) => Ok(g),
+            _ => bail!("factor store: key {key:?} holds a non-Nested artifact"),
+        }
+    }
+
+    /// Fetch the [`StreamingHat`] under `key`, building on a miss.
+    pub fn get_or_build_streaming(
+        &self,
+        key: &ArtifactKey,
+        build: impl FnOnce() -> Result<StreamingHat>,
+    ) -> Result<Arc<StreamingHat>> {
+        match self.fetch(key, || Ok(Artifact::Streaming(Arc::new(build()?))))? {
+            Artifact::Streaming(s) => Ok(s),
+            _ => bail!("factor store: key {key:?} holds a non-Streaming artifact"),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // A poisoned store only means another thread panicked mid-insert;
+        // the map itself is always structurally valid, so recover.
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The single lookup-or-build path. The build runs **outside** the
+    /// lock; on a racing double-build the first insert wins and both
+    /// callers receive the winner's `Arc`.
+    fn fetch(
+        &self,
+        key: &ArtifactKey,
+        build: impl FnOnce() -> Result<Artifact>,
+    ) -> Result<Artifact> {
+        {
+            let mut g = self.lock();
+            g.clock += 1;
+            let now = g.clock;
+            let hit = g.entries.get_mut(key).map(|e| {
+                e.last_used = now;
+                e.artifact.clone()
+            });
+            match hit {
+                Some(a) => {
+                    g.hits += 1;
+                    return Ok(a);
+                }
+                None => g.misses += 1,
+            }
+        }
+        let built = build()?;
+        let bytes = built.resident_bytes();
+        let mut g = self.lock();
+        g.clock += 1;
+        let now = g.clock;
+        let raced = g.entries.get_mut(key).map(|e| {
+            e.last_used = now;
+            e.artifact.clone()
+        });
+        if let Some(a) = raced {
+            return Ok(a);
+        }
+        g.entries
+            .insert(key.clone(), Entry { artifact: built.clone(), bytes, last_used: now });
+        enforce_budget(&mut g, key);
+        Ok(built)
+    }
+}
+
+fn resident_total(g: &Inner) -> usize {
+    g.entries.values().map(|e| e.bytes).sum::<usize>()
+}
+
+/// Demote or evict LRU entries until the store fits its budget. The entry
+/// under `protect` (the one being returned right now) is never touched, so
+/// a single over-budget artifact still gets served.
+fn enforce_budget(g: &mut Inner, protect: &ArtifactKey) {
+    let Some(budget) = g.budget else { return };
+    while resident_total(g) > budget {
+        let victim = g
+            .entries
+            .iter()
+            .filter(|(k, _)| *k != protect)
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone());
+        let Some(k) = victim else { return };
+        let demoted = match (&g.spill, g.entries.get(&k).map(|e| &e.artifact)) {
+            (Some((dir, tile)), Some(Artifact::Gram(gc))) => demote_gram(gc, dir, *tile),
+            _ => None,
+        };
+        match demoted {
+            Some(spilled) => {
+                let bytes = spilled.resident_bytes();
+                if let Some(e) = g.entries.get_mut(&k) {
+                    e.artifact = Artifact::Gram(Arc::new(spilled));
+                    e.bytes = bytes;
+                }
+                g.demotions += 1;
+            }
+            None => {
+                g.entries.remove(&k);
+                g.evictions += 1;
+            }
+        }
+    }
+}
+
+/// Rewrite a dense primal/dual [`GramCache`] as disk-backed [`PanelStore`]
+/// panels. `None` when the variant has nothing dense to demote (spectral —
+/// its eigenvector matrix cannot spill — or already-spilled arms) or on
+/// spill-store IO failure (the caller then evicts instead). The panel
+/// bytes equal the dense bytes ([`PanelStore::write_mat`] is a pure
+/// round-trip), so readmitted hats are bitwise the dense Cholesky path's.
+fn demote_gram(gc: &GramCache, dir: &Path, tile: usize) -> Option<GramCache> {
+    match gc {
+        GramCache::Primal { xa, g0 } => {
+            let mut store = PanelStore::new(g0.rows(), tile, Some(dir)).ok()?;
+            store.write_mat(g0).ok()?;
+            Some(GramCache::PrimalSpill {
+                xa: xa.clone(),
+                g0: store,
+                spill_dir: Some(dir.to_path_buf()),
+            })
+        }
+        GramCache::Dual { xa, kc } => {
+            let mut store = PanelStore::new(kc.rows(), tile, Some(dir)).ok()?;
+            store.write_mat(kc).ok()?;
+            Some(GramCache::DualSpill {
+                xa: xa.clone(),
+                kc: store,
+                spill_dir: Some(dir.to_path_buf()),
+            })
+        }
+        _ => None,
+    }
+}
+
+/// The store-aware [`GramCache`] fetch every `_ctx` reuse site routes
+/// through: without a store on the context this is exactly the historical
+/// [`GramCache::build_tiled`] call (bitwise-unchanged paths); with one, the
+/// build is keyed on (data fp × resolved backend × tile × prep) and shared
+/// across requests. `backend` must be pre-resolved (never `Auto`) — the
+/// callers resolve via [`ComputeContext::resolve_for_grid`] /
+/// [`GramBackend::resolve`] exactly as before.
+pub fn gram_for_ctx(
+    x: &Mat,
+    backend: GramBackend,
+    ctx: &ComputeContext<'_>,
+) -> Result<Arc<GramCache>> {
+    match ctx.store() {
+        None => Ok(Arc::new(GramCache::build_tiled(x, backend, ctx.pool(), ctx.tile_policy())?)),
+        Some(store) => {
+            let key = ArtifactKey::gram(x, backend, &ctx.tile_policy());
+            store
+                .get_or_build_gram(&key, || {
+                    GramCache::build_tiled(x, backend, ctx.pool(), ctx.tile_policy())
+                })
+                .context("factor store gram fetch")
+        }
+    }
+}
+
+/// Store-aware [`SharedNestedGram`] fetch — the nested-CV sibling of
+/// [`gram_for_ctx`], used by
+/// [`crate::fastcv::lambda_search::nested_cv_ctx`] when the context both
+/// shares nested Grams and carries a store.
+pub fn nested_for_ctx(x: &Mat, ctx: &ComputeContext<'_>) -> Result<Arc<SharedNestedGram>> {
+    match ctx.store() {
+        None => Ok(Arc::new(SharedNestedGram::build_tiled(x, ctx.pool(), ctx.tile_policy())?)),
+        Some(store) => {
+            let key = ArtifactKey::nested(x, &ctx.tile_policy());
+            store
+                .get_or_build_nested(&key, || {
+                    SharedNestedGram::build_tiled(x, ctx.pool(), ctx.tile_policy())
+                })
+                .context("factor store nested-gram fetch")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastcv::hat::HatMatrix;
+    use crate::util::rng::Rng;
+
+    fn random_x(rng: &mut Rng, n: usize, p: usize) -> Mat {
+        Mat::from_fn(n, p, |_, _| rng.gauss())
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fastcv_store_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn keys_discriminate_every_field() {
+        let mut rng = Rng::new(11);
+        let x = random_x(&mut rng, 8, 20);
+        let y = random_x(&mut rng, 8, 20);
+        let k1 = ArtifactKey::gram(&x, GramBackend::Dual, &TilePolicy::Off);
+        assert_eq!(k1, ArtifactKey::gram(&x, GramBackend::Dual, &TilePolicy::Off));
+        assert_ne!(k1, ArtifactKey::gram(&y, GramBackend::Dual, &TilePolicy::Off));
+        assert_ne!(k1, ArtifactKey::gram(&x, GramBackend::Spectral, &TilePolicy::Off));
+        assert_ne!(k1, ArtifactKey::gram(&x, GramBackend::Dual, &TilePolicy::Rows(4)));
+        assert_ne!(k1, ArtifactKey::nested(&x, &TilePolicy::Off));
+        let s1 = ArtifactKey::streaming(&x, 0.5, GramBackend::Dual, &TilePolicy::Off);
+        let s2 = ArtifactKey::streaming(&x, 1.5, GramBackend::Dual, &TilePolicy::Off);
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn store_served_factor_bitwise_matches_fresh() {
+        // Satellite property (a): a factor served from the store is
+        // bitwise-identical to one built fresh — for every backend family.
+        let mut rng = Rng::new(21);
+        for backend in [GramBackend::Primal, GramBackend::Dual, GramBackend::Spectral] {
+            let x = random_x(&mut rng, 12, 30);
+            let fresh = GramCache::build(&x, backend, None).hat(0.7).unwrap();
+            let store = FactorStore::new();
+            let ctx = ComputeContext::serial().with_backend(backend).with_store(&store);
+            let first = gram_for_ctx(&x, backend, &ctx).unwrap().hat(0.7).unwrap();
+            let served = gram_for_ctx(&x, backend, &ctx).unwrap().hat(0.7).unwrap();
+            assert_eq!(first.h.as_slice(), fresh.h.as_slice(), "{backend:?} miss-built");
+            assert_eq!(served.h.as_slice(), fresh.h.as_slice(), "{backend:?} cache-served");
+            let s = store.stats();
+            assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1), "{backend:?}: {s:?}");
+        }
+    }
+
+    #[test]
+    fn store_served_hat_ctx_bitwise_matches_storeless() {
+        // The HatMatrix::build_ctx seam (all four perm engines sit on it):
+        // storeless vs store-carrying contexts produce byte-equal hats.
+        let mut rng = Rng::new(22);
+        let x = random_x(&mut rng, 10, 25);
+        let plain = ComputeContext::serial();
+        let store = FactorStore::new();
+        let cached = ComputeContext::serial().with_store(&store);
+        for lambda in [0.3, 2.0] {
+            let a = HatMatrix::build_ctx(&x, lambda, &plain).unwrap();
+            let b = HatMatrix::build_ctx(&x, lambda, &cached).unwrap();
+            let c = HatMatrix::build_ctx(&x, lambda, &cached).unwrap();
+            assert_eq!(a.h.as_slice(), b.h.as_slice(), "λ={lambda} miss");
+            assert_eq!(a.h.as_slice(), c.h.as_slice(), "λ={lambda} hit");
+        }
+        // Both λ share one resolved backend on this shape → one entry.
+        let s = store.stats();
+        assert_eq!(s.entries, 1, "{s:?}");
+        assert!(s.hits >= 1, "{s:?}");
+    }
+
+    #[test]
+    fn store_evict_to_spill_readmit_roundtrips_bitwise() {
+        // Satellite property (b): budget pressure demotes the LRU dense
+        // Gram into disk panels; the readmitted artifact serves hats
+        // byte-equal to the dense build, and nothing was dropped.
+        let dir = tmp_dir("demote");
+        let mut rng = Rng::new(23);
+        let xa_mat = random_x(&mut rng, 10, 30); // dual: xa 10×31 + kc 10×10
+        let xb_mat = random_x(&mut rng, 10, 30);
+        let fresh = GramCache::build(&xa_mat, GramBackend::Dual, None).hat(0.9).unwrap();
+        let bytes_dense = (10 * 31 + 10 * 10) * 8; // per dense dual entry
+        let bytes_spilled = 10 * 31 * 8; // xa only once panels hit disk
+        let store = FactorStore::with_budget(bytes_dense + bytes_spilled + 64)
+            .with_spill(dir.clone(), 4);
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Dual)
+            .with_store(&store);
+        gram_for_ctx(&xa_mat, GramBackend::Dual, &ctx).unwrap();
+        gram_for_ctx(&xb_mat, GramBackend::Dual, &ctx).unwrap(); // over budget → demote A
+        let s = store.stats();
+        assert_eq!((s.demotions, s.evictions, s.entries), (1, 0, 2), "{s:?}");
+        assert!(s.resident_bytes <= bytes_dense + bytes_spilled, "{s:?}");
+        // Readmit A: a *hit* on the demoted entry, bitwise the dense hat.
+        let readmitted = gram_for_ctx(&xa_mat, GramBackend::Dual, &ctx).unwrap();
+        assert!(
+            matches!(&*readmitted, GramCache::DualSpill { .. }),
+            "entry should be serving from the spill layer"
+        );
+        let hat = readmitted.hat(0.9).unwrap();
+        assert_eq!(hat.h.as_slice(), fresh.h.as_slice(), "evict-to-spill + readmit");
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses), (1, 2), "{s:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_without_spill_evicts_outright_and_rebuilds() {
+        let mut rng = Rng::new(24);
+        let xa_mat = random_x(&mut rng, 10, 30);
+        let xb_mat = random_x(&mut rng, 10, 30);
+        let bytes_dense = (10 * 31 + 10 * 10) * 8;
+        let store = FactorStore::with_budget(bytes_dense + 64); // fits exactly one
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Dual)
+            .with_store(&store);
+        gram_for_ctx(&xa_mat, GramBackend::Dual, &ctx).unwrap();
+        gram_for_ctx(&xb_mat, GramBackend::Dual, &ctx).unwrap(); // evicts A
+        let s = store.stats();
+        assert_eq!((s.evictions, s.demotions, s.entries), (1, 0, 1), "{s:?}");
+        // A comes back as a fresh build (miss), still bitwise right.
+        let rebuilt = gram_for_ctx(&xa_mat, GramBackend::Dual, &ctx).unwrap();
+        let fresh = GramCache::build(&xa_mat, GramBackend::Dual, None).hat(0.4).unwrap();
+        assert_eq!(rebuilt.hat(0.4).unwrap().h.as_slice(), fresh.h.as_slice());
+        assert_eq!(store.stats().misses, 3);
+    }
+
+    #[test]
+    fn protected_entry_survives_even_over_budget() {
+        let mut rng = Rng::new(25);
+        let x = random_x(&mut rng, 10, 30);
+        let store = FactorStore::with_budget(8); // smaller than any artifact
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Dual)
+            .with_store(&store);
+        let got = gram_for_ctx(&x, GramBackend::Dual, &ctx).unwrap();
+        assert_eq!(got.n(), 10);
+        // The just-inserted entry is protected; nothing to evict.
+        let s = store.stats();
+        assert_eq!((s.entries, s.evictions), (1, 0), "{s:?}");
+    }
+
+    #[test]
+    fn stats_since_subtracts_counters() {
+        let a = StoreStats { hits: 5, misses: 3, evictions: 1, demotions: 1, ..Default::default() };
+        let b = StoreStats { hits: 2, misses: 3, evictions: 0, demotions: 1, ..Default::default() };
+        let d = a.since(&b);
+        assert_eq!((d.hits, d.misses, d.evictions, d.demotions), (3, 0, 1, 0));
+        assert_eq!(d.tag(), "h3/m0/e1/d0");
+    }
+}

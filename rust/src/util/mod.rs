@@ -18,6 +18,18 @@ pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
     (out, t0.elapsed().as_secs_f64())
 }
 
+/// A monotonic wall-clock: seconds since this call, as a closure.
+///
+/// Numeric modules are banned from reading `Instant` directly (lint L2 —
+/// clocks are a nondeterminism source), so timing-aware entry points like
+/// [`crate::coordinator::Scheduler::run_clocked`] take a
+/// `&(dyn Fn() -> f64 + Sync)` injected by the caller. The CLI and the
+/// serve daemon hand in this clock; tests hand in counters or `|| 0.0`.
+pub fn monotonic_clock() -> impl Fn() -> f64 + Send + Sync {
+    let t0 = Instant::now();
+    move || t0.elapsed().as_secs_f64()
+}
+
 /// Geometrically spaced grid from `lo` to `hi` inclusive with `steps`
 /// points, deduplicated after rounding to integers — mirrors the paper's
 /// "10 to 1000 in 40 logarithmic steps" feature grid.
@@ -85,5 +97,13 @@ mod tests {
         let (v, dt) = timed(|| 21 * 2);
         assert_eq!(v, 42);
         assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn monotonic_clock_is_nondecreasing() {
+        let clock = monotonic_clock();
+        let a = clock();
+        let b = clock();
+        assert!(a >= 0.0 && b >= a);
     }
 }

@@ -132,6 +132,21 @@ fn l5_accepts_rustdoc_directly_above() {
     assert!(lint.diagnostics.is_empty(), "{:?}", lint.diagnostics);
 }
 
+#[test]
+fn l5_widens_to_all_public_items_in_store_and_serve() {
+    let src = "pub struct Store { pub n: usize }\n\
+               pub fn lookup(s: &Store) -> usize { s.n }\n\
+               pub(crate) fn internal() {}\n\
+               /// Documented enum.\n\
+               pub enum Kind { A }\n";
+    // Outside the doc-all dirs only `_ctx` functions are checked.
+    assert!(lines_of(src, "rust/src/fastcv/api.rs", Rule::Doc).is_empty());
+    // Under store/ and serve/ the undocumented struct and fn are flagged;
+    // pub(crate) and the documented enum are not.
+    assert_eq!(lines_of(src, "rust/src/store/api.rs", Rule::Doc), vec![1, 2]);
+    assert_eq!(lines_of(src, "rust/src/serve/api.rs", Rule::Doc), vec![1, 2]);
+}
+
 // ---------------------------------------------------------------- suppressions
 
 #[test]

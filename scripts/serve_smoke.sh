@@ -1,0 +1,83 @@
+#!/usr/bin/env bash
+# End-to-end smoke test for the `fastcv serve` daemon (docs/SERVE.md).
+#
+# 1. Runs the Fig. 3a sweep twice: once through the CLI with a shared
+#    FactorStore (`fastcv sweep --cache`), once as a `sweep` request to a
+#    `fastcv serve` daemon over stdin/stdout NDJSON.
+# 2. Diffs the deterministic TSV columns (everything except the wall-clock
+#    fields t_std / t_ana / t_point / rel_eff and the run-local cache
+#    counters) — the daemon must answer bit-identically to the CLI.
+# 3. Sends two identical permutation requests and asserts they answer the
+#    same observed accuracy / p-value (the coalescing determinism contract).
+# 4. Asserts the daemon's store reported at least one cache hit.
+#
+#   scripts/serve_smoke.sh                 # builds target/release/fastcv if absent
+#   FASTCV_BIN=path/to/fastcv scripts/serve_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN="${FASTCV_BIN:-target/release/fastcv}"
+if [ ! -x "$BIN" ]; then
+  echo "== serve_smoke: building release binary =="
+  cargo build --release
+fi
+if ! command -v python3 >/dev/null 2>&1; then
+  echo "serve_smoke: python3 is required to parse NDJSON responses" >&2
+  exit 1
+fi
+
+TMP="$(mktemp -d "${TMPDIR:-/tmp}/fastcv-serve-smoke.XXXXXX")"
+trap 'rm -rf "$TMP"' EXIT
+SEED=2018
+
+echo "== serve_smoke: CLI reference sweep (f3a tiny, --cache) =="
+"$BIN" sweep --exp f3a --scale tiny --seed "$SEED" --workers 1 --cache \
+  --out "$TMP/cli" >/dev/null
+
+echo "== serve_smoke: daemon sweep + coalesced perms over stdin =="
+cat > "$TMP/requests.ndjson" <<EOF
+{"id":1,"op":"sweep","exp":"f3a","scale":"tiny","seed":$SEED,"workers":1}
+{"id":2,"op":"perm","data":{"synthetic":{"n":24,"p":12,"seed":5}},"folds":{"k":4},"lambda":1.0,"n_perm":8,"seed":100}
+{"id":3,"op":"perm","data":{"synthetic":{"n":24,"p":12,"seed":5}},"folds":{"k":4},"lambda":1.0,"n_perm":8,"seed":100}
+{"id":4,"op":"stats"}
+{"id":5,"op":"shutdown"}
+EOF
+"$BIN" serve --workers 1 < "$TMP/requests.ndjson" > "$TMP/responses.ndjson"
+
+python3 - "$TMP" <<'PY'
+import json, pathlib, sys
+
+tmp = pathlib.Path(sys.argv[1])
+resp = {}
+for raw in (tmp / "responses.ndjson").read_text().splitlines():
+    if raw.strip():
+        r = json.loads(raw)
+        resp[int(r["id"])] = r
+for i in (1, 2, 3, 4, 5):
+    assert i in resp, f"missing response id {i}: got {sorted(resp)}"
+    assert resp[i].get("ok") is True, f"response {i} not ok: {resp[i]}"
+
+(tmp / "serve.tsv").write_text(resp[1]["tsv"])
+
+for field in ("observed", "p_value", "n_perm", "backend"):
+    a, b = resp[2][field], resp[3][field]
+    assert a == b, f"identical perm requests disagree on {field}: {a} != {b}"
+
+stats = resp[4]
+assert stats["hits"] >= 1, f"expected >= 1 factor-store hit, got {stats}"
+print(
+    f"serve_smoke: {len(resp)} responses; store hits={stats['hits']:.0f} "
+    f"misses={stats['misses']:.0f}; perm observed={resp[2]['observed']:.4f} "
+    f"p={resp[2]['p_value']:.4f}"
+)
+PY
+
+# Deterministic TSV columns: 1-11 = exp..rep, 16-17 = acc_std/acc_ana.
+# Excluded: 12-15 are wall-clock (t_std, t_ana, t_point, rel_eff) and 18 is
+# the run-local cache counter column.
+echo "== serve_smoke: diff CLI sweep vs daemon sweep (non-timing columns) =="
+cut -f1-11,16,17 "$TMP/cli/sweep_f3a.tsv" > "$TMP/cli.cut"
+cut -f1-11,16,17 "$TMP/serve.tsv" > "$TMP/serve.cut"
+diff -u "$TMP/cli.cut" "$TMP/serve.cut"
+
+echo "serve_smoke: OK"
