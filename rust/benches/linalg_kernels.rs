@@ -1,11 +1,24 @@
 //! L3 hot-path microbenchmarks: gemm / syrk / Cholesky / LU throughput.
 //! These are the kernels both CV arms sit on; the §Perf pass tracks them.
 //!
+//! The per-ISA arms time the same canonical-order kernels under every ISA
+//! the host supports (scalar reference plus AVX2/NEON when detected — see
+//! `linalg::dispatch` and docs/BACKENDS.md "Kernel dispatch") and write the
+//! timings to `BENCH_gemm.json` (`$FASTCV_BENCH_OUT` or the working
+//! directory) with per-arm `speedup_vs_scalar` for the perf trajectory.
+//! Bitwise equality across arms is pinned elsewhere (`kernel_conformance_*`);
+//! this file only times them.
+//!
 //! Run: `cargo bench --bench linalg_kernels`
+
+use std::collections::BTreeMap;
 
 use fastcv::bench::Bench;
 use fastcv::fastcv::bigdata::SparseProjection;
-use fastcv::linalg::{matmul, matmul_pool, syrk_t, syrk_tiled, Cholesky, Lu, Mat};
+use fastcv::linalg::{
+    matmul, matmul_isa, matmul_pool, syrk_t, syrk_t_isa, syrk_tiled, Cholesky, Isa, Lu, Mat,
+};
+use fastcv::util::json::Json;
 use fastcv::util::rng::Rng;
 use fastcv::util::table::{fdur, Table};
 use fastcv::util::threadpool::ThreadPool;
@@ -115,5 +128,66 @@ fn main() {
         fdur(t),
         gflops(2.0 * proj.density() * (p * q * n) as f64, t),
     ]);
+
+    // ---- per-ISA dispatch arms (BENCH_gemm.json) ----
+    // Scalar is always first in `Isa::supported()`, so each shape's scalar
+    // median is recorded before the vector arms that normalise against it.
+    let isas = Isa::supported();
+    let mut isa_rows: Vec<Json> = Vec::new();
+    for &s in sizes {
+        let a = Mat::from_fn(s, s, |_, _| rng.gauss());
+        let b = Mat::from_fn(s, s, |_, _| rng.gauss());
+        let tall = Mat::from_fn(2 * s, s, |_, _| rng.gauss());
+        let gemm_flops = 2.0 * (s * s * s) as f64;
+        let syrk_flops = (2 * s) as f64 * (s * s) as f64;
+        let mut scalar_secs: BTreeMap<&str, f64> = BTreeMap::new();
+        for &isa in &isas {
+            for (kernel, secs, flops, size) in [
+                (
+                    "gemm",
+                    bench.run(|| matmul_isa(&a, &b, isa)).median,
+                    gemm_flops,
+                    format!("{s}x{s}x{s}"),
+                ),
+                (
+                    "syrk",
+                    bench.run(|| syrk_t_isa(&tall, isa)).median,
+                    syrk_flops,
+                    format!("{}x{s}", 2 * s),
+                ),
+            ] {
+                let scalar = *scalar_secs.entry(kernel).or_insert(secs);
+                let speedup = scalar / secs;
+                table.row(vec![
+                    format!("{kernel} [{isa}]"),
+                    size.clone(),
+                    fdur(secs),
+                    gflops(flops, secs),
+                ]);
+                let mut row = BTreeMap::new();
+                row.insert("kernel".to_string(), Json::Str(kernel.to_string()));
+                row.insert("isa".to_string(), Json::Str(isa.to_string()));
+                row.insert("size".to_string(), Json::Str(size));
+                row.insert("seconds".to_string(), Json::Num(secs));
+                row.insert("gflops".to_string(), Json::Num(flops / secs / 1e9));
+                row.insert("speedup_vs_scalar".to_string(), Json::Num(speedup));
+                isa_rows.push(Json::Obj(row));
+            }
+        }
+    }
     println!("{}", table.render());
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("simd_kernels".to_string()));
+    doc.insert(
+        "isas".to_string(),
+        Json::Arr(isas.iter().map(|i| Json::Str(i.to_string())).collect()),
+    );
+    doc.insert("rows".to_string(), Json::Arr(isa_rows));
+    let out_dir = std::env::var("FASTCV_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = format!("{out_dir}/BENCH_gemm.json");
+    match std::fs::write(&path, Json::Obj(doc).dump()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -33,9 +33,10 @@
 //! float path (agreement is tested at tolerance, not bitwise).
 
 use super::hat::GramBackend;
-use crate::linalg::TilePolicy;
+use crate::linalg::{dispatch, Isa, TilePolicy};
 use crate::store::FactorStore;
 use crate::util::threadpool::ThreadPool;
+use anyhow::Result;
 
 /// An owned-or-borrowed pool handle.
 enum PoolRef<'p> {
@@ -129,6 +130,27 @@ impl<'p> ComputeContext<'p> {
     pub fn with_store(mut self, store: &'p FactorStore) -> Self {
         self.store = Some(store);
         self
+    }
+
+    /// Pin the `linalg` microkernel ISA (builder style) — the
+    /// [`crate::linalg::dispatch`] knob. Unlike the other builder knobs
+    /// this override is **process-wide** (kernel dispatch is a single
+    /// global table, like `FASTCV_FORCE_ISA`), installed here so CLI/API
+    /// callers configure everything through one context value; the last
+    /// context to set it wins. Errors on an ISA the CPU cannot run. Like
+    /// the pool/tile/store knobs it never moves a result: every ISA's
+    /// kernels are bitwise-identical (the `kernel_conformance_*`
+    /// contract), so this is a wall-clock/testing lever only. Surfaced on
+    /// the CLI as `--isa scalar|avx2|neon`.
+    pub fn with_isa(self, isa: Isa) -> Result<Self> {
+        dispatch::force_isa(Some(isa))?;
+        Ok(self)
+    }
+
+    /// The ISA the next kernel call under this (or any) context will run —
+    /// reads the process-wide dispatch state.
+    pub fn isa(&self) -> Isa {
+        dispatch::active()
     }
 
     /// The lent [`FactorStore`], if any.
@@ -240,6 +262,19 @@ mod tests {
         assert!(std::ptr::eq(ctx.store().unwrap(), &store));
         let dbg = format!("{ctx:?}");
         assert!(dbg.contains("store: true"), "{dbg}");
+    }
+
+    #[test]
+    fn isa_knob_rejects_unsupported_and_reads_active() {
+        // The reject path writes no global state, so this cannot race the
+        // dispatch force_scope tests. (The install path is pinned by
+        // dispatch::tests and the kernel-conformance suite.)
+        for isa in [Isa::Avx2, Isa::Neon] {
+            if !isa.is_supported() {
+                assert!(ComputeContext::serial().with_isa(isa).is_err(), "{isa}");
+            }
+        }
+        assert!(ComputeContext::serial().isa().is_supported());
     }
 
     #[test]

@@ -1116,4 +1116,105 @@ mod tests {
             assert_eq!(default_batched.null, golden.null, "multi batched Auto default vs golden");
         }
     }
+
+    #[test]
+    fn backend_golden_null_distributions_pinned_under_forced_isa_dispatch() {
+        // SIMD kernel dispatch (`linalg::dispatch`) must be invisible to
+        // every recorded null: the vector microkernels pin the scalar
+        // accumulation order bit-for-bit (vector lanes are *distinct*
+        // output elements, multiply-then-add with no FMA contraction,
+        // ascending index order), so running the full perm engines under a
+        // forced SIMD ISA must reproduce the forced-scalar golden exactly.
+        // This is the end-to-end leg of the kernel-conformance contract:
+        // Gram builds, Cholesky factor/solves, hat applications, and the
+        // batched pool path all under the overridden kernel table.
+        //
+        // `force_scope` holds a process-wide lock, so each engine run is
+        // wrapped in a closure that acquires the guard, runs, and drops it
+        // before the next ISA is forced.
+        use crate::fastcv::perm::{
+            analytic_binary_permutation_backend, analytic_multiclass_permutation_backend,
+        };
+        use crate::linalg::dispatch::{self, Isa};
+
+        // One wide binary shape (Auto -> Dual: N×N Gram + dual hat) and one
+        // tall multiclass shape (Auto -> Primal: P×P Gram + primal solves)
+        // — together they route through every kernel family the dispatch
+        // table overrides.
+        let run_binary = |isa: Isa| {
+            let mut rng = Rng::new(411);
+            let (x, labels) = blobs(&mut rng, 8, 2, 40, 2.0);
+            let folds = stratified_kfold(&labels, 4, &mut rng);
+            // `isa` only ever comes from `Isa::supported()`, so the force
+            // cannot bail.
+            let _g = dispatch::force_scope(isa).unwrap();
+            let serial = analytic_binary_permutation_backend(
+                &x, &labels, &folds, 1.0, 10, false, &mut Rng::new(1645), GramBackend::Auto,
+            )
+            .unwrap();
+            let batched = analytic_binary_permutation_batched_backend(
+                &x,
+                &labels,
+                &folds,
+                1.0,
+                10,
+                false,
+                &mut Rng::new(1645),
+                BatchStrategy::new(4, 2),
+                GramBackend::Auto,
+            )
+            .unwrap();
+            (serial, batched)
+        };
+        let run_multi = |isa: Isa| {
+            let mut rng = Rng::new(412);
+            let (x, labels) = blobs(&mut rng, 9, 3, 5, 2.5);
+            let folds = stratified_kfold(&labels, 3, &mut rng);
+            let _g = dispatch::force_scope(isa).unwrap();
+            let serial = analytic_multiclass_permutation_backend(
+                &x, &labels, 3, &folds, 1.0, 6, &mut Rng::new(4745), GramBackend::Auto,
+            )
+            .unwrap();
+            let batched = analytic_multiclass_permutation_batched_backend(
+                &x,
+                &labels,
+                3,
+                &folds,
+                1.0,
+                6,
+                &mut Rng::new(4745),
+                BatchStrategy::new(3, 2),
+                GramBackend::Auto,
+            )
+            .unwrap();
+            (serial, batched)
+        };
+
+        let (bin_serial_gold, bin_batched_gold) = run_binary(Isa::Scalar);
+        let (multi_serial_gold, multi_batched_gold) = run_multi(Isa::Scalar);
+        // The batched engines already agree with serial under scalar — the
+        // cross-ISA assertions below then pin all four corners at once.
+        assert_eq!(bin_batched_gold.null, bin_serial_gold.null, "scalar batched vs serial");
+        assert_eq!(multi_batched_gold.null, multi_serial_gold.null, "scalar multi batched");
+
+        for isa in Isa::supported() {
+            if isa == Isa::Scalar {
+                continue;
+            }
+            let (serial, batched) = run_binary(isa);
+            assert_eq!(serial.null, bin_serial_gold.null, "binary serial under forced {isa}");
+            assert_eq!(
+                serial.observed, bin_serial_gold.observed,
+                "binary observed under forced {isa}"
+            );
+            assert_eq!(batched.null, bin_batched_gold.null, "binary batched under forced {isa}");
+            let (serial, batched) = run_multi(isa);
+            assert_eq!(serial.null, multi_serial_gold.null, "multi serial under forced {isa}");
+            assert_eq!(
+                serial.observed, multi_serial_gold.observed,
+                "multi observed under forced {isa}"
+            );
+            assert_eq!(batched.null, multi_batched_gold.null, "multi batched under forced {isa}");
+        }
+    }
 }

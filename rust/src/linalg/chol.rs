@@ -5,6 +5,7 @@
 //! N > P), so Cholesky is the preferred factorisation on both the standard
 //! and the analytical path.
 
+use super::dispatch;
 use super::gemm::dot;
 use super::mat::Mat;
 use crate::util::threadpool::ThreadPool;
@@ -175,6 +176,7 @@ impl Cholesky {
         let n = self.n();
         assert_eq!(x.rows(), n);
         let nrhs = x.cols();
+        let kr = dispatch::active_kernels();
         // forward substitution across all RHS columns (row-major friendly).
         for i in 0..n {
             // x.row(i) -= sum_k<i L[i,k] * x.row(k); then /= L[i,i]
@@ -186,9 +188,7 @@ impl Cholesky {
                 let (head, tail) = x.as_mut_slice().split_at_mut(i * nrhs);
                 let xk = &head[k * nrhs..(k + 1) * nrhs];
                 let xi = &mut tail[..nrhs];
-                for c in 0..nrhs {
-                    xi[c] -= lik * xk[c];
-                }
+                (kr.axpy_sub)(xi, lik, xk);
             }
             let d = self.l[(i, i)];
             for v in x.row_mut(i) {
@@ -205,9 +205,7 @@ impl Cholesky {
                 let (head, tail) = x.as_mut_slice().split_at_mut(k * nrhs);
                 let xi = &mut head[i * nrhs..(i + 1) * nrhs];
                 let xk = &tail[..nrhs];
-                for c in 0..nrhs {
-                    xi[c] -= lki * xk[c];
-                }
+                (kr.axpy_sub)(xi, lki, xk);
             }
             let d = self.l[(i, i)];
             for v in x.row_mut(i) {
@@ -249,6 +247,7 @@ impl Cholesky {
         assert_eq!(b.rows(), n);
         let nrhs = b.cols();
         let mut x = b.clone();
+        let kr = dispatch::active_kernels();
         for i in 0..n {
             for k in 0..i {
                 let lik = self.l[(i, k)];
@@ -258,9 +257,7 @@ impl Cholesky {
                 let (head, tail) = x.as_mut_slice().split_at_mut(i * nrhs);
                 let xk = &head[k * nrhs..(k + 1) * nrhs];
                 let xi = &mut tail[..nrhs];
-                for c in 0..nrhs {
-                    xi[c] -= lik * xk[c];
-                }
+                (kr.axpy_sub)(xi, lik, xk);
             }
             let d = self.l[(i, i)];
             for v in x.row_mut(i) {
@@ -276,6 +273,7 @@ impl Cholesky {
         assert_eq!(b.rows(), n);
         let nrhs = b.cols();
         let mut x = b.clone();
+        let kr = dispatch::active_kernels();
         for i in (0..n).rev() {
             for k in (i + 1)..n {
                 let lki = self.l[(k, i)];
@@ -285,9 +283,7 @@ impl Cholesky {
                 let (head, tail) = x.as_mut_slice().split_at_mut(k * nrhs);
                 let xi = &mut head[i * nrhs..(i + 1) * nrhs];
                 let xk = &tail[..nrhs];
-                for c in 0..nrhs {
-                    xi[c] -= lki * xk[c];
-                }
+                (kr.axpy_sub)(xi, lki, xk);
             }
             let d = self.l[(i, i)];
             for v in x.row_mut(i) {

@@ -1,0 +1,356 @@
+//! Runtime ISA dispatch for the `linalg` hot core.
+//!
+//! Every backend shipped so far — primal/dual/spectral hats, the tiled and
+//! spilled Gram engines, the permutation batchers — ultimately bottoms out
+//! in the packed GEMM/syrk microkernels of [`crate::linalg::gemm`]. This
+//! module selects, **once per process and overridably**, which concrete
+//! microkernel implementations those entry points run:
+//!
+//! * [`Isa::Scalar`] — the portable reference kernels (`MR=4 × NR=8`
+//!   register tile, 4-partial [`dot`](crate::linalg::dot)). These define
+//!   the *canonical accumulation order*; everything else must reproduce
+//!   them bit-for-bit.
+//! * [`Isa::Avx2`] — x86-64 AVX2 kernels (`MR=6 × NR=8`, 4-lane `f64`
+//!   vectors; `linalg::simd_avx2`), selected when the CPU reports AVX2 at
+//!   startup.
+//! * [`Isa::Neon`] — aarch64 NEON kernels (`MR=6 × NR=8`, 2-lane `f64`
+//!   vectors; `linalg::simd_neon`); NEON is baseline on aarch64.
+//!
+//! ## The cross-ISA bitwise contract
+//!
+//! The repo's determinism story (docs/LINTS.md, the `backend_*`/`tiled_*`/
+//! `spill_*` suites) pins *one* accumulation order per output element. The
+//! SIMD kernels keep that order by construction:
+//!
+//! * vector lanes are always **distinct output elements** (GEMM columns,
+//!   syrk band entries, solve RHS columns, `dot`'s four stride partials) —
+//!   never splits of one element's sum;
+//! * every lane performs the scalar sequence `acc = acc + a·b` with a
+//!   rounded multiply **then** a rounded add — fused multiply-add is
+//!   deliberately not used anywhere (FMA's single rounding would change
+//!   results);
+//! * remainder lanes come from the zero-padded pack buffers and are never
+//!   written back.
+//!
+//! Hence every `(kernel, ISA)` pair is bitwise-identical to the scalar
+//! reference — enforced by the `kernel_conformance_*` differential suite
+//! (`rust/tests/kernel_conformance.rs`) and end-to-end by the golden
+//! perm-engine null distributions under forced dispatch. The ISA knob is a
+//! pure wall-clock choice, exactly like the pool/tile/spill knobs.
+//!
+//! ## Selection and overrides
+//!
+//! Priority, highest first:
+//!
+//! 1. [`force_isa`] / [`force_scope`] — programmatic override (the CLI
+//!    `--isa` flag, [`ComputeContext::with_isa`](crate::fastcv::context::ComputeContext::with_isa),
+//!    and the conformance/golden tests);
+//! 2. the `FASTCV_FORCE_ISA` environment variable (`scalar` | `avx2` |
+//!    `neon`), read once — how CI's ISA matrix drives each dispatch path;
+//! 3. runtime CPU-feature detection, widest supported ISA wins.
+//!
+//! A forced ISA the CPU cannot run is a loud error ([`force_isa`] returns
+//! `Err`; a bad `FASTCV_FORCE_ISA` value panics at first kernel use) — a
+//! test or bench leg that silently fell back to scalar would claim coverage
+//! it does not have.
+
+use crate::linalg::mat::Mat;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// An instruction-set choice for the `linalg` microkernels. All variants
+/// exist on every architecture (so tags always parse); [`Isa::supported`]
+/// says which ones this CPU can actually run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Isa {
+    /// Portable scalar reference kernels — the canonical accumulation order.
+    Scalar,
+    /// x86-64 AVX2 (4×f64 lanes), runtime-detected.
+    Avx2,
+    /// aarch64 NEON (2×f64 lanes), baseline on aarch64.
+    Neon,
+}
+
+impl Isa {
+    /// Stable lowercase tag (`scalar` | `avx2` | `neon`) — the CLI `--isa`
+    /// and `FASTCV_FORCE_ISA` vocabulary, also used in bench labels.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a [`Isa::tag`] string.
+    pub fn from_tag(tag: &str) -> Option<Isa> {
+        match tag {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// The ISAs this CPU can run, narrowest first (`Scalar` is always
+    /// first; the widest entry is what auto-detection picks). Conformance
+    /// tests iterate this to exercise every dispatch path reachable on the
+    /// host.
+    pub fn supported() -> Vec<Isa> {
+        let mut v = vec![Isa::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(Isa::Avx2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        v.push(Isa::Neon);
+        v
+    }
+
+    /// Is this ISA runnable on the current CPU?
+    pub fn is_supported(&self) -> bool {
+        Self::supported().contains(self)
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// The per-ISA kernel table: register-tile geometry plus the primitive
+/// inner loops every `linalg` entry point routes through. All function
+/// pointers in one table produce bitwise-identical results to the
+/// [`SCALAR`] table's — the table only chooses *how fast* the canonical
+/// order runs.
+pub struct Kernels {
+    /// Which ISA this table implements.
+    pub isa: Isa,
+    /// GEMM register-tile rows (`MR`): height of the packed A slivers.
+    pub gemm_mr: usize,
+    /// GEMM register-tile columns (`NR`): width of the packed B slivers.
+    pub gemm_nr: usize,
+    /// The `MR×NR` GEMM micro-kernel over packed slivers
+    /// (`C[ci.., cj..] += alpha·A·B`, masked to `mr×nr` live outputs).
+    pub micro: fn(&mut Mat, &[f64], &[f64], usize, usize, usize, usize, usize, f64),
+    /// `acc[t] += a · x[t]` in ascending `t` (mul-then-add per element) —
+    /// the syrk band update, `ger`, and `matvec_t` inner loop.
+    pub axpy: fn(&mut [f64], f64, &[f64]),
+    /// `acc[t] -= a · x[t]` in ascending `t` (mul-then-sub per element) —
+    /// the triangular-solve RHS update loops.
+    pub axpy_sub: fn(&mut [f64], f64, &[f64]),
+    /// Dot product in the canonical 4-partial order
+    /// (`((s0+s1)+s2)+s3` over stride-4 partials, sequential tail) — the
+    /// Cholesky/LU recurrence inner product.
+    pub dot: fn(&[f64], &[f64]) -> f64,
+}
+
+/// The scalar reference table — the canonical accumulation order itself.
+static SCALAR: Kernels = Kernels {
+    isa: Isa::Scalar,
+    gemm_mr: crate::linalg::gemm::SCALAR_MR,
+    gemm_nr: crate::linalg::gemm::SCALAR_NR,
+    micro: crate::linalg::gemm::micro_kernel_scalar,
+    axpy: crate::linalg::gemm::axpy_scalar,
+    axpy_sub: crate::linalg::gemm::axpy_sub_scalar,
+    dot: crate::linalg::gemm::dot_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    isa: Isa::Avx2,
+    gemm_mr: crate::linalg::simd_avx2::MR,
+    gemm_nr: crate::linalg::simd_avx2::NR,
+    micro: crate::linalg::simd_avx2::micro_kernel,
+    axpy: crate::linalg::simd_avx2::axpy,
+    axpy_sub: crate::linalg::simd_avx2::axpy_sub,
+    dot: crate::linalg::simd_avx2::dot,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    isa: Isa::Neon,
+    gemm_mr: crate::linalg::simd_neon::MR,
+    gemm_nr: crate::linalg::simd_neon::NR,
+    micro: crate::linalg::simd_neon::micro_kernel,
+    axpy: crate::linalg::simd_neon::axpy,
+    axpy_sub: crate::linalg::simd_neon::axpy_sub,
+    dot: crate::linalg::simd_neon::dot,
+};
+
+/// The kernel table for an ISA. The caller must hold a supported `isa`
+/// (see [`Isa::supported`]); an unsupported one falls back to the scalar
+/// table on a foreign architecture build, which keeps this total without
+/// `unsafe` feature assumptions — [`force_isa`] is the validating gate.
+pub fn kernels(isa: Isa) -> &'static Kernels {
+    match isa {
+        Isa::Scalar => &SCALAR,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => &AVX2,
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => &NEON,
+        #[allow(unreachable_patterns)] // arms above are cfg-gated
+        _ => &SCALAR,
+    }
+}
+
+/// `0` = no override; otherwise `Isa as u8 + 1`.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+/// Serialises [`force_scope`] users (tests) so nested scopes can't
+/// interleave their restore writes.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn isa_to_u8(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 1,
+        Isa::Avx2 => 2,
+        Isa::Neon => 3,
+    }
+}
+
+fn isa_from_u8(v: u8) -> Option<Isa> {
+    match v {
+        1 => Some(Isa::Scalar),
+        2 => Some(Isa::Avx2),
+        3 => Some(Isa::Neon),
+        _ => None,
+    }
+}
+
+/// `FASTCV_FORCE_ISA`, parsed once. An unknown tag or an ISA the CPU
+/// cannot run is a configuration error and must fail loudly — a CI matrix
+/// leg that silently re-anchored to scalar would claim coverage it does
+/// not have.
+fn env_force() -> Option<Isa> {
+    static ENV: OnceLock<Option<Isa>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        let tag = std::env::var("FASTCV_FORCE_ISA").ok()?;
+        let isa = Isa::from_tag(&tag).unwrap_or_else(|| {
+            // lint:allow(panic, reason = "FASTCV_FORCE_ISA misconfiguration must fail loudly, not silently fall back and fake ISA coverage")
+            panic!("FASTCV_FORCE_ISA={tag:?} is not a known ISA (scalar|avx2|neon)")
+        });
+        if !isa.is_supported() {
+            // lint:allow(panic, reason = "forcing an ISA this CPU cannot run must fail loudly, not silently fall back and fake ISA coverage")
+            panic!("FASTCV_FORCE_ISA={tag} is not supported on this CPU (supported: {:?})", Isa::supported());
+        }
+        Some(isa)
+    })
+}
+
+/// The ISA the next kernel call will run: programmatic override, else
+/// `FASTCV_FORCE_ISA`, else the widest CPU-supported ISA. Cheap (one
+/// relaxed atomic load after first use).
+pub fn active() -> Isa {
+    if let Some(f) = isa_from_u8(FORCED.load(Ordering::Relaxed)) {
+        return f;
+    }
+    if let Some(e) = env_force() {
+        return e;
+    }
+    static DETECTED: OnceLock<Isa> = OnceLock::new();
+    *DETECTED.get_or_init(|| *Isa::supported().last().unwrap_or(&Isa::Scalar))
+}
+
+/// The kernel table for [`active`].
+pub fn active_kernels() -> &'static Kernels {
+    kernels(active())
+}
+
+/// Install (or with `None`, clear) a process-wide ISA override — the CLI
+/// `--isa` flag and `ComputeContext::with_isa` land here. Errors on an ISA
+/// this CPU cannot run. Takes effect for every subsequent kernel call in
+/// the process; results are bitwise-unchanged by construction (the
+/// conformance contract), so this is a wall-clock/testing knob only.
+pub fn force_isa(isa: Option<Isa>) -> Result<()> {
+    if let Some(isa) = isa {
+        if !isa.is_supported() {
+            bail!(
+                "ISA {} is not supported on this CPU (supported: {})",
+                isa.tag(),
+                Isa::supported().iter().map(Isa::tag).collect::<Vec<_>>().join(", ")
+            );
+        }
+    }
+    FORCED.store(isa.map_or(0, isa_to_u8), Ordering::Relaxed);
+    Ok(())
+}
+
+/// A scoped ISA override for tests: forces `isa` until the guard drops,
+/// then restores the previous override. Holds a global lock so concurrent
+/// `force_scope` users serialise (results could never differ — the bitwise
+/// contract — but an interleaved restore could leave the wrong override
+/// installed).
+pub fn force_scope(isa: Isa) -> Result<ForcedIsa> {
+    let lock = FORCE_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let prev = FORCED.load(Ordering::Relaxed);
+    force_isa(Some(isa))?;
+    Ok(ForcedIsa { prev, _lock: lock })
+}
+
+/// Guard returned by [`force_scope`]; restores the previous override on
+/// drop.
+pub struct ForcedIsa {
+    prev: u8,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for ForcedIsa {
+    fn drop(&mut self) {
+        FORCED.store(self.prev, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_round_trip() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::from_tag(isa.tag()), Some(isa));
+        }
+        assert_eq!(Isa::from_tag("sse9"), None);
+    }
+
+    #[test]
+    fn scalar_is_always_supported_and_first() {
+        let sup = Isa::supported();
+        assert_eq!(sup.first(), Some(&Isa::Scalar));
+        assert!(Isa::Scalar.is_supported());
+    }
+
+    #[test]
+    fn kernel_tables_carry_their_isa_and_sane_tiles() {
+        for isa in Isa::supported() {
+            let k = kernels(isa);
+            assert_eq!(k.isa, isa);
+            assert!(k.gemm_mr >= 1 && k.gemm_mr <= crate::linalg::gemm::MR_MAX);
+            assert!(k.gemm_nr >= 1 && k.gemm_nr <= crate::linalg::gemm::NR_MAX);
+        }
+    }
+
+    #[test]
+    fn force_scope_installs_and_restores() {
+        let before = active();
+        {
+            let _g = force_scope(Isa::Scalar).unwrap();
+            assert_eq!(active(), Isa::Scalar);
+        }
+        assert_eq!(active(), before);
+    }
+
+    #[test]
+    fn forcing_an_unsupported_isa_errors() {
+        // At most one of Avx2/Neon is supported on any real target, so the
+        // other must be rejected; on plain x86-64-without-AVX2 both are.
+        let unsupported: Vec<Isa> =
+            [Isa::Avx2, Isa::Neon].into_iter().filter(|i| !i.is_supported()).collect();
+        for isa in unsupported {
+            assert!(force_isa(Some(isa)).is_err(), "{isa} should be rejected");
+        }
+        // clearing is always fine
+        force_isa(None).unwrap();
+    }
+}

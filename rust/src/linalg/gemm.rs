@@ -6,25 +6,63 @@
 //! both paths run through these kernels, so they are written with cache
 //! blocking + a small register-tiled micro-kernel rather than naive triple
 //! loops. See EXPERIMENTS.md §Perf for measured GFLOP/s.
+//!
+//! The inner loops — the `MR×NR` GEMM micro-kernel, the syrk band update,
+//! the triangular-solve RHS update, and [`dot`] — are routed through
+//! [`crate::linalg::dispatch`]: the scalar reference implementations in
+//! this file define the *canonical accumulation order*, and the per-ISA
+//! SIMD kernels (`linalg::simd_avx2`, `linalg::simd_neon`) reproduce it
+//! bit-for-bit (see the dispatch module docs for the contract and the
+//! `kernel_conformance_*` suite for its enforcement). Register-tile
+//! geometry (`MR×NR`) comes from the selected kernel table; the cache
+//! blocking (`MC`, `KC`) is ISA-independent, and `KC` is what pins the
+//! per-element partial-sum split, so changing `MR×NR` never changes bits.
 
+use super::dispatch::{self, Isa, Kernels};
 use super::mat::Mat;
 
 /// Cache-block sizes (f64): MC×KC panel of A (~256 KB, L2-resident),
-/// KC×NR slivers of B streamed from L1.
+/// KC×NR slivers of B streamed from L1. `KC` is part of the bitwise
+/// contract (it fixes where per-element partial sums split); `MC` is not.
 const MC: usize = 128;
 const KC: usize = 256;
-const NR: usize = 8;
-const MR: usize = 4;
+/// Scalar reference register tile: 4 packed-A rows × 8 packed-B columns.
+pub(crate) const SCALAR_MR: usize = 4;
+/// See [`SCALAR_MR`].
+pub(crate) const SCALAR_NR: usize = 8;
+/// Upper bounds on any kernel table's `MR`/`NR` — sizes the stack-allocated
+/// sliver scratch in the packers (dispatch's table test pins tables to it).
+pub(crate) const MR_MAX: usize = 8;
+/// See [`MR_MAX`].
+pub(crate) const NR_MAX: usize = 8;
 
-/// `C = A · B`.
+/// `C = A · B` under the active ISA (see [`crate::linalg::dispatch`]).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     let mut c = Mat::zeros(a.rows(), b.cols());
     gemm_acc(&mut c, a, b, 1.0, 0.0);
     c
 }
 
-/// `C = alpha · A·B + beta · C` (general update; C must be preallocated).
+/// [`matmul`] under an explicit ISA — the conformance suite's entry point.
+pub fn matmul_isa(a: &Mat, b: &Mat, isa: Isa) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm_acc_isa(&mut c, a, b, 1.0, 0.0, isa);
+    c
+}
+
+/// `C = alpha · A·B + beta · C` (general update; C must be preallocated)
+/// under the active ISA.
 pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
+    gemm_acc_k(c, a, b, alpha, beta, dispatch::active_kernels());
+}
+
+/// [`gemm_acc`] under an explicit ISA — the conformance suite's entry
+/// point. Bitwise-identical to every other ISA by the dispatch contract.
+pub fn gemm_acc_isa(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64, isa: Isa) {
+    gemm_acc_k(c, a, b, alpha, beta, dispatch::kernels(isa));
+}
+
+fn gemm_acc_k(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64, kr: &Kernels) {
     let (m, ka) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(ka, kb, "gemm inner-dim mismatch: {ka} vs {kb}");
@@ -40,91 +78,105 @@ pub fn gemm_acc(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64) {
         return;
     }
 
-    // Packed panels reused across the j-loop.
-    let mut a_pack = vec![0.0f64; MC * KC];
-    let mut b_pack = vec![0.0f64; KC * n.next_multiple_of(NR)];
+    let (mr, nr) = (kr.gemm_mr, kr.gemm_nr);
+    // Packed panels reused across the j-loop. The A pack rounds MC up to a
+    // whole number of MR-tall slivers (MR need not divide MC — AVX2/NEON
+    // use MR=6 against MC=128).
+    let mut a_pack = vec![0.0f64; MC.next_multiple_of(mr) * KC];
+    let mut b_pack = vec![0.0f64; KC * n.next_multiple_of(nr)];
 
     for k0 in (0..ka).step_by(KC) {
         let kc = KC.min(ka - k0);
         // Pack B panel: KC×n, laid out as NR-wide column slivers.
-        pack_b(b, k0, kc, &mut b_pack);
+        pack_b(b, k0, kc, nr, &mut b_pack);
         for i0 in (0..m).step_by(MC) {
             let mc = MC.min(m - i0);
             // Pack A block: mc×kc as MR-tall row slivers.
-            pack_a(a, i0, mc, k0, kc, &mut a_pack);
-            macro_kernel(c, &a_pack, &b_pack, i0, mc, kc, n, alpha);
+            pack_a(a, i0, mc, k0, kc, mr, &mut a_pack);
+            macro_kernel(c, &a_pack, &b_pack, i0, mc, kc, n, alpha, kr);
         }
     }
 }
 
-fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, pack: &mut [f64]) {
-    // layout: for each MR-sliver s, kc columns of MR values. Row slices are
-    // resolved once per sliver so the hot loop reads contiguous slices
-    // instead of going through the (r, c) indexing operator per element —
-    // identical packed bytes, fewer index computations and bounds checks.
+/// Pack `a[i0.., k0..]` (`mc×kc`) as `mr`-tall row slivers: for each
+/// sliver, `kc` columns of `mr` values, dead tail rows zero-filled. Packed
+/// bytes depend only on `(a, i0, mc, k0, kc, mr)` — never on the ISA that
+/// will consume them.
+fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, mr: usize, pack: &mut [f64]) {
+    // Row slices are resolved once per sliver so the hot loop reads
+    // contiguous slices instead of going through the (r, c) indexing
+    // operator per element — identical packed bytes, fewer index
+    // computations and bounds checks.
+    debug_assert!(mr >= 1 && mr <= MR_MAX);
     const EMPTY: &[f64] = &[];
     let mut idx = 0;
     let mut i = 0;
     while i < mc {
-        let mr = MR.min(mc - i);
-        let mut rows: [&[f64]; MR] = [EMPTY; MR];
-        for (r, slot) in rows.iter_mut().enumerate().take(mr) {
+        let live = mr.min(mc - i);
+        let mut rows: [&[f64]; MR_MAX] = [EMPTY; MR_MAX];
+        for (r, slot) in rows.iter_mut().enumerate().take(live) {
             *slot = &a.row(i0 + i + r)[k0..k0 + kc];
         }
         for k in 0..kc {
-            for (r, row) in rows.iter().enumerate() {
-                pack[idx] = if r < mr { row[k] } else { 0.0 };
+            for (r, row) in rows.iter().enumerate().take(mr) {
+                pack[idx] = if r < live { row[k] } else { 0.0 };
                 idx += 1;
             }
         }
-        i += MR;
+        i += mr;
     }
 }
 
-fn pack_b(b: &Mat, k0: usize, kc: usize, pack: &mut [f64]) {
-    // NR-wide slivers copied as contiguous sub-row slices (tail lanes
-    // zero-filled) — identical packed bytes to the old per-element loop.
+/// Pack rows `k0..k0+kc` of `b` as `nr`-wide column slivers (tail lanes
+/// zero-filled). Packed bytes depend only on `(b, k0, kc, nr)`.
+fn pack_b(b: &Mat, k0: usize, kc: usize, nr: usize, pack: &mut [f64]) {
+    debug_assert!(nr >= 1 && nr <= NR_MAX);
     let n = b.cols();
     let mut idx = 0;
     let mut j = 0;
     while j < n {
-        let nr = NR.min(n - j);
+        let live = nr.min(n - j);
         for k in 0..kc {
-            let row = &b.row(k0 + k)[j..j + nr];
-            pack[idx..idx + nr].copy_from_slice(row);
-            pack[idx + nr..idx + NR].fill(0.0);
-            idx += NR;
+            let row = &b.row(k0 + k)[j..j + live];
+            pack[idx..idx + live].copy_from_slice(row);
+            pack[idx + live..idx + nr].fill(0.0);
+            idx += nr;
         }
-        j += NR;
+        j += nr;
     }
 }
 
 #[allow(clippy::too_many_arguments)]
-fn macro_kernel(c: &mut Mat, a_pack: &[f64], b_pack: &[f64], i0: usize, mc: usize, kc: usize, n: usize, alpha: f64) {
+fn macro_kernel(c: &mut Mat, a_pack: &[f64], b_pack: &[f64], i0: usize, mc: usize, kc: usize, n: usize, alpha: f64, kr: &Kernels) {
+    let (mr, nr) = (kr.gemm_mr, kr.gemm_nr);
     let mut j = 0;
     let mut jb = 0; // sliver index into b_pack
     while j < n {
-        let nr = NR.min(n - j);
-        let b_sl = &b_pack[jb * kc * NR..(jb + 1) * kc * NR];
+        let nrl = nr.min(n - j);
+        let b_sl = &b_pack[jb * kc * nr..(jb + 1) * kc * nr];
         let mut i = 0;
         let mut ib = 0;
         while i < mc {
-            let mr = MR.min(mc - i);
-            let a_sl = &a_pack[ib * kc * MR..(ib + 1) * kc * MR];
-            micro_kernel(c, a_sl, b_sl, i0 + i, j, mr, nr, kc, alpha);
-            i += MR;
+            let mrl = mr.min(mc - i);
+            let a_sl = &a_pack[ib * kc * mr..(ib + 1) * kc * mr];
+            (kr.micro)(c, a_sl, b_sl, i0 + i, j, mrl, nrl, kc, alpha);
+            i += mr;
             ib += 1;
         }
-        j += NR;
+        j += nr;
         jb += 1;
     }
 }
 
-/// MR×NR register-tiled micro-kernel: C[i..i+mr, j..j+nr] += alpha·A·B.
+/// Scalar `MR×NR` register-tiled micro-kernel:
+/// `C[ci..ci+mr, cj..cj+nr] += alpha·A·B` over packed slivers. This is the
+/// canonical accumulation order every SIMD kernel must reproduce bitwise:
+/// per output element, one `acc += a·b` (two roundings) per `k` in
+/// ascending order, then one `c += alpha·acc` at writeback.
 #[allow(clippy::too_many_arguments)]
 #[inline]
-fn micro_kernel(c: &mut Mat, a_sl: &[f64], b_sl: &[f64], ci: usize, cj: usize, mr: usize, nr: usize, kc: usize, alpha: f64) {
-    let mut acc = [[0.0f64; NR]; MR];
+pub(crate) fn micro_kernel_scalar(c: &mut Mat, a_sl: &[f64], b_sl: &[f64], ci: usize, cj: usize, mr: usize, nr: usize, kc: usize, alpha: f64) {
+    let mut acc = [[0.0f64; SCALAR_NR]; SCALAR_MR];
     let mut ap = 0;
     let mut bp = 0;
     for _ in 0..kc {
@@ -132,16 +184,16 @@ fn micro_kernel(c: &mut Mat, a_sl: &[f64], b_sl: &[f64], ci: usize, cj: usize, m
         let a1 = a_sl[ap + 1];
         let a2 = a_sl[ap + 2];
         let a3 = a_sl[ap + 3];
-        let bv: &[f64] = &b_sl[bp..bp + NR];
-        for r in 0..NR {
+        let bv: &[f64] = &b_sl[bp..bp + SCALAR_NR];
+        for r in 0..SCALAR_NR {
             let b = bv[r];
             acc[0][r] += a0 * b;
             acc[1][r] += a1 * b;
             acc[2][r] += a2 * b;
             acc[3][r] += a3 * b;
         }
-        ap += MR;
-        bp += NR;
+        ap += SCALAR_MR;
+        bp += SCALAR_NR;
     }
     for r in 0..mr {
         let crow = c.row_mut(ci + r);
@@ -168,7 +220,7 @@ fn micro_kernel(c: &mut Mat, a_sl: &[f64], b_sl: &[f64], ci: usize, cj: usize, m
 /// identical to this kernel; see that module for the memory-bounded form.
 pub fn matmul_pool(a: &Mat, b: &Mat, pool: Option<&crate::util::threadpool::ThreadPool>) -> Mat {
     let pool = match pool {
-        Some(p) if p.size() > 1 && a.rows() >= 2 * MR => p,
+        Some(p) if p.size() > 1 && a.rows() >= 2 * SCALAR_MR => p,
         _ => return matmul(a, b),
     };
     let panels = (pool.size() * 2).min(a.rows());
@@ -193,8 +245,14 @@ pub fn matmul_pool(a: &Mat, b: &Mat, pool: Option<&crate::util::threadpool::Thre
 /// upper triangle is computed then mirrored. See [`syrk_t_pool`] for the
 /// pool-parallel panel fan-out (bit-identical output).
 pub fn syrk_t(a: &Mat) -> Mat {
+    syrk_t_isa(a, dispatch::active())
+}
+
+/// [`syrk_t`] under an explicit ISA — the conformance suite's entry point.
+pub fn syrk_t_isa(a: &Mat, isa: Isa) -> Mat {
     let p = a.cols();
-    let mut g = syrk_t_rows(a, 0, p);
+    let mut g = Mat::zeros(p, p);
+    syrk_t_rows_into_k(a, 0, p, g.as_mut_slice(), dispatch::kernels(isa));
     mirror_upper(&mut g);
     g
 }
@@ -216,6 +274,14 @@ fn syrk_t_rows(a: &Mat, lo: usize, hi: usize) -> Mat {
 /// write its output bands straight into disjoint slices of the final `p×p`
 /// Gram without holding per-band copies. Identical arithmetic.
 pub(crate) fn syrk_t_rows_into(a: &Mat, lo: usize, hi: usize, band: &mut [f64]) {
+    syrk_t_rows_into_k(a, lo, hi, band, dispatch::active_kernels());
+}
+
+/// The band kernel under an explicit kernel table. The inner loop is an
+/// `axpy` over the upper-triangle row tail (`grow[j..] += aij · row[j..]`,
+/// ascending `k`, one mul-then-add per element) — exactly the scalar
+/// sequence, whichever table runs it.
+fn syrk_t_rows_into_k(a: &Mat, lo: usize, hi: usize, band: &mut [f64], kr: &Kernels) {
     let (n, p) = a.shape();
     debug_assert_eq!(band.len(), (hi - lo) * p);
     // Process in row panels of A to keep accumulation cache-friendly.
@@ -231,9 +297,7 @@ pub(crate) fn syrk_t_rows_into(a: &Mat, lo: usize, hi: usize, band: &mut [f64]) 
                 }
                 let grow = &mut band[(j - lo) * p..(j - lo + 1) * p];
                 // upper triangle only
-                for (k, &aik) in row.iter().enumerate().skip(j) {
-                    grow[k] += aij * aik;
-                }
+                (kr.axpy)(&mut grow[j..], aij, &row[j..]);
             }
         }
     }
@@ -302,6 +366,12 @@ pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
 /// lets the serial permutation engine (single response) and the batched
 /// engine (`N×B` responses) produce byte-equal decision values. Same flop
 /// count as [`matvec`]; only the summation association differs.
+///
+/// Deliberately scalar under every ISA: a single column cannot be
+/// lane-split without changing lanes from *elements* to *partials*, and
+/// the per-element order here (sequential within each KC block) is what
+/// every ISA's `matmul` column reproduces — so this stays the serial ↔
+/// batched bridge regardless of dispatch.
 pub fn matvec_gemm_order(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols(), x.len());
     let mut y = vec![0.0; a.rows()];
@@ -320,25 +390,33 @@ pub fn matvec_gemm_order(a: &Mat, x: &[f64]) -> Vec<f64> {
     y
 }
 
-/// `y = Aᵀ·x`.
+/// `y = Aᵀ·x`. Row-axpy form, dispatched.
 pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows(), x.len());
+    let kr = dispatch::active_kernels();
     let mut y = vec![0.0; a.cols()];
     for i in 0..a.rows() {
         let xi = x[i];
         if xi == 0.0 {
             continue;
         }
-        for (j, &aij) in a.row(i).iter().enumerate() {
-            y[j] += aij * xi;
-        }
+        (kr.axpy)(&mut y, xi, a.row(i));
     }
     y
 }
 
-/// Dot product with 4-way unrolling.
+/// Dot product under the active ISA, in the canonical 4-partial order of
+/// [`dot_scalar`] (bitwise-identical whichever table runs it).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    (dispatch::active_kernels().dot)(a, b)
+}
+
+/// Scalar reference dot product with 4-way unrolling: stride-4 partials
+/// `s0..s3`, reduced `((s0+s1)+s2)+s3`, then a sequential tail. This *is*
+/// the canonical order; SIMD `dot` kernels map lane `r` to partial `s_r`.
+#[inline]
+pub(crate) fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let chunks = n / 4;
@@ -357,19 +435,39 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// Outer-product accumulate: `M += alpha · u vᵀ`.
+/// Scalar reference `acc[t] += a · x[t]` (ascending `t`, one rounded
+/// multiply then one rounded add per element) — the canonical order for
+/// the syrk band update, [`ger`], and [`matvec_t`] inner loops.
+#[inline]
+pub(crate) fn axpy_scalar(acc: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (ai, &xi) in acc.iter_mut().zip(x) {
+        *ai += a * xi;
+    }
+}
+
+/// Scalar reference `acc[t] -= a · x[t]` (ascending `t`) — the canonical
+/// order for the triangular-solve RHS update loops in `chol`/`spill`.
+#[inline]
+pub(crate) fn axpy_sub_scalar(acc: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (ai, &xi) in acc.iter_mut().zip(x) {
+        *ai -= a * xi;
+    }
+}
+
+/// Outer-product accumulate: `M += alpha · u vᵀ`. Row-axpy form,
+/// dispatched.
 pub fn ger(m: &mut Mat, alpha: f64, u: &[f64], v: &[f64]) {
     assert_eq!(m.rows(), u.len());
     assert_eq!(m.cols(), v.len());
+    let kr = dispatch::active_kernels();
     for i in 0..u.len() {
         let au = alpha * u[i];
         if au == 0.0 {
             continue;
         }
-        let row = m.row_mut(i);
-        for (j, &vj) in v.iter().enumerate() {
-            row[j] += au * vj;
-        }
+        (kr.axpy)(m.row_mut(i), au, v);
     }
 }
 
@@ -455,16 +553,20 @@ mod tests {
         // The determinism contract of the permutation engines rests on this:
         // a single-column product in GEMM order equals the corresponding
         // column of a wide GEMM *exactly* (==, not approximately), for inner
-        // dimensions below and above the KC blocking threshold.
+        // dimensions below and above the KC blocking threshold — and it must
+        // hold under every ISA the host supports, since the serial engine is
+        // always scalar while the batched engine dispatches.
         let mut rng = Rng::new(9);
         for &(m, k, extra_cols) in &[(5, 7, 3), (33, 64, 5), (17, 300, 2), (64, 513, 4)] {
             let a = random_mat(&mut rng, m, k);
             let b = random_mat(&mut rng, k, extra_cols + 1);
             let x = b.col(0);
             let y = matvec_gemm_order(&a, &x);
-            let c = matmul(&a, &b);
-            for i in 0..m {
-                assert_eq!(y[i], c[(i, 0)], "({m},{k}) row {i}: not bitwise equal");
+            for isa in Isa::supported() {
+                let c = matmul_isa(&a, &b, isa);
+                for i in 0..m {
+                    assert_eq!(y[i], c[(i, 0)], "({m},{k}) row {i} [{isa}]: not bitwise equal");
+                }
             }
             // and it is the same mathematical product as plain matvec
             let y_ref = matvec(&a, &x);
@@ -520,45 +622,49 @@ mod tests {
 
     #[test]
     fn pack_a_b_match_elementwise_reference() {
-        // The slice-based packers must produce the identical buffers the
-        // old per-element (r, c)-indexed loops did — including the
-        // zero-padded MR/NR tail lanes of awkward shapes.
+        // The slice-based packers must produce the identical buffers a
+        // per-element (r, c)-indexed loop would — including the zero-padded
+        // tail lanes of awkward shapes — for every register-tile geometry a
+        // kernel table can request (scalar 4×8, SIMD 6×8, and the MR_MAX
+        // bound), not just the scalar one.
         let mut rng = Rng::new(21);
         for &(m, k) in &[(3usize, 5usize), (9, 17), (130, 300)] {
-            let a = random_mat(&mut rng, m, k);
-            let (i0, mc) = (0, m.min(MC));
-            let (k0, kc) = (0, k.min(KC));
-            let mut pack = vec![f64::NAN; mc.next_multiple_of(MR) * kc];
-            pack_a(&a, i0, mc, k0, kc, &mut pack);
-            let mut idx = 0;
-            let mut i = 0;
-            while i < mc {
-                let mr = MR.min(mc - i);
-                for kk in 0..kc {
-                    for r in 0..MR {
-                        let want = if r < mr { a[(i0 + i + r, k0 + kk)] } else { 0.0 };
-                        assert_eq!(pack[idx], want, "pack_a ({m},{k}) idx {idx}");
-                        idx += 1;
+            for &(mr, nr) in &[(SCALAR_MR, SCALAR_NR), (6, 8), (MR_MAX, NR_MAX), (5, 3)] {
+                let a = random_mat(&mut rng, m, k);
+                let (i0, mc) = (0, m.min(MC));
+                let (k0, kc) = (0, k.min(KC));
+                let mut pack = vec![f64::NAN; mc.next_multiple_of(mr) * kc];
+                pack_a(&a, i0, mc, k0, kc, mr, &mut pack);
+                let mut idx = 0;
+                let mut i = 0;
+                while i < mc {
+                    let live = mr.min(mc - i);
+                    for kk in 0..kc {
+                        for r in 0..mr {
+                            let want = if r < live { a[(i0 + i + r, k0 + kk)] } else { 0.0 };
+                            assert_eq!(pack[idx], want, "pack_a ({m},{k}) mr {mr} idx {idx}");
+                            idx += 1;
+                        }
                     }
+                    i += mr;
                 }
-                i += MR;
-            }
-            let b = random_mat(&mut rng, k, m);
-            let n = b.cols();
-            let mut packb = vec![f64::NAN; kc * n.next_multiple_of(NR)];
-            pack_b(&b, k0, kc, &mut packb);
-            let mut idx = 0;
-            let mut j = 0;
-            while j < n {
-                let nr = NR.min(n - j);
-                for kk in 0..kc {
-                    for r in 0..NR {
-                        let want = if r < nr { b[(k0 + kk, j + r)] } else { 0.0 };
-                        assert_eq!(packb[idx], want, "pack_b ({m},{k}) idx {idx}");
-                        idx += 1;
+                let b = random_mat(&mut rng, k, m);
+                let n = b.cols();
+                let mut packb = vec![f64::NAN; kc * n.next_multiple_of(nr)];
+                pack_b(&b, k0, kc, nr, &mut packb);
+                let mut idx = 0;
+                let mut j = 0;
+                while j < n {
+                    let live = nr.min(n - j);
+                    for kk in 0..kc {
+                        for r in 0..nr {
+                            let want = if r < live { b[(k0 + kk, j + r)] } else { 0.0 };
+                            assert_eq!(packb[idx], want, "pack_b ({m},{k}) nr {nr} idx {idx}");
+                            idx += 1;
+                        }
                     }
+                    j += nr;
                 }
-                j += NR;
             }
         }
     }
@@ -598,6 +704,30 @@ mod tests {
             let b: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
             let s: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - s).abs() < 1e-10);
+            // the dispatched dot is bitwise the scalar reference
+            assert_eq!(dot(&a, &b), dot_scalar(&a, &b));
+        }
+    }
+
+    #[test]
+    fn axpy_scalar_matches_plain_loop() {
+        let mut rng = Rng::new(31);
+        for len in [0usize, 1, 2, 5, 64, 101] {
+            let x: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+            let mut acc: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+            let a = rng.gauss();
+            let mut want = acc.clone();
+            for (w, &xi) in want.iter_mut().zip(&x) {
+                *w += a * xi;
+            }
+            axpy_scalar(&mut acc, a, &x);
+            assert_eq!(acc, want, "axpy len {len}");
+            let mut want_sub = acc.clone();
+            for (w, &xi) in want_sub.iter_mut().zip(&x) {
+                *w -= a * xi;
+            }
+            axpy_sub_scalar(&mut acc, a, &x);
+            assert_eq!(acc, want_sub, "axpy_sub len {len}");
         }
     }
 }

@@ -397,6 +397,32 @@ mod tests {
     }
 
     #[test]
+    fn rows_slice_last_partial_band_stops_at_the_matrix_edge() {
+        // The GEMM packers take MR-row bands with `lo + mr.min(rows - lo)`;
+        // with the widened per-ISA MR=6 the last band of e.g. a 5×p or 13×p
+        // operand is partial. The band slab must cover exactly the live
+        // rows — through hi == rows — and never read past the allocation.
+        for (rows, mr) in [(5usize, 4usize), (5, 6), (13, 6), (7, 8)] {
+            let m = Mat::from_fn(rows, 3, |i, j| (10 * i + j) as f64);
+            let lo = (rows / mr) * mr;
+            let live = mr.min(rows - lo);
+            let band = m.rows_slice(lo, lo + live);
+            assert_eq!(band.len(), live * 3, "rows={rows} mr={mr}");
+            assert_eq!(band[0], (10 * lo) as f64);
+            assert_eq!(*band.last().unwrap(), (10 * (rows - 1) + 2) as f64);
+            // The full-height band is the whole backing slab.
+            assert_eq!(m.rows_slice(0, rows), m.as_slice());
+        }
+        // Mutable variant at the same boundary: the write lands on the last
+        // row and leaves every earlier row untouched.
+        let mut w = Mat::from_fn(5, 3, |i, j| (10 * i + j) as f64);
+        let band = w.rows_slice_mut(4, 5);
+        band.copy_from_slice(&[-1.0, -2.0, -3.0]);
+        assert_eq!(w.row(4), &[-1.0, -2.0, -3.0]);
+        assert_eq!(w.row(3), &[30.0, 31.0, 32.0]);
+    }
+
+    #[test]
     fn gathers() {
         let m = Mat::from_fn(5, 4, |i, j| (10 * i + j) as f64);
         let r = m.take_rows(&[4, 0]);

@@ -12,20 +12,29 @@
 //! - [`spill`] — out-of-core panel persistence ([`PanelStore`], RAM or
 //!   disk) + the left-looking spilled Cholesky ([`chol_spill`]) and
 //!   streaming solves, all bitwise-identical to the in-RAM kernels
+//! - [`dispatch`] — runtime ISA selection for the microkernels
+//!   ([`Isa`], [`Kernels`]; scalar reference + AVX2/NEON SIMD, all
+//!   bitwise-identical by the canonical-accumulation-order contract)
 
 pub mod chol;
+pub mod dispatch;
 pub mod eig;
 pub mod gemm;
 pub mod lu;
 pub mod mat;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod simd_avx2;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod simd_neon;
 pub mod spill;
 pub mod tiled;
 
 pub use chol::Cholesky;
+pub use dispatch::{Isa, Kernels};
 pub use eig::{gen_sym_eig, sym_eig, SymEig};
 pub use gemm::{
-    dot, gemm_acc, ger, matmul, matmul_pool, matvec, matvec_gemm_order, matvec_t, syrk_t,
-    syrk_t_pool,
+    dot, gemm_acc, gemm_acc_isa, ger, matmul, matmul_isa, matmul_pool, matvec, matvec_gemm_order,
+    matvec_t, syrk_t, syrk_t_isa, syrk_t_pool,
 };
 pub use lu::{solve, solve_mat, Lu};
 pub use mat::Mat;

@@ -1,0 +1,227 @@
+//! AVX2 microkernels for the `linalg` hot core (x86-64 only).
+//!
+//! Every function here is the vector twin of a scalar reference in
+//! [`crate::linalg::gemm`], selected at runtime through
+//! [`crate::linalg::dispatch`]. The bitwise contract (see the dispatch
+//! module docs) is upheld by three rules, visible in every loop below:
+//!
+//! 1. **lanes are distinct output elements** — a 4-lane `f64` vector holds
+//!    four GEMM columns / band entries / stride partials, never four
+//!    pieces of one element's sum;
+//! 2. **multiply then add, never FMA** — `_mm256_add_pd(acc,
+//!    _mm256_mul_pd(a, b))` performs the exact two IEEE roundings the
+//!    scalar `acc += a * b` performs (`_mm256_fmadd_pd` would fuse them
+//!    into one and change results);
+//! 3. **ascending index order** — vector chunks and scalar tails walk the
+//!    same ascending element order as the scalar loops.
+//!
+//! The `kernel_conformance_*` suite pins each function against its scalar
+//! reference across shapes, remainder lanes, and NaN/∞ inputs.
+//!
+//! ## Unsafe audit (rule L3, docs/LINTS.md)
+//!
+//! `unsafe` appears in exactly two forms: the `#[target_feature(enable =
+//! "avx2")] unsafe fn` implementations (whose bodies may use raw-pointer
+//! loads/stores; every offset is justified in a comment at the use site
+//! against the length `debug_assert!`s at the top), and the one
+//! `unsafe { ..._impl(...) }` call inside each safe wrapper, sound because
+//! the wrappers are only reachable through `dispatch::kernels(Isa::Avx2)`,
+//! which is handed out strictly after `is_x86_feature_detected!("avx2")`
+//! (`force_isa` validates explicit requests; auto-detection probes) — and
+//! each wrapper re-checks with a `debug_assert!`. No aliasing is possible:
+//! sources are `&[f64]`, destinations `&mut [f64]`, and the borrow checker
+//! separates them before any pointer is formed.
+
+#![allow(clippy::too_many_arguments)] // microkernel signatures mirror the scalar reference
+
+use crate::linalg::mat::Mat;
+use core::arch::x86_64::{
+    __m256d, _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_setzero_pd,
+    _mm256_storeu_pd, _mm256_sub_pd,
+};
+
+/// AVX2 GEMM register tile: 6 packed-A rows × 8 packed-B columns (two
+/// 4-lane vectors), 12 accumulator registers + 2 B loads + 1 broadcast —
+/// comfortably inside the 16 architectural `ymm` registers.
+pub(crate) const MR: usize = 6;
+/// See [`MR`].
+pub(crate) const NR: usize = 8;
+
+/// Does this CPU run these kernels? (Cached by std; cheap.)
+#[inline]
+fn have_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// `MR×NR` GEMM micro-kernel over packed slivers:
+/// `C[ci..ci+mr, cj..cj+nr] += alpha · A_sliver · B_sliver`.
+///
+/// Same contract as `gemm::micro_kernel_scalar`: `a_sl` is `kc` columns of
+/// `MR` packed (zero-padded) rows, `b_sl` is `kc` rows of `NR` packed
+/// columns, and only the `mr×nr` live outputs are written back.
+pub(crate) fn micro_kernel(
+    c: &mut Mat,
+    a_sl: &[f64],
+    b_sl: &[f64],
+    ci: usize,
+    cj: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    alpha: f64,
+) {
+    debug_assert!(have_avx2(), "AVX2 kernel dispatched on a CPU without AVX2");
+    // SAFETY: AVX2 is present — this wrapper is only installed in the
+    // dispatch table after a runtime `is_x86_feature_detected!("avx2")`
+    // probe (see the module-level audit note).
+    unsafe { micro_kernel_impl(c, a_sl, b_sl, ci, cj, mr, nr, kc, alpha) }
+}
+
+// SAFETY: callers must have verified AVX2 support (the safe wrapper above
+// is the only caller); the body's raw-pointer accesses are bounded by the
+// `debug_assert!`ed packed-sliver lengths, justified per use below.
+#[target_feature(enable = "avx2")]
+unsafe fn micro_kernel_impl(
+    c: &mut Mat,
+    a_sl: &[f64],
+    b_sl: &[f64],
+    ci: usize,
+    cj: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    alpha: f64,
+) {
+    debug_assert!(a_sl.len() >= kc * MR && b_sl.len() >= kc * NR);
+    debug_assert!(mr <= MR && nr <= NR && nr <= c.cols());
+    let ap = a_sl.as_ptr();
+    let bp = b_sl.as_ptr();
+    // acc[r][h]: row r of the tile, columns 4h..4h+4. Lanes are distinct
+    // output columns; each accumulates its own `+= a·b` sequence over k in
+    // ascending order — the canonical order, two roundings per step.
+    let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+    for k in 0..kc {
+        // In bounds: k < kc and b_sl.len() >= kc*NR, so offsets k*8 and
+        // k*8+4 each leave 4 readable lanes.
+        let b0 = _mm256_loadu_pd(bp.add(k * NR));
+        let b1 = _mm256_loadu_pd(bp.add(k * NR + 4));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            // In bounds: k < kc, r < MR, a_sl.len() >= kc*MR.
+            let ar = _mm256_set1_pd(*ap.add(k * MR + r));
+            accr[0] = _mm256_add_pd(accr[0], _mm256_mul_pd(ar, b0));
+            accr[1] = _mm256_add_pd(accr[1], _mm256_mul_pd(ar, b1));
+        }
+    }
+    // Write back through a lane spill + the scalar update, so the final
+    // `c += alpha * acc` op is literally the scalar reference's.
+    let mut lanes = [0.0f64; NR];
+    for r in 0..mr {
+        // In bounds: lanes is NR = 8 long; the two stores cover 0..4, 4..8.
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc[r][0]);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc[r][1]);
+        let crow = c.row_mut(ci + r);
+        for s in 0..nr {
+            crow[cj + s] += alpha * lanes[s];
+        }
+    }
+}
+
+/// `acc[t] += a · x[t]`, ascending `t`, mul-then-add per element — the
+/// vector twin of `gemm::axpy_scalar`.
+pub(crate) fn axpy(acc: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert!(have_avx2(), "AVX2 kernel dispatched on a CPU without AVX2");
+    // SAFETY: AVX2 is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { axpy_impl(acc, a, x) }
+}
+
+// SAFETY: caller must have verified AVX2 (safe wrapper above is the only
+// caller); pointer offsets are bounded by the equal slice lengths.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_impl(acc: &mut [f64], a: f64, x: &[f64]) {
+    let n = acc.len();
+    debug_assert_eq!(n, x.len());
+    let av = _mm256_set1_pd(a);
+    let xp = x.as_ptr();
+    let cp = acc.as_mut_ptr();
+    let chunks = n / 4;
+    for cix in 0..chunks {
+        // In bounds: i + 4 <= n for every chunk, on both same-length slices.
+        let i = 4 * cix;
+        let xv = _mm256_loadu_pd(xp.add(i));
+        let cv = _mm256_loadu_pd(cp.add(i));
+        _mm256_storeu_pd(cp.add(i), _mm256_add_pd(cv, _mm256_mul_pd(av, xv)));
+    }
+    for i in 4 * chunks..n {
+        acc[i] += a * x[i];
+    }
+}
+
+/// `acc[t] -= a · x[t]`, ascending `t`, mul-then-sub per element — the
+/// vector twin of `gemm::axpy_sub_scalar` (the triangular-solve update).
+pub(crate) fn axpy_sub(acc: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert!(have_avx2(), "AVX2 kernel dispatched on a CPU without AVX2");
+    // SAFETY: AVX2 is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { axpy_sub_impl(acc, a, x) }
+}
+
+// SAFETY: caller must have verified AVX2 (safe wrapper above is the only
+// caller); pointer offsets are bounded by the equal slice lengths.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_sub_impl(acc: &mut [f64], a: f64, x: &[f64]) {
+    let n = acc.len();
+    debug_assert_eq!(n, x.len());
+    let av = _mm256_set1_pd(a);
+    let xp = x.as_ptr();
+    let cp = acc.as_mut_ptr();
+    let chunks = n / 4;
+    for cix in 0..chunks {
+        // In bounds: i + 4 <= n for every chunk, on both same-length slices.
+        let i = 4 * cix;
+        let xv = _mm256_loadu_pd(xp.add(i));
+        let cv = _mm256_loadu_pd(cp.add(i));
+        _mm256_storeu_pd(cp.add(i), _mm256_sub_pd(cv, _mm256_mul_pd(av, xv)));
+    }
+    for i in 4 * chunks..n {
+        acc[i] -= a * x[i];
+    }
+}
+
+/// Dot product in the canonical 4-partial order: lane `r` of the vector
+/// accumulator is exactly the scalar reference's stride-4 partial `s_r`,
+/// and the horizontal reduction spells out `((s0+s1)+s2)+s3` before the
+/// sequential tail — bitwise `gemm::dot_scalar`.
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert!(have_avx2(), "AVX2 kernel dispatched on a CPU without AVX2");
+    // SAFETY: AVX2 is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { dot_impl(a, b) }
+}
+
+// SAFETY: caller must have verified AVX2 (safe wrapper above is the only
+// caller); pointer offsets are bounded by the equal slice lengths.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_impl(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let chunks = n / 4;
+    let mut accv: __m256d = _mm256_setzero_pd();
+    for c in 0..chunks {
+        // In bounds: i + 4 <= n for every chunk, on both same-length slices.
+        let i = 4 * c;
+        let av = _mm256_loadu_pd(ap.add(i));
+        let bv = _mm256_loadu_pd(bp.add(i));
+        accv = _mm256_add_pd(accv, _mm256_mul_pd(av, bv));
+    }
+    let mut lanes = [0.0f64; 4];
+    // In bounds: lanes is exactly 4 elements — one full vector store.
+    _mm256_storeu_pd(lanes.as_mut_ptr(), accv);
+    let mut s = lanes[0] + lanes[1] + lanes[2] + lanes[3];
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}

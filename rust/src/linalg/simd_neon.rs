@@ -1,0 +1,238 @@
+//! NEON microkernels for the `linalg` hot core (aarch64 only).
+//!
+//! The 128-bit twin of `linalg::simd_avx2`: every function is the vector
+//! counterpart of a scalar reference in [`crate::linalg::gemm`], selected
+//! at runtime through [`crate::linalg::dispatch`], and bound by the same
+//! bitwise contract — lanes are **distinct output elements**, every step
+//! is **multiply then add** (`vaddq_f64(acc, vmulq_f64(a, b))`, never
+//! `vfmaq_f64`, whose fused single rounding would diverge from the scalar
+//! `acc += a * b`), and chunks plus tails walk **ascending index order**.
+//!
+//! NEON vectors carry two `f64` lanes, so the canonical stride-4 partials
+//! of `gemm::dot_scalar` need *two* accumulators: `acc0` holds partials
+//! `(s0, s1)` (loads from `a[4c..]`), `acc1` holds `(s2, s3)` (loads from
+//! `a[4c + 2..]`), and the horizontal reduction spells out
+//! `((s0 + s1) + s2) + s3` — a naïve stride-2 dot would compute different
+//! partial sums and break bitwise equality.
+//!
+//! The `kernel_conformance_*` suite pins each function against its scalar
+//! reference across shapes, remainder lanes, and NaN/∞ inputs.
+//!
+//! ## Unsafe audit (rule L3, docs/LINTS.md)
+//!
+//! Same shape as the AVX2 module: `unsafe` is confined to the
+//! `#[target_feature(enable = "neon")] unsafe fn` implementations (raw
+//! pointer loads/stores, each offset justified at the use site against the
+//! `debug_assert!`ed slice lengths) and the single `unsafe { ..._impl }`
+//! call in each safe wrapper — sound because the wrappers are only
+//! installed in the dispatch table after a runtime
+//! `is_aarch64_feature_detected!("neon")` probe (NEON is mandatory on
+//! aarch64, but we keep the probe for symmetry) and each wrapper re-checks
+//! with a `debug_assert!`. Sources are `&[f64]`, destinations are
+//! `&mut [f64]`; the borrow checker rules out aliasing before any pointer
+//! is formed.
+
+#![allow(clippy::too_many_arguments)] // microkernel signatures mirror the scalar reference
+
+use crate::linalg::mat::Mat;
+use core::arch::aarch64::{
+    float64x2_t, vaddq_f64, vdupq_n_f64, vgetq_lane_f64, vld1q_f64, vmulq_f64, vst1q_f64,
+    vsubq_f64,
+};
+
+/// NEON GEMM register tile: 6 packed-A rows × 8 packed-B columns (four
+/// 2-lane vectors), 24 accumulator registers + 4 B loads + 1 broadcast —
+/// inside the 32 architectural `v` registers.
+pub(crate) const MR: usize = 6;
+/// See [`MR`].
+pub(crate) const NR: usize = 8;
+
+/// Does this CPU run these kernels? (NEON is baseline on aarch64.)
+#[inline]
+fn have_neon() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// `MR×NR` GEMM micro-kernel over packed slivers:
+/// `C[ci..ci+mr, cj..cj+nr] += alpha · A_sliver · B_sliver`.
+///
+/// Same contract as `gemm::micro_kernel_scalar`: `a_sl` is `kc` columns of
+/// `MR` packed (zero-padded) rows, `b_sl` is `kc` rows of `NR` packed
+/// columns, and only the `mr×nr` live outputs are written back.
+pub(crate) fn micro_kernel(
+    c: &mut Mat,
+    a_sl: &[f64],
+    b_sl: &[f64],
+    ci: usize,
+    cj: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    alpha: f64,
+) {
+    debug_assert!(have_neon(), "NEON kernel dispatched on a CPU without NEON");
+    // SAFETY: NEON is present — this wrapper is only installed in the
+    // dispatch table after a runtime feature probe (module audit note).
+    unsafe { micro_kernel_impl(c, a_sl, b_sl, ci, cj, mr, nr, kc, alpha) }
+}
+
+// SAFETY: callers must have verified NEON support (the safe wrapper above
+// is the only caller); the body's raw-pointer accesses are bounded by the
+// `debug_assert!`ed packed-sliver lengths, justified per use below.
+#[target_feature(enable = "neon")]
+unsafe fn micro_kernel_impl(
+    c: &mut Mat,
+    a_sl: &[f64],
+    b_sl: &[f64],
+    ci: usize,
+    cj: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    alpha: f64,
+) {
+    debug_assert!(a_sl.len() >= kc * MR && b_sl.len() >= kc * NR);
+    debug_assert!(mr <= MR && nr <= NR && nr <= c.cols());
+    let ap = a_sl.as_ptr();
+    let bp = b_sl.as_ptr();
+    // acc[r][h]: row r of the tile, columns 2h..2h+2. Lanes are distinct
+    // output columns; each accumulates its own `+= a·b` sequence over k in
+    // ascending order — the canonical order, two roundings per step.
+    let mut acc = [[vdupq_n_f64(0.0); 4]; MR];
+    for k in 0..kc {
+        // In bounds: k < kc and b_sl.len() >= kc*NR, so offsets k*8 + {0,2,4,6}
+        // each leave 2 readable lanes.
+        let b0 = vld1q_f64(bp.add(k * NR));
+        let b1 = vld1q_f64(bp.add(k * NR + 2));
+        let b2 = vld1q_f64(bp.add(k * NR + 4));
+        let b3 = vld1q_f64(bp.add(k * NR + 6));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            // In bounds: k < kc, r < MR, a_sl.len() >= kc*MR.
+            let ar = vdupq_n_f64(*ap.add(k * MR + r));
+            accr[0] = vaddq_f64(accr[0], vmulq_f64(ar, b0));
+            accr[1] = vaddq_f64(accr[1], vmulq_f64(ar, b1));
+            accr[2] = vaddq_f64(accr[2], vmulq_f64(ar, b2));
+            accr[3] = vaddq_f64(accr[3], vmulq_f64(ar, b3));
+        }
+    }
+    // Write back through a lane spill + the scalar update, so the final
+    // `c += alpha * acc` op is literally the scalar reference's.
+    let mut lanes = [0.0f64; NR];
+    for r in 0..mr {
+        for (h, &accv) in acc[r].iter().enumerate() {
+            // In bounds: lanes is NR = 8 long; stores cover 2h..2h+2, h < 4.
+            vst1q_f64(lanes.as_mut_ptr().add(2 * h), accv);
+        }
+        let crow = c.row_mut(ci + r);
+        for s in 0..nr {
+            crow[cj + s] += alpha * lanes[s];
+        }
+    }
+}
+
+/// `acc[t] += a · x[t]`, ascending `t`, mul-then-add per element — the
+/// vector twin of `gemm::axpy_scalar`.
+pub(crate) fn axpy(acc: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert!(have_neon(), "NEON kernel dispatched on a CPU without NEON");
+    // SAFETY: NEON is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { axpy_impl(acc, a, x) }
+}
+
+// SAFETY: caller must have verified NEON (safe wrapper above is the only
+// caller); pointer offsets are bounded by the equal slice lengths.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_impl(acc: &mut [f64], a: f64, x: &[f64]) {
+    let n = acc.len();
+    debug_assert_eq!(n, x.len());
+    let av = vdupq_n_f64(a);
+    let xp = x.as_ptr();
+    let cp = acc.as_mut_ptr();
+    let chunks = n / 2;
+    for cix in 0..chunks {
+        // In bounds: i + 2 <= n for every chunk, on both same-length slices.
+        let i = 2 * cix;
+        let xv = vld1q_f64(xp.add(i));
+        let cv = vld1q_f64(cp.add(i));
+        vst1q_f64(cp.add(i), vaddq_f64(cv, vmulq_f64(av, xv)));
+    }
+    for i in 2 * chunks..n {
+        acc[i] += a * x[i];
+    }
+}
+
+/// `acc[t] -= a · x[t]`, ascending `t`, mul-then-sub per element — the
+/// vector twin of `gemm::axpy_sub_scalar` (the triangular-solve update).
+pub(crate) fn axpy_sub(acc: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert!(have_neon(), "NEON kernel dispatched on a CPU without NEON");
+    // SAFETY: NEON is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { axpy_sub_impl(acc, a, x) }
+}
+
+// SAFETY: caller must have verified NEON (safe wrapper above is the only
+// caller); pointer offsets are bounded by the equal slice lengths.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_sub_impl(acc: &mut [f64], a: f64, x: &[f64]) {
+    let n = acc.len();
+    debug_assert_eq!(n, x.len());
+    let av = vdupq_n_f64(a);
+    let xp = x.as_ptr();
+    let cp = acc.as_mut_ptr();
+    let chunks = n / 2;
+    for cix in 0..chunks {
+        // In bounds: i + 2 <= n for every chunk, on both same-length slices.
+        let i = 2 * cix;
+        let xv = vld1q_f64(xp.add(i));
+        let cv = vld1q_f64(cp.add(i));
+        vst1q_f64(cp.add(i), vsubq_f64(cv, vmulq_f64(av, xv)));
+    }
+    for i in 2 * chunks..n {
+        acc[i] -= a * x[i];
+    }
+}
+
+/// Dot product in the canonical 4-partial order. Two 2-lane accumulators
+/// reproduce the scalar reference's stride-4 partials exactly: `acc0`
+/// lanes are `(s0, s1)` (loads at `4c`), `acc1` lanes are `(s2, s3)`
+/// (loads at `4c + 2`), reduced as `((s0 + s1) + s2) + s3` before the
+/// sequential tail — bitwise `gemm::dot_scalar`.
+pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert!(have_neon(), "NEON kernel dispatched on a CPU without NEON");
+    // SAFETY: NEON is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { dot_impl(a, b) }
+}
+
+// SAFETY: caller must have verified NEON (safe wrapper above is the only
+// caller); pointer offsets are bounded by the equal slice lengths.
+#[target_feature(enable = "neon")]
+unsafe fn dot_impl(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    debug_assert_eq!(n, b.len());
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    let chunks = n / 4;
+    let mut acc0: float64x2_t = vdupq_n_f64(0.0);
+    let mut acc1: float64x2_t = vdupq_n_f64(0.0);
+    for c in 0..chunks {
+        // In bounds: i + 4 <= n for every chunk, on both same-length slices,
+        // so the two 2-lane loads at i and i + 2 are both covered.
+        let i = 4 * c;
+        let av0 = vld1q_f64(ap.add(i));
+        let bv0 = vld1q_f64(bp.add(i));
+        let av1 = vld1q_f64(ap.add(i + 2));
+        let bv1 = vld1q_f64(bp.add(i + 2));
+        acc0 = vaddq_f64(acc0, vmulq_f64(av0, bv0));
+        acc1 = vaddq_f64(acc1, vmulq_f64(av1, bv1));
+    }
+    let s0 = vgetq_lane_f64::<0>(acc0);
+    let s1 = vgetq_lane_f64::<1>(acc0);
+    let s2 = vgetq_lane_f64::<0>(acc1);
+    let s3 = vgetq_lane_f64::<1>(acc1);
+    let mut s = ((s0 + s1) + s2) + s3;
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}

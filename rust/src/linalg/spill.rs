@@ -675,6 +675,7 @@ impl SpilledCholesky {
         assert_eq!(x.rows(), n, "solve RHS row mismatch");
         let nrhs = x.cols();
         let t_count = self.store.panels();
+        let kr = super::dispatch::active_kernels();
         // forward: L Y = B
         for t in 0..t_count {
             let (lo, hi) = self.store.range(t);
@@ -688,9 +689,7 @@ impl SpilledCholesky {
                     let (head, tail) = x.as_mut_slice().split_at_mut(i * nrhs);
                     let xk = &head[k * nrhs..(k + 1) * nrhs];
                     let xi = &mut tail[..nrhs];
-                    for c in 0..nrhs {
-                        xi[c] -= lik * xk[c];
-                    }
+                    (kr.axpy_sub)(xi, lik, xk);
                 }
                 let d = lrow[i];
                 for v in x.row_mut(i) {
@@ -724,9 +723,7 @@ impl SpilledCholesky {
                     let (head, tail) = x.as_mut_slice().split_at_mut(k * nrhs);
                     let xi = &mut head[i * nrhs..(i + 1) * nrhs];
                     let xk = &tail[..nrhs];
-                    for c in 0..nrhs {
-                        xi[c] -= lki * xk[c];
-                    }
+                    (kr.axpy_sub)(xi, lki, xk);
                 }
                 let d = strip[(ci, ci)];
                 for v in x.row_mut(i) {

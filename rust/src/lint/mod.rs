@@ -114,20 +114,30 @@ const NUMERIC_DIRS: [&str; 6] = [
 
 /// L1 kernel allowlist: files whose float accumulation order *is* the
 /// repo-wide contract. Everything else routes through these.
-const KERNEL_FILES: [&str; 8] = [
-    "rust/src/linalg/gemm.rs",  // blocked GEMM microkernel: the canonical order
-    "rust/src/linalg/tiled.rs", // tiled Gram/syrk — bitwise = gemm order (tiled_* suite)
-    "rust/src/linalg/spill.rs", // out-of-core panels — bitwise = in-RAM (spill_* suite)
-    "rust/src/linalg/chol.rs",  // Cholesky recurrence: serial order pinned by factor_into
-    "rust/src/linalg/lu.rs",    // LU recurrence, same contract
-    "rust/src/linalg/eig.rs",   // symmetric eig sweeps (spectral backend contract)
-    "rust/src/linalg/mat.rs",   // Mat primitives (matvec_gemm_order et al.)
-    "rust/src/linalg/mod.rs",   // pooled wrappers (matmul_pool/syrk_t_pool)
+const KERNEL_FILES: [&str; 11] = [
+    "rust/src/linalg/gemm.rs",      // blocked GEMM microkernel: the canonical order
+    "rust/src/linalg/tiled.rs",     // tiled Gram/syrk — bitwise = gemm order (tiled_* suite)
+    "rust/src/linalg/spill.rs",     // out-of-core panels — bitwise = in-RAM (spill_* suite)
+    "rust/src/linalg/chol.rs",      // Cholesky recurrence: serial order pinned by factor_into
+    "rust/src/linalg/lu.rs",        // LU recurrence, same contract
+    "rust/src/linalg/eig.rs",       // symmetric eig sweeps (spectral backend contract)
+    "rust/src/linalg/mat.rs",       // Mat primitives (matvec_gemm_order et al.)
+    "rust/src/linalg/mod.rs",       // pooled wrappers (matmul_pool/syrk_t_pool)
+    "rust/src/linalg/dispatch.rs",  // ISA kernel tables (routes to the files below)
+    "rust/src/linalg/simd_avx2.rs", // AVX2 kernels — bitwise = scalar (kernel_conformance_*)
+    "rust/src/linalg/simd_neon.rs", // NEON kernels — bitwise = scalar (kernel_conformance_*)
 ];
 
 /// L3: files whose `unsafe` blocks have been audited (see the SAFETY
 /// comments in situ and the ThreadSanitizer CI job).
-const UNSAFE_AUDITED_FILES: [&str; 1] = ["rust/src/util/threadpool.rs"];
+const UNSAFE_AUDITED_FILES: [&str; 3] = [
+    "rust/src/util/threadpool.rs",
+    // SIMD intrinsics: every `unsafe` carries an adjacent SAFETY note and
+    // the wrappers re-check the CPU feature the dispatch table promised —
+    // see the "Unsafe audit" section in each module's docs.
+    "rust/src/linalg/simd_avx2.rs",
+    "rust/src/linalg/simd_neon.rs",
+];
 
 /// L4 file allowlist: panicking is these files' documented policy.
 const PANIC_ALLOWED_FILES: [&str; 2] = [

@@ -35,6 +35,7 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    apply_isa(args)?;
     match args.subcommand() {
         Some("sweep") => cmd_sweep(args),
         Some("parity") => cmd_parity(args),
@@ -50,6 +51,20 @@ fn dispatch(args: &Args) -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// Global `--isa scalar|avx2|neon` flag: pin the `linalg` microkernel ISA
+/// for the whole run (`linalg::dispatch`). Results are bitwise-unchanged by
+/// the kernel-conformance contract — this is a wall-clock/testing lever,
+/// like `FASTCV_FORCE_ISA` (which an explicit flag overrides). Rejects an
+/// ISA the CPU cannot run.
+fn apply_isa(args: &Args) -> Result<()> {
+    if let Some(tag) = args.get("isa") {
+        let isa = fastcv::linalg::Isa::from_tag(tag)
+            .ok_or_else(|| anyhow::anyhow!("unknown ISA {tag:?} (scalar|avx2|neon)"))?;
+        fastcv::linalg::dispatch::force_isa(Some(isa))?;
+    }
+    Ok(())
 }
 
 fn print_usage() {
@@ -89,7 +104,12 @@ fn print_usage() {
                  single batched GEMM pass — see docs/SERVE.md\n\
            artifacts                     list AOT artifacts and PJRT platform\n\
            lint [--root DIR]             determinism & safety static analysis\n\
-                 (docs/LINTS.md; non-zero exit on any violation)"
+                 (docs/LINTS.md; non-zero exit on any violation)\n\n\
+         GLOBAL OPTIONS\n\
+           --isa scalar|avx2|neon        pin the linalg microkernel ISA\n\
+                 (default: widest the CPU supports; results are bitwise-\n\
+                 identical across ISAs — wall-clock only; also settable\n\
+                 via FASTCV_FORCE_ISA, see docs/BACKENDS.md)"
     );
 }
 

@@ -1,0 +1,368 @@
+//! Kernel-conformance suite: every `(kernel, ISA)` pair against the scalar
+//! reference, **bitwise**.
+//!
+//! The dispatch layer's contract (`linalg::dispatch` module docs) is that
+//! the ISA knob is a pure wall-clock choice: every SIMD kernel reproduces
+//! the scalar canonical accumulation order bit-for-bit. These tests pin
+//! that contract at three levels —
+//!
+//! 1. the primitive table entries (`micro`/`axpy`/`axpy_sub`/`dot`) called
+//!    directly, across full tiles, `MR`/`NR` remainder lanes, and
+//!    `k = 0/1` edges;
+//! 2. the blocked entry points (`gemm_acc_isa`, `matmul_isa`,
+//!    `syrk_t_isa`) across awkward shapes, `KC` boundaries, and the
+//!    `aij == 0` skip path;
+//! 3. the dispatched consumers (`Cholesky` solves, `matvec_t`, `ger`)
+//!    under [`force_scope`] — the same process-wide override the CLI
+//!    `--isa` flag and `FASTCV_FORCE_ISA` install, so each reachable
+//!    dispatch path is exercised even on hardware that would auto-select
+//!    another. CI drives this binary under `FASTCV_FORCE_ISA=scalar` and
+//!    the widest vector ISA (the isa-matrix job) so the env knob itself is
+//!    also exercised end to end.
+//!
+//! On NaN: all *non-NaN* outputs must agree bitwise (that includes every
+//! ±∞ and ±0 case — fully determined by IEEE-754). Where an output is NaN,
+//! both sides must be NaN at the same position, but the *payload* is not
+//! part of the contract (payload propagation is implementation-defined and
+//! no consumer inspects it).
+
+use fastcv::linalg::dispatch::{self, force_scope, kernels, Isa};
+use fastcv::linalg::{gemm_acc_isa, ger, matmul_isa, matvec_t, syrk_t_isa, Mat};
+use fastcv::util::rng::Rng;
+
+fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.gauss())
+}
+
+/// Bitwise equality, except both-NaN positions (payload not pinned).
+fn assert_bits(got: &[f64], want: &[f64], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        if g.is_nan() && w.is_nan() {
+            continue;
+        }
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}: index {i} not bitwise equal (got {g:?}, want {w:?})"
+        );
+    }
+}
+
+/// The non-scalar ISAs this host can run (empty on plain x86-64 without
+/// AVX2 — then the suite degenerates to scalar-vs-scalar, which is fine:
+/// the CI isa-matrix job supplies hardware where it does not).
+fn simd_isas() -> Vec<Isa> {
+    Isa::supported().into_iter().filter(|&i| i != Isa::Scalar).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Level 1: primitive table entries, called directly.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kernel_conformance_dot_all_isas_bitwise() {
+    let scalar = kernels(Isa::Scalar);
+    let mut rng = Rng::new(101);
+    for isa in Isa::supported() {
+        let k = kernels(isa);
+        // lengths cover k=0, k=1, sub-stride tails (1..3), exact stride-4
+        // multiples, and both sides of the unroll boundary
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 11, 12, 64, 101, 256, 257] {
+            let a: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+            let b: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+            let got = (k.dot)(&a, &b);
+            let want = (scalar.dot)(&a, &b);
+            assert_bits(&[got], &[want], &format!("dot[{isa}] len={len}"));
+        }
+        // NaN/∞ propagation
+        let a = vec![1.0, f64::NAN, 3.0, f64::INFINITY, 5.0, -6.0, 7.0, 8.0, 9.0];
+        let b = vec![1.0; 9];
+        assert!((k.dot)(&a, &b).is_nan(), "dot[{isa}] NaN lost");
+        let c = vec![1.0, 2.0, 3.0, f64::INFINITY, 5.0, -6.0, 7.0, 8.0, 9.0];
+        assert_bits(&[(k.dot)(&c, &b)], &[(scalar.dot)(&c, &b)], &format!("dot[{isa}] inf"));
+    }
+}
+
+#[test]
+fn kernel_conformance_axpy_axpy_sub_all_isas_bitwise() {
+    let scalar = kernels(Isa::Scalar);
+    let mut rng = Rng::new(102);
+    for isa in Isa::supported() {
+        let k = kernels(isa);
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 16, 33, 101] {
+            for &a in &[0.7, -1.3, 0.0, f64::INFINITY, f64::NAN] {
+                let x: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+                let acc0: Vec<f64> = (0..len).map(|_| rng.gauss()).collect();
+                let mut got = acc0.clone();
+                let mut want = acc0.clone();
+                (k.axpy)(&mut got, a, &x);
+                (scalar.axpy)(&mut want, a, &x);
+                assert_bits(&got, &want, &format!("axpy[{isa}] len={len} a={a}"));
+                let mut got = acc0.clone();
+                let mut want = acc0;
+                (k.axpy_sub)(&mut got, a, &x);
+                (scalar.axpy_sub)(&mut want, a, &x);
+                assert_bits(&got, &want, &format!("axpy_sub[{isa}] len={len} a={a}"));
+            }
+        }
+        // NaN in the vector operand propagates identically
+        let x = vec![1.0, f64::NAN, 3.0, 4.0, 5.0];
+        let mut got = vec![1.0; 5];
+        let mut want = vec![1.0; 5];
+        (k.axpy)(&mut got, 2.0, &x);
+        (scalar.axpy)(&mut want, 2.0, &x);
+        assert_bits(&got, &want, &format!("axpy[{isa}] NaN operand"));
+        assert!(got[1].is_nan());
+    }
+}
+
+/// The per-element reference sequence the micro-kernel contract promises:
+/// `acc += a·b` per `k` ascending (two roundings), then `c += alpha·acc`
+/// at writeback — computed with plain scalar ops so any kernel that
+/// deviates in a single rounding or ordering fails bitwise.
+#[allow(clippy::too_many_arguments)]
+fn micro_reference(
+    c: &mut Mat,
+    a_sl: &[f64],
+    b_sl: &[f64],
+    tile_mr: usize,
+    tile_nr: usize,
+    ci: usize,
+    cj: usize,
+    mr: usize,
+    nr: usize,
+    kc: usize,
+    alpha: f64,
+) {
+    for r in 0..mr {
+        for s in 0..nr {
+            let mut acc = 0.0f64;
+            for k in 0..kc {
+                acc += a_sl[k * tile_mr + r] * b_sl[k * tile_nr + s];
+            }
+            c[(ci + r, cj + s)] += alpha * acc;
+        }
+    }
+}
+
+#[test]
+fn kernel_conformance_micro_kernel_all_tiles_edges_and_remainders() {
+    let mut rng = Rng::new(103);
+    for isa in Isa::supported() {
+        let k = kernels(isa);
+        let (tile_mr, tile_nr) = (k.gemm_mr, k.gemm_nr);
+        // every live sub-tile (remainder lanes) × k edges incl. 0 and 1
+        for kc in [0usize, 1, 2, 7, 64] {
+            for mr in 1..=tile_mr {
+                for nr in 1..=tile_nr {
+                    let a_sl: Vec<f64> = (0..kc * tile_mr)
+                        .map(|t| if t % tile_mr < mr { rng.gauss() } else { 0.0 })
+                        .collect();
+                    let b_sl: Vec<f64> = (0..kc * tile_nr)
+                        .map(|t| if t % tile_nr < nr { rng.gauss() } else { 0.0 })
+                        .collect();
+                    let c0 = random_mat(&mut rng, tile_mr + 2, tile_nr + 3);
+                    let (ci, cj) = (1, 2);
+                    let mut got = c0.clone();
+                    (k.micro)(&mut got, &a_sl, &b_sl, ci, cj, mr, nr, kc, 1.5);
+                    let mut want = c0;
+                    micro_reference(
+                        &mut want, &a_sl, &b_sl, tile_mr, tile_nr, ci, cj, mr, nr, kc, 1.5,
+                    );
+                    assert_bits(
+                        got.as_slice(),
+                        want.as_slice(),
+                        &format!("micro[{isa}] mr={mr} nr={nr} kc={kc}"),
+                    );
+                }
+            }
+        }
+        // NaN/∞ in the packed operands propagate identically per element
+        let kc = 5;
+        let mut a_sl: Vec<f64> = (0..kc * tile_mr).map(|_| rng.gauss()).collect();
+        let mut b_sl: Vec<f64> = (0..kc * tile_nr).map(|_| rng.gauss()).collect();
+        a_sl[tile_mr] = f64::NAN; // row 0, k=1
+        b_sl[2 * tile_nr + 1] = f64::INFINITY; // col 1, k=2
+        let c0 = random_mat(&mut rng, tile_mr, tile_nr);
+        let mut got = c0.clone();
+        (k.micro)(&mut got, &a_sl, &b_sl, 0, 0, tile_mr, tile_nr, kc, 1.0);
+        let mut want = c0;
+        micro_reference(
+            &mut want, &a_sl, &b_sl, tile_mr, tile_nr, 0, 0, tile_mr, tile_nr, kc, 1.0,
+        );
+        assert_bits(got.as_slice(), want.as_slice(), &format!("micro[{isa}] nan/inf"));
+        assert!(got[(0, 0)].is_nan(), "micro[{isa}]: NaN row lost");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Level 2: blocked entry points across shapes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kernel_conformance_gemm_bitwise_across_isas() {
+    let mut rng = Rng::new(104);
+    // full tiles, remainder lanes in both M and N, k = 0/1, and shapes
+    // straddling the MC=128 / KC=256 cache-block boundaries
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (4, 7, 8),
+        (6, 1, 8),
+        (12, 64, 16),
+        (3, 0, 5),
+        (17, 33, 9),
+        (24, 256, 32),
+        (65, 129, 31),
+        (130, 7, 257),
+        (64, 513, 24),
+        (131, 300, 41),
+    ];
+    for &(m, k, n) in shapes {
+        let a = random_mat(&mut rng, m, k);
+        let b = random_mat(&mut rng, k, n);
+        let want = matmul_isa(&a, &b, Isa::Scalar);
+        for isa in simd_isas() {
+            let got = matmul_isa(&a, &b, isa);
+            assert_bits(got.as_slice(), want.as_slice(), &format!("matmul[{isa}] ({m},{k},{n})"));
+            // accumulate form with alpha/beta
+            let c0 = random_mat(&mut rng, m, n);
+            let mut got = c0.clone();
+            gemm_acc_isa(&mut got, &a, &b, 2.5, 0.5, isa);
+            let mut want_acc = c0;
+            gemm_acc_isa(&mut want_acc, &a, &b, 2.5, 0.5, Isa::Scalar);
+            assert_bits(
+                got.as_slice(),
+                want_acc.as_slice(),
+                &format!("gemm_acc[{isa}] ({m},{k},{n})"),
+            );
+        }
+    }
+    // NaN/∞ inputs: propagation identical across ISAs
+    let mut a = random_mat(&mut rng, 19, 70);
+    let b = random_mat(&mut rng, 70, 13);
+    a[(3, 5)] = f64::NAN;
+    a[(7, 69)] = f64::INFINITY;
+    a[(12, 0)] = f64::NEG_INFINITY;
+    let want = matmul_isa(&a, &b, Isa::Scalar);
+    for isa in simd_isas() {
+        let got = matmul_isa(&a, &b, isa);
+        assert_bits(got.as_slice(), want.as_slice(), &format!("matmul[{isa}] nan/inf"));
+        assert!(got[(3, 0)].is_nan(), "matmul[{isa}]: NaN row lost");
+    }
+}
+
+#[test]
+fn kernel_conformance_syrk_bitwise_across_isas() {
+    let mut rng = Rng::new(105);
+    for &(n, p) in &[(1usize, 1usize), (10, 4), (5, 17), (33, 33), (64, 20), (30, 130), (64, 257)] {
+        let mut a = random_mat(&mut rng, n, p);
+        // sprinkle exact zeros so the aij == 0 skip path is exercised under
+        // every ISA (the skip precedes the axpy, so it cannot change bits —
+        // this pins that)
+        for i in 0..n {
+            for j in 0..p {
+                if (i + j) % 5 == 0 {
+                    a[(i, j)] = 0.0;
+                }
+            }
+        }
+        let want = syrk_t_isa(&a, Isa::Scalar);
+        for isa in simd_isas() {
+            let got = syrk_t_isa(&a, isa);
+            assert_bits(got.as_slice(), want.as_slice(), &format!("syrk_t[{isa}] ({n},{p})"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Level 3: dispatched consumers under the process-wide override.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kernel_conformance_solves_and_row_kernels_under_forced_dispatch() {
+    let mut rng = Rng::new(106);
+    let n = 23;
+    let base = random_mat(&mut rng, n + 4, n);
+    let spd = {
+        let mut g = fastcv::linalg::syrk_t(&base);
+        for i in 0..n {
+            g[(i, i)] += 0.5;
+        }
+        g
+    };
+    let b = random_mat(&mut rng, n, 5);
+    let u: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+    let v: Vec<f64> = (0..7).map(|_| rng.gauss()).collect();
+    let m0 = random_mat(&mut rng, n, 7);
+    let x_t: Vec<f64> = (0..n).map(|i| if i % 4 == 0 { 0.0 } else { rng.gauss() }).collect();
+
+    // reference run under forced scalar
+    let (l_ref, solve_ref, lmat_ref, ltmat_ref, ger_ref, mvt_ref) = {
+        let _g = force_scope(Isa::Scalar).unwrap();
+        let ch = fastcv::linalg::Cholesky::factor(&spd).unwrap();
+        let mut gm = m0.clone();
+        ger(&mut gm, 1.7, &u, &v);
+        (
+            ch.l().clone(),
+            ch.solve_mat(&b),
+            ch.solve_l_mat(&b),
+            ch.solve_lt_mat(&b),
+            gm,
+            matvec_t(&base, &x_t),
+        )
+    };
+    for isa in simd_isas() {
+        let _g = force_scope(isa).unwrap();
+        assert_eq!(dispatch::active(), isa);
+        let ch = fastcv::linalg::Cholesky::factor(&spd).unwrap();
+        assert_bits(ch.l().as_slice(), l_ref.as_slice(), &format!("chol factor[{isa}]"));
+        assert_bits(ch.solve_mat(&b).as_slice(), solve_ref.as_slice(), &format!("solve_mat[{isa}]"));
+        assert_bits(ch.solve_l_mat(&b).as_slice(), lmat_ref.as_slice(), &format!("solve_l_mat[{isa}]"));
+        assert_bits(
+            ch.solve_lt_mat(&b).as_slice(),
+            ltmat_ref.as_slice(),
+            &format!("solve_lt_mat[{isa}]"),
+        );
+        let mut gm = m0.clone();
+        ger(&mut gm, 1.7, &u, &v);
+        assert_bits(gm.as_slice(), ger_ref.as_slice(), &format!("ger[{isa}]"));
+        assert_bits(&matvec_t(&base, &x_t), &mvt_ref, &format!("matvec_t[{isa}]"));
+    }
+}
+
+#[test]
+fn kernel_conformance_spilled_solve_under_forced_dispatch() {
+    // The spill layer's streamed backward solve shares the axpy_sub table
+    // entry — force each ISA and compare the whole out-of-core solve.
+    let mut rng = Rng::new(107);
+    let n = 20;
+    let base = random_mat(&mut rng, n + 4, n);
+    let mut g = fastcv::linalg::syrk_t(&base);
+    for i in 0..n {
+        g[(i, i)] += 0.75;
+    }
+    let b = random_mat(&mut rng, n, 3);
+    let solve_under = |isa: Isa| {
+        let _guard = force_scope(isa).unwrap();
+        let mut store = fastcv::linalg::PanelStore::new(n, 7, None).unwrap();
+        store.write_mat(&g).unwrap();
+        let ch = fastcv::linalg::chol_spill(store, None).unwrap();
+        ch.solve_mat(&b).unwrap()
+    };
+    let want = solve_under(Isa::Scalar);
+    for isa in simd_isas() {
+        let got = solve_under(isa);
+        assert_bits(got.as_slice(), want.as_slice(), &format!("spilled solve[{isa}]"));
+    }
+}
+
+#[test]
+fn kernel_conformance_forced_isa_is_what_runs() {
+    // force_scope must actually steer dispatch (not just set a flag), and
+    // auto-detection must pick the widest supported ISA when cleared.
+    for isa in Isa::supported() {
+        let _g = force_scope(isa).unwrap();
+        assert_eq!(dispatch::active(), isa);
+        assert_eq!(dispatch::active_kernels().isa, isa);
+    }
+}

@@ -96,6 +96,40 @@ fn l3_accepts_safety_comment_in_audited_file() {
     assert!(lint.diagnostics.is_empty(), "{:?}", lint.diagnostics);
 }
 
+#[test]
+fn l3_flags_intrinsics_unsafe_outside_the_audited_simd_files() {
+    let src = fixture("bad_l3_intrinsics.rs");
+    // SAFETY notes are present and adjacent, so only the audited-file leg
+    // fires — once per `unsafe` token (the wrapper call at line 8 and the
+    // `#[target_feature]` fn declaration at line 14). A new SIMD module
+    // cannot ship without being added to UNSAFE_AUDITED_FILES.
+    assert_eq!(lines_of(&src, "rust/src/linalg/simd_sse2.rs", Rule::Unsafe), vec![8, 14]);
+}
+
+#[test]
+fn l3_accepts_the_audited_simd_kernel_files() {
+    let src = fixture("bad_l3_intrinsics.rs");
+    // The same source is fully clean under both audited SIMD kernel paths:
+    // L3 passes (SAFETY + allowlist) and L1 is silent because the SIMD
+    // modules sit in the kernel allowlist alongside gemm.rs.
+    for rel in ["rust/src/linalg/simd_avx2.rs", "rust/src/linalg/simd_neon.rs"] {
+        let lint = lint_source(rel, &src);
+        assert!(lint.diagnostics.is_empty(), "{rel}: {:?}", lint.diagnostics);
+    }
+}
+
+#[test]
+fn l1_is_silent_in_the_dispatch_and_simd_kernel_files() {
+    let src = fixture("bad_l1.rs");
+    for rel in [
+        "rust/src/linalg/dispatch.rs",
+        "rust/src/linalg/simd_avx2.rs",
+        "rust/src/linalg/simd_neon.rs",
+    ] {
+        assert!(lines_of(&src, rel, Rule::FloatAccum).is_empty(), "{rel}");
+    }
+}
+
 // ---------------------------------------------------------------- L4
 
 #[test]

@@ -1,0 +1,18 @@
+// Mini SIMD microkernel in the house idiom: a safe wrapper whose only
+// `unsafe` is the call into a `#[target_feature]` impl, each carrying an
+// adjacent SAFETY note. Clean under the audited kernel paths; an
+// unaudited path must still fail the allowlist leg of rule L3.
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    // SAFETY: `axpy_impl` only requires the CPU feature promised by the
+    // dispatch table, which runtime detection verified before selection.
+    unsafe { axpy_impl(y, a, x) }
+}
+
+// SAFETY: `#[target_feature]` fn — the implicit unsafe body only touches
+// its argument slices through checked iterators; no raw pointers escape.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_impl(y: &mut [f64], a: f64, x: &[f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}

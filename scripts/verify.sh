@@ -40,6 +40,12 @@ cargo test -q tiled_
 echo "== spill-layer equivalence: cargo test -q spill_ =="
 cargo test -q spill_
 
+# The kernel-conformance suite is the contract that makes the SIMD ISA a
+# pure wall-clock knob (every (kernel, ISA) pair bitwise equal to the
+# scalar reference under forced dispatch); run it by name too.
+echo "== kernel conformance: cargo test -q kernel_conformance_ =="
+cargo test -q kernel_conformance_
+
 echo "== benches compile: cargo bench --no-run =="
 cargo bench --no-run
 
