@@ -1,0 +1,141 @@
+//! Streaming-engine ablation: what maintaining the sliding window's
+//! Cholesky factor by rank-1 up-downdates buys over rebuilding it.
+//!
+//! For each window shape `(N, P)` the bench times one full **window step**
+//! of the factor work both ways (docs/STREAM.md):
+//!
+//! 1. **incremental** — evict the oldest row (hyperbolic downdate) +
+//!    append the new one (Givens update): `O(P²)`, what
+//!    [`fastcv::fastcv::incremental::SlidingWindowCv`] does per step.
+//! 2. **rebuild** — assemble the window matrix, `syrk` the augmented
+//!    Gram, add the ridge, refactor: `O(NP² + P³)`, what `--rebuild`
+//!    (and every step of a naive streaming loop) pays.
+//!
+//! Both arms exclude the CV evaluation itself — that cost is identical in
+//! the two modes, and the engine's claim is about factor maintenance.
+//! Results go to `BENCH_stream.json` (`$FASTCV_BENCH_OUT` or the working
+//! directory); `FASTCV_BENCH_SCALE=tiny` shrinks the workload for CI. The
+//! bench asserts the headline contract: ≥ 10× per step at the largest
+//! benched window.
+//!
+//! Run: `cargo bench --bench ablation_stream`
+
+use fastcv::linalg::{chol_downdate, chol_update, syrk_t, Cholesky, Mat};
+use fastcv::util::json::Json;
+use fastcv::util::rng::Rng;
+use fastcv::util::table::{fdur, Table};
+use fastcv::util::timed;
+use std::collections::{BTreeMap, VecDeque};
+
+const LAMBDA: f64 = 1.0;
+
+/// One augmented sample row `x̃ = [x, 1]`.
+fn sample_row(rng: &mut Rng, p: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..p).map(|_| rng.gauss()).collect();
+    v.push(1.0);
+    v
+}
+
+/// Exact factor of the window's ridged augmented Gram (the rebuild arm's
+/// unit of work, minus the matrix assembly measured separately below).
+fn factor_window(window: &VecDeque<Vec<f64>>, p: usize) -> Cholesky {
+    let n = window.len();
+    let xa = Mat::from_fn(n, p + 1, |i, j| window[i][j]);
+    let mut g = syrk_t(&xa);
+    for i in 0..p {
+        g[(i, i)] += LAMBDA;
+    }
+    Cholesky::factor(&g).expect("ridged augmented gram is SPD")
+}
+
+fn main() {
+    let tiny = std::env::var("FASTCV_BENCH_SCALE").as_deref() == Ok("tiny");
+    // (window N, features P, steps timed per arm). The ratio is ~N + P by
+    // the flop counts, so it grows with the window — "largest benched N"
+    // is the headline row.
+    let shapes: &[(usize, usize, usize)] = if tiny {
+        &[(64, 16, 400), (192, 24, 400)]
+    } else {
+        &[(256, 64, 400), (512, 96, 200), (1024, 128, 100)]
+    };
+
+    let mut table = Table::new(vec!["window", "incremental/step", "rebuild/step", "speedup"])
+        .with_title("Ablation: streaming factor maintenance vs per-step rebuild".to_string());
+    let mut rows = Vec::new();
+    let mut last_speedup = 0.0;
+    let mut checksum = 0.0;
+
+    for &(n, p, steps) in shapes {
+        let mut rng = Rng::new(2018);
+        let mut window: VecDeque<Vec<f64>> = (0..n).map(|_| sample_row(&mut rng, p)).collect();
+        let mut fresh: VecDeque<Vec<f64>> = (0..steps).map(|_| sample_row(&mut rng, p)).collect();
+
+        // Incremental arm: downdate the evicted row, update the appended
+        // one — the factor work of one SlidingWindowCv step.
+        let mut ch = factor_window(&window, p);
+        let (_, t_inc) = timed(|| {
+            for _ in 0..steps {
+                let old = window.pop_front().expect("window is non-empty");
+                chol_downdate(&mut ch, &old).expect("well-ridged window stays SPD");
+                let new = fresh.pop_front().expect("enough fresh samples");
+                chol_update(&mut ch, &new);
+                fresh.push_back(old);
+                window.push_back(new);
+            }
+        });
+        checksum += ch.l()[(p, p)];
+
+        // Rebuild arm: the same window rotation, but the factor comes from
+        // matrix assembly + syrk + refactor every step (fewer reps — each
+        // one is the expensive path).
+        let rebuild_steps = (steps / 10).max(3);
+        let (_, t_reb) = timed(|| {
+            for _ in 0..rebuild_steps {
+                let old = window.pop_front().expect("window is non-empty");
+                let new = fresh.pop_front().expect("enough fresh samples");
+                fresh.push_back(old);
+                window.push_back(new);
+                checksum += factor_window(&window, p).l()[(p, p)];
+            }
+        });
+
+        let per_inc = t_inc / steps as f64;
+        let per_reb = t_reb / rebuild_steps as f64;
+        let speedup = per_reb / per_inc.max(1e-12);
+        last_speedup = speedup;
+        table.row(vec![
+            format!("N={n} P={p}"),
+            fdur(per_inc),
+            fdur(per_reb),
+            format!("{speedup:.1}x"),
+        ]);
+        let mut row = BTreeMap::new();
+        row.insert("n".to_string(), Json::Num(n as f64));
+        row.insert("p".to_string(), Json::Num(p as f64));
+        row.insert("seconds_incremental_step".to_string(), Json::Num(per_inc));
+        row.insert("seconds_rebuild_step".to_string(), Json::Num(per_reb));
+        row.insert("speedup".to_string(), Json::Num(speedup));
+        rows.push(Json::Obj(row));
+    }
+
+    println!("{}", table.render());
+    println!("(factor checksum {checksum:.6e})");
+
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str("stream_window_step".to_string()));
+    doc.insert("lambda".to_string(), Json::Num(LAMBDA));
+    doc.insert("windows".to_string(), Json::Arr(rows));
+    doc.insert("speedup_at_largest".to_string(), Json::Num(last_speedup));
+    let out_dir = std::env::var("FASTCV_BENCH_OUT").unwrap_or_else(|_| ".".to_string());
+    let path = format!("{out_dir}/BENCH_stream.json");
+    match std::fs::write(&path, Json::Obj(doc).dump()) {
+        Ok(()) => eprintln!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    assert!(
+        last_speedup >= 10.0,
+        "incremental step must be ≥ 10x the rebuild at the largest window \
+         (got {last_speedup:.1}x) — the O(P²) vs O(NP² + P³) contract"
+    );
+}

@@ -822,6 +822,34 @@ fn hat_from_primal_gram(
 }
 
 impl HatMatrix {
+    /// Build from an already-augmented design `xa = [X, 1]` and an
+    /// externally maintained Cholesky factor of its ridged Gram
+    /// `G̃ = X̃ᵀX̃ + λI₀` — the seam the incremental engine
+    /// ([`crate::fastcv::incremental`]) uses: after a rank-1 up/downdate
+    /// it already holds the current factor, so rebuilding via
+    /// [`HatMatrix::build`] would redo the `O(P³)` factorisation this
+    /// constructor skips. The solve + hat GEMM are the exact code path of
+    /// the primal builder, so given a bitwise-equal factor the result is
+    /// bitwise equal to a from-scratch build.
+    pub(crate) fn from_primal_factor(
+        xa: &Mat,
+        ch: Cholesky,
+        lambda: f64,
+        pool: Option<&ThreadPool>,
+    ) -> HatMatrix {
+        assert_eq!(ch.n(), xa.cols(), "factor dimension must match augmented design");
+        let w = ch.solve_mat(&xa.t()); // W = G⁻¹X̃ᵀ, (P+1)×N
+        let mut h = matmul_pool(xa, &w, pool);
+        h.symmetrize();
+        HatMatrix {
+            h,
+            xa: xa.clone(),
+            factor: GramFactor::Chol(ch),
+            lambda,
+            backend: GramBackend::Primal,
+        }
+    }
+
     /// Build from raw data `x` (N×P) with ridge λ (λ=0 allowed when the
     /// gram matrix is non-singular, i.e. typically N > P). Always the
     /// primal construction — the historical entry point, kept bit-stable;

@@ -1,0 +1,387 @@
+//! # Incremental CV engine — sliding-window streaming on a rolling factor
+//!
+//! The paper's analytic CV machinery assumes a fixed design matrix: build
+//! the (augmented, ridged) Gram `G̃ = X̃ᵀX̃ + λI₀` once, factor it, and
+//! amortise the factor across folds and permutations. A *streaming* setting
+//! breaks that amortisation: each arriving sample would force an `O(NP²)`
+//! Gram rebuild plus an `O(P³)` refactor per step.
+//!
+//! This module restores the amortisation across **time**. The sliding
+//! window's factor is maintained by the [`mod@crate::linalg::chol_update`]
+//! rotation kernels:
+//!
+//! - **append** a sample `x` → rank-1 *update* of `L` with `x̃ = [x, 1]`
+//!   (`O(P²)`),
+//! - **evict** the oldest sample → hyperbolic *downdate* with its `x̃`
+//!   (`O(P²)`),
+//!
+//! so a full window step costs `O(P²)` against the `O(NP² + P³)` rebuild.
+//! Centering never recurs: the intercept column of `X̃` carries the mean
+//! implicitly (the fitted intercept absorbs it — §2.2's augmented
+//! formulation), so append/evict never touch the other rows.
+//!
+//! ## Drift and the exact-refresh knob
+//!
+//! Each rotation is backward-stable but not exact: after `t` steps the
+//! maintained factor agrees with a from-scratch factorisation to roughly
+//! `t · ε · κ(G̃)`. [`StreamConfig::exact_refresh_every`] = `K` bounds the
+//! drift by rebuilding the factor exactly every `K` evaluated steps
+//! through the *same* `syrk → ridge → factor` code path as
+//! [`crate::fastcv::hat::GramCache`]'s primal arm — so the step after a
+//! refresh is **bitwise** a from-scratch rebuild. `K = 0` never refreshes
+//! (pure incremental); `K = 1` degenerates to the rebuild reference. A
+//! failed downdate (the window's Gram drifting to the SPD boundary —
+//! [`crate::linalg::chol_downdate`] refuses rather than corrupt the
+//! factor) also forces an exact refresh, so the engine cannot silently
+//! degrade.
+//!
+//! ## Determinism
+//!
+//! The same input sequence under the same [`StreamConfig`] produces the
+//! same output bits: folds come from a fixed-seed [`Rng`], the rolling
+//! permutation null uses the counter-addressed `Rng::stream` labels of
+//! [`crate::fastcv::perm::permuted_labels`] under one anchor, and the
+//! update kernels are ISA-invariant (the `kernel_conformance_*` and
+//! `stream_*` suites pin this under forced scalar and SIMD dispatch).
+//!
+//! ## Store lineage
+//!
+//! With a [`FactorStore`] on the context, the rolling factor lives in the
+//! store as an [`crate::store::ArtifactKind::Window`] artifact. A step
+//! does not invalidate the previous entry — it **supersedes** it
+//! ([`FactorStore::supersede`]): the child key (a running fingerprint of
+//! the exact operation sequence) replaces the parent in place and a
+//! lineage link keeps stale parent keys resolving to the updated factor.
+
+use crate::cv::folds::kfold;
+use crate::cv::metrics::accuracy_signed;
+use crate::fastcv::binary::AnalyticBinaryCv;
+use crate::fastcv::context::ComputeContext;
+use crate::fastcv::hat::HatMatrix;
+use crate::fastcv::perm::{p_value, permuted_labels};
+use crate::fastcv::FoldCache;
+use crate::linalg::{chol_downdate, chol_update, syrk_t_pool, Cholesky, Mat};
+use crate::model::lda_binary::signed_codes;
+use crate::store::key::Fnv;
+use crate::store::{Artifact, ArtifactKey, FactorStore};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// The sliding-window factor as stored state: the current Cholesky factor
+/// of the window's ridged augmented Gram, plus the lineage fingerprint of
+/// the operation sequence that produced it (the window artifact's store
+/// identity — see [`ArtifactKey::window`]).
+#[derive(Clone)]
+pub struct WindowFactor {
+    /// Cholesky factor of `G̃ = X̃ᵀX̃ + λI₀` over the current window.
+    pub chol: Cholesky,
+    /// Running FNV digest of the exact build/append/evict sequence.
+    pub lineage: u64,
+}
+
+impl WindowFactor {
+    /// Resident RAM of the factor in bytes (the store's budget currency).
+    pub fn resident_bytes(&self) -> usize {
+        self.chol.n() * self.chol.n() * 8
+    }
+}
+
+/// Streaming-engine configuration. Construct with struct-update syntax
+/// over [`StreamConfig::default`].
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Sliding-window capacity (samples kept live). Must be ≥ `folds`.
+    pub window: usize,
+    /// Ridge λ; must be > 0 — the unpenalised-intercept augmented Gram is
+    /// SPD for any n ≥ 1 exactly when λ > 0, which is what makes the
+    /// window factor maintainable from the first evaluated step.
+    pub lambda: f64,
+    /// CV fold count `k` (≥ 2).
+    pub folds: usize,
+    /// Rolling permutation-null size per step; 0 disables the null.
+    pub n_perm: usize,
+    /// Master seed: folds and the permutation anchor derive from it.
+    pub seed: u64,
+    /// Exact-refresh period `K`: every `K` evaluated steps the factor is
+    /// rebuilt from scratch (bitwise the rebuild path). 0 = never.
+    pub exact_refresh_every: usize,
+    /// Reference mode: rebuild the factor from scratch on *every* step
+    /// instead of maintaining it (what the incremental path is measured
+    /// and tested against).
+    pub rebuild: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig {
+            window: 64,
+            lambda: 1.0,
+            folds: 5,
+            n_perm: 0,
+            seed: 42,
+            exact_refresh_every: 0,
+            rebuild: false,
+        }
+    }
+}
+
+/// One evaluated stream step's outputs.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    /// 1-based count of samples ingested so far.
+    pub step: u64,
+    /// Current window size (≤ `window`).
+    pub n: usize,
+    /// k-fold CV accuracy over the current window.
+    pub accuracy: f64,
+    /// Rolling permutation p-value (`None` when `n_perm = 0`).
+    pub p_value: Option<f64>,
+    /// Whether this step's factor came from an exact rebuild (first
+    /// build, `--exact-refresh-every` firing, reference mode, or a
+    /// downdate rescue).
+    pub refreshed: bool,
+    /// Whether a sample was evicted from the window this step.
+    pub evicted: bool,
+}
+
+/// The streaming driver: feed samples with [`SlidingWindowCv::push`], get
+/// a [`StepResult`] back once the window holds enough samples to evaluate
+/// (`max(folds, 2)`).
+pub struct SlidingWindowCv<'p> {
+    cfg: StreamConfig,
+    ctx: ComputeContext<'p>,
+    window: VecDeque<(Vec<f64>, usize)>,
+    /// Feature dimension, pinned by the first sample.
+    dim: Option<usize>,
+    factor: Option<Arc<WindowFactor>>,
+    /// Store key of the currently published factor (lineage head).
+    store_key: Option<ArtifactKey>,
+    anchor: u64,
+    fold_seed: u64,
+    step: u64,
+    since_refresh: usize,
+    /// Evaluated steps whose factor was maintained incrementally (the
+    /// complement of refreshes — surfaced for tests/benches).
+    pub incremental_steps: u64,
+    /// Exact refreshes forced by a refused downdate (SPD-boundary rescue).
+    pub downdate_rescues: u64,
+}
+
+impl<'p> SlidingWindowCv<'p> {
+    /// Validate `cfg` and bind the driver to a context (pool, store, ISA).
+    pub fn new(cfg: StreamConfig, ctx: ComputeContext<'p>) -> Result<SlidingWindowCv<'p>> {
+        if !(cfg.lambda > 0.0) {
+            bail!("streaming CV requires ridge λ > 0 (got {})", cfg.lambda);
+        }
+        if cfg.folds < 2 {
+            bail!("streaming CV needs k ≥ 2 folds (got {})", cfg.folds);
+        }
+        if cfg.window < cfg.folds {
+            bail!("window ({}) must hold at least k = {} samples", cfg.window, cfg.folds);
+        }
+        // One anchor for the whole stream (the perm engines' discipline:
+        // draw once, then address permutations by counter).
+        let mut rng = Rng::new(cfg.seed);
+        let anchor = rng.next_u64();
+        let fold_seed = rng.next_u64();
+        Ok(SlidingWindowCv {
+            cfg,
+            ctx,
+            window: VecDeque::new(),
+            dim: None,
+            factor: None,
+            store_key: None,
+            anchor,
+            fold_seed,
+            step: 0,
+            since_refresh: 0,
+            incremental_steps: 0,
+            downdate_rescues: 0,
+        })
+    }
+
+    /// Ingest one sample. Returns `None` while the window is still
+    /// filling; afterwards, the step's rolling CV result.
+    pub fn push(&mut self, x: Vec<f64>, label: usize) -> Result<Option<StepResult>> {
+        let dim = *self.dim.get_or_insert(x.len());
+        if x.len() != dim {
+            bail!("sample {} has {} features, stream started with {dim}", self.step + 1, x.len());
+        }
+        self.step += 1;
+        let mut evicted = false;
+        // Evict the oldest sample once the window is at capacity —
+        // downdating the factor with its augmented row. A refused
+        // downdate (SPD boundary) drops the factor; the rebuild branch
+        // below restores it exactly.
+        if self.window.len() == self.cfg.window {
+            if let Some((old_x, _)) = self.window.pop_front() {
+                evicted = true;
+                if !self.cfg.rebuild {
+                    if let Some(f) = self.factor.as_mut() {
+                        let wf = Arc::make_mut(f);
+                        let v = augmented(&old_x);
+                        if chol_downdate(&mut wf.chol, &v).is_ok() {
+                            wf.lineage = lineage_op(wf.lineage, b'e', &v);
+                        } else {
+                            self.factor = None;
+                            self.downdate_rescues += 1;
+                        }
+                    }
+                }
+            }
+        }
+        // Append the new sample: rank-1 update with x̃ = [x, 1]. The mean
+        // is never recentred — the intercept column carries it.
+        if !self.cfg.rebuild {
+            if let Some(f) = self.factor.as_mut() {
+                let wf = Arc::make_mut(f);
+                let v = augmented(&x);
+                chol_update(&mut wf.chol, &v);
+                wf.lineage = lineage_op(wf.lineage, b'a', &v);
+            }
+        }
+        self.window.push_back((x, label));
+        let n = self.window.len();
+        if n < self.cfg.folds.max(2) {
+            return Ok(None);
+        }
+        let refresh_due = self.cfg.exact_refresh_every > 0
+            && self.since_refresh + 1 >= self.cfg.exact_refresh_every;
+        let refreshed = self.factor.is_none() || self.cfg.rebuild || refresh_due;
+        if refreshed {
+            self.refresh_exact()?;
+            self.since_refresh = 0;
+        } else {
+            self.since_refresh += 1;
+            self.incremental_steps += 1;
+        }
+        self.publish();
+        match self.factor.clone() {
+            Some(wf) => Ok(Some(self.evaluate(&wf, refreshed, evicted)?)),
+            None => bail!("stream step {}: no factor after refresh", self.step),
+        }
+    }
+
+    /// Borrow the current rolling factor (None while the window fills).
+    pub fn factor(&self) -> Option<&WindowFactor> {
+        self.factor.as_deref()
+    }
+
+    /// Rebuild the factor from scratch over the current window — the same
+    /// `syrk_t_pool → ridge(I₀) → Cholesky::factor` sequence as the
+    /// primal [`crate::fastcv::hat::GramCache`] arm, so the result is
+    /// bitwise what a non-streaming build would produce. Consults the
+    /// store first: an identical lineage (same window bytes under the
+    /// same λ) is a hit, possibly through a supersession link.
+    fn refresh_exact(&mut self) -> Result<()> {
+        let xa = self.window_x().augment_ones();
+        let lineage = lineage_exact(&xa);
+        if let Some(store) = self.ctx.store() {
+            let key = ArtifactKey::window(lineage, self.cfg.lambda);
+            if let Some(wf) = store.resolve_window(&key) {
+                self.factor = Some(wf);
+                return Ok(());
+            }
+        }
+        let p1 = xa.cols();
+        let mut g = syrk_t_pool(&xa, self.ctx.pool());
+        for i in 0..p1 - 1 {
+            // lint:allow(float_accum, reason = "ridge diagonal add: each entry touched exactly once — order-free")
+            g[(i, i)] += self.cfg.lambda;
+        }
+        let ch = Cholesky::factor(&g)
+            .context("window gram not SPD — degenerate window (duplicate rows with λ≈0?)")?;
+        self.factor = Some(Arc::new(WindowFactor { chol: ch, lineage }));
+        Ok(())
+    }
+
+    /// Route the current factor through the store's lineage API: the
+    /// first publication is a [`FactorStore::put`]; every later one
+    /// supersedes the previous step's key in place.
+    fn publish(&mut self) {
+        let (Some(store), Some(wf)) = (self.ctx.store(), self.factor.as_ref()) else {
+            return;
+        };
+        let child = ArtifactKey::window(wf.lineage, self.cfg.lambda);
+        if self.store_key.as_ref() == Some(&child) {
+            return; // store hit on refresh — already live under this key
+        }
+        match self.store_key.take() {
+            None => store.put(child.clone(), Artifact::Window(Arc::clone(wf))),
+            Some(parent) => store.supersede(&parent, child.clone(), Artifact::Window(Arc::clone(wf))),
+        }
+        self.store_key = Some(child);
+    }
+
+    /// Current window as an N×P matrix (oldest sample first).
+    fn window_x(&self) -> Mat {
+        let n = self.window.len();
+        let p = self.dim.unwrap_or(0);
+        Mat::from_fn(n, p, |i, j| self.window[i].0[j])
+    }
+
+    /// Rolling k-fold CV (and optional permutation null) on the current
+    /// factor: the factor is handed to [`HatMatrix::from_primal_factor`],
+    /// so the solve → hat → fold-cache → decision-value chain is exactly
+    /// the batch engine's.
+    fn evaluate(&self, wf: &WindowFactor, refreshed: bool, evicted: bool) -> Result<StepResult> {
+        let n = self.window.len();
+        let xa = self.window_x().augment_ones();
+        let labels: Vec<usize> = self.window.iter().map(|(_, l)| *l).collect();
+        let y = signed_codes(&labels);
+        let hat =
+            HatMatrix::from_primal_factor(&xa, wf.chol.clone(), self.cfg.lambda, self.ctx.pool());
+        let folds = kfold(n, self.cfg.folds, &mut Rng::new(self.fold_seed));
+        let acv = AnalyticBinaryCv::with_hat(hat, &y);
+        let cache = FoldCache::prepare_pool(&acv.hat, &folds, false, self.ctx.pool())
+            .with_context(|| format!("stream step {}: fold cache", self.step))?;
+        let dvals = acv.decision_values_cached(&cache);
+        let accuracy = accuracy_signed(&dvals, &y);
+        let p_val = if self.cfg.n_perm > 0 {
+            let b = self.cfg.n_perm;
+            let perms: Vec<Vec<f64>> = (0..b)
+                .map(|t| signed_codes(&permuted_labels(&labels, self.anchor, t as u64)))
+                .collect();
+            let ys = Mat::from_fn(n, b, |i, t| perms[t][i]);
+            let dmat = acv.decision_values_cached_mat(&cache, &ys);
+            let null: Vec<f64> = (0..b)
+                .map(|t| {
+                    let col: Vec<f64> = (0..n).map(|i| dmat[(i, t)]).collect();
+                    accuracy_signed(&col, &perms[t])
+                })
+                .collect();
+            Some(p_value(accuracy, &null))
+        } else {
+            None
+        };
+        Ok(StepResult { step: self.step, n, accuracy, p_value: p_val, refreshed, evicted })
+    }
+}
+
+/// `x̃ = [x, 1]` — one augmented design row (the update/downdate vector).
+fn augmented(x: &[f64]) -> Vec<f64> {
+    let mut v = Vec::with_capacity(x.len() + 1);
+    v.extend_from_slice(x);
+    v.push(1.0);
+    v
+}
+
+/// Lineage fingerprint of an exact build over the augmented window.
+fn lineage_exact(xa: &Mat) -> u64 {
+    let mut h = Fnv::new().str("exact").word(xa.rows() as u64).word(xa.cols() as u64);
+    for v in xa.as_slice() {
+        h = h.word(v.to_bits());
+    }
+    h.finish()
+}
+
+/// Lineage transition for one append (`op = b'a'`) or evict (`op = b'e'`).
+fn lineage_op(parent: u64, op: u8, v: &[f64]) -> u64 {
+    let mut h = Fnv::new().word(parent).word(u64::from(op)).word(v.len() as u64);
+    for x in v {
+        h = h.word(x.to_bits());
+    }
+    h.finish()
+}

@@ -96,6 +96,7 @@ pub mod bigdata;
 pub mod binary;
 pub mod context;
 pub mod hat;
+pub mod incremental;
 pub mod lambda_search;
 pub mod multiclass;
 pub mod perm;
@@ -103,6 +104,7 @@ pub mod perm_batch;
 pub mod woodbury;
 
 pub use context::ComputeContext;
+pub use incremental::{SlidingWindowCv, StepResult, StreamConfig, WindowFactor};
 pub use crate::linalg::TilePolicy;
 pub use hat::{GramBackend, GramCache, SharedNestedGram, SpectralGram};
 

@@ -136,6 +136,13 @@ impl Cholesky {
         &self.l
     }
 
+    /// Mutable access to the lower factor — the in-place seam for the
+    /// rank-1/block up/downdate kernels ([`crate::linalg::chol_update`]),
+    /// which rotate the factor column by column without reallocating.
+    pub(crate) fn l_mut(&mut self) -> &mut Mat {
+        &mut self.l
+    }
+
     /// Dimension.
     pub fn n(&self) -> usize {
         self.l.rows()

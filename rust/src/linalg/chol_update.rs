@@ -1,0 +1,364 @@
+//! Rank-1 and block-k Cholesky up/downdates — the streaming engine's
+//! factor-maintenance kernels.
+//!
+//! Given `A = L Lᵀ`, [`chol_update`] rotates `L` into the factor of
+//! `A + v vᵀ` and [`chol_downdate`] into the factor of `A − v vᵀ`, in
+//! `O(n²)` instead of the `O(n³)` a refactorisation costs. Appending a
+//! sample to a Gram matrix is exactly `G += x̃ x̃ᵀ`, evicting one is
+//! `G −= x̃ x̃ᵀ`, so a sliding window over N samples pays `O(P²)` per step
+//! where a rebuild pays `O(NP² + P³)` — the asymmetry
+//! `benches/ablation_stream.rs` measures and docs/STREAM.md derives.
+//!
+//! ## The rotations
+//!
+//! Column `k` zeroes `v[k]` against the pivot `l_kk`:
+//!
+//! * **update** (Givens): `r = √(l_kk² + v_k²)`, `c = r/l_kk`,
+//!   `s = v_k/l_kk`; then for rows `i > k`:
+//!   `l_i ← (l_i + s·v_i)/c`, `v_i ← (v_i − s·l_i^old)/c`.
+//! * **downdate** (hyperbolic, metric `diag(I, −1)`):
+//!   `r = √(l_kk² − v_k²)`, same `c`/`s`; `l_i ← (l_i − s·v_i)/c`,
+//!   `v_i ← (v_i − s·l_i^old)/c`. When `l_kk² − v_k²` is not safely
+//!   positive the downdated matrix is no longer positive definite and the
+//!   kernel fails **cleanly, leaving the factor unchanged** (callers
+//!   refresh from scratch; the sliding-window driver never hits this while
+//!   its ridge is active).
+//!
+//! ## Determinism contract (docs/LINTS.md)
+//!
+//! Same rules as every other `linalg` kernel:
+//!
+//! * one accumulation order per output element — each column applies one
+//!   mul-then-add (or mul-then-sub) per element via the dispatched
+//!   [`Kernels`](crate::linalg::Kernels) `axpy`/`axpy_sub` inner
+//!   loops, then one scalar division; SIMD lanes are distinct elements, so
+//!   every ISA is bitwise-identical (pinned by `stream_*` under forced
+//!   dispatch);
+//! * the blocked forms are **defined** as the in-order composition of
+//!   rank-1 rotations, so `k` single updates and one block-`k` update are
+//!   bitwise-equal by construction (pinned by
+//!   `stream_block_kernels_are_bitwise_k_singles`);
+//! * a `v_k == 0.0` column is skipped outright — the rotation is the
+//!   identity, and skipping (rather than multiplying through `c ≈ 1`)
+//!   keeps a no-op update from perturbing low bits.
+//!
+//! Exact floating-point inverses do **not** exist here: updating then
+//! downdating the same `v` returns the original factor only to roundoff
+//! (`√`/square do not cancel bitwise), which is why the sliding-window
+//! driver offers `--exact-refresh-every` and the round-trip property test
+//! is tolerance-based. See docs/STREAM.md for the drift policy.
+
+use super::chol::Cholesky;
+use super::dispatch;
+use super::mat::Mat;
+use anyhow::{bail, Result};
+
+/// Relative floor under which a downdated pivot square counts as
+/// non-positive: `l_kk² − v_k² ≤ REL_FLOOR · l_kk²` fails cleanly rather
+/// than produce a factor dominated by cancellation noise. Mirrors the
+/// relative pivot floor of [`Cholesky::factor`].
+const REL_FLOOR: f64 = 1e-12;
+
+/// Rotate `ch` (factor of `A`) into the factor of `A + v vᵀ` in place.
+/// `O(n²)`; cannot fail (an update keeps every pivot positive).
+pub fn chol_update(ch: &mut Cholesky, v: &[f64]) {
+    let n = ch.n();
+    if v.len() != n {
+        // Dimension-contract assert: a caller bug, the same policy as Mat
+        // indexing (file-level L4 allowlist entry, docs/LINTS.md).
+        panic!("chol_update: vector length {} vs factor dimension {n}", v.len());
+    }
+    let mut w = v.to_vec();
+    let mut scratch = Scratch::new(n);
+    update_in_place(ch.l_mut(), &mut w, &mut scratch);
+}
+
+/// Rotate `ch` (factor of `A`) into the factor of `A − v vᵀ` in place.
+/// `O(n²)`. Fails cleanly — **the factor is left unchanged** — when the
+/// downdated matrix is no longer safely positive definite.
+pub fn chol_downdate(ch: &mut Cholesky, v: &[f64]) -> Result<()> {
+    let n = ch.n();
+    if v.len() != n {
+        // Dimension-contract assert: a caller bug, the same policy as Mat
+        // indexing (file-level L4 allowlist entry, docs/LINTS.md).
+        panic!("chol_downdate: vector length {} vs factor dimension {n}", v.len());
+    }
+    // Error safety by copy-and-swap: the rotations are applied to a working
+    // copy, so a failed pivot at column k cannot leave a half-rotated
+    // factor behind. One n×n memcpy against 4n² flops of rotation work.
+    let mut l = ch.l().clone();
+    let mut w = v.to_vec();
+    let mut scratch = Scratch::new(n);
+    downdate_in_place(&mut l, &mut w, &mut scratch)?;
+    *ch = Cholesky::from_lower(l);
+    Ok(())
+}
+
+/// Block-`k` update: rotate in each **row** of `vs` (`k × n`) in order.
+/// Bitwise-equal to `k` successive [`chol_update`] calls by construction —
+/// the blocked form exists so whole epochs append with one call (and one
+/// scratch allocation), not so the arithmetic can differ.
+pub fn chol_update_block(ch: &mut Cholesky, vs: &Mat) {
+    let n = ch.n();
+    if vs.cols() != n {
+        // Dimension-contract assert: a caller bug, the same policy as Mat
+        // indexing (file-level L4 allowlist entry, docs/LINTS.md).
+        panic!("chol_update_block: vector length {} vs factor dimension {n}", vs.cols());
+    }
+    let mut scratch = Scratch::new(n);
+    let mut w = vec![0.0; n];
+    for r in 0..vs.rows() {
+        w.copy_from_slice(vs.row(r));
+        update_in_place(ch.l_mut(), &mut w, &mut scratch);
+    }
+}
+
+/// Block-`k` downdate: rotate out each row of `vs` in order. Bitwise-equal
+/// to `k` successive [`chol_downdate`] calls; on failure at any row the
+/// factor is left **fully unchanged** (one copy guards the whole block,
+/// amortising the rank-1 kernel's per-call copy `k`-fold).
+pub fn chol_downdate_block(ch: &mut Cholesky, vs: &Mat) -> Result<()> {
+    let n = ch.n();
+    if vs.cols() != n {
+        // Dimension-contract assert: a caller bug, the same policy as Mat
+        // indexing (file-level L4 allowlist entry, docs/LINTS.md).
+        panic!("chol_downdate_block: vector length {} vs factor dimension {n}", vs.cols());
+    }
+    let mut l = ch.l().clone();
+    let mut scratch = Scratch::new(n);
+    let mut w = vec![0.0; n];
+    for r in 0..vs.rows() {
+        w.copy_from_slice(vs.row(r));
+        downdate_in_place(&mut l, &mut w, &mut scratch)
+            .map_err(|e| e.context(format!("block downdate failed at row {r}")))?;
+    }
+    *ch = Cholesky::from_lower(l);
+    Ok(())
+}
+
+/// Per-call gather buffers: the factor is row-major, so a column tail is
+/// strided — each rotation gathers it once, runs the contiguous dispatched
+/// inner loops, and scatters it back. Pure data movement on both sides, so
+/// the gather does not touch the bitwise contract.
+struct Scratch {
+    /// The column tail being rotated (becomes the new `l` column).
+    col: Vec<f64>,
+    /// The pre-rotation column tail (the `l^old` operand of the `v` step).
+    old: Vec<f64>,
+}
+
+impl Scratch {
+    fn new(n: usize) -> Scratch {
+        Scratch { col: vec![0.0; n], old: vec![0.0; n] }
+    }
+}
+
+/// One Givens-style column sweep of the update rotation. `l` must be a
+/// lower-triangular factor with positive diagonal; `w` is consumed.
+fn update_in_place(l: &mut Mat, w: &mut [f64], scratch: &mut Scratch) {
+    let n = l.rows();
+    let kr = dispatch::active_kernels();
+    for k in 0..n {
+        let wk = w[k];
+        if wk == 0.0 {
+            continue; // identity rotation — see the module docs
+        }
+        let lkk = l[(k, k)];
+        let r = (lkk * lkk + wk * wk).sqrt();
+        let c = r / lkk;
+        let s = wk / lkk;
+        l[(k, k)] = r;
+        let m = n - k - 1;
+        if m == 0 {
+            continue;
+        }
+        let col = &mut scratch.col[..m];
+        let old = &mut scratch.old[..m];
+        for (i, slot) in old.iter_mut().enumerate() {
+            *slot = l[(k + 1 + i, k)];
+        }
+        col.copy_from_slice(old);
+        let w_tail = &mut w[k + 1..];
+        // l ← (l + s·v)/c, v ← (v − s·l_old)/c — dispatched mul-then-add
+        // inner loops (lanes = distinct elements), then a scalar division
+        // per element. Identical sequence under every ISA.
+        (kr.axpy)(col, s, w_tail);
+        for x in col.iter_mut() {
+            *x /= c;
+        }
+        (kr.axpy_sub)(w_tail, s, old);
+        for x in w_tail.iter_mut() {
+            *x /= c;
+        }
+        for (i, &x) in col.iter().enumerate() {
+            l[(k + 1 + i, k)] = x;
+        }
+    }
+}
+
+/// One hyperbolic column sweep of the downdate rotation. On `Err` the
+/// factor `l` may be partially rotated — the public wrappers guard with a
+/// copy, so callers never observe that state.
+fn downdate_in_place(l: &mut Mat, w: &mut [f64], scratch: &mut Scratch) -> Result<()> {
+    let n = l.rows();
+    let kr = dispatch::active_kernels();
+    for k in 0..n {
+        let wk = w[k];
+        if wk == 0.0 {
+            continue; // identity rotation — see the module docs
+        }
+        let lkk = l[(k, k)];
+        let d = lkk * lkk - wk * wk;
+        if d <= REL_FLOOR * lkk * lkk || !d.is_finite() {
+            bail!(
+                "downdate leaves the matrix non-positive-definite at pivot {k} \
+                 (l_kk²−v_k² = {d:e}) — refresh the factor from scratch"
+            );
+        }
+        let r = d.sqrt();
+        let c = r / lkk;
+        let s = wk / lkk;
+        l[(k, k)] = r;
+        let m = n - k - 1;
+        if m == 0 {
+            continue;
+        }
+        let col = &mut scratch.col[..m];
+        let old = &mut scratch.old[..m];
+        for (i, slot) in old.iter_mut().enumerate() {
+            *slot = l[(k + 1 + i, k)];
+        }
+        col.copy_from_slice(old);
+        let w_tail = &mut w[k + 1..];
+        // l ← (l − s·v)/c, v ← (v − s·l_old)/c — the hyperbolic twin of the
+        // update sweep, same dispatched inner loops.
+        (kr.axpy_sub)(col, s, w_tail);
+        for x in col.iter_mut() {
+            *x /= c;
+        }
+        (kr.axpy_sub)(w_tail, s, old);
+        for x in w_tail.iter_mut() {
+            *x /= c;
+        }
+        for (i, &x) in col.iter().enumerate() {
+            l[(k + 1 + i, k)] = x;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, syrk_t};
+    use crate::util::rng::Rng;
+
+    fn spd(rng: &mut Rng, n: usize) -> Mat {
+        let a = Mat::from_fn(n + 4, n, |_, _| rng.gauss());
+        let mut g = syrk_t(&a);
+        for i in 0..n {
+            g[(i, i)] += 1.0;
+        }
+        g
+    }
+
+    fn reconstruct(ch: &Cholesky) -> Mat {
+        matmul(ch.l(), &ch.l().t())
+    }
+
+    #[test]
+    fn update_matches_refactor() {
+        let mut rng = Rng::new(41);
+        for n in [1usize, 2, 5, 17, 40] {
+            let a = spd(&mut rng, n);
+            let v: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let mut ch = Cholesky::factor(&a).unwrap();
+            chol_update(&mut ch, &v);
+            let mut want = a.clone();
+            ger(&mut want, 1.0, &v);
+            assert!(
+                reconstruct(&ch).max_abs_diff(&want) < 1e-8 * want.max_abs().max(1.0),
+                "n={n}"
+            );
+            // lower-triangular with positive diagonal
+            for i in 0..n {
+                assert!(ch.l()[(i, i)] > 0.0);
+                for j in (i + 1)..n {
+                    assert_eq!(ch.l()[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn downdate_matches_refactor() {
+        let mut rng = Rng::new(42);
+        for n in [1usize, 2, 5, 17, 40] {
+            let a = spd(&mut rng, n);
+            let v: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            // A + vvᵀ is SPD and downdating v from it is safely PD again.
+            let mut up = a.clone();
+            ger(&mut up, 1.0, &v);
+            let mut ch = Cholesky::factor(&up).unwrap();
+            chol_downdate(&mut ch, &v).unwrap();
+            assert!(
+                reconstruct(&ch).max_abs_diff(&a) < 1e-7 * a.max_abs().max(1.0),
+                "n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn failed_downdate_leaves_factor_unchanged() {
+        let mut rng = Rng::new(43);
+        let n = 9;
+        let a = spd(&mut rng, n);
+        let ch0 = Cholesky::factor(&a).unwrap();
+        let mut ch = ch0.clone();
+        // Removing 10·a_00 from the (0,0) entry makes A − vvᵀ indefinite.
+        let mut v = vec![0.0; n];
+        v[0] = (10.0 * a[(0, 0)]).sqrt();
+        assert!(chol_downdate(&mut ch, &v).is_err());
+        assert_eq!(ch.l().as_slice(), ch0.l().as_slice(), "factor must be untouched on Err");
+        // Block form: a good row followed by a bad one must also roll back.
+        let good: Vec<f64> = (0..n).map(|_| 0.1 * rng.gauss()).collect();
+        let vs = Mat::from_rows(&[&good[..], &v[..]]);
+        assert!(chol_downdate_block(&mut ch, &vs).is_err());
+        assert_eq!(ch.l().as_slice(), ch0.l().as_slice(), "block must roll back fully");
+    }
+
+    #[test]
+    fn zero_vector_is_bitwise_noop() {
+        let mut rng = Rng::new(44);
+        let n = 12;
+        let a = spd(&mut rng, n);
+        let ch0 = Cholesky::factor(&a).unwrap();
+        let mut ch = ch0.clone();
+        chol_update(&mut ch, &vec![0.0; n]);
+        assert_eq!(ch.l().as_slice(), ch0.l().as_slice());
+        chol_downdate(&mut ch, &vec![0.0; n]).unwrap();
+        assert_eq!(ch.l().as_slice(), ch0.l().as_slice());
+    }
+
+    #[test]
+    fn sparse_vector_skips_identity_columns_correctly() {
+        // v with interior zeros exercises the wk == 0 skip in mid-sweep.
+        let mut rng = Rng::new(45);
+        let n = 14;
+        let a = spd(&mut rng, n);
+        let mut v = vec![0.0; n];
+        for i in (0..n).step_by(3) {
+            v[i] = rng.gauss();
+        }
+        let mut ch = Cholesky::factor(&a).unwrap();
+        chol_update(&mut ch, &v);
+        let mut want = a.clone();
+        ger(&mut want, 1.0, &v);
+        assert!(reconstruct(&ch).max_abs_diff(&want) < 1e-8 * want.max_abs().max(1.0));
+    }
+
+    /// `M += alpha · u uᵀ` test helper (symmetric ger).
+    fn ger(m: &mut Mat, alpha: f64, u: &[f64]) {
+        crate::linalg::gemm::ger(m, alpha, u, u);
+    }
+}

@@ -145,6 +145,16 @@ pub struct Kernels {
     /// (`((s0+s1)+s2)+s3` over stride-4 partials, sequential tail) — the
     /// Cholesky/LU recurrence inner product.
     pub dot: fn(&[f64], &[f64]) -> f64,
+    /// Pack an `mc×kc` A block into `mr`-tall row slivers
+    /// (`(a, i0, mc, k0, kc, mr, pack)`). Pure data movement: every table's
+    /// packer emits **byte-identical** buffers (the packed-bytes contract;
+    /// `kernel_conformance_pack_bytes_identical_across_isas`) — the SIMD
+    /// entries only move the same bytes with wider loads/stores.
+    pub pack_a: fn(&Mat, usize, usize, usize, usize, usize, &mut [f64]),
+    /// Pack a `kc`-row B panel into `nr`-wide column slivers
+    /// (`(b, k0, kc, nr, pack)`). Same byte-identity contract as
+    /// [`Kernels::pack_a`].
+    pub pack_b: fn(&Mat, usize, usize, usize, &mut [f64]),
 }
 
 /// The scalar reference table — the canonical accumulation order itself.
@@ -156,6 +166,8 @@ static SCALAR: Kernels = Kernels {
     axpy: crate::linalg::gemm::axpy_scalar,
     axpy_sub: crate::linalg::gemm::axpy_sub_scalar,
     dot: crate::linalg::gemm::dot_scalar,
+    pack_a: crate::linalg::gemm::pack_a_scalar,
+    pack_b: crate::linalg::gemm::pack_b_scalar,
 };
 
 #[cfg(target_arch = "x86_64")]
@@ -167,6 +179,8 @@ static AVX2: Kernels = Kernels {
     axpy: crate::linalg::simd_avx2::axpy,
     axpy_sub: crate::linalg::simd_avx2::axpy_sub,
     dot: crate::linalg::simd_avx2::dot,
+    pack_a: crate::linalg::simd_avx2::pack_a,
+    pack_b: crate::linalg::simd_avx2::pack_b,
 };
 
 #[cfg(target_arch = "aarch64")]
@@ -178,6 +192,8 @@ static NEON: Kernels = Kernels {
     axpy: crate::linalg::simd_neon::axpy,
     axpy_sub: crate::linalg::simd_neon::axpy_sub,
     dot: crate::linalg::simd_neon::dot,
+    pack_a: crate::linalg::simd_neon::pack_a,
+    pack_b: crate::linalg::simd_neon::pack_b,
 };
 
 /// The kernel table for an ISA. The caller must hold a supported `isa`

@@ -88,11 +88,11 @@ fn gemm_acc_k(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64, kr: &Kernels
     for k0 in (0..ka).step_by(KC) {
         let kc = KC.min(ka - k0);
         // Pack B panel: KC×n, laid out as NR-wide column slivers.
-        pack_b(b, k0, kc, nr, &mut b_pack);
+        (kr.pack_b)(b, k0, kc, nr, &mut b_pack);
         for i0 in (0..m).step_by(MC) {
             let mc = MC.min(m - i0);
             // Pack A block: mc×kc as MR-tall row slivers.
-            pack_a(a, i0, mc, k0, kc, mr, &mut a_pack);
+            (kr.pack_a)(a, i0, mc, k0, kc, mr, &mut a_pack);
             macro_kernel(c, &a_pack, &b_pack, i0, mc, kc, n, alpha, kr);
         }
     }
@@ -100,9 +100,12 @@ fn gemm_acc_k(c: &mut Mat, a: &Mat, b: &Mat, alpha: f64, beta: f64, kr: &Kernels
 
 /// Pack `a[i0.., k0..]` (`mc×kc`) as `mr`-tall row slivers: for each
 /// sliver, `kc` columns of `mr` values, dead tail rows zero-filled. Packed
-/// bytes depend only on `(a, i0, mc, k0, kc, mr)` — never on the ISA that
-/// will consume them.
-fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, mr: usize, pack: &mut [f64]) {
+/// bytes depend only on `(a, i0, mc, k0, kc, mr)` — **never on the ISA
+/// that will consume them, nor on the ISA that packed them**: the SIMD
+/// packers (`simd_avx2::pack_a`, `simd_neon::pack_a`) are pure data
+/// movement and must emit byte-identical buffers
+/// (`kernel_conformance_pack_bytes_identical_across_isas`).
+pub(crate) fn pack_a_scalar(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, mr: usize, pack: &mut [f64]) {
     // Row slices are resolved once per sliver so the hot loop reads
     // contiguous slices instead of going through the (r, c) indexing
     // operator per element — identical packed bytes, fewer index
@@ -128,8 +131,9 @@ fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, mr: usize, pack: 
 }
 
 /// Pack rows `k0..k0+kc` of `b` as `nr`-wide column slivers (tail lanes
-/// zero-filled). Packed bytes depend only on `(b, k0, kc, nr)`.
-fn pack_b(b: &Mat, k0: usize, kc: usize, nr: usize, pack: &mut [f64]) {
+/// zero-filled). Packed bytes depend only on `(b, k0, kc, nr)` — byte
+/// contract as [`pack_a_scalar`].
+pub(crate) fn pack_b_scalar(b: &Mat, k0: usize, kc: usize, nr: usize, pack: &mut [f64]) {
     debug_assert!(nr >= 1 && nr <= NR_MAX);
     let n = b.cols();
     let mut idx = 0;
@@ -634,7 +638,7 @@ mod tests {
                 let (i0, mc) = (0, m.min(MC));
                 let (k0, kc) = (0, k.min(KC));
                 let mut pack = vec![f64::NAN; mc.next_multiple_of(mr) * kc];
-                pack_a(&a, i0, mc, k0, kc, mr, &mut pack);
+                pack_a_scalar(&a, i0, mc, k0, kc, mr, &mut pack);
                 let mut idx = 0;
                 let mut i = 0;
                 while i < mc {
@@ -651,7 +655,7 @@ mod tests {
                 let b = random_mat(&mut rng, k, m);
                 let n = b.cols();
                 let mut packb = vec![f64::NAN; kc * n.next_multiple_of(nr)];
-                pack_b(&b, k0, kc, nr, &mut packb);
+                pack_b_scalar(&b, k0, kc, nr, &mut packb);
                 let mut idx = 0;
                 let mut j = 0;
                 while j < n {

@@ -4,6 +4,8 @@
 //! - [`mat::Mat`] — row-major dense matrix with gather-based slicing
 //! - [`gemm`] — blocked matmul / syrk / matvec kernels
 //! - [`chol`] — Cholesky factor/solve for SPD scatter matrices
+//! - [`chol_update`] — rank-1/block up/downdates rotating an existing
+//!   factor in `O(n²)` (the streaming engine's maintenance kernels)
 //! - [`lu`] — partially pivoted LU for general systems
 //! - [`eig`] — Jacobi symmetric + generalised symmetric-definite eig
 //! - [`tiled`] — panel-tiled Gram builds + blocked Cholesky for the §4.5
@@ -17,6 +19,7 @@
 //!   bitwise-identical by the canonical-accumulation-order contract)
 
 pub mod chol;
+pub mod chol_update;
 pub mod dispatch;
 pub mod eig;
 pub mod gemm;
@@ -30,6 +33,7 @@ pub mod spill;
 pub mod tiled;
 
 pub use chol::Cholesky;
+pub use chol_update::{chol_downdate, chol_downdate_block, chol_update, chol_update_block};
 pub use dispatch::{Isa, Kernels};
 pub use eig::{gen_sym_eig, sym_eig, SymEig};
 pub use gemm::{

@@ -36,8 +36,9 @@
 
 use crate::linalg::mat::Mat;
 use core::arch::x86_64::{
-    __m256d, _mm256_add_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd, _mm256_setzero_pd,
-    _mm256_storeu_pd, _mm256_sub_pd,
+    __m256d, _mm256_add_pd, _mm256_castpd256_pd128, _mm256_extractf128_pd, _mm256_loadu_pd,
+    _mm256_mul_pd, _mm256_permute2f128_pd, _mm256_set1_pd, _mm256_setzero_pd, _mm256_storeu_pd,
+    _mm256_sub_pd, _mm256_unpackhi_pd, _mm256_unpacklo_pd, _mm_storeu_pd,
 };
 
 /// AVX2 GEMM register tile: 6 packed-A rows × 8 packed-B columns (two
@@ -197,6 +198,150 @@ pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
     // SAFETY: AVX2 is present — dispatch-table invariant (module audit
     // note) plus the debug probe above.
     unsafe { dot_impl(a, b) }
+}
+
+/// A-block packer: same byte layout as `gemm::pack_a_scalar` (the packed
+/// bytes depend only on the inputs — the packed-bytes contract), produced
+/// with 4×4 vector transposes for the full `MR = 6` slivers. Geometries
+/// other than `MR` and partial/tail slivers delegate to the scalar packer,
+/// which writes the identical bytes.
+pub(crate) fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, mr: usize, pack: &mut [f64]) {
+    debug_assert!(have_avx2(), "AVX2 kernel dispatched on a CPU without AVX2");
+    if mr != MR {
+        // Foreign geometry (conformance probes) — bytes are defined by the
+        // scalar packer anyway.
+        return crate::linalg::gemm::pack_a_scalar(a, i0, mc, k0, kc, mr, pack);
+    }
+    // SAFETY: AVX2 is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { pack_a_impl(a, i0, mc, k0, kc, pack) }
+}
+
+// SAFETY: caller must have verified AVX2 (safe wrapper above is the only
+// caller); every pointer offset is bounded by the sliver extents asserted
+// below and justified per use.
+#[target_feature(enable = "avx2")]
+unsafe fn pack_a_impl(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, pack: &mut [f64]) {
+    debug_assert!(pack.len() >= mc.next_multiple_of(MR) * kc);
+    let mut idx = 0;
+    let mut i = 0;
+    while i < mc {
+        let live = MR.min(mc - i);
+        if live < MR {
+            // Partial tail sliver: scalar copy + zero pad — exactly the
+            // scalar packer's bytes.
+            for k in 0..kc {
+                for r in 0..MR {
+                    pack[idx] = if r < live { a.row(i0 + i + r)[k0 + k] } else { 0.0 };
+                    idx += 1;
+                }
+            }
+            i += MR;
+            continue;
+        }
+        let rows: [&[f64]; MR] = [
+            &a.row(i0 + i)[k0..k0 + kc],
+            &a.row(i0 + i + 1)[k0..k0 + kc],
+            &a.row(i0 + i + 2)[k0..k0 + kc],
+            &a.row(i0 + i + 3)[k0..k0 + kc],
+            &a.row(i0 + i + 4)[k0..k0 + kc],
+            &a.row(i0 + i + 5)[k0..k0 + kc],
+        ];
+        let chunks = kc / 4;
+        for ck in 0..chunks {
+            let k = 4 * ck;
+            // In bounds: k + 4 <= kc on every row slice (len kc each).
+            let r0 = _mm256_loadu_pd(rows[0].as_ptr().add(k));
+            let r1 = _mm256_loadu_pd(rows[1].as_ptr().add(k));
+            let r2 = _mm256_loadu_pd(rows[2].as_ptr().add(k));
+            let r3 = _mm256_loadu_pd(rows[3].as_ptr().add(k));
+            // 4×4 transpose: lanes stay distinct elements; pure movement.
+            let t0 = _mm256_unpacklo_pd(r0, r1); // [a_k   b_k   a_k+2 b_k+2]
+            let t1 = _mm256_unpackhi_pd(r0, r1); // [a_k+1 b_k+1 a_k+3 b_k+3]
+            let t2 = _mm256_unpacklo_pd(r2, r3);
+            let t3 = _mm256_unpackhi_pd(r2, r3);
+            let c0 = _mm256_permute2f128_pd::<0x20>(t0, t2); // rows 0..4 at col k
+            let c1 = _mm256_permute2f128_pd::<0x20>(t1, t3); // ... at col k+1
+            let c2 = _mm256_permute2f128_pd::<0x31>(t0, t2); // ... at col k+2
+            let c3 = _mm256_permute2f128_pd::<0x31>(t1, t3); // ... at col k+3
+            let pp = pack.as_mut_ptr().add(idx + k * MR);
+            // In bounds: the furthest write below is idx + (k+3)·MR + 6
+            //         <= idx + kc·MR, the end of this sliver's region
+            // (k + 3 <= kc - 1), which the length assert covers.
+            _mm256_storeu_pd(pp, c0);
+            _mm256_storeu_pd(pp.add(MR), c1);
+            _mm256_storeu_pd(pp.add(2 * MR), c2);
+            _mm256_storeu_pd(pp.add(3 * MR), c3);
+            // Rows 4..6: interleave the two remaining rows and store the
+            // 2-wide column pairs straight into the stride-MR slots.
+            let r4 = _mm256_loadu_pd(rows[4].as_ptr().add(k));
+            let r5 = _mm256_loadu_pd(rows[5].as_ptr().add(k));
+            let lo = _mm256_unpacklo_pd(r4, r5); // [e_k   f_k   e_k+2 f_k+2]
+            let hi = _mm256_unpackhi_pd(r4, r5); // [e_k+1 f_k+1 e_k+3 f_k+3]
+            _mm_storeu_pd(pp.add(4), _mm256_castpd256_pd128(lo));
+            _mm_storeu_pd(pp.add(MR + 4), _mm256_castpd256_pd128(hi));
+            _mm_storeu_pd(pp.add(2 * MR + 4), _mm256_extractf128_pd::<1>(lo));
+            _mm_storeu_pd(pp.add(3 * MR + 4), _mm256_extractf128_pd::<1>(hi));
+        }
+        // Scalar k tail: same bytes as the scalar packer.
+        for k in 4 * chunks..kc {
+            for (r, row) in rows.iter().enumerate() {
+                pack[idx + k * MR + r] = row[k];
+            }
+        }
+        idx += kc * MR;
+        i += MR;
+    }
+}
+
+/// B-panel packer: same byte layout as `gemm::pack_b_scalar`, with the
+/// full `NR = 8` slivers copied through two 4-lane vector moves per row.
+/// Foreign `nr` geometries and partial slivers delegate to the scalar
+/// packer (identical bytes).
+pub(crate) fn pack_b(b: &Mat, k0: usize, kc: usize, nr: usize, pack: &mut [f64]) {
+    debug_assert!(have_avx2(), "AVX2 kernel dispatched on a CPU without AVX2");
+    if nr != NR {
+        return crate::linalg::gemm::pack_b_scalar(b, k0, kc, nr, pack);
+    }
+    // SAFETY: AVX2 is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { pack_b_impl(b, k0, kc, pack) }
+}
+
+// SAFETY: caller must have verified AVX2 (safe wrapper above is the only
+// caller); pointer offsets are bounded by the row-slice lengths and the
+// pack-length assert, justified per use.
+#[target_feature(enable = "avx2")]
+unsafe fn pack_b_impl(b: &Mat, k0: usize, kc: usize, pack: &mut [f64]) {
+    let n = b.cols();
+    debug_assert!(pack.len() >= kc * n.next_multiple_of(NR));
+    let mut idx = 0;
+    let mut j = 0;
+    while j < n {
+        let live = NR.min(n - j);
+        if live == NR {
+            for k in 0..kc {
+                let row = &b.row(k0 + k)[j..j + NR];
+                let rp = row.as_ptr();
+                let pp = pack.as_mut_ptr().add(idx);
+                // In bounds: row is exactly NR = 8 long, and idx + 8 <=
+                // pack.len() by the length assert (idx advances NR per k).
+                _mm256_storeu_pd(pp, _mm256_loadu_pd(rp));
+                _mm256_storeu_pd(pp.add(4), _mm256_loadu_pd(rp.add(4)));
+                idx += NR;
+            }
+        } else {
+            // Partial trailing sliver: scalar copy + zero pad — exactly
+            // the scalar packer's bytes.
+            for k in 0..kc {
+                let row = &b.row(k0 + k)[j..j + live];
+                pack[idx..idx + live].copy_from_slice(row);
+                pack[idx + live..idx + NR].fill(0.0);
+                idx += NR;
+            }
+        }
+        j += NR;
+    }
 }
 
 // SAFETY: caller must have verified AVX2 (safe wrapper above is the only

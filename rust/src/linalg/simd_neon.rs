@@ -37,7 +37,7 @@
 use crate::linalg::mat::Mat;
 use core::arch::aarch64::{
     float64x2_t, vaddq_f64, vdupq_n_f64, vgetq_lane_f64, vld1q_f64, vmulq_f64, vst1q_f64,
-    vsubq_f64,
+    vsubq_f64, vzip1q_f64, vzip2q_f64,
 };
 
 /// NEON GEMM register tile: 6 packed-A rows × 8 packed-B columns (four
@@ -202,6 +202,139 @@ pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
     // SAFETY: NEON is present — dispatch-table invariant (module audit
     // note) plus the debug probe above.
     unsafe { dot_impl(a, b) }
+}
+
+/// A-block packer: same byte layout as `gemm::pack_a_scalar` (the packed
+/// bytes depend only on the inputs — the packed-bytes contract), produced
+/// with 2-lane zip transposes for the full `MR = 6` slivers. Geometries
+/// other than `MR` and partial/tail slivers delegate to the scalar packer,
+/// which writes the identical bytes.
+pub(crate) fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, mr: usize, pack: &mut [f64]) {
+    debug_assert!(have_neon(), "NEON kernel dispatched on a CPU without NEON");
+    if mr != MR {
+        // Foreign geometry (conformance probes) — bytes are defined by the
+        // scalar packer anyway.
+        return crate::linalg::gemm::pack_a_scalar(a, i0, mc, k0, kc, mr, pack);
+    }
+    // SAFETY: NEON is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { pack_a_impl(a, i0, mc, k0, kc, pack) }
+}
+
+// SAFETY: caller must have verified NEON (safe wrapper above is the only
+// caller); every pointer offset is bounded by the sliver extents asserted
+// below and justified per use.
+#[target_feature(enable = "neon")]
+unsafe fn pack_a_impl(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, pack: &mut [f64]) {
+    debug_assert!(pack.len() >= mc.next_multiple_of(MR) * kc);
+    let mut idx = 0;
+    let mut i = 0;
+    while i < mc {
+        let live = MR.min(mc - i);
+        if live < MR {
+            // Partial tail sliver: scalar copy + zero pad — exactly the
+            // scalar packer's bytes.
+            for k in 0..kc {
+                for r in 0..MR {
+                    pack[idx] = if r < live { a.row(i0 + i + r)[k0 + k] } else { 0.0 };
+                    idx += 1;
+                }
+            }
+            i += MR;
+            continue;
+        }
+        let rows: [&[f64]; MR] = [
+            &a.row(i0 + i)[k0..k0 + kc],
+            &a.row(i0 + i + 1)[k0..k0 + kc],
+            &a.row(i0 + i + 2)[k0..k0 + kc],
+            &a.row(i0 + i + 3)[k0..k0 + kc],
+            &a.row(i0 + i + 4)[k0..k0 + kc],
+            &a.row(i0 + i + 5)[k0..k0 + kc],
+        ];
+        let chunks = kc / 2;
+        for ck in 0..chunks {
+            let k = 2 * ck;
+            // In bounds: k + 2 <= kc on every row slice (len kc each).
+            let r01a = vld1q_f64(rows[0].as_ptr().add(k));
+            let r01b = vld1q_f64(rows[1].as_ptr().add(k));
+            let r23a = vld1q_f64(rows[2].as_ptr().add(k));
+            let r23b = vld1q_f64(rows[3].as_ptr().add(k));
+            let r45a = vld1q_f64(rows[4].as_ptr().add(k));
+            let r45b = vld1q_f64(rows[5].as_ptr().add(k));
+            // zip1 = column k of each row pair, zip2 = column k+1 —
+            // pure data movement, no arithmetic.
+            let pp = pack.as_mut_ptr().add(idx + k * MR);
+            // In bounds: the furthest write below is idx + (k+1)·MR + 6
+            //         <= idx + kc·MR, the end of this sliver's region
+            // (k + 1 <= kc - 1), which the length assert covers.
+            vst1q_f64(pp, vzip1q_f64(r01a, r01b));
+            vst1q_f64(pp.add(2), vzip1q_f64(r23a, r23b));
+            vst1q_f64(pp.add(4), vzip1q_f64(r45a, r45b));
+            vst1q_f64(pp.add(MR), vzip2q_f64(r01a, r01b));
+            vst1q_f64(pp.add(MR + 2), vzip2q_f64(r23a, r23b));
+            vst1q_f64(pp.add(MR + 4), vzip2q_f64(r45a, r45b));
+        }
+        // Scalar k tail: same bytes as the scalar packer.
+        for k in 2 * chunks..kc {
+            for (r, row) in rows.iter().enumerate() {
+                pack[idx + k * MR + r] = row[k];
+            }
+        }
+        idx += kc * MR;
+        i += MR;
+    }
+}
+
+/// B-panel packer: same byte layout as `gemm::pack_b_scalar`, with the
+/// full `NR = 8` slivers copied through four 2-lane vector moves per row.
+/// Foreign `nr` geometries and partial slivers delegate to the scalar
+/// packer (identical bytes).
+pub(crate) fn pack_b(b: &Mat, k0: usize, kc: usize, nr: usize, pack: &mut [f64]) {
+    debug_assert!(have_neon(), "NEON kernel dispatched on a CPU without NEON");
+    if nr != NR {
+        return crate::linalg::gemm::pack_b_scalar(b, k0, kc, nr, pack);
+    }
+    // SAFETY: NEON is present — dispatch-table invariant (module audit
+    // note) plus the debug probe above.
+    unsafe { pack_b_impl(b, k0, kc, pack) }
+}
+
+// SAFETY: caller must have verified NEON (safe wrapper above is the only
+// caller); pointer offsets are bounded by the row-slice lengths and the
+// pack-length assert, justified per use.
+#[target_feature(enable = "neon")]
+unsafe fn pack_b_impl(b: &Mat, k0: usize, kc: usize, pack: &mut [f64]) {
+    let n = b.cols();
+    debug_assert!(pack.len() >= kc * n.next_multiple_of(NR));
+    let mut idx = 0;
+    let mut j = 0;
+    while j < n {
+        let live = NR.min(n - j);
+        if live == NR {
+            for k in 0..kc {
+                let row = &b.row(k0 + k)[j..j + NR];
+                let rp = row.as_ptr();
+                let pp = pack.as_mut_ptr().add(idx);
+                // In bounds: row is exactly NR = 8 long, and idx + 8 <=
+                // pack.len() by the length assert (idx advances NR per k).
+                vst1q_f64(pp, vld1q_f64(rp));
+                vst1q_f64(pp.add(2), vld1q_f64(rp.add(2)));
+                vst1q_f64(pp.add(4), vld1q_f64(rp.add(4)));
+                vst1q_f64(pp.add(6), vld1q_f64(rp.add(6)));
+                idx += NR;
+            }
+        } else {
+            // Partial trailing sliver: scalar copy + zero pad — exactly
+            // the scalar packer's bytes.
+            for k in 0..kc {
+                let row = &b.row(k0 + k)[j..j + live];
+                pack[idx..idx + live].copy_from_slice(row);
+                pack[idx + live..idx + NR].fill(0.0);
+                idx += NR;
+            }
+        }
+        j += NR;
+    }
 }
 
 // SAFETY: caller must have verified NEON (safe wrapper above is the only

@@ -114,11 +114,12 @@ const NUMERIC_DIRS: [&str; 6] = [
 
 /// L1 kernel allowlist: files whose float accumulation order *is* the
 /// repo-wide contract. Everything else routes through these.
-const KERNEL_FILES: [&str; 11] = [
+const KERNEL_FILES: [&str; 12] = [
     "rust/src/linalg/gemm.rs",      // blocked GEMM microkernel: the canonical order
     "rust/src/linalg/tiled.rs",     // tiled Gram/syrk — bitwise = gemm order (tiled_* suite)
     "rust/src/linalg/spill.rs",     // out-of-core panels — bitwise = in-RAM (spill_* suite)
     "rust/src/linalg/chol.rs",      // Cholesky recurrence: serial order pinned by factor_into
+    "rust/src/linalg/chol_update.rs", // rank-1 up/downdate rotations — ISA-invariant (stream_* suite)
     "rust/src/linalg/lu.rs",        // LU recurrence, same contract
     "rust/src/linalg/eig.rs",       // symmetric eig sweeps (spectral backend contract)
     "rust/src/linalg/mat.rs",       // Mat primitives (matvec_gemm_order et al.)
@@ -140,12 +141,15 @@ const UNSAFE_AUDITED_FILES: [&str; 3] = [
 ];
 
 /// L4 file allowlist: panicking is these files' documented policy.
-const PANIC_ALLOWED_FILES: [&str; 2] = [
+const PANIC_ALLOWED_FILES: [&str; 3] = [
     // Lock-poisoning propagation and scope panic re-raise are the pool's
     // contract (audited with L3; jobs are individually catch_unwind-ed).
     "rust/src/util/threadpool.rs",
     // The property-test harness reports failures by panicking.
     "rust/src/util/prop.rs",
+    // Dimension-contract asserts on the update kernels (caller bug, the
+    // same policy as Mat indexing); SPD-boundary failures return Result.
+    "rust/src/linalg/chol_update.rs",
 ];
 
 /// L2: permutation engines — RNG construction restricted to `Rng::stream`.
@@ -331,6 +335,10 @@ mod tests {
         assert!(fi.doc_all_public && !fi.perm_engine);
         let fi = file_info("rust/src/fastcv/hat.rs");
         assert!(!fi.doc_all_public);
+        let fi = file_info("rust/src/linalg/chol_update.rs");
+        assert!(fi.kernel && fi.panic_allowed && fi.numeric && !fi.unsafe_audited);
+        let fi = file_info("rust/src/fastcv/incremental.rs");
+        assert!(!fi.kernel && !fi.panic_allowed && fi.numeric && fi.library);
     }
 
     #[test]

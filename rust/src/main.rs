@@ -23,7 +23,7 @@ use fastcv::fastcv::hat::GramBackend;
 use fastcv::util::cli::Args;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "full", "help", "cache"]);
+    let args = Args::from_env(&["verbose", "full", "help", "cache", "rebuild"]);
     let code = match dispatch(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -43,6 +43,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("eeg") => cmd_eeg(args),
         Some("bigdata") => cmd_bigdata(args),
         Some("quickstart") => cmd_quickstart(args),
+        Some("stream") => cmd_stream(args),
         Some("serve") => cmd_serve(args),
         Some("artifacts") => cmd_artifacts(args),
         Some("lint") => cmd_lint(args),
@@ -96,6 +97,13 @@ fn print_usage() {
                  one ComputeContext ([--threads T] [--backend ...]\n\
                  [--tile-rows R | --mem-budget MB | --spill-dir PATH])\n\
            quickstart                    30-second end-to-end demo\n\
+           stream [--window N] [--lambda L] [--folds K] [--n-perm B] [--seed S]\n\
+                 [--exact-refresh-every K] [--rebuild] [--threads T]\n\
+                 sliding-window CV over NDJSON samples on stdin (one\n\
+                 {{\"x\":[...],\"label\":0|1}} per line); the window's Cholesky\n\
+                 factor is maintained by O(P²) rank-1 up/downdates instead of\n\
+                 per-step rebuilds, emitting rolling accuracy (+ permutation\n\
+                 p-value with --n-perm) as NDJSON — see docs/STREAM.md\n\
            serve [--workers N] [--threads T] [--budget-mb MB]\n\
                  [--tile-rows R | --mem-budget MB | --spill-dir PATH]\n\
                  [--socket PATH]         long-lived NDJSON job daemon over a\n\
@@ -546,6 +554,90 @@ fn cmd_quickstart(args: &Args) -> Result<()> {
     println!("  analytic approach: {:.3}s  acc={acc_ana:.3}", t_ana);
     println!("  speedup: {:.1}x (rel.eff {:.2})", t_std / t_ana, (t_std / t_ana).log10());
     Ok(())
+}
+
+/// Sliding-window streaming CV: NDJSON samples on stdin, one rolling
+/// `StepResult` per line on stdout. The window's Cholesky factor is
+/// maintained by `O(P²)` rank-1 up/downdates (`--rebuild` switches to the
+/// per-step from-scratch reference; `--exact-refresh-every K` bounds
+/// drift) — see docs/STREAM.md.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use fastcv::fastcv::incremental::{SlidingWindowCv, StreamConfig};
+    use fastcv::fastcv::ComputeContext;
+    use std::io::{BufRead, Write};
+
+    let cfg = StreamConfig {
+        window: args.get_parse_or("window", 64usize),
+        lambda: args.get_parse_or("lambda", 1.0f64),
+        folds: args.get_parse_or("folds", 5usize),
+        n_perm: args.get_parse_or("n-perm", 0usize),
+        seed: args.get_parse_or("seed", 42u64),
+        exact_refresh_every: args.get_parse_or("exact-refresh-every", 0usize),
+        rebuild: args.flag("rebuild"),
+    };
+    let threads: usize = args.get_parse_or("threads", 1);
+    // The rolling factor lives in a FactorStore: each step supersedes the
+    // previous window artifact in place (lineage API) rather than piling
+    // up per-step entries.
+    let store = fastcv::store::FactorStore::new();
+    let ctx = ComputeContext::with_threads(threads).with_store(&store);
+    let mut cv = SlidingWindowCv::new(cfg, ctx)?;
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    let mut samples = 0u64;
+    for (lineno, line) in stdin.lock().lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (x, label) = parse_stream_sample(&line)
+            .map_err(|e| anyhow::anyhow!("stdin line {}: {e}", lineno + 1))?;
+        samples += 1;
+        if let Some(r) = cv.push(x, label)? {
+            let p = r.p_value.map_or_else(|| "null".to_string(), |p| format!("{p}"));
+            writeln!(
+                out,
+                "{{\"step\":{},\"n\":{},\"acc\":{},\"p\":{},\"refreshed\":{},\"evicted\":{}}}",
+                r.step, r.n, r.accuracy, p, r.refreshed, r.evicted
+            )?;
+        }
+    }
+    out.flush()?;
+    let stats = store.stats();
+    eprintln!(
+        "fastcv stream: {samples} sample(s) — {} incremental step(s), {} downdate rescue(s), \
+         store {} ({} supersession(s), {} entry(ies))",
+        cv.incremental_steps,
+        cv.downdate_rescues,
+        stats.tag(),
+        stats.supersessions,
+        stats.entries
+    );
+    Ok(())
+}
+
+/// One NDJSON stream sample: `{"x":[...], "label":0|1}` (or `"y":±1`).
+fn parse_stream_sample(line: &str) -> Result<(Vec<f64>, usize)> {
+    use fastcv::util::json::Json;
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("bad JSON: {e}"))?;
+    let xs = v
+        .get("x")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("missing \"x\" feature array"))?;
+    let x = xs
+        .iter()
+        .map(|j| j.as_f64().ok_or_else(|| anyhow::anyhow!("non-numeric \"x\" entry")))
+        .collect::<Result<Vec<f64>>>()?;
+    let label = if let Some(l) = v.get("label").and_then(Json::as_usize) {
+        l
+    } else if let Some(y) = v.get("y").and_then(Json::as_f64) {
+        usize::from(y <= 0.0) // +1 → class 0, −1 → class 1 (signed_codes order)
+    } else {
+        anyhow::bail!("missing \"label\" (0|1) or \"y\" (±1)");
+    };
+    anyhow::ensure!(label < 2, "streaming CV is binary — label must be 0|1 (got {label})");
+    Ok((x, label))
 }
 
 /// Long-lived job daemon: NDJSON requests over stdin/stdout (or a Unix

@@ -282,20 +282,46 @@ impl Server {
         Ok(saw_shutdown)
     }
 
-    /// Bind a Unix socket and serve connections sequentially until a
-    /// `shutdown` op arrives on one of them. A pre-existing socket file at
-    /// `path` is replaced.
+    /// Bind a Unix socket and serve connections **concurrently** — each
+    /// accepted connection gets its own scoped handler thread running
+    /// [`Server::serve_stream`], so a client that connects and idles never
+    /// blocks the next client (they all share this server's store and
+    /// queue semantics per connection). The loop runs until a `shutdown`
+    /// op arrives on any connection; the handler then raises the shared
+    /// shutdown flag and self-connects to unblock the accept call, which
+    /// re-checks the flag and stops. A connection that fails mid-stream
+    /// (client vanished, torn socket) ends only that handler — the daemon
+    /// keeps serving. A pre-existing socket file at `path` is replaced.
     pub fn serve_unix(&self, path: &std::path::Path) -> Result<()> {
         std::fs::remove_file(path).ok();
         let listener = std::os::unix::net::UnixListener::bind(path)
             .with_context(|| format!("binding unix socket {}", path.display()))?;
-        for conn in listener.incoming() {
-            let conn = conn.context("accepting serve connection")?;
-            let reader = std::io::BufReader::new(conn.try_clone().context("cloning socket")?);
-            if self.serve_stream(reader, conn)? {
-                break;
+        let shutdown = AtomicBool::new(false);
+        let sock_path = path.to_path_buf();
+        std::thread::scope(|scope| -> Result<()> {
+            loop {
+                let (conn, _) = listener.accept().context("accepting serve connection")?;
+                if shutdown.load(Ordering::SeqCst) {
+                    // The wake-up self-connection (or a late client during
+                    // teardown): drop it and stop accepting.
+                    break;
+                }
+                let shutdown = &shutdown;
+                let sock_path = &sock_path;
+                scope.spawn(move || {
+                    let Ok(clone) = conn.try_clone() else { return };
+                    let reader = std::io::BufReader::new(clone);
+                    // Ok(true) = this connection carried the shutdown op;
+                    // errors are that client's problem, not the daemon's.
+                    if let Ok(true) = self.serve_stream(reader, conn) {
+                        shutdown.store(true, Ordering::SeqCst);
+                        // Unblock the (possibly idle) accept loop.
+                        let _ = std::os::unix::net::UnixStream::connect(sock_path);
+                    }
+                });
             }
-        }
+            Ok(())
+        })?;
         std::fs::remove_file(path).ok();
         Ok(())
     }
@@ -841,6 +867,57 @@ mod tests {
             strip_timing(v2.get("tsv").and_then(Json::as_str).unwrap()),
             "non-timing sweep columns must reproduce"
         );
+    }
+
+    #[test]
+    fn serve_unix_overlapping_clients_are_served_concurrently() {
+        // Client A connects first and goes idle; client B connects while A
+        // is still open and expects an answer. Under the old sequential
+        // accept loop B would block behind A forever — the read timeout
+        // below turns that regression into a test failure instead of a
+        // hang. A then carries the shutdown op that stops the daemon.
+        use std::io::{BufRead as _, BufReader, Write as _};
+        use std::os::unix::net::UnixStream;
+        use std::time::Duration;
+        let dir = std::env::temp_dir()
+            .join(format!("fastcv_serve_unix_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sock = dir.join("s.sock");
+        let server = Server::new(ServeConfig::default());
+        std::thread::scope(|scope| {
+            let daemon = scope.spawn(|| server.serve_unix(&sock));
+            let connect = || {
+                for _ in 0..500 {
+                    if let Ok(c) = UnixStream::connect(&sock) {
+                        return c;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                panic!("serve_unix socket never came up");
+            };
+            let mut a = connect();
+            let mut b = connect();
+            b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            writeln!(b, r#"{{"id":"b","op":"stats"}}"#).unwrap();
+            b.flush().unwrap();
+            let mut b_reader = BufReader::new(b.try_clone().unwrap());
+            let mut resp = String::new();
+            b_reader.read_line(&mut resp).expect("B must be answered while A idles");
+            let v = parse_ok(&resp);
+            assert_eq!(v.get("id").and_then(Json::as_str), Some("b"));
+            // A is still connected; now it shuts the daemon down.
+            a.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            writeln!(a, r#"{{"id":"a","op":"shutdown"}}"#).unwrap();
+            a.flush().unwrap();
+            let mut a_reader = BufReader::new(a.try_clone().unwrap());
+            let mut resp = String::new();
+            a_reader.read_line(&mut resp).unwrap();
+            parse_ok(&resp);
+            drop(a);
+            drop(b);
+            daemon.join().unwrap().unwrap();
+        });
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -47,6 +47,7 @@
 pub mod key;
 
 use crate::fastcv::bigdata::StreamingHat;
+use crate::fastcv::incremental::WindowFactor;
 use crate::fastcv::context::ComputeContext;
 use crate::fastcv::hat::{GramBackend, GramCache, SharedNestedGram};
 use crate::linalg::{Mat, PanelStore, TilePolicy};
@@ -66,6 +67,12 @@ pub enum ArtifactKind {
     Nested,
     /// A λ-specific [`StreamingHat`] (§4.5 big-data hat state).
     Streaming,
+    /// A λ-specific sliding-window Cholesky factor maintained by rank-1
+    /// up/downdates ([`WindowFactor`], the incremental engine's rolling
+    /// state). Unlike the other kinds, window entries evolve: each stream
+    /// step **supersedes** the previous key via [`FactorStore::supersede`]
+    /// rather than invalidating it.
+    Window,
 }
 
 /// Preprocessing stage baked into the cached factor. Currently only `Raw`
@@ -153,6 +160,25 @@ impl ArtifactKey {
             lambda_bits: lambda.to_bits(),
         }
     }
+
+    /// Key for a sliding-window factor ([`WindowFactor`]) identified by a
+    /// *lineage fingerprint* — a running FNV digest over the exact
+    /// append/evict/refresh operation sequence that produced the factor
+    /// (see [`crate::fastcv::incremental`]), not a data-matrix pass. Two
+    /// streams reach the same key exactly when they applied bitwise the
+    /// same operations in the same order, which is when the factors are
+    /// bitwise shareable.
+    pub fn window(lineage: u64, lambda: f64) -> ArtifactKey {
+        ArtifactKey {
+            kind: ArtifactKind::Window,
+            data: lineage,
+            folds: 0,
+            backend: "window",
+            tile: TilePolicy::Off.tag(),
+            prep: Prep::Raw,
+            lambda_bits: lambda.to_bits(),
+        }
+    }
 }
 
 /// A cached factor, shared by `Arc` — a hit and the build that produced it
@@ -165,6 +191,8 @@ pub enum Artifact {
     Nested(Arc<SharedNestedGram>),
     /// λ-specific streaming hat state.
     Streaming(Arc<StreamingHat>),
+    /// Sliding-window rolling factor (the incremental engine's state).
+    Window(Arc<WindowFactor>),
 }
 
 impl Artifact {
@@ -175,6 +203,7 @@ impl Artifact {
             Artifact::Gram(g) => g.resident_bytes(),
             Artifact::Nested(g) => g.resident_bytes(),
             Artifact::Streaming(s) => s.resident_bytes(),
+            Artifact::Window(w) => w.resident_bytes(),
         }
     }
 }
@@ -187,8 +216,20 @@ struct Entry {
     last_used: u64,
 }
 
+/// How many superseded (ancestor) keys stay resolvable through the
+/// lineage map. A bounded trail keeps a long-running stream's memory flat:
+/// every step adds one link, and handles more than `LINEAGE_CAP`
+/// supersessions stale resolve as ordinary misses.
+const LINEAGE_CAP: usize = 64;
+
 struct Inner {
     entries: BTreeMap<ArtifactKey, Entry>,
+    /// Lineage trail: superseded key → the key of the artifact that
+    /// replaced it. Path-compressed on every supersession (all links point
+    /// at the *live* descendant, never an intermediate), bounded by
+    /// [`LINEAGE_CAP`] with `lineage_order` as the FIFO eviction queue.
+    lineage: BTreeMap<ArtifactKey, ArtifactKey>,
+    lineage_order: std::collections::VecDeque<ArtifactKey>,
     /// Logical access clock — monotone per store operation, no wall time,
     /// so eviction order is a pure function of the access sequence.
     clock: u64,
@@ -200,6 +241,7 @@ struct Inner {
     misses: u64,
     evictions: u64,
     demotions: u64,
+    supersessions: u64,
 }
 
 /// Counter snapshot returned by [`FactorStore::stats`]; the sweep TSV's
@@ -216,6 +258,10 @@ pub struct StoreStats {
     /// Dense Gram entries demoted into the spill layer under budget
     /// pressure (kept servable, resident cost ≈ the `X̃` working set).
     pub demotions: u64,
+    /// In-place lineage replacements ([`FactorStore::supersede`]): a child
+    /// artifact took over its parent's slot — not an eviction, the state
+    /// advanced.
+    pub supersessions: u64,
     /// Live entries.
     pub entries: usize,
     /// Total resident bytes across live entries.
@@ -239,6 +285,7 @@ impl StoreStats {
             misses: self.misses - earlier.misses,
             evictions: self.evictions - earlier.evictions,
             demotions: self.demotions - earlier.demotions,
+            supersessions: self.supersessions - earlier.supersessions,
             entries: self.entries,
             resident_bytes: self.resident_bytes,
             budget_bytes: self.budget_bytes,
@@ -271,6 +318,8 @@ impl FactorStore {
         FactorStore {
             inner: Mutex::new(Inner {
                 entries: BTreeMap::new(),
+                lineage: BTreeMap::new(),
+                lineage_order: std::collections::VecDeque::new(),
                 clock: 0,
                 budget: None,
                 spill: None,
@@ -278,6 +327,7 @@ impl FactorStore {
                 misses: 0,
                 evictions: 0,
                 demotions: 0,
+                supersessions: 0,
             }),
         }
     }
@@ -308,6 +358,7 @@ impl FactorStore {
             misses: g.misses,
             evictions: g.evictions,
             demotions: g.demotions,
+            supersessions: g.supersessions,
             entries: g.entries.len(),
             resident_bytes: resident_total(&g),
             budget_bytes: g.budget,
@@ -348,6 +399,98 @@ impl FactorStore {
         match self.fetch(key, || Ok(Artifact::Streaming(Arc::new(build()?))))? {
             Artifact::Streaming(s) => Ok(s),
             _ => bail!("factor store: key {key:?} holds a non-Streaming artifact"),
+        }
+    }
+
+    /// Insert `artifact` under `key` as a fresh lineage root (no parent).
+    /// The incremental engine calls this once per stream when the first
+    /// exact factor is built; each subsequent step goes through
+    /// [`FactorStore::supersede`].
+    pub fn put(&self, key: ArtifactKey, artifact: Artifact) {
+        let bytes = artifact.resident_bytes();
+        let mut g = self.lock();
+        g.clock += 1;
+        let now = g.clock;
+        g.entries.insert(key.clone(), Entry { artifact, bytes, last_used: now });
+        enforce_budget(&mut g, &key);
+    }
+
+    /// The key-lineage update: install `artifact` under `child`, retiring
+    /// `parent` **in place** — the parent's slot is replaced, not
+    /// invalidated, and a lineage link `parent → child` is recorded so a
+    /// caller still holding the parent key resolves to the updated
+    /// artifact through [`FactorStore::resolve`]. Existing links pointing
+    /// at `parent` are rewritten to `child` (path compression), so every
+    /// surviving ancestor resolves in one hop; the trail is bounded by
+    /// [`LINEAGE_CAP`] (oldest links expire first, becoming plain misses).
+    pub fn supersede(&self, parent: &ArtifactKey, child: ArtifactKey, artifact: Artifact) {
+        let bytes = artifact.resident_bytes();
+        let mut g = self.lock();
+        g.clock += 1;
+        let now = g.clock;
+        g.entries.remove(parent);
+        g.entries.insert(child.clone(), Entry { artifact, bytes, last_used: now });
+        g.supersessions += 1;
+        if *parent != child {
+            // Path compression: every ancestor that resolved to `parent`
+            // now resolves straight to `child`.
+            for v in g.lineage.values_mut() {
+                if *v == *parent {
+                    *v = child.clone();
+                }
+            }
+            if g.lineage.insert(parent.clone(), child.clone()).is_none() {
+                g.lineage_order.push_back(parent.clone());
+            }
+            while g.lineage_order.len() > LINEAGE_CAP {
+                if let Some(old) = g.lineage_order.pop_front() {
+                    g.lineage.remove(&old);
+                }
+            }
+        }
+        enforce_budget(&mut g, &child);
+    }
+
+    /// Lineage-following lookup: the artifact live under `key`, or — when
+    /// `key` has been superseded — under its latest recorded descendant.
+    /// Counts as a hit either way (the state the caller asked about is
+    /// still being served); `None` is a miss.
+    pub fn resolve(&self, key: &ArtifactKey) -> Option<Artifact> {
+        let mut g = self.lock();
+        g.clock += 1;
+        let now = g.clock;
+        let live = if g.entries.contains_key(key) {
+            key.clone()
+        } else {
+            match g.lineage.get(key) {
+                Some(child) => child.clone(),
+                None => {
+                    g.misses += 1;
+                    return None;
+                }
+            }
+        };
+        match g.entries.get_mut(&live) {
+            Some(e) => {
+                e.last_used = now;
+                g.hits += 1;
+                Some(e.artifact.clone())
+            }
+            None => {
+                // The descendant itself fell to budget pressure.
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// [`FactorStore::resolve`] narrowed to the sliding-window factor the
+    /// incremental engine stores ([`Artifact::Window`]); `None` on a miss
+    /// or a kind clash.
+    pub fn resolve_window(&self, key: &ArtifactKey) -> Option<Arc<WindowFactor>> {
+        match self.resolve(key) {
+            Some(Artifact::Window(w)) => Some(w),
+            _ => None,
         }
     }
 

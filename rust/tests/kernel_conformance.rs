@@ -195,6 +195,80 @@ fn kernel_conformance_micro_kernel_all_tiles_edges_and_remainders() {
     }
 }
 
+#[test]
+fn kernel_conformance_pack_bytes_identical_across_isas() {
+    // The packers are pure data movement, so their contract is stronger
+    // than the arithmetic kernels': the packed buffer must be *byte*
+    // identical across ISAs — including NaN payloads, which moves preserve.
+    let strict_bytes = |got: &[f64], want: &[f64], what: &str| {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "{what}: byte {i} differs (got {g:?}, want {w:?})"
+            );
+        }
+    };
+    let scalar = kernels(Isa::Scalar);
+    let mut rng = Rng::new(108);
+    for isa in Isa::supported() {
+        let k = kernels(isa);
+        // shapes cover: full slivers only, partial tail slivers, k chunks
+        // with and without vector-width tails, kc = 0/1, single row/col
+        for &(rows, cols) in &[
+            (1usize, 1usize),
+            (6, 8),
+            (6, 7),
+            (5, 8),
+            (13, 17),
+            (12, 16),
+            (24, 9),
+            (7, 33),
+            (19, 64),
+            (31, 31),
+        ] {
+            let mut a = random_mat(&mut rng, rows, cols);
+            if rows > 2 && cols > 3 {
+                a[(1, 2)] = f64::NAN;
+                a[(2, 3)] = f64::NEG_INFINITY;
+                a[(0, 0)] = -0.0;
+            }
+            // sub-block offsets exercise i0/k0 != 0 paths
+            for &(i0, mc, k0, kc) in &[
+                (0usize, rows, 0usize, cols),
+                (0, rows, cols / 2, cols - cols / 2),
+                (rows / 3, rows - rows / 3, 0, cols),
+            ] {
+                // native geometry plus foreign probes (delegation path)
+                for mr in [k.gemm_mr, 4, 5] {
+                    let len = mc.next_multiple_of(mr) * kc;
+                    let mut got = vec![7.5f64; len];
+                    let mut want = vec![7.5f64; len];
+                    (k.pack_a)(&a, i0, mc, k0, kc, mr, &mut got);
+                    (scalar.pack_a)(&a, i0, mc, k0, kc, mr, &mut want);
+                    strict_bytes(
+                        &got,
+                        &want,
+                        &format!("pack_a[{isa}] ({rows},{cols}) i0={i0} mc={mc} k0={k0} kc={kc} mr={mr}"),
+                    );
+                }
+                for nr in [k.gemm_nr, 4, 7] {
+                    let len = mc * cols.next_multiple_of(nr);
+                    let mut got = vec![7.5f64; len];
+                    let mut want = vec![7.5f64; len];
+                    (k.pack_b)(&a, i0, mc, nr, &mut got);
+                    (scalar.pack_b)(&a, i0, mc, nr, &mut want);
+                    strict_bytes(
+                        &got,
+                        &want,
+                        &format!("pack_b[{isa}] ({rows},{cols}) k0={i0} kc={mc} nr={nr}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Level 2: blocked entry points across shapes.
 // ---------------------------------------------------------------------------

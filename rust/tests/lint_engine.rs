@@ -51,6 +51,15 @@ fn l1_is_silent_in_exempt_files() {
     assert!(lines_of(&src, "rust/benches/bad_l1.rs", Rule::FloatAccum).is_empty());
 }
 
+#[test]
+fn l1_is_silent_in_the_chol_update_kernel_file() {
+    // chol_update.rs joined the kernel allowlist with the incremental
+    // engine: its rotation recurrences are the accumulation order the
+    // stream_* suite pins across ISAs.
+    let src = fixture("bad_l1.rs");
+    assert!(lines_of(&src, "rust/src/linalg/chol_update.rs", Rule::FloatAccum).is_empty());
+}
+
 // ---------------------------------------------------------------- L2
 
 #[test]
@@ -149,6 +158,11 @@ fn l4_exempts_the_test_region() {
 fn l4_is_silent_in_panic_allowed_files() {
     let src = fixture("bad_l4.rs");
     assert!(lines_of(&src, "rust/src/util/prop.rs", Rule::Panic).is_empty());
+    // chol_update.rs: dimension-contract asserts are the documented policy
+    // (SPD-boundary downdate failures still return Result).
+    assert!(lines_of(&src, "rust/src/linalg/chol_update.rs", Rule::Panic).is_empty());
+    // The incremental *driver* is not exempt — only the kernel file is.
+    assert_eq!(lines_of(&src, "rust/src/fastcv/incremental.rs", Rule::Panic), vec![2, 4]);
 }
 
 // ---------------------------------------------------------------- L5

@@ -1,0 +1,354 @@
+//! Property suite for the incremental streaming engine (`stream_*`,
+//! gated by `scripts/verify.sh` and the CI isa-matrix job).
+//!
+//! Pins the three contracts of `fastcv::incremental` + `linalg::chol_update`:
+//!
+//! 1. **Update algebra** — a rank-1 update rotates the factor to exactly
+//!    the refactored Gram's (to factorisation tolerance); a downdate
+//!    reverses an update to *roundoff* (bitwise reversal is impossible in
+//!    IEEE arithmetic — `sqrt`/square do not cancel — which is exactly why
+//!    the driver has `exact_refresh_every`); block-k forms are **bitwise**
+//!    k applications of the rank-1 kernels.
+//! 2. **Driver agreement** — the sliding-window engine tracks the
+//!    from-scratch rebuild reference within tolerance on every step, is
+//!    **bitwise** the rebuild on exact-refresh steps, and is bitwise
+//!    deterministic for a fixed input sequence.
+//! 3. **ISA invariance** — the whole stream produces identical bits under
+//!    forced scalar and every supported SIMD dispatch.
+
+use fastcv::fastcv::incremental::{SlidingWindowCv, StepResult, StreamConfig};
+use fastcv::fastcv::ComputeContext;
+use fastcv::linalg::dispatch::{force_scope, Isa};
+use fastcv::linalg::{
+    chol_downdate, chol_downdate_block, chol_update, chol_update_block, syrk_t, Cholesky, Mat,
+};
+use fastcv::store::{ArtifactKey, FactorStore};
+use fastcv::util::rng::Rng;
+
+fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.gauss())
+}
+
+fn spd(rng: &mut Rng, n: usize) -> Mat {
+    let base = random_mat(rng, n + 3, n);
+    let mut g = syrk_t(&base);
+    for i in 0..n {
+        g[(i, i)] += 1.0;
+    }
+    g
+}
+
+fn assert_close(got: &[f64], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let scale = w.abs().max(1.0);
+        assert!(
+            (g - w).abs() <= tol * scale,
+            "{what}: index {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+/// A deterministic synthetic stream: gaussian features, labels from the
+/// feature sign plus noise so the window carries real signal.
+fn stream_data(seed: u64, steps: usize, p: usize) -> Vec<(Vec<f64>, usize)> {
+    let mut rng = Rng::new(seed);
+    (0..steps)
+        .map(|_| {
+            let label = (rng.next_u64() % 2) as usize;
+            let shift = if label == 0 { 0.8 } else { -0.8 };
+            let x: Vec<f64> = (0..p).map(|_| rng.gauss() + shift).collect();
+            (x, label)
+        })
+        .collect()
+}
+
+fn run_stream(cfg: &StreamConfig, data: &[(Vec<f64>, usize)]) -> Vec<StepResult> {
+    let mut cv = SlidingWindowCv::new(cfg.clone(), ComputeContext::serial()).unwrap();
+    data.iter()
+        .filter_map(|(x, l)| cv.push(x.clone(), *l).unwrap())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Update algebra.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stream_update_then_downdate_roundtrips_within_tolerance() {
+    let mut rng = Rng::new(31);
+    for n in [1usize, 2, 5, 12, 24] {
+        let g = spd(&mut rng, n);
+        let reference = Cholesky::factor(&g).unwrap();
+        let v: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let mut ch = reference.clone();
+        chol_update(&mut ch, &v);
+        chol_downdate(&mut ch, &v).unwrap();
+        // Roundoff-level return, NOT bitwise: sqrt(r²) ≠ r in general.
+        assert_close(
+            ch.l().as_slice(),
+            reference.l().as_slice(),
+            1e-12,
+            &format!("update∘downdate n={n}"),
+        );
+    }
+}
+
+#[test]
+fn stream_block_kernels_are_bitwise_k_singles() {
+    let mut rng = Rng::new(32);
+    for (n, k) in [(4usize, 1usize), (8, 3), (16, 5)] {
+        let g = spd(&mut rng, n);
+        let vs = random_mat(&mut rng, k, n);
+        // Block update == k in-order rank-1 updates, bitwise.
+        let mut block = Cholesky::factor(&g).unwrap();
+        chol_update_block(&mut block, &vs);
+        let mut singles = Cholesky::factor(&g).unwrap();
+        for r in 0..k {
+            chol_update(&mut singles, vs.row(r));
+        }
+        assert_eq!(
+            block.l().as_slice(),
+            singles.l().as_slice(),
+            "block update n={n} k={k}"
+        );
+        // Same for the downdate pair (downdating what we just updated).
+        chol_downdate_block(&mut block, &vs).unwrap();
+        for r in 0..k {
+            chol_downdate(&mut singles, vs.row(r)).unwrap();
+        }
+        assert_eq!(
+            block.l().as_slice(),
+            singles.l().as_slice(),
+            "block downdate n={n} k={k}"
+        );
+    }
+}
+
+#[test]
+fn stream_update_matches_refactorisation() {
+    // L after a rank-1 update must equal the factor of G + vvᵀ to
+    // factorisation accuracy (the algebra, not just self-consistency).
+    let mut rng = Rng::new(33);
+    for n in [3usize, 10, 21] {
+        let g = spd(&mut rng, n);
+        let v: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let mut ch = Cholesky::factor(&g).unwrap();
+        chol_update(&mut ch, &v);
+        let mut gv = g.clone();
+        for i in 0..n {
+            for j in 0..n {
+                gv[(i, j)] += v[i] * v[j];
+            }
+        }
+        let want = Cholesky::factor(&gv).unwrap();
+        assert_close(ch.l().as_slice(), want.l().as_slice(), 1e-9, &format!("update n={n}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Driver agreement with the rebuild reference.
+// ---------------------------------------------------------------------------
+
+fn base_cfg() -> StreamConfig {
+    StreamConfig {
+        window: 16,
+        lambda: 2.0,
+        folds: 4,
+        n_perm: 8,
+        seed: 7,
+        exact_refresh_every: 0,
+        rebuild: false,
+    }
+}
+
+#[test]
+fn stream_incremental_tracks_rebuild_within_tolerance_every_step() {
+    let data = stream_data(101, 40, 6);
+    let incremental = run_stream(&base_cfg(), &data);
+    let rebuild = run_stream(&StreamConfig { rebuild: true, ..base_cfg() }, &data);
+    assert_eq!(incremental.len(), rebuild.len());
+    assert!(incremental.len() > 30, "window=16, folds=4 → evaluation from step 4");
+    for (inc, reb) in incremental.iter().zip(&rebuild) {
+        assert_eq!(inc.step, reb.step);
+        assert_eq!(inc.n, reb.n);
+        // Accuracy is 1/n-quantised; the ~1e-13 factor drift only moves it
+        // if a decision value sits within drift of the threshold — allow
+        // at most one sample's worth of disagreement per step.
+        let n = inc.n as f64;
+        assert!(
+            (inc.accuracy - reb.accuracy).abs() <= 1.0 / n + 1e-12,
+            "step {}: incremental acc {} vs rebuild {}",
+            inc.step,
+            inc.accuracy,
+            reb.accuracy
+        );
+        let (Some(pi), Some(pr)) = (inc.p_value, reb.p_value) else {
+            panic!("n_perm > 0 must produce p-values");
+        };
+        assert!(
+            (pi - pr).abs() <= 2.0 / (1.0 + 8.0) + 1e-12,
+            "step {}: p {} vs {}",
+            inc.step,
+            pi,
+            pr
+        );
+    }
+    // The maintained factor itself stays within roundoff of a rebuild.
+    let mut inc_cv = SlidingWindowCv::new(base_cfg(), ComputeContext::serial()).unwrap();
+    let mut reb_cv = SlidingWindowCv::new(
+        StreamConfig { rebuild: true, ..base_cfg() },
+        ComputeContext::serial(),
+    )
+    .unwrap();
+    for (x, l) in &data {
+        inc_cv.push(x.clone(), *l).unwrap();
+        reb_cv.push(x.clone(), *l).unwrap();
+    }
+    let (inc_f, reb_f) = (inc_cv.factor().unwrap(), reb_cv.factor().unwrap());
+    assert_close(
+        inc_f.chol.l().as_slice(),
+        reb_f.chol.l().as_slice(),
+        1e-9,
+        "final factor drift",
+    );
+    assert!(inc_cv.incremental_steps > 0, "incremental path must actually run");
+    assert_eq!(reb_cv.incremental_steps, 0, "rebuild mode must never maintain");
+}
+
+#[test]
+fn stream_exact_refresh_steps_are_bitwise_the_rebuild() {
+    let data = stream_data(102, 36, 5);
+    let k = 3;
+    let cfg = StreamConfig { exact_refresh_every: k, ..base_cfg() };
+    let refreshed = run_stream(&cfg, &data);
+    let rebuild = run_stream(&StreamConfig { rebuild: true, ..base_cfg() }, &data);
+    let mut refresh_steps = 0;
+    for (inc, reb) in refreshed.iter().zip(&rebuild) {
+        if inc.refreshed {
+            refresh_steps += 1;
+            assert_eq!(
+                inc.accuracy.to_bits(),
+                reb.accuracy.to_bits(),
+                "step {}: refresh step must be bitwise the rebuild",
+                inc.step
+            );
+            assert_eq!(
+                inc.p_value.map(f64::to_bits),
+                reb.p_value.map(f64::to_bits),
+                "step {}: refresh-step p-value",
+                inc.step
+            );
+        }
+    }
+    assert!(refresh_steps > 5, "K={k} over {} evaluated steps", refreshed.len());
+    // K = 1 degenerates to the rebuild reference everywhere, bitwise.
+    let every = run_stream(&StreamConfig { exact_refresh_every: 1, ..base_cfg() }, &data);
+    for (a, b) in every.iter().zip(&rebuild) {
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "K=1 step {}", a.step);
+        assert_eq!(a.p_value.map(f64::to_bits), b.p_value.map(f64::to_bits));
+    }
+}
+
+#[test]
+fn stream_same_sequence_is_bitwise_deterministic() {
+    let data = stream_data(103, 30, 4);
+    let a = run_stream(&base_cfg(), &data);
+    let b = run_stream(&base_cfg(), &data);
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(&b) {
+        assert_eq!(ra.accuracy.to_bits(), rb.accuracy.to_bits(), "step {}", ra.step);
+        assert_eq!(ra.p_value.map(f64::to_bits), rb.p_value.map(f64::to_bits));
+        assert_eq!((ra.refreshed, ra.evicted, ra.n), (rb.refreshed, rb.evicted, rb.n));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. ISA invariance.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stream_results_are_isa_invariant() {
+    let data = stream_data(104, 28, 5);
+    let run_under = |isa: Isa| {
+        let _g = force_scope(isa).unwrap();
+        let mut cv = SlidingWindowCv::new(base_cfg(), ComputeContext::serial()).unwrap();
+        let mut out = Vec::new();
+        for (x, l) in &data {
+            if let Some(r) = cv.push(x.clone(), *l).unwrap() {
+                out.push(r);
+            }
+        }
+        let factor_bits: Vec<u64> =
+            cv.factor().unwrap().chol.l().as_slice().iter().map(|v| v.to_bits()).collect();
+        (out, factor_bits)
+    };
+    let (want, want_factor) = run_under(Isa::Scalar);
+    for isa in Isa::supported() {
+        if isa == Isa::Scalar {
+            continue;
+        }
+        let (got, got_factor) = run_under(isa);
+        assert_eq!(got.len(), want.len(), "[{isa}]");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(
+                g.accuracy.to_bits(),
+                w.accuracy.to_bits(),
+                "[{isa}] step {}: accuracy bits moved",
+                g.step
+            );
+            assert_eq!(g.p_value.map(f64::to_bits), w.p_value.map(f64::to_bits), "[{isa}]");
+        }
+        assert_eq!(got_factor, want_factor, "[{isa}] rolling factor bits moved");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Store lineage.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn stream_store_lineage_supersedes_in_place_and_resolves_stale_keys() {
+    let data = stream_data(105, 24, 4);
+    let store = FactorStore::new();
+    let ctx = ComputeContext::serial().with_store(&store);
+    let cfg = base_cfg();
+    let mut cv = SlidingWindowCv::new(cfg.clone(), ctx).unwrap();
+    let mut mid_key = None;
+    for (i, (x, l)) in data.iter().enumerate() {
+        cv.push(x.clone(), *l).unwrap();
+        if i == 10 {
+            mid_key = cv.factor().map(|f| ArtifactKey::window(f.lineage, cfg.lambda));
+        }
+    }
+    let s = store.stats();
+    // One rolling artifact, updated in place — never a growing entry list.
+    assert_eq!(s.entries, 1, "{s:?}");
+    assert!(s.supersessions > 10, "each step supersedes its parent: {s:?}");
+    assert_eq!(s.evictions, 0, "supersession is not eviction: {s:?}");
+    // A stale mid-stream key still resolves — to the *current* factor.
+    let stale = mid_key.expect("step 11 must have produced a factor");
+    let resolved = store.resolve_window(&stale).expect("lineage must resolve the stale key");
+    let current = cv.factor().unwrap();
+    assert_eq!(
+        resolved.chol.l().as_slice(),
+        current.chol.l().as_slice(),
+        "stale key must serve the superseding factor"
+    );
+    assert_eq!(resolved.lineage, current.lineage);
+    // The current key resolves directly too.
+    let head = ArtifactKey::window(current.lineage, cfg.lambda);
+    assert!(store.resolve_window(&head).is_some());
+    // Determinism is unaffected by store routing.
+    let with_store: Vec<StepResult> = {
+        let store2 = FactorStore::new();
+        let ctx2 = ComputeContext::serial().with_store(&store2);
+        let mut cv2 = SlidingWindowCv::new(cfg.clone(), ctx2).unwrap();
+        data.iter().filter_map(|(x, l)| cv2.push(x.clone(), *l).unwrap()).collect()
+    };
+    let without: Vec<StepResult> = run_stream(&cfg, &data);
+    for (a, b) in with_store.iter().zip(&without) {
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits(), "store moved a float");
+        assert_eq!(a.p_value.map(f64::to_bits), b.p_value.map(f64::to_bits));
+    }
+}

@@ -14,8 +14,8 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 OUT="${FASTCV_BENCH_OUT:-.}"
-for b in ablation_backend ablation_tiling ablation_spill ablation_serve linalg_kernels; do
+for b in ablation_backend ablation_tiling ablation_spill ablation_serve ablation_stream linalg_kernels; do
   echo "== bench: $b =="
   FASTCV_BENCH_OUT="$OUT" cargo bench --bench "$b"
 done
-echo "bench: wrote $OUT/BENCH_backend.json $OUT/BENCH_tiling.json $OUT/BENCH_spill.json $OUT/BENCH_serve.json $OUT/BENCH_gemm.json"
+echo "bench: wrote $OUT/BENCH_backend.json $OUT/BENCH_tiling.json $OUT/BENCH_spill.json $OUT/BENCH_serve.json $OUT/BENCH_stream.json $OUT/BENCH_gemm.json"

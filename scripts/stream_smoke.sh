@@ -1,0 +1,80 @@
+#!/usr/bin/env bash
+# End-to-end smoke test for `fastcv stream` (docs/STREAM.md).
+#
+# 1. Generates a deterministic synthetic NDJSON sample stream.
+# 2. Runs it through `--exact-refresh-every 1` and `--rebuild`: K=1
+#    degenerates to the rebuild reference, so the two outputs must be
+#    **byte-identical** (the bitwise exact-refresh contract).
+# 3. Runs the pure-incremental mode and asserts per-step agreement with
+#    the rebuild reference within tolerance (accuracy ≤ one 1/n quantum,
+#    p-value within the n_perm resolution).
+# 4. Re-runs the incremental mode and asserts byte-identical output
+#    (same-sequence determinism).
+#
+#   scripts/stream_smoke.sh                # builds target/release/fastcv if absent
+#   FASTCV_BIN=path/to/fastcv scripts/stream_smoke.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN="${FASTCV_BIN:-target/release/fastcv}"
+if [ ! -x "$BIN" ]; then
+  echo "== stream_smoke: building release binary =="
+  cargo build --release
+fi
+if ! command -v python3 >/dev/null 2>&1; then
+  echo "stream_smoke: python3 is required to generate/compare NDJSON" >&2
+  exit 1
+fi
+
+TMP="$(mktemp -d "${TMPDIR:-/tmp}/fastcv-stream-smoke.XXXXXX")"
+trap 'rm -rf "$TMP"' EXIT
+
+STREAM_FLAGS=(--window 24 --lambda 2.0 --folds 4 --n-perm 8 --seed 7)
+
+echo "== stream_smoke: generating synthetic sample stream =="
+python3 - > "$TMP/samples.ndjson" <<'PY'
+import json, random
+rng = random.Random(2018)
+for _ in range(80):
+    label = rng.randrange(2)
+    shift = 0.8 if label == 0 else -0.8
+    x = [rng.gauss(shift, 1.0) for _ in range(6)]
+    print(json.dumps({"x": [round(v, 6) for v in x], "label": label}))
+PY
+
+echo "== stream_smoke: K=1 exact refresh vs rebuild reference (byte-identical) =="
+"$BIN" stream "${STREAM_FLAGS[@]}" --exact-refresh-every 1 \
+  < "$TMP/samples.ndjson" > "$TMP/refresh1.ndjson" 2> "$TMP/refresh1.log"
+"$BIN" stream "${STREAM_FLAGS[@]}" --rebuild \
+  < "$TMP/samples.ndjson" > "$TMP/rebuild.ndjson" 2> "$TMP/rebuild.log"
+diff -u "$TMP/rebuild.ndjson" "$TMP/refresh1.ndjson"
+
+echo "== stream_smoke: incremental vs rebuild (per-step tolerance) =="
+"$BIN" stream "${STREAM_FLAGS[@]}" \
+  < "$TMP/samples.ndjson" > "$TMP/incremental.ndjson" 2> "$TMP/incremental.log"
+python3 - "$TMP" <<'PY'
+import json, pathlib, sys
+
+tmp = pathlib.Path(sys.argv[1])
+inc = [json.loads(l) for l in (tmp / "incremental.ndjson").read_text().splitlines() if l.strip()]
+reb = [json.loads(l) for l in (tmp / "rebuild.ndjson").read_text().splitlines() if l.strip()]
+assert inc and len(inc) == len(reb), f"step counts differ: {len(inc)} vs {len(reb)}"
+n_perm = 8
+for a, b in zip(inc, reb):
+    assert (a["step"], a["n"], a["evicted"]) == (b["step"], b["n"], b["evicted"]), (a, b)
+    # Accuracy is 1/n-quantised; the tiny factor drift may move at most
+    # one sample across the decision threshold per step.
+    assert abs(a["acc"] - b["acc"]) <= 1.0 / a["n"] + 1e-12, (a, b)
+    assert abs(a["p"] - b["p"]) <= 2.0 / (1.0 + n_perm) + 1e-12, (a, b)
+maintained = sum(1 for a in inc if not a["refreshed"])
+assert maintained > len(inc) // 2, f"incremental mode barely maintained: {maintained}/{len(inc)}"
+print(f"stream_smoke: {len(inc)} steps agree ({maintained} maintained incrementally)")
+PY
+grep -q "downdate rescue" "$TMP/incremental.log"
+
+echo "== stream_smoke: same-sequence determinism (byte-identical rerun) =="
+"$BIN" stream "${STREAM_FLAGS[@]}" \
+  < "$TMP/samples.ndjson" > "$TMP/incremental2.ndjson" 2>/dev/null
+diff -u "$TMP/incremental.ndjson" "$TMP/incremental2.ndjson"
+
+echo "stream_smoke: OK"

@@ -46,6 +46,13 @@ cargo test -q spill_
 echo "== kernel conformance: cargo test -q kernel_conformance_ =="
 cargo test -q kernel_conformance_
 
+# The streaming property suite is the contract behind the incremental
+# engine: up/downdate algebra, incremental-vs-rebuild agreement (bitwise
+# on exact-refresh steps), determinism, and ISA invariance of the rolling
+# factor (docs/STREAM.md); run it by name too.
+echo "== streaming engine: cargo test -q stream_ =="
+cargo test -q stream_
+
 echo "== benches compile: cargo bench --no-run =="
 cargo bench --no-run
 
