@@ -210,6 +210,13 @@ impl<'p> SlidingWindowCv<'p> {
             bail!("sample {} has {} features, stream started with {dim}", self.step + 1, x.len());
         }
         self.step += 1;
+        // A scheduled exact refresh makes this step's rotations dead work
+        // (the factor is rebuilt from scratch below), so decide first and
+        // skip them — also keeps a downdate refused during dead work from
+        // counting as a rescue.
+        let refresh_due = self.cfg.exact_refresh_every > 0
+            && self.since_refresh + 1 >= self.cfg.exact_refresh_every;
+        let maintain = !self.cfg.rebuild && !refresh_due;
         let mut evicted = false;
         // Evict the oldest sample once the window is at capacity —
         // downdating the factor with its augmented row. A refused
@@ -218,7 +225,7 @@ impl<'p> SlidingWindowCv<'p> {
         if self.window.len() == self.cfg.window {
             if let Some((old_x, _)) = self.window.pop_front() {
                 evicted = true;
-                if !self.cfg.rebuild {
+                if maintain {
                     if let Some(f) = self.factor.as_mut() {
                         let wf = Arc::make_mut(f);
                         let v = augmented(&old_x);
@@ -234,7 +241,7 @@ impl<'p> SlidingWindowCv<'p> {
         }
         // Append the new sample: rank-1 update with x̃ = [x, 1]. The mean
         // is never recentred — the intercept column carries it.
-        if !self.cfg.rebuild {
+        if maintain {
             if let Some(f) = self.factor.as_mut() {
                 let wf = Arc::make_mut(f);
                 let v = augmented(&x);
@@ -247,8 +254,6 @@ impl<'p> SlidingWindowCv<'p> {
         if n < self.cfg.folds.max(2) {
             return Ok(None);
         }
-        let refresh_due = self.cfg.exact_refresh_every > 0
-            && self.since_refresh + 1 >= self.cfg.exact_refresh_every;
         let refreshed = self.factor.is_none() || self.cfg.rebuild || refresh_due;
         if refreshed {
             self.refresh_exact()?;
@@ -273,14 +278,21 @@ impl<'p> SlidingWindowCv<'p> {
     /// `syrk_t_pool → ridge(I₀) → Cholesky::factor` sequence as the
     /// primal [`crate::fastcv::hat::GramCache`] arm, so the result is
     /// bitwise what a non-streaming build would produce. Consults the
-    /// store first: an identical lineage (same window bytes under the
-    /// same λ) is a hit, possibly through a supersession link.
+    /// store first with the non-lineage-following [`FactorStore::get`]:
+    /// only a factor still live under this *exact* content key (same
+    /// window bytes, same λ) is a hit. Supersession links are never
+    /// followed here — on a low-entropy stream the window bytes can
+    /// repeat an earlier refresh step's, whose key has since been
+    /// superseded by drifted incremental factors; serving the descendant
+    /// would silently break the bitwise-rebuild contract (and neuter the
+    /// refused-downdate rescue, which relies on this path being exact).
     fn refresh_exact(&mut self) -> Result<()> {
         let xa = self.window_x().augment_ones();
         let lineage = lineage_exact(&xa);
         if let Some(store) = self.ctx.store() {
             let key = ArtifactKey::window(lineage, self.cfg.lambda);
-            if let Some(wf) = store.resolve_window(&key) {
+            if let Some(wf) = store.get_window(&key) {
+                debug_assert_eq!(wf.lineage, lineage, "window entry keyed under foreign lineage");
                 self.factor = Some(wf);
                 return Ok(());
             }

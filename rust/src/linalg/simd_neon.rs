@@ -226,7 +226,10 @@ pub(crate) fn pack_a(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, mr: us
 // below and justified per use.
 #[target_feature(enable = "neon")]
 unsafe fn pack_a_impl(a: &Mat, i0: usize, mc: usize, k0: usize, kc: usize, pack: &mut [f64]) {
-    debug_assert!(pack.len() >= mc.next_multiple_of(MR) * kc);
+    // Release-mode assert: the raw-pointer stores below are bounded by this
+    // check alone — a short pack buffer must panic like the scalar packer
+    // does, never write out of bounds (audited-unsafe policy).
+    assert!(pack.len() >= mc.next_multiple_of(MR) * kc);
     let mut idx = 0;
     let mut i = 0;
     while i < mc {
@@ -305,7 +308,10 @@ pub(crate) fn pack_b(b: &Mat, k0: usize, kc: usize, nr: usize, pack: &mut [f64])
 #[target_feature(enable = "neon")]
 unsafe fn pack_b_impl(b: &Mat, k0: usize, kc: usize, pack: &mut [f64]) {
     let n = b.cols();
-    debug_assert!(pack.len() >= kc * n.next_multiple_of(NR));
+    // Release-mode assert: the raw-pointer stores below are bounded by this
+    // check alone — a short pack buffer must panic like the scalar packer
+    // does, never write out of bounds (audited-unsafe policy).
+    assert!(pack.len() >= kc * n.next_multiple_of(NR));
     let mut idx = 0;
     let mut j = 0;
     while j < n {

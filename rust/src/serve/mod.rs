@@ -257,27 +257,33 @@ impl Server {
             for _ in 0..self.config.workers.max(1) {
                 scope.spawn(|| self.worker_loop(&queue, &out));
             }
-            for line in reader.lines() {
-                let line = line.context("reading request stream")?;
-                if line.trim().is_empty() {
-                    continue;
-                }
-                match Request::parse(&line) {
-                    Ok(req) => {
-                        let stop = req.op == "shutdown";
-                        queue.push(req);
-                        if stop {
-                            saw_shutdown = true;
-                            break;
+            let mut read_all = || -> Result<()> {
+                for line in reader.lines() {
+                    let line = line.context("reading request stream")?;
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    match Request::parse(&line) {
+                        Ok(req) => {
+                            let stop = req.op == "shutdown";
+                            queue.push(req);
+                            if stop {
+                                saw_shutdown = true;
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            write_line(&out, &error_response(&Json::Null, &format!("{e:#}")));
                         }
                     }
-                    Err(e) => {
-                        write_line(&out, &error_response(&Json::Null, &format!("{e:#}")));
-                    }
                 }
-            }
+                Ok(())
+            };
+            // Close the queue even on a read error — otherwise the workers
+            // (and this scope's join) would block forever on a torn stream.
+            let read_result = read_all();
             queue.close();
-            Ok(())
+            read_result
         })?;
         Ok(saw_shutdown)
     }
@@ -288,35 +294,65 @@ impl Server {
     /// blocks the next client (they all share this server's store and
     /// queue semantics per connection). The loop runs until a `shutdown`
     /// op arrives on any connection; the handler then raises the shared
-    /// shutdown flag and self-connects to unblock the accept call, which
-    /// re-checks the flag and stops. A connection that fails mid-stream
-    /// (client vanished, torn socket) ends only that handler — the daemon
-    /// keeps serving. A pre-existing socket file at `path` is replaced.
+    /// shutdown flag, **severs every other live connection** (so handlers
+    /// blocked reading an idle client observe EOF and exit instead of
+    /// pinning the scope join forever), and self-connects to unblock the
+    /// accept call, which re-checks the flag and stops. A connection that
+    /// fails mid-stream (client vanished, torn socket) ends only that
+    /// handler — the daemon keeps serving. A pre-existing socket file at
+    /// `path` is replaced.
     pub fn serve_unix(&self, path: &std::path::Path) -> Result<()> {
+        use std::os::unix::net::{UnixListener, UnixStream};
         std::fs::remove_file(path).ok();
-        let listener = std::os::unix::net::UnixListener::bind(path)
+        let listener = UnixListener::bind(path)
             .with_context(|| format!("binding unix socket {}", path.display()))?;
         let shutdown = AtomicBool::new(false);
+        // Live connections by accept id; the shutdown handler walks this
+        // to cut idle readers loose.
+        let conns: Mutex<BTreeMap<u64, UnixStream>> = Mutex::new(BTreeMap::new());
+        let conn_seq = AtomicU64::new(0);
         let sock_path = path.to_path_buf();
         std::thread::scope(|scope| -> Result<()> {
             loop {
                 let (conn, _) = listener.accept().context("accepting serve connection")?;
+                let id = conn_seq.fetch_add(1, Ordering::SeqCst);
+                // Register *before* checking the flag: either this insert
+                // lands before the shutdown handler's sever pass (we get
+                // severed) or after it (the lock hand-off makes the raised
+                // flag visible below) — no connection can slip through
+                // unsevered and unchecked.
+                if let Ok(c) = conn.try_clone() {
+                    conns.lock().unwrap_or_else(PoisonError::into_inner).insert(id, c);
+                }
                 if shutdown.load(Ordering::SeqCst) {
                     // The wake-up self-connection (or a late client during
                     // teardown): drop it and stop accepting.
+                    conns.lock().unwrap_or_else(PoisonError::into_inner).remove(&id);
                     break;
                 }
-                let shutdown = &shutdown;
-                let sock_path = &sock_path;
+                let (shutdown, conns, sock_path) = (&shutdown, &conns, &sock_path);
                 scope.spawn(move || {
-                    let Ok(clone) = conn.try_clone() else { return };
-                    let reader = std::io::BufReader::new(clone);
                     // Ok(true) = this connection carried the shutdown op;
                     // errors are that client's problem, not the daemon's.
-                    if let Ok(true) = self.serve_stream(reader, conn) {
+                    let carried_shutdown = match conn.try_clone() {
+                        Ok(clone) => {
+                            let reader = std::io::BufReader::new(clone);
+                            matches!(self.serve_stream(reader, conn), Ok(true))
+                        }
+                        Err(_) => false,
+                    };
+                    conns.lock().unwrap_or_else(PoisonError::into_inner).remove(&id);
+                    if carried_shutdown {
                         shutdown.store(true, Ordering::SeqCst);
-                        // Unblock the (possibly idle) accept loop.
-                        let _ = std::os::unix::net::UnixStream::connect(sock_path);
+                        // Sever every still-open connection so its handler
+                        // unblocks and the scope can join…
+                        let g = conns.lock().unwrap_or_else(PoisonError::into_inner);
+                        for c in g.values() {
+                            let _ = c.shutdown(std::net::Shutdown::Both);
+                        }
+                        drop(g);
+                        // …and unblock the (possibly idle) accept loop.
+                        let _ = UnixStream::connect(sock_path);
                     }
                 });
             }
@@ -905,7 +941,10 @@ mod tests {
             b_reader.read_line(&mut resp).expect("B must be answered while A idles");
             let v = parse_ok(&resp);
             assert_eq!(v.get("id").and_then(Json::as_str), Some("b"));
-            // A is still connected; now it shuts the daemon down.
+            // A is still connected; now it shuts the daemon down. B stays
+            // connected and idle the whole time — the daemon must sever
+            // B's connection itself rather than wait on it, so the join
+            // below completes while B is still open.
             a.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
             writeln!(a, r#"{{"id":"a","op":"shutdown"}}"#).unwrap();
             a.flush().unwrap();
@@ -913,9 +952,13 @@ mod tests {
             let mut resp = String::new();
             a_reader.read_line(&mut resp).unwrap();
             parse_ok(&resp);
+            daemon.join().unwrap().unwrap();
+            assert!(!sock.exists(), "socket file must be removed on shutdown");
+            // The severed idle client reads EOF, not a hang.
+            let mut tail = String::new();
+            assert_eq!(b_reader.read_line(&mut tail).unwrap(), 0, "B must see EOF");
             drop(a);
             drop(b);
-            daemon.join().unwrap().unwrap();
         });
         std::fs::remove_dir_all(&dir).ok();
     }

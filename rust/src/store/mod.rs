@@ -494,6 +494,39 @@ impl FactorStore {
         }
     }
 
+    /// Exact-key lookup that does **not** follow supersession links: the
+    /// artifact live under `key` itself, or `None`. Content-addressed
+    /// callers — the incremental engine's exact-refresh keys, where the
+    /// key names specific window bytes — must use this instead of
+    /// [`FactorStore::resolve`]: a superseded content key means "the
+    /// factor for those bytes was replaced by a *drifted* descendant",
+    /// which must read as a miss, never be served as an exact hit.
+    pub fn get(&self, key: &ArtifactKey) -> Option<Artifact> {
+        let mut g = self.lock();
+        g.clock += 1;
+        let now = g.clock;
+        match g.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = now;
+                g.hits += 1;
+                Some(e.artifact.clone())
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// [`FactorStore::get`] narrowed to [`Artifact::Window`]; `None` on a
+    /// miss, a superseded key, or a kind clash.
+    pub fn get_window(&self, key: &ArtifactKey) -> Option<Arc<WindowFactor>> {
+        match self.get(key) {
+            Some(Artifact::Window(w)) => Some(w),
+            _ => None,
+        }
+    }
+
     fn lock(&self) -> MutexGuard<'_, Inner> {
         // A poisoned store only means another thread panicked mid-insert;
         // the map itself is always structurally valid, so recover.
@@ -796,6 +829,26 @@ mod tests {
         // The just-inserted entry is protected; nothing to evict.
         let s = store.stats();
         assert_eq!((s.entries, s.evictions), (1, 0), "{s:?}");
+    }
+
+    #[test]
+    fn get_is_exact_while_resolve_follows_supersession() {
+        use crate::fastcv::incremental::WindowFactor;
+        use crate::linalg::Cholesky;
+        let store = FactorStore::new();
+        let wf = |lineage: u64| {
+            let g = Mat::from_fn(2, 2, |i, j| if i == j { 2.0 + lineage as f64 } else { 0.5 });
+            Arc::new(WindowFactor { chol: Cholesky::factor(&g).unwrap(), lineage })
+        };
+        let parent = ArtifactKey::window(1, 1.0);
+        let child = ArtifactKey::window(2, 1.0);
+        store.put(parent.clone(), Artifact::Window(wf(1)));
+        store.supersede(&parent, child.clone(), Artifact::Window(wf(2)));
+        // resolve serves the superseding artifact through the stale key…
+        assert_eq!(store.resolve_window(&parent).unwrap().lineage, 2);
+        // …get treats the superseded key as the miss it is.
+        assert!(store.get_window(&parent).is_none());
+        assert_eq!(store.get_window(&child).unwrap().lineage, 2);
     }
 
     #[test]

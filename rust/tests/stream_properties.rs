@@ -308,6 +308,58 @@ fn stream_results_are_isa_invariant() {
 // ---------------------------------------------------------------------------
 
 #[test]
+fn stream_exact_refresh_stays_exact_when_window_bytes_repeat() {
+    // Regression: on a constant stream every exact-refresh step sees the
+    // same window bytes, so the content-addressed exact key repeats; the
+    // first refresh's entry is then superseded by the incremental steps'
+    // drifted factors. A lineage-following store lookup would serve that
+    // drifted descendant as if it were an exact rebuild — breaking the
+    // bitwise-rebuild contract exactly where the drift-bounding knob (and
+    // the refused-downdate rescue) depends on it.
+    let x = vec![0.5, -1.25, 2.0];
+    let store = FactorStore::new();
+    let ctx = ComputeContext::serial().with_store(&store);
+    let cfg = StreamConfig {
+        window: 6,
+        lambda: 2.0,
+        folds: 2,
+        n_perm: 0,
+        seed: 9,
+        exact_refresh_every: 3,
+        rebuild: false,
+    };
+    let mut cv = SlidingWindowCv::new(cfg.clone(), ctx).unwrap();
+    let mut reb = SlidingWindowCv::new(
+        StreamConfig { rebuild: true, ..cfg.clone() },
+        ComputeContext::serial(),
+    )
+    .unwrap();
+    let mut checked_refreshes = 0;
+    for i in 0..30u64 {
+        let ri = cv.push(x.clone(), (i % 2) as usize).unwrap();
+        let rr = reb.push(x.clone(), (i % 2) as usize).unwrap();
+        assert_eq!(ri.is_some(), rr.is_some());
+        let Some(ri) = ri else { continue };
+        if ri.refreshed {
+            checked_refreshes += 1;
+            let (f, fr) = (cv.factor().unwrap(), reb.factor().unwrap());
+            assert_eq!(
+                f.lineage, fr.lineage,
+                "step {}: refresh served a non-exact (drifted) factor",
+                ri.step
+            );
+            assert_eq!(
+                f.chol.l().as_slice(),
+                fr.chol.l().as_slice(),
+                "step {}: refresh factor must be bitwise the rebuild",
+                ri.step
+            );
+        }
+    }
+    assert!(checked_refreshes >= 7, "K=3 over 29 evaluated steps: {checked_refreshes}");
+}
+
+#[test]
 fn stream_store_lineage_supersedes_in_place_and_resolves_stale_keys() {
     let data = stream_data(105, 24, 4);
     let store = FactorStore::new();
