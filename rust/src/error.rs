@@ -1,0 +1,157 @@
+//! The typed error taxonomy for the serve/store/spill boundaries.
+//!
+//! Inside the library, `anyhow` contexts remain the right tool — errors
+//! are for humans reading a CLI message. At the *daemon boundary* they
+//! are for machines: a client deciding whether to retry needs to tell an
+//! `overloaded` rejection (retry after backoff) from a `bad_request`
+//! (never retry) without parsing prose. [`FastCvError`] carries that
+//! machine-readable `kind`; the serve layer attaches it to responses as a
+//! `"kind"` field (plus `"field"` for `bad_request`), and
+//! [`crate::runtime::serve_client`] keys its retry policy off it. See
+//! `docs/ROBUSTNESS.md` for the full taxonomy and retry semantics.
+
+/// A typed fault at the serve/store/spill boundary. Wrapped in
+/// `anyhow::Error` on the way up (so every existing `Result` plumbing
+/// works unchanged) and recovered by downcast at the response encoder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FastCvError {
+    /// The request was malformed: a field was missing, of the wrong type,
+    /// or out of range. Never retryable — the same bytes will fail again.
+    BadRequest {
+        /// The offending field, echoed to the client.
+        field: String,
+        /// What was wrong with it.
+        detail: String,
+    },
+    /// The request's deadline expired before a worker could run it.
+    DeadlineExceeded {
+        /// The configured per-request deadline in milliseconds.
+        deadline_ms: u64,
+    },
+    /// The job queue was at capacity; the request was rejected at
+    /// admission. Retryable after backoff — the daemon is up, just busy.
+    Overloaded {
+        /// The configured queue capacity.
+        cap: usize,
+    },
+    /// A worker panicked while processing the request. The daemon
+    /// survives (the panic is caught at the worker boundary); the request
+    /// gets this instead of silence.
+    WorkerPanic {
+        /// The panic payload's message, when it was a string.
+        detail: String,
+    },
+    /// On-disk state failed its checksum. The store recovers by evicting
+    /// and rebuilding; this surfaces only when recovery itself fails.
+    Corrupt {
+        /// Which artifact, and how the checksum failed.
+        detail: String,
+    },
+}
+
+impl FastCvError {
+    /// The machine-readable kind tag — the serve response's `"kind"`
+    /// field and the retry policy's discriminator.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FastCvError::BadRequest { .. } => "bad_request",
+            FastCvError::DeadlineExceeded { .. } => "deadline_exceeded",
+            FastCvError::Overloaded { .. } => "overloaded",
+            FastCvError::WorkerPanic { .. } => "worker_panic",
+            FastCvError::Corrupt { .. } => "corrupt",
+        }
+    }
+
+    /// The offending field for `bad_request` (echoed in the response).
+    pub fn field(&self) -> Option<&str> {
+        match self {
+            FastCvError::BadRequest { field, .. } => Some(field),
+            _ => None,
+        }
+    }
+
+    /// Is a verbatim retry of the same request safe *and* potentially
+    /// useful? `overloaded` and `worker_panic` are transient daemon
+    /// states; `bad_request` and `deadline_exceeded` will fail the same
+    /// way again (the deadline is the client's own budget), and `corrupt`
+    /// needs the store's rebuild, not a blind resend.
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, FastCvError::Overloaded { .. } | FastCvError::WorkerPanic { .. })
+    }
+
+    /// Parse a kind tag back into a skeleton error (no payload) — the
+    /// client side of the wire protocol, for keying retry policy off a
+    /// response's `"kind"` field.
+    pub fn from_kind(kind: &str) -> Option<FastCvError> {
+        match kind {
+            "bad_request" => {
+                Some(FastCvError::BadRequest { field: String::new(), detail: String::new() })
+            }
+            "deadline_exceeded" => Some(FastCvError::DeadlineExceeded { deadline_ms: 0 }),
+            "overloaded" => Some(FastCvError::Overloaded { cap: 0 }),
+            "worker_panic" => Some(FastCvError::WorkerPanic { detail: String::new() }),
+            "corrupt" => Some(FastCvError::Corrupt { detail: String::new() }),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for FastCvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FastCvError::BadRequest { field, detail } => {
+                write!(f, "bad request: field {field:?}: {detail}")
+            }
+            FastCvError::DeadlineExceeded { deadline_ms } => {
+                write!(f, "deadline exceeded ({deadline_ms} ms)")
+            }
+            FastCvError::Overloaded { cap } => {
+                write!(f, "overloaded: job queue at capacity ({cap})")
+            }
+            FastCvError::WorkerPanic { detail } => write!(f, "worker panicked: {detail}"),
+            FastCvError::Corrupt { detail } => write!(f, "corrupt artifact: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for FastCvError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_round_trip_and_classify_retryability() {
+        let errs = [
+            FastCvError::BadRequest { field: "lambda".into(), detail: "not a number".into() },
+            FastCvError::DeadlineExceeded { deadline_ms: 50 },
+            FastCvError::Overloaded { cap: 4 },
+            FastCvError::WorkerPanic { detail: "boom".into() },
+            FastCvError::Corrupt { detail: "panel 3".into() },
+        ];
+        for e in &errs {
+            let back = FastCvError::from_kind(e.kind()).expect(e.kind());
+            assert_eq!(back.kind(), e.kind());
+            assert_eq!(back.is_retryable(), e.is_retryable());
+        }
+        assert!(FastCvError::from_kind("nonsense").is_none());
+        assert!(FastCvError::Overloaded { cap: 1 }.is_retryable());
+        assert!(!FastCvError::BadRequest { field: "x".into(), detail: String::new() }
+            .is_retryable());
+        assert_eq!(
+            FastCvError::BadRequest { field: "k".into(), detail: "missing".into() }.field(),
+            Some("k")
+        );
+        assert_eq!(FastCvError::Overloaded { cap: 1 }.field(), None);
+    }
+
+    #[test]
+    fn display_echoes_the_offending_field() {
+        let e = FastCvError::BadRequest { field: "folds".into(), detail: "must be ≥ 2".into() };
+        let msg = e.to_string();
+        assert!(msg.contains("folds") && msg.contains("≥ 2"), "{msg}");
+        // a downcast through anyhow recovers the typed value
+        let any = anyhow::Error::from(e.clone());
+        assert_eq!(any.downcast_ref::<FastCvError>(), Some(&e));
+    }
+}

@@ -32,11 +32,13 @@
 //! exception and are therefore opt-in: nested-fold Gram sharing changes the
 //! float path (agreement is tested at tolerance, not bitwise).
 
+use super::fault::{self, FaultPlan};
 use super::hat::GramBackend;
 use crate::linalg::{dispatch, Isa, TilePolicy};
 use crate::store::FactorStore;
 use crate::util::threadpool::ThreadPool;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// An owned-or-borrowed pool handle.
 enum PoolRef<'p> {
@@ -151,6 +153,24 @@ impl<'p> ComputeContext<'p> {
     /// reads the process-wide dispatch state.
     pub fn isa(&self) -> Isa {
         dispatch::active()
+    }
+
+    /// Install a deterministic [`FaultPlan`] (builder style) — the
+    /// [`crate::fastcv::fault`] knob. Like [`ComputeContext::with_isa`]
+    /// this override is **process-wide** (fault sites live in layers —
+    /// panel files, daemon workers — that no per-call context reaches);
+    /// the last context to set it wins, and `FASTCV_FAULT_PLAN` supplies
+    /// a plan when no context installed one. Intended for chaos tests and
+    /// drills only: with no plan active every fault site is a no-op.
+    pub fn with_faults(self, plan: Arc<FaultPlan>) -> Self {
+        fault::set_plan(Some(plan));
+        self
+    }
+
+    /// The active fault plan, if any — reads the process-wide fault
+    /// state, like [`ComputeContext::isa`].
+    pub fn faults(&self) -> Option<Arc<FaultPlan>> {
+        fault::global()
     }
 
     /// The lent [`FactorStore`], if any.
@@ -275,6 +295,19 @@ mod tests {
             }
         }
         assert!(ComputeContext::serial().isa().is_supported());
+    }
+
+    #[test]
+    fn faults_knob_installs_a_process_wide_plan() {
+        // Hold a fault scope so this test serialises with every other
+        // fault-state test, then layer the context knob on top; the scope
+        // drop restores the pre-test state either way.
+        let _scope = fault::install(FaultPlan::parse("ctx.other@1").unwrap());
+        let ctx = ComputeContext::serial()
+            .with_faults(Arc::new(FaultPlan::parse("ctx.site@1").unwrap()));
+        assert!(ctx.faults().is_some());
+        assert_eq!(fault::hit("ctx.site"), Some(0));
+        assert_eq!(fault::hit("ctx.site"), None, "@1 fires once");
     }
 
     #[test]

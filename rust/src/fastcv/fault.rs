@@ -1,0 +1,344 @@
+//! Deterministic fault injection: named fault sites + a counter-seeded
+//! [`FaultPlan`] that decides, reproducibly, which arrivals at a site
+//! fire.
+//!
+//! The serve/store/spill stack recovers from torn panel writes, corrupt
+//! on-disk factors, panicking workers, and dropped connections — but none
+//! of those recovery paths is testable by waiting for real crashes. This
+//! module makes every fault a *scheduled event*: production code asks
+//! [`hit`]`("site.name")` at each named site (a no-op returning `None`
+//! when no plan is active), and a test — or a CI job via the
+//! `FASTCV_FAULT_PLAN` environment variable — installs a plan that fires
+//! deterministic faults at chosen arrivals.
+//!
+//! ## Plan grammar
+//!
+//! A plan is a comma-separated list of rules. Each rule names a site and
+//! a trigger, with an optional `=arg` payload (meaning is site-specific —
+//! e.g. a delay in milliseconds for `spill.read.delay`):
+//!
+//! | rule                | fires                                         |
+//! |---------------------|-----------------------------------------------|
+//! | `site@n`            | exactly on the `n`-th arrival (1-based)       |
+//! | `site%k`            | on every `k`-th arrival                       |
+//! | `site~seed:ppm`     | per-arrival coin from [`Rng::stream`]`(seed, arrival)`, firing with probability `ppm` per million |
+//!
+//! Example: `spill.write.torn@1,serve.worker.panic%3,spill.read.delay@2=50`.
+//!
+//! ## Determinism (the lint-L2 contract)
+//!
+//! A plan is a pure function of `(spec, per-site arrival count)`: the
+//! probabilistic trigger draws from the counter-seeded
+//! [`Rng::stream`](crate::util::rng::Rng::stream) — no entropy, no clock —
+//! so the same plan against the same call sequence fires the same faults,
+//! on every machine, every run. That is what lets the `chaos_*` property
+//! suite pin recovery paths bitwise (a rebuilt-after-corruption factor
+//! must equal the never-corrupted one).
+//!
+//! ## Activation
+//!
+//! Priority order for [`global`]: a plan installed by [`install`] (tests)
+//! or [`set_plan`] (the [`ComputeContext::with_faults`] knob), else the
+//! process-wide `FASTCV_FAULT_PLAN` environment plan, else none. Like the
+//! ISA override, the active plan is process-global — fault sites live in
+//! layers (panel files, daemon workers) that no per-call context reaches.
+//!
+//! [`ComputeContext::with_faults`]: crate::fastcv::context::ComputeContext::with_faults
+//! [`Rng::stream`]: crate::util::rng::Rng::stream
+
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+
+/// How a rule decides whether arrival number `a` (1-based) fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Trigger {
+    /// `site@n` — fire exactly on the n-th arrival.
+    At(u64),
+    /// `site%k` — fire on every k-th arrival (a = k, 2k, 3k, …).
+    Every(u64),
+    /// `site~seed:ppm` — fire iff the counter-seeded coin for this
+    /// arrival lands below `ppm` (parts per million).
+    Seeded { seed: u64, ppm: u64 },
+}
+
+impl Trigger {
+    fn fires(&self, arrival: u64) -> bool {
+        match *self {
+            Trigger::At(n) => arrival == n,
+            Trigger::Every(k) => arrival % k == 0,
+            Trigger::Seeded { seed, ppm } => {
+                // One u64 per (seed, arrival): a pure counter-seeded draw,
+                // so the schedule is a function of the call sequence only.
+                Rng::stream(seed, arrival).next_u64() % 1_000_000 < ppm
+            }
+        }
+    }
+}
+
+/// One parsed rule: a site name, a trigger, and the `=arg` payload.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Rule {
+    site: String,
+    trigger: Trigger,
+    arg: u64,
+}
+
+/// A deterministic fault schedule: per-site arrival counters plus the
+/// rules parsed from the plan spec (see the module docs for the grammar).
+///
+/// ```
+/// use fastcv::fastcv::fault::FaultPlan;
+///
+/// let plan = FaultPlan::parse("spill.write.torn@2,spill.read.delay%3=50").unwrap();
+/// assert_eq!(plan.hit("spill.write.torn"), None);     // arrival 1
+/// assert_eq!(plan.hit("spill.write.torn"), Some(0));  // arrival 2 fires
+/// assert_eq!(plan.hit("spill.read.delay"), None);
+/// assert_eq!(plan.hit("spill.read.delay"), None);
+/// assert_eq!(plan.hit("spill.read.delay"), Some(50)); // every 3rd, arg 50
+/// assert_eq!(plan.hit("unlisted.site"), None);
+/// ```
+#[derive(Debug)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+    /// Arrivals seen per site — `BTreeMap`, not `HashMap`, per the repo's
+    /// determinism lint (iteration order never matters here, but the rule
+    /// is absolute).
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl FaultPlan {
+    /// Parse a plan spec (the module-docs grammar). Errors name the
+    /// offending rule — a misconfigured `FASTCV_FAULT_PLAN` must fail
+    /// loudly, not silently inject nothing and fake chaos coverage.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut rules = Vec::new();
+        for raw in spec.split(',') {
+            let entry = raw.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            rules.push(Self::parse_rule(entry).with_context(|| format!("fault rule {entry:?}"))?);
+        }
+        if rules.is_empty() {
+            bail!("empty fault plan (spec {spec:?})");
+        }
+        Ok(FaultPlan { rules, counters: Mutex::new(BTreeMap::new()) })
+    }
+
+    fn parse_rule(entry: &str) -> Result<Rule> {
+        let (body, arg) = match entry.split_once('=') {
+            Some((body, arg)) => {
+                (body, arg.parse::<u64>().with_context(|| format!("arg {arg:?}"))?)
+            }
+            None => (entry, 0),
+        };
+        let at = body.find(['@', '%', '~']);
+        let Some(pos) = at else {
+            bail!("no trigger — expected site@n, site%k, or site~seed:ppm");
+        };
+        let site = body[..pos].trim();
+        if site.is_empty() {
+            bail!("empty site name");
+        }
+        let num = |s: &str| s.parse::<u64>().with_context(|| format!("number {s:?}"));
+        let rest = &body[pos + 1..];
+        let trigger = match body.as_bytes()[pos] {
+            b'@' => {
+                let n = num(rest)?;
+                if n == 0 {
+                    bail!("@0 never fires (arrivals are 1-based)");
+                }
+                Trigger::At(n)
+            }
+            b'%' => {
+                let k = num(rest)?;
+                if k == 0 {
+                    bail!("%0 would divide by zero");
+                }
+                Trigger::Every(k)
+            }
+            _ => {
+                let Some((seed, ppm)) = rest.split_once(':') else {
+                    bail!("~ trigger needs seed:ppm");
+                };
+                Trigger::Seeded { seed: num(seed)?, ppm: num(ppm)? }
+            }
+        };
+        Ok(Rule { site: site.to_string(), trigger, arg })
+    }
+
+    /// Record one arrival at `site` and report whether it fires:
+    /// `Some(arg)` (the rule's `=arg` payload, `0` when absent) when a
+    /// rule triggers, `None` otherwise. Counting is per-site and
+    /// per-plan, so plans installed by different tests never interfere.
+    pub fn hit(&self, site: &str) -> Option<u64> {
+        if !self.rules.iter().any(|r| r.site == site) {
+            return None; // unlisted sites never pay the counter lock
+        }
+        let mut counters = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        let arrival = counters.entry(site.to_string()).or_insert(0);
+        *arrival += 1;
+        let a = *arrival;
+        drop(counters);
+        self.rules.iter().find(|r| r.site == site && r.trigger.fires(a)).map(|r| r.arg)
+    }
+
+    /// Arrivals recorded at `site` so far (test introspection).
+    pub fn arrivals(&self, site: &str) -> u64 {
+        let counters = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        counters.get(site).copied().unwrap_or(0)
+    }
+}
+
+/// The programmatically installed plan (`None` = fall through to the
+/// environment plan).
+static ACTIVE: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+/// Serialises [`install`] scopes (tests) so nested guards can't
+/// interleave their restore writes — same discipline as the ISA
+/// `force_scope`.
+static SCOPE_LOCK: Mutex<()> = Mutex::new(());
+
+/// `FASTCV_FAULT_PLAN`, parsed once. A malformed plan is a configuration
+/// error and must fail loudly — a chaos CI leg that silently injected
+/// nothing would claim coverage it does not have.
+fn env_plan() -> Option<Arc<FaultPlan>> {
+    static ENV: OnceLock<Option<Arc<FaultPlan>>> = OnceLock::new();
+    ENV.get_or_init(|| {
+        let spec = std::env::var("FASTCV_FAULT_PLAN").ok()?;
+        if spec.trim().is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(p) => Some(Arc::new(p)),
+            // lint:allow(panic, reason = "FASTCV_FAULT_PLAN misconfiguration must fail loudly, not silently inject nothing and fake chaos coverage")
+            Err(e) => panic!("FASTCV_FAULT_PLAN={spec:?} did not parse: {e:#}"),
+        }
+    })
+    .clone()
+}
+
+/// The active plan: the installed one, else the `FASTCV_FAULT_PLAN`
+/// environment plan, else `None`. Cheap when no plan was ever configured
+/// (one mutex lock + one `OnceLock` read).
+pub fn global() -> Option<Arc<FaultPlan>> {
+    let installed = ACTIVE.lock().unwrap_or_else(PoisonError::into_inner);
+    installed.clone().or_else(env_plan)
+}
+
+/// Install (or with `None`, clear) the process-wide fault plan — the
+/// [`ComputeContext::with_faults`] knob lands here. Like the ISA
+/// override, this is process-global: fault sites live in layers no
+/// per-call context threads through.
+///
+/// [`ComputeContext::with_faults`]: crate::fastcv::context::ComputeContext::with_faults
+pub fn set_plan(plan: Option<Arc<FaultPlan>>) {
+    *ACTIVE.lock().unwrap_or_else(PoisonError::into_inner) = plan;
+}
+
+/// A scoped plan for tests: installs `plan` until the guard drops, then
+/// restores the previous one. Holds a global lock so concurrent test
+/// scopes serialise instead of seeing each other's faults.
+pub fn install(plan: FaultPlan) -> FaultScope {
+    let lock = SCOPE_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    let mut active = ACTIVE.lock().unwrap_or_else(PoisonError::into_inner);
+    let prev = active.replace(Arc::new(plan));
+    drop(active);
+    FaultScope { prev, _lock: lock }
+}
+
+/// Guard returned by [`install`]; restores the previously installed plan
+/// on drop.
+pub struct FaultScope {
+    prev: Option<Arc<FaultPlan>>,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl FaultScope {
+    /// The plan this scope installed (for asserting on arrival counts).
+    pub fn plan(&self) -> Arc<FaultPlan> {
+        let active = ACTIVE.lock().unwrap_or_else(PoisonError::into_inner);
+        // The scope holds SCOPE_LOCK, so the slot still holds our plan;
+        // fall back to a fresh empty-rule plan only if someone bypassed
+        // the scope discipline via set_plan.
+        active.clone().unwrap_or_else(|| {
+            Arc::new(FaultPlan { rules: Vec::new(), counters: Mutex::new(BTreeMap::new()) })
+        })
+    }
+}
+
+impl Drop for FaultScope {
+    fn drop(&mut self) {
+        *ACTIVE.lock().unwrap_or_else(PoisonError::into_inner) = self.prev.take();
+    }
+}
+
+/// Record one arrival at `site` against the active plan: `Some(arg)` when
+/// a fault fires, `None` when no plan is active or no rule triggers. This
+/// is the one call production code makes at a fault site.
+pub fn hit(site: &str) -> Option<u64> {
+    global().and_then(|p| p.hit(site))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_plan_triggers_are_deterministic_and_counted() {
+        let plan = FaultPlan::parse("a.b@3, c.d%2=7").unwrap();
+        assert_eq!(plan.hit("a.b"), None);
+        assert_eq!(plan.hit("a.b"), None);
+        assert_eq!(plan.hit("a.b"), Some(0), "@3 fires exactly on the third arrival");
+        assert_eq!(plan.hit("a.b"), None, "@3 fires once");
+        assert_eq!(plan.arrivals("a.b"), 4);
+        for round in 0..3 {
+            assert_eq!(plan.hit("c.d"), None, "round {round}");
+            assert_eq!(plan.hit("c.d"), Some(7), "round {round}: %2 carries its =arg");
+        }
+        assert_eq!(plan.hit("never.listed"), None);
+        assert_eq!(plan.arrivals("never.listed"), 0, "unlisted sites are not counted");
+    }
+
+    #[test]
+    fn chaos_seeded_trigger_is_a_pure_function_of_the_arrival() {
+        let a = FaultPlan::parse("s~9:250000").unwrap();
+        let b = FaultPlan::parse("s~9:250000").unwrap();
+        let seq_a: Vec<_> = (0..64).map(|_| a.hit("s").is_some()).collect();
+        let seq_b: Vec<_> = (0..64).map(|_| b.hit("s").is_some()).collect();
+        assert_eq!(seq_a, seq_b, "same spec + same arrivals = same schedule");
+        let fired = seq_a.iter().filter(|&&f| f).count();
+        assert!(fired > 0 && fired < 64, "ppm=250000 over 64 draws fired {fired}");
+        // ppm=0 never fires; ppm=1e6 always fires
+        let never = FaultPlan::parse("s~9:0").unwrap();
+        let always = FaultPlan::parse("s~9:1000000").unwrap();
+        assert!((0..32).all(|_| never.hit("s").is_none()));
+        assert!((0..32).all(|_| always.hit("s").is_some()));
+    }
+
+    #[test]
+    fn chaos_plan_parse_rejects_malformed_specs() {
+        for bad in [
+            "", "   ", "no-trigger", "@3", "site@0", "site%0", "site~5", "site~x:3",
+            "site@two", "a.b@1=many",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // errors carry the offending rule
+        let err = FaultPlan::parse("ok@1,bad%0").err().map(|e| format!("{e:#}"));
+        assert!(err.as_deref().is_some_and(|m| m.contains("bad%0")), "{err:?}");
+    }
+
+    #[test]
+    fn chaos_install_scope_restores_and_serialises() {
+        assert_eq!(hit("scope.test"), None, "no plan installed");
+        {
+            let scope = install(FaultPlan::parse("scope.test@1").unwrap());
+            assert_eq!(hit("scope.test"), Some(0));
+            assert_eq!(hit("scope.test"), None);
+            assert_eq!(scope.plan().arrivals("scope.test"), 2);
+        }
+        assert_eq!(hit("scope.test"), None, "dropped scope restored no-plan");
+    }
+}

@@ -373,6 +373,31 @@ impl GramCache {
         }
     }
 
+    /// Checksum-verify the spill-backed panel store behind this cache —
+    /// `Ok(())` for the resident variants (RAM cannot rot) and for RAM
+    /// panel stores. On a disk store this re-reads every panel and checks
+    /// its FNV footer ([`PanelStore::verify`]); the error chain carries
+    /// the typed [`crate::linalg::SpillError`], which
+    /// [`crate::store::FactorStore`] answers by evicting the artifact and
+    /// rebuilding — degrade, never serve bad bytes.
+    pub fn verify_spill(&self) -> Result<()> {
+        match self {
+            GramCache::PrimalSpill { g0, .. } => g0.verify(),
+            GramCache::DualSpill { kc, .. } => kc.verify(),
+            _ => Ok(()),
+        }
+    }
+
+    /// Does this cache hold disk-resident panels (i.e. is it a candidate
+    /// for the store's verify-on-hit sweep)?
+    pub fn is_disk_spill(&self) -> bool {
+        match self {
+            GramCache::PrimalSpill { g0, .. } => g0.is_disk(),
+            GramCache::DualSpill { kc, .. } => kc.is_disk(),
+            _ => false,
+        }
+    }
+
     /// The hat matrix for one λ candidate against the cached state.
     pub fn hat(&self, lambda: f64) -> Result<HatMatrix> {
         self.hat_pool(lambda, None)

@@ -95,6 +95,7 @@
 pub mod bigdata;
 pub mod binary;
 pub mod context;
+pub mod fault;
 pub mod hat;
 pub mod incremental;
 pub mod lambda_search;

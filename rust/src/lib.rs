@@ -42,6 +42,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod cv;
 pub mod data;
+pub mod error;
 pub mod fastcv;
 pub mod linalg;
 pub mod lint;

@@ -42,5 +42,8 @@ pub use gemm::{
 };
 pub use lu::{solve, solve_mat, Lu};
 pub use mat::Mat;
-pub use spill::{chol_spill, chol_spill_ridged, gram_spill, syrk_spill, PanelStore, SpilledCholesky};
+pub use spill::{
+    chol_spill, chol_spill_ridged, gram_spill, quarantine_orphans, syrk_spill, PanelStore,
+    SpillError, SpilledCholesky,
+};
 pub use tiled::{chol_blocked, gram_tiled, syrk_tiled, TilePolicy};

@@ -46,14 +46,103 @@
 //! holds one `tile×N` panel plus one `N×tile` column strip. The `N²` (or
 //! `(P+1)²`) square never exists in RAM. `benches/ablation_spill.rs`
 //! records the model per row in `BENCH_spill.json`.
+//!
+//! ## Crash safety
+//!
+//! Disk panels are crash-safe (`docs/ROBUSTNESS.md`): every panel file
+//! carries an 8-byte FNV-1a checksum footer over its exact `f64` bit
+//! patterns, writes go through write-temp-then-rename (a reader never
+//! observes a half-written `panel_{t}.bin` — at worst a leftover
+//! `.tmp`), and reads verify length **and** checksum, surfacing the
+//! typed [`SpillError::Torn`] / [`SpillError::Corrupt`] instead of bad
+//! floats. [`PanelStore::open`] re-opens a directory a crashed process
+//! left behind, quarantining any torn/corrupt/orphaned files, and
+//! [`quarantine_orphans`] sweeps whole abandoned store directories out
+//! of a spill dir at daemon startup. The named fault sites
+//! (`spill.write.io`, `spill.write.torn`, `spill.read.corrupt`,
+//! `spill.read.delay` — see [`crate::fastcv::fault`]) let the `chaos_*`
+//! suite drive every one of those paths deterministically.
 
 use super::chol::Cholesky;
 use super::gemm::{dot, matmul, syrk_t_rows_into};
 use super::mat::Mat;
+use crate::fastcv::fault;
+use crate::store::key::Fnv;
 use crate::util::threadpool::ThreadPool;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A typed spill-layer fault: what a disk panel read/write detected.
+/// Travels wrapped in `anyhow::Error` (every existing `Result` chain
+/// works unchanged); recovery layers pick it out with
+/// `err.downcast_ref::<SpillError>()` — the [`crate::store::FactorStore`]
+/// answers `Torn`/`Corrupt` by evicting the artifact and rebuilding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpillError {
+    /// The panel file's byte length is wrong — a partial write (crash
+    /// mid-`write`) or external truncation.
+    Torn {
+        /// The panel file.
+        path: PathBuf,
+        /// Bytes found.
+        got: usize,
+        /// Bytes a complete panel (payload + footer) occupies.
+        expected: usize,
+    },
+    /// The panel file is complete but its payload does not match the
+    /// checksum footer — bit rot or an interleaved/overwritten write.
+    Corrupt {
+        /// The panel file.
+        path: PathBuf,
+        /// The footer's stored checksum.
+        stored: u64,
+        /// The checksum the payload actually hashes to.
+        computed: u64,
+    },
+    /// An injected IO fault (the `spill.write.io` site) — stands in for
+    /// ENOSPC/EIO in chaos drills.
+    Io {
+        /// The panel file the operation targeted.
+        path: PathBuf,
+    },
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpillError::Torn { path, got, expected } => write!(
+                f,
+                "torn panel file {}: {got} bytes, expected {expected}",
+                path.display()
+            ),
+            SpillError::Corrupt { path, stored, computed } => write!(
+                f,
+                "corrupt panel file {}: stored checksum {stored:#018x}, payload hashes to {computed:#018x}",
+                path.display()
+            ),
+            SpillError::Io { path } => {
+                write!(f, "injected spill IO fault on {}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+/// FNV-1a over a panel payload's exact bit patterns (length-prefixed) —
+/// the footer every disk panel carries.
+fn panel_checksum(payload: &[f64]) -> u64 {
+    let mut h = Fnv::new().word(payload.len() as u64);
+    for v in payload {
+        h = h.word(v.to_bits());
+    }
+    h.finish()
+}
+
+/// Extra bytes a disk panel carries beyond its `f64` payload: the 8-byte
+/// checksum footer.
+const FOOTER_BYTES: usize = 8;
 
 /// Process-wide counter so every disk-backed store gets its own
 /// subdirectory under the caller's `--spill-dir` (per-λ factor stores and
@@ -79,8 +168,10 @@ enum StoreBackend {
 /// Panel `t` holds rows `[t·tile, min((t+1)·tile, N))` as one row-major
 /// buffer. With `dir = None` panels live in RAM; with `dir = Some(..)`
 /// each panel is a file under a store-private subdirectory (created on
-/// demand, removed when the store is dropped). Reads verify the file
-/// length, so a torn panel (partial write, crash) is detected rather than
+/// demand, removed when the store is dropped). Disk panels carry an FNV
+/// checksum footer and publish via write-temp-then-rename; reads verify
+/// length **and** checksum, so a torn or corrupted panel (partial write,
+/// crash, bit rot) surfaces as a typed [`SpillError`] rather than being
 /// silently read.
 ///
 /// ```
@@ -177,12 +268,32 @@ impl PanelStore {
             StoreBackend::Ram(slots) => slots[t] = Some(panel.into_vec()),
             StoreBackend::Disk { dir } => {
                 let path = dir.join(format!("panel_{t}.bin"));
-                let mut bytes = Vec::with_capacity(panel.as_slice().len() * 8);
-                for v in panel.as_slice() {
+                if fault::hit("spill.write.io").is_some() {
+                    return Err(SpillError::Io { path }.into());
+                }
+                let payload = panel.as_slice();
+                let sum = panel_checksum(payload);
+                let mut bytes = Vec::with_capacity(payload.len() * 8 + FOOTER_BYTES);
+                for v in payload {
                     bytes.extend_from_slice(&v.to_le_bytes());
                 }
-                std::fs::write(&path, bytes)
-                    .with_context(|| format!("writing spill panel {}", path.display()))?;
+                bytes.extend_from_slice(&sum.to_le_bytes());
+                if let Some(drop_bytes) = fault::hit("spill.write.torn") {
+                    // Simulated crash mid-write: a short file at the *final*
+                    // path (as if the process died before the fsync), no
+                    // rename. The next read must detect it, not decode it.
+                    let keep = bytes.len().saturating_sub(drop_bytes.max(1) as usize);
+                    std::fs::write(&path, &bytes[..keep])
+                        .with_context(|| format!("writing spill panel {}", path.display()))?;
+                    return Ok(());
+                }
+                // Write-temp-then-rename: `panel_{t}.bin` either holds the
+                // previous complete panel or the new one, never a prefix.
+                let tmp = dir.join(format!("panel_{t}.tmp"));
+                std::fs::write(&tmp, bytes)
+                    .with_context(|| format!("writing spill panel {}", tmp.display()))?;
+                std::fs::rename(&tmp, &path)
+                    .with_context(|| format!("publishing spill panel {}", path.display()))?;
             }
         }
         Ok(())
@@ -212,20 +323,33 @@ impl PanelStore {
             },
             StoreBackend::Disk { dir } => {
                 let path = dir.join(format!("panel_{t}.bin"));
-                let bytes = std::fs::read(&path)
+                if let Some(ms) = fault::hit("spill.read.delay") {
+                    std::thread::sleep(std::time::Duration::from_millis(ms));
+                }
+                let mut bytes = std::fs::read(&path)
                     .with_context(|| format!("reading spill panel {}", path.display()))?;
-                let expected = rows * self.n * 8;
-                ensure!(
-                    bytes.len() == expected,
-                    "torn panel file {}: {} bytes, expected {expected}",
-                    path.display(),
-                    bytes.len()
-                );
-                let data: Vec<f64> = bytes
+                if fault::hit("spill.read.corrupt").is_some() && !bytes.is_empty() {
+                    bytes[0] ^= 0xff; // bit rot on a payload byte: the footer must catch it
+                }
+                let expected = rows * self.n * 8 + FOOTER_BYTES;
+                if bytes.len() != expected {
+                    return Err(
+                        SpillError::Torn { path, got: bytes.len(), expected }.into()
+                    );
+                }
+                let (payload, footer) = bytes.split_at(bytes.len() - FOOTER_BYTES);
+                let data: Vec<f64> = payload
                     .chunks_exact(8)
                     // lint:allow(panic, reason = "chunks_exact(8) guarantees every chunk converts to [u8; 8]")
                     .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
                     .collect();
+                let mut stored_bytes = [0u8; FOOTER_BYTES];
+                stored_bytes.copy_from_slice(footer);
+                let stored = u64::from_le_bytes(stored_bytes);
+                let computed = panel_checksum(&data);
+                if stored != computed {
+                    return Err(SpillError::Corrupt { path, stored, computed }.into());
+                }
                 Ok(std::borrow::Cow::Owned(data))
             }
         }
@@ -287,6 +411,123 @@ impl PanelStore {
         Ok(out)
     }
 
+    /// Re-read and checksum every panel. `Ok` means each `panel_{t}.bin`
+    /// decodes to the right length and matches its footer; the error
+    /// chain carries the first bad panel's typed [`SpillError`]. RAM
+    /// stores verify trivially (their buffers cannot rot). This is the
+    /// verify-on-hit sweep [`crate::store::FactorStore`] runs before
+    /// serving a spill-backed artifact — degrade (rebuild) rather than
+    /// ever serve bad bytes.
+    pub fn verify(&self) -> Result<()> {
+        if !self.is_disk() {
+            return Ok(());
+        }
+        for t in 0..self.panels() {
+            self.panel_cow(t).with_context(|| format!("verifying spill panel {t}"))?;
+        }
+        Ok(())
+    }
+
+    /// Re-open a store directory a previous (possibly crashed) process
+    /// left behind, sweeping it first: leftover `.tmp` files (a write
+    /// that never renamed), panel files for out-of-range indices, and
+    /// panels that fail the length/checksum verify are all **moved into
+    /// a `quarantine/` subdirectory** — never deleted, never served.
+    /// Surviving panels refresh the cached diagonal. Returns the opened
+    /// store plus the number of files quarantined. Like every disk
+    /// store, the returned store owns `dir` and removes it on drop.
+    pub fn open(n: usize, tile: usize, dir: &Path) -> Result<(PanelStore, usize)> {
+        ensure!(dir.is_dir(), "spill store dir {} does not exist", dir.display());
+        let tile = tile.clamp(1, n.max(1));
+        let mut store = PanelStore {
+            n,
+            tile,
+            backend: StoreBackend::Disk { dir: dir.to_path_buf() },
+            diag: vec![0.0; n],
+        };
+        let mut names: Vec<String> = std::fs::read_dir(dir)
+            .with_context(|| format!("opening spill store dir {}", dir.display()))?
+            .filter_map(|e| e.ok()?.file_name().into_string().ok())
+            .collect();
+        names.sort(); // deterministic sweep order regardless of the OS
+        let mut quarantined = 0;
+        for name in &names {
+            let path = dir.join(name);
+            if !path.is_file() {
+                continue; // e.g. an earlier sweep's quarantine/ subdir
+            }
+            let panel_index = name
+                .strip_prefix("panel_")
+                .and_then(|s| s.strip_suffix(".bin"))
+                .and_then(|s| s.parse::<usize>().ok());
+            let verdict = match panel_index {
+                _ if name.ends_with(".tmp") => Err(anyhow::anyhow!("orphaned temp file")),
+                None => continue, // not ours — leave unrecognised files alone
+                Some(t) if t >= store.panels() => {
+                    Err(anyhow::anyhow!("panel index {t} out of range"))
+                }
+                Some(t) => store.panel_cow(t).map(|data| (t, data.into_owned())),
+            };
+            match verdict {
+                Ok((t, data)) => {
+                    let (lo, hi) = store.range(t);
+                    for r in 0..(hi - lo) {
+                        store.diag[lo + r] = data[r * n + lo + r];
+                    }
+                }
+                Err(_) => {
+                    quarantine_file(dir, &path)?;
+                    quarantined += 1;
+                }
+            }
+        }
+        Ok((store, quarantined))
+    }
+}
+
+/// Move `path` into `dir/quarantine/` (created on demand), keeping its
+/// file name.
+fn quarantine_file(dir: &Path, path: &Path) -> Result<()> {
+    let qdir = dir.join("quarantine");
+    std::fs::create_dir_all(&qdir)
+        .with_context(|| format!("creating quarantine dir {}", qdir.display()))?;
+    let Some(name) = path.file_name() else {
+        bail!("quarantine: {} has no file name", path.display());
+    };
+    std::fs::rename(path, qdir.join(name))
+        .with_context(|| format!("quarantining {}", path.display()))?;
+    Ok(())
+}
+
+/// Sweep a user-level spill directory at daemon startup: whole `store-*`
+/// subdirectories abandoned by *other* (crashed) processes are moved
+/// into `base/quarantine/` — inspectable, never deleted, and never in
+/// the way of fresh stores. The current process's own live stores
+/// (`store-{pid}-*`) are left alone. Returns the number of directories
+/// moved; a missing `base` is not an error (nothing to sweep).
+pub fn quarantine_orphans(base: &Path) -> Result<usize> {
+    if !base.is_dir() {
+        return Ok(0);
+    }
+    let own = format!("store-{}-", std::process::id());
+    let mut names: Vec<String> = std::fs::read_dir(base)
+        .with_context(|| format!("sweeping spill dir {}", base.display()))?
+        .filter_map(|e| e.ok()?.file_name().into_string().ok())
+        .collect();
+    names.sort();
+    let mut moved = 0;
+    for name in &names {
+        if !name.starts_with("store-") || name.starts_with(&own) {
+            continue;
+        }
+        let path = base.join(name);
+        if !path.is_dir() {
+            continue;
+        }
+        quarantine_file(base, &path)?;
+        moved += 1;
+    }
+    Ok(moved)
 }
 
 impl Drop for PanelStore {
@@ -832,6 +1073,148 @@ mod tests {
         // the intact panel still reads fine
         assert!(store.read_panel(0).is_ok());
         drop(store);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_corrupt_panel_is_detected_by_the_checksum_footer() {
+        // Bit rot keeps the file length intact, so only the FNV footer can
+        // catch it — and it must surface as the typed SpillError::Corrupt.
+        let base = temp_dir("corrupt");
+        let g = Mat::from_fn(6, 6, |i, j| (i + 2 * j) as f64);
+        let mut store = PanelStore::new(6, 4, Some(&base)).unwrap();
+        store.write_mat(&g).unwrap();
+        let path = store.panel_path(0).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[3] ^= 0x40; // flip one payload bit
+        std::fs::write(&path, &bytes).unwrap();
+        let err = store.read_panel(0).err().expect("corrupt panel must error");
+        assert!(format!("{err:#}").contains("corrupt panel file"), "{err:#}");
+        assert!(
+            matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Corrupt { .. })),
+            "recovery layers need the typed variant: {err:#}"
+        );
+        assert!(store.verify().is_err(), "verify must sweep up the corruption");
+        assert!(store.read_panel(1).is_ok(), "the intact panel still reads");
+        drop(store);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_writes_publish_atomically_and_leave_no_temp_files() {
+        let base = temp_dir("atomic");
+        let g = Mat::from_fn(9, 9, |i, j| (i * 9 + j) as f64 * 0.25);
+        let mut store = PanelStore::new(9, 4, Some(&base)).unwrap();
+        store.write_mat(&g).unwrap();
+        let dir = store.panel_path(0).unwrap().parent().unwrap().to_path_buf();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok()?.file_name().into_string().ok())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files must be renamed away: {leftovers:?}");
+        // overwriting a panel goes through the same temp-then-rename and
+        // the store stays fully verifiable
+        store.write_mat(&g).unwrap();
+        store.verify().unwrap();
+        assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice());
+        drop(store);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn chaos_spill_fault_sites_fire_torn_and_io() {
+        // The injected faults must produce exactly the failures the
+        // detection layer is built for: write.io → typed Io error,
+        // write.torn → a short final file the next read rejects as Torn.
+        let base = temp_dir("faults");
+        let g = Mat::from_fn(6, 6, |i, j| (i * 6 + j) as f64);
+        let mut store = PanelStore::new(6, 6, Some(&base)).unwrap();
+        {
+            let _scope = crate::fastcv::fault::install(
+                crate::fastcv::fault::FaultPlan::parse("spill.write.io@1").unwrap(),
+            );
+            let err = store.write_mat(&g).err().expect("injected IO fault must error");
+            assert!(
+                matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Io { .. })),
+                "{err:#}"
+            );
+            // second write: the @1 rule is spent, the write succeeds
+            store.write_mat(&g).unwrap();
+        }
+        {
+            let _scope = crate::fastcv::fault::install(
+                crate::fastcv::fault::FaultPlan::parse("spill.write.torn@1=13").unwrap(),
+            );
+            store.write_mat(&g).unwrap(); // "succeeds" — the crash is silent
+            let err = store.read_panel(0).err().expect("torn write must be detected");
+            assert!(
+                matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Torn { .. })),
+                "{err:#}"
+            );
+            // recovery: rewrite the panel, read back bitwise intact
+            store.write_mat(&g).unwrap();
+            assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice());
+        }
+        drop(store);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_open_quarantines_bad_panels_and_serves_good_ones() {
+        let base = temp_dir("open");
+        let g = Mat::from_fn(7, 7, |i, j| (i * 7 + j) as f64);
+        let mut store = PanelStore::new(7, 3, Some(&base)).unwrap();
+        store.write_mat(&g).unwrap();
+        let dir = store.panel_path(0).unwrap().parent().unwrap().to_path_buf();
+        // sabotage: tear panel 1, plant an orphaned temp file and an
+        // out-of-range panel
+        let p1 = store.panel_path(1).unwrap();
+        let bytes = std::fs::read(&p1).unwrap();
+        std::fs::write(&p1, &bytes[..bytes.len() - 3]).unwrap();
+        std::fs::write(dir.join("panel_0.tmp"), b"half a write").unwrap();
+        std::fs::write(dir.join("panel_9.bin"), b"orphan").unwrap();
+        std::mem::forget(store); // the "crashed process" never ran Drop
+        let (reopened, quarantined) = PanelStore::open(7, 3, &dir).unwrap();
+        assert_eq!(quarantined, 3, "torn panel + temp + orphan");
+        for name in ["panel_1.bin", "panel_0.tmp", "panel_9.bin"] {
+            assert!(dir.join("quarantine").join(name).exists(), "{name} must be preserved");
+        }
+        // surviving panels serve bitwise, and their diagonal was rebuilt
+        let p0 = reopened.read_panel(0).unwrap();
+        assert_eq!(p0.as_slice(), g.rows_slice(0, 3));
+        assert_eq!(reopened.read_panel(2).unwrap().as_slice(), g.rows_slice(6, 7));
+        assert!(reopened.read_panel(1).is_err(), "the torn panel is gone, not served");
+        assert_eq!(reopened.diag[0], g[(0, 0)]);
+        assert_eq!(reopened.diag[6], g[(6, 6)]);
+        drop(reopened);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn spill_quarantine_orphans_sweeps_foreign_stores_only() {
+        let base = temp_dir("orphans");
+        // fake pids far above any real one, so they can never collide with
+        // this process's own `store-{pid}-` prefix
+        std::fs::create_dir_all(base.join("store-909090901-0")).unwrap();
+        std::fs::write(base.join("store-909090901-0").join("panel_0.bin"), b"junk").unwrap();
+        std::fs::create_dir_all(base.join("store-909090902-5")).unwrap();
+        // a live store of *this* process must not be touched
+        let mut live = PanelStore::new(4, 2, Some(&base)).unwrap();
+        live.write_mat(&Mat::from_fn(4, 4, |i, j| (i + j) as f64)).unwrap();
+        let moved = quarantine_orphans(&base).unwrap();
+        assert_eq!(moved, 2, "both foreign stores swept");
+        assert!(base
+            .join("quarantine")
+            .join("store-909090901-0")
+            .join("panel_0.bin")
+            .exists());
+        assert!(!base.join("store-909090902-5").exists());
+        live.verify().unwrap();
+        assert_eq!(quarantine_orphans(&base).unwrap(), 0, "second sweep finds nothing");
+        // a missing dir is a no-op, not an error
+        assert_eq!(quarantine_orphans(&base.join("nope")).unwrap(), 0);
+        drop(live);
         let _ = std::fs::remove_dir_all(&base);
     }
 

@@ -131,17 +131,21 @@ const KERNEL_FILES: [&str; 12] = [
 
 /// L3: files whose `unsafe` blocks have been audited (see the SAFETY
 /// comments in situ and the ThreadSanitizer CI job).
-const UNSAFE_AUDITED_FILES: [&str; 3] = [
+const UNSAFE_AUDITED_FILES: [&str; 4] = [
     "rust/src/util/threadpool.rs",
     // SIMD intrinsics: every `unsafe` carries an adjacent SAFETY note and
     // the wrappers re-check the CPU feature the dispatch table promised —
     // see the "Unsafe audit" section in each module's docs.
     "rust/src/linalg/simd_avx2.rs",
     "rust/src/linalg/simd_neon.rs",
+    // Hand-declared POSIX externs (no libc crate) for the SIGTERM socket
+    // cleanup; the handler body is restricted to async-signal-safe calls
+    // and every unsafe block carries its SAFETY note in situ.
+    "rust/src/serve/signal.rs",
 ];
 
 /// L4 file allowlist: panicking is these files' documented policy.
-const PANIC_ALLOWED_FILES: [&str; 3] = [
+const PANIC_ALLOWED_FILES: [&str; 4] = [
     // Lock-poisoning propagation and scope panic re-raise are the pool's
     // contract (audited with L3; jobs are individually catch_unwind-ed).
     "rust/src/util/threadpool.rs",
@@ -150,6 +154,10 @@ const PANIC_ALLOWED_FILES: [&str; 3] = [
     // Dimension-contract asserts on the update kernels (caller bug, the
     // same policy as Mat indexing); SPD-boundary failures return Result.
     "rust/src/linalg/chol_update.rs",
+    // The serve daemon's catch_unwind boundary: `maybe_panic` is the
+    // deliberate fault-injection path for the serve.*.panic chaos sites,
+    // contained by run_caught into typed worker_panic responses.
+    "rust/src/serve/recover.rs",
 ];
 
 /// L2: permutation engines — RNG construction restricted to `Rng::stream`.
@@ -339,6 +347,14 @@ mod tests {
         assert!(fi.kernel && fi.panic_allowed && fi.numeric && !fi.unsafe_audited);
         let fi = file_info("rust/src/fastcv/incremental.rs");
         assert!(!fi.kernel && !fi.panic_allowed && fi.numeric && fi.library);
+        // The serve robustness layer: recover.rs may panic (it is the
+        // injection path the catch_unwind boundary contains), signal.rs
+        // carries audited unsafe; neither is a numeric file.
+        let fi = file_info("rust/src/serve/recover.rs");
+        assert!(fi.panic_allowed && !fi.unsafe_audited && !fi.numeric);
+        let fi = file_info("rust/src/serve/signal.rs");
+        assert!(fi.unsafe_audited && !fi.panic_allowed && !fi.numeric);
+        assert!(fi.doc_all_public, "serve/ requires rustdoc on pub items");
     }
 
     #[test]

@@ -103,13 +103,19 @@ fn print_usage() {
                  {{\"x\":[...],\"label\":0|1}} per line); the window's Cholesky\n\
                  factor is maintained by O(P²) rank-1 up/downdates instead of\n\
                  per-step rebuilds, emitting rolling accuracy (+ permutation\n\
-                 p-value with --n-perm) as NDJSON — see docs/STREAM.md\n\
+                 p-value with --n-perm) as NDJSON — see docs/STREAM.md;\n\
+                 a malformed line yields an error line, not an abort\n\
            serve [--workers N] [--threads T] [--budget-mb MB]\n\
                  [--tile-rows R | --mem-budget MB | --spill-dir PATH]\n\
+                 [--deadline-ms MS]  (answer deadline_exceeded instead of\n\
+                 running requests that waited longer than MS; 0 = off)\n\
+                 [--queue-cap N]  (reject with typed overloaded beyond N\n\
+                 queued requests; 0 = unbounded; shutdown always admitted)\n\
                  [--socket PATH]         long-lived NDJSON job daemon over a\n\
                  shared FactorStore (stdin/stdout, or a Unix socket); queued\n\
                  permutation requests on one dataset key coalesce into a\n\
-                 single batched GEMM pass — see docs/SERVE.md\n\
+                 single batched GEMM pass — see docs/SERVE.md and\n\
+                 docs/ROBUSTNESS.md (fault injection, typed errors, retry)\n\
            artifacts                     list AOT artifacts and PJRT platform\n\
            lint [--root DIR]             determinism & safety static analysis\n\
                  (docs/LINTS.md; non-zero exit on any violation)\n\n\
@@ -586,13 +592,24 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let stdout = std::io::stdout();
     let mut out = std::io::BufWriter::new(stdout.lock());
     let mut samples = 0u64;
+    let mut malformed = 0u64;
     for (lineno, line) in stdin.lock().lines().enumerate() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        let (x, label) = parse_stream_sample(&line)
-            .map_err(|e| anyhow::anyhow!("stdin line {}: {e}", lineno + 1))?;
+        // A malformed mid-stream line must not abort a long-running
+        // stream: emit a typed error step and keep the window rolling.
+        let (x, label) = match parse_stream_sample(&line) {
+            Ok(sample) => sample,
+            Err(e) => {
+                let msg = fastcv::util::json::Json::Str(format!("{e:#}")).dump();
+                writeln!(out, "{{\"line\":{},\"ok\":false,\"error\":{msg}}}", lineno + 1)?;
+                out.flush()?;
+                malformed += 1;
+                continue;
+            }
+        };
         samples += 1;
         if let Some(r) = cv.push(x, label)? {
             let p = r.p_value.map_or_else(|| "null".to_string(), |p| format!("{p}"));
@@ -606,7 +623,8 @@ fn cmd_stream(args: &Args) -> Result<()> {
     out.flush()?;
     let stats = store.stats();
     eprintln!(
-        "fastcv stream: {samples} sample(s) — {} incremental step(s), {} downdate rescue(s), \
+        "fastcv stream: {samples} sample(s), {malformed} malformed line(s) skipped — \
+         {} incremental step(s), {} downdate rescue(s), \
          store {} ({} supersession(s), {} entry(ies))",
         cv.incremental_steps,
         cv.downdate_rescues,
@@ -659,10 +677,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         budget_bytes: (budget_mb > 0).then(|| budget_mb * 1024 * 1024),
         spill_dir: args.get("spill-dir").map(std::path::PathBuf::from),
         tile,
+        deadline_ms: args.get_parse_or("deadline-ms", 0u64),
+        queue_cap: args.get_parse_or("queue-cap", 0usize),
     };
+    // A previous run may have died mid-spill: sweep store directories
+    // abandoned by crashed processes into base/quarantine/ before any
+    // fresh panel lands next to them.
+    if let Some(dir) = config.spill_dir.as_deref() {
+        std::fs::create_dir_all(dir)?;
+        let swept = fastcv::linalg::quarantine_orphans(dir)?;
+        if swept > 0 {
+            eprintln!("fastcv serve: quarantined {swept} orphaned spill store(s) in {dir:?}");
+        }
+    }
     let server = Server::new(config);
     match args.get("socket") {
         Some(path) => {
+            // A supervisor's SIGTERM must not strand the socket file.
+            fastcv::serve::signal::install_sigterm_cleanup(std::path::Path::new(path))?;
             eprintln!("fastcv serve: listening on {path} ({workers} worker(s))");
             server.serve_unix(std::path::Path::new(path))?;
         }

@@ -14,6 +14,8 @@
 pub mod artifacts;
 pub mod client;
 pub mod hybrid;
+pub mod serve_client;
 
 pub use artifacts::{ArtifactKey, ArtifactRegistry};
 pub use client::XlaRuntime;
+pub use serve_client::{Backoff, ServeClient};

@@ -1,0 +1,218 @@
+//! A fault-tolerant client for the `fastcv serve` Unix-socket daemon:
+//! deterministic capped-exponential backoff, reconnect-on-drop, and
+//! retry of **idempotent** ops only.
+//!
+//! The retry policy is driven by the server's typed error taxonomy
+//! ([`crate::error::FastCvError`]): a response whose `"kind"` maps to a
+//! retryable error (`overloaded`, `deadline_exceeded`, `worker_panic`) is
+//! retried with backoff; `bad_request` and `corrupt` are returned as-is
+//! because the same bytes would fail the same way again. Transport
+//! failures (connect refused, connection dropped mid-exchange) are always
+//! retryable — but only for idempotent ops (`search`, `perm`, `sweep`,
+//! `stats`). `shutdown` is never retried: after a drop the client cannot
+//! know whether the daemon already acted on it.
+//!
+//! Backoff delays are a pure function of the attempt index — no clock, no
+//! jitter — so a chaos run with a pinned [`crate::fastcv::fault`] plan
+//! replays bit-for-bit (docs/ROBUSTNESS.md).
+
+use crate::error::FastCvError;
+use crate::fastcv::fault;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Deterministic capped-exponential backoff: attempt `i` sleeps
+/// `min(cap_ms, base_ms << i)` milliseconds. No jitter — retries must
+/// replay identically under a pinned fault plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Backoff {
+    /// Delay before the first retry, in milliseconds.
+    pub base_ms: u64,
+    /// Ceiling on any single delay, in milliseconds.
+    pub cap_ms: u64,
+    /// Retries after the initial attempt (so `max_retries + 1` attempts
+    /// total). `0` disables retrying entirely.
+    pub max_retries: u32,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { base_ms: 10, cap_ms: 2_000, max_retries: 4 }
+    }
+}
+
+impl Backoff {
+    /// The delay before retry number `attempt` (0-based), in milliseconds.
+    pub fn delay_ms(&self, attempt: u32) -> u64 {
+        // The shift saturates at 2^20 · base, far past any sane cap, so
+        // the min() below governs; min(20) keeps the shift itself defined.
+        self.cap_ms.min(self.base_ms.saturating_mul(1u64 << attempt.min(20)))
+    }
+}
+
+/// Ops the daemon evaluates as pure functions of the request — safe to
+/// resend after an ambiguous failure. `shutdown` is excluded: resending
+/// it after a drop could stop a daemon the first send already stopped
+/// (or a freshly restarted one).
+fn idempotent(op: &str) -> bool {
+    matches!(op, "search" | "perm" | "sweep" | "stats")
+}
+
+/// A line-oriented NDJSON client for `fastcv serve --socket`, with
+/// reconnect and deterministic retry (see the module docs for policy).
+pub struct ServeClient {
+    path: PathBuf,
+    backoff: Backoff,
+    conn: Option<BufReader<UnixStream>>,
+    retries: u64,
+}
+
+impl ServeClient {
+    /// A client for the daemon listening at `path`, with the default
+    /// backoff. No connection is made until the first [`call`](Self::call).
+    pub fn new(path: &Path) -> Self {
+        Self::with_backoff(path, Backoff::default())
+    }
+
+    /// A client with an explicit retry policy.
+    pub fn with_backoff(path: &Path, backoff: Backoff) -> Self {
+        ServeClient { path: path.to_path_buf(), backoff, conn: None, retries: 0 }
+    }
+
+    /// How many retries (reconnect-and-resend cycles) this client has
+    /// performed over its lifetime.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Send `request` and return the daemon's response line, parsed.
+    ///
+    /// Idempotent ops retry transport failures and retryable error kinds
+    /// up to `backoff.max_retries` times; the final outcome — including a
+    /// still-failing typed response — is returned rather than masked, so
+    /// callers always see the daemon's own words.
+    pub fn call(&mut self, request: &Json) -> Result<Json> {
+        let op = request.get("op").and_then(Json::as_str).unwrap_or("");
+        let budget = if idempotent(op) { self.backoff.max_retries } else { 0 };
+        let line = request.dump();
+        let mut attempt = 0u32;
+        loop {
+            match self.exchange(&line) {
+                Ok(resp) => {
+                    let retryable = resp
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .and_then(FastCvError::from_kind)
+                        .is_some_and(|e| e.is_retryable());
+                    if !retryable || attempt >= budget {
+                        return Ok(resp);
+                    }
+                }
+                Err(e) => {
+                    // Transport error: the connection is unusable either
+                    // way; drop it so the next attempt reconnects.
+                    self.conn = None;
+                    if attempt >= budget {
+                        return Err(e.context(format!(
+                            "serve call failed after {attempt} retries"
+                        )));
+                    }
+                }
+            }
+            std::thread::sleep(Duration::from_millis(self.backoff.delay_ms(attempt)));
+            attempt += 1;
+            self.retries += 1;
+        }
+    }
+
+    /// One send/receive round trip on the (lazily opened) connection.
+    fn exchange(&mut self, line: &str) -> Result<Json> {
+        if self.conn.is_none() {
+            let stream = UnixStream::connect(&self.path)
+                .with_context(|| format!("connect to serve socket {:?}", self.path))?;
+            self.conn = Some(BufReader::new(stream));
+        }
+        // Chaos hook: a planned `client.conn.drop` arrival severs the
+        // connection right before the send — the ambiguous-failure case
+        // the retry policy exists for.
+        if fault::hit("client.conn.drop").is_some() {
+            self.conn = None;
+            return Err(anyhow!("injected fault: client connection dropped"));
+        }
+        let Some(conn) = self.conn.as_mut() else {
+            return Err(anyhow!("connection vanished before the send"));
+        };
+        let sock = conn.get_mut();
+        sock.write_all(line.as_bytes()).context("send request line")?;
+        sock.write_all(b"\n").context("send request newline")?;
+        sock.flush().context("flush request")?;
+        let mut resp = String::new();
+        let n = conn.read_line(&mut resp).context("read response line")?;
+        if n == 0 {
+            return Err(anyhow!("daemon closed the connection before answering"));
+        }
+        Json::parse(resp.trim_end())
+            .map_err(|e| anyhow!("daemon sent an unparseable response: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fastcv::fault::{install, FaultPlan};
+    use crate::serve::{ServeConfig, Server};
+
+    #[test]
+    fn backoff_is_deterministic_and_capped() {
+        let b = Backoff { base_ms: 10, cap_ms: 100, max_retries: 8 };
+        assert_eq!(b.delay_ms(0), 10);
+        assert_eq!(b.delay_ms(1), 20);
+        assert_eq!(b.delay_ms(2), 40);
+        assert_eq!(b.delay_ms(3), 80);
+        assert_eq!(b.delay_ms(4), 100, "capped");
+        assert_eq!(b.delay_ms(63), 100, "huge attempts saturate, not overflow");
+        assert!(idempotent("stats") && idempotent("perm"));
+        assert!(!idempotent("shutdown") && !idempotent(""));
+    }
+
+    #[test]
+    fn chaos_client_retries_a_dropped_connection_and_succeeds() {
+        let _scope = install(FaultPlan::parse("client.conn.drop@1").unwrap());
+        let dir = std::env::temp_dir()
+            .join(format!("fastcv_serve_client_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sock = dir.join("c.sock");
+        let server = Server::new(ServeConfig::default());
+        std::thread::scope(|scope| {
+            let daemon = scope.spawn(|| server.serve_unix(&sock));
+            let backoff = Backoff { base_ms: 1, cap_ms: 5, max_retries: 3 };
+            let mut client = ServeClient::with_backoff(&sock, backoff);
+            // Wait for the socket, then call: the first send is severed by
+            // the injected drop, the retry reconnects and gets an answer.
+            let mut last = None;
+            for _ in 0..500 {
+                match client.call(&Json::parse(r#"{"id":1,"op":"stats"}"#).unwrap()) {
+                    Ok(resp) => {
+                        last = Some(resp);
+                        break;
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            }
+            let resp = last.expect("daemon never answered");
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{}", resp.dump());
+            assert!(client.retries() >= 1, "the drop must have cost a retry");
+            // shutdown is not retried; a single clean call stops the daemon.
+            let resp = client
+                .call(&Json::parse(r#"{"id":2,"op":"shutdown"}"#).unwrap())
+                .unwrap();
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)));
+            daemon.join().unwrap().unwrap();
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,79 @@
+//! Panic containment for the serve daemon: the `catch_unwind` boundary
+//! that keeps a panicking request from killing the process, plus the
+//! injection hook the chaos suite uses to *cause* such panics on demand.
+//!
+//! This file is on the lint L4 allowlist (`PANIC_ALLOWED_FILES`): the
+//! `panic!` here is the deliberate fault-injection path for the
+//! `serve.worker.panic` / `serve.queue.panic` sites, and the boundary
+//! itself exists so that panics — injected or real — become typed
+//! `worker_panic` responses instead of dead daemons (docs/ROBUSTNESS.md).
+//!
+//! Why `AssertUnwindSafe` is sound here: everything the worker closures
+//! share (`Server`, `Queue`, the response writer) sits behind atomics or
+//! mutexes, and every lock in the serve layer recovers from poisoning via
+//! `PoisonError::into_inner` — a panic mid-critical-section leaves data
+//! that the daemon's own invariants (first-insert-wins store, per-request
+//! response encoding) tolerate. The chaos suite pins exactly this:
+//! a poisoned jobs mutex and the requests after it still get served.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Run `f`, converting a panic into `Err(message)` instead of unwinding
+/// into the worker scope (where it would abort the daemon's thread join).
+pub(crate) fn run_caught<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => Err(panic_message(payload.as_ref())),
+    }
+}
+
+/// Panic iff the fault plan says this arrival at `site` should fail —
+/// the serve layer's `serve.worker.panic` / `serve.queue.panic` hooks.
+/// A no-op (one atomic-ish map probe) when no plan lists the site.
+pub(crate) fn maybe_panic(site: &str) {
+    if crate::fastcv::fault::hit(site).is_some() {
+        panic!("injected fault: panic at {site}");
+    }
+}
+
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` payloads cover `panic!`/`assert!`/`unwrap` in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_caught_passes_values_and_captures_panics() {
+        assert_eq!(run_caught(|| 41 + 1), Ok(42));
+        let err = run_caught(|| -> u32 { panic!("boom {}", 7) }).unwrap_err();
+        assert!(err.contains("boom 7"), "{err}");
+        let err = run_caught(|| {
+            let s: Option<u32> = None;
+            s.expect("empty option")
+        })
+        .unwrap_err();
+        assert!(err.contains("empty option"), "{err}");
+    }
+
+    #[test]
+    fn chaos_maybe_panic_fires_only_per_plan() {
+        use crate::fastcv::fault::{install, FaultPlan};
+        // No plan: silent.
+        maybe_panic("serve.worker.panic.unlisted");
+        let _scope = install(FaultPlan::parse("serve.worker.panic@2").unwrap());
+        maybe_panic("serve.worker.panic"); // arrival 1: no trigger
+        let err = run_caught(|| maybe_panic("serve.worker.panic")).unwrap_err();
+        assert!(err.contains("serve.worker.panic"), "{err}");
+        maybe_panic("serve.worker.panic"); // arrival 3: no trigger
+    }
+}

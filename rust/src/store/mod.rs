@@ -36,6 +36,17 @@
 //! (the default) takes the historical build paths untouched, so every
 //! pre-existing entry point stays bitwise-unchanged.
 //!
+//! ## Corruption recovery
+//!
+//! Disk-spill-backed entries are **verified on every hit**: the panel
+//! checksum sweep ([`GramCache::verify_spill`]) runs before the artifact
+//! is served, and a torn or bit-rotted panel file (the typed
+//! [`crate::linalg::SpillError`]) turns the hit into an eviction plus a
+//! transparent rebuild — degrade, never serve bad bytes. The rebuilt
+//! factor is bitwise the never-corrupted one (pinned by the `chaos_*`
+//! suite); [`StoreStats::corruptions`] counts the events. See
+//! `docs/ROBUSTNESS.md`.
+//!
 //! ## Concurrency
 //!
 //! All state sits behind one poison-tolerant [`Mutex`]; builds run
@@ -242,6 +253,7 @@ struct Inner {
     evictions: u64,
     demotions: u64,
     supersessions: u64,
+    corruptions: u64,
 }
 
 /// Counter snapshot returned by [`FactorStore::stats`]; the sweep TSV's
@@ -262,6 +274,10 @@ pub struct StoreStats {
     /// artifact took over its parent's slot — not an eviction, the state
     /// advanced.
     pub supersessions: u64,
+    /// Spill-backed entries whose verify-on-hit checksum sweep failed:
+    /// each was evicted and transparently rebuilt (degrade, never serve
+    /// bad bytes — see the module docs on corruption recovery).
+    pub corruptions: u64,
     /// Live entries.
     pub entries: usize,
     /// Total resident bytes across live entries.
@@ -286,6 +302,7 @@ impl StoreStats {
             evictions: self.evictions - earlier.evictions,
             demotions: self.demotions - earlier.demotions,
             supersessions: self.supersessions - earlier.supersessions,
+            corruptions: self.corruptions - earlier.corruptions,
             entries: self.entries,
             resident_bytes: self.resident_bytes,
             budget_bytes: self.budget_bytes,
@@ -328,6 +345,7 @@ impl FactorStore {
                 evictions: 0,
                 demotions: 0,
                 supersessions: 0,
+                corruptions: 0,
             }),
         }
     }
@@ -359,6 +377,7 @@ impl FactorStore {
             evictions: g.evictions,
             demotions: g.demotions,
             supersessions: g.supersessions,
+            corruptions: g.corruptions,
             entries: g.entries.len(),
             resident_bytes: resident_total(&g),
             budget_bytes: g.budget,
@@ -536,26 +555,51 @@ impl FactorStore {
     /// The single lookup-or-build path. The build runs **outside** the
     /// lock; on a racing double-build the first insert wins and both
     /// callers receive the winner's `Arc`.
+    ///
+    /// Disk-spill-backed hits are **verified before being served**: the
+    /// panel checksum sweep ([`GramCache::verify_spill`]) runs outside
+    /// the lock, and a failure — a torn or bit-rotted panel file — turns
+    /// the hit into an eviction plus a transparent rebuild. The caller
+    /// gets the rebuilt artifact (bitwise what the never-corrupted one
+    /// served — the store's contract), never the bad bytes; the
+    /// [`StoreStats::corruptions`] counter records the event.
     fn fetch(
         &self,
         key: &ArtifactKey,
         build: impl FnOnce() -> Result<Artifact>,
     ) -> Result<Artifact> {
-        {
+        let candidate = {
             let mut g = self.lock();
             g.clock += 1;
             let now = g.clock;
-            let hit = g.entries.get_mut(key).map(|e| {
+            g.entries.get_mut(key).map(|e| {
                 e.last_used = now;
                 e.artifact.clone()
-            });
-            match hit {
-                Some(a) => {
-                    g.hits += 1;
+            })
+        };
+        match candidate {
+            Some(a) => match verify_artifact(&a) {
+                Ok(()) => {
+                    self.lock().hits += 1;
                     return Ok(a);
                 }
-                None => g.misses += 1,
-            }
+                Err(_) => {
+                    // Degrade, never serve bad bytes: drop the corrupt
+                    // entry (only if the slot still holds it — a racing
+                    // writer may have replaced it already) and rebuild.
+                    let mut g = self.lock();
+                    g.corruptions += 1;
+                    g.misses += 1;
+                    let stale = g
+                        .entries
+                        .get(key)
+                        .is_some_and(|e| artifact_ptr_eq(&e.artifact, &a));
+                    if stale {
+                        g.entries.remove(key);
+                    }
+                }
+            },
+            None => self.lock().misses += 1,
         }
         let built = build()?;
         let bytes = built.resident_bytes();
@@ -578,6 +622,29 @@ impl FactorStore {
 
 fn resident_total(g: &Inner) -> usize {
     g.entries.values().map(|e| e.bytes).sum::<usize>()
+}
+
+/// The verify-on-hit check: disk-spill-backed Gram caches re-read and
+/// checksum their panels ([`GramCache::verify_spill`]); every resident
+/// artifact verifies trivially (RAM cannot rot).
+fn verify_artifact(a: &Artifact) -> Result<()> {
+    match a {
+        Artifact::Gram(g) if g.is_disk_spill() => g.verify_spill(),
+        _ => Ok(()),
+    }
+}
+
+/// Do two artifact handles alias the same allocation? Used to evict a
+/// corrupt entry only when its slot still holds the artifact that failed
+/// verification.
+fn artifact_ptr_eq(a: &Artifact, b: &Artifact) -> bool {
+    match (a, b) {
+        (Artifact::Gram(x), Artifact::Gram(y)) => Arc::ptr_eq(x, y),
+        (Artifact::Nested(x), Artifact::Nested(y)) => Arc::ptr_eq(x, y),
+        (Artifact::Streaming(x), Artifact::Streaming(y)) => Arc::ptr_eq(x, y),
+        (Artifact::Window(x), Artifact::Window(y)) => Arc::ptr_eq(x, y),
+        _ => false,
+    }
 }
 
 /// Demote or evict LRU entries until the store fits its budget. The entry
@@ -829,6 +896,52 @@ mod tests {
         // The just-inserted entry is protected; nothing to evict.
         let s = store.stats();
         assert_eq!((s.entries, s.evictions), (1, 0), "{s:?}");
+    }
+
+    #[test]
+    fn chaos_corrupt_spill_artifact_is_evicted_and_rebuilt_bitwise() {
+        // The corruption-recovery contract: a spill-backed entry whose
+        // panel checksum fails on a hit is never served — the store
+        // evicts it, rebuilds, and the rebuilt factor is bitwise the
+        // never-corrupted one.
+        let dir = tmp_dir("corrupt");
+        let mut rng = Rng::new(26);
+        let x = random_x(&mut rng, 12, 30);
+        let spill = TilePolicy::Spill { dir: Some(dir.clone()), tile: 4 };
+        let fresh = GramCache::build_tiled(&x, GramBackend::Dual, None, spill.clone())
+            .unwrap()
+            .hat(0.9)
+            .unwrap();
+        let store = FactorStore::new();
+        let ctx = ComputeContext::serial()
+            .with_backend(GramBackend::Dual)
+            .with_store(&store)
+            .with_tile_policy(spill);
+        let first = gram_for_ctx(&x, GramBackend::Dual, &ctx).unwrap();
+        let panel = match &*first {
+            GramCache::DualSpill { kc, .. } => kc.panel_path(0).unwrap(),
+            _ => panic!("spill policy must build a spilled dual cache"),
+        };
+        // bit rot on disk, behind the store's back
+        let mut bytes = std::fs::read(&panel).unwrap();
+        bytes[5] ^= 0x10;
+        std::fs::write(&panel, &bytes).unwrap();
+        // the next fetch detects it: eviction + transparent rebuild
+        let recovered = gram_for_ctx(&x, GramBackend::Dual, &ctx).unwrap();
+        assert!(!Arc::ptr_eq(&first, &recovered), "the corrupt artifact must not be served");
+        assert_eq!(
+            recovered.hat(0.9).unwrap().h.as_slice(),
+            fresh.h.as_slice(),
+            "rebuilt-after-corruption factor must equal the never-corrupted one"
+        );
+        let s = store.stats();
+        assert_eq!((s.corruptions, s.misses), (1, 2), "{s:?}");
+        // the recovered entry serves clean verified hits from here on
+        let again = gram_for_ctx(&x, GramBackend::Dual, &ctx).unwrap();
+        assert!(Arc::ptr_eq(&recovered, &again));
+        assert_eq!(store.stats().hits, 1);
+        drop((first, recovered, again));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,220 @@
+//! Chaos suite: deterministic fault injection across the spill, store,
+//! serve, and client layers (docs/ROBUSTNESS.md). Every test installs a
+//! counter-seeded [`fastcv::fastcv::fault::FaultPlan`] (the `install`
+//! scope also serialises fault-state tests against each other), forces a
+//! named failure, and then pins the recovery contract: the daemon stays
+//! up, the failure surfaces as a typed error or a rebuilt result, and the
+//! post-recovery answer is **bitwise identical** to a fault-free run.
+//!
+//! CI runs this suite twice — forced-scalar and native ISA — plus once
+//! under a `FASTCV_FAULT_PLAN` environment plan (the `chaos` job).
+
+use fastcv::fastcv::fault::{self, install, FaultPlan};
+use fastcv::linalg::{Mat, PanelStore, SpillError};
+use fastcv::serve::{ServeConfig, Server};
+use fastcv::util::json::Json;
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fastcv_chaos_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).unwrap()
+}
+
+// ---------------------------------------------------------------- spill
+
+#[test]
+fn chaos_corrupt_read_is_typed_and_the_reread_is_bitwise() {
+    let base = temp_dir("corrupt_read");
+    let g = Mat::from_fn(8, 8, |i, j| (i * 8 + j) as f64 * 0.5);
+    let mut store = PanelStore::new(8, 4, Some(&base)).unwrap();
+    store.write_mat(&g).unwrap();
+    {
+        let _scope = install(plan("spill.read.corrupt@1"));
+        let err = store.read_panel(0).err().expect("injected corruption must be detected");
+        assert!(
+            matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Corrupt { .. })),
+            "{err:#}"
+        );
+        // The fault corrupted the *read*, not the file: the @1 rule is
+        // spent and the next read serves the intact bytes.
+        assert_eq!(store.read_panel(0).unwrap().as_slice(), &g.as_slice()[..4 * 8]);
+    }
+    assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice(), "bitwise after recovery");
+    drop(store);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn chaos_delayed_reads_change_timing_never_bytes() {
+    let base = temp_dir("delay");
+    let g = Mat::from_fn(6, 6, |i, j| 1.0 / (1.0 + (i + 2 * j) as f64));
+    let mut store = PanelStore::new(6, 3, Some(&base)).unwrap();
+    store.write_mat(&g).unwrap();
+    let _scope = install(plan("spill.read.delay%1=2"));
+    // Every read is delayed 2 ms; the bytes are untouched.
+    assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice());
+    drop(store);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn chaos_torn_write_is_detected_and_the_rewrite_restores_bitwise() {
+    let base = temp_dir("torn_write");
+    let g = Mat::from_fn(7, 7, |i, j| (i as f64).mul_add(7.0, j as f64));
+    let mut store = PanelStore::new(7, 7, Some(&base)).unwrap();
+    {
+        let _scope = install(plan("spill.write.torn@1=9"));
+        store.write_mat(&g).unwrap(); // the torn write "succeeds" silently
+        let err = store.read_panel(0).err().expect("torn panel must be rejected");
+        assert!(
+            matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Torn { .. })),
+            "{err:#}"
+        );
+        store.write_mat(&g).unwrap(); // recovery: rewrite (arrival 2 is clean)
+    }
+    store.verify().unwrap();
+    assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice(), "bitwise after rewrite");
+    drop(store);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+#[test]
+fn chaos_write_io_errors_are_typed_and_the_retry_lands_the_panel() {
+    let base = temp_dir("write_io");
+    let g = Mat::from_fn(5, 5, |i, j| ((i + 1) * (j + 2)) as f64);
+    let mut store = PanelStore::new(5, 5, Some(&base)).unwrap();
+    {
+        let _scope = install(plan("spill.write.io@1"));
+        let err = store.write_mat(&g).err().expect("injected IO failure must error");
+        assert!(
+            matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Io { .. })),
+            "{err:#}"
+        );
+        store.write_mat(&g).unwrap();
+    }
+    assert_eq!(store.to_mat().unwrap().as_slice(), g.as_slice());
+    drop(store);
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---------------------------------------------------------------- serve
+
+const PERM_REQ: &str = r#"{"id":1,"op":"perm","data":{"synthetic":{"n":24,"p":12,"seed":5}},"folds":{"k":4},"lambda":1.0,"n_perm":8,"seed":100}"#;
+
+fn serve_lines(server: &Server, lines: &[&str]) -> Vec<String> {
+    let input = lines.join("\n");
+    let mut out: Vec<u8> = Vec::new();
+    server
+        .serve_stream(std::io::Cursor::new(input.into_bytes()), &mut out)
+        .unwrap();
+    String::from_utf8(out).unwrap().lines().map(str::to_string).collect()
+}
+
+#[test]
+fn chaos_worker_panic_recovery_preserves_the_bitwise_response_contract() {
+    // The acceptance centerpiece: a fault-free run and a post-panic
+    // resend must produce byte-identical result lines — the recovery
+    // path may cost a retry, never a different answer.
+    let shutdown = r#"{"id":9,"op":"shutdown"}"#;
+    let clean = Server::new(ServeConfig::default());
+    let baseline = serve_lines(&clean, &[PERM_REQ, shutdown]);
+    assert_eq!(baseline.len(), 2);
+
+    let _scope = install(plan("serve.worker.panic@1"));
+    let faulty = Server::new(ServeConfig::default());
+    // Same request twice: the first dies to the injected panic, the
+    // resend (arrival 2) runs clean on a store the panic never touched.
+    let lines = serve_lines(&faulty, &[PERM_REQ, PERM_REQ, shutdown]);
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    let first = Json::parse(&lines[0]).unwrap();
+    assert_eq!(first.get("ok"), Some(&Json::Bool(false)), "{}", lines[0]);
+    assert_eq!(first.get("kind").and_then(Json::as_str), Some("worker_panic"));
+    assert_eq!(lines[1], baseline[0], "post-recovery result must be bitwise identical");
+    assert_eq!(faulty.worker_panics(), 1);
+}
+
+#[test]
+fn chaos_conn_drop_loses_one_response_never_the_daemon() {
+    let _scope = install(plan("serve.conn.drop@1"));
+    let server = Server::new(ServeConfig::default());
+    let lines = serve_lines(
+        &server,
+        &[
+            r#"{"id":1,"op":"stats"}"#,
+            r#"{"id":2,"op":"stats"}"#,
+            r#"{"id":3,"op":"shutdown"}"#,
+        ],
+    );
+    // The first response line was eaten by the dropped connection; the
+    // daemon itself kept serving and still honoured the shutdown.
+    assert_eq!(lines.len(), 2, "{lines:?}");
+    let ids: Vec<f64> = lines
+        .iter()
+        .map(|l| Json::parse(l).unwrap().get("id").and_then(Json::as_f64).unwrap())
+        .collect();
+    assert_eq!(ids, vec![2.0, 3.0], "{lines:?}");
+}
+
+#[test]
+fn chaos_deadline_overflow_and_panic_counters_surface_in_stats() {
+    // End-to-end: force one worker panic, then ask the daemon for its
+    // stats — the robustness counters ride the same response as the
+    // cache counters that operators already scrape.
+    let _scope = install(plan("serve.worker.panic@1"));
+    let server = Server::new(ServeConfig::default());
+    let lines = serve_lines(
+        &server,
+        &[
+            r#"{"id":1,"op":"stats"}"#,
+            r#"{"id":2,"op":"stats"}"#,
+            r#"{"id":3,"op":"shutdown"}"#,
+        ],
+    );
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    let last_stats = Json::parse(&lines[1]).unwrap();
+    assert_eq!(last_stats.get("ok"), Some(&Json::Bool(true)), "{}", lines[1]);
+    assert_eq!(last_stats.get("worker_panics").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(last_stats.get("deadline_exceeded").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(last_stats.get("overloaded").and_then(Json::as_f64), Some(0.0));
+}
+
+// ---------------------------------------------------------------- plans
+
+#[test]
+fn chaos_env_plan_gates_sites_when_ci_exports_one() {
+    // The chaos CI job exports FASTCV_FAULT_PLAN="test.env.site@1". With
+    // no scope installed, fault::hit falls back to the environment plan;
+    // outside that job this test degrades to checking the no-plan no-op.
+    match std::env::var("FASTCV_FAULT_PLAN") {
+        Ok(spec) if spec.contains("test.env.site") => {
+            assert_eq!(fault::hit("test.env.site"), Some(0), "env plan must fire");
+            assert_eq!(fault::hit("test.env.site"), None, "@1 fires exactly once");
+        }
+        _ => {
+            assert_eq!(fault::hit("test.env.site"), None, "no plan → every site is a no-op");
+        }
+    }
+}
+
+#[test]
+fn chaos_percent_plans_fire_periodically_and_scopes_restore() {
+    // `hit` returns the rule's `=arg` payload (0 when absent) on firing
+    // arrivals — here every 2nd arrival, with the count shared across the
+    // ComputeContext knob because both point at the same plan.
+    let outer = install(plan("chaos.outer%2=7"));
+    assert_eq!(fault::hit("chaos.outer"), None, "arrival 1 of %2");
+    assert_eq!(fault::hit("chaos.outer"), Some(7), "arrival 2 of %2");
+    {
+        let _ctx = fastcv::fastcv::ComputeContext::serial().with_faults(outer.plan());
+        assert_eq!(fault::hit("chaos.outer"), None, "arrival 3 continues the count");
+        assert_eq!(fault::hit("chaos.outer"), Some(7), "arrival 4 of %2");
+    }
+    assert_eq!(outer.plan().arrivals("chaos.outer"), 4);
+    drop(outer);
+    assert_eq!(fault::hit("chaos.outer"), None, "dropped scope restores prior state");
+}

@@ -165,6 +165,29 @@ fn l4_is_silent_in_panic_allowed_files() {
     assert_eq!(lines_of(&src, "rust/src/fastcv/incremental.rs", Rule::Panic), vec![2, 4]);
 }
 
+#[test]
+fn l4_exempts_the_serve_catch_unwind_boundary_only() {
+    let src = fixture("bad_l4.rs");
+    // recover.rs hosts the deliberate fault-injection panic contained by
+    // run_caught; the rest of the serve daemon stays under the no-panic
+    // policy (filter to Rule::Panic — L5 also fires on these paths).
+    assert!(lines_of(&src, "rust/src/serve/recover.rs", Rule::Panic).is_empty());
+    assert_eq!(lines_of(&src, "rust/src/serve/handlers.rs", Rule::Panic), vec![2, 4]);
+}
+
+#[test]
+fn l3_accepts_the_audited_sigterm_cleanup_file() {
+    let src = fixture("good_l3.rs");
+    // signal.rs joined UNSAFE_AUDITED_FILES with the SIGTERM socket
+    // cleanup (hand-declared POSIX externs, SAFETY notes in situ). Filter
+    // to Rule::Unsafe: the fixture's undocumented pub fn would trip L5's
+    // widened serve/ surface, which is not under test here.
+    assert!(lines_of(&src, "rust/src/serve/signal.rs", Rule::Unsafe).is_empty());
+    // An unaudited serve file with the same source still fails the
+    // audited-file leg.
+    assert!(!lines_of(&src, "rust/src/serve/other.rs", Rule::Unsafe).is_empty());
+}
+
 // ---------------------------------------------------------------- L5
 
 #[test]

@@ -80,4 +80,45 @@ cut -f1-11,16,17 "$TMP/cli/sweep_f3a.tsv" > "$TMP/cli.cut"
 cut -f1-11,16,17 "$TMP/serve.tsv" > "$TMP/serve.cut"
 diff -u "$TMP/cli.cut" "$TMP/serve.cut"
 
+# Kill-and-restart: SIGTERM a socket-mode daemon mid-serve — the handler
+# must unlink the socket file (docs/ROBUSTNESS.md) — then restart on the
+# same spill directory, which must come up clean (sweeping any leftovers)
+# and answer requests again.
+echo "== serve_smoke: SIGTERM cleanup + restart on the same spill dir =="
+SOCK="$TMP/serve.sock"
+SPILL="$TMP/spill"
+"$BIN" serve --workers 1 --socket "$SOCK" --spill-dir "$SPILL" \
+  2> "$TMP/daemon1.log" &
+DAEMON=$!
+for _ in $(seq 1 100); do
+  [ -S "$SOCK" ] && break
+  sleep 0.1
+done
+[ -S "$SOCK" ] || { echo "serve_smoke: socket never appeared" >&2; exit 1; }
+# Plant a store directory "abandoned by a crashed process" (a PID the
+# restart cannot own) so the startup sweep has something to quarantine.
+mkdir -p "$SPILL/store-1-0"
+echo "half a write" > "$SPILL/store-1-0/panel_0.tmp"
+kill -TERM "$DAEMON"
+wait "$DAEMON" 2>/dev/null || true
+if [ -e "$SOCK" ]; then
+  echo "serve_smoke: SIGTERM left a stale socket file behind" >&2
+  exit 1
+fi
+printf '%s\n%s\n' \
+  '{"id":1,"op":"stats"}' \
+  '{"id":2,"op":"shutdown"}' \
+  | "$BIN" serve --workers 1 --spill-dir "$SPILL" \
+  > "$TMP/restart.ndjson" 2> "$TMP/daemon2.log"
+grep -q 'quarantined 1 orphaned' "$TMP/daemon2.log" \
+  || { echo "serve_smoke: restart did not quarantine the orphan" >&2; \
+       cat "$TMP/daemon2.log" >&2; exit 1; }
+python3 - "$TMP/restart.ndjson" <<'PY'
+import json, pathlib, sys
+lines = [json.loads(l) for l in pathlib.Path(sys.argv[1]).read_text().splitlines() if l.strip()]
+assert len(lines) == 2, f"restarted daemon answered {len(lines)} lines"
+assert all(r.get("ok") is True for r in lines), f"restart responses not ok: {lines}"
+print("serve_smoke: restart after SIGTERM served cleanly")
+PY
+
 echo "serve_smoke: OK"
